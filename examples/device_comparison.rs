@@ -1,0 +1,59 @@
+//! Device comparison: the Fig. 5 study as a library consumer would run
+//! it — all four Table I devices, with and without non-idealities,
+//! box-plot summaries and variance ranking.
+//!
+//! ```bash
+//! cargo run --release --example device_comparison
+//! ```
+
+use meliso::coordinator::{BenchmarkConfig, Coordinator};
+use meliso::device::params::NonIdealities;
+use meliso::device::presets::all_presets;
+use meliso::report::ascii::ascii_boxplot;
+use meliso::report::table::{fnum, TextTable};
+use meliso::vmm::NativeEngine;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let coord = Coordinator::new(NativeEngine);
+    let population = 500; // half protocol for a fast demo
+
+    for mask in [NonIdealities::IDEAL, NonIdealities::FULL] {
+        let mut t = TextTable::new(["device", "variance", "q1", "median", "q3", "outliers"])
+            .with_title(format!("Device comparison ({})", mask.label()));
+        println!();
+        let mut boxes = Vec::new();
+        let mut span = (f64::INFINITY, f64::NEG_INFINITY);
+
+        for preset in all_presets() {
+            let device = preset.params.masked(mask);
+            let cfg = BenchmarkConfig::paper_default(device).with_population(population);
+            let pop = coord.run(&cfg)?;
+            let b = pop.boxplot();
+            t.push([
+                preset.name.to_string(),
+                fnum(pop.stats().variance()),
+                fnum(b.q1),
+                fnum(b.median),
+                fnum(b.q3),
+                b.outliers.to_string(),
+            ]);
+            span.0 = span.0.min(b.whisker_lo);
+            span.1 = span.1.max(b.whisker_hi);
+            boxes.push((preset.name, b));
+        }
+        println!("{}", t.render());
+
+        // Rendered like the Fig. 5 insets: shared axis across devices.
+        let (lo, hi) = (span.0 - 0.1, span.1 + 0.1);
+        for (name, b) in boxes {
+            println!("{name:>12}: {}", ascii_boxplot(&b, lo, hi, 56));
+        }
+    }
+
+    println!(
+        "\nExpected shape (paper Fig. 5): EpiRAM narrowest in both panels; \
+         AlOx/HfO2 widest ideal; Ag:a-Si & TaOx/HfOx degrade strongly \
+         with non-idealities."
+    );
+    Ok(())
+}

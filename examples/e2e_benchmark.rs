@@ -1,0 +1,108 @@
+//! End-to-end validation driver (EXPERIMENTS.md §End-to-end): the full
+//! MELISO pipeline on the real workload, all three layers composed:
+//!
+//!   rust coordinator (L3)  →  PJRT-loaded AOT artifact  →
+//!   JAX device model (L2)  →  Pallas crossbar kernel (L1)
+//!
+//! Runs the paper's full protocol (1000 x 32x32 VMMs) for every
+//! Table I device through the **XLA engine**, cross-checks the error
+//! statistics against the pure-rust native engine, and reports
+//! throughput for both paths.  Falls back to native-only (with a
+//! warning) when artifacts have not been built.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_benchmark
+//! ```
+
+use meliso::coordinator::{BenchmarkConfig, Coordinator};
+use meliso::device::params::NonIdealities;
+use meliso::device::presets::all_presets;
+use meliso::report::table::{fnum, TextTable};
+use meliso::vmm::{NativeEngine, XlaEngine};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let population = 1000; // full paper protocol
+
+    let xla = match XlaEngine::from_default_dir() {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("WARNING: XLA engine unavailable ({err}); run `make artifacts`.");
+            None
+        }
+    };
+    if let Some(e) = &xla {
+        // Compile everything up front so timings are execution-only.
+        e.runtime().warmup()?;
+        println!(
+            "XLA runtime: platform={}, {} artifacts\n",
+            e.runtime().platform_name(),
+            e.runtime().manifest().entries.len()
+        );
+    }
+
+    let native = Coordinator::new(NativeEngine);
+
+    let mut t = TextTable::new([
+        "device", "engine", "VMM/s", "variance", "skewness", "kurtosis",
+    ])
+    .with_title(format!(
+        "End-to-end: paper protocol ({population} x 32x32), full non-idealities"
+    ));
+    let mut agreement = TextTable::new([
+        "device", "native var", "xla var", "rel diff (%)",
+    ])
+    .with_title("Cross-engine agreement (identical seeded populations)");
+
+    for preset in all_presets() {
+        let device = preset.params.masked(NonIdealities::FULL);
+        let cfg = BenchmarkConfig::paper_default(device).with_population(population);
+
+        let (pop_n, tel_n) = native.run_with_telemetry(&cfg)?;
+        let sn = pop_n.summary();
+        t.push([
+            preset.name.to_string(),
+            "native".to_string(),
+            fnum(tel_n.throughput()),
+            fnum(sn.variance),
+            fnum(sn.skewness),
+            fnum(sn.excess_kurtosis),
+        ]);
+
+        if let Some(engine) = &xla {
+            let coord = Coordinator::new(engine.clone());
+            let (pop_x, tel_x) = coord.run_with_telemetry(&cfg)?;
+            let sx = pop_x.summary();
+            t.push([
+                preset.name.to_string(),
+                "xla".to_string(),
+                fnum(tel_x.throughput()),
+                fnum(sx.variance),
+                fnum(sx.skewness),
+                fnum(sx.excess_kurtosis),
+            ]);
+            let rel = (sx.variance - sn.variance).abs() / sn.variance * 100.0;
+            agreement.push([
+                preset.name.to_string(),
+                fnum(sn.variance),
+                fnum(sx.variance),
+                fnum(rel),
+            ]);
+            // The two engines implement the same physics on the same
+            // seeded noise: distributions must agree tightly.
+            assert!(
+                rel < 2.0,
+                "{}: native/xla variance diverged by {rel:.2}%",
+                preset.name
+            );
+        }
+    }
+
+    println!("{}", t.render());
+    if xla.is_some() {
+        println!("{}", agreement.render());
+        println!("PASS: all layers compose; native and XLA engines agree.");
+    } else {
+        println!("PARTIAL: native-only run (artifacts missing).");
+    }
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! In-memory linear solver demo — the "LISO" use case: solve
+//! `A x = b` with the matrix-vector products computed by simulated
+//! RRAM crossbars, and watch how device error sets the convergence
+//! floor of CG / Jacobi / Richardson.
+//!
+//! ```bash
+//! cargo run --release --example linear_solver
+//! ```
+
+use meliso::device::params::NonIdealities;
+use meliso::device::presets;
+use meliso::report::table::{fnum, TextTable};
+use meliso::solver::{
+    conjugate_gradient, jacobi, richardson, CrossbarOperator, ExactOperator,
+    LinearOperator, SolveOpts,
+};
+use meliso::util::rng::Xoshiro256;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let n = 96; // three 32-row tiles per dimension
+    let mut rng = Xoshiro256::seed_from_u64(7);
+
+    // SPD system: A = M^T M / n + I (well-conditioned), b random.
+    let m: Vec<f64> = (0..n * n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+    let mut a = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0;
+            for k in 0..n {
+                s += m[k * n + i] * m[k * n + j];
+            }
+            a[i * n + j] = s / n as f64 + if i == j { 1.0 } else { 0.0 };
+        }
+    }
+    let b: Vec<f64> = (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+    let exact = ExactOperator::new(n, n, a.clone());
+    let diag: Vec<f64> = (0..n).map(|i| a[i * n + i]).collect();
+    let opts = SolveOpts { max_iters: 200, tol: 1e-10 };
+
+    let mut t = TextTable::new([
+        "device", "solver", "iters", "best rel. residual", "x error vs exact",
+    ])
+    .with_title(format!("In-memory solve of a {n}x{n} SPD system"));
+
+    // Exact-arithmetic reference solution for the x-error column.
+    let reference = conjugate_gradient(&exact, &exact, &b, &opts)?;
+
+    for preset in [presets::epiram(), presets::ag_si(), presets::alox_hfo2()] {
+        let device = preset.params.masked(NonIdealities::FULL);
+        let op = CrossbarOperator::program(n, n, &a, &device, &mut rng);
+
+        for (solver_name, result) in [
+            ("cg", conjugate_gradient(&op, &exact, &b, &opts)?),
+            ("jacobi", jacobi(&op, &exact, &diag, &b, &opts)?),
+            ("richardson", richardson(&op, &exact, &b, 0.35, &opts)?),
+        ] {
+            let floor = result
+                .residual_history
+                .iter()
+                .copied()
+                .fold(f64::INFINITY, f64::min);
+            let xerr = result
+                .x
+                .iter()
+                .zip(&reference.x)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            t.push([
+                preset.name.to_string(),
+                solver_name.to_string(),
+                result.iterations.to_string(),
+                fnum(floor),
+                fnum(xerr),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    // Sanity anchor: the same solve in exact arithmetic.
+    let mut ax = vec![0.0; n];
+    exact.apply(&reference.x, &mut ax);
+    println!(
+        "software CG reference: {} iters, final residual {:.2e}",
+        reference.iterations,
+        reference.residual_history.last().unwrap()
+    );
+    println!(
+        "\nReading: better devices (EpiRAM) reach lower residual floors; the \
+         floor tracks the Fig. 5 error ranking — the paper's error analysis \
+         translated into algorithm behaviour."
+    );
+    Ok(())
+}

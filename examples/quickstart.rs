@@ -1,0 +1,58 @@
+//! Quickstart: run the paper's VMM benchmark protocol on one device
+//! and inspect the error distribution.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use meliso::coordinator::{BenchmarkConfig, Coordinator};
+use meliso::device::params::NonIdealities;
+use meliso::device::presets;
+use meliso::report::ascii::ascii_histogram;
+use meliso::report::table::{fnum, TextTable};
+use meliso::vmm::NativeEngine;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // 1. Pick a Table I device (EpiRAM — the paper's best performer)
+    //    with its full non-idealities.
+    let device = presets::epiram().params.masked(NonIdealities::FULL);
+    println!(
+        "device: EpiRAM  (CS={}, MW={}, NL={}/{}, C2C={}%)\n",
+        device.states,
+        device.memory_window,
+        device.nu_ltp,
+        device.nu_ltd,
+        device.sigma_c2c * 100.0
+    );
+
+    // 2. The paper protocol: 1000 random 32x32 VMMs, errors vs the
+    //    exact software dot product.
+    let cfg = BenchmarkConfig::paper_default(device);
+    let coord = Coordinator::new(NativeEngine);
+    let (pop, tel) = coord.run_with_telemetry(&cfg)?;
+
+    // 3. Moments (what Table II reports).
+    let s = pop.summary();
+    let mut t = TextTable::new(["metric", "value"]).with_title("Error population");
+    t.push(["samples", &s.count.to_string()]);
+    t.push(["mean", &fnum(s.mean)]);
+    t.push(["variance", &fnum(s.variance)]);
+    t.push(["skewness", &fnum(s.skewness)]);
+    t.push(["excess kurtosis", &fnum(s.excess_kurtosis)]);
+    t.push(["throughput (VMM/s)", &fnum(tel.throughput())]);
+    println!("{}", t.render());
+
+    // 4. The error distribution, eyeballed.
+    println!("error histogram:");
+    print!("{}", ascii_histogram(&pop.histogram(17), 48));
+
+    // 5. Parametric fit (AIC-selected best family).
+    let fit = pop.best_fit()?;
+    println!(
+        "\nbest fit: {}  [{}]  (KS = {:.4})",
+        fit.model.name(),
+        fit.model.params_string(),
+        fit.ks
+    );
+    Ok(())
+}

@@ -1,0 +1,181 @@
+"""AOT compile path: lower the L2 graph to HLO text + manifest.
+
+Run once by ``make artifacts``::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits one HLO-text artifact per (program, batch) pair plus a
+``manifest.json`` the rust runtime uses to discover shapes and inputs.
+
+HLO **text** (not ``lowered.compile().serialize()`` / serialized
+HloModuleProto) is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.crossbar import crossbar_vmm
+
+ROWS = 32
+COLS = 32
+# Primary batch is the coordinator's chunk size; the small batch serves
+# remainder chunks and latency-sensitive callers (solver iterations).
+BATCHES = (256, 32, 1)
+
+SCHEMA_VERSION = 2
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def entry_fwd(batch: int):
+    """meliso_fwd: (w, x, z, params) -> (y_hw, y_sw)."""
+
+    def fn(w, x, z, params):
+        return model.meliso_forward(w, x, z, params)
+
+    args = (
+        f32(batch, ROWS, COLS),
+        f32(batch, ROWS),
+        f32(batch, model.NOISE_CHANNELS, ROWS, COLS),
+        f32(model.NUM_PARAMS),
+    )
+    return fn, args, {
+        "inputs": [
+            {"name": "w", "shape": [batch, ROWS, COLS]},
+            {"name": "x", "shape": [batch, ROWS]},
+            {"name": "z", "shape": [batch, model.NOISE_CHANNELS, ROWS, COLS]},
+            {"name": "params", "shape": [model.NUM_PARAMS]},
+        ],
+        "outputs": [
+            {"name": "y_hw", "shape": [batch, COLS]},
+            {"name": "y_sw", "shape": [batch, COLS]},
+        ],
+    }
+
+
+def entry_vmm(batch: int):
+    """meliso_vmm: raw differential crossbar read (L1 kernel only)."""
+
+    def fn(gp, gn, v):
+        return (crossbar_vmm(gp, gn, v),)
+
+    args = (f32(batch, ROWS, COLS), f32(batch, ROWS, COLS), f32(batch, ROWS))
+    return fn, args, {
+        "inputs": [
+            {"name": "gp", "shape": [batch, ROWS, COLS]},
+            {"name": "gn", "shape": [batch, ROWS, COLS]},
+            {"name": "v", "shape": [batch, ROWS]},
+        ],
+        "outputs": [{"name": "i", "shape": [batch, COLS]}],
+    }
+
+
+def entry_program(batch: int):
+    """meliso_program: weight -> conductance encoding only."""
+
+    def fn(w, z, params):
+        return model.program_crossbar(w, z, params)
+
+    args = (
+        f32(batch, ROWS, COLS),
+        f32(batch, model.NOISE_CHANNELS, ROWS, COLS),
+        f32(model.NUM_PARAMS),
+    )
+    return fn, args, {
+        "inputs": [
+            {"name": "w", "shape": [batch, ROWS, COLS]},
+            {"name": "z", "shape": [batch, model.NOISE_CHANNELS, ROWS, COLS]},
+            {"name": "params", "shape": [model.NUM_PARAMS]},
+        ],
+        "outputs": [
+            {"name": "gp", "shape": [batch, ROWS, COLS]},
+            {"name": "gn", "shape": [batch, ROWS, COLS]},
+        ],
+    }
+
+
+ENTRIES = {
+    "meliso_fwd": entry_fwd,
+    "meliso_vmm": entry_vmm,
+    "meliso_program": entry_program,
+}
+
+
+def build(out_dir: str, batches=BATCHES, verbose=True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "schema": SCHEMA_VERSION,
+        "rows": ROWS,
+        "cols": COLS,
+        "noise_channels": model.NOISE_CHANNELS,
+        "num_params": model.NUM_PARAMS,
+        "jax_version": jax.__version__,
+        "artifacts": [],
+    }
+    for name, make in ENTRIES.items():
+        for batch in batches:
+            fn, args, io_spec = make(batch)
+            lowered = jax.jit(fn).lower(*args)
+            text = to_hlo_text(lowered)
+            fname = f"{name}_b{batch}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+            manifest["artifacts"].append(
+                {
+                    "name": name,
+                    "batch": batch,
+                    "file": fname,
+                    "sha256_16": digest,
+                    **io_spec,
+                }
+            )
+            if verbose:
+                print(f"  {fname}: {len(text)} chars sha={digest}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if verbose:
+        print(f"wrote {len(manifest['artifacts'])} artifacts to {out_dir}")
+    return manifest
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="output directory")
+    p.add_argument(
+        "--batches",
+        default=",".join(str(b) for b in BATCHES),
+        help="comma-separated batch sizes",
+    )
+    ns = p.parse_args(argv)
+    batches = tuple(int(b) for b in ns.batches.split(","))
+    build(ns.out, batches=batches)
+
+
+if __name__ == "__main__":
+    main()

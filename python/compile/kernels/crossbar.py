@@ -1,0 +1,101 @@
+"""L1: Pallas kernel for the batched differential RRAM crossbar read.
+
+The analog crossbar computes, for every batch element ``b`` and bit line
+``j``::
+
+    I[b, j] = sum_i V[b, i] * (Gp[b, i, j] - Gn[b, i, j])
+
+i.e. Kirchhoff current summation over the word lines of a differential
+conductance pair ``(Gp, Gn)`` driven by read voltages ``V``.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the paper's
+"hardware" is an analog 32x32 crossbar; on a TPU the natural mapping is a
+batch of MXU-shaped 32x32 contractions.  The kernel tiles the batch
+dimension with a BlockSpec so each grid step keeps ``2*TB*R*C + TB*R``
+floats resident in VMEM and issues a single ``dot_general`` with a batch
+dimension — the MXU-friendly formulation (bf16/f32 matmul), not a
+thread-block/warp port.
+
+``interpret=True`` is mandatory on this testbed: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and the interpret lowering produces
+plain HLO that the rust runtime loads unchanged.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default batch tile.  2 * 32 * 32 * 32 * 4 B + 32 * 32 * 4 B ~= 260 KiB of
+# VMEM per grid step — far under the ~16 MiB budget, leaving headroom for
+# double buffering of the next tile.
+DEFAULT_BLOCK_BATCH = 32
+
+
+def _crossbar_kernel(gp_ref, gn_ref, v_ref, out_ref):
+    """One grid step: TB batched 32x32 crossbar reads.
+
+    ``dot_general`` with a leading batch dimension contracts the word-line
+    axis of ``v`` against the word-line axis of the differential
+    conductance tile in a single MXU-shaped op.
+    """
+    g = gp_ref[...] - gn_ref[...]  # (TB, R, C) differential conductance
+    v = v_ref[...]  # (TB, R) read voltages
+    # (TB, R) x (TB, R, C) -> (TB, C): batch dim 0, contract dim 1 vs 1.
+    out_ref[...] = jax.lax.dot_general(
+        v,
+        g,
+        dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_batch", "interpret"))
+def crossbar_vmm(
+    gp: jax.Array,
+    gn: jax.Array,
+    v: jax.Array,
+    *,
+    block_batch: int = DEFAULT_BLOCK_BATCH,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batched differential crossbar VMM.
+
+    Args:
+      gp: positive-device conductances, shape ``(B, R, C)``.
+      gn: negative-device conductances, shape ``(B, R, C)``.
+      v: read voltages, shape ``(B, R)``.
+      block_batch: batch tile size per grid step (VMEM sizing knob).
+      interpret: run the Pallas interpreter (required on CPU PJRT).
+
+    Returns:
+      Bit-line currents, shape ``(B, C)``.
+    """
+    b, r, c = gp.shape
+    if gn.shape != (b, r, c):
+        raise ValueError(f"gn shape {gn.shape} != gp shape {gp.shape}")
+    if v.shape != (b, r):
+        raise ValueError(f"v shape {v.shape} != ({b}, {r})")
+
+    tb = min(block_batch, b)
+    if b % tb != 0:
+        # Fall back to a tile size that divides the batch so the grid is
+        # exact; correctness over peak utilization for ragged batches.
+        tb = next(t for t in range(tb, 0, -1) if b % t == 0)
+    grid = (b // tb,)
+
+    return pl.pallas_call(
+        _crossbar_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, r, c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tb, r, c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tb, r), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
+        interpret=interpret,
+    )(gp, gn, v)

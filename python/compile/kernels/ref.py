@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the L1 kernel and the L2 MELISO pipeline.
+
+Everything here is the slow, obviously-correct formulation used by the
+pytest suite as the ground truth for the Pallas kernel and the fused
+model.  Nothing in this file is ever lowered to an artifact.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def crossbar_vmm_ref(gp, gn, v):
+    """Reference differential crossbar read: einsum formulation."""
+    return jnp.einsum("bi,bij->bj", v, gp - gn)
+
+
+def pulse_curve_ref(t, nu, eps=1e-6):
+    """Reference LTP/LTD conductance curve g(t) on normalized pulses.
+
+    ``g(t) = (1 - exp(-nu t)) / (1 - exp(-nu))`` with the linear limit at
+    ``nu -> 0``.  Concave for ``nu > 0`` (fast early LTP), convex for
+    ``nu < 0`` (slow-start LTD-programmed device).
+    """
+    t = jnp.asarray(t)
+    nu = jnp.asarray(nu, dtype=t.dtype)
+    safe_nu = jnp.where(jnp.abs(nu) < eps, 1.0, nu)
+    num = 1.0 - jnp.exp(-safe_nu * t)
+    den = 1.0 - jnp.exp(-safe_nu)
+    return jnp.where(jnp.abs(nu) < eps, t, num / den)
+
+
+def quantize_ref(w, states):
+    """Reference magnitude quantization to ``states - 1`` pulse steps."""
+    n = states - 1.0
+    s_pos = jnp.round(jnp.maximum(w, 0.0) * n)
+    s_neg = jnp.round(jnp.maximum(-w, 0.0) * n)
+    return s_pos, s_neg
+
+
+def mismatch_transform_ref(z, a=0.7, b=0.15):
+    """Reference heavy-tailed, skewed mismatch noise transform.
+
+    ``sinh(a z)/a`` fattens the tails (excess kurtosis) and
+    ``b (z^2 - 1)`` adds positive skew with zero mean — the empirical
+    shape of the paper's ideal-case error tails (Table II kurtosis).
+    """
+    return jnp.sinh(a * z) / a + b * (z * z - 1.0)

@@ -1,0 +1,123 @@
+"""L1 correctness: Pallas crossbar kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the kernel that every artifact
+embeds.  Hypothesis sweeps shapes and value ranges; fixed cases pin the
+paper's 32x32 geometry.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.crossbar import crossbar_vmm
+from compile.kernels.ref import crossbar_vmm_ref
+
+
+def rand(key, *shape, lo=-1.0, hi=1.0):
+    return jax.random.uniform(key, shape, jnp.float32, lo, hi)
+
+
+def check(b, r, c, seed=0, block_batch=8):
+    k = jax.random.split(jax.random.PRNGKey(seed), 3)
+    gp = rand(k[0], b, r, c, lo=0.0, hi=1.0)
+    gn = rand(k[1], b, r, c, lo=0.0, hi=1.0)
+    v = rand(k[2], b, r)
+    got = crossbar_vmm(gp, gn, v, block_batch=block_batch)
+    want = crossbar_vmm_ref(gp, gn, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+class TestFixedGeometry:
+    def test_paper_geometry_32x32(self):
+        check(b=64, r=32, c=32)
+
+    def test_batch_one(self):
+        check(b=1, r=32, c=32)
+
+    def test_batch_not_multiple_of_block(self):
+        # 10 % 8 != 0 -> kernel must fall back to an exact tile.
+        check(b=10, r=32, c=32)
+
+    def test_large_batch(self):
+        check(b=256, r=32, c=32)
+
+    def test_rect_wide(self):
+        check(b=4, r=16, c=48)
+
+    def test_rect_tall(self):
+        check(b=4, r=48, c=16)
+
+    def test_block_batch_one(self):
+        check(b=5, r=8, c=8, block_batch=1)
+
+    def test_block_batch_equals_batch(self):
+        check(b=8, r=8, c=8, block_batch=8)
+
+    def test_zero_voltage_gives_zero_current(self):
+        gp = jnp.ones((4, 32, 32))
+        gn = jnp.zeros((4, 32, 32))
+        v = jnp.zeros((4, 32))
+        out = crossbar_vmm(gp, gn, v)
+        np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+    def test_equal_pair_cancels(self):
+        # Gp == Gn -> differential current is exactly zero.
+        k = jax.random.PRNGKey(7)
+        g = rand(k, 4, 32, 32, lo=0.0, hi=1.0)
+        v = rand(jax.random.PRNGKey(8), 4, 32)
+        out = crossbar_vmm(g, g, v)
+        np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
+
+    def test_identity_conductance_passes_voltage(self):
+        # Gp - Gn == I (identity) -> output equals input voltages.
+        eye = jnp.broadcast_to(jnp.eye(32), (4, 32, 32))
+        v = rand(jax.random.PRNGKey(9), 4, 32)
+        out = crossbar_vmm(eye, jnp.zeros((4, 32, 32)), v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(v), rtol=1e-6, atol=1e-6)
+
+    def test_linearity_in_voltage(self):
+        k = jax.random.split(jax.random.PRNGKey(10), 4)
+        gp = rand(k[0], 2, 16, 16, lo=0.0, hi=1.0)
+        gn = rand(k[1], 2, 16, 16, lo=0.0, hi=1.0)
+        v1 = rand(k[2], 2, 16)
+        v2 = rand(k[3], 2, 16)
+        lhs = crossbar_vmm(gp, gn, v1 + v2)
+        rhs = crossbar_vmm(gp, gn, v1) + crossbar_vmm(gp, gn, v2)
+        np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-5, atol=1e-5)
+
+    def test_shape_validation(self):
+        gp = jnp.zeros((2, 4, 4))
+        with pytest.raises(ValueError):
+            crossbar_vmm(gp, jnp.zeros((2, 4, 5)), jnp.zeros((2, 4)))
+        with pytest.raises(ValueError):
+            crossbar_vmm(gp, gp, jnp.zeros((2, 5)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(1, 33),
+    r=st.sampled_from([1, 2, 8, 17, 32]),
+    c=st.sampled_from([1, 3, 8, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_kernel_matches_ref_hypothesis(b, r, c, seed):
+    check(b, r, c, seed=seed)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    block=st.integers(1, 16),
+    b=st.integers(1, 32),
+    seed=st.integers(0, 2**16),
+)
+def test_kernel_block_size_invariance(block, b, seed):
+    """The batch tile size is a perf knob and must not change results."""
+    k = jax.random.split(jax.random.PRNGKey(seed), 3)
+    gp = rand(k[0], b, 8, 8, lo=0.0, hi=1.0)
+    gn = rand(k[1], b, 8, 8, lo=0.0, hi=1.0)
+    v = rand(k[2], b, 8)
+    a = crossbar_vmm(gp, gn, v, block_batch=block)
+    ref = crossbar_vmm_ref(gp, gn, v)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(ref), rtol=1e-5, atol=1e-5)

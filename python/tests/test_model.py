@@ -1,0 +1,224 @@
+"""L2 correctness: the MELISO pipeline's device-physics invariants.
+
+These tests pin the *model semantics* that the rust NativeEngine mirrors
+bit-for-bit; any change here must be reflected in rust/src/device and
+rust/src/crossbar (and vice versa) — the integration test
+rust/tests/integration_xla.rs cross-checks the two.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+B, R, C = 8, 32, 32
+
+
+def ideal_params(states=2048.0, mw=1e6, nu_p=0.0, nu_d=0.0, sig=0.0,
+                 k_c2c=2.0, k_base=3.3, s_exp=1.5):
+    return jnp.array([states, mw, nu_p, nu_d, sig, k_c2c, k_base, s_exp],
+                     dtype=jnp.float32)
+
+
+def inputs(seed=0, b=B):
+    k = jax.random.split(jax.random.PRNGKey(seed), 3)
+    w = jax.random.uniform(k[0], (b, R, C), jnp.float32, -1.0, 1.0)
+    x = jax.random.uniform(k[1], (b, R), jnp.float32, -1.0, 1.0)
+    z = jax.random.normal(k[2], (b, model.NOISE_CHANNELS, R, C), jnp.float32)
+    return w, x, z
+
+
+class TestPulseCurve:
+    def test_linear_limit(self):
+        t = jnp.linspace(0, 1, 11)
+        np.testing.assert_allclose(model.pulse_curve(t, 0.0), t, atol=1e-6)
+
+    def test_endpoints_pinned(self):
+        # g(0) = 0, g(1) = 1 regardless of nu: the programmed range
+        # always spans the full window.
+        for nu in [-5.0, -1.0, 1e-7, 0.5, 2.4, 5.0]:
+            np.testing.assert_allclose(model.pulse_curve(jnp.float32(0.0), nu), 0.0, atol=1e-6)
+            np.testing.assert_allclose(model.pulse_curve(jnp.float32(1.0), nu), 1.0, rtol=1e-5)
+
+    def test_concave_for_positive_nu(self):
+        t = jnp.linspace(0, 1, 21)
+        g = model.pulse_curve(t, 2.4)
+        assert np.all(np.asarray(g[1:-1]) > np.asarray(t[1:-1]))
+
+    def test_convex_for_negative_nu(self):
+        t = jnp.linspace(0, 1, 21)
+        g = model.pulse_curve(t, -4.88)
+        assert np.all(np.asarray(g[1:-1]) < np.asarray(t[1:-1]))
+
+    def test_monotone(self):
+        t = jnp.linspace(0, 1, 101)
+        for nu in [-4.88, -0.5, 0.0, 2.4, 5.0]:
+            g = np.asarray(model.pulse_curve(t, nu))
+            assert np.all(np.diff(g) > -1e-7), f"non-monotone at nu={nu}"
+
+    def test_matches_ref(self):
+        t = jnp.linspace(0, 1, 33)
+        for nu in [-3.0, 0.0, 1.7]:
+            np.testing.assert_allclose(
+                model.pulse_curve(t, nu), ref.pulse_curve_ref(t, nu), rtol=1e-6
+            )
+
+
+class TestProgramCrossbar:
+    def test_output_in_unit_window(self):
+        w, _, z = inputs(1)
+        p = ideal_params(states=97.0, mw=12.5, nu_p=2.4, nu_d=-4.88, sig=0.05)
+        gp, gn = model.program_crossbar(w, z, p)
+        for g in (gp, gn):
+            g = np.asarray(g)
+            assert g.min() >= 0.0 and g.max() <= 1.0
+
+    def test_complementary_pair_targets(self):
+        # With no noise the pair programs (1+w)/2 and (1-w)/2.
+        w, _, z = inputs(2)
+        p = ideal_params(states=4097.0, mw=12.5)
+        gp, gn = model.program_crossbar(w, jnp.zeros_like(z), p)
+        gp, gn, wn = np.asarray(gp), np.asarray(gn), np.asarray(w)
+        np.testing.assert_allclose(gp, (1 + wn) / 2, atol=1e-3)
+        np.testing.assert_allclose(gn, (1 - wn) / 2, atol=1e-3)
+        np.testing.assert_allclose(gp + gn, 1.0, atol=2e-3)
+
+    def test_ideal_programming_roundtrip(self):
+        # Huge S, no NL, no noise: gp - gn == w to quantization precision.
+        w, _, z = inputs(3)
+        p = ideal_params(states=65536.0)
+        gp, gn = model.program_crossbar(w, jnp.zeros_like(z), p)
+        np.testing.assert_allclose(np.asarray(gp - gn), np.asarray(w), atol=1e-4)
+
+    def test_quantization_grid(self):
+        # With S states and no non-idealities the programmed levels sit
+        # exactly on the S-point grid.
+        s = 9.0
+        w, _, z = inputs(4)
+        p = ideal_params(states=s)
+        gp, _ = model.program_crossbar(w, jnp.zeros_like(z), p)
+        lev = np.asarray(gp) * (s - 1.0)
+        np.testing.assert_allclose(lev, np.round(lev), atol=1e-4)
+
+    def test_nonlinearity_biases_midrange(self):
+        w = jnp.full((1, R, C), 0.5)
+        z = jnp.zeros((1, model.NOISE_CHANNELS, R, C))
+        p0 = ideal_params(states=97.0)
+        p1 = ideal_params(states=97.0, nu_p=2.4)
+        g0, _ = model.program_crossbar(w, z, p0)
+        g1, _ = model.program_crossbar(w, z, p1)
+        # Concave LTP overshoots the midrange target.
+        assert np.all(np.asarray(g1) > np.asarray(g0))
+
+
+class TestForward:
+    def test_ideal_device_matches_software(self):
+        w, x, z = inputs(5)
+        p = ideal_params()
+        y_hw, y_sw = model.meliso_forward(w, x, jnp.zeros_like(z), p)
+        np.testing.assert_allclose(np.asarray(y_hw), np.asarray(y_sw), atol=5e-3)
+
+    def test_software_output_is_exact_dot(self):
+        w, x, z = inputs(6)
+        _, y_sw = model.meliso_forward(w, x, z, ideal_params(states=4.0, mw=2.0))
+        want = jnp.einsum("bi,bij->bj", x, w)
+        np.testing.assert_allclose(np.asarray(y_sw), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+    def test_pallas_path_matches_ref_path(self):
+        w, x, z = inputs(7)
+        p = ideal_params(states=97.0, mw=12.5, nu_p=2.4, nu_d=-4.88, sig=0.035)
+        a = model.meliso_forward(w, x, z, p)
+        b = model.meliso_forward_ref(w, x, z, p)
+        for got, want in zip(a, b):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_error_grows_with_fewer_states(self):
+        # Fig. 2a shape: error variance decreases monotonically (in the
+        # statistical sense) with weight bits.
+        w, x, z = inputs(8, b=64)
+        var = []
+        for s in [2.0, 16.0, 256.0]:
+            p = ideal_params(states=s, mw=100.0)
+            y_hw, y_sw = model.meliso_forward(w, x, jnp.zeros_like(z), p)
+            var.append(float(jnp.var(y_hw - y_sw)))
+        assert var[0] > var[1] > var[2]
+
+    def test_error_grows_with_smaller_window(self):
+        # Fig. 2b shape.
+        w, x, z = inputs(9, b=64)
+        var = []
+        for mw in [4.43, 12.5, 100.0]:
+            p = ideal_params(states=97.0, mw=mw)
+            y_hw, y_sw = model.meliso_forward(w, x, z, p)
+            var.append(float(jnp.var(y_hw - y_sw)))
+        assert var[0] > var[1] > var[2]
+
+    def test_error_grows_with_nonlinearity(self):
+        # Fig. 3 shape.
+        w, x, z = inputs(10, b=64)
+        var = []
+        for nu in [0.0, 2.0, 5.0]:
+            p = ideal_params(states=97.0, mw=100.0, nu_p=nu, nu_d=-nu)
+            y_hw, y_sw = model.meliso_forward(w, x, jnp.zeros_like(z), p)
+            var.append(float(jnp.var(y_hw - y_sw)))
+        assert var[0] < var[1] < var[2]
+
+    def test_error_grows_with_c2c(self):
+        # Fig. 4 shape.
+        w, x, z = inputs(11, b=64)
+        var = []
+        for sig in [0.0, 0.02, 0.05]:
+            p = ideal_params(states=97.0, mw=100.0, sig=sig)
+            y_hw, y_sw = model.meliso_forward(w, x, z, p)
+            var.append(float(jnp.var(y_hw - y_sw)))
+        assert var[0] < var[1] < var[2]
+
+
+class TestMismatchTransform:
+    def test_zero_mean(self):
+        z = jax.random.normal(jax.random.PRNGKey(0), (200_000,))
+        m = model.mismatch_transform(z)
+        assert abs(float(jnp.mean(m))) < 0.01
+
+    def test_heavy_tails_and_positive_skew(self):
+        z = jax.random.normal(jax.random.PRNGKey(1), (200_000,))
+        m = np.asarray(model.mismatch_transform(z))
+        mu, sd = m.mean(), m.std()
+        skew = float(((m - mu) ** 3).mean() / sd**3)
+        kurt = float(((m - mu) ** 4).mean() / sd**4 - 3.0)
+        assert skew > 0.1
+        assert kurt > 0.5
+
+    def test_matches_ref(self):
+        z = jnp.linspace(-4, 4, 101)
+        np.testing.assert_allclose(
+            model.mismatch_transform(z), ref.mismatch_transform_ref(z), rtol=1e-6
+        )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    states=st.sampled_from([2.0, 40.0, 97.0, 128.0, 2048.0]),
+    mw=st.sampled_from([4.43, 10.0, 12.5, 50.2, 100.0]),
+    nu_p=st.floats(-5, 5),
+    nu_d=st.floats(-5, 5),
+    sig=st.floats(0, 0.05),
+)
+def test_forward_finite_and_bounded_hypothesis(seed, states, mw, nu_p, nu_d, sig):
+    """For any Table-I-like parameter combination the pipeline stays
+    finite and the hardware output is bounded by the physical row sum."""
+    w, x, z = inputs(seed, b=4)
+    p = ideal_params(states=states, mw=mw, nu_p=nu_p, nu_d=nu_d, sig=sig)
+    y_hw, y_sw = model.meliso_forward(w, x, z, p)
+    y_hw = np.asarray(y_hw)
+    assert np.all(np.isfinite(y_hw))
+    # |y_ideal| <= R; the mismatch residue is bounded by
+    # m * sum_i |x_i mm_i| with m = k_base/(mw-1) * capped resolution.
+    m = 3.3 / (mw - 1.0) * min((model.S_REF / states) ** 1.5, model.MISMATCH_RES_CAP)
+    bound = R * (1.0 + m * 60.0)
+    assert np.all(np.abs(y_hw) < bound)

@@ -1,0 +1,23 @@
+//! Bench: regenerate the paper's fig2b artifact end-to-end and time it.
+//! The experiment itself prints the series/rows the paper reports;
+//! run `meliso run fig2b` for the full-population version.
+
+use meliso::experiments::{registry, Ctx};
+use meliso::util::bench::{bench, BenchOpts};
+
+fn main() {
+    let dir = std::env::temp_dir().join("meliso_bench_fig2b");
+    let ctx = Ctx::native(48, &dir);
+    bench(
+        "fig2b (population 48, native engine)",
+        BenchOpts { samples: 5, warmup: 1, items_per_iter: None },
+        || {
+            registry::run_by_id("fig2b", &ctx).unwrap();
+        },
+    );
+    // Echo the headline series once, non-quiet, full default layout.
+    let mut loud = Ctx::native(48, &dir);
+    loud.quiet = false;
+    registry::run_by_id("fig2b", &loud).unwrap();
+    let _ = std::fs::remove_dir_all(dir);
+}

@@ -1,0 +1,24 @@
+//! Bench: regenerate Fig. 4 (a, b and the c variance comparison) and
+//! time the sweeps.  `meliso run fig4a|fig4b|fig4c` gives the
+//! full-population version.
+
+use meliso::experiments::{registry, Ctx};
+use meliso::util::bench::{bench, BenchOpts};
+
+fn main() {
+    let dir = std::env::temp_dir().join("meliso_bench_fig4");
+    let ctx = Ctx::native(48, &dir);
+    for id in ["fig4a", "fig4b", "fig4c"] {
+        bench(
+            &format!("{id} (population 48, native engine)"),
+            BenchOpts { samples: 3, warmup: 1, items_per_iter: None },
+            || {
+                registry::run_by_id(id, &ctx).unwrap();
+            },
+        );
+    }
+    let mut loud = Ctx::native(48, &dir);
+    loud.quiet = false;
+    registry::run_by_id("fig4c", &loud).unwrap();
+    let _ = std::fs::remove_dir_all(dir);
+}

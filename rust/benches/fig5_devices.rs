@@ -1,0 +1,24 @@
+//! Bench: regenerate Fig. 5 (both panels) and time the device
+//! comparison.  `meliso run fig5a|fig5b` gives the full-population
+//! version.
+
+use meliso::experiments::{registry, Ctx};
+use meliso::util::bench::{bench, BenchOpts};
+
+fn main() {
+    let dir = std::env::temp_dir().join("meliso_bench_fig5");
+    let ctx = Ctx::native(64, &dir);
+    for id in ["fig5a", "fig5b"] {
+        bench(
+            &format!("{id} (population 64, native engine)"),
+            BenchOpts { samples: 3, warmup: 1, items_per_iter: None },
+            || {
+                registry::run_by_id(id, &ctx).unwrap();
+            },
+        );
+    }
+    let mut loud = Ctx::native(64, &dir);
+    loud.quiet = false;
+    registry::run_by_id("fig5b", &loud).unwrap();
+    let _ = std::fs::remove_dir_all(dir);
+}

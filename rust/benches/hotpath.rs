@@ -1,0 +1,107 @@
+//! Bench: the hot paths of the stack, layer by layer — the §Perf
+//! instrumentation (EXPERIMENTS.md records these before/after).
+//!
+//!  * workload generation (host, L3)
+//!  * native crossbar engine (L3 baseline physics)
+//!  * software reference VMM
+//!  * XLA engine single batch (L2+L1 through PJRT), if artifacts exist
+//!  * streaming statistics reduction
+//!  * end-to-end coordinator run (native + xla)
+
+use meliso::coordinator::{BenchmarkConfig, Coordinator, WorkloadSpec};
+use meliso::device::params::NonIdealities;
+use meliso::device::presets;
+use meliso::stats::moments::Moments;
+use meliso::util::bench::{bench, black_box, BenchOpts};
+use meliso::vmm::{NativeEngine, VmmEngine, XlaEngine};
+
+fn main() {
+    let device = presets::ag_si().params.masked(NonIdealities::FULL);
+    let spec = WorkloadSpec::paper_default(1);
+    let b256 = spec.chunk(0, 256);
+
+    // L3: workload generation (w, x and 3 noise planes per sample).
+    bench(
+        "workload gen: 256 x (32x32 + noise)",
+        BenchOpts { samples: 10, warmup: 2, items_per_iter: Some(256.0) },
+        || {
+            black_box(spec.chunk(0, 256));
+        },
+    );
+
+    // L3: native physics engine.
+    bench(
+        "native engine: forward 256 x 32x32",
+        BenchOpts { samples: 10, warmup: 2, items_per_iter: Some(256.0) },
+        || {
+            black_box(NativeEngine.forward(&b256, &device).unwrap());
+        },
+    );
+
+    // Software reference.
+    bench(
+        "software vmm: 256 x 32x32 (f64 acc)",
+        BenchOpts { samples: 10, warmup: 2, items_per_iter: Some(256.0) },
+        || {
+            black_box(meliso::vmm::software_vmm_batch(&b256));
+        },
+    );
+
+    // L2+L1 through PJRT.
+    match XlaEngine::from_default_dir() {
+        Ok(engine) => {
+            engine.runtime().warmup().unwrap();
+            bench(
+                "xla engine: forward 256 x 32x32 (meliso_fwd)",
+                BenchOpts { samples: 10, warmup: 2, items_per_iter: Some(256.0) },
+                || {
+                    black_box(engine.forward(&b256, &device).unwrap());
+                },
+            );
+            // Kernel-only artifact.
+            let gp = vec![0.5f32; 256 * 32 * 32];
+            let gn = vec![0.25f32; 256 * 32 * 32];
+            let v = vec![0.1f32; 256 * 32];
+            bench(
+                "xla kernel: raw crossbar read 256 x 32x32",
+                BenchOpts { samples: 10, warmup: 2, items_per_iter: Some(256.0) },
+                || {
+                    black_box(engine.raw_vmm(&gp, &gn, &v, 256).unwrap());
+                },
+            );
+            // End-to-end coordinator on the XLA engine.
+            let cfg =
+                BenchmarkConfig::paper_default(device).with_population(1024);
+            let coord = Coordinator::new(engine);
+            bench(
+                "coordinator e2e: 1024 VMMs (xla engine)",
+                BenchOpts { samples: 5, warmup: 1, items_per_iter: Some(1024.0) },
+                || {
+                    black_box(coord.run(&cfg).unwrap());
+                },
+            );
+        }
+        Err(e) => eprintln!("(xla benches skipped: {e})"),
+    }
+
+    // Stats reduction over a protocol-size error vector.
+    let errs: Vec<f64> = (0..32_000).map(|i| (i as f64 * 0.37).sin()).collect();
+    bench(
+        "stats: streaming 4-moment reduce of 32000",
+        BenchOpts { samples: 10, warmup: 2, items_per_iter: Some(32_000.0) },
+        || {
+            black_box(Moments::from_slice(&errs));
+        },
+    );
+
+    // End-to-end coordinator on the native engine (parallel).
+    let cfg = BenchmarkConfig::paper_default(device).with_population(1024);
+    let coord = Coordinator::new(NativeEngine);
+    bench(
+        "coordinator e2e: 1024 VMMs (native engine)",
+        BenchOpts { samples: 5, warmup: 1, items_per_iter: Some(1024.0) },
+        || {
+            black_box(coord.run(&cfg).unwrap());
+        },
+    );
+}

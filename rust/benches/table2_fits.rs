@@ -1,0 +1,40 @@
+//! Bench: regenerate Table II (population run + all distribution fits)
+//! and time both the benchmark half and the fitting half separately.
+
+use meliso::coordinator::{BenchmarkConfig, Coordinator};
+use meliso::device::params::NonIdealities;
+use meliso::device::presets;
+use meliso::experiments::{registry, Ctx};
+use meliso::util::bench::{bench, black_box, BenchOpts};
+use meliso::vmm::NativeEngine;
+
+fn main() {
+    let dir = std::env::temp_dir().join("meliso_bench_table2");
+
+    // Full Table II regeneration at reduced population.
+    let ctx = Ctx::native(64, &dir);
+    bench(
+        "table2 (population 64, 8 configs x 5 fits)",
+        BenchOpts { samples: 3, warmup: 1, items_per_iter: None },
+        || {
+            registry::run_by_id("table2", &ctx).unwrap();
+        },
+    );
+
+    // Isolated fitting cost on a protocol-size error population.
+    let device = presets::ag_si().params.masked(NonIdealities::FULL);
+    let cfg = BenchmarkConfig::paper_default(device).with_population(1000);
+    let pop = Coordinator::new(NativeEngine).run(&cfg).unwrap();
+    bench(
+        "fit_all on 32000-sample population",
+        BenchOpts { samples: 3, warmup: 1, items_per_iter: None },
+        || {
+            black_box(pop.fit_all().unwrap());
+        },
+    );
+
+    let mut loud = Ctx::native(64, &dir);
+    loud.quiet = false;
+    registry::run_by_id("table2", &loud).unwrap();
+    let _ = std::fs::remove_dir_all(dir);
+}

@@ -1,0 +1,229 @@
+//! Argument parsing for the `meliso` binary.
+//!
+//! ```text
+//! meliso list
+//! meliso devices
+//! meliso run <experiment|all> [--engine native|xla|software]
+//!            [--population N] [--seed N] [--out DIR] [--threads N]
+//!            [--config FILE] [--quiet]
+//! meliso bench [--engine ...] [--population N]    # quick throughput check
+//! meliso fit --input FILE.csv [--column K]
+//! meliso solve [--device ID] [--n N] [--solver cg|jacobi|richardson]
+//! meliso warmup                                    # precompile artifacts
+//! ```
+
+use crate::config::{EngineKind, RunConfig};
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub command: Command,
+    pub config: RunConfig,
+}
+
+/// Subcommands.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Command {
+    List,
+    Devices,
+    Run { experiment: String },
+    Bench,
+    Fit { input: String, column: usize },
+    Solve { device: String, n: usize, solver: String },
+    Warmup,
+    Help,
+    Version,
+}
+
+pub const USAGE: &str = "\
+meliso — MELISO-RS: VMM benchmarking framework for RRAM crossbars
+
+USAGE:
+  meliso <COMMAND> [OPTIONS]
+
+COMMANDS:
+  list                       List available experiments
+  devices                    Print Table I device presets
+  run <id|all|paper>         Run one experiment, or the full paper set
+  bench                      Quick engine throughput measurement
+  fit --input F [--column K] Fit distributions to a CSV error column
+  solve [--device ID] [--n N] [--solver S]
+                             In-memory linear solve demo (cg|jacobi|richardson)
+  warmup                     Precompile all XLA artifacts
+  help, version
+
+OPTIONS:
+  --engine <native|xla|software>   Compute backend [default: native]
+  --population <N>                 VMM samples per configuration [default: 1000]
+  --seed <N>                       Workload seed
+  --out <DIR>                      Output directory [default: out]
+  --threads <N>                    Worker threads (0 = auto)
+  --config <FILE>                  TOML config file (CLI flags override)
+  --quiet                          Suppress terminal tables
+";
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let cmd_word = it.next().unwrap_or_else(|| "help".to_string());
+
+        // Collect flags first (subcommand-specific positionals handled
+        // per command).
+        let mut positionals: Vec<String> = Vec::new();
+        let mut flags: Vec<(String, Option<String>)> = Vec::new();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                let needs_value = !matches!(name, "quiet");
+                let value = if needs_value {
+                    Some(it.next().ok_or_else(|| {
+                        Error::Config(format!("flag --{name} needs a value"))
+                    })?)
+                } else {
+                    None
+                };
+                flags.push((name.to_string(), value));
+            } else {
+                positionals.push(tok);
+            }
+        }
+
+        // Start from --config file if given, then apply flag overrides.
+        let mut config = RunConfig::default();
+        if let Some((_, Some(path))) = flags.iter().find(|(n, _)| n == "config") {
+            config = RunConfig::from_file(std::path::Path::new(path))?;
+        }
+        for (name, value) in &flags {
+            let v = value.as_deref();
+            match name.as_str() {
+                "engine" => config.engine = EngineKind::parse(req(name, v)?)?,
+                "population" => {
+                    config.population = parse_num(name, req(name, v)?)?;
+                    if config.population == 0 {
+                        return Err(Error::Config("population must be > 0".into()));
+                    }
+                }
+                "seed" => config.seed = parse_num::<u64>(name, req(name, v)?)?,
+                "out" => config.out_dir = req(name, v)?.into(),
+                "threads" => config.threads = parse_num(name, req(name, v)?)?,
+                "quiet" => config.quiet = true,
+                "config" | "input" | "column" | "device" | "n" | "solver" => {}
+                other => {
+                    return Err(Error::Config(format!("unknown flag --{other}")));
+                }
+            }
+        }
+
+        let flag = |name: &str| -> Option<String> {
+            flags
+                .iter()
+                .find(|(n, _)| n == name)
+                .and_then(|(_, v)| v.clone())
+        };
+
+        let command = match cmd_word.as_str() {
+            "list" => Command::List,
+            "devices" => Command::Devices,
+            "run" => Command::Run {
+                experiment: positionals
+                    .first()
+                    .cloned()
+                    .ok_or_else(|| Error::Config("run needs an experiment id".into()))?,
+            },
+            "bench" => Command::Bench,
+            "fit" => Command::Fit {
+                input: flag("input")
+                    .ok_or_else(|| Error::Config("fit needs --input FILE".into()))?,
+                column: match flag("column") {
+                    Some(c) => parse_num("column", &c)?,
+                    None => 0,
+                },
+            },
+            "solve" => Command::Solve {
+                device: flag("device").unwrap_or_else(|| "epiram".into()),
+                n: match flag("n") {
+                    Some(c) => parse_num("n", &c)?,
+                    None => 64,
+                },
+                solver: flag("solver").unwrap_or_else(|| "cg".into()),
+            },
+            "warmup" => Command::Warmup,
+            "help" | "--help" | "-h" => Command::Help,
+            "version" | "--version" | "-V" => Command::Version,
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown command '{other}' (try `meliso help`)"
+                )))
+            }
+        };
+        Ok(Args { command, config })
+    }
+}
+
+fn req<'a>(name: &str, v: Option<&'a str>) -> Result<&'a str> {
+    v.ok_or_else(|| Error::Config(format!("flag --{name} needs a value")))
+}
+
+fn parse_num<T: std::str::FromStr>(name: &str, v: &str) -> Result<T> {
+    v.parse()
+        .map_err(|_| Error::Config(format!("flag --{name}: bad number '{v}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<Args> {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_run_with_flags() {
+        let a = parse("run fig2a --engine software --population 50 --seed 9 --quiet")
+            .unwrap();
+        assert_eq!(a.command, Command::Run { experiment: "fig2a".into() });
+        assert_eq!(a.config.engine, EngineKind::Software);
+        assert_eq!(a.config.population, 50);
+        assert_eq!(a.config.seed, 9);
+        assert!(a.config.quiet);
+    }
+
+    #[test]
+    fn parses_simple_commands() {
+        assert_eq!(parse("list").unwrap().command, Command::List);
+        assert_eq!(parse("devices").unwrap().command, Command::Devices);
+        assert_eq!(parse("warmup").unwrap().command, Command::Warmup);
+        assert_eq!(parse("help").unwrap().command, Command::Help);
+        assert_eq!(parse("").unwrap().command, Command::Help);
+    }
+
+    #[test]
+    fn fit_and_solve_flags() {
+        let a = parse("fit --input errs.csv --column 2").unwrap();
+        assert_eq!(a.command, Command::Fit { input: "errs.csv".into(), column: 2 });
+        let a = parse("solve --device ag-si --n 96 --solver jacobi").unwrap();
+        assert_eq!(
+            a.command,
+            Command::Solve { device: "ag-si".into(), n: 96, solver: "jacobi".into() }
+        );
+        // Defaults.
+        let a = parse("solve").unwrap();
+        assert_eq!(
+            a.command,
+            Command::Solve { device: "epiram".into(), n: 64, solver: "cg".into() }
+        );
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(parse("run").is_err());
+        assert!(parse("frobnicate").is_err());
+        assert!(parse("run fig3 --engine warp").is_err());
+        assert!(parse("run fig3 --population zero").is_err());
+        assert!(parse("run fig3 --population 0").is_err());
+        assert!(parse("fit").is_err());
+        assert!(parse("run fig3 --bogus 1").is_err());
+        assert!(parse("run fig3 --engine").is_err());
+    }
+}

@@ -1,0 +1,202 @@
+//! Subcommand implementations.
+
+
+use crate::coordinator::{BenchmarkConfig, Coordinator};
+use crate::device::params::NonIdealities;
+use crate::device::presets;
+use crate::error::{Error, Result};
+use crate::experiments::{registry, Ctx};
+use crate::report::table::{fnum, TextTable};
+use crate::runtime::XlaRuntime;
+use crate::solver::{
+    conjugate_gradient, jacobi, richardson, CrossbarOperator, ExactOperator,
+    SolveOpts,
+};
+use crate::util::progress::Stopwatch;
+use crate::util::rng::Xoshiro256;
+
+use super::args::{Args, Command, USAGE};
+
+/// Execute a parsed command; returns the process exit code.
+pub fn dispatch(args: &Args) -> Result<i32> {
+    match &args.command {
+        Command::Help => {
+            println!("{USAGE}");
+            Ok(0)
+        }
+        Command::Version => {
+            println!("meliso {}", crate::VERSION);
+            Ok(0)
+        }
+        Command::List => {
+            let mut t = TextTable::new(["id", "set", "title"]).with_title("Experiments");
+            for (id, title, paper) in registry::describe() {
+                t.push([id, if paper { "paper" } else { "extension" }, title]);
+            }
+            println!("{}", t.render());
+            Ok(0)
+        }
+        Command::Devices => {
+            let ctx = Ctx::from_config(&args.config)?;
+            crate::experiments::table1::run(&ctx)?;
+            Ok(0)
+        }
+        Command::Run { experiment } => run_experiments(args, experiment),
+        Command::Bench => bench(args),
+        Command::Fit { input, column } => fit_csv(input, *column),
+        Command::Solve { device, n, solver } => solve(args, device, *n, solver),
+        Command::Warmup => warmup(),
+    }
+}
+
+fn run_experiments(args: &Args, which: &str) -> Result<i32> {
+    let ctx = Ctx::from_config(&args.config)?;
+    let ids: Vec<String> = match which {
+        "all" => registry::all_ids().iter().map(|s| s.to_string()).collect(),
+        "paper" => registry::paper_ids().iter().map(|s| s.to_string()).collect(),
+        one => vec![one.to_string()],
+    };
+    let sw = Stopwatch::start();
+    for id in &ids {
+        if !args.config.quiet {
+            eprintln!("== running {id} (engine={}, population={}) ==",
+                ctx.engine_name(), ctx.population);
+        }
+        registry::run_by_id(id, &ctx)?;
+    }
+    if !args.config.quiet {
+        eprintln!("done: {} experiment(s) in {}", ids.len(), sw.pretty());
+    }
+    Ok(0)
+}
+
+fn bench(args: &Args) -> Result<i32> {
+    let ctx = Ctx::from_config(&args.config)?;
+    let device = presets::ag_si().params.masked(NonIdealities::FULL);
+    let mut cfg = BenchmarkConfig::paper_default(device)
+        .with_population(args.config.population)
+        .with_seed(args.config.seed);
+    cfg.parallelism = args.config.parallelism();
+    let coord = Coordinator::new(ctx.engine.clone());
+    let (pop, tel) = coord.run_with_telemetry(&cfg)?;
+    let mut t = TextTable::new(["metric", "value"]).with_title("Engine throughput");
+    t.push(["engine", ctx.engine_name()]);
+    t.push(["population", &tel.samples.to_string()]);
+    t.push(["chunks", &tel.chunks.to_string()]);
+    t.push(["wall (s)", &fnum(tel.wall_secs)]);
+    t.push(["engine (s, summed)", &fnum(tel.engine_secs)]);
+    t.push(["gen (s, summed)", &fnum(tel.gen_secs)]);
+    t.push(["VMM/s", &fnum(tel.throughput())]);
+    t.push([
+        "error elements/s",
+        &fnum(tel.throughput() * crate::COLS as f64),
+    ]);
+    t.push(["error variance", &fnum(pop.stats().variance())]);
+    println!("{}", t.render());
+    Ok(0)
+}
+
+fn fit_csv(input: &str, column: usize) -> Result<i32> {
+    let text = std::fs::read_to_string(input)?;
+    let mut data = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if i == 0 && line.parse::<f64>().is_err() && !line.contains(|c: char| c.is_ascii_digit())
+        {
+            continue; // header
+        }
+        let cell = line.split(',').nth(column).ok_or_else(|| {
+            Error::Config(format!("line {} has no column {column}", i + 1))
+        })?;
+        match cell.trim().parse::<f64>() {
+            Ok(v) => data.push(v),
+            Err(_) if i == 0 => continue, // header row
+            Err(e) => {
+                return Err(Error::Parse(format!("line {}: {e}", i + 1)));
+            }
+        }
+    }
+    let reports = crate::stats::fit::fit_all(&data)?;
+    let mut t = TextTable::new(["family", "loglik", "AIC", "BIC", "KS", "params"])
+        .with_title(format!("Distribution fits for {input} ({} samples)", data.len()));
+    for r in &reports {
+        t.push([
+            r.model.name(),
+            fnum(r.loglik),
+            fnum(r.aic),
+            fnum(r.bic),
+            fnum(r.ks),
+            r.model.params_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(0)
+}
+
+fn solve(args: &Args, device_id: &str, n: usize, solver: &str) -> Result<i32> {
+    let preset = presets::by_id(device_id)
+        .ok_or_else(|| Error::Config(format!("unknown device '{device_id}'")))?;
+    let device = preset.params.masked(NonIdealities::FULL);
+    let mut rng = Xoshiro256::seed_from_u64(args.config.seed);
+
+    // SPD system A = M^T M / n + I.
+    let m: Vec<f64> = (0..n * n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+    let mut a = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0;
+            for k in 0..n {
+                s += m[k * n + i] * m[k * n + j];
+            }
+            a[i * n + j] = s / n as f64 + if i == j { 1.0 } else { 0.0 };
+        }
+    }
+    let b: Vec<f64> = (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+    let exact = ExactOperator::new(n, n, a.clone());
+    let op = CrossbarOperator::program(n, n, &a, &device, &mut rng);
+    let opts = SolveOpts { max_iters: 300, tol: 1e-8 };
+
+    let result = match solver {
+        "cg" => conjugate_gradient(&op, &exact, &b, &opts)?,
+        "jacobi" => {
+            let diag: Vec<f64> = (0..n).map(|i| a[i * n + i]).collect();
+            jacobi(&op, &exact, &diag, &b, &opts)?
+        }
+        "richardson" => richardson(&op, &exact, &b, 0.3, &opts)?,
+        other => {
+            return Err(Error::Config(format!(
+                "unknown solver '{other}' (cg|jacobi|richardson)"
+            )))
+        }
+    };
+
+    let mut t = TextTable::new(["metric", "value"])
+        .with_title(format!("In-memory {solver} on {}x{n} ({})", n, preset.name));
+    t.push(["iterations", &result.iterations.to_string()]);
+    t.push(["converged", &result.converged.to_string()]);
+    t.push([
+        "final rel. residual",
+        &fnum(*result.residual_history.last().unwrap_or(&f64::NAN)),
+    ]);
+    t.push([
+        "best rel. residual",
+        &fnum(result
+            .residual_history
+            .iter()
+            .copied()
+            .fold(f64::INFINITY, f64::min)),
+    ]);
+    println!("{}", t.render());
+    Ok(0)
+}
+
+fn warmup() -> Result<i32> {
+    let sw = Stopwatch::start();
+    let rt = XlaRuntime::new(&XlaRuntime::default_dir())?;
+    let n = rt.warmup()?;
+    println!(
+        "compiled {n} artifacts on {} in {}",
+        rt.platform_name(),
+        sw.pretty()
+    );
+    Ok(0)
+}

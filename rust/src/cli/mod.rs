@@ -1,0 +1,8 @@
+//! Command-line interface (no `clap` in the offline registry; this is
+//! the hand-rolled equivalent with subcommands, flags, and help).
+
+pub mod args;
+pub mod commands;
+
+pub use args::{Args, Command};
+pub use commands::dispatch;

@@ -1,0 +1,241 @@
+//! Typed configuration for benchmark runs: defaults, TOML file
+//! loading, CLI overrides.  A config file can pin everything a paper
+//! experiment needs, e.g.:
+//!
+//! ```toml
+//! # meliso.toml
+//! population = 1000
+//! seed = 42
+//! engine = "native"          # native | xla | software
+//! out = "out"
+//! threads = 0                 # 0 = auto
+//!
+//! [device]                    # optional custom device
+//! states = 97
+//! memory_window = 12.5
+//! nu_ltp = 2.4
+//! nu_ltd = -4.88
+//! sigma_c2c = 0.035
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use crate::device::params::{
+    DeviceParams, DEFAULT_K_BASE, DEFAULT_K_C2C, DEFAULT_S_EXP,
+};
+use crate::error::{Error, Result};
+use crate::util::pool::Parallelism;
+use crate::util::toml::TomlDoc;
+
+/// Which compute backend to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// Pure-rust crossbar simulation (no artifacts needed).
+    #[default]
+    Native,
+    /// AOT artifacts through PJRT (the production path).
+    Xla,
+    /// Exact software VMM (zero error; sanity baseline).
+    Software,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Ok(EngineKind::Native),
+            "xla" => Ok(EngineKind::Xla),
+            "software" => Ok(EngineKind::Software),
+            other => Err(Error::Config(format!(
+                "unknown engine '{other}' (native|xla|software)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Native => "native",
+            EngineKind::Xla => "xla",
+            EngineKind::Software => "software",
+        }
+    }
+}
+
+/// Fully resolved run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub population: usize,
+    pub seed: u64,
+    pub engine: EngineKind,
+    pub out_dir: PathBuf,
+    pub threads: usize,
+    pub quiet: bool,
+    /// Optional custom device overriding the presets.
+    pub custom_device: Option<DeviceParams>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            population: crate::PAPER_POPULATION,
+            seed: 0x4D45_4C49_534F, // "MELISO"
+            engine: EngineKind::Native,
+            out_dir: PathBuf::from("out"),
+            threads: 0,
+            quiet: false,
+            custom_device: None,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn parallelism(&self) -> Parallelism {
+        if self.threads == 0 {
+            Parallelism::Auto
+        } else {
+            Parallelism::Fixed(self.threads)
+        }
+    }
+
+    /// Load from a TOML file and merge over the defaults.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse from TOML text.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = RunConfig::default();
+        if let Some(v) = doc.get("", "population") {
+            cfg.population = v
+                .as_i64()
+                .filter(|&n| n > 0)
+                .ok_or_else(|| Error::Config("population must be a positive int".into()))?
+                as usize;
+        }
+        if let Some(v) = doc.get("", "seed") {
+            cfg.seed = v
+                .as_i64()
+                .ok_or_else(|| Error::Config("seed must be an int".into()))?
+                as u64;
+        }
+        if let Some(v) = doc.get("", "engine") {
+            cfg.engine = EngineKind::parse(
+                v.as_str()
+                    .ok_or_else(|| Error::Config("engine must be a string".into()))?,
+            )?;
+        }
+        if let Some(v) = doc.get("", "out") {
+            cfg.out_dir = PathBuf::from(
+                v.as_str()
+                    .ok_or_else(|| Error::Config("out must be a string".into()))?,
+            );
+        }
+        if let Some(v) = doc.get("", "threads") {
+            cfg.threads = v
+                .as_i64()
+                .filter(|&n| n >= 0)
+                .ok_or_else(|| Error::Config("threads must be a non-negative int".into()))?
+                as usize;
+        }
+        if let Some(v) = doc.get("", "quiet") {
+            cfg.quiet = v
+                .as_bool()
+                .ok_or_else(|| Error::Config("quiet must be a bool".into()))?;
+        }
+        if doc.tables.contains_key("device") {
+            cfg.custom_device = Some(parse_device(&doc)?);
+        }
+        Ok(cfg)
+    }
+}
+
+fn parse_device(doc: &TomlDoc) -> Result<DeviceParams> {
+    let get = |key: &str, default: f64| -> Result<f64> {
+        match doc.get("device", key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_f64()
+                .ok_or_else(|| Error::Config(format!("device.{key} must be numeric"))),
+        }
+    };
+    let params = DeviceParams {
+        states: get("states", 64.0)?,
+        memory_window: get("memory_window", 10.0)?,
+        nu_ltp: get("nu_ltp", 0.0)?,
+        nu_ltd: get("nu_ltd", 0.0)?,
+        sigma_c2c: get("sigma_c2c", 0.0)?,
+        k_c2c: get("k_c2c", DEFAULT_K_C2C)?,
+        k_base: get("k_base", DEFAULT_K_BASE)?,
+        s_exp: get("s_exp", DEFAULT_S_EXP)?,
+    };
+    params.validate().map_err(Error::Config)?;
+    Ok(params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_protocol() {
+        let c = RunConfig::default();
+        assert_eq!(c.population, 1000);
+        assert_eq!(c.engine, EngineKind::Native);
+    }
+
+    #[test]
+    fn parse_full_document() {
+        let c = RunConfig::from_toml(
+            r#"
+population = 200
+seed = 7
+engine = "software"
+out = "results"
+threads = 4
+quiet = true
+
+[device]
+states = 97
+memory_window = 12.5
+nu_ltp = 2.4
+nu_ltd = -4.88
+sigma_c2c = 0.035
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.population, 200);
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.engine, EngineKind::Software);
+        assert_eq!(c.out_dir, PathBuf::from("results"));
+        assert_eq!(c.threads, 4);
+        assert!(c.quiet);
+        let d = c.custom_device.unwrap();
+        assert_eq!(d.states, 97.0);
+        assert_eq!(d.nu_ltd, -4.88);
+        // Calibration defaults preserved.
+        assert_eq!(d.k_c2c, DEFAULT_K_C2C);
+    }
+
+    #[test]
+    fn rejects_invalid_values() {
+        assert!(RunConfig::from_toml("population = -5\n").is_err());
+        assert!(RunConfig::from_toml("engine = \"quantum\"\n").is_err());
+        assert!(RunConfig::from_toml("[device]\nmemory_window = 0.5\n").is_err());
+    }
+
+    #[test]
+    fn engine_kind_parse() {
+        assert_eq!(EngineKind::parse("XLA").unwrap(), EngineKind::Xla);
+        assert!(EngineKind::parse("gpu").is_err());
+        assert_eq!(EngineKind::Native.name(), "native");
+    }
+
+    #[test]
+    fn parallelism_mapping() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.parallelism(), Parallelism::Auto);
+        c.threads = 3;
+        assert_eq!(c.parallelism(), Parallelism::Fixed(3));
+    }
+}

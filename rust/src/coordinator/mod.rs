@@ -1,0 +1,15 @@
+//! The benchmark coordinator — the paper's orchestration stage.
+//!
+//! Implements the Figure 1 pipeline: workload generation (forward
+//! inputs), population partitioning into engine-sized chunks, parallel
+//! dispatch over the worker pool (native engine) or batched dispatch
+//! through PJRT (XLA engine), and streaming error reduction (moments +
+//! retained error vector for fitting).
+
+pub mod population;
+pub mod runner;
+pub mod workload;
+
+pub use population::ErrorPopulation;
+pub use runner::{BenchmarkConfig, Coordinator};
+pub use workload::WorkloadSpec;

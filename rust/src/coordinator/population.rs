@@ -1,0 +1,136 @@
+//! The accumulated error population of one benchmark configuration —
+//! the paper's concatenated `32000 x 1` error vector, with streaming
+//! moments and lazily computed sorted views.
+
+use crate::stats::fit::{best_fit, fit_all, FitReport};
+use crate::stats::moments::{Moments, Summary};
+use crate::stats::quantile::BoxPlot;
+use crate::stats::Histogram;
+
+/// Error samples plus streaming statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ErrorPopulation {
+    errors: Vec<f64>,
+    moments: Moments,
+}
+
+impl ErrorPopulation {
+    pub fn new() -> Self {
+        Self { errors: Vec::new(), moments: Moments::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Self {
+            errors: Vec::with_capacity(n),
+            moments: Moments::new(),
+        }
+    }
+
+    /// Absorb a chunk of error samples.
+    pub fn extend(&mut self, errors: &[f64]) {
+        self.errors.extend_from_slice(errors);
+        self.moments.extend(errors);
+    }
+
+    /// Merge another population (order-insensitive statistics; sample
+    /// order is concatenation order).
+    pub fn merge(&mut self, other: &ErrorPopulation) {
+        self.errors.extend_from_slice(&other.errors);
+        self.moments = self.moments.merge(&other.moments);
+    }
+
+    pub fn len(&self) -> usize {
+        self.errors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.errors.is_empty()
+    }
+
+    pub fn errors(&self) -> &[f64] {
+        &self.errors
+    }
+
+    /// Streaming moment accumulator (exact, independent of retention).
+    pub fn stats(&self) -> &Moments {
+        &self.moments
+    }
+
+    pub fn summary(&self) -> Summary {
+        self.moments.summary()
+    }
+
+    /// Box-plot summary (sorts a copy).
+    pub fn boxplot(&self) -> BoxPlot {
+        BoxPlot::from_data(&self.errors)
+    }
+
+    /// Histogram over the population span.
+    pub fn histogram(&self, bins: usize) -> Histogram {
+        Histogram::from_data(&self.errors, bins)
+    }
+
+    /// AIC-best parametric fit (Table II column "Best Fit").
+    pub fn best_fit(&self) -> crate::error::Result<FitReport> {
+        best_fit(&self.errors)
+    }
+
+    /// All candidate fits sorted by AIC.
+    pub fn fit_all(&self) -> crate::error::Result<Vec<FitReport>> {
+        fit_all(&self.errors)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn extend_tracks_moments() {
+        let mut p = ErrorPopulation::new();
+        p.extend(&[1.0, 2.0, 3.0]);
+        p.extend(&[4.0]);
+        assert_eq!(p.len(), 4);
+        assert!((p.stats().mean() - 2.5).abs() < 1e-12);
+        assert_eq!(p.stats().count(), 4);
+    }
+
+    #[test]
+    fn merge_matches_single_stream() {
+        let mut r = Xoshiro256::seed_from_u64(151);
+        let xs: Vec<f64> = (0..1000).map(|_| r.normal()).collect();
+        let mut whole = ErrorPopulation::new();
+        whole.extend(&xs);
+        let mut a = ErrorPopulation::new();
+        a.extend(&xs[..400]);
+        let mut b = ErrorPopulation::new();
+        b.extend(&xs[400..]);
+        a.merge(&b);
+        assert_eq!(a.len(), whole.len());
+        assert!((a.stats().variance() - whole.stats().variance()).abs() < 1e-12);
+        assert_eq!(a.errors(), whole.errors());
+    }
+
+    #[test]
+    fn boxplot_and_histogram_available() {
+        let mut r = Xoshiro256::seed_from_u64(152);
+        let mut p = ErrorPopulation::with_capacity(5000);
+        let xs: Vec<f64> = (0..5000).map(|_| r.normal()).collect();
+        p.extend(&xs);
+        let b = p.boxplot();
+        assert!(b.median.abs() < 0.1);
+        let h = p.histogram(32);
+        assert_eq!(h.total(), 5000);
+    }
+
+    #[test]
+    fn fitting_wired_through() {
+        let mut r = Xoshiro256::seed_from_u64(153);
+        let mut p = ErrorPopulation::new();
+        let xs: Vec<f64> = (0..4000).map(|_| r.normal_ms(0.5, 2.0)).collect();
+        p.extend(&xs);
+        let fit = p.best_fit().unwrap();
+        assert!(fit.ks < 0.05);
+    }
+}

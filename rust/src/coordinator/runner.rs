@@ -1,0 +1,354 @@
+//! The coordinator proper: run a benchmark configuration end-to-end —
+//! generate the population, dispatch chunks to the engine, reduce the
+//! error statistics.
+
+use std::sync::Arc;
+
+use crate::device::params::DeviceParams;
+use crate::error::Result;
+use crate::util::pool::{run_indexed, Parallelism};
+use crate::util::progress::Stopwatch;
+use crate::vmm::engine::VmmEngine;
+
+use super::population::ErrorPopulation;
+use super::workload::WorkloadSpec;
+
+/// One benchmark configuration: a workload under a device.
+#[derive(Debug, Clone)]
+pub struct BenchmarkConfig {
+    pub workload: WorkloadSpec,
+    pub device: DeviceParams,
+    /// Chunk size hint; clamped to the engine's preferred batches.
+    pub chunk: usize,
+    pub parallelism: Parallelism,
+    /// The paper's backward step: "the resulting vector of VMM from the
+    /// forward pass is then scaled and transformed".  The readout
+    /// calibration is fitted on an independent calibration batch (the
+    /// analog of trimming the TIA at deployment) and applied before
+    /// the error is measured.
+    pub calibrate: CalibrationMode,
+    /// Samples used for the calibration fit.
+    pub calibration_samples: usize,
+}
+
+impl BenchmarkConfig {
+    /// The paper's protocol under a given device.
+    pub fn paper_default(device: DeviceParams) -> Self {
+        Self {
+            // "MELISO" in ASCII — the default protocol seed.
+            workload: WorkloadSpec::paper_default(0x4D45_4C49_534F),
+            device,
+            chunk: 256,
+            parallelism: Parallelism::Auto,
+            calibrate: CalibrationMode::Offset,
+            calibration_samples: 64,
+        }
+    }
+
+    pub fn with_population(mut self, population: usize) -> Self {
+        self.workload.population = population;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.workload.seed = seed;
+        self
+    }
+}
+
+/// Timing breakdown of one run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RunTelemetry {
+    pub wall_secs: f64,
+    /// Seconds spent generating workload chunks (host side).
+    pub gen_secs: f64,
+    /// Seconds spent inside the engine.
+    pub engine_secs: f64,
+    pub samples: usize,
+    pub chunks: usize,
+}
+
+impl RunTelemetry {
+    /// VMM samples per second of wall time.
+    pub fn throughput(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.samples as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The coordinator: owns an engine and runs configurations on it.
+pub struct Coordinator<E: VmmEngine> {
+    engine: Arc<E>,
+}
+
+impl<E: VmmEngine + 'static> Coordinator<E> {
+    pub fn new(engine: E) -> Self {
+        Self { engine: Arc::new(engine) }
+    }
+
+    pub fn engine(&self) -> &E {
+        &self.engine
+    }
+
+    /// Run a configuration, returning the error population.
+    pub fn run(&self, cfg: &BenchmarkConfig) -> Result<ErrorPopulation> {
+        self.run_with_telemetry(cfg).map(|(p, _)| p)
+    }
+
+    /// Run a configuration with timing telemetry.
+    pub fn run_with_telemetry(
+        &self,
+        cfg: &BenchmarkConfig,
+    ) -> Result<(ErrorPopulation, RunTelemetry)> {
+        cfg.device
+            .validate()
+            .map_err(crate::error::Error::Config)?;
+        let wall = Stopwatch::start();
+        let plan = plan_chunks(
+            cfg.workload.population,
+            cfg.chunk,
+            &self.engine.preferred_batches(),
+        );
+        let spec = &cfg.workload;
+        let device = cfg.device;
+        let engine = Arc::clone(&self.engine);
+
+        // Backward-step readout calibration (paper Fig. 1): fit
+        // y_sw ≈ a·y_hw + b on an independent batch drawn *past* the
+        // population indices, so it never overlaps the measured data.
+        let (gain, offset) = match cfg.calibrate {
+            CalibrationMode::None => (1.0, 0.0),
+            mode => {
+                let cal = self.calibration_batch(cfg)?;
+                calibrate(mode, &cal.0, &cal.1)
+            }
+        };
+
+        // Each chunk job: generate -> engine -> calibrated errors.
+        // Chunks are independently seeded (see WorkloadSpec::chunk), so
+        // pool scheduling cannot change results.
+        let results: Vec<Result<(Vec<f64>, f64, f64)>> =
+            run_indexed(cfg.parallelism, plan.len(), |i| {
+                let (start, len) = plan[i];
+                let t0 = Stopwatch::start();
+                let batch = spec.chunk(start, len);
+                let gen_s = t0.elapsed_secs();
+                let t1 = Stopwatch::start();
+                let out = engine.forward(&batch, &device)?;
+                let eng_s = t1.elapsed_secs();
+                let errors: Vec<f64> = out
+                    .y_hw
+                    .iter()
+                    .zip(&out.y_sw)
+                    .map(|(&h, &s)| gain * h as f64 + offset - s as f64)
+                    .collect();
+                Ok((errors, gen_s, eng_s))
+            });
+
+        let mut pop = ErrorPopulation::with_capacity(spec.error_count());
+        let mut tel = RunTelemetry {
+            samples: spec.population,
+            chunks: plan.len(),
+            ..Default::default()
+        };
+        for r in results {
+            let (errs, gen_s, eng_s) = r?;
+            pop.extend(&errs);
+            tel.gen_secs += gen_s;
+            tel.engine_secs += eng_s;
+        }
+        tel.wall_secs = wall.elapsed_secs();
+        Ok((pop, tel))
+    }
+}
+
+impl<E: VmmEngine + 'static> Coordinator<E> {
+    /// Run the calibration workload: samples indexed past the
+    /// population (disjoint child-seed streams).
+    fn calibration_batch(&self, cfg: &BenchmarkConfig) -> Result<(Vec<f32>, Vec<f32>)> {
+        let n = cfg.calibration_samples.max(8);
+        let preferred = self.engine.preferred_batches();
+        let plan = plan_chunks(n, cfg.chunk, &preferred);
+        let mut y_hw = Vec::with_capacity(n * cfg.workload.cols);
+        let mut y_sw = Vec::with_capacity(n * cfg.workload.cols);
+        for (start, len) in plan {
+            let batch = cfg.workload.chunk(cfg.workload.population + start, len);
+            let out = self.engine.forward(&batch, &cfg.device)?;
+            y_hw.extend_from_slice(&out.y_hw);
+            y_sw.extend_from_slice(&out.y_sw);
+        }
+        Ok((y_hw, y_sw))
+    }
+}
+
+/// Readout calibration modes for the backward step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CalibrationMode {
+    /// Raw decode: no correction.
+    None,
+    /// Offset trim only (default): the decode gain is the fixed
+    /// physical constant `1/(V_read (Gmax - Gmin))`; only the additive
+    /// readout offset is nulled, as a real TIA offset-trim does.  The
+    /// reported error keeps the full distortion + noise variance (the
+    /// paper's error magnitudes exceed the signal variance, which a
+    /// fitted gain would shrink away).
+    #[default]
+    Offset,
+    /// Full least-squares affine fit `y ≈ a·y_hw + b` — the shrinkage
+    /// estimator; exposed for the calibration ablation.
+    Affine,
+}
+
+/// Fit the calibration on (y_hw, y_sw) pairs.  Degenerate hardware
+/// output (zero variance) falls back to the identity.
+fn calibrate(mode: CalibrationMode, y_hw: &[f32], y_sw: &[f32]) -> (f64, f64) {
+    let n = y_hw.len() as f64;
+    if n < 2.0 {
+        return (1.0, 0.0);
+    }
+    let mh = y_hw.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let ms = y_sw.iter().map(|&v| v as f64).sum::<f64>() / n;
+    if mode == CalibrationMode::Offset {
+        return (1.0, ms - mh);
+    }
+    affine_calibration(y_hw, y_sw)
+}
+
+/// Least-squares affine readout calibration: minimize
+/// `sum (a·y_hw + b - y_sw)^2`.
+fn affine_calibration(y_hw: &[f32], y_sw: &[f32]) -> (f64, f64) {
+    let n = y_hw.len() as f64;
+    if n < 2.0 {
+        return (1.0, 0.0);
+    }
+    let mh = y_hw.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let ms = y_sw.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut var = 0.0;
+    for (&h, &s) in y_hw.iter().zip(y_sw) {
+        let dh = h as f64 - mh;
+        cov += dh * (s as f64 - ms);
+        var += dh * dh;
+    }
+    if var < 1e-12 {
+        return (1.0, 0.0);
+    }
+    let a = cov / var;
+    (a, ms - a * mh)
+}
+
+/// Partition `population` into (start, len) chunks.  When the engine
+/// pins batch sizes (XLA artifacts), every chunk length must be one of
+/// them; we use the largest fitting artifact and fall back to the
+/// smallest one for the remainder, padding never required because a
+/// batch-1 artifact always exists.
+fn plan_chunks(population: usize, hint: usize, preferred: &[usize]) -> Vec<(usize, usize)> {
+    let mut plan = Vec::new();
+    let mut start = 0;
+    if preferred.is_empty() {
+        let chunk = hint.max(1);
+        while start < population {
+            let len = chunk.min(population - start);
+            plan.push((start, len));
+            start += len;
+        }
+    } else {
+        // preferred is descending.
+        while start < population {
+            let remaining = population - start;
+            let len = preferred
+                .iter()
+                .copied()
+                .find(|&b| b <= remaining && b <= hint.max(1))
+                .or_else(|| preferred.iter().copied().find(|&b| b <= remaining))
+                .unwrap_or(*preferred.last().unwrap());
+            // If even the smallest artifact exceeds the remainder we
+            // cannot proceed (should not happen with a b=1 artifact).
+            let len = len.min(remaining).max(1);
+            plan.push((start, len));
+            start += len;
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+    use crate::vmm::NativeEngine;
+
+    #[test]
+    fn plan_without_preferences() {
+        let p = plan_chunks(10, 4, &[]);
+        assert_eq!(p, vec![(0, 4), (4, 4), (8, 2)]);
+    }
+
+    #[test]
+    fn plan_with_artifact_batches() {
+        let p = plan_chunks(300, 256, &[256, 32, 1]);
+        assert_eq!(p[0], (0, 256));
+        assert_eq!(p[1], (256, 32));
+        // remainder 12 -> twelve singles
+        assert_eq!(p.len(), 2 + 12);
+        let total: usize = p.iter().map(|&(_, l)| l).sum();
+        assert_eq!(total, 300);
+    }
+
+    #[test]
+    fn plan_respects_hint() {
+        let p = plan_chunks(64, 32, &[256, 32, 1]);
+        assert_eq!(p, vec![(0, 32), (32, 32)]);
+    }
+
+    #[test]
+    fn native_run_paper_protocol_small() {
+        let cfg = BenchmarkConfig::paper_default(presets::epiram().params)
+            .with_population(64);
+        let coord = Coordinator::new(NativeEngine);
+        let (pop, tel) = coord.run_with_telemetry(&cfg).unwrap();
+        assert_eq!(pop.len(), 64 * 32);
+        assert_eq!(tel.samples, 64);
+        assert!(tel.throughput() > 0.0);
+        // EpiRAM with non-idealities: small but nonzero error.
+        let var = pop.stats().variance();
+        assert!(var > 1e-6 && var < 10.0, "var={var}");
+    }
+
+    #[test]
+    fn parallel_and_serial_identical() {
+        let mut cfg = BenchmarkConfig::paper_default(presets::ag_si().params)
+            .with_population(40);
+        cfg.chunk = 8;
+        cfg.parallelism = Parallelism::Fixed(1);
+        let coord = Coordinator::new(NativeEngine);
+        let serial = coord.run(&cfg).unwrap();
+        cfg.parallelism = Parallelism::Fixed(4);
+        let parallel = coord.run(&cfg).unwrap();
+        assert_eq!(serial.errors(), parallel.errors());
+    }
+
+    #[test]
+    fn chunk_size_does_not_change_population() {
+        let coord = Coordinator::new(NativeEngine);
+        let mut cfg = BenchmarkConfig::paper_default(presets::taox_hfox().params)
+            .with_population(30);
+        cfg.chunk = 30;
+        let a = coord.run(&cfg).unwrap();
+        cfg.chunk = 7;
+        let b = coord.run(&cfg).unwrap();
+        assert_eq!(a.errors(), b.errors());
+    }
+
+    #[test]
+    fn invalid_device_rejected() {
+        let mut params = presets::ag_si().params;
+        params.memory_window = 0.5;
+        let cfg = BenchmarkConfig::paper_default(params).with_population(4);
+        let coord = Coordinator::new(NativeEngine);
+        assert!(coord.run(&cfg).is_err());
+    }
+}

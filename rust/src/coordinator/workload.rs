@@ -1,0 +1,163 @@
+//! Workload generation: the paper's protocol of random `A` matrices
+//! and `x` vectors, reproducibly seeded per chunk.
+
+use crate::util::rng::Xoshiro256;
+use crate::vmm::engine::VmmBatch;
+
+/// Distribution of the random matrix/vector entries.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EntryDist {
+    /// Uniform in `[lo, hi]`.  Weights use the symmetric `[-1, 1]`
+    /// range; inputs default to `[0, 1]` — crossbar read voltages are
+    /// physically non-negative, which is also what gives the error
+    /// distributions their positive mean and skew (Table II).
+    Uniform { lo: f64, hi: f64 },
+    /// Standard normal scaled by `sigma`, clipped to `[-1, 1]` (the
+    /// crossbar's representable range).
+    ClippedNormal { sigma: f64 },
+}
+
+impl Default for EntryDist {
+    fn default() -> Self {
+        EntryDist::Uniform { lo: -1.0, hi: 1.0 }
+    }
+}
+
+/// Specification of one benchmark workload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    pub rows: usize,
+    pub cols: usize,
+    /// Number of VMM samples in the population (paper: 1000).
+    pub population: usize,
+    pub weights: EntryDist,
+    pub inputs: EntryDist,
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    /// The paper's protocol: 1000 random 32x32 · 32x1 products —
+    /// weights uniform in [-1, 1], read voltages uniform in [0, 1].
+    pub fn paper_default(seed: u64) -> Self {
+        Self {
+            rows: crate::ROWS,
+            cols: crate::COLS,
+            population: crate::PAPER_POPULATION,
+            weights: EntryDist::default(),
+            inputs: EntryDist::Uniform { lo: 0.0, hi: 1.0 },
+            seed,
+        }
+    }
+
+    /// Total error samples this workload will produce.
+    pub fn error_count(&self) -> usize {
+        self.population * self.cols
+    }
+
+    /// Generate the chunk of samples `[start, start+batch)` as an
+    /// engine batch.  Chunks are seeded independently by `start`, so
+    /// the full population is identical regardless of chunk sizes or
+    /// scheduling order — the reproducibility contract.
+    pub fn chunk(&self, start: usize, batch: usize) -> VmmBatch {
+        let mut vb = VmmBatch::zeros(batch, self.rows, self.cols);
+        let cells = self.rows * self.cols;
+        let root = Xoshiro256::seed_from_u64(self.seed);
+        for s in 0..batch {
+            let mut rng = root.child((start + s) as u64);
+            fill(&mut rng, self.weights, &mut vb.w[s * cells..(s + 1) * cells]);
+            fill(
+                &mut rng,
+                self.inputs,
+                &mut vb.x[s * self.rows..(s + 1) * self.rows],
+            );
+            let zbase = s * 3 * cells;
+            rng.fill_normal_f32(&mut vb.z[zbase..zbase + 3 * cells]);
+        }
+        vb
+    }
+}
+
+fn fill(rng: &mut Xoshiro256, dist: EntryDist, out: &mut [f32]) {
+    match dist {
+        EntryDist::Uniform { lo, hi } => rng.fill_uniform_f32(out, lo, hi),
+        EntryDist::ClippedNormal { sigma } => {
+            for v in out.iter_mut() {
+                *v = (rng.normal() * sigma).clamp(-1.0, 1.0) as f32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_protocol() {
+        let w = WorkloadSpec::paper_default(1);
+        assert_eq!(w.rows, 32);
+        assert_eq!(w.cols, 32);
+        assert_eq!(w.population, 1000);
+        assert_eq!(w.error_count(), 32_000);
+    }
+
+    #[test]
+    fn chunking_is_schedule_invariant() {
+        let spec = WorkloadSpec::paper_default(42);
+        // One chunk of 8 == two chunks of 4 == eight chunks of 1.
+        let whole = spec.chunk(0, 8);
+        let a = spec.chunk(0, 4);
+        let b = spec.chunk(4, 4);
+        let cells = 32 * 32;
+        assert_eq!(&whole.w[..4 * cells], &a.w[..]);
+        assert_eq!(&whole.w[4 * cells..], &b.w[..]);
+        assert_eq!(&whole.x[..4 * 32], &a.x[..]);
+        assert_eq!(&whole.z[4 * 3 * cells..], &b.z[..]);
+        for s in 0..8 {
+            let one = spec.chunk(s, 1);
+            assert_eq!(whole.w_of(s), one.w_of(0), "sample {s}");
+            assert_eq!(whole.x_of(s), one.x_of(0));
+            assert_eq!(whole.z_of(s, 2), one.z_of(0, 2));
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = WorkloadSpec::paper_default(1).chunk(0, 1);
+        let b = WorkloadSpec::paper_default(2).chunk(0, 1);
+        assert_ne!(a.w, b.w);
+    }
+
+    #[test]
+    fn uniform_entries_in_range() {
+        let spec = WorkloadSpec::paper_default(7);
+        let c = spec.chunk(0, 4);
+        assert!(c.w.iter().all(|v| (-1.0..=1.0).contains(v)));
+        assert!(c.x.iter().all(|v| (-1.0..=1.0).contains(v)));
+    }
+
+    #[test]
+    fn clipped_normal_respects_bounds() {
+        let spec = WorkloadSpec {
+            weights: EntryDist::ClippedNormal { sigma: 2.0 },
+            inputs: EntryDist::ClippedNormal { sigma: 0.5 },
+            ..WorkloadSpec::paper_default(9)
+        };
+        let c = spec.chunk(0, 8);
+        assert!(c.w.iter().all(|v| (-1.0..=1.0).contains(v)));
+        // With sigma=2, clipping must actually occur somewhere.
+        assert!(c.w.iter().any(|&v| v == 1.0 || v == -1.0));
+    }
+
+    #[test]
+    fn noise_is_standard_normal_ish() {
+        let spec = WorkloadSpec::paper_default(11);
+        let c = spec.chunk(0, 16);
+        let n = c.z.len() as f64;
+        let mean: f64 = c.z.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var: f64 =
+            c.z.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+}

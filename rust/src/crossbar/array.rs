@@ -1,0 +1,394 @@
+//! A single RRAM crossbar array with differential conductance pairs.
+//!
+//! Semantics mirror the L2 JAX pipeline exactly (`program_crossbar` +
+//! `baseline_mismatch_current` + the L1 crossbar read in
+//! `python/compile/model.py`); noise enters as explicit standard-normal
+//! draws so the native and XLA engines are comparable sample-by-sample.
+
+use crate::device::params::DeviceParams;
+use crate::device::pulse::{mismatch_transform, nl_to_curvature, pulse_curve};
+use crate::util::rng::Xoshiro256;
+
+/// Per-cell noise draws for programming one array: three channels, as
+/// in the artifact's `z` input (`z0` C2C+, `z1` C2C-, `z2` mismatch).
+#[derive(Debug, Clone)]
+pub struct ProgramNoise {
+    pub z0: Vec<f32>,
+    pub z1: Vec<f32>,
+    pub z2: Vec<f32>,
+}
+
+impl ProgramNoise {
+    /// Zero noise (deterministic programming).
+    pub fn zeros(cells: usize) -> Self {
+        Self {
+            z0: vec![0.0; cells],
+            z1: vec![0.0; cells],
+            z2: vec![0.0; cells],
+        }
+    }
+
+    /// Sample from the given RNG in channel order — identical to the
+    /// coordinator's artifact-input packing.
+    pub fn sample(rng: &mut Xoshiro256, cells: usize) -> Self {
+        let mut n = Self {
+            z0: vec![0.0; cells],
+            z1: vec![0.0; cells],
+            z2: vec![0.0; cells],
+        };
+        rng.fill_normal_f32(&mut n.z0);
+        rng.fill_normal_f32(&mut n.z1);
+        rng.fill_normal_f32(&mut n.z2);
+        n
+    }
+}
+
+/// A programmed crossbar array holding normalized differential
+/// conductances plus the per-cell mismatch residue.
+#[derive(Debug, Clone)]
+pub struct CrossbarArray {
+    rows: usize,
+    cols: usize,
+    /// `gp - gn` per cell, row-major (the effective signed weight).
+    g_diff: Vec<f32>,
+    /// Per-cell mismatch current coefficient (already scaled by `m`).
+    mismatch: Vec<f32>,
+    /// Normalized positive/negative conductances (kept for inspection
+    /// and the program-only artifact cross-check).
+    gp: Vec<f32>,
+    gn: Vec<f32>,
+}
+
+impl CrossbarArray {
+    /// Program target weights `w` (row-major `rows x cols`, in
+    /// `[-1, 1]`) into the array under `params`, consuming the given
+    /// noise draws (open-loop, write-verify off — the paper's
+    /// benchmark protocol).
+    pub fn program(
+        rows: usize,
+        cols: usize,
+        w: &[f32],
+        params: &DeviceParams,
+        noise: &ProgramNoise,
+    ) -> Self {
+        Self::program_with(rows, cols, w, params, noise, false)
+    }
+
+    /// Program with closed-loop write–verify: each cell is iteratively
+    /// read back and corrected, so the NL deviation is nulled and the
+    /// accumulated C2C walk collapses to a single residual pulse of
+    /// disturbance.  The paper (§III) calls this "essential to mitigate
+    /// [NL] effects ... in real-world applications"; the in-memory
+    /// solvers use it.  Read-path mismatch is unaffected.
+    pub fn program_verified(
+        rows: usize,
+        cols: usize,
+        w: &[f32],
+        params: &DeviceParams,
+        noise: &ProgramNoise,
+    ) -> Self {
+        Self::program_with(rows, cols, w, params, noise, true)
+    }
+
+    fn program_with(
+        rows: usize,
+        cols: usize,
+        w: &[f32],
+        params: &DeviceParams,
+        noise: &ProgramNoise,
+        verify: bool,
+    ) -> Self {
+        let cells = rows * cols;
+        assert_eq!(w.len(), cells, "weight buffer size mismatch");
+        assert_eq!(noise.z0.len(), cells);
+        assert_eq!(noise.z1.len(), cells);
+        assert_eq!(noise.z2.len(), cells);
+
+        let n = params.states - 1.0;
+        // Linear-in-sigma C2C law, scale fitted once (DESIGN.md §7).
+        let acc = params.sigma_c2c * params.k_c2c;
+        let m = params.mismatch_scale();
+
+        // Per-array cycle severity: lognormal draw shared by all cells
+        // of this programming cycle (mirrors model.SEVERITY_SIGMA).
+        const SEVERITY_SIGMA: f64 = 0.6;
+        let zeta = noise.z0.iter().map(|&z| z as f64).sum::<f64>()
+            / (cells as f64).sqrt();
+        let sev = (SEVERITY_SIGMA * zeta - 0.5 * SEVERITY_SIGMA * SEVERITY_SIGMA).exp();
+
+        // NL label -> curve curvature (mirrors model.NL_GAMMA).
+        let kappa_p = nl_to_curvature(params.nu_ltp);
+        let kappa_d = nl_to_curvature(params.nu_ltd);
+
+        // Perf: pulse counts are integers in [0, n], so the curve
+        // values and sqrt(s) live on an S-point grid — precompute them
+        // once per array instead of paying 4 exp() + 2 sqrt() per
+        // cell.  Direct evaluation remains for very large S (the
+        // "ideal" 65536-state device) where the table would cost more
+        // than it saves.
+        const TABLE_LIMIT: usize = 4096;
+        let table: Option<(Vec<f64>, Vec<f64>, Vec<f64>)> =
+            if !verify && (params.states as usize) <= TABLE_LIMIT {
+                let states = params.states as usize;
+                let mut cp = Vec::with_capacity(states);
+                let mut cd = Vec::with_capacity(states);
+                let mut sq = Vec::with_capacity(states);
+                for s in 0..states {
+                    let t = s as f64 / n;
+                    cp.push(pulse_curve(t, kappa_p));
+                    cd.push(pulse_curve(t, kappa_d));
+                    sq.push((s as f64).sqrt());
+                }
+                Some((cp, cd, sq))
+            } else {
+                None
+            };
+
+        let mut gp = vec![0.0f32; cells];
+        let mut gn = vec![0.0f32; cells];
+        let mut g_diff = vec![0.0f32; cells];
+        let mut mismatch = vec![0.0f32; cells];
+
+        for i in 0..cells {
+            let wi = w[i] as f64;
+            // Complementary pulse targets (1±w)/2 — both devices of the
+            // pair are actively programmed, as in the NeuroSim scheme.
+            // f32 rounding mirrors the artifact, which computes in f32.
+            let s_pos = (((1.0 + wi) * 0.5 * n) as f32).round() as f64;
+            let s_neg = (((1.0 - wi) * 0.5 * n) as f32).round() as f64;
+            let t_pos = s_pos / n;
+            let t_neg = s_neg / n;
+
+            // Open-loop NL deviation (label -> curvature mapping) +
+            // severity-scaled pulse-domain C2C noise; write-verify
+            // nulls the NL deviation and leaves one pulse of residual
+            // C2C disturbance.
+            let (mut g_pos, mut g_neg) = if verify {
+                (
+                    t_pos + params.sigma_c2c * noise.z0[i] as f64,
+                    t_neg + params.sigma_c2c * noise.z1[i] as f64,
+                )
+            } else if let Some((cp, cd, sq)) = &table {
+                let (ip, id) = (s_pos as usize, s_neg as usize);
+                (
+                    cp[ip] + sev * acc * sq[ip] * noise.z0[i] as f64,
+                    cd[id] + sev * acc * sq[id] * noise.z1[i] as f64,
+                )
+            } else {
+                (
+                    pulse_curve(t_pos, kappa_p) + sev * acc * s_pos.sqrt() * noise.z0[i] as f64,
+                    pulse_curve(t_neg, kappa_d) + sev * acc * s_neg.sqrt() * noise.z1[i] as f64,
+                )
+            };
+            g_pos = g_pos.clamp(0.0, 1.0);
+            g_neg = g_neg.clamp(0.0, 1.0);
+
+            gp[i] = g_pos as f32;
+            gn[i] = g_neg as f32;
+            g_diff[i] = (g_pos - g_neg) as f32;
+            mismatch[i] = (m * mismatch_transform(noise.z2[i] as f64)) as f32;
+        }
+
+        Self { rows, cols, g_diff, mismatch, gp, gn }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Normalized positive conductances (row-major).
+    pub fn gp(&self) -> &[f32] {
+        &self.gp
+    }
+
+    /// Normalized negative conductances (row-major).
+    pub fn gn(&self) -> &[f32] {
+        &self.gn
+    }
+
+    /// Effective programmed weight of cell `(i, j)` (differential,
+    /// without mismatch).
+    pub fn weight(&self, i: usize, j: usize) -> f32 {
+        self.g_diff[i * self.cols + j]
+    }
+
+    /// Analog read: `y[j] = sum_i x[i] * (g_diff + mismatch)[i,j]`,
+    /// already decoded to weight units (the differential read cancels
+    /// `Gmin` and the decode divides by the range — see DESIGN.md §4).
+    pub fn read(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.fill(0.0);
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let row_d = &self.g_diff[i * self.cols..(i + 1) * self.cols];
+            let row_m = &self.mismatch[i * self.cols..(i + 1) * self.cols];
+            for j in 0..self.cols {
+                y[j] += xi * (row_d[j] + row_m[j]);
+            }
+        }
+    }
+
+    /// Convenience allocating read.
+    pub fn read_vec(&self, x: &[f32]) -> Vec<f32> {
+        let mut y = vec![0.0; self.cols];
+        self.read(x, &mut y);
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::params::DeviceParams;
+    use crate::util::rng::Xoshiro256;
+
+    fn rand_w(rng: &mut Xoshiro256, n: usize) -> Vec<f32> {
+        let mut w = vec![0.0f32; n];
+        rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+        w
+    }
+
+    #[test]
+    fn ideal_program_recovers_weights() {
+        let mut rng = Xoshiro256::seed_from_u64(101);
+        let w = rand_w(&mut rng, 32 * 32);
+        let arr = CrossbarArray::program(
+            32,
+            32,
+            &w,
+            &DeviceParams::ideal(),
+            &ProgramNoise::zeros(32 * 32),
+        );
+        for (i, &wi) in w.iter().enumerate() {
+            assert!(
+                (arr.g_diff[i] - wi).abs() < 2e-4,
+                "cell {i}: {} vs {wi}",
+                arr.g_diff[i]
+            );
+        }
+    }
+
+    #[test]
+    fn ideal_read_matches_software_dot() {
+        let mut rng = Xoshiro256::seed_from_u64(102);
+        let w = rand_w(&mut rng, 32 * 32);
+        let mut x = vec![0.0f32; 32];
+        rng.fill_uniform_f32(&mut x, -1.0, 1.0);
+        let arr = CrossbarArray::program(
+            32,
+            32,
+            &w,
+            &DeviceParams::ideal(),
+            &ProgramNoise::zeros(32 * 32),
+        );
+        let y = arr.read_vec(&x);
+        for j in 0..32 {
+            let want: f32 = (0..32).map(|i| x[i] * w[i * 32 + j]).sum();
+            assert!((y[j] - want).abs() < 5e-3, "col {j}: {} vs {want}", y[j]);
+        }
+    }
+
+    #[test]
+    fn complementary_pair_targets_without_noise() {
+        let params = DeviceParams::ideal().with_weight_bits(6);
+        let w = vec![0.75f32, -0.75, 0.0, 1.0];
+        let arr = CrossbarArray::program(2, 2, &w, &params, &ProgramNoise::zeros(4));
+        // w = 0.75: gp -> (1+w)/2 = 0.875, gn -> 0.125.
+        assert!((arr.gp()[0] - 0.875).abs() < 0.02);
+        assert!((arr.gn()[0] - 0.125).abs() < 0.02);
+        // Mirror for w = -0.75.
+        assert!((arr.gp()[1] - 0.125).abs() < 0.02);
+        assert!((arr.gn()[1] - 0.875).abs() < 0.02);
+        // Zero weight: both at the midpoint; full scale: gp=1, gn=0.
+        assert!((arr.gp()[2] - 0.5).abs() < 0.02);
+        assert!((arr.gn()[2] - 0.5).abs() < 0.02);
+        assert!((arr.gp()[3] - 1.0).abs() < 1e-6);
+        assert_eq!(arr.gn()[3], 0.0);
+    }
+
+    #[test]
+    fn conductances_always_in_window() {
+        let mut rng = Xoshiro256::seed_from_u64(103);
+        let params = DeviceParams::ideal()
+            .with_weight_bits(5)
+            .with_nonlinearity(2.4, -4.88)
+            .with_c2c(0.05);
+        for trial in 0..10 {
+            let w = rand_w(&mut rng, 16 * 16);
+            let noise = ProgramNoise::sample(&mut rng, 16 * 16);
+            let arr = CrossbarArray::program(16, 16, &w, &params, &noise);
+            for i in 0..16 * 16 {
+                assert!((0.0..=1.0).contains(&arr.gp()[i]), "trial {trial}");
+                assert!((0.0..=1.0).contains(&arr.gn()[i]), "trial {trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn c2c_noise_perturbs_programming() {
+        let mut rng = Xoshiro256::seed_from_u64(104);
+        let params = DeviceParams::ideal().with_weight_bits(7).with_c2c(0.03);
+        let w = rand_w(&mut rng, 8 * 8);
+        let clean =
+            CrossbarArray::program(8, 8, &w, &params, &ProgramNoise::zeros(8 * 8));
+        let noise = ProgramNoise::sample(&mut rng, 8 * 8);
+        let noisy = CrossbarArray::program(8, 8, &w, &params, &noise);
+        let diff: f32 = (0..64)
+            .map(|i| (clean.g_diff[i] - noisy.g_diff[i]).abs())
+            .sum();
+        assert!(diff > 0.01, "c2c must move conductances");
+    }
+
+    #[test]
+    fn both_devices_accumulate_c2c_noise() {
+        // The complementary scheme programs both devices (~n/2 pulses
+        // each), so even zero weights carry C2C noise — the mechanism
+        // behind the strong Fig. 4/5 degradation.
+        let params = DeviceParams::ideal().with_weight_bits(7).with_c2c(0.05);
+        let mut rng = Xoshiro256::seed_from_u64(105);
+        let noise = ProgramNoise::sample(&mut rng, 4);
+        let arr = CrossbarArray::program(2, 2, &[0.0; 4], &params, &noise);
+        let moved = (0..4).filter(|&i| arr.g_diff[i] != 0.0).count();
+        assert!(moved >= 3, "zero weights must still be noisy: {moved}/4");
+    }
+
+    #[test]
+    fn read_is_linear_in_x() {
+        let mut rng = Xoshiro256::seed_from_u64(106);
+        let w = rand_w(&mut rng, 8 * 8);
+        let noise = ProgramNoise::sample(&mut rng, 8 * 8);
+        let params = DeviceParams::ideal().with_nonlinearity(1.0, -1.0);
+        let arr = CrossbarArray::program(8, 8, &w, &params, &noise);
+        let mut x1 = vec![0.0f32; 8];
+        let mut x2 = vec![0.0f32; 8];
+        rng.fill_uniform_f32(&mut x1, -1.0, 1.0);
+        rng.fill_uniform_f32(&mut x2, -1.0, 1.0);
+        let xsum: Vec<f32> = x1.iter().zip(&x2).map(|(a, b)| a + b).collect();
+        let y1 = arr.read_vec(&x1);
+        let y2 = arr.read_vec(&x2);
+        let ysum = arr.read_vec(&xsum);
+        for j in 0..8 {
+            assert!((ysum[j] - y1[j] - y2[j]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn wrong_buffer_size_panics() {
+        CrossbarArray::program(
+            4,
+            4,
+            &[0.0; 15],
+            &DeviceParams::ideal(),
+            &ProgramNoise::zeros(16),
+        );
+    }
+}

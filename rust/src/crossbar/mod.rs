@@ -1,0 +1,14 @@
+//! Crossbar-array substrate: differential-pair programming of a
+//! weight matrix into conductances, analog read, tiling of matrices
+//! larger than one physical array, peripheral (DAC/ADC) quantization,
+//! and a read-energy model.
+
+pub mod array;
+pub mod energy;
+pub mod peripheral;
+pub mod tile;
+
+pub use array::CrossbarArray;
+pub use energy::EnergyModel;
+pub use peripheral::Peripherals;
+pub use tile::TiledCrossbar;

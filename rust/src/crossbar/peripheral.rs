@@ -1,0 +1,134 @@
+//! Peripheral circuit models: DAC quantization on the word-line drive
+//! and ADC quantization on the bit-line readout.
+//!
+//! The paper's protocol uses ideal peripherals (the error analysis
+//! isolates device physics), so both default to **off**; the ablation
+//! bench (`meliso run ablation-adc`) switches them on to show where
+//! peripheral precision starts to dominate device error — the
+//! NeuroSim+ heritage the paper builds on.
+
+/// DAC/ADC configuration.  `None` bits = ideal (infinite precision).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Peripherals {
+    pub dac_bits: Option<u32>,
+    pub adc_bits: Option<u32>,
+}
+
+impl Peripherals {
+    pub const IDEAL: Peripherals = Peripherals { dac_bits: None, adc_bits: None };
+
+    pub fn with_dac(mut self, bits: u32) -> Self {
+        self.dac_bits = Some(bits);
+        self
+    }
+
+    pub fn with_adc(mut self, bits: u32) -> Self {
+        self.adc_bits = Some(bits);
+        self
+    }
+
+    /// Quantize an input voltage in `[-1, 1]` through the DAC.
+    pub fn dac(&self, x: f32) -> f32 {
+        match self.dac_bits {
+            None => x,
+            Some(bits) => quantize_symmetric(x, bits, 1.0),
+        }
+    }
+
+    /// Quantize a bit-line readout through the ADC with full-scale
+    /// range `fs` (outputs clamp at the rails, as real ADCs do).
+    pub fn adc(&self, y: f32, fs: f32) -> f32 {
+        match self.adc_bits {
+            None => y,
+            Some(bits) => quantize_symmetric(y, bits, fs),
+        }
+    }
+
+    /// Apply the DAC to a whole drive vector.
+    pub fn dac_vec(&self, x: &mut [f32]) {
+        if self.dac_bits.is_some() {
+            for v in x.iter_mut() {
+                *v = self.dac(*v);
+            }
+        }
+    }
+
+    /// Apply the ADC to a whole readout vector.
+    pub fn adc_vec(&self, y: &mut [f32], fs: f32) {
+        if self.adc_bits.is_some() {
+            for v in y.iter_mut() {
+                *v = self.adc(*v, fs);
+            }
+        }
+    }
+}
+
+/// Mid-rise uniform quantizer over `[-fs, fs]` with `2^bits` levels,
+/// clamping outside the full-scale range.
+fn quantize_symmetric(x: f32, bits: u32, fs: f32) -> f32 {
+    let levels = (1u64 << bits) as f32;
+    let step = 2.0 * fs / levels;
+    let clamped = x.clamp(-fs, fs - step * 0.5);
+    ((clamped / step).round() * step).clamp(-fs, fs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_is_identity() {
+        let p = Peripherals::IDEAL;
+        assert_eq!(p.dac(0.3333), 0.3333);
+        assert_eq!(p.adc(-7.77, 32.0), -7.77);
+    }
+
+    #[test]
+    fn dac_quantizes_to_grid() {
+        let p = Peripherals::default().with_dac(3); // 8 levels, step 0.25
+        let q = p.dac(0.3);
+        assert!((q - 0.25).abs() < 1e-6, "q={q}");
+        let q = p.dac(-0.9999);
+        assert!(q >= -1.0);
+    }
+
+    #[test]
+    fn adc_clamps_at_rails() {
+        let p = Peripherals::default().with_adc(4);
+        assert!(p.adc(100.0, 8.0) <= 8.0);
+        assert!(p.adc(-100.0, 8.0) >= -8.0);
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let xs: Vec<f32> = (0..1000).map(|i| (i as f32 / 999.0) * 2.0 - 1.0).collect();
+        let err = |bits: u32| -> f32 {
+            let p = Peripherals::default().with_dac(bits);
+            xs.iter().map(|&x| (p.dac(x) - x).abs()).sum::<f32>() / xs.len() as f32
+        };
+        assert!(err(2) > err(4));
+        assert!(err(4) > err(8));
+        assert!(err(8) < 0.005);
+    }
+
+    #[test]
+    fn quantizer_is_idempotent() {
+        let p = Peripherals::default().with_adc(5);
+        for x in [-3.0f32, -0.2, 0.0, 1.7] {
+            let once = p.adc(x, 4.0);
+            let twice = p.adc(once, 4.0);
+            assert_eq!(once, twice);
+        }
+    }
+
+    #[test]
+    fn vec_helpers_apply_elementwise() {
+        let p = Peripherals::default().with_dac(2).with_adc(2);
+        let mut x = vec![0.3f32, -0.8];
+        p.dac_vec(&mut x);
+        assert_eq!(x[0], p.dac(0.3));
+        let mut y = vec![1.3f32, -2.9];
+        p.adc_vec(&mut y, 4.0);
+        assert_eq!(y[1], p.adc(-2.9, 4.0));
+    }
+}

@@ -1,0 +1,247 @@
+//! Tiling: map a weight matrix larger than one physical array onto a
+//! grid of 32x32 crossbars, with per-tile programming and summed
+//! partial currents.  This is what lets the in-memory linear solvers
+//! (`solver`) run systems bigger than the paper's 32x32 protocol.
+
+use crate::device::params::DeviceParams;
+use crate::util::rng::Xoshiro256;
+
+use super::array::{CrossbarArray, ProgramNoise};
+
+/// A logical matrix mapped onto a grid of physical crossbar tiles.
+#[derive(Debug)]
+pub struct TiledCrossbar {
+    rows: usize,
+    cols: usize,
+    tile_rows: usize,
+    tile_cols: usize,
+    grid_r: usize,
+    grid_c: usize,
+    tiles: Vec<CrossbarArray>,
+}
+
+impl TiledCrossbar {
+    /// Program an arbitrary `rows x cols` weight matrix (row-major,
+    /// values in `[-1, 1]`) onto `tile_rows x tile_cols` arrays.
+    /// Partial tiles are zero-padded (zero weights cost zero pulses,
+    /// matching real deployments that ground unused lines).
+    pub fn program(
+        rows: usize,
+        cols: usize,
+        w: &[f32],
+        params: &DeviceParams,
+        tile_rows: usize,
+        tile_cols: usize,
+        rng: &mut Xoshiro256,
+    ) -> Self {
+        Self::program_with(rows, cols, w, params, tile_rows, tile_cols, rng, false)
+    }
+
+    /// Tiled programming with closed-loop write–verify (see
+    /// [`CrossbarArray::program_verified`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn program_verified(
+        rows: usize,
+        cols: usize,
+        w: &[f32],
+        params: &DeviceParams,
+        tile_rows: usize,
+        tile_cols: usize,
+        rng: &mut Xoshiro256,
+    ) -> Self {
+        Self::program_with(rows, cols, w, params, tile_rows, tile_cols, rng, true)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn program_with(
+        rows: usize,
+        cols: usize,
+        w: &[f32],
+        params: &DeviceParams,
+        tile_rows: usize,
+        tile_cols: usize,
+        rng: &mut Xoshiro256,
+        verify: bool,
+    ) -> Self {
+        assert_eq!(w.len(), rows * cols);
+        assert!(tile_rows > 0 && tile_cols > 0);
+        let grid_r = rows.div_ceil(tile_rows);
+        let grid_c = cols.div_ceil(tile_cols);
+        let mut tiles = Vec::with_capacity(grid_r * grid_c);
+        let cells = tile_rows * tile_cols;
+
+        for tr in 0..grid_r {
+            for tc in 0..grid_c {
+                let mut tw = vec![0.0f32; cells];
+                for i in 0..tile_rows {
+                    let gi = tr * tile_rows + i;
+                    if gi >= rows {
+                        break;
+                    }
+                    for j in 0..tile_cols {
+                        let gj = tc * tile_cols + j;
+                        if gj >= cols {
+                            break;
+                        }
+                        tw[i * tile_cols + j] = w[gi * cols + gj];
+                    }
+                }
+                let noise = ProgramNoise::sample(rng, cells);
+                tiles.push(if verify {
+                    CrossbarArray::program_verified(tile_rows, tile_cols, &tw, params, &noise)
+                } else {
+                    CrossbarArray::program(tile_rows, tile_cols, &tw, params, &noise)
+                });
+            }
+        }
+        Self { rows, cols, tile_rows, tile_cols, grid_r, grid_c, tiles }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn tile_count(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// Full VMM `y = x^T W` by summing partial currents across the
+    /// tile grid (bit-line current summation across tile rows).
+    pub fn read(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.fill(0.0);
+        let mut ty = vec![0.0f32; self.tile_cols];
+        for tr in 0..self.grid_r {
+            let r0 = tr * self.tile_rows;
+            let rlen = self.tile_rows.min(self.rows - r0);
+            // Zero-padded input slice for this tile row.
+            let mut tx = vec![0.0f32; self.tile_rows];
+            tx[..rlen].copy_from_slice(&x[r0..r0 + rlen]);
+            for tc in 0..self.grid_c {
+                let tile = &self.tiles[tr * self.grid_c + tc];
+                tile.read(&tx, &mut ty);
+                let c0 = tc * self.tile_cols;
+                let clen = self.tile_cols.min(self.cols - c0);
+                for j in 0..clen {
+                    y[c0 + j] += ty[j];
+                }
+            }
+        }
+    }
+
+    pub fn read_vec(&self, x: &[f32]) -> Vec<f32> {
+        let mut y = vec![0.0; self.cols];
+        self.read(x, &mut y);
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::params::DeviceParams;
+
+    fn software_vmm(rows: usize, cols: usize, w: &[f32], x: &[f32]) -> Vec<f32> {
+        (0..cols)
+            .map(|j| (0..rows).map(|i| x[i] * w[i * cols + j]).sum())
+            .collect()
+    }
+
+    #[test]
+    fn exact_tiling_matches_software() {
+        let mut rng = Xoshiro256::seed_from_u64(111);
+        let (rows, cols) = (64, 96);
+        let mut w = vec![0.0f32; rows * cols];
+        let mut x = vec![0.0f32; rows];
+        rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+        rng.fill_uniform_f32(&mut x, -1.0, 1.0);
+        let t = TiledCrossbar::program(
+            rows,
+            cols,
+            &w,
+            &DeviceParams::ideal(),
+            32,
+            32,
+            &mut rng,
+        );
+        assert_eq!(t.tile_count(), 2 * 3);
+        let y = t.read_vec(&x);
+        let want = software_vmm(rows, cols, &w, &x);
+        for j in 0..cols {
+            assert!((y[j] - want[j]).abs() < 0.02, "col {j}: {} vs {}", y[j], want[j]);
+        }
+    }
+
+    #[test]
+    fn ragged_tiling_matches_software() {
+        let mut rng = Xoshiro256::seed_from_u64(112);
+        let (rows, cols) = (50, 41); // not multiples of 32
+        let mut w = vec![0.0f32; rows * cols];
+        let mut x = vec![0.0f32; rows];
+        rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+        rng.fill_uniform_f32(&mut x, -1.0, 1.0);
+        let t = TiledCrossbar::program(
+            rows,
+            cols,
+            &w,
+            &DeviceParams::ideal(),
+            32,
+            32,
+            &mut rng,
+        );
+        assert_eq!(t.tile_count(), 2 * 2);
+        let y = t.read_vec(&x);
+        let want = software_vmm(rows, cols, &w, &x);
+        for j in 0..cols {
+            assert!((y[j] - want[j]).abs() < 0.02);
+        }
+    }
+
+    #[test]
+    fn single_tile_degenerates_to_array() {
+        let mut rng = Xoshiro256::seed_from_u64(113);
+        let mut w = vec![0.0f32; 16 * 16];
+        let mut x = vec![0.0f32; 16];
+        rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+        rng.fill_uniform_f32(&mut x, -1.0, 1.0);
+        let t = TiledCrossbar::program(
+            16,
+            16,
+            &w,
+            &DeviceParams::ideal(),
+            32,
+            32,
+            &mut rng,
+        );
+        assert_eq!(t.tile_count(), 1);
+        let y = t.read_vec(&x);
+        let want = software_vmm(16, 16, &w, &x);
+        for j in 0..16 {
+            assert!((y[j] - want[j]).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn noisy_device_still_approximates() {
+        let mut rng = Xoshiro256::seed_from_u64(114);
+        let params = crate::device::presets::epiram().params;
+        let (rows, cols) = (64, 64);
+        let mut w = vec![0.0f32; rows * cols];
+        let mut x = vec![0.0f32; rows];
+        rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+        rng.fill_uniform_f32(&mut x, -1.0, 1.0);
+        let t = TiledCrossbar::program(rows, cols, &w, &params, 32, 32, &mut rng);
+        let y = t.read_vec(&x);
+        let want = software_vmm(rows, cols, &w, &x);
+        // EpiRAM-class device on a 64-row sum: per-output error std is
+        // ~2 (accumulated C2C over both tiles); 4-sigma bound.
+        for j in 0..cols {
+            assert!((y[j] - want[j]).abs() < 8.0, "col {j}: {} vs {}", y[j], want[j]);
+        }
+    }
+}

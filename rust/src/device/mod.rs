@@ -1,0 +1,17 @@
+//! RRAM device models: conductance-state machines, pulse programming
+//! with LTP/LTD non-linearity, cycle-to-cycle variation, memory-window
+//! limited baseline mismatch — plus the Table I state-of-the-art
+//! presets.
+//!
+//! The math here is the **same math** as the L2 JAX model
+//! (`python/compile/model.py`); the two are kept in lock-step and
+//! cross-checked by `rust/tests/integration_xla.rs`.  Any change to one
+//! side must be mirrored on the other.
+
+pub mod params;
+pub mod presets;
+pub mod pulse;
+
+pub use params::{DeviceParams, NonIdealities};
+pub use presets::{all_presets, DevicePreset};
+pub use pulse::{mismatch_transform, pulse_curve};

@@ -1,0 +1,267 @@
+//! Device parameter vectors — the runtime-scalar contract shared with
+//! the AOT artifacts.
+
+/// Calibration defaults (DESIGN.md §7): fitted once on the Ag:a-Si
+/// Table II magnitudes, then held fixed across all devices and sweeps.
+
+pub const DEFAULT_K_C2C: f64 = 2.0;
+pub const DEFAULT_K_BASE: f64 = 3.3;
+pub const DEFAULT_S_EXP: f64 = 1.5;
+
+/// Reference state count at which the state-resolution factor is 1
+/// (mirrors `model.S_REF`).
+pub const S_REF: f64 = 64.0;
+/// Cap on the state-resolution factor (mirrors `model.MISMATCH_RES_CAP`).
+pub const MISMATCH_RES_CAP: f64 = 8.0;
+
+/// Which non-idealities are active — the paper's experiments toggle
+/// non-linearity and C2C independently (Figs. 2–5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct NonIdealities {
+    pub nonlinearity: bool,
+    pub c2c: bool,
+}
+
+impl NonIdealities {
+    pub const IDEAL: NonIdealities = NonIdealities { nonlinearity: false, c2c: false };
+    pub const FULL: NonIdealities = NonIdealities { nonlinearity: true, c2c: true };
+
+    pub fn label(&self) -> &'static str {
+        match (self.nonlinearity, self.c2c) {
+            (false, false) => "ideal",
+            (true, true) => "nonideal",
+            (true, false) => "nl-only",
+            (false, true) => "c2c-only",
+        }
+    }
+}
+
+/// The full device parameterization of one benchmark configuration.
+///
+/// Field order and meaning mirror `params[0..8]` of the L2 model — see
+/// `python/compile/model.py` module docstring.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceParams {
+    /// Number of conductance states (Table I "CS").
+    pub states: f64,
+    /// Memory window `Gmax / Gmin` (Table I "MW").
+    pub memory_window: f64,
+    /// LTP weight-update non-linearity (positive-target device).
+    pub nu_ltp: f64,
+    /// LTD weight-update non-linearity (negative-target device).
+    pub nu_ltd: f64,
+    /// Cycle-to-cycle sigma, fraction of the conductance range / pulse.
+    pub sigma_c2c: f64,
+    /// Calibration: accumulated-C2C scale.
+    pub k_c2c: f64,
+    /// Calibration: baseline-mismatch scale.
+    pub k_base: f64,
+    /// Calibration: state-resolution exponent.
+    pub s_exp: f64,
+}
+
+impl DeviceParams {
+    /// An idealized device: effectively-continuous states, huge window,
+    /// no non-idealities.  `y_hw == y_sw` up to f32 rounding.
+    pub fn ideal() -> Self {
+        Self {
+            states: 65_536.0,
+            memory_window: 1e6,
+            nu_ltp: 0.0,
+            nu_ltd: 0.0,
+            sigma_c2c: 0.0,
+            k_c2c: DEFAULT_K_C2C,
+            k_base: DEFAULT_K_BASE,
+            s_exp: DEFAULT_S_EXP,
+        }
+    }
+
+    /// Weight bits `log2(states)`.
+    pub fn weight_bits(&self) -> f64 {
+        self.states.log2()
+    }
+
+    /// Set states from a bit count (Fig. 2a sweeps bits directly).
+    pub fn with_weight_bits(mut self, bits: u32) -> Self {
+        self.states = (1u64 << bits) as f64;
+        self
+    }
+
+    pub fn with_memory_window(mut self, mw: f64) -> Self {
+        self.memory_window = mw;
+        self
+    }
+
+    pub fn with_nonlinearity(mut self, nu_ltp: f64, nu_ltd: f64) -> Self {
+        self.nu_ltp = nu_ltp;
+        self.nu_ltd = nu_ltd;
+        self
+    }
+
+    pub fn with_c2c(mut self, sigma: f64) -> Self {
+        self.sigma_c2c = sigma;
+        self
+    }
+
+    /// Apply a non-ideality mask: switched-off terms are zeroed, which
+    /// is exactly the paper's "without non-linearity and C-to-C"
+    /// protocol.
+    pub fn masked(mut self, mask: NonIdealities) -> Self {
+        if !mask.nonlinearity {
+            self.nu_ltp = 0.0;
+            self.nu_ltd = 0.0;
+        }
+        if !mask.c2c {
+            self.sigma_c2c = 0.0;
+        }
+        self
+    }
+
+    /// Normalized minimum conductance `Gmin/Gmax = 1/MW`.
+    pub fn g_min(&self) -> f64 {
+        1.0 / self.memory_window
+    }
+
+    /// Baseline-to-range ratio `r = Gmin / (Gmax - Gmin) = 1/(MW-1)`.
+    pub fn baseline_ratio(&self) -> f64 {
+        1.0 / (self.memory_window - 1.0)
+    }
+
+    /// Per-cell mismatch scale `m = k_base * r * min((S_REF/S)^s_exp, cap)`.
+    pub fn mismatch_scale(&self) -> f64 {
+        let res = (S_REF / self.states)
+            .powf(self.s_exp)
+            .min(MISMATCH_RES_CAP);
+        self.k_base * self.baseline_ratio() * res
+    }
+
+    /// Pack into the artifact's `params` input layout (f32 8-vector).
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        vec![
+            self.states as f32,
+            self.memory_window as f32,
+            self.nu_ltp as f32,
+            self.nu_ltd as f32,
+            self.sigma_c2c as f32,
+            self.k_c2c as f32,
+            self.k_base as f32,
+            self.s_exp as f32,
+        ]
+    }
+
+    /// Validate physical plausibility; returns a description of the
+    /// first violation.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.states >= 2.0) {
+            return Err(format!("states must be >= 2, got {}", self.states));
+        }
+        if !(self.memory_window > 1.0) {
+            return Err(format!(
+                "memory window must exceed 1 (Gmax > Gmin), got {}",
+                self.memory_window
+            ));
+        }
+        if self.sigma_c2c < 0.0 {
+            return Err(format!("sigma_c2c must be >= 0, got {}", self.sigma_c2c));
+        }
+        if self.nu_ltp.abs() > 20.0 || self.nu_ltd.abs() > 20.0 {
+            return Err("non-linearity out of the supported [-20, 20] range".into());
+        }
+        if self.k_c2c < 0.0 || self.k_base < 0.0 {
+            return Err("calibration scales must be >= 0".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_is_valid_and_clean() {
+        let p = DeviceParams::ideal();
+        assert!(p.validate().is_ok());
+        assert_eq!(p.sigma_c2c, 0.0);
+        assert_eq!(p.nu_ltp, 0.0);
+    }
+
+    #[test]
+    fn weight_bits_roundtrip() {
+        let p = DeviceParams::ideal().with_weight_bits(6);
+        assert_eq!(p.states, 64.0);
+        assert!((p.weight_bits() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn masked_zeroes_only_disabled_terms() {
+        let p = DeviceParams::ideal()
+            .with_nonlinearity(2.4, -4.88)
+            .with_c2c(0.035);
+        let ideal = p.masked(NonIdealities::IDEAL);
+        assert_eq!(ideal.nu_ltp, 0.0);
+        assert_eq!(ideal.sigma_c2c, 0.0);
+        assert_eq!(ideal.states, p.states);
+        let nl = p.masked(NonIdealities { nonlinearity: true, c2c: false });
+        assert_eq!(nl.nu_ltp, 2.4);
+        assert_eq!(nl.sigma_c2c, 0.0);
+        let full = p.masked(NonIdealities::FULL);
+        assert_eq!(full, p);
+    }
+
+    #[test]
+    fn geometry_ratios() {
+        let p = DeviceParams::ideal().with_memory_window(12.5);
+        assert!((p.g_min() - 0.08).abs() < 1e-12);
+        assert!((p.baseline_ratio() - 1.0 / 11.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mismatch_scale_monotonicity() {
+        let base = DeviceParams::ideal();
+        // Larger window -> smaller mismatch.
+        let a = base.with_memory_window(4.43).mismatch_scale();
+        let b = base.with_memory_window(50.2).mismatch_scale();
+        assert!(a > b);
+        // More states -> smaller mismatch (until the cap).
+        let c = base.with_memory_window(10.0).with_weight_bits(5).mismatch_scale();
+        let d = base.with_memory_window(10.0).with_weight_bits(8).mismatch_scale();
+        assert!(c > d);
+    }
+
+    #[test]
+    fn mismatch_res_factor_capped() {
+        let tiny = DeviceParams::ideal()
+            .with_memory_window(10.0)
+            .with_weight_bits(1); // 2 states: raw factor (64/2)^1.5 = 181
+        let capped = tiny.mismatch_scale();
+        let expected = DEFAULT_K_BASE * (1.0 / 9.0) * MISMATCH_RES_CAP;
+        assert!((capped - expected).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f32_vec_layout() {
+        let p = DeviceParams::ideal().with_nonlinearity(2.4, -4.88).with_c2c(0.02);
+        let v = p.to_f32_vec();
+        assert_eq!(v.len(), 8);
+        assert_eq!(v[2], 2.4f32);
+        assert_eq!(v[3], -4.88f32);
+        assert_eq!(v[4], 0.02f32);
+    }
+
+    #[test]
+    fn validation_catches_nonsense() {
+        let mut p = DeviceParams::ideal();
+        p.states = 1.0;
+        assert!(p.validate().is_err());
+        let mut p = DeviceParams::ideal();
+        p.memory_window = 0.9;
+        assert!(p.validate().is_err());
+        let mut p = DeviceParams::ideal();
+        p.sigma_c2c = -0.1;
+        assert!(p.validate().is_err());
+        let mut p = DeviceParams::ideal();
+        p.nu_ltp = 25.0;
+        assert!(p.validate().is_err());
+    }
+}

@@ -1,0 +1,142 @@
+//! Pulse-programming physics: the LTP/LTD conductance curve and the
+//! mismatch noise transform.  **Must stay in lock-step with
+//! `python/compile/model.py`** — the integration suite cross-checks.
+
+/// Normalized conductance after a fraction `t ∈ [0,1]` of the pulse
+/// train with non-linearity `nu`:
+/// `g(t) = (1 - exp(-nu t)) / (1 - exp(-nu))`, linear as `nu -> 0`.
+///
+/// Concave (fast early potentiation) for `nu > 0`, convex for
+/// `nu < 0`.  Open-loop programming targets the linear curve, so
+/// `g(t) - t` is the encoding error caused by switching write–verify
+/// off (the Fig. 3 mechanism).
+#[inline]
+pub fn pulse_curve(t: f64, nu: f64) -> f64 {
+    const EPS: f64 = 1e-6;
+    if nu.abs() < EPS {
+        t
+    } else {
+        (1.0 - (-nu * t).exp()) / (1.0 - (-nu).exp())
+    }
+}
+
+/// Map the paper's NL *label* to the pulse-curve curvature `kappa`:
+/// `sign(NL) (e^{0.35 |NL|} - 1)`.  NeuroSim resolves its NL metric to
+/// the exponential curve parameter through a nonlinear lookup; this
+/// closed form reproduces the Fig. 3 "exponential dependency" while
+/// keeping mid-range conductances off the window rails.
+#[inline]
+pub fn nl_to_curvature(nu: f64) -> f64 {
+    const NL_GAMMA: f64 = 0.35;
+    nu.signum() * ((NL_GAMMA * nu.abs()).exp_m1())
+}
+
+/// dg/dt of the pulse curve: `nu e^{-nu t} / (1 - e^{-nu})`, linear
+/// limit 1.  C2C disturbance is a pulse-domain effect; mapping it
+/// through the local slope amplifies noise on strongly non-linear
+/// devices and makes it state-dependent (the Fig. 4b amplification and
+/// the Table II skew/kurtosis).
+#[inline]
+pub fn pulse_curve_slope(t: f64, nu: f64) -> f64 {
+    const EPS: f64 = 1e-6;
+    if nu.abs() < EPS {
+        1.0
+    } else {
+        nu * (-nu * t).exp() / (1.0 - (-nu).exp())
+    }
+}
+
+/// Heavy-tailed, positively-skewed, zero-mean mismatch noise transform
+/// applied to a standard normal draw (DESIGN.md §4):
+/// `sinh(a z)/a + b (z² - 1)` with `a = 0.7`, `b = 0.15`.
+#[inline]
+pub fn mismatch_transform(z: f64) -> f64 {
+    const A: f64 = 0.7;
+    const B: f64 = 0.15;
+    (A * z).sinh() / A + B * (z * z - 1.0)
+}
+
+/// Maximum absolute deviation of the pulse curve from linear — a cheap
+/// analytic proxy for the non-linearity encoding error magnitude, used
+/// by reports and the roofline estimate.
+pub fn max_curve_deviation(nu: f64) -> f64 {
+    let mut worst = 0.0f64;
+    for i in 0..=100 {
+        let t = i as f64 / 100.0;
+        worst = worst.max((pulse_curve(t, nu) - t).abs());
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_limit() {
+        for i in 0..=10 {
+            let t = i as f64 / 10.0;
+            assert!((pulse_curve(t, 0.0) - t).abs() < 1e-12);
+            assert!((pulse_curve(t, 1e-9) - t).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn endpoints_pinned() {
+        for nu in [-4.88, -0.5, 0.3, 2.4, 5.0] {
+            assert!(pulse_curve(0.0, nu).abs() < 1e-12);
+            assert!((pulse_curve(1.0, nu) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn curvature_signs() {
+        assert!(pulse_curve(0.5, 2.4) > 0.5); // concave LTP
+        assert!(pulse_curve(0.5, -4.88) < 0.5); // convex LTD
+    }
+
+    #[test]
+    fn monotone_in_t() {
+        for nu in [-5.0, -1.0, 0.0, 1.0, 5.0] {
+            let mut prev = -1.0;
+            for i in 0..=50 {
+                let g = pulse_curve(i as f64 / 50.0, nu);
+                assert!(g > prev - 1e-12);
+                prev = g;
+            }
+        }
+    }
+
+    #[test]
+    fn deviation_grows_with_nu() {
+        let devs: Vec<f64> = [0.0, 1.0, 2.4, 5.0]
+            .iter()
+            .map(|&nu| max_curve_deviation(nu))
+            .collect();
+        for w in devs.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+        assert!(devs[0] < 1e-9);
+    }
+
+    #[test]
+    fn mismatch_transform_shape() {
+        // Odd-ish with positive skew correction: h(0) = -b.
+        assert!((mismatch_transform(0.0) + 0.15).abs() < 1e-12);
+        // Symmetric part dominates the tails; the skew term shifts the
+        // negative tail up by 0.15 (z^2 - 1).
+        assert!(mismatch_transform(4.0) > 13.0);
+        assert!(mismatch_transform(-4.0) < -9.0);
+        // Grows faster than linear in the tails.
+        assert!(mismatch_transform(6.0) / 6.0 > mismatch_transform(2.0) / 2.0);
+    }
+
+    #[test]
+    fn matches_python_constants() {
+        // Spot values computed from the python reference
+        // (sinh(0.7*1.5)/0.7 + 0.15*(1.5^2-1)).
+        let z = 1.5f64;
+        let want = (0.7f64 * z).sinh() / 0.7 + 0.15 * (z * z - 1.0);
+        assert!((mismatch_transform(z) - want).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,55 @@
+//! Crate-wide error type.
+//!
+//! The offline registry has `thiserror`, so errors are explicit enums
+//! rather than `anyhow` blobs at the library boundary; binaries may
+//! still wrap them in `anyhow` for context chains.
+
+use thiserror::Error;
+
+/// All errors surfaced by the MELISO library.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Configuration file / CLI argument problems.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Artifact manifest missing, malformed, or out of date.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT / XLA runtime failures.
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// Shape or dimension mismatch in a numeric routine.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// A distribution fit failed to converge or got degenerate data.
+    #[error("fit error: {0}")]
+    Fit(String),
+
+    /// A linear solver diverged or exceeded its iteration budget.
+    #[error("solver error: {0}")]
+    Solver(String),
+
+    /// Unknown experiment id passed to the registry.
+    #[error("unknown experiment: {0}")]
+    UnknownExperiment(String),
+
+    /// JSON / TOML parse errors.
+    #[error("parse error: {0}")]
+    Parse(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

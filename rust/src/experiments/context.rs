@@ -1,0 +1,133 @@
+//! Shared experiment context: engine, protocol parameters, output
+//! sinks.
+
+use std::sync::Arc;
+
+use crate::config::{EngineKind, RunConfig};
+use crate::coordinator::{BenchmarkConfig, Coordinator, ErrorPopulation};
+use crate::device::params::DeviceParams;
+use crate::error::Result;
+use crate::report::writer::ReportWriter;
+use crate::util::pool::Parallelism;
+use crate::vmm::{NativeEngine, SoftwareEngine, VmmBatch, VmmEngine, VmmOutput, XlaEngine};
+
+/// Type-erased engine handle shared by all experiments.
+#[derive(Clone)]
+pub struct DynEngine(Arc<dyn VmmEngine>);
+
+impl DynEngine {
+    pub fn new<E: VmmEngine + 'static>(e: E) -> Self {
+        Self(Arc::new(e))
+    }
+}
+
+impl VmmEngine for DynEngine {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+
+    fn forward(&self, batch: &VmmBatch, params: &DeviceParams) -> Result<VmmOutput> {
+        self.0.forward(batch, params)
+    }
+
+    fn preferred_batches(&self) -> Vec<usize> {
+        self.0.preferred_batches()
+    }
+}
+
+/// Everything an experiment needs to run.
+pub struct Ctx {
+    pub engine: DynEngine,
+    pub population: usize,
+    pub seed: u64,
+    pub parallelism: Parallelism,
+    pub out: std::path::PathBuf,
+    pub quiet: bool,
+}
+
+impl Ctx {
+    /// Build from a resolved run configuration (constructs the engine).
+    pub fn from_config(cfg: &RunConfig) -> Result<Ctx> {
+        let engine = match cfg.engine {
+            EngineKind::Native => DynEngine::new(NativeEngine),
+            EngineKind::Software => DynEngine::new(SoftwareEngine),
+            EngineKind::Xla => DynEngine::new(XlaEngine::from_default_dir()?),
+        };
+        Ok(Ctx {
+            engine,
+            population: cfg.population,
+            seed: cfg.seed,
+            parallelism: cfg.parallelism(),
+            out: cfg.out_dir.clone(),
+            quiet: cfg.quiet,
+        })
+    }
+
+    /// Quick native-engine context for tests/benches.
+    pub fn native(population: usize, out: &std::path::Path) -> Ctx {
+        Ctx {
+            engine: DynEngine::new(NativeEngine),
+            population,
+            seed: 0x4D45_4C49_534F,
+            parallelism: Parallelism::Auto,
+            out: out.to_path_buf(),
+            quiet: true,
+        }
+    }
+
+    /// Run the paper protocol under `device` and return the error
+    /// population.
+    pub fn run_device(&self, device: DeviceParams) -> Result<ErrorPopulation> {
+        let mut cfg = BenchmarkConfig::paper_default(device)
+            .with_population(self.population)
+            .with_seed(self.seed);
+        cfg.parallelism = self.parallelism;
+        let coord = Coordinator::new(self.engine.clone());
+        coord.run(&cfg)
+    }
+
+    /// Engine name for banners/telemetry.
+    pub fn engine_name(&self) -> &'static str {
+        self.engine.name()
+    }
+
+    /// Report writer for an experiment id.
+    pub fn writer(&self, id: &str) -> ReportWriter {
+        let w = ReportWriter::new(&self.out, id);
+        if self.quiet {
+            w.quiet()
+        } else {
+            w
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+
+    #[test]
+    fn native_ctx_runs() {
+        let dir = std::env::temp_dir().join("meliso_ctx_test");
+        let ctx = Ctx::native(16, &dir);
+        let pop = ctx.run_device(presets::epiram().params).unwrap();
+        assert_eq!(pop.len(), 16 * 32);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn dyn_engine_delegates() {
+        let e = DynEngine::new(SoftwareEngine);
+        assert_eq!(e.name(), "software");
+        assert!(e.preferred_batches().is_empty());
+    }
+
+    #[test]
+    fn from_config_native() {
+        let cfg = RunConfig::default();
+        let ctx = Ctx::from_config(&cfg).unwrap();
+        assert_eq!(ctx.engine.name(), "native");
+        assert_eq!(ctx.population, 1000);
+    }
+}

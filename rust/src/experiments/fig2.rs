@@ -1,0 +1,149 @@
+//! Figure 2: effect of (a) weight bits and (b) memory window on the
+//! VMM error term, with non-linearity and C2C switched **off** and the
+//! Ag:a-Si window raised to 100 (the paper's modified model system).
+
+use crate::device::params::NonIdealities;
+use crate::device::presets::ag_si_modified;
+use crate::error::Result;
+use crate::report::table::{fnum, TextTable};
+use crate::util::csv::CsvTable;
+use crate::util::json::{obj, Json};
+
+use super::context::Ctx;
+
+/// Weight-bit sweep of Fig. 2a: 1..=11 bits (2..=2048 states; 2048 is
+/// the literature's record state count, ref [28]).
+pub const FIG2A_BITS: [u32; 11] = [1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11];
+
+/// Memory-window sweep of Fig. 2b, starting at the Ag:a-Si default
+/// 12.5 and increasing beyond.
+pub const FIG2B_WINDOWS: [f64; 6] = [12.5, 25.0, 50.0, 100.0, 200.0, 400.0];
+
+/// Fig. 2a: error vs weight bits.
+pub fn run_a(ctx: &Ctx) -> Result<Json> {
+    let w = ctx.writer("fig2a");
+    let base = ag_si_modified().params.masked(NonIdealities::IDEAL);
+
+    let mut t = TextTable::new(["bits", "states", "mean", "variance", "std", "max|e|"])
+        .with_title("Fig. 2a: VMM error vs weight bits (MW=100, no NL, no C2C)");
+    let mut csv = CsvTable::new(["bits", "states", "mean", "variance", "std", "max_abs"]);
+    let mut series = Vec::new();
+
+    for bits in FIG2A_BITS {
+        let device = base.with_weight_bits(bits);
+        let pop = ctx.run_device(device)?;
+        let s = pop.summary();
+        let max_abs = s.min.abs().max(s.max.abs());
+        t.push([
+            bits.to_string(),
+            format!("{}", device.states as u64),
+            fnum(s.mean),
+            fnum(s.variance),
+            fnum(s.std_dev),
+            fnum(max_abs),
+        ]);
+        csv.push_f64([
+            bits as f64,
+            device.states,
+            s.mean,
+            s.variance,
+            s.std_dev,
+            max_abs,
+        ]);
+        series.push(obj([
+            ("bits", Json::Num(bits as f64)),
+            ("variance", Json::Num(s.variance)),
+        ]));
+    }
+
+    w.echo(&t.render());
+    w.csv("series", &csv)?;
+    let summary = obj([
+        ("id", Json::Str("fig2a".into())),
+        ("series", Json::Arr(series)),
+    ]);
+    w.json("summary", &summary)?;
+    Ok(summary)
+}
+
+/// Fig. 2b: error vs memory window.
+pub fn run_b(ctx: &Ctx) -> Result<Json> {
+    let w = ctx.writer("fig2b");
+    // Paper: Ag:a-Si default states (97), idealities off, sweep MW
+    // upward from the default 12.5.
+    let base = ag_si_modified().params.masked(NonIdealities::IDEAL);
+
+    let mut t = TextTable::new(["mw", "mean", "variance", "std", "max|e|"])
+        .with_title("Fig. 2b: VMM error vs memory window (CS=97, no NL, no C2C)");
+    let mut csv = CsvTable::new(["mw", "mean", "variance", "std", "max_abs"]);
+    let mut series = Vec::new();
+
+    for mw in FIG2B_WINDOWS {
+        let device = base.with_memory_window(mw);
+        let pop = ctx.run_device(device)?;
+        let s = pop.summary();
+        let max_abs = s.min.abs().max(s.max.abs());
+        t.push([
+            mw.to_string(),
+            fnum(s.mean),
+            fnum(s.variance),
+            fnum(s.std_dev),
+            fnum(max_abs),
+        ]);
+        csv.push_f64([mw, s.mean, s.variance, s.std_dev, max_abs]);
+        series.push(obj([
+            ("mw", Json::Num(mw)),
+            ("variance", Json::Num(s.variance)),
+        ]));
+    }
+
+    w.echo(&t.render());
+    w.csv("series", &csv)?;
+    let summary = obj([
+        ("id", Json::Str("fig2b".into())),
+        ("series", Json::Arr(series)),
+    ]);
+    w.json("summary", &summary)?;
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn variances(j: &Json) -> Vec<f64> {
+        j.get("series")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| e.get("variance").unwrap().as_f64().unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn fig2a_error_decreases_with_bits() {
+        let dir = std::env::temp_dir().join("meliso_fig2a_test");
+        let ctx = Ctx::native(48, &dir);
+        let s = run_a(&ctx).unwrap();
+        let v = variances(&s);
+        assert_eq!(v.len(), 11);
+        // Monotone decrease in the statistical sense: compare ends and
+        // the midpoint.
+        assert!(v[0] > v[5], "1-bit {} vs 6-bit {}", v[0], v[5]);
+        assert!(v[5] >= v[10] * 0.5, "tail should flatten, not rise");
+        assert!(v[0] / v[10] > 10.0, "dynamic range of the sweep");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn fig2b_error_decreases_with_window() {
+        let dir = std::env::temp_dir().join("meliso_fig2b_test");
+        let ctx = Ctx::native(48, &dir);
+        let s = run_b(&ctx).unwrap();
+        let v = variances(&s);
+        assert!(v[0] > v[3], "MW=12.5 {} vs MW=100 {}", v[0], v[3]);
+        assert!(v[3] > v[5] * 0.9);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

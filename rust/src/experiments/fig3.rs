@@ -1,0 +1,88 @@
+//! Figure 3: effect of weight-update non-linearity on the VMM error
+//! term.  Modified Ag:a-Si (MW=100), C2C off, non-linearity magnitude
+//! swept 0..5 (paper protocol); the paper reports an approximately
+//! exponential growth of error variance with the non-linearity metric.
+
+use crate::device::params::NonIdealities;
+use crate::device::presets::ag_si_modified;
+use crate::error::Result;
+use crate::report::table::{fnum, TextTable};
+use crate::util::csv::CsvTable;
+use crate::util::json::{obj, Json};
+
+use super::context::Ctx;
+
+/// Non-linearity magnitudes swept (paper: 0 to 5).
+pub const FIG3_NU: [f64; 6] = [0.0, 1.0, 2.0, 3.0, 4.0, 5.0];
+
+pub fn run(ctx: &Ctx) -> Result<Json> {
+    let w = ctx.writer("fig3");
+    // C2C off, NL on (we control nu directly).
+    let base = ag_si_modified()
+        .params
+        .masked(NonIdealities { nonlinearity: true, c2c: false });
+
+    let mut t = TextTable::new(["nu", "mean", "variance", "skewness", "kurtosis"])
+        .with_title("Fig. 3: VMM error vs non-linearity (MW=100, no C2C)");
+    let mut csv = CsvTable::new(["nu", "mean", "variance", "skewness", "kurtosis"]);
+    let mut series = Vec::new();
+
+    for nu in FIG3_NU {
+        // Symmetric magnitude sweep: LTP +nu, LTD -nu (the paper varies
+        // "the non-linearity magnitude").
+        let device = base.with_nonlinearity(nu, -nu);
+        let pop = ctx.run_device(device)?;
+        let s = pop.summary();
+        t.push([
+            nu.to_string(),
+            fnum(s.mean),
+            fnum(s.variance),
+            fnum(s.skewness),
+            fnum(s.excess_kurtosis),
+        ]);
+        csv.push_f64([nu, s.mean, s.variance, s.skewness, s.excess_kurtosis]);
+        series.push(obj([
+            ("nu", Json::Num(nu)),
+            ("variance", Json::Num(s.variance)),
+        ]));
+    }
+
+    w.echo(&t.render());
+    w.csv("series", &csv)?;
+    let summary = obj([
+        ("id", Json::Str("fig3".into())),
+        ("series", Json::Arr(series)),
+    ]);
+    w.json("summary", &summary)?;
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variance_grows_superlinearly_with_nu() {
+        let dir = std::env::temp_dir().join("meliso_fig3_test");
+        let ctx = Ctx::native(48, &dir);
+        let s = run(&ctx).unwrap();
+        let v: Vec<f64> = s
+            .get("series")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| e.get("variance").unwrap().as_f64().unwrap())
+            .collect();
+        // Monotone increase…
+        for i in 1..v.len() {
+            assert!(v[i] > v[i - 1] * 0.95, "nu step {i}: {} -> {}", v[i - 1], v[i]);
+        }
+        // …and accelerating (the paper's "exponential dependency"):
+        // later increments exceed earlier ones.
+        let d1 = v[2] - v[1];
+        let d2 = v[5] - v[4];
+        assert!(d2 > d1, "increments {d1} vs {d2}");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,150 @@
+//! Figure 4: effect of cycle-to-cycle variation on the VMM error term
+//! — (a) without non-linearity, (b) with the Ag:a-Si non-linearity
+//! (2.4/-4.88), (c) the variance comparison of both cases.
+
+use crate::device::params::NonIdealities;
+use crate::device::presets::ag_si_modified;
+use crate::error::Result;
+use crate::report::table::{fnum, TextTable};
+use crate::util::csv::CsvTable;
+use crate::util::json::{obj, Json};
+
+use super::context::Ctx;
+
+/// C2C standard deviations swept: 0..5 % (paper range; Table I devices
+/// sit between 2 % and 5 %).
+pub const FIG4_C2C_PCT: [f64; 6] = [0.0, 1.0, 2.0, 3.0, 3.5, 5.0];
+
+fn sweep(ctx: &Ctx, with_nl: bool) -> Result<Vec<(f64, crate::stats::Summary)>> {
+    let mask = NonIdealities { nonlinearity: with_nl, c2c: true };
+    let base = ag_si_modified().params.masked(mask);
+    let mut out = Vec::new();
+    for pct in FIG4_C2C_PCT {
+        let device = base.with_c2c(pct / 100.0);
+        let pop = ctx.run_device(device)?;
+        out.push((pct, pop.summary()));
+    }
+    Ok(out)
+}
+
+fn emit(
+    ctx: &Ctx,
+    id: &str,
+    title: &str,
+    rows: &[(f64, crate::stats::Summary)],
+) -> Result<Json> {
+    let w = ctx.writer(id);
+    let mut t = TextTable::new(["c2c_pct", "mean", "variance", "skewness", "kurtosis"])
+        .with_title(title);
+    let mut csv = CsvTable::new(["c2c_pct", "mean", "variance", "skewness", "kurtosis"]);
+    let mut series = Vec::new();
+    for (pct, s) in rows {
+        t.push([
+            pct.to_string(),
+            fnum(s.mean),
+            fnum(s.variance),
+            fnum(s.skewness),
+            fnum(s.excess_kurtosis),
+        ]);
+        csv.push_f64([*pct, s.mean, s.variance, s.skewness, s.excess_kurtosis]);
+        series.push(obj([
+            ("c2c_pct", Json::Num(*pct)),
+            ("variance", Json::Num(s.variance)),
+        ]));
+    }
+    w.echo(&t.render());
+    w.csv("series", &csv)?;
+    let summary = obj([
+        ("id", Json::Str(id.into())),
+        ("series", Json::Arr(series)),
+    ]);
+    w.json("summary", &summary)?;
+    Ok(summary)
+}
+
+/// Fig. 4a: C2C sweep without non-linearity.
+pub fn run_a(ctx: &Ctx) -> Result<Json> {
+    let rows = sweep(ctx, false)?;
+    emit(ctx, "fig4a", "Fig. 4a: VMM error vs C2C (no non-linearity)", &rows)
+}
+
+/// Fig. 4b: C2C sweep with the Ag:a-Si non-linearity.
+pub fn run_b(ctx: &Ctx) -> Result<Json> {
+    let rows = sweep(ctx, true)?;
+    emit(
+        ctx,
+        "fig4b",
+        "Fig. 4b: VMM error vs C2C (with NL 2.4/-4.88)",
+        &rows,
+    )
+}
+
+/// Fig. 4c: variance comparison of both configurations.
+pub fn run_c(ctx: &Ctx) -> Result<Json> {
+    let w = ctx.writer("fig4c");
+    let a = sweep(ctx, false)?;
+    let b = sweep(ctx, true)?;
+    let mut t = TextTable::new(["c2c_pct", "var (no NL)", "var (with NL)", "ratio"])
+        .with_title("Fig. 4c: variance comparison");
+    let mut csv = CsvTable::new(["c2c_pct", "var_no_nl", "var_with_nl", "ratio"]);
+    let mut series = Vec::new();
+    for ((pct, sa), (_, sb)) in a.iter().zip(&b) {
+        let ratio = sb.variance / sa.variance.max(1e-300);
+        t.push([
+            pct.to_string(),
+            fnum(sa.variance),
+            fnum(sb.variance),
+            fnum(ratio),
+        ]);
+        csv.push_f64([*pct, sa.variance, sb.variance, ratio]);
+        series.push(obj([
+            ("c2c_pct", Json::Num(*pct)),
+            ("var_no_nl", Json::Num(sa.variance)),
+            ("var_with_nl", Json::Num(sb.variance)),
+        ]));
+    }
+    w.echo(&t.render());
+    w.csv("series", &csv)?;
+    let summary = obj([
+        ("id", Json::Str("fig4c".into())),
+        ("series", Json::Arr(series)),
+    ]);
+    w.json("summary", &summary)?;
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vars(j: &Json, key: &str) -> Vec<f64> {
+        j.get("series")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| e.get(key).unwrap().as_f64().unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn error_grows_with_c2c_and_nl_makes_it_worse() {
+        let dir = std::env::temp_dir().join("meliso_fig4_test");
+        let ctx = Ctx::native(48, &dir);
+        let c = run_c(&ctx).unwrap();
+        let va = vars(&c, "var_no_nl");
+        let vb = vars(&c, "var_with_nl");
+        // Monotone growth with C2C in both configurations.
+        assert!(va[5] > va[1], "{va:?}");
+        assert!(vb[5] > vb[1], "{vb:?}");
+        // Non-linearity increases variance at every C2C level > 0
+        // (paper: "introduction of non-linearity exacerbates the VMM
+        // error term").
+        for i in 0..va.len() {
+            assert!(vb[i] >= va[i] * 0.95, "i={i}: {} vs {}", vb[i], va[i]);
+        }
+        // At c2c=0 with NL on, variance already nonzero (encoding err).
+        assert!(vb[0] > va[0]);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,156 @@
+//! Figure 5: error distributions and box plots of the four Table I
+//! devices, (a) without and (b) with non-idealities.
+
+use crate::device::params::NonIdealities;
+use crate::device::presets::all_presets;
+use crate::error::Result;
+use crate::report::ascii::{ascii_boxplot, ascii_histogram};
+use crate::report::table::{fnum, TextTable};
+use crate::util::csv::CsvTable;
+use crate::util::json::{obj, Json};
+
+use super::context::Ctx;
+
+/// Histogram bins used for the distribution CSV (one column per device).
+const BINS: usize = 64;
+
+fn run_panel(ctx: &Ctx, id: &str, mask: NonIdealities, title: &str) -> Result<Json> {
+    let w = ctx.writer(id);
+    let mut t = TextTable::new([
+        "Device", "mean", "variance", "q1", "median", "q3", "outliers",
+        "outlier span",
+    ])
+    .with_title(title);
+    let mut box_csv = CsvTable::new([
+        "device", "mean", "variance", "q1", "median", "q3", "whisker_lo",
+        "whisker_hi", "outliers", "outlier_span",
+    ]);
+    let mut rows = Vec::new();
+    let mut ascii = String::new();
+
+    for preset in all_presets() {
+        let device = preset.params.masked(mask);
+        let pop = ctx.run_device(device)?;
+        let s = pop.summary();
+        let b = pop.boxplot();
+
+        t.push([
+            preset.name.to_string(),
+            fnum(s.mean),
+            fnum(s.variance),
+            fnum(b.q1),
+            fnum(b.median),
+            fnum(b.q3),
+            b.outliers.to_string(),
+            fnum(b.outlier_span),
+        ]);
+        box_csv.push([
+            preset.name.to_string(),
+            s.mean.to_string(),
+            s.variance.to_string(),
+            b.q1.to_string(),
+            b.median.to_string(),
+            b.q3.to_string(),
+            b.whisker_lo.to_string(),
+            b.whisker_hi.to_string(),
+            b.outliers.to_string(),
+            b.outlier_span.to_string(),
+        ]);
+
+        // Distribution CSV per device.
+        let h = pop.histogram(BINS);
+        let mut hist_csv = CsvTable::new(["center", "count", "density"]);
+        for i in 0..h.bins() {
+            hist_csv.push_f64([h.center(i), h.counts()[i] as f64, h.density(i)]);
+        }
+        w.csv(&format!("hist_{}", preset.id), &hist_csv)?;
+
+        ascii.push_str(&format!("\n{} ({}):\n", preset.name, mask.label()));
+        ascii.push_str(&ascii_histogram(&pop.histogram(15), 44));
+        let span = s.min.min(-1e-3)..s.max.max(1e-3);
+        ascii.push_str(&ascii_boxplot(&b, span.start, span.end, 60));
+        ascii.push('\n');
+
+        rows.push(obj([
+            ("device", Json::Str(preset.name.into())),
+            ("variance", Json::Num(s.variance)),
+            ("mean", Json::Num(s.mean)),
+            ("q1", Json::Num(b.q1)),
+            ("q3", Json::Num(b.q3)),
+            ("outliers", Json::Num(b.outliers as f64)),
+            ("outlier_span", Json::Num(b.outlier_span)),
+        ]));
+    }
+
+    w.echo(&t.render());
+    w.echo(&ascii);
+    w.csv("boxplot", &box_csv)?;
+    let summary = obj([("id", Json::Str(id.into())), ("rows", Json::Arr(rows))]);
+    w.json("summary", &summary)?;
+    Ok(summary)
+}
+
+/// Fig. 5a: idealities off.
+pub fn run_a(ctx: &Ctx) -> Result<Json> {
+    run_panel(
+        ctx,
+        "fig5a",
+        NonIdealities::IDEAL,
+        "Fig. 5a: device comparison WITHOUT non-linearity and C2C",
+    )
+}
+
+/// Fig. 5b: full non-idealities.
+pub fn run_b(ctx: &Ctx) -> Result<Json> {
+    run_panel(
+        ctx,
+        "fig5b",
+        NonIdealities::FULL,
+        "Fig. 5b: device comparison WITH non-linearity and C2C",
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn var_of(j: &Json, device: &str) -> f64 {
+        j.get("rows")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|r| r.get("device").unwrap().as_str() == Some(device))
+            .unwrap()
+            .get("variance")
+            .unwrap()
+            .as_f64()
+            .unwrap()
+    }
+
+    #[test]
+    fn fig5_device_ordering_matches_paper_shape() {
+        let dir = std::env::temp_dir().join("meliso_fig5_test");
+        let ctx = Ctx::native(64, &dir);
+        let a = run_a(&ctx).unwrap();
+        let b = run_b(&ctx).unwrap();
+
+        // Ideal panel: EpiRAM narrowest; AlOx/HfO2 widest.
+        let epi_a = var_of(&a, "EpiRAM");
+        let al_a = var_of(&a, "AlOx/HfO2");
+        let ag_a = var_of(&a, "Ag:a-Si");
+        let ta_a = var_of(&a, "TaOx/HfOx");
+        assert!(epi_a < ag_a && epi_a < ta_a && epi_a < al_a, "EpiRAM wins ideal");
+        assert!(al_a > ag_a && al_a > ta_a, "AlOx worst ideal");
+
+        // Non-ideal panel: EpiRAM still best; everyone else degrades
+        // substantially (paper: Ag/TaOx deteriorate strongly).
+        let epi_b = var_of(&b, "EpiRAM");
+        let ag_b = var_of(&b, "Ag:a-Si");
+        let ta_b = var_of(&b, "TaOx/HfOx");
+        assert!(epi_b < ag_b && epi_b < ta_b, "EpiRAM wins non-ideal");
+        assert!(ag_b > ag_a * 3.0, "Ag:a-Si must degrade strongly");
+        assert!(ta_b > ta_a * 3.0, "TaOx/HfOx must degrade strongly");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,16 @@
+//! The experiment registry: one module per table/figure of the paper
+//! plus the extension studies.  `meliso run <id>` and the criterion-
+//! style benches both dispatch through [`registry`].
+
+pub mod context;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod registry;
+pub mod table1;
+pub mod table2;
+pub mod xtra;
+
+pub use context::Ctx;
+pub use registry::{all_ids, describe, paper_ids, run_by_id};

@@ -1,0 +1,170 @@
+//! Experiment registry: id -> runner, with the paper set and the
+//! extension set.
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+use super::context::Ctx;
+use super::{fig2, fig3, fig4, fig5, table1, table2, xtra};
+
+/// Experiment descriptor.
+pub struct Entry {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub paper: bool,
+    pub run: fn(&Ctx) -> Result<Json>,
+}
+
+/// The full registry, in run order.
+pub fn entries() -> Vec<Entry> {
+    vec![
+        Entry {
+            id: "table1",
+            title: "Table I: state-of-the-art device metrics",
+            paper: true,
+            run: table1::run,
+        },
+        Entry {
+            id: "fig2a",
+            title: "Fig. 2a: error vs weight bits",
+            paper: true,
+            run: fig2::run_a,
+        },
+        Entry {
+            id: "fig2b",
+            title: "Fig. 2b: error vs memory window",
+            paper: true,
+            run: fig2::run_b,
+        },
+        Entry {
+            id: "fig3",
+            title: "Fig. 3: error vs non-linearity",
+            paper: true,
+            run: fig3::run,
+        },
+        Entry {
+            id: "fig4a",
+            title: "Fig. 4a: error vs C2C (no NL)",
+            paper: true,
+            run: fig4::run_a,
+        },
+        Entry {
+            id: "fig4b",
+            title: "Fig. 4b: error vs C2C (with NL)",
+            paper: true,
+            run: fig4::run_b,
+        },
+        Entry {
+            id: "fig4c",
+            title: "Fig. 4c: variance comparison",
+            paper: true,
+            run: fig4::run_c,
+        },
+        Entry {
+            id: "fig5a",
+            title: "Fig. 5a: device comparison (ideal)",
+            paper: true,
+            run: fig5::run_a,
+        },
+        Entry {
+            id: "fig5b",
+            title: "Fig. 5b: device comparison (non-ideal)",
+            paper: true,
+            run: fig5::run_b,
+        },
+        Entry {
+            id: "table2",
+            title: "Table II: error distribution fits",
+            paper: true,
+            run: table2::run,
+        },
+        Entry {
+            id: "solver",
+            title: "Extension: in-memory CG convergence floors",
+            paper: false,
+            run: xtra::run_solver,
+        },
+        Entry {
+            id: "ablation-adc",
+            title: "Extension: ADC/DAC precision ablation",
+            paper: false,
+            run: xtra::run_ablation_adc,
+        },
+        Entry {
+            id: "energy",
+            title: "Extension: read-energy comparison",
+            paper: false,
+            run: xtra::run_energy,
+        },
+    ]
+}
+
+/// All experiment ids.
+pub fn all_ids() -> Vec<&'static str> {
+    entries().iter().map(|e| e.id).collect()
+}
+
+/// Paper-set experiment ids (what `run all` executes).
+pub fn paper_ids() -> Vec<&'static str> {
+    entries().iter().filter(|e| e.paper).map(|e| e.id).collect()
+}
+
+/// Human description for `meliso list`.
+pub fn describe() -> Vec<(&'static str, &'static str, bool)> {
+    entries().iter().map(|e| (e.id, e.title, e.paper)).collect()
+}
+
+/// Run one experiment by id.
+pub fn run_by_id(id: &str, ctx: &Ctx) -> Result<Json> {
+    let entry = entries()
+        .into_iter()
+        .find(|e| e.id == id)
+        .ok_or_else(|| Error::UnknownExperiment(id.to_string()))?;
+    (entry.run)(ctx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_paper_artifact() {
+        let ids = all_ids();
+        for required in [
+            "table1", "fig2a", "fig2b", "fig3", "fig4a", "fig4b", "fig4c",
+            "fig5a", "fig5b", "table2",
+        ] {
+            assert!(ids.contains(&required), "missing {required}");
+        }
+        assert_eq!(paper_ids().len(), 10);
+    }
+
+    #[test]
+    fn ids_unique() {
+        let mut ids = all_ids();
+        ids.sort_unstable();
+        let n = ids.len();
+        ids.dedup();
+        assert_eq!(ids.len(), n);
+    }
+
+    #[test]
+    fn unknown_id_is_error() {
+        let dir = std::env::temp_dir().join("meliso_reg_test");
+        let ctx = Ctx::native(4, &dir);
+        assert!(matches!(
+            run_by_id("figZZ", &ctx),
+            Err(Error::UnknownExperiment(_))
+        ));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn table1_runs_through_registry() {
+        let dir = std::env::temp_dir().join("meliso_reg_t1_test");
+        let ctx = Ctx::native(4, &dir);
+        let s = run_by_id("table1", &ctx).unwrap();
+        assert_eq!(s.get("id").unwrap().as_str(), Some("table1"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

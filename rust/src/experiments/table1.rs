@@ -1,0 +1,80 @@
+//! Table I: state-of-the-art device metrics (input data of the whole
+//! study), plus the derived energy figures the outlook calls for.
+
+use crate::crossbar::energy::EnergyModel;
+use crate::device::presets::all_presets;
+use crate::error::Result;
+use crate::report::table::{fnum, TextTable};
+use crate::util::csv::CsvTable;
+use crate::util::json::{obj, Json};
+
+use super::context::Ctx;
+
+/// Render Table I (+ derived energy-per-MAC extension column).
+pub fn run(ctx: &Ctx) -> Result<Json> {
+    let w = ctx.writer("table1");
+    let energy = EnergyModel::default();
+
+    let mut t = TextTable::new([
+        "Device", "CS", "NL (LTP/LTD)", "R_ON (ohm)", "MW", "C2C (%)",
+        "E/MAC (fJ)",
+    ])
+    .with_title("Table I: State-of-the-Art Device Metrics");
+    let mut csv = CsvTable::new([
+        "device", "cs", "nl_ltp", "nl_ltd", "r_on_ohms", "mw", "c2c_pct",
+        "energy_per_mac_j",
+    ]);
+    let mut rows = Vec::new();
+
+    for d in all_presets() {
+        let p = &d.params;
+        let e_mac = energy.energy_per_mac(&d, crate::ROWS, crate::COLS);
+        t.push([
+            d.name.to_string(),
+            format!("{}", p.states as u64),
+            format!("{}/{}", p.nu_ltp, p.nu_ltd),
+            format!("{:.3e}", d.r_on_ohms),
+            format!("{}", p.memory_window),
+            format!("{}", p.sigma_c2c * 100.0),
+            fnum(e_mac * 1e15),
+        ]);
+        csv.push([
+            d.name.to_string(),
+            p.states.to_string(),
+            p.nu_ltp.to_string(),
+            p.nu_ltd.to_string(),
+            d.r_on_ohms.to_string(),
+            p.memory_window.to_string(),
+            (p.sigma_c2c * 100.0).to_string(),
+            e_mac.to_string(),
+        ]);
+        rows.push(obj([
+            ("device", Json::Str(d.name.into())),
+            ("cs", Json::Num(p.states)),
+            ("mw", Json::Num(p.memory_window)),
+            ("c2c", Json::Num(p.sigma_c2c)),
+            ("energy_per_mac", Json::Num(e_mac)),
+        ]));
+    }
+
+    w.echo(&t.render());
+    w.csv("table1", &csv)?;
+    let summary = obj([("id", Json::Str("table1".into())), ("rows", Json::Arr(rows))]);
+    w.json("summary", &summary)?;
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_four_devices() {
+        let dir = std::env::temp_dir().join("meliso_t1_test");
+        let ctx = Ctx::native(4, &dir);
+        let s = run(&ctx).unwrap();
+        assert_eq!(s.get("rows").unwrap().as_arr().unwrap().len(), 4);
+        assert!(dir.join("table1/table1.csv").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

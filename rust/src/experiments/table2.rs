@@ -1,0 +1,113 @@
+//! Table II: statistical analysis of the error distributions — best-
+//! fitting parametric family (AIC-selected among Normal, Johnson S_U,
+//! SHASH, Normal-2/3-Mixture) plus the first four moments, for every
+//! device × {ideal, non-ideal} configuration.
+
+use crate::device::params::NonIdealities;
+use crate::device::presets::all_presets;
+use crate::error::Result;
+use crate::report::table::{fnum, TextTable};
+use crate::util::csv::CsvTable;
+use crate::util::json::{obj, Json};
+
+use super::context::Ctx;
+
+pub fn run(ctx: &Ctx) -> Result<Json> {
+    let w = ctx.writer("table2");
+    let mut t = TextTable::new([
+        "Device", "NL", "C2C", "Best Fit", "Mean", "Variance", "Skewness",
+        "Kurtosis", "KS",
+    ])
+    .with_title("Table II: statistical analysis of error distributions");
+    let mut csv = CsvTable::new([
+        "device", "nonideal", "best_fit", "mean", "variance", "skewness",
+        "kurtosis", "ks", "aic", "params",
+    ]);
+    let mut rows = Vec::new();
+
+    for preset in all_presets() {
+        for mask in [NonIdealities::IDEAL, NonIdealities::FULL] {
+            let device = preset.params.masked(mask);
+            let pop = ctx.run_device(device)?;
+            let s = pop.summary();
+            let fit = pop.best_fit()?;
+            let yn = if mask.nonlinearity { "Yes" } else { "No" };
+            t.push([
+                preset.name.to_string(),
+                yn.to_string(),
+                yn.to_string(),
+                fit.model.name(),
+                fnum(s.mean),
+                fnum(s.variance),
+                fnum(s.skewness),
+                fnum(s.excess_kurtosis),
+                fnum(fit.ks),
+            ]);
+            csv.push([
+                preset.name.to_string(),
+                (mask == NonIdealities::FULL).to_string(),
+                fit.model.name(),
+                s.mean.to_string(),
+                s.variance.to_string(),
+                s.skewness.to_string(),
+                s.excess_kurtosis.to_string(),
+                fit.ks.to_string(),
+                fit.aic.to_string(),
+                fit.model.params_string(),
+            ]);
+            rows.push(obj([
+                ("device", Json::Str(preset.name.into())),
+                ("nonideal", Json::Bool(mask == NonIdealities::FULL)),
+                ("best_fit", Json::Str(fit.model.name())),
+                ("mean", Json::Num(s.mean)),
+                ("variance", Json::Num(s.variance)),
+                ("skewness", Json::Num(s.skewness)),
+                ("kurtosis", Json::Num(s.excess_kurtosis)),
+                ("ks", Json::Num(fit.ks)),
+            ]));
+        }
+    }
+
+    w.echo(&t.render());
+    w.csv("table2", &csv)?;
+    let summary = obj([("id", Json::Str("table2".into())), ("rows", Json::Arr(rows))]);
+    w.json("summary", &summary)?;
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_produces_eight_rows_with_sane_fits() {
+        let dir = std::env::temp_dir().join("meliso_t2_test");
+        // Modest population: fits need enough samples to be stable.
+        let ctx = Ctx::native(96, &dir);
+        let s = run(&ctx).unwrap();
+        let rows = s.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 8);
+        for r in rows {
+            let ks = r.get("ks").unwrap().as_f64().unwrap();
+            assert!(ks < 0.2, "fit quality: ks={ks}");
+            let var = r.get("variance").unwrap().as_f64().unwrap();
+            assert!(var.is_finite() && var > 0.0);
+        }
+        // Non-ideal Ag:a-Si must be clearly asymmetric (the paper's
+        // headline Table II observation is strong non-normality; our
+        // window-saturated Ag trims the extreme tail, so we assert the
+        // magnitude of the asymmetry rather than its sign — see
+        // EXPERIMENTS.md §Divergences).
+        let ag_nonideal = rows
+            .iter()
+            .find(|r| {
+                r.get("device").unwrap().as_str() == Some("Ag:a-Si")
+                    && r.get("nonideal").unwrap() == &Json::Bool(true)
+            })
+            .unwrap();
+        assert!(
+            ag_nonideal.get("skewness").unwrap().as_f64().unwrap().abs() > 0.05
+        );
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,267 @@
+//! Extension experiments beyond the paper's evaluation — the §IV
+//! outlook items: in-memory solver convergence under device error, a
+//! peripheral (ADC/DAC) precision ablation, and the device energy
+//! comparison.
+
+use crate::crossbar::energy::EnergyModel;
+use crate::crossbar::peripheral::Peripherals;
+use crate::device::params::NonIdealities;
+use crate::device::presets::{all_presets, epiram};
+use crate::error::Result;
+use crate::report::table::{fnum, TextTable};
+use crate::solver::{
+    conjugate_gradient, CrossbarOperator, ExactOperator, SolveOpts,
+};
+use crate::util::csv::CsvTable;
+use crate::util::json::{obj, Json};
+use crate::util::rng::Xoshiro256;
+
+use super::context::Ctx;
+
+/// Solver study: CG on an SPD system with the products computed by
+/// each Table I device's crossbar — convergence floors track the VMM
+/// error magnitudes from Fig. 5.
+pub fn run_solver(ctx: &Ctx) -> Result<Json> {
+    let w = ctx.writer("solver");
+    let n = 64;
+    // Well-conditioned SPD system A = M^T M / n + I.
+    let mut rng = Xoshiro256::seed_from_u64(ctx.seed ^ 0x501E);
+    let m: Vec<f64> = (0..n * n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+    let mut a = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0;
+            for k in 0..n {
+                s += m[k * n + i] * m[k * n + j];
+            }
+            a[i * n + j] = s / n as f64 + if i == j { 1.0 } else { 0.0 };
+        }
+    }
+    let b: Vec<f64> = (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+    let exact = ExactOperator::new(n, n, a.clone());
+    let opts = SolveOpts { max_iters: 120, tol: 1e-10 };
+
+    let mut t = TextTable::new(["operator", "iters", "converged", "final rel. residual"])
+        .with_title("Solver study: CG convergence floor vs device error");
+    let mut csv = CsvTable::new(["operator", "iteration", "residual"]);
+    let mut rows = Vec::new();
+
+    // Software baseline.
+    let r = conjugate_gradient(&exact, &exact, &b, &opts)?;
+    for (k, res) in r.residual_history.iter().enumerate() {
+        csv.push(["software".to_string(), k.to_string(), res.to_string()]);
+    }
+    let base_floor = *r.residual_history.last().unwrap();
+    t.push([
+        "software".to_string(),
+        r.iterations.to_string(),
+        r.converged.to_string(),
+        fnum(base_floor),
+    ]);
+    rows.push(obj([
+        ("operator", Json::Str("software".into())),
+        ("floor", Json::Num(base_floor)),
+    ]));
+
+    for preset in all_presets() {
+        let device = preset.params.masked(NonIdealities::FULL);
+        let op = CrossbarOperator::program(n, n, &a, &device, &mut rng);
+        let r = conjugate_gradient(&op, &exact, &b, &opts)?;
+        let floor = r
+            .residual_history
+            .iter()
+            .copied()
+            .fold(f64::INFINITY, f64::min);
+        for (k, res) in r.residual_history.iter().enumerate() {
+            csv.push([preset.id.to_string(), k.to_string(), res.to_string()]);
+        }
+        t.push([
+            preset.name.to_string(),
+            r.iterations.to_string(),
+            r.converged.to_string(),
+            fnum(floor),
+        ]);
+        rows.push(obj([
+            ("operator", Json::Str(preset.name.into())),
+            ("floor", Json::Num(floor)),
+        ]));
+    }
+
+    w.echo(&t.render());
+    w.csv("residuals", &csv)?;
+    let summary = obj([("id", Json::Str("solver".into())), ("rows", Json::Arr(rows))]);
+    w.json("summary", &summary)?;
+    Ok(summary)
+}
+
+/// ADC/DAC ablation: EpiRAM (full non-idealities) with peripheral
+/// precision swept — locates where peripheral quantization starts to
+/// dominate device error (NeuroSim+ heritage study).
+pub fn run_ablation_adc(ctx: &Ctx) -> Result<Json> {
+    use crate::crossbar::array::{CrossbarArray, ProgramNoise};
+
+    let w = ctx.writer("ablation-adc");
+    let device = epiram().params.masked(NonIdealities::FULL);
+    let (rows_n, cols_n) = (crate::ROWS, crate::COLS);
+    let cells = rows_n * cols_n;
+    let samples = ctx.population.min(200);
+
+    let mut t = TextTable::new(["adc_bits", "dac_bits", "error variance"])
+        .with_title("Ablation: peripheral precision vs VMM error (EpiRAM)");
+    let mut csv = CsvTable::new(["adc_bits", "dac_bits", "variance"]);
+    let mut rows = Vec::new();
+
+    let configs: Vec<(Option<u32>, Option<u32>)> = vec![
+        (None, None),
+        (Some(10), Some(10)),
+        (Some(8), Some(8)),
+        (Some(6), Some(6)),
+        (Some(4), Some(4)),
+        (Some(3), Some(3)),
+    ];
+
+    for (adc, dac) in configs {
+        let mut per = Peripherals::default();
+        if let Some(b) = adc {
+            per = per.with_adc(b);
+        }
+        if let Some(b) = dac {
+            per = per.with_dac(b);
+        }
+        let mut rng = Xoshiro256::seed_from_u64(ctx.seed ^ 0xADC);
+        let mut moments = crate::stats::Moments::new();
+        let mut w_buf = vec![0.0f32; cells];
+        let mut x_buf = vec![0.0f32; rows_n];
+        let mut y_buf = vec![0.0f32; cols_n];
+        for _ in 0..samples {
+            rng.fill_uniform_f32(&mut w_buf, -1.0, 1.0);
+            rng.fill_uniform_f32(&mut x_buf, -1.0, 1.0);
+            let noise = ProgramNoise::sample(&mut rng, cells);
+            let arr = CrossbarArray::program(rows_n, cols_n, &w_buf, &device, &noise);
+            let mut xq = x_buf.clone();
+            per.dac_vec(&mut xq);
+            arr.read(&xq, &mut y_buf);
+            per.adc_vec(&mut y_buf, rows_n as f32);
+            for j in 0..cols_n {
+                let sw: f64 = (0..rows_n)
+                    .map(|i| x_buf[i] as f64 * w_buf[i * cols_n + j] as f64)
+                    .sum();
+                moments.push(y_buf[j] as f64 - sw);
+            }
+        }
+        let label = |b: Option<u32>| b.map_or("inf".to_string(), |v| v.to_string());
+        t.push([label(adc), label(dac), fnum(moments.variance())]);
+        csv.push([
+            label(adc),
+            label(dac),
+            moments.variance().to_string(),
+        ]);
+        rows.push(obj([
+            ("adc_bits", adc.map_or(Json::Null, |b| Json::Num(b as f64))),
+            ("variance", Json::Num(moments.variance())),
+        ]));
+    }
+
+    w.echo(&t.render());
+    w.csv("series", &csv)?;
+    let summary = obj([
+        ("id", Json::Str("ablation-adc".into())),
+        ("rows", Json::Arr(rows)),
+    ]);
+    w.json("summary", &summary)?;
+    Ok(summary)
+}
+
+/// Energy comparison across Table I devices (outlook item).
+pub fn run_energy(ctx: &Ctx) -> Result<Json> {
+    let w = ctx.writer("energy");
+    let model = EnergyModel::default();
+    let mut t = TextTable::new([
+        "Device", "R_ON (ohm)", "E/VMM (pJ)", "E/MAC (fJ)", "vs DRAM movement",
+    ])
+    .with_title("Energy: 32x32 VMM read energy per device");
+    let mut csv = CsvTable::new(["device", "r_on", "e_vmm_j", "e_mac_j", "dram_ratio"]);
+    let digital = model.digital_movement_energy(crate::ROWS, crate::COLS);
+    let mut rows = Vec::new();
+    for d in all_presets() {
+        let e = model.vmm_energy(&d, crate::ROWS, crate::COLS);
+        let ratio = digital / e;
+        t.push([
+            d.name.to_string(),
+            format!("{:.3e}", d.r_on_ohms),
+            fnum(e * 1e12),
+            fnum(model.energy_per_mac(&d, crate::ROWS, crate::COLS) * 1e15),
+            format!("{:.1}x", ratio),
+        ]);
+        csv.push([
+            d.name.to_string(),
+            d.r_on_ohms.to_string(),
+            e.to_string(),
+            model.energy_per_mac(&d, crate::ROWS, crate::COLS).to_string(),
+            ratio.to_string(),
+        ]);
+        rows.push(obj([
+            ("device", Json::Str(d.name.into())),
+            ("e_vmm", Json::Num(e)),
+            ("dram_ratio", Json::Num(ratio)),
+        ]));
+    }
+    w.echo(&t.render());
+    w.csv("energy", &csv)?;
+    let summary = obj([("id", Json::Str("energy".into())), ("rows", Json::Arr(rows))]);
+    w.json("summary", &summary)?;
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solver_floors_track_device_quality() {
+        let dir = std::env::temp_dir().join("meliso_xtra_solver_test");
+        let ctx = Ctx::native(8, &dir);
+        let s = run_solver(&ctx).unwrap();
+        let rows = s.get("rows").unwrap().as_arr().unwrap();
+        let floor = |name: &str| -> f64 {
+            rows.iter()
+                .find(|r| r.get("operator").unwrap().as_str() == Some(name))
+                .unwrap()
+                .get("floor")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        // Software converges to ~machine precision; every crossbar has
+        // a higher floor; EpiRAM's floor beats AlOx/HfO2's.
+        assert!(floor("software") < 1e-9);
+        assert!(floor("EpiRAM") > floor("software"));
+        assert!(floor("EpiRAM") < floor("AlOx/HfO2"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn adc_ablation_monotone() {
+        let dir = std::env::temp_dir().join("meliso_xtra_adc_test");
+        let ctx = Ctx::native(24, &dir);
+        let s = run_ablation_adc(&ctx).unwrap();
+        let rows = s.get("rows").unwrap().as_arr().unwrap();
+        let v: Vec<f64> = rows
+            .iter()
+            .map(|r| r.get("variance").unwrap().as_f64().unwrap())
+            .collect();
+        // Coarser ADC (later rows) must not reduce error; 3-bit must be
+        // clearly worse than ideal.
+        assert!(v[v.len() - 1] > v[0] * 2.0, "{v:?}");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn energy_table_has_all_devices() {
+        let dir = std::env::temp_dir().join("meliso_xtra_energy_test");
+        let ctx = Ctx::native(4, &dir);
+        let s = run_energy(&ctx).unwrap();
+        assert_eq!(s.get("rows").unwrap().as_arr().unwrap().len(), 4);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

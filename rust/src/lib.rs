@@ -1,0 +1,49 @@
+//! # MELISO-RS
+//!
+//! A production-grade reproduction of *"The Lynchpin of In-Memory
+//! Computing: A Benchmarking Framework for Vector-Matrix Multiplication
+//! in RRAMs"* (ICONS 2024): an end-to-end VMM benchmarking framework
+//! for RRAM crossbar systems.
+//!
+//! The stack has three layers (see `DESIGN.md`):
+//!
+//! * **L3 (this crate)** — the benchmark coordinator: workload
+//!   generation, population scheduling, error statistics, parametric
+//!   distribution fitting, the experiment registry that regenerates
+//!   every table and figure of the paper, and the CLI.
+//! * **L2 (python/compile/model.py)** — the MELISO device-physics
+//!   pipeline in JAX, AOT-lowered once to HLO text artifacts.
+//! * **L1 (python/compile/kernels/crossbar.py)** — the Pallas crossbar
+//!   kernel embedded in those artifacts.
+//!
+//! At run time the rust binary is self-contained: [`runtime`] loads the
+//! HLO artifacts through PJRT and [`vmm::XlaEngine`] executes them; the
+//! pure-rust [`vmm::NativeEngine`] mirrors the same physics for
+//! artifact-free runs and cross-validation.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod crossbar;
+pub mod device;
+pub mod error;
+pub mod experiments;
+pub mod report;
+pub mod runtime;
+pub mod solver;
+pub mod stats;
+pub mod testkit;
+pub mod util;
+pub mod vmm;
+
+pub use error::{Error, Result};
+
+/// Crate version, re-exported for the CLI banner and reports.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Paper geometry: word lines (matrix rows as seen by the crossbar).
+pub const ROWS: usize = 32;
+/// Paper geometry: bit lines (matrix columns / output width).
+pub const COLS: usize = 32;
+/// Paper protocol: number of random VMM samples per configuration.
+pub const PAPER_POPULATION: usize = 1000;

@@ -1,0 +1,18 @@
+//! `meliso` — the MELISO-RS benchmark coordinator binary.
+//!
+//! See `meliso help` or README.md for usage; `DESIGN.md` maps every
+//! subcommand to the paper artifact it regenerates.
+
+use meliso::cli::{dispatch, Args};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match Args::parse(argv).and_then(|args| dispatch(&args)) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}

@@ -1,0 +1,99 @@
+//! ASCII renderings of the paper's figure elements: histograms
+//! (distribution panels) and box plots (the Fig. 5 insets).
+
+use crate::stats::quantile::BoxPlot;
+use crate::stats::Histogram;
+
+/// Render a histogram as horizontal bars, `width` chars at the mode.
+pub fn ascii_histogram(h: &Histogram, width: usize) -> String {
+    let max = h.counts().iter().copied().max().unwrap_or(0).max(1);
+    let mut out = String::new();
+    for i in 0..h.bins() {
+        let c = h.counts()[i];
+        let bar = (c as f64 / max as f64 * width as f64).round() as usize;
+        out.push_str(&format!(
+            "{:>10.4} | {}{}\n",
+            h.center(i),
+            "#".repeat(bar),
+            if c > 0 && bar == 0 { "." } else { "" }
+        ));
+    }
+    if h.underflow() + h.overflow() > 0 {
+        out.push_str(&format!(
+            "(underflow {}, overflow {})\n",
+            h.underflow(),
+            h.overflow()
+        ));
+    }
+    out
+}
+
+/// Render a box plot on one line over the given numeric range.
+pub fn ascii_boxplot(b: &BoxPlot, lo: f64, hi: f64, width: usize) -> String {
+    assert!(hi > lo && width >= 10);
+    let pos = |x: f64| -> usize {
+        (((x - lo) / (hi - lo) * (width - 1) as f64).round() as isize)
+            .clamp(0, width as isize - 1) as usize
+    };
+    let mut line = vec![' '; width];
+    let (wl, q1, md, q3, wh) = (
+        pos(b.whisker_lo),
+        pos(b.q1),
+        pos(b.median),
+        pos(b.q3),
+        pos(b.whisker_hi),
+    );
+    for c in line.iter_mut().take(wh + 1).skip(wl) {
+        *c = '-';
+    }
+    for c in line.iter_mut().take(q3 + 1).skip(q1) {
+        *c = '=';
+    }
+    line[wl] = '|';
+    line[wh] = '|';
+    line[md] = 'M';
+    let mut out: String = line.into_iter().collect();
+    out.push_str(&format!(
+        "  (q1={:.3} med={:.3} q3={:.3}, {} outliers, span {:.3})",
+        b.q1, b.median, b.q3, b.outliers, b.outlier_span
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn histogram_renders_bars() {
+        let mut r = Xoshiro256::seed_from_u64(201);
+        let data: Vec<f64> = (0..10_000).map(|_| r.normal()).collect();
+        let h = Histogram::from_data(&data, 11);
+        let s = ascii_histogram(&h, 40);
+        assert_eq!(s.lines().count(), 11);
+        // Mode near the middle has the longest bar.
+        let bars: Vec<usize> = s.lines().map(|l| l.matches('#').count()).collect();
+        let (imax, _) = bars.iter().enumerate().max_by_key(|(_, &b)| b).unwrap();
+        assert!((3..=7).contains(&imax), "mode at {imax}");
+    }
+
+    #[test]
+    fn boxplot_markers_present() {
+        let data: Vec<f64> = (0..100).map(|i| i as f64 / 10.0).collect();
+        let b = BoxPlot::from_data(&data);
+        let s = ascii_boxplot(&b, -1.0, 11.0, 60);
+        assert!(s.contains('M'));
+        assert!(s.contains('='));
+        assert!(s.contains("outliers"));
+    }
+
+    #[test]
+    fn boxplot_clamps_out_of_range() {
+        let data = vec![0.0, 1.0, 2.0, 100.0];
+        let b = BoxPlot::from_data(&data);
+        // Render over a window that excludes the outlier.
+        let s = ascii_boxplot(&b, 0.0, 3.0, 30);
+        assert!(!s.is_empty());
+    }
+}

@@ -1,0 +1,11 @@
+//! Report rendering: fixed-width tables for the terminal, ASCII
+//! histograms/box plots for quick looks, CSV/JSON emission for
+//! plotting frontends.
+
+pub mod ascii;
+pub mod table;
+pub mod writer;
+
+pub use ascii::{ascii_boxplot, ascii_histogram};
+pub use table::TextTable;
+pub use writer::ReportWriter;

@@ -1,0 +1,134 @@
+//! Fixed-width text tables — the terminal rendering of the paper's
+//! tables.
+
+/// A simple left/right-aligned text table.
+#[derive(Debug, Clone)]
+pub struct TextTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: Option<String>,
+}
+
+impl TextTable {
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(header: I) -> Self {
+        Self {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+            title: None,
+        }
+    }
+
+    pub fn with_title<S: Into<String>>(mut self, title: S) -> Self {
+        self.title = Some(title.into());
+        self
+    }
+
+    pub fn push<S: ToString, I: IntoIterator<Item = S>>(&mut self, row: I) {
+        let row: Vec<String> = row.into_iter().map(|c| c.to_string()).collect();
+        assert_eq!(row.len(), self.header.len(), "table row arity mismatch");
+        self.rows.push(row);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let cols = self.header.len();
+        let mut width = vec![0usize; cols];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        let sep: String = width
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| {
+                    // Right-align numerics, left-align text.
+                    let numeric = c.parse::<f64>().is_ok();
+                    if numeric {
+                        format!(" {:>width$} ", c, width = width[i])
+                    } else {
+                        format!(" {:<width$} ", c, width = width[i])
+                    }
+                })
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with fixed significant digits for table cells
+/// (paper-style: 4 decimals for moments).
+pub fn fnum(v: f64) -> String {
+    if !v.is_finite() {
+        return "nan".into();
+    }
+    if v == 0.0 {
+        return "0".into();
+    }
+    let a = v.abs();
+    if a >= 1e4 || a < 1e-3 {
+        format!("{v:.3e}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = TextTable::new(["name", "value"]).with_title("T");
+        t.push(["short", "1.5"]);
+        t.push(["a-much-longer-name", "-22.25"]);
+        let s = t.render();
+        assert!(s.starts_with("T\n"));
+        let lines: Vec<&str> = s.lines().collect();
+        // All data lines equal width.
+        assert_eq!(lines[1].len(), lines[3].len());
+        assert!(s.contains("a-much-longer-name"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = TextTable::new(["a", "b"]);
+        t.push(["only"]);
+    }
+
+    #[test]
+    fn fnum_ranges() {
+        assert_eq!(fnum(0.0), "0");
+        assert_eq!(fnum(1.25), "1.2500");
+        assert_eq!(fnum(f64::NAN), "nan");
+        assert!(fnum(1e7).contains('e'));
+        assert!(fnum(1e-7).contains('e'));
+    }
+}

@@ -1,0 +1,77 @@
+//! Structured experiment output: one directory per run with CSV series
+//! and a JSON summary, plus the terminal rendering.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::Result;
+use crate::util::csv::CsvTable;
+use crate::util::json::Json;
+
+/// Writes experiment outputs under `<root>/<experiment-id>/`.
+#[derive(Debug, Clone)]
+pub struct ReportWriter {
+    dir: PathBuf,
+    quiet: bool,
+}
+
+impl ReportWriter {
+    pub fn new(root: &Path, experiment_id: &str) -> Self {
+        Self {
+            dir: root.join(experiment_id),
+            quiet: false,
+        }
+    }
+
+    /// Suppress terminal echo (benches).
+    pub fn quiet(mut self) -> Self {
+        self.quiet = true;
+        self
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Write a CSV series file.
+    pub fn csv(&self, name: &str, table: &CsvTable) -> Result<()> {
+        table.write_file(self.dir.join(format!("{name}.csv")))
+    }
+
+    /// Write the JSON summary.
+    pub fn json(&self, name: &str, value: &Json) -> Result<()> {
+        std::fs::create_dir_all(&self.dir)?;
+        std::fs::write(
+            self.dir.join(format!("{name}.json")),
+            value.to_string_pretty(),
+        )?;
+        Ok(())
+    }
+
+    /// Echo a rendered block to stdout (unless quiet).
+    pub fn echo(&self, text: &str) {
+        if !self.quiet {
+            println!("{text}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::obj;
+
+    #[test]
+    fn writes_csv_and_json() {
+        let root = std::env::temp_dir().join("meliso_report_test");
+        let _ = std::fs::remove_dir_all(&root);
+        let w = ReportWriter::new(&root, "fig0").quiet();
+        let mut t = CsvTable::new(["x", "y"]);
+        t.push_f64([1.0, 2.0]);
+        w.csv("series", &t).unwrap();
+        w.json("summary", &obj([("ok", Json::Bool(true))])).unwrap();
+        assert!(root.join("fig0/series.csv").exists());
+        let text = std::fs::read_to_string(root.join("fig0/summary.json")).unwrap();
+        assert!(text.contains("\"ok\": true"));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

@@ -1,0 +1,196 @@
+//! PJRT client wrapper: compile-once / execute-many over the AOT
+//! artifacts, with an executable cache keyed by (program, batch).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+
+use super::manifest::{ArtifactEntry, Manifest};
+
+/// Cache key: program name + batch size.
+pub type ExecKey = (String, usize);
+
+/// A PJRT CPU client with lazily compiled executables for every
+/// artifact in the manifest.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    // PjRtLoadedExecutable is internally refcounted; we hand out
+    // clones of the handle under a short-lived lock.
+    cache: Mutex<HashMap<ExecKey, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+// SAFETY: the PJRT CPU client is thread-safe for compile/execute (the
+// PJRT C API guarantees it); the executable cache is behind a Mutex.
+unsafe impl Send for XlaRuntime {}
+unsafe impl Sync for XlaRuntime {}
+
+impl std::fmt::Debug for XlaRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaRuntime")
+            .field("platform", &self.client.platform_name())
+            .field("artifacts", &self.manifest.entries.len())
+            .field("dir", &self.dir)
+            .finish()
+    }
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client and load the manifest from `dir`
+    /// (usually `artifacts/`).
+    pub fn new(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifacts directory: `$MELISO_ARTIFACTS` or
+    /// `<crate root>/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("MELISO_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling on first use) the executable for a program/batch.
+    pub fn executable(&self, name: &str, batch: usize) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        let key = (name.to_string(), batch);
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(exe) = cache.get(&key) {
+                return Ok(Arc::clone(exe));
+            }
+        }
+        let entry = self.manifest.find(name, batch).ok_or_else(|| {
+            Error::Artifact(format!("no artifact for program '{name}' batch {batch}"))
+        })?;
+        let exe = Arc::new(self.compile_entry(entry)?);
+        let mut cache = self.cache.lock().unwrap();
+        Ok(Arc::clone(cache.entry(key).or_insert(exe)))
+    }
+
+    /// Pre-compile every artifact (used by the CLI `warmup` path so
+    /// benchmark timings exclude compilation).
+    pub fn warmup(&self) -> Result<usize> {
+        let entries: Vec<(String, usize)> = self
+            .manifest
+            .entries
+            .iter()
+            .map(|e| (e.name.clone(), e.batch))
+            .collect();
+        for (name, batch) in &entries {
+            self.executable(name, *batch)?;
+        }
+        Ok(entries.len())
+    }
+
+    fn compile_entry(&self, entry: &ArtifactEntry) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(&entry.path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    /// Execute a program on f32 input buffers with the manifest-declared
+    /// shapes; returns the flattened f32 outputs in tuple order.
+    ///
+    /// Input buffer lengths are validated against the manifest before
+    /// anything is handed to PJRT.
+    pub fn execute_f32(
+        &self,
+        name: &str,
+        batch: usize,
+        inputs: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>> {
+        let entry = self
+            .manifest
+            .find(name, batch)
+            .ok_or_else(|| {
+                Error::Artifact(format!("no artifact for '{name}' batch {batch}"))
+            })?
+            .clone();
+        if inputs.len() != entry.inputs.len() {
+            return Err(Error::Shape(format!(
+                "{name}: expected {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (idx, buf) in inputs.iter().enumerate() {
+            let (ref iname, ref shape) = entry.inputs[idx];
+            let want: usize = shape.iter().product();
+            if buf.len() != want {
+                return Err(Error::Shape(format!(
+                    "{name} input '{iname}': expected {want} elements, got {}",
+                    buf.len()
+                )));
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(buf).reshape(&dims)?);
+        }
+
+        let exe = self.executable(name, batch)?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple, even
+        // for single outputs.
+        let parts = tuple.to_tuple()?;
+        if parts.len() != entry.outputs.len() {
+            return Err(Error::Xla(format!(
+                "{name}: expected {} outputs, got {}",
+                entry.outputs.len(),
+                parts.len()
+            )));
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for (part, (oname, shape)) in parts.iter().zip(&entry.outputs) {
+            let v = part.to_vec::<f32>().map_err(|e| {
+                Error::Xla(format!("{name} output '{oname}': {e}"))
+            })?;
+            let want: usize = shape.iter().product();
+            if v.len() != want {
+                return Err(Error::Xla(format!(
+                    "{name} output '{oname}': expected {want} elements, got {}",
+                    v.len()
+                )));
+            }
+            outs.push(v);
+        }
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Unit tests that don't need artifacts live here; the full
+    //! runtime is exercised by `rust/tests/integration_xla.rs`.
+    use super::*;
+
+    #[test]
+    fn default_dir_points_at_crate_artifacts() {
+        let d = XlaRuntime::default_dir();
+        assert!(d.ends_with("artifacts") || std::env::var("MELISO_ARTIFACTS").is_ok());
+    }
+
+    #[test]
+    fn missing_dir_is_artifact_error() {
+        let err = XlaRuntime::new(Path::new("/nonexistent/meliso")).unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)));
+    }
+}

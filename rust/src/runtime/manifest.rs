@@ -1,0 +1,227 @@
+//! Artifact manifest: the contract between `make artifacts` (python)
+//! and the rust runtime.  Parsed from `artifacts/manifest.json`.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Expected manifest schema version (bump in lock-step with aot.py).
+pub const SCHEMA_VERSION: usize = 2;
+
+/// One AOT-compiled program.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub batch: usize,
+    /// Path to the HLO text file (absolute, resolved against the
+    /// manifest directory).
+    pub path: PathBuf,
+    /// Input tensor names and shapes, in call order.
+    pub inputs: Vec<(String, Vec<usize>)>,
+    /// Output tensor names and shapes, in tuple order.
+    pub outputs: Vec<(String, Vec<usize>)>,
+}
+
+impl ArtifactEntry {
+    /// Total element count of input `idx`.
+    pub fn input_elems(&self, idx: usize) -> usize {
+        self.inputs[idx].1.iter().product()
+    }
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub rows: usize,
+    pub cols: usize,
+    pub noise_channels: usize,
+    pub num_params: usize,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (directory used to resolve file paths).
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let root = Json::parse(text)?;
+        let schema = field_usize(&root, "schema")?;
+        if schema != SCHEMA_VERSION {
+            return Err(Error::Artifact(format!(
+                "manifest schema {schema} != expected {SCHEMA_VERSION}; \
+                 re-run `make artifacts`"
+            )));
+        }
+        let entries_json = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Artifact("manifest missing 'artifacts'".into()))?;
+        let mut entries = Vec::with_capacity(entries_json.len());
+        for e in entries_json {
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Artifact("artifact missing 'file'".into()))?;
+            let path = dir.join(file);
+            if !path.exists() {
+                return Err(Error::Artifact(format!(
+                    "artifact file missing: {}",
+                    path.display()
+                )));
+            }
+            entries.push(ArtifactEntry {
+                name: e
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| Error::Artifact("artifact missing 'name'".into()))?
+                    .to_string(),
+                batch: field_usize(e, "batch")?,
+                path,
+                inputs: io_spec(e, "inputs")?,
+                outputs: io_spec(e, "outputs")?,
+            });
+        }
+        Ok(Manifest {
+            rows: field_usize(&root, "rows")?,
+            cols: field_usize(&root, "cols")?,
+            noise_channels: field_usize(&root, "noise_channels")?,
+            num_params: field_usize(&root, "num_params")?,
+            entries,
+        })
+    }
+
+    /// Find an entry by program name and batch size.
+    pub fn find(&self, name: &str, batch: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name && e.batch == batch)
+    }
+
+    /// All batch sizes available for a program, descending.
+    pub fn batches_for(&self, name: &str) -> Vec<usize> {
+        let mut b: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.name == name)
+            .map(|e| e.batch)
+            .collect();
+        b.sort_unstable_by(|a, c| c.cmp(a));
+        b
+    }
+}
+
+fn field_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| Error::Artifact(format!("manifest missing numeric '{key}'")))
+}
+
+fn io_spec(e: &Json, key: &str) -> Result<Vec<(String, Vec<usize>)>> {
+    let arr = e
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Artifact(format!("artifact missing '{key}'")))?;
+    arr.iter()
+        .map(|io| {
+            let name = io
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Artifact("io missing 'name'".into()))?
+                .to_string();
+            let shape = io
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::Artifact("io missing 'shape'".into()))?
+                .iter()
+                .map(|d| {
+                    d.as_usize()
+                        .ok_or_else(|| Error::Artifact("bad shape dim".into()))
+                })
+                .collect::<Result<Vec<usize>>>()?;
+            Ok((name, shape))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest(dir: &Path) -> String {
+        // Write a dummy artifact file so path validation passes.
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("prog_b4.hlo.txt"), "HloModule m\n").unwrap();
+        format!(
+            r#"{{
+              "schema": {SCHEMA_VERSION},
+              "rows": 32, "cols": 32, "noise_channels": 3, "num_params": 8,
+              "artifacts": [
+                {{"name": "prog", "batch": 4, "file": "prog_b4.hlo.txt",
+                  "inputs": [{{"name": "w", "shape": [4, 32, 32]}}],
+                  "outputs": [{{"name": "y", "shape": [4, 32]}}]}}
+              ]
+            }}"#
+        )
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let dir = std::env::temp_dir().join("meliso_manifest_test");
+        let text = sample_manifest(&dir);
+        let m = Manifest::parse(&text, &dir).unwrap();
+        assert_eq!(m.rows, 32);
+        assert_eq!(m.entries.len(), 1);
+        let e = m.find("prog", 4).unwrap();
+        assert_eq!(e.inputs[0].1, vec![4, 32, 32]);
+        assert_eq!(e.input_elems(0), 4 * 32 * 32);
+        assert!(m.find("prog", 8).is_none());
+        assert_eq!(m.batches_for("prog"), vec![4]);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn schema_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("meliso_manifest_test2");
+        let text = sample_manifest(&dir).replace(
+            &format!("\"schema\": {SCHEMA_VERSION}"),
+            "\"schema\": 999",
+        );
+        assert!(matches!(
+            Manifest::parse(&text, &dir),
+            Err(Error::Artifact(_))
+        ));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn missing_file_rejected() {
+        let dir = std::env::temp_dir().join("meliso_manifest_test3");
+        let text = sample_manifest(&dir).replace("prog_b4.hlo.txt", "gone.hlo.txt");
+        assert!(Manifest::parse(&text, &dir).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // Opportunistic: validate the real artifacts dir when present.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert_eq!(m.rows, 32);
+            assert!(m.find("meliso_fwd", 256).is_some());
+            assert!(m.find("meliso_vmm", 32).is_some());
+            assert!(m.find("meliso_program", 1).is_some());
+        }
+    }
+}

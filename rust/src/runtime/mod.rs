@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only place the `xla` crate is touched.  Interchange is
+//! HLO **text** — the bundled xla_extension 0.5.1 rejects serialized
+//! HloModuleProtos from jax ≥ 0.5 (64-bit instruction ids); the text
+//! parser reassigns ids and round-trips cleanly.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{ExecKey, XlaRuntime};
+pub use manifest::{ArtifactEntry, Manifest};

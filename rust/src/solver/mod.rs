@@ -1,0 +1,55 @@
+//! In-memory linear solvers — the "LISO" in MELISO.
+//!
+//! The paper's §IV outlook motivates RRAM VMM as the kernel of linear
+//! algebra and optimization solvers; this module closes that loop: the
+//! stationary and Krylov solvers below take their matrix-vector
+//! products from a programmed (noisy) crossbar, so the VMM error
+//! populations measured by the benchmark translate directly into
+//! solver convergence behaviour (see `examples/linear_solver.rs` and
+//! the `fig_solver` ablation bench).
+
+pub mod cg;
+pub mod jacobi;
+pub mod operator;
+pub mod power;
+pub mod richardson;
+
+pub use cg::conjugate_gradient;
+pub use jacobi::jacobi;
+pub use operator::{CrossbarOperator, ExactOperator, LinearOperator};
+pub use power::power_iteration;
+pub use richardson::richardson;
+
+/// Shared solver options.
+#[derive(Debug, Clone, Copy)]
+pub struct SolveOpts {
+    pub max_iters: usize,
+    /// Relative residual target `||b - Ax|| / ||b||`.
+    pub tol: f64,
+}
+
+impl Default for SolveOpts {
+    fn default() -> Self {
+        Self { max_iters: 500, tol: 1e-6 }
+    }
+}
+
+/// Solver outcome with convergence telemetry.
+#[derive(Debug, Clone)]
+pub struct SolveResult {
+    pub x: Vec<f64>,
+    pub iterations: usize,
+    pub converged: bool,
+    /// Relative residual per iteration (true residual, computed with
+    /// the exact operator for honesty even when iterating on a noisy
+    /// crossbar).
+    pub residual_history: Vec<f64>,
+}
+
+pub(crate) fn norm2(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}

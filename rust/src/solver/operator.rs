@@ -1,0 +1,202 @@
+//! Linear operators: the exact matrix and its crossbar realization.
+
+use crate::crossbar::tile::TiledCrossbar;
+use crate::device::params::DeviceParams;
+use crate::util::rng::Xoshiro256;
+
+/// Anything that can apply `y = A x` (and `A^T x` for Krylov methods
+/// on nonsymmetric systems).
+pub trait LinearOperator {
+    fn dim(&self) -> (usize, usize);
+    fn apply(&self, x: &[f64], y: &mut [f64]);
+    /// Transpose apply; default panics for operators that don't
+    /// support it.
+    fn apply_t(&self, _x: &[f64], _y: &mut [f64]) {
+        unimplemented!("transpose apply not supported by this operator")
+    }
+}
+
+/// Exact dense operator (f64) — the software baseline.
+#[derive(Debug, Clone)]
+pub struct ExactOperator {
+    n: usize,
+    m: usize,
+    /// Row-major `n x m`.
+    a: Vec<f64>,
+}
+
+impl ExactOperator {
+    pub fn new(n: usize, m: usize, a: Vec<f64>) -> Self {
+        assert_eq!(a.len(), n * m);
+        Self { n, m, a }
+    }
+
+    pub fn matrix(&self) -> &[f64] {
+        &self.a
+    }
+}
+
+impl LinearOperator for ExactOperator {
+    fn dim(&self) -> (usize, usize) {
+        (self.n, self.m)
+    }
+
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.m);
+        assert_eq!(y.len(), self.n);
+        for i in 0..self.n {
+            y[i] = crate::solver::dot(&self.a[i * self.m..(i + 1) * self.m], x);
+        }
+    }
+
+    fn apply_t(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.m);
+        y.fill(0.0);
+        for i in 0..self.n {
+            let xi = x[i];
+            for j in 0..self.m {
+                y[j] += self.a[i * self.m + j] * xi;
+            }
+        }
+    }
+}
+
+/// A matrix programmed onto (tiled) crossbars with a device's full
+/// non-ideality model; `apply` runs on the simulated hardware.
+///
+/// Matrix entries must lie in `[-scale, scale]`; they are normalized by
+/// `scale` for programming and the read is rescaled, mirroring how a
+/// deployment maps numeric ranges onto conductance ranges.
+#[derive(Debug)]
+pub struct CrossbarOperator {
+    n: usize,
+    m: usize,
+    scale: f64,
+    /// Crossbar programmed with A^T (so a column read gives A x).
+    forward: TiledCrossbar,
+    /// Crossbar programmed with A (for transpose products).
+    transpose: TiledCrossbar,
+}
+
+impl CrossbarOperator {
+    /// Program matrix `a` (row-major `n x m`, f64) under `params`.
+    pub fn program(
+        n: usize,
+        m: usize,
+        a: &[f64],
+        params: &DeviceParams,
+        rng: &mut Xoshiro256,
+    ) -> Self {
+        assert_eq!(a.len(), n * m);
+        let scale = a
+            .iter()
+            .fold(0.0f64, |acc, &v| acc.max(v.abs()))
+            .max(1e-12);
+        // The crossbar computes y = x^T W with x over rows of W; to get
+        // y = A x we program W = A^T (shape m x n).
+        let mut at = vec![0.0f32; n * m];
+        for i in 0..n {
+            for j in 0..m {
+                at[j * n + i] = (a[i * m + j] / scale) as f32;
+            }
+        }
+        // Solvers deploy with write-verify (paper §III: "essential to
+        // mitigate ... in real-world applications"); the residual
+        // programming error + read-path mismatch still set the floor.
+        let forward = TiledCrossbar::program_verified(m, n, &at, params, 32, 32, rng);
+        let aw: Vec<f32> = a.iter().map(|&v| (v / scale) as f32).collect();
+        let transpose = TiledCrossbar::program_verified(n, m, &aw, params, 32, 32, rng);
+        Self { n, m, scale, forward, transpose }
+    }
+
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+}
+
+impl LinearOperator for CrossbarOperator {
+    fn dim(&self) -> (usize, usize) {
+        (self.n, self.m)
+    }
+
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.m);
+        assert_eq!(y.len(), self.n);
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let yf = self.forward.read_vec(&xf);
+        for (o, v) in y.iter_mut().zip(yf) {
+            *o = v as f64 * self.scale;
+        }
+    }
+
+    fn apply_t(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.m);
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let yf = self.transpose.read_vec(&xf);
+        for (o, v) in y.iter_mut().zip(yf) {
+            *o = v as f64 * self.scale;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::params::DeviceParams;
+
+    fn random_matrix(n: usize, m: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        (0..n * m).map(|_| rng.uniform_in(-2.0, 2.0)).collect()
+    }
+
+    #[test]
+    fn exact_operator_applies() {
+        let a = ExactOperator::new(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let mut y = vec![0.0; 2];
+        a.apply(&[1.0, 0.0, -1.0], &mut y);
+        assert_eq!(y, vec![-2.0, -2.0]);
+        let mut yt = vec![0.0; 3];
+        a.apply_t(&[1.0, 1.0], &mut yt);
+        assert_eq!(yt, vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn crossbar_operator_matches_exact_when_ideal() {
+        let (n, m) = (48, 40);
+        let a = random_matrix(n, m, 161);
+        let exact = ExactOperator::new(n, m, a.clone());
+        let mut rng = Xoshiro256::seed_from_u64(162);
+        let xb = CrossbarOperator::program(n, m, &a, &DeviceParams::ideal(), &mut rng);
+        let x: Vec<f64> = (0..m).map(|i| ((i % 5) as f64 - 2.0) / 2.0).collect();
+        let mut ye = vec![0.0; n];
+        let mut yx = vec![0.0; n];
+        exact.apply(&x, &mut ye);
+        xb.apply(&x, &mut yx);
+        for i in 0..n {
+            assert!((ye[i] - yx[i]).abs() < 0.05, "{} vs {}", ye[i], yx[i]);
+        }
+        // Transpose path too.
+        let xt: Vec<f64> = (0..n).map(|i| (i as f64 / n as f64) - 0.5).collect();
+        let mut yte = vec![0.0; m];
+        let mut ytx = vec![0.0; m];
+        exact.apply_t(&xt, &mut yte);
+        xb.apply_t(&xt, &mut ytx);
+        for j in 0..m {
+            assert!((yte[j] - ytx[j]).abs() < 0.05);
+        }
+    }
+
+    #[test]
+    fn scale_recovered() {
+        let a = vec![0.0, -8.0, 2.0, 4.0];
+        let mut rng = Xoshiro256::seed_from_u64(163);
+        let xb = CrossbarOperator::program(2, 2, &a, &DeviceParams::ideal(), &mut rng);
+        assert_eq!(xb.scale(), 8.0);
+        let mut y = vec![0.0; 2];
+        xb.apply(&[1.0, 1.0], &mut y);
+        assert!((y[0] + 8.0).abs() < 0.1);
+        assert!((y[1] - 6.0).abs() < 0.1);
+    }
+}

@@ -1,0 +1,118 @@
+//! Damped Richardson iteration `x_{k+1} = x_k + omega (b - A x_k)` —
+//! the simplest analog-friendly solver: one crossbar read and one
+//! AXPY per step.
+
+use super::operator::LinearOperator;
+use super::{norm2, SolveOpts, SolveResult};
+use crate::error::{Error, Result};
+
+/// Solve `A x = b` with relaxation factor `omega` (must satisfy
+/// `0 < omega < 2 / lambda_max(A)` for SPD `A`).
+pub fn richardson(
+    op: &dyn LinearOperator,
+    exact: &dyn LinearOperator,
+    b: &[f64],
+    omega: f64,
+    opts: &SolveOpts,
+) -> Result<SolveResult> {
+    let (n, m) = op.dim();
+    if n != m {
+        return Err(Error::Solver(format!(
+            "richardson needs square A, got {n}x{m}"
+        )));
+    }
+    if omega <= 0.0 {
+        return Err(Error::Solver(format!("omega must be positive, got {omega}")));
+    }
+    let bnorm = norm2(b).max(1e-30);
+    let mut x = vec![0.0; n];
+    let mut ax = vec![0.0; n];
+    let mut history = Vec::with_capacity(opts.max_iters);
+
+    for k in 0..opts.max_iters {
+        op.apply(&x, &mut ax);
+        for i in 0..n {
+            x[i] += omega * (b[i] - ax[i]);
+        }
+        exact.apply(&x, &mut ax);
+        let res = norm2(
+            &b.iter()
+                .zip(&ax)
+                .map(|(bi, ai)| bi - ai)
+                .collect::<Vec<f64>>(),
+        ) / bnorm;
+        history.push(res);
+        if res < opts.tol {
+            return Ok(SolveResult {
+                x,
+                iterations: k + 1,
+                converged: true,
+                residual_history: history,
+            });
+        }
+        if !res.is_finite() || res > 1e12 {
+            return Err(Error::Solver(format!("richardson diverged at iter {k}")));
+        }
+    }
+    Ok(SolveResult {
+        x,
+        iterations: opts.max_iters,
+        converged: false,
+        residual_history: history,
+    })
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::solver::operator::ExactOperator;
+    use crate::util::rng::Xoshiro256;
+
+    /// Random SPD system `A = M^T M / n + I`.
+    pub(crate) fn spd_system(n: usize, seed: u64) -> (ExactOperator, Vec<f64>) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let m: Vec<f64> = (0..n * n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let mut a = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += m[k * n + i] * m[k * n + j];
+                }
+                a[i * n + j] = s / n as f64 + if i == j { 1.0 } else { 0.0 };
+            }
+        }
+        let b: Vec<f64> = (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        (ExactOperator::new(n, n, a), b)
+    }
+
+    #[test]
+    fn converges_on_spd() {
+        let (a, b) = spd_system(20, 181);
+        let r = richardson(&a, &a, &b, 0.4, &SolveOpts { max_iters: 2000, tol: 1e-8 })
+            .unwrap();
+        assert!(r.converged);
+        let mut ax = vec![0.0; 20];
+        a.apply(&r.x, &mut ax);
+        for i in 0..20 {
+            assert!((ax[i] - b[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn too_large_omega_diverges() {
+        let (a, b) = spd_system(16, 182);
+        let r = richardson(&a, &a, &b, 5.0, &SolveOpts::default());
+        // Either an explicit divergence error or no convergence.
+        match r {
+            Err(_) => {}
+            Ok(res) => assert!(!res.converged),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_omega() {
+        let (a, b) = spd_system(4, 183);
+        assert!(richardson(&a, &a, &b, -0.1, &SolveOpts::default()).is_err());
+    }
+}

@@ -1,0 +1,208 @@
+//! Johnson S_U distribution — the family Table II selects for the
+//! heavily skewed, heavy-tailed Ag:a-Si non-ideal error population.
+//!
+//! Parameterization: if `Z ~ N(0,1)` then
+//! `X = xi + lambda * sinh((Z - gamma) / delta)`,
+//! equivalently `Z = gamma + delta * asinh((X - xi) / lambda)`.
+//! `delta > 0` controls tail weight, `gamma` skew, `(xi, lambda)`
+//! location/scale.
+
+use crate::error::{Error, Result};
+use crate::stats::moments::Moments;
+use crate::stats::optim::{nelder_mead, NelderMeadOpts};
+use crate::stats::quantile::quantiles_of_sorted;
+use crate::stats::special::{norm_cdf, HALF_LN_2PI};
+
+/// Johnson S_U(gamma, delta, xi, lambda).
+#[derive(Debug, Clone, Copy)]
+pub struct JohnsonSu {
+    pub gamma: f64,
+    pub delta: f64,
+    pub xi: f64,
+    pub lambda: f64,
+}
+
+impl JohnsonSu {
+    pub fn new(gamma: f64, delta: f64, xi: f64, lambda: f64) -> Self {
+        assert!(delta > 0.0 && lambda > 0.0);
+        Self { gamma, delta, xi, lambda }
+    }
+
+    pub fn logpdf(&self, x: f64) -> f64 {
+        let y = (x - self.xi) / self.lambda;
+        let u = self.gamma + self.delta * y.asinh();
+        self.delta.ln() - self.lambda.ln() - 0.5 * (1.0 + y * y).ln() - 0.5 * u * u
+            - HALF_LN_2PI
+    }
+
+    pub fn pdf(&self, x: f64) -> f64 {
+        self.logpdf(x).exp()
+    }
+
+    pub fn cdf(&self, x: f64) -> f64 {
+        let y = (x - self.xi) / self.lambda;
+        norm_cdf(self.gamma + self.delta * y.asinh())
+    }
+
+    /// Quantile function (exact inverse of the transform).
+    pub fn quantile(&self, p: f64) -> f64 {
+        let z = crate::stats::special::norm_quantile(p);
+        self.xi + self.lambda * ((z - self.gamma) / self.delta).sinh()
+    }
+
+    /// Maximum-likelihood fit via Nelder–Mead in an unconstrained
+    /// parameterization (`delta = e^a`, `lambda = e^b`), initialized
+    /// from robust quantile statistics.
+    pub fn fit(data: &[f64]) -> Result<JohnsonSu> {
+        if data.len() < 8 {
+            return Err(Error::Fit("johnson su: too few samples".into()));
+        }
+        let mut sorted = data.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let m = Moments::from_slice(data);
+        if m.std_dev() < 1e-12 {
+            return Err(Error::Fit("johnson su: degenerate data".into()));
+        }
+        let median = quantiles_of_sorted(&sorted, 0.5);
+        let iqr = quantiles_of_sorted(&sorted, 0.75) - quantiles_of_sorted(&sorted, 0.25);
+        let scale0 = (iqr / 1.35).max(m.std_dev() * 0.2).max(1e-9);
+
+        let n = data.len() as f64;
+        let nll = |p: &[f64]| -> f64 {
+            let d = JohnsonSu {
+                gamma: p[0],
+                delta: p[1].exp(),
+                xi: p[2],
+                lambda: p[3].exp(),
+            };
+            if !d.delta.is_finite() || !d.lambda.is_finite() {
+                return f64::INFINITY;
+            }
+            let ll: f64 = data.iter().map(|&x| d.logpdf(x)).sum();
+            if ll.is_finite() {
+                -ll / n
+            } else {
+                f64::INFINITY
+            }
+        };
+
+        // A couple of starts: near-normal and heavier-tailed.
+        let starts = [
+            vec![0.0, 0.0_f64.ln().max(-0.0), median, scale0.ln()],
+            vec![-m.skewness().clamp(-2.0, 2.0), (1.5f64).ln(), median, scale0.ln()],
+            vec![0.0, (0.7f64).ln(), median, (scale0 * 2.0).ln()],
+        ];
+        let mut best: Option<(f64, JohnsonSu)> = None;
+        for s in starts {
+            let r = nelder_mead(
+                nll,
+                &s,
+                &NelderMeadOpts {
+                    max_iter: 1500,
+                    ftol: 1e-9,
+                    step: 0.25,
+                },
+            );
+            if !r.fx.is_finite() {
+                continue;
+            }
+            let d = JohnsonSu {
+                gamma: r.x[0],
+                delta: r.x[1].exp(),
+                xi: r.x[2],
+                lambda: r.x[3].exp(),
+            };
+            if best.as_ref().map_or(true, |(f, _)| r.fx < *f) {
+                best = Some((r.fx, d));
+            }
+        }
+        best.map(|(_, d)| d)
+            .ok_or_else(|| Error::Fit("johnson su: optimization failed".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn sample(d: &JohnsonSu, n: usize, seed: u64) -> Vec<f64> {
+        let mut r = Xoshiro256::seed_from_u64(seed);
+        (0..n)
+            .map(|_| {
+                let z = r.normal();
+                d.xi + d.lambda * ((z - d.gamma) / d.delta).sinh()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pdf_integrates_to_one() {
+        let d = JohnsonSu::new(0.5, 1.2, -1.0, 2.0);
+        let mut integral = 0.0;
+        let h = 0.005;
+        let mut x = -300.0;
+        while x < 300.0 {
+            integral += d.pdf(x) * h;
+            x += h;
+        }
+        assert!((integral - 1.0).abs() < 1e-3, "integral={integral}");
+    }
+
+    #[test]
+    fn cdf_quantile_roundtrip() {
+        let d = JohnsonSu::new(-0.3, 0.9, 2.0, 1.5);
+        for p in [0.01, 0.2, 0.5, 0.8, 0.99] {
+            let x = d.quantile(p);
+            assert!((d.cdf(x) - p).abs() < 1e-7, "p={p}");
+        }
+    }
+
+    #[test]
+    fn cdf_is_monotone() {
+        let d = JohnsonSu::new(1.0, 0.8, 0.0, 1.0);
+        let mut prev = 0.0;
+        let mut x = -50.0;
+        while x < 50.0 {
+            let c = d.cdf(x);
+            assert!(c >= prev - 1e-12);
+            prev = c;
+            x += 0.5;
+        }
+    }
+
+    #[test]
+    fn fit_recovers_parameters_functionally() {
+        // Parameter identifiability is weak; require functional
+        // agreement (quantiles) rather than parameter equality.
+        let truth = JohnsonSu::new(0.8, 1.1, 0.5, 1.2);
+        let data = sample(&truth, 30_000, 51);
+        let fit = JohnsonSu::fit(&data).unwrap();
+        for p in [0.05, 0.25, 0.5, 0.75, 0.95] {
+            let qa = truth.quantile(p);
+            let qb = fit.quantile(p);
+            let scale = truth.quantile(0.95) - truth.quantile(0.05);
+            assert!(
+                (qa - qb).abs() / scale < 0.05,
+                "p={p} qa={qa} qb={qb}"
+            );
+        }
+    }
+
+    #[test]
+    fn fit_beats_normal_on_skewed_data() {
+        let truth = JohnsonSu::new(-1.5, 0.8, 0.0, 1.0);
+        let data = sample(&truth, 20_000, 52);
+        let j = JohnsonSu::fit(&data).unwrap();
+        let n = crate::stats::fit::normal::Normal::fit(&data);
+        let ll_j: f64 = data.iter().map(|&x| j.logpdf(x)).sum();
+        let ll_n: f64 = data.iter().map(|&x| n.logpdf(x)).sum();
+        assert!(ll_j > ll_n + 100.0, "johnson must dominate on its own data");
+    }
+
+    #[test]
+    fn fit_rejects_degenerate() {
+        assert!(JohnsonSu::fit(&[1.0; 100]).is_err());
+        assert!(JohnsonSu::fit(&[1.0, 2.0]).is_err());
+    }
+}

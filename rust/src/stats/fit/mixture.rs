@@ -1,0 +1,281 @@
+//! Gaussian mixture models fitted by expectation-maximization — the
+//! "Normal-2-Mixture" / "Normal-3-Mixture" families of Table II.
+
+use crate::error::{Error, Result};
+use crate::stats::moments::Moments;
+use crate::stats::quantile::quantiles_of_sorted;
+use crate::stats::special::{norm_cdf, norm_logpdf};
+
+/// One mixture component.
+#[derive(Debug, Clone, Copy)]
+pub struct Component {
+    pub weight: f64,
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+/// A k-component univariate Gaussian mixture.
+#[derive(Debug, Clone)]
+pub struct NormalMixture {
+    components: Vec<Component>,
+}
+
+impl NormalMixture {
+    pub fn k(&self) -> usize {
+        self.components.len()
+    }
+
+    pub fn components(&self) -> &[Component] {
+        &self.components
+    }
+
+    pub fn logpdf(&self, x: f64) -> f64 {
+        // logsumexp over components.
+        let terms: Vec<f64> = self
+            .components
+            .iter()
+            .map(|c| c.weight.ln() + norm_logpdf((x - c.mu) / c.sigma) - c.sigma.ln())
+            .collect();
+        logsumexp(&terms)
+    }
+
+    pub fn pdf(&self, x: f64) -> f64 {
+        self.logpdf(x).exp()
+    }
+
+    pub fn cdf(&self, x: f64) -> f64 {
+        self.components
+            .iter()
+            .map(|c| c.weight * norm_cdf((x - c.mu) / c.sigma))
+            .sum()
+    }
+
+    /// Fit by EM with deterministic quantile-based initialization plus
+    /// a spread-perturbed restart; best log-likelihood wins.
+    pub fn fit(data: &[f64], k: usize) -> Result<NormalMixture> {
+        assert!((2..=8).contains(&k), "k={k} unsupported");
+        if data.len() < k * 8 {
+            return Err(Error::Fit(format!(
+                "mixture k={k}: too few samples ({})",
+                data.len()
+            )));
+        }
+        let m = Moments::from_slice(data);
+        if m.std_dev() < 1e-12 {
+            return Err(Error::Fit("mixture: degenerate data".into()));
+        }
+        let mut sorted = data.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+        // Init A: equal weights, means at the k quantile midpoints.
+        let init_a: Vec<Component> = (0..k)
+            .map(|i| Component {
+                weight: 1.0 / k as f64,
+                mu: quantiles_of_sorted(&sorted, (i as f64 + 0.5) / k as f64),
+                sigma: m.std_dev() / k as f64 + 1e-9,
+            })
+            .collect();
+        // Init B: all means near the center with different spreads
+        // (captures "same mode, different tails" mixtures).
+        let init_b: Vec<Component> = (0..k)
+            .map(|i| Component {
+                weight: 1.0 / k as f64,
+                mu: m.mean(),
+                sigma: m.std_dev() * (0.4 + 0.8 * i as f64) + 1e-9,
+            })
+            .collect();
+
+        let mut best: Option<(f64, NormalMixture)> = None;
+        for init in [init_a, init_b] {
+            if let Some((ll, mix)) = em(data, init, 300, 1e-8) {
+                if best.as_ref().map_or(true, |(b, _)| ll > *b) {
+                    best = Some((ll, mix));
+                }
+            }
+        }
+        best.map(|(_, m)| m)
+            .ok_or_else(|| Error::Fit("mixture: EM failed".into()))
+    }
+}
+
+fn logsumexp(xs: &[f64]) -> f64 {
+    let mx = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    if !mx.is_finite() {
+        return mx;
+    }
+    mx + xs.iter().map(|&x| (x - mx).exp()).sum::<f64>().ln()
+}
+
+/// Standard EM loop; returns (loglik, mixture) or None on collapse.
+fn em(
+    data: &[f64],
+    mut comps: Vec<Component>,
+    max_iter: usize,
+    rtol: f64,
+) -> Option<(f64, NormalMixture)> {
+    let n = data.len();
+    let k = comps.len();
+    let mut resp = vec![0.0f64; n * k];
+    let mut prev_ll = f64::NEG_INFINITY;
+    // Variance floor prevents singular collapse onto one point.
+    let global_sd = Moments::from_slice(data).std_dev();
+    let sigma_floor = (global_sd * 1e-3).max(1e-12);
+
+    for _ in 0..max_iter {
+        // E step.
+        let mut ll = 0.0;
+        for (i, &x) in data.iter().enumerate() {
+            let terms: Vec<f64> = comps
+                .iter()
+                .map(|c| c.weight.ln() + norm_logpdf((x - c.mu) / c.sigma) - c.sigma.ln())
+                .collect();
+            let lse = logsumexp(&terms);
+            if !lse.is_finite() {
+                return None;
+            }
+            ll += lse;
+            for (j, &t) in terms.iter().enumerate() {
+                resp[i * k + j] = (t - lse).exp();
+            }
+        }
+
+        // M step.
+        for j in 0..k {
+            let nj: f64 = (0..n).map(|i| resp[i * k + j]).sum();
+            if nj < 1e-8 {
+                return None; // component died
+            }
+            let mu: f64 = (0..n).map(|i| resp[i * k + j] * data[i]).sum::<f64>() / nj;
+            let var: f64 = (0..n)
+                .map(|i| resp[i * k + j] * (data[i] - mu).powi(2))
+                .sum::<f64>()
+                / nj;
+            comps[j] = Component {
+                weight: nj / n as f64,
+                mu,
+                sigma: var.sqrt().max(sigma_floor),
+            };
+        }
+
+        if (ll - prev_ll).abs() < rtol * (1.0 + ll.abs()) {
+            prev_ll = ll;
+            break;
+        }
+        prev_ll = ll;
+    }
+
+    // Canonical order: by mean (stable reports).
+    comps.sort_by(|a, b| a.mu.partial_cmp(&b.mu).unwrap());
+    Some((prev_ll, NormalMixture { components: comps }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn two_mode(n: usize, seed: u64) -> Vec<f64> {
+        let mut r = Xoshiro256::seed_from_u64(seed);
+        (0..n)
+            .map(|i| {
+                if i % 2 == 0 {
+                    r.normal_ms(-2.0, 0.5)
+                } else {
+                    r.normal_ms(2.0, 0.8)
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn weights_sum_to_one_and_cdf_valid() {
+        let data = two_mode(5000, 71);
+        let m = NormalMixture::fit(&data, 2).unwrap();
+        let wsum: f64 = m.components().iter().map(|c| c.weight).sum();
+        assert!((wsum - 1.0).abs() < 1e-9);
+        assert!(m.cdf(-100.0) < 1e-6);
+        assert!(m.cdf(100.0) > 1.0 - 1e-6);
+        let mut prev = 0.0;
+        for i in -40..40 {
+            let c = m.cdf(i as f64 * 0.25);
+            assert!(c >= prev - 1e-12);
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn recovers_two_modes() {
+        let data = two_mode(20_000, 72);
+        let m = NormalMixture::fit(&data, 2).unwrap();
+        let c = m.components();
+        assert!((c[0].mu + 2.0).abs() < 0.1, "mu0={}", c[0].mu);
+        assert!((c[1].mu - 2.0).abs() < 0.1, "mu1={}", c[1].mu);
+        assert!((c[0].weight - 0.5).abs() < 0.05);
+        assert!((c[0].sigma - 0.5).abs() < 0.1);
+        assert!((c[1].sigma - 0.8).abs() < 0.1);
+    }
+
+    #[test]
+    fn three_component_fit_improves_loglik() {
+        let mut r = Xoshiro256::seed_from_u64(73);
+        let data: Vec<f64> = (0..15_000)
+            .map(|i| match i % 3 {
+                0 => r.normal_ms(-4.0, 0.5),
+                1 => r.normal_ms(0.0, 0.5),
+                _ => r.normal_ms(4.0, 0.5),
+            })
+            .collect();
+        let m2 = NormalMixture::fit(&data, 2).unwrap();
+        let m3 = NormalMixture::fit(&data, 3).unwrap();
+        let ll2: f64 = data.iter().map(|&x| m2.logpdf(x)).sum();
+        let ll3: f64 = data.iter().map(|&x| m3.logpdf(x)).sum();
+        assert!(ll3 > ll2 + 50.0);
+        assert_eq!(m3.k(), 3);
+    }
+
+    #[test]
+    fn scale_mixture_on_unimodal_heavy_data() {
+        // Unimodal but heavy-tailed: mixture should find a wide + a
+        // narrow component at the same center (init B path).
+        let mut r = Xoshiro256::seed_from_u64(74);
+        let data: Vec<f64> = (0..20_000)
+            .map(|i| {
+                if i % 10 == 0 {
+                    r.normal_ms(0.0, 3.0)
+                } else {
+                    r.normal_ms(0.0, 0.5)
+                }
+            })
+            .collect();
+        let m = NormalMixture::fit(&data, 2).unwrap();
+        let c = m.components();
+        let (lo, hi) = (c[0].sigma.min(c[1].sigma), c[0].sigma.max(c[1].sigma));
+        assert!(hi / lo > 2.0, "sigmas={lo},{hi}");
+    }
+
+    #[test]
+    fn pdf_integrates_to_one() {
+        let data = two_mode(4000, 75);
+        let m = NormalMixture::fit(&data, 2).unwrap();
+        let mut integral = 0.0;
+        let h = 0.01;
+        let mut x = -20.0;
+        while x < 20.0 {
+            integral += m.pdf(x) * h;
+            x += h;
+        }
+        assert!((integral - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rejects_degenerate_and_tiny() {
+        assert!(NormalMixture::fit(&[1.0; 100], 2).is_err());
+        assert!(NormalMixture::fit(&[1.0, 2.0, 3.0], 2).is_err());
+    }
+
+    #[test]
+    fn logsumexp_stable() {
+        assert!((logsumexp(&[-1000.0, -1000.0]) - (-1000.0 + 2f64.ln())).abs() < 1e-9);
+        assert_eq!(logsumexp(&[f64::NEG_INFINITY, 0.0]), 0.0);
+    }
+}

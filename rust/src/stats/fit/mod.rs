@@ -1,0 +1,261 @@
+//! Parametric distribution fitting for the VMM error populations.
+//!
+//! Table II of the paper reports, per device × non-ideality
+//! configuration, the best-fitting family among: normal mixtures (2 and
+//! 3 components), Johnson S_U, and sinh-arcsinh (SHASH).  We fit all of
+//! them (plus a plain normal as the null family) by maximum likelihood
+//! and select by AIC, with the KS statistic as a secondary diagnostic.
+//!
+//! MLE cost control: likelihood optimization runs on a deterministic
+//! subsample of at most [`FIT_SUBSAMPLE`] points (stride sampling keeps
+//! the empirical distribution), while the reported log-likelihood, AIC
+//! and KS statistic are always evaluated on the **full** population.
+
+pub mod johnson;
+pub mod mixture;
+pub mod normal;
+pub mod shash;
+
+use crate::error::{Error, Result};
+use crate::stats::ks::{ks_pvalue, ks_statistic_sorted};
+
+pub use johnson::JohnsonSu;
+pub use mixture::NormalMixture;
+pub use normal::Normal;
+pub use shash::Shash;
+
+/// Max points used inside the MLE inner loop.
+pub const FIT_SUBSAMPLE: usize = 8_192;
+
+/// A fitted parametric model.
+#[derive(Debug, Clone)]
+pub enum FittedModel {
+    Normal(Normal),
+    JohnsonSu(JohnsonSu),
+    Shash(Shash),
+    Mixture(NormalMixture),
+}
+
+impl FittedModel {
+    pub fn name(&self) -> String {
+        match self {
+            FittedModel::Normal(_) => "Normal".into(),
+            FittedModel::JohnsonSu(_) => "Johnson Su".into(),
+            FittedModel::Shash(_) => "SHASH".into(),
+            FittedModel::Mixture(m) => format!("Normal-{}-Mixture", m.k()),
+        }
+    }
+
+    /// Number of free parameters (for AIC/BIC).
+    pub fn n_params(&self) -> usize {
+        match self {
+            FittedModel::Normal(_) => 2,
+            FittedModel::JohnsonSu(_) => 4,
+            FittedModel::Shash(_) => 4,
+            FittedModel::Mixture(m) => 3 * m.k() - 1,
+        }
+    }
+
+    pub fn logpdf(&self, x: f64) -> f64 {
+        match self {
+            FittedModel::Normal(d) => d.logpdf(x),
+            FittedModel::JohnsonSu(d) => d.logpdf(x),
+            FittedModel::Shash(d) => d.logpdf(x),
+            FittedModel::Mixture(d) => d.logpdf(x),
+        }
+    }
+
+    pub fn cdf(&self, x: f64) -> f64 {
+        match self {
+            FittedModel::Normal(d) => d.cdf(x),
+            FittedModel::JohnsonSu(d) => d.cdf(x),
+            FittedModel::Shash(d) => d.cdf(x),
+            FittedModel::Mixture(d) => d.cdf(x),
+        }
+    }
+
+    /// Human-readable parameter string for reports.
+    pub fn params_string(&self) -> String {
+        match self {
+            FittedModel::Normal(d) => format!("mu={:.4} sigma={:.4}", d.mu, d.sigma),
+            FittedModel::JohnsonSu(d) => format!(
+                "gamma={:.4} delta={:.4} xi={:.4} lambda={:.4}",
+                d.gamma, d.delta, d.xi, d.lambda
+            ),
+            FittedModel::Shash(d) => format!(
+                "eps={:.4} delta={:.4} xi={:.4} lambda={:.4}",
+                d.epsilon, d.delta, d.xi, d.lambda
+            ),
+            FittedModel::Mixture(d) => d
+                .components()
+                .iter()
+                .map(|c| format!("(w={:.3} mu={:.4} sigma={:.4})", c.weight, c.mu, c.sigma))
+                .collect::<Vec<_>>()
+                .join(" "),
+        }
+    }
+
+    fn loglik(&self, data: &[f64]) -> f64 {
+        data.iter().map(|&x| self.logpdf(x)).sum()
+    }
+}
+
+/// One fitted family with its goodness-of-fit scores.
+#[derive(Debug, Clone)]
+pub struct FitReport {
+    pub model: FittedModel,
+    pub loglik: f64,
+    pub aic: f64,
+    pub bic: f64,
+    pub ks: f64,
+    pub ks_pvalue: f64,
+}
+
+/// Fit all candidate families and return reports sorted by AIC
+/// (best first).  `data` need not be sorted.
+pub fn fit_all(data: &[f64]) -> Result<Vec<FitReport>> {
+    if data.len() < 16 {
+        return Err(Error::Fit(format!(
+            "need at least 16 samples, got {}",
+            data.len()
+        )));
+    }
+    let mut sorted = data.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let sub = subsample(&sorted);
+
+    let mut models = vec![FittedModel::Normal(Normal::fit(&sorted))];
+    // Shape families can fail on degenerate data; skip them then.
+    if let Ok(j) = JohnsonSu::fit(&sub) {
+        models.push(FittedModel::JohnsonSu(j));
+    }
+    if let Ok(s) = Shash::fit(&sub) {
+        models.push(FittedModel::Shash(s));
+    }
+    for k in [2, 3] {
+        if let Ok(m) = NormalMixture::fit(&sub, k) {
+            models.push(FittedModel::Mixture(m));
+        }
+    }
+
+    let n = sorted.len() as f64;
+    let mut reports: Vec<FitReport> = models
+        .into_iter()
+        .map(|model| {
+            let loglik = model.loglik(&sorted);
+            let k = model.n_params() as f64;
+            let ks = ks_statistic_sorted(&sorted, |x| model.cdf(x));
+            FitReport {
+                aic: 2.0 * k - 2.0 * loglik,
+                bic: k * n.ln() - 2.0 * loglik,
+                ks,
+                ks_pvalue: ks_pvalue(ks, sorted.len()),
+                model,
+                loglik,
+            }
+        })
+        .filter(|r| r.loglik.is_finite())
+        .collect();
+    if reports.is_empty() {
+        return Err(Error::Fit("all families failed to fit".into()));
+    }
+    reports.sort_by(|a, b| a.aic.partial_cmp(&b.aic).unwrap());
+    Ok(reports)
+}
+
+/// Fit all families and return the AIC-best one.
+pub fn best_fit(data: &[f64]) -> Result<FitReport> {
+    Ok(fit_all(data)?.remove(0))
+}
+
+/// Deterministic stride subsample of sorted data (preserves the
+/// empirical distribution shape).
+fn subsample(sorted: &[f64]) -> Vec<f64> {
+    if sorted.len() <= FIT_SUBSAMPLE {
+        return sorted.to_vec();
+    }
+    let stride = sorted.len() as f64 / FIT_SUBSAMPLE as f64;
+    (0..FIT_SUBSAMPLE)
+        .map(|i| sorted[(i as f64 * stride) as usize])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn normal_data(n: usize, mu: f64, sigma: f64, seed: u64) -> Vec<f64> {
+        let mut r = Xoshiro256::seed_from_u64(seed);
+        (0..n).map(|_| r.normal_ms(mu, sigma)).collect()
+    }
+
+    #[test]
+    fn normal_data_prefers_cheap_families() {
+        let data = normal_data(20_000, 1.0, 2.0, 31);
+        let best = best_fit(&data).unwrap();
+        // On truly normal data the AIC winner must not be a flexible
+        // family by a large margin; normal should be within 4 AIC.
+        let all = fit_all(&data).unwrap();
+        let normal_aic = all
+            .iter()
+            .find(|r| matches!(r.model, FittedModel::Normal(_)))
+            .unwrap()
+            .aic;
+        assert!(normal_aic - best.aic < 6.0, "normal should be competitive");
+        assert!(best.ks < 0.02);
+    }
+
+    #[test]
+    fn bimodal_data_selects_mixture() {
+        let mut data = normal_data(8_000, -3.0, 0.7, 32);
+        data.extend(normal_data(8_000, 3.0, 0.7, 33));
+        let best = best_fit(&data).unwrap();
+        assert!(
+            matches!(&best.model, FittedModel::Mixture(m) if m.k() >= 2),
+            "got {}",
+            best.model.name()
+        );
+    }
+
+    #[test]
+    fn skewed_heavy_data_selects_shape_family() {
+        // sinh-transformed normal: exactly a SHASH-type law.
+        let mut r = Xoshiro256::seed_from_u64(34);
+        let data: Vec<f64> = (0..20_000)
+            .map(|_| (1.2f64 * r.normal() + 0.5).sinh())
+            .collect();
+        let best = best_fit(&data).unwrap();
+        assert!(
+            !matches!(best.model, FittedModel::Normal(_)),
+            "normal must lose on skewed heavy-tailed data"
+        );
+        assert!(best.ks < 0.05, "ks={}", best.ks);
+    }
+
+    #[test]
+    fn reports_sorted_by_aic() {
+        let data = normal_data(4_000, 0.0, 1.0, 35);
+        let all = fit_all(&data).unwrap();
+        for w in all.windows(2) {
+            assert!(w[0].aic <= w[1].aic);
+        }
+    }
+
+    #[test]
+    fn too_few_samples_errors() {
+        assert!(best_fit(&[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn subsample_preserves_range() {
+        let sorted: Vec<f64> = (0..100_000).map(|i| i as f64).collect();
+        let sub = subsample(&sorted);
+        assert_eq!(sub.len(), FIT_SUBSAMPLE);
+        assert_eq!(sub[0], 0.0);
+        assert!(sub[sub.len() - 1] > 90_000.0);
+        for w in sub.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! Normal distribution: the closed-form MLE baseline family.
+
+use crate::stats::moments::Moments;
+use crate::stats::special::{norm_cdf, norm_logpdf};
+
+/// Normal(mu, sigma).
+#[derive(Debug, Clone, Copy)]
+pub struct Normal {
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+impl Normal {
+    pub fn new(mu: f64, sigma: f64) -> Self {
+        assert!(sigma > 0.0);
+        Self { mu, sigma }
+    }
+
+    /// Closed-form MLE.
+    pub fn fit(data: &[f64]) -> Normal {
+        let m = Moments::from_slice(data);
+        let sigma = m.std_dev().max(1e-12);
+        Normal { mu: m.mean(), sigma }
+    }
+
+    pub fn logpdf(&self, x: f64) -> f64 {
+        norm_logpdf((x - self.mu) / self.sigma) - self.sigma.ln()
+    }
+
+    pub fn pdf(&self, x: f64) -> f64 {
+        self.logpdf(x).exp()
+    }
+
+    pub fn cdf(&self, x: f64) -> f64 {
+        norm_cdf((x - self.mu) / self.sigma)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn fit_recovers_parameters() {
+        let mut r = Xoshiro256::seed_from_u64(41);
+        let data: Vec<f64> = (0..100_000).map(|_| r.normal_ms(3.0, 0.5)).collect();
+        let d = Normal::fit(&data);
+        assert!((d.mu - 3.0).abs() < 0.01);
+        assert!((d.sigma - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn pdf_integrates_to_one() {
+        let d = Normal::new(1.0, 2.0);
+        let mut integral = 0.0;
+        let h = 0.01;
+        let mut x = -20.0;
+        while x < 22.0 {
+            integral += d.pdf(x) * h;
+            x += h;
+        }
+        assert!((integral - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn cdf_matches_pdf_derivative() {
+        let d = Normal::new(-0.5, 1.5);
+        let h = 1e-5;
+        for x in [-3.0, 0.0, 2.0] {
+            let num = (d.cdf(x + h) - d.cdf(x - h)) / (2.0 * h);
+            assert!((num - d.pdf(x)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn degenerate_data_does_not_panic() {
+        let d = Normal::fit(&[2.0; 50]);
+        assert!(d.sigma > 0.0);
+        assert!(d.logpdf(2.0).is_finite());
+    }
+}

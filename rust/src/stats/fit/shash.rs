@@ -1,0 +1,217 @@
+//! Sinh-arcsinh (SHASH) distribution of Jones & Pewsey (2009) — the
+//! family Table II selects for the EpiRAM ideal-case errors.
+//!
+//! Location-scale form: with `y = (x - xi) / lambda` and
+//! `r = sinh(delta * asinh(y) - epsilon)`, the density is
+//! `f(x) = delta * cosh(delta*asinh(y) - epsilon)
+//!         / (lambda * sqrt(2*pi*(1+y^2))) * exp(-r^2/2)`.
+//! `epsilon` controls skew, `delta > 0` tail weight (delta < 1 heavier
+//! than normal, delta > 1 lighter).
+
+use crate::error::{Error, Result};
+use crate::stats::moments::Moments;
+use crate::stats::optim::{nelder_mead, NelderMeadOpts};
+use crate::stats::quantile::quantiles_of_sorted;
+use crate::stats::special::{norm_cdf, norm_quantile, HALF_LN_2PI};
+
+/// SHASH(epsilon, delta, xi, lambda).
+#[derive(Debug, Clone, Copy)]
+pub struct Shash {
+    pub epsilon: f64,
+    pub delta: f64,
+    pub xi: f64,
+    pub lambda: f64,
+}
+
+impl Shash {
+    pub fn new(epsilon: f64, delta: f64, xi: f64, lambda: f64) -> Self {
+        assert!(delta > 0.0 && lambda > 0.0);
+        Self { epsilon, delta, xi, lambda }
+    }
+
+    pub fn logpdf(&self, x: f64) -> f64 {
+        let y = (x - self.xi) / self.lambda;
+        let t = self.delta * y.asinh() - self.epsilon;
+        let r = t.sinh();
+        // ln cosh with overflow guard: cosh(t) ~ e^|t|/2 for large |t|.
+        let ln_cosh = if t.abs() > 20.0 {
+            t.abs() - std::f64::consts::LN_2
+        } else {
+            t.cosh().ln()
+        };
+        self.delta.ln() + ln_cosh
+            - self.lambda.ln()
+            - 0.5 * (1.0 + y * y).ln()
+            - 0.5 * r * r
+            - HALF_LN_2PI
+    }
+
+    pub fn pdf(&self, x: f64) -> f64 {
+        self.logpdf(x).exp()
+    }
+
+    pub fn cdf(&self, x: f64) -> f64 {
+        let y = (x - self.xi) / self.lambda;
+        norm_cdf((self.delta * y.asinh() - self.epsilon).sinh())
+    }
+
+    /// Quantile function (exact inverse).
+    pub fn quantile(&self, p: f64) -> f64 {
+        let z = norm_quantile(p);
+        self.xi + self.lambda * ((z.asinh() + self.epsilon) / self.delta).sinh()
+    }
+
+    /// Maximum-likelihood fit (Nelder–Mead, `delta = e^a`,
+    /// `lambda = e^b`), quantile-based initialization.
+    pub fn fit(data: &[f64]) -> Result<Shash> {
+        if data.len() < 8 {
+            return Err(Error::Fit("shash: too few samples".into()));
+        }
+        let m = Moments::from_slice(data);
+        if m.std_dev() < 1e-12 {
+            return Err(Error::Fit("shash: degenerate data".into()));
+        }
+        let mut sorted = data.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = quantiles_of_sorted(&sorted, 0.5);
+        let iqr = quantiles_of_sorted(&sorted, 0.75) - quantiles_of_sorted(&sorted, 0.25);
+        let scale0 = (iqr / 1.35).max(m.std_dev() * 0.2).max(1e-9);
+
+        let n = data.len() as f64;
+        let nll = |p: &[f64]| -> f64 {
+            let d = Shash {
+                epsilon: p[0],
+                delta: p[1].exp(),
+                xi: p[2],
+                lambda: p[3].exp(),
+            };
+            if !d.delta.is_finite() || !d.lambda.is_finite() || d.delta > 50.0 {
+                return f64::INFINITY;
+            }
+            let ll: f64 = data.iter().map(|&x| d.logpdf(x)).sum();
+            if ll.is_finite() {
+                -ll / n
+            } else {
+                f64::INFINITY
+            }
+        };
+
+        let starts = [
+            vec![0.0, 0.0, median, scale0.ln()],
+            vec![m.skewness().clamp(-2.0, 2.0) * 0.5, (0.8f64).ln(), median, scale0.ln()],
+            vec![0.0, (1.4f64).ln(), median, (scale0 * 0.7).ln()],
+        ];
+        let mut best: Option<(f64, Shash)> = None;
+        for s in starts {
+            let r = nelder_mead(
+                nll,
+                &s,
+                &NelderMeadOpts {
+                    max_iter: 1500,
+                    ftol: 1e-9,
+                    step: 0.25,
+                },
+            );
+            if !r.fx.is_finite() {
+                continue;
+            }
+            let d = Shash {
+                epsilon: r.x[0],
+                delta: r.x[1].exp(),
+                xi: r.x[2],
+                lambda: r.x[3].exp(),
+            };
+            if best.as_ref().map_or(true, |(f, _)| r.fx < *f) {
+                best = Some((r.fx, d));
+            }
+        }
+        best.map(|(_, d)| d)
+            .ok_or_else(|| Error::Fit("shash: optimization failed".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn sample(d: &Shash, n: usize, seed: u64) -> Vec<f64> {
+        let mut r = Xoshiro256::seed_from_u64(seed);
+        (0..n)
+            .map(|_| {
+                let z = r.normal();
+                d.xi + d.lambda * ((z.asinh() + d.epsilon) / d.delta).sinh()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn reduces_to_normal_at_identity() {
+        // epsilon=0, delta=1: SHASH(0,1,xi,lambda) == Normal(xi,lambda)
+        let d = Shash::new(0.0, 1.0, 0.5, 2.0);
+        let n = crate::stats::fit::normal::Normal::new(0.5, 2.0);
+        for x in [-4.0, -1.0, 0.5, 3.0] {
+            assert!((d.logpdf(x) - n.logpdf(x)).abs() < 1e-10, "x={x}");
+            assert!((d.cdf(x) - n.cdf(x)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn pdf_integrates_to_one() {
+        let d = Shash::new(0.4, 0.8, 0.0, 1.0);
+        let mut integral = 0.0;
+        let h = 0.01;
+        let mut x = -200.0;
+        while x < 200.0 {
+            integral += d.pdf(x) * h;
+            x += h;
+        }
+        assert!((integral - 1.0).abs() < 1e-3, "integral={integral}");
+    }
+
+    #[test]
+    fn cdf_quantile_roundtrip() {
+        let d = Shash::new(-0.5, 1.3, 1.0, 0.7);
+        for p in [0.02, 0.3, 0.5, 0.7, 0.98] {
+            assert!((d.cdf(d.quantile(p)) - p).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn delta_below_one_has_heavier_tails() {
+        let heavy = Shash::new(0.0, 0.6, 0.0, 1.0);
+        let light = Shash::new(0.0, 1.6, 0.0, 1.0);
+        // Tail mass beyond |x|=6.
+        assert!(1.0 - heavy.cdf(6.0) > 1.0 - light.cdf(6.0));
+    }
+
+    #[test]
+    fn fit_recovers_quantiles() {
+        let truth = Shash::new(0.3, 0.9, -1.0, 1.5);
+        let data = sample(&truth, 30_000, 61);
+        let fit = Shash::fit(&data).unwrap();
+        let scale = truth.quantile(0.95) - truth.quantile(0.05);
+        for p in [0.05, 0.25, 0.5, 0.75, 0.95] {
+            assert!(
+                (truth.quantile(p) - fit.quantile(p)).abs() / scale < 0.05,
+                "p={p}"
+            );
+        }
+    }
+
+    #[test]
+    fn fit_beats_normal_on_shash_data() {
+        let truth = Shash::new(0.8, 0.7, 0.0, 1.0);
+        let data = sample(&truth, 20_000, 62);
+        let s = Shash::fit(&data).unwrap();
+        let n = crate::stats::fit::normal::Normal::fit(&data);
+        let ll_s: f64 = data.iter().map(|&x| s.logpdf(x)).sum();
+        let ll_n: f64 = data.iter().map(|&x| n.logpdf(x)).sum();
+        assert!(ll_s > ll_n + 100.0);
+    }
+
+    #[test]
+    fn fit_rejects_degenerate() {
+        assert!(Shash::fit(&[0.5; 64]).is_err());
+    }
+}

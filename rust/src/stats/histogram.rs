@@ -1,0 +1,198 @@
+//! Fixed-bin histograms for the error-distribution panels of Fig. 2–5.
+
+/// A uniform-bin histogram over `[lo, hi)` with under/overflow bins.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    counts: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+    total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo, "empty histogram range [{lo}, {hi})");
+        assert!(bins > 0);
+        Self {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            underflow: 0,
+            overflow: 0,
+            total: 0,
+        }
+    }
+
+    /// Build a histogram spanning the data (min..max, right-closed top).
+    pub fn from_data(data: &[f64], bins: usize) -> Self {
+        assert!(!data.is_empty());
+        let lo = data.iter().copied().fold(f64::INFINITY, f64::min);
+        let mut hi = data.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        if hi <= lo {
+            hi = lo + 1.0; // degenerate constant data
+        }
+        // Widen the top edge so the max lands in the last bin.
+        let width = (hi - lo) / bins as f64;
+        let mut h = Self::new(lo, hi + width * 1e-9, bins);
+        for &x in data {
+            h.push(x);
+        }
+        h
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.total += 1;
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let bin = ((x - self.lo) / (self.hi - self.lo) * self.counts.len() as f64)
+                as usize;
+            // Guard the (rare) round-up at x == hi - eps.
+            let bin = bin.min(self.counts.len() - 1);
+            self.counts[bin] += 1;
+        }
+    }
+
+    pub fn bins(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn underflow(&self) -> u64 {
+        self.underflow
+    }
+
+    pub fn overflow(&self) -> u64 {
+        self.overflow
+    }
+
+    /// Center of bin `i`.
+    pub fn center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        self.lo + (i as f64 + 0.5) * w
+    }
+
+    /// Normalized density of bin `i` (integrates to ≤ 1 over the range).
+    pub fn density(&self, i: usize) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        self.counts[i] as f64 / (self.total as f64 * w)
+    }
+
+    /// Merge two histograms with identical binning (chunked reduce).
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.lo, other.lo);
+        assert_eq!(self.hi, other.hi);
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.underflow += other.underflow;
+        self.overflow += other.overflow;
+        self.total += other.total;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn bin_assignment() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for x in [0.0, 0.5, 9.99, 5.0] {
+            h.push(x);
+        }
+        assert_eq!(h.counts()[0], 2);
+        assert_eq!(h.counts()[9], 1);
+        assert_eq!(h.counts()[5], 1);
+        assert_eq!(h.total(), 4);
+    }
+
+    #[test]
+    fn under_overflow() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.push(-0.1);
+        h.push(1.0); // right-open: counts as overflow
+        h.push(2.0);
+        assert_eq!(h.underflow(), 1);
+        assert_eq!(h.overflow(), 2);
+    }
+
+    #[test]
+    fn from_data_spans_everything() {
+        let data = [-3.0, -1.0, 0.0, 2.0, 7.0];
+        let h = Histogram::from_data(&data, 5);
+        assert_eq!(h.underflow(), 0);
+        assert_eq!(h.overflow(), 0);
+        assert_eq!(h.counts().iter().sum::<u64>(), 5);
+    }
+
+    #[test]
+    fn constant_data_does_not_panic() {
+        let h = Histogram::from_data(&[4.0; 10], 4);
+        assert_eq!(h.total(), 10);
+        assert_eq!(h.underflow() + h.overflow(), 0);
+    }
+
+    #[test]
+    fn density_integrates_to_one() {
+        let mut r = Xoshiro256::seed_from_u64(8);
+        let data: Vec<f64> = (0..100_000).map(|_| r.normal()).collect();
+        let h = Histogram::from_data(&data, 50);
+        let w = (h.hi - h.lo) / h.bins() as f64;
+        let integral: f64 = (0..h.bins()).map(|i| h.density(i) * w).sum();
+        assert!((integral - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn centers_are_monotone() {
+        let h = Histogram::new(-1.0, 1.0, 8);
+        for i in 1..8 {
+            assert!(h.center(i) > h.center(i - 1));
+        }
+    }
+
+    #[test]
+    fn merge_matches_combined() {
+        let mut r = Xoshiro256::seed_from_u64(9);
+        let a: Vec<f64> = (0..1000).map(|_| r.uniform()).collect();
+        let b: Vec<f64> = (0..1000).map(|_| r.uniform()).collect();
+        let mut ha = Histogram::new(0.0, 1.0, 16);
+        let mut hb = Histogram::new(0.0, 1.0, 16);
+        let mut hall = Histogram::new(0.0, 1.0, 16);
+        for &x in &a {
+            ha.push(x);
+            hall.push(x);
+        }
+        for &x in &b {
+            hb.push(x);
+            hall.push(x);
+        }
+        ha.merge(&hb);
+        assert_eq!(ha.counts(), hall.counts());
+        assert_eq!(ha.total(), hall.total());
+    }
+
+    #[test]
+    #[should_panic]
+    fn merge_incompatible_panics() {
+        let mut a = Histogram::new(0.0, 1.0, 4);
+        let b = Histogram::new(0.0, 2.0, 4);
+        a.merge(&b);
+    }
+}

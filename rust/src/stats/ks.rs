@@ -1,0 +1,93 @@
+//! Kolmogorov–Smirnov goodness-of-fit statistic, used as a secondary
+//! diagnostic next to AIC in Table II's model selection.
+
+/// One-sample KS statistic `D_n = sup_x |F_n(x) - F(x)|` against a CDF.
+/// `data` may be unsorted (a sorted copy is made).
+pub fn ks_statistic<F: Fn(f64) -> f64>(data: &[f64], cdf: F) -> f64 {
+    assert!(!data.is_empty());
+    let mut sorted = data.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ks_statistic_sorted(&sorted, cdf)
+}
+
+/// One-sample KS statistic on pre-sorted data.
+pub fn ks_statistic_sorted<F: Fn(f64) -> f64>(sorted: &[f64], cdf: F) -> f64 {
+    let n = sorted.len() as f64;
+    let mut d = 0.0f64;
+    for (i, &x) in sorted.iter().enumerate() {
+        let f = cdf(x).clamp(0.0, 1.0);
+        let lo = i as f64 / n; // F_n just below x
+        let hi = (i + 1) as f64 / n; // F_n at x
+        d = d.max((f - lo).abs()).max((hi - f).abs());
+    }
+    d
+}
+
+/// Asymptotic KS p-value via the Kolmogorov distribution
+/// `Q(λ) = 2 Σ (-1)^{k-1} e^{-2 k² λ²}` with the standard finite-n
+/// correction (Stephens).
+pub fn ks_pvalue(d: f64, n: usize) -> f64 {
+    let sqrt_n = (n as f64).sqrt();
+    let lambda = (sqrt_n + 0.12 + 0.11 / sqrt_n) * d;
+    let mut sum = 0.0;
+    for k in 1..=100 {
+        let kf = k as f64;
+        let term = (-2.0 * kf * kf * lambda * lambda).exp();
+        sum += if k % 2 == 1 { term } else { -term };
+        if term < 1e-12 {
+            break;
+        }
+    }
+    (2.0 * sum).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::special::norm_cdf;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn perfect_fit_has_small_d() {
+        let mut r = Xoshiro256::seed_from_u64(21);
+        let data: Vec<f64> = (0..20_000).map(|_| r.normal()).collect();
+        let d = ks_statistic(&data, norm_cdf);
+        // E[D_n] ~ 0.87/sqrt(n) ~ 0.006
+        assert!(d < 0.02, "d={d}");
+        assert!(ks_pvalue(d, data.len()) > 0.01);
+    }
+
+    #[test]
+    fn wrong_fit_has_large_d() {
+        let mut r = Xoshiro256::seed_from_u64(22);
+        // Uniform data tested against a normal CDF.
+        let data: Vec<f64> = (0..5000).map(|_| r.uniform_in(-1.0, 1.0)).collect();
+        let d = ks_statistic(&data, norm_cdf);
+        assert!(d > 0.05, "d={d}");
+        assert!(ks_pvalue(d, data.len()) < 1e-6);
+    }
+
+    #[test]
+    fn d_bounds() {
+        let data = [0.5];
+        let d = ks_statistic(&data, |_| 0.5);
+        assert!((0.0..=1.0).contains(&d));
+    }
+
+    #[test]
+    fn shifted_mean_detected() {
+        let mut r = Xoshiro256::seed_from_u64(23);
+        let data: Vec<f64> = (0..10_000).map(|_| r.normal_ms(0.3, 1.0)).collect();
+        let d = ks_statistic(&data, norm_cdf);
+        // D should approach sup |Φ(x-0.3) - Φ(x)| ≈ 0.119.
+        assert!(d > 0.08 && d < 0.16, "d={d}");
+    }
+
+    #[test]
+    fn pvalue_monotone_in_d() {
+        let p1 = ks_pvalue(0.01, 1000);
+        let p2 = ks_pvalue(0.05, 1000);
+        let p3 = ks_pvalue(0.2, 1000);
+        assert!(p1 > p2 && p2 > p3);
+    }
+}

@@ -1,0 +1,21 @@
+//! Statistics substrate: moment accumulation, quantiles, histograms,
+//! goodness-of-fit, parametric distribution fitting.
+//!
+//! This is the analysis half of the MELISO backward stage — everything
+//! Table II of the paper needs: empirical moments (mean, variance,
+//! skewness, excess kurtosis), box-plot summaries, and maximum-
+//! likelihood fits of the four candidate families (normal, Johnson
+//! S_U, sinh-arcsinh, 2-/3-component normal mixtures) selected by AIC.
+
+pub mod fit;
+pub mod histogram;
+pub mod ks;
+pub mod moments;
+pub mod optim;
+pub mod quantile;
+pub mod special;
+
+pub use fit::{best_fit, FitReport, FittedModel};
+pub use histogram::Histogram;
+pub use moments::{Moments, Summary};
+pub use quantile::{quantiles_of_sorted, BoxPlot};

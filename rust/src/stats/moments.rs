@@ -1,0 +1,297 @@
+//! Streaming central moments up to order four.
+//!
+//! Implements the one-pass, numerically stable update of Pébay (2008)
+//! (the generalization of Welford's algorithm), with exact pairwise
+//! `merge` so chunked populations computed on the worker pool reduce to
+//! bit-identical statistics regardless of chunking.
+
+/// One-pass accumulator of count, mean and 2nd–4th central moments.
+#[derive(Debug, Clone, Default)]
+pub struct Moments {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    m3: f64,
+    m4: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Moments {
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            m3: 0.0,
+            m4: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Accumulate one observation.
+    pub fn push(&mut self, x: f64) {
+        let n1 = self.n as f64;
+        self.n += 1;
+        let n = self.n as f64;
+        let delta = x - self.mean;
+        let delta_n = delta / n;
+        let delta_n2 = delta_n * delta_n;
+        let term1 = delta * delta_n * n1;
+
+        self.mean += delta_n;
+        self.m4 += term1 * delta_n2 * (n * n - 3.0 * n + 3.0)
+            + 6.0 * delta_n2 * self.m2
+            - 4.0 * delta_n * self.m3;
+        self.m3 += term1 * delta_n * (n - 2.0) - 3.0 * delta_n * self.m2;
+        self.m2 += term1;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Accumulate a slice.
+    pub fn extend(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.push(x);
+        }
+    }
+
+    pub fn from_slice(xs: &[f64]) -> Self {
+        let mut m = Self::new();
+        m.extend(xs);
+        m
+    }
+
+    /// Exact pairwise merge (Pébay eq. 2.1/3.1): merging chunk
+    /// accumulators equals accumulating the concatenation.
+    pub fn merge(&self, other: &Moments) -> Moments {
+        if self.n == 0 {
+            return other.clone();
+        }
+        if other.n == 0 {
+            return self.clone();
+        }
+        let (na, nb) = (self.n as f64, other.n as f64);
+        let n = na + nb;
+        let delta = other.mean - self.mean;
+        let delta2 = delta * delta;
+        let delta3 = delta2 * delta;
+        let delta4 = delta2 * delta2;
+
+        let mean = self.mean + delta * nb / n;
+        let m2 = self.m2 + other.m2 + delta2 * na * nb / n;
+        let m3 = self.m3
+            + other.m3
+            + delta3 * na * nb * (na - nb) / (n * n)
+            + 3.0 * delta * (na * other.m2 - nb * self.m2) / n;
+        let m4 = self.m4
+            + other.m4
+            + delta4 * na * nb * (na * na - na * nb + nb * nb) / (n * n * n)
+            + 6.0 * delta2 * (na * na * other.m2 + nb * nb * self.m2) / (n * n)
+            + 4.0 * delta * (na * other.m3 - nb * self.m3) / n;
+
+        Moments {
+            n: self.n + other.n,
+            mean,
+            m2,
+            m3,
+            m4,
+            min: self.min.min(other.min),
+            max: self.max.max(other.max),
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance (the paper reports population moments over
+    /// the 32 000-sample error vector).
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Unbiased sample variance.
+    pub fn sample_variance(&self) -> f64 {
+        if self.n < 2 {
+            f64::NAN
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Skewness `m3 / m2^(3/2)` (population definition).
+    pub fn skewness(&self) -> f64 {
+        let n = self.n as f64;
+        if self.n == 0 || self.m2 <= 0.0 {
+            return f64::NAN;
+        }
+        (self.m3 / n) / (self.m2 / n).powf(1.5)
+    }
+
+    /// Excess kurtosis `m4 / m2^2 - 3` (the paper's Table II reports
+    /// excess values: a normal fit shows ~0).
+    pub fn excess_kurtosis(&self) -> f64 {
+        let n = self.n as f64;
+        if self.n == 0 || self.m2 <= 0.0 {
+            return f64::NAN;
+        }
+        n * self.m4 / (self.m2 * self.m2) - 3.0
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Snapshot of all derived statistics.
+    pub fn summary(&self) -> Summary {
+        Summary {
+            count: self.n,
+            mean: self.mean(),
+            variance: self.variance(),
+            std_dev: self.std_dev(),
+            skewness: self.skewness(),
+            excess_kurtosis: self.excess_kurtosis(),
+            min: self.min,
+            max: self.max,
+        }
+    }
+}
+
+/// Plain-data snapshot of a [`Moments`] accumulator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub count: u64,
+    pub mean: f64,
+    pub variance: f64,
+    pub std_dev: f64,
+    pub skewness: f64,
+    pub excess_kurtosis: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn naive(xs: &[f64]) -> (f64, f64, f64, f64) {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let c = |p: i32| xs.iter().map(|x| (x - mean).powi(p)).sum::<f64>() / n;
+        let (v, m3, m4) = (c(2), c(3), c(4));
+        (mean, v, m3 / v.powf(1.5), m4 / (v * v) - 3.0)
+    }
+
+    #[test]
+    fn matches_naive_two_pass() {
+        let mut r = Xoshiro256::seed_from_u64(1);
+        let xs: Vec<f64> = (0..10_000).map(|_| r.normal_ms(2.0, 3.0)).collect();
+        let m = Moments::from_slice(&xs);
+        let (mean, var, skew, kurt) = naive(&xs);
+        assert!((m.mean() - mean).abs() < 1e-10);
+        assert!((m.variance() - var).abs() < 1e-9);
+        assert!((m.skewness() - skew).abs() < 1e-9);
+        assert!((m.excess_kurtosis() - kurt).abs() < 1e-8);
+    }
+
+    #[test]
+    fn normal_sample_moments() {
+        let mut r = Xoshiro256::seed_from_u64(2);
+        let mut m = Moments::new();
+        for _ in 0..500_000 {
+            m.push(r.normal_ms(-1.0, 2.0));
+        }
+        assert!((m.mean() + 1.0).abs() < 0.01);
+        assert!((m.variance() - 4.0).abs() < 0.05);
+        assert!(m.skewness().abs() < 0.02);
+        assert!(m.excess_kurtosis().abs() < 0.05);
+    }
+
+    #[test]
+    fn merge_equals_concatenation() {
+        let mut r = Xoshiro256::seed_from_u64(3);
+        let xs: Vec<f64> = (0..5000).map(|_| r.uniform_in(-2.0, 5.0)).collect();
+        let whole = Moments::from_slice(&xs);
+        // Merge uneven chunks.
+        let mut merged = Moments::new();
+        for chunk in xs.chunks(37) {
+            merged = merged.merge(&Moments::from_slice(chunk));
+        }
+        assert_eq!(whole.count(), merged.count());
+        assert!((whole.mean() - merged.mean()).abs() < 1e-12);
+        assert!((whole.variance() - merged.variance()).abs() < 1e-12);
+        assert!((whole.skewness() - merged.skewness()).abs() < 1e-9);
+        assert!((whole.excess_kurtosis() - merged.excess_kurtosis()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let m = Moments::from_slice(&[1.0, 2.0, 3.0]);
+        let e = Moments::new();
+        let a = m.merge(&e);
+        let b = e.merge(&m);
+        assert_eq!(a.count(), 3);
+        assert_eq!(b.count(), 3);
+        assert!((a.mean() - 2.0).abs() < 1e-15);
+        assert!((b.mean() - 2.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn min_max_tracked() {
+        let m = Moments::from_slice(&[3.0, -7.0, 11.0]);
+        assert_eq!(m.min(), -7.0);
+        assert_eq!(m.max(), 11.0);
+    }
+
+    #[test]
+    fn skewed_data_has_positive_skew() {
+        let mut r = Xoshiro256::seed_from_u64(4);
+        let mut m = Moments::new();
+        for _ in 0..100_000 {
+            let z = r.normal();
+            m.push((0.8f64 * z).exp()); // lognormal: strongly right-skewed
+        }
+        assert!(m.skewness() > 1.0);
+        assert!(m.excess_kurtosis() > 3.0);
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        let empty = Moments::new();
+        assert!(empty.variance().is_nan());
+        let one = Moments::from_slice(&[5.0]);
+        assert_eq!(one.mean(), 5.0);
+        assert_eq!(one.variance(), 0.0);
+        assert!(one.sample_variance().is_nan());
+        let constant = Moments::from_slice(&[2.0; 100]);
+        assert!(constant.skewness().is_nan());
+    }
+
+    #[test]
+    fn summary_consistent() {
+        let m = Moments::from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        let s = m.summary();
+        assert_eq!(s.count, 4);
+        assert_eq!(s.mean, m.mean());
+        assert_eq!(s.variance, m.variance());
+    }
+}

@@ -1,0 +1,267 @@
+//! Derivative-free optimizers for the maximum-likelihood fits:
+//! Nelder–Mead simplex (multivariate) and golden-section (univariate).
+//! Standard formulations (Numerical Recipes / Gao–Han adaptive
+//! coefficients are unnecessary at dims ≤ 6).
+
+/// Result of a minimization.
+#[derive(Debug, Clone)]
+pub struct OptimResult {
+    pub x: Vec<f64>,
+    pub fx: f64,
+    pub iterations: usize,
+    pub converged: bool,
+}
+
+/// Nelder–Mead options.
+#[derive(Debug, Clone)]
+pub struct NelderMeadOpts {
+    pub max_iter: usize,
+    /// Convergence: simplex f-spread below this.
+    pub ftol: f64,
+    /// Initial simplex step per coordinate (relative where x != 0).
+    pub step: f64,
+}
+
+impl Default for NelderMeadOpts {
+    fn default() -> Self {
+        Self {
+            max_iter: 2000,
+            ftol: 1e-10,
+            step: 0.1,
+        }
+    }
+}
+
+/// Minimize `f` from `x0` with the Nelder–Mead simplex.
+///
+/// Non-finite objective values are treated as +inf, so fitters can
+/// simply return `f64::INFINITY` outside their parameter domain.
+pub fn nelder_mead<F: FnMut(&[f64]) -> f64>(
+    mut f: F,
+    x0: &[f64],
+    opts: &NelderMeadOpts,
+) -> OptimResult {
+    let n = x0.len();
+    assert!(n >= 1);
+    let alpha = 1.0; // reflection
+    let gamma = 2.0; // expansion
+    let rho = 0.5; // contraction
+    let sigma = 0.5; // shrink
+
+    let mut eval = |x: &[f64]| -> f64 {
+        let v = f(x);
+        if v.is_finite() {
+            v
+        } else {
+            f64::INFINITY
+        }
+    };
+
+    // Initial simplex: x0 plus a step along each axis.
+    let mut simplex: Vec<Vec<f64>> = Vec::with_capacity(n + 1);
+    simplex.push(x0.to_vec());
+    for i in 0..n {
+        let mut p = x0.to_vec();
+        let h = if p[i].abs() > 1e-12 {
+            opts.step * p[i].abs()
+        } else {
+            opts.step
+        };
+        p[i] += h;
+        simplex.push(p);
+    }
+    let mut fvals: Vec<f64> = simplex.iter().map(|p| eval(p)).collect();
+
+    let mut iterations = 0;
+    let mut converged = false;
+    while iterations < opts.max_iter {
+        iterations += 1;
+        // Order the simplex.
+        let mut idx: Vec<usize> = (0..=n).collect();
+        idx.sort_by(|&a, &b| fvals[a].partial_cmp(&fvals[b]).unwrap());
+        let best = idx[0];
+        let worst = idx[n];
+        let second_worst = idx[n - 1];
+
+        let spread = (fvals[worst] - fvals[best]).abs();
+        if spread < opts.ftol * (1.0 + fvals[best].abs()) {
+            converged = true;
+            break;
+        }
+
+        // Centroid of all but worst.
+        let mut centroid = vec![0.0; n];
+        for &i in idx.iter().take(n) {
+            for (c, v) in centroid.iter_mut().zip(&simplex[i]) {
+                *c += v / n as f64;
+            }
+        }
+
+        let lerp = |a: &[f64], b: &[f64], t: f64| -> Vec<f64> {
+            a.iter().zip(b).map(|(x, y)| x + t * (y - x)).collect()
+        };
+
+        // Reflect.
+        let xr = lerp(&centroid, &simplex[worst], -alpha);
+        let fr = eval(&xr);
+        if fr < fvals[best] {
+            // Expand.
+            let xe = lerp(&centroid, &simplex[worst], -gamma);
+            let fe = eval(&xe);
+            if fe < fr {
+                simplex[worst] = xe;
+                fvals[worst] = fe;
+            } else {
+                simplex[worst] = xr;
+                fvals[worst] = fr;
+            }
+        } else if fr < fvals[second_worst] {
+            simplex[worst] = xr;
+            fvals[worst] = fr;
+        } else {
+            // Contract.
+            let xc = lerp(&centroid, &simplex[worst], rho);
+            let fc = eval(&xc);
+            if fc < fvals[worst] {
+                simplex[worst] = xc;
+                fvals[worst] = fc;
+            } else {
+                // Shrink toward best.
+                let best_point = simplex[best].clone();
+                for i in 0..=n {
+                    if i != best {
+                        simplex[i] = lerp(&best_point, &simplex[i], sigma);
+                        fvals[i] = eval(&simplex[i]);
+                    }
+                }
+            }
+        }
+    }
+
+    let (mut bi, mut bf) = (0, fvals[0]);
+    for (i, &v) in fvals.iter().enumerate() {
+        if v < bf {
+            bi = i;
+            bf = v;
+        }
+    }
+    OptimResult {
+        x: simplex[bi].clone(),
+        fx: bf,
+        iterations,
+        converged,
+    }
+}
+
+/// Golden-section minimization of a unimodal univariate function on
+/// `[a, b]`.
+pub fn golden_section<F: FnMut(f64) -> f64>(
+    mut f: F,
+    mut a: f64,
+    mut b: f64,
+    tol: f64,
+    max_iter: usize,
+) -> (f64, f64) {
+    const INV_PHI: f64 = 0.618_033_988_749_894_9;
+    let mut c = b - INV_PHI * (b - a);
+    let mut d = a + INV_PHI * (b - a);
+    let mut fc = f(c);
+    let mut fd = f(d);
+    for _ in 0..max_iter {
+        if (b - a).abs() < tol {
+            break;
+        }
+        if fc < fd {
+            b = d;
+            d = c;
+            fd = fc;
+            c = b - INV_PHI * (b - a);
+            fc = f(c);
+        } else {
+            a = c;
+            c = d;
+            fc = fd;
+            d = a + INV_PHI * (b - a);
+            fd = f(d);
+        }
+    }
+    let x = 0.5 * (a + b);
+    (x, f(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_bowl() {
+        let r = nelder_mead(
+            |x| (x[0] - 3.0).powi(2) + (x[1] + 1.0).powi(2),
+            &[0.0, 0.0],
+            &NelderMeadOpts::default(),
+        );
+        assert!(r.converged);
+        assert!((r.x[0] - 3.0).abs() < 1e-4);
+        assert!((r.x[1] + 1.0).abs() < 1e-4);
+        assert!(r.fx < 1e-8);
+    }
+
+    #[test]
+    fn rosenbrock_2d() {
+        let r = nelder_mead(
+            |x| (1.0 - x[0]).powi(2) + 100.0 * (x[1] - x[0] * x[0]).powi(2),
+            &[-1.2, 1.0],
+            &NelderMeadOpts {
+                max_iter: 5000,
+                ..Default::default()
+            },
+        );
+        assert!((r.x[0] - 1.0).abs() < 1e-3, "x={:?}", r.x);
+        assert!((r.x[1] - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn handles_infinite_regions() {
+        // Domain-restricted objective: f = x^2 for x > 0 else inf.
+        let r = nelder_mead(
+            |x| {
+                if x[0] <= 0.0 {
+                    f64::INFINITY
+                } else {
+                    (x[0].ln()).powi(2)
+                }
+            },
+            &[5.0],
+            &NelderMeadOpts::default(),
+        );
+        assert!((r.x[0] - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn four_dimensional() {
+        let r = nelder_mead(
+            |x| x.iter().enumerate().map(|(i, v)| (v - i as f64).powi(2)).sum(),
+            &[1.0, 1.0, 1.0, 1.0],
+            &NelderMeadOpts {
+                max_iter: 4000,
+                ..Default::default()
+            },
+        );
+        for (i, v) in r.x.iter().enumerate() {
+            assert!((v - i as f64).abs() < 1e-3, "x={:?}", r.x);
+        }
+    }
+
+    #[test]
+    fn golden_section_minimum() {
+        let (x, fx) = golden_section(|x| (x - 2.5).powi(2) + 1.0, 0.0, 10.0, 1e-9, 200);
+        assert!((x - 2.5).abs() < 1e-6);
+        assert!((fx - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn golden_section_boundary_minimum() {
+        let (x, _) = golden_section(|x| x, 1.0, 3.0, 1e-9, 200);
+        assert!((x - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,174 @@
+//! Quantiles and box-plot summaries (the insets of Fig. 5).
+
+/// Linear-interpolation quantile of **sorted** data (type-7, the
+/// numpy/R default).
+pub fn quantiles_of_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "quantile of empty data");
+    assert!((0.0..=1.0).contains(&q), "q must be in [0,1], got {q}");
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let h = q * (n - 1) as f64;
+    let lo = h.floor() as usize;
+    let hi = h.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = h - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Tukey box-plot summary: quartiles, 1.5·IQR whiskers clamped to the
+/// data, and outlier census — what the Fig. 5 insets draw.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BoxPlot {
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub iqr: f64,
+    pub whisker_lo: f64,
+    pub whisker_hi: f64,
+    pub outliers: usize,
+    /// Full span of outliers beyond the whiskers (0 when none) — the
+    /// paper's "span of outliers" observation on AlOx/HfO2.
+    pub outlier_span: f64,
+    pub n: usize,
+}
+
+impl BoxPlot {
+    /// Compute from unsorted data (sorts a copy).
+    pub fn from_data(data: &[f64]) -> BoxPlot {
+        let mut sorted = data.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Self::from_sorted(&sorted)
+    }
+
+    /// Compute from already-sorted data.
+    pub fn from_sorted(sorted: &[f64]) -> BoxPlot {
+        assert!(!sorted.is_empty());
+        let q1 = quantiles_of_sorted(sorted, 0.25);
+        let median = quantiles_of_sorted(sorted, 0.5);
+        let q3 = quantiles_of_sorted(sorted, 0.75);
+        let iqr = q3 - q1;
+        let fence_lo = q1 - 1.5 * iqr;
+        let fence_hi = q3 + 1.5 * iqr;
+        // Whiskers: most extreme data inside the fences.
+        let whisker_lo = sorted
+            .iter()
+            .copied()
+            .find(|&x| x >= fence_lo)
+            .unwrap_or(sorted[0]);
+        let whisker_hi = sorted
+            .iter()
+            .rev()
+            .copied()
+            .find(|&x| x <= fence_hi)
+            .unwrap_or(sorted[sorted.len() - 1]);
+        let below = sorted.iter().take_while(|&&x| x < fence_lo).count();
+        let above = sorted.iter().rev().take_while(|&&x| x > fence_hi).count();
+        let outliers = below + above;
+        let outlier_span = if outliers > 0 {
+            let lo = if below > 0 { sorted[0] } else { whisker_lo };
+            let hi = if above > 0 {
+                sorted[sorted.len() - 1]
+            } else {
+                whisker_hi
+            };
+            hi - lo
+        } else {
+            0.0
+        };
+        BoxPlot {
+            q1,
+            median,
+            q3,
+            iqr,
+            whisker_lo,
+            whisker_hi,
+            outliers,
+            outlier_span,
+            n: sorted.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn quantile_reference() {
+        let d = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantiles_of_sorted(&d, 0.0), 1.0);
+        assert_eq!(quantiles_of_sorted(&d, 1.0), 4.0);
+        assert_eq!(quantiles_of_sorted(&d, 0.5), 2.5);
+        // numpy: np.quantile([1,2,3,4], 0.25) == 1.75
+        assert!((quantiles_of_sorted(&d, 0.25) - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_single_element() {
+        assert_eq!(quantiles_of_sorted(&[7.0], 0.3), 7.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn quantile_empty_panics() {
+        quantiles_of_sorted(&[], 0.5);
+    }
+
+    #[test]
+    fn boxplot_no_outliers() {
+        let d: Vec<f64> = (1..=9).map(|i| i as f64).collect();
+        let b = BoxPlot::from_data(&d);
+        assert_eq!(b.median, 5.0);
+        assert_eq!(b.q1, 3.0);
+        assert_eq!(b.q3, 7.0);
+        assert_eq!(b.outliers, 0);
+        assert_eq!(b.outlier_span, 0.0);
+        assert_eq!(b.whisker_lo, 1.0);
+        assert_eq!(b.whisker_hi, 9.0);
+    }
+
+    #[test]
+    fn boxplot_detects_outliers() {
+        let mut d: Vec<f64> = (1..=9).map(|i| i as f64).collect();
+        d.push(100.0);
+        d.push(-50.0);
+        let b = BoxPlot::from_data(&d);
+        assert_eq!(b.outliers, 2);
+        assert!(b.outlier_span > 100.0);
+        assert!(b.whisker_hi <= 9.0 + 1.5 * b.iqr + 1e-12);
+    }
+
+    #[test]
+    fn boxplot_normal_quartiles() {
+        let mut r = Xoshiro256::seed_from_u64(5);
+        let d: Vec<f64> = (0..200_000).map(|_| r.normal()).collect();
+        let b = BoxPlot::from_data(&d);
+        assert!((b.median).abs() < 0.01);
+        assert!((b.q1 + 0.6745).abs() < 0.01);
+        assert!((b.q3 - 0.6745).abs() < 0.01);
+        // Normal data: ~0.7% of samples are Tukey outliers.
+        let frac = b.outliers as f64 / b.n as f64;
+        assert!((frac - 0.007).abs() < 0.002, "frac={frac}");
+    }
+
+    #[test]
+    fn heavier_tails_widen_outlier_span() {
+        let mut r = Xoshiro256::seed_from_u64(6);
+        let normal: Vec<f64> = (0..50_000).map(|_| r.normal()).collect();
+        let heavy: Vec<f64> = (0..50_000)
+            .map(|_| {
+                let z = r.normal();
+                (0.9f64 * z).sinh() // heavy-tailed transform
+            })
+            .collect();
+        let bn = BoxPlot::from_data(&normal);
+        let bh = BoxPlot::from_data(&heavy);
+        assert!(bh.outlier_span > bn.outlier_span);
+    }
+}

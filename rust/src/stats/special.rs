@@ -1,0 +1,221 @@
+//! Special functions needed by the distribution fits: erf/erfc, the
+//! standard normal pdf/cdf/quantile, and ln Γ.  All implemented from
+//! the standard references (Abramowitz & Stegun, W. Cody, Acklam) —
+//! no `libm`/`statrs` in the offline registry.
+
+use std::f64::consts::{PI, SQRT_2};
+
+/// ln(2π)/2, the normal log-density constant.
+pub const HALF_LN_2PI: f64 = 0.918_938_533_204_672_7;
+
+/// Error function, |err| < 1.2e-7 (A&S 7.1.26 refined; adequate for
+/// likelihoods, and monotone).
+pub fn erf(x: f64) -> f64 {
+    // Use the complement for large |x| to avoid cancellation.
+    1.0 - erfc(x)
+}
+
+/// Complementary error function (Cody-style rational approximation via
+/// the numerical recipes erfc, |rel err| < 1.2e-7).
+pub fn erfc(x: f64) -> f64 {
+    let z = x.abs();
+    let t = 1.0 / (1.0 + 0.5 * z);
+    let ans = t
+        * (-z * z - 1.26551223
+            + t * (1.00002368
+                + t * (0.37409196
+                    + t * (0.09678418
+                        + t * (-0.18628806
+                            + t * (0.27886807
+                                + t * (-1.13520398
+                                    + t * (1.48851587
+                                        + t * (-0.82215223 + t * 0.17087277)))))))))
+        .exp();
+    if x >= 0.0 {
+        ans
+    } else {
+        2.0 - ans
+    }
+}
+
+/// Standard normal density.
+#[inline]
+pub fn norm_pdf(x: f64) -> f64 {
+    (-0.5 * x * x).exp() / (2.0 * PI).sqrt()
+}
+
+/// Standard normal log-density.
+#[inline]
+pub fn norm_logpdf(x: f64) -> f64 {
+    -0.5 * x * x - HALF_LN_2PI
+}
+
+/// Standard normal CDF.
+#[inline]
+pub fn norm_cdf(x: f64) -> f64 {
+    0.5 * erfc(-x / SQRT_2)
+}
+
+/// Standard normal quantile (inverse CDF), Acklam's algorithm with one
+/// Halley refinement step; |rel err| < 1e-9 over (0, 1).
+pub fn norm_quantile(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "quantile needs p in (0,1), got {p}");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+
+    let x = if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    };
+
+    // One Halley step against the accurate CDF.
+    let e = norm_cdf(x) - p;
+    let u = e * (2.0 * PI).sqrt() * (x * x / 2.0).exp();
+    x - u / (1.0 + x * u / 2.0)
+}
+
+/// ln Γ(x) for x > 0 (Lanczos, g=7, n=9; |rel err| < 1e-13).
+pub fn ln_gamma(x: f64) -> f64 {
+    assert!(x > 0.0, "ln_gamma needs x > 0, got {x}");
+    const G: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_571_6e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // Reflection.
+        return (PI / (PI * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = G[0];
+    let t = x + 7.5;
+    for (i, &g) in G.iter().enumerate().skip(1) {
+        a += g / (x + i as f64);
+    }
+    0.5 * (2.0 * PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_reference_values() {
+        // Reference values from A&S tables.
+        let cases = [
+            (0.0, 0.0),
+            (0.5, 0.5204998778),
+            (1.0, 0.8427007929),
+            (2.0, 0.9953222650),
+            (-1.0, -0.8427007929),
+        ];
+        for (x, want) in cases {
+            assert!((erf(x) - want).abs() < 2e-7, "erf({x})");
+        }
+    }
+
+    #[test]
+    fn erfc_complements_erf() {
+        for x in [-3.0, -0.7, 0.0, 0.9, 2.5] {
+            assert!((erf(x) + erfc(x) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cdf_reference_values() {
+        // erfc carries ~1.2e-7 relative error; allow 5e-7 absolute.
+        assert!((norm_cdf(0.0) - 0.5).abs() < 5e-7);
+        assert!((norm_cdf(1.959963985) - 0.975).abs() < 5e-7);
+        assert!((norm_cdf(-1.644853627) - 0.05).abs() < 5e-7);
+    }
+
+    #[test]
+    fn quantile_inverts_cdf() {
+        for p in [1e-6, 0.001, 0.025, 0.2, 0.5, 0.8, 0.975, 0.999, 1.0 - 1e-6] {
+            let x = norm_quantile(p);
+            assert!((norm_cdf(x) - p).abs() < 1e-8, "p={p} x={x}");
+        }
+    }
+
+    #[test]
+    fn quantile_symmetry() {
+        for p in [0.01, 0.1, 0.3] {
+            assert!((norm_quantile(p) + norm_quantile(1.0 - p)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn quantile_domain() {
+        norm_quantile(0.0);
+    }
+
+    #[test]
+    fn pdf_properties() {
+        assert!((norm_pdf(0.0) - 0.3989422804).abs() < 1e-9);
+        assert!((norm_logpdf(1.3) - norm_pdf(1.3).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ln_gamma_reference_values() {
+        // Γ(1)=1, Γ(2)=1, Γ(5)=24, Γ(0.5)=√π.
+        assert!(ln_gamma(1.0).abs() < 1e-12);
+        assert!(ln_gamma(2.0).abs() < 1e-12);
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-11);
+        assert!((ln_gamma(0.5) - PI.sqrt().ln()).abs() < 1e-11);
+    }
+
+    #[test]
+    fn ln_gamma_recurrence() {
+        // Γ(x+1) = x Γ(x).
+        for x in [0.3, 1.7, 4.2, 9.9] {
+            let lhs = ln_gamma(x + 1.0);
+            let rhs = x.ln() + ln_gamma(x);
+            assert!((lhs - rhs).abs() < 1e-10, "x={x}");
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! In-repo property-testing mini-framework.
+//!
+//! The offline registry has no `proptest`, so this provides the same
+//! role: generate many random cases from strategies, run an invariant,
+//! and on failure shrink toward a minimal counterexample before
+//! panicking with a reproducible seed.  Deliberately small — just what
+//! the invariant suites in `rust/tests/proptests.rs` need.
+
+use crate::util::rng::Xoshiro256;
+
+/// A value generator with an optional shrink order.
+pub trait Strategy {
+    type Value: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut Xoshiro256) -> Self::Value;
+    /// Candidate simpler values, most aggressive first.
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Uniform f64 in a range, shrinking toward the midpoint/zero.
+#[derive(Debug, Clone, Copy)]
+pub struct FloatIn {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Strategy for FloatIn {
+    type Value = f64;
+
+    fn generate(&self, rng: &mut Xoshiro256) -> f64 {
+        rng.uniform_in(self.lo, self.hi)
+    }
+
+    fn shrink(&self, value: &f64) -> Vec<f64> {
+        let target = if self.lo <= 0.0 && self.hi >= 0.0 { 0.0 } else { self.lo };
+        let mut out = Vec::new();
+        let mut v = *value;
+        for _ in 0..8 {
+            v = (v + target) / 2.0;
+            if (v - *value).abs() < 1e-12 {
+                break;
+            }
+            out.push(v);
+        }
+        out
+    }
+}
+
+/// Uniform usize in `[lo, hi]`, shrinking toward `lo`.
+#[derive(Debug, Clone, Copy)]
+pub struct UsizeIn {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Strategy for UsizeIn {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut Xoshiro256) -> usize {
+        self.lo + rng.below((self.hi - self.lo + 1) as u64) as usize
+    }
+
+    fn shrink(&self, value: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut v = *value;
+        while v > self.lo {
+            v = self.lo + (v - self.lo) / 2;
+            out.push(v);
+            if v == self.lo {
+                break;
+            }
+        }
+        out
+    }
+}
+
+/// Pick one of a fixed set (no shrinking).
+#[derive(Debug, Clone)]
+pub struct OneOf<T: Clone + std::fmt::Debug>(pub Vec<T>);
+
+impl<T: Clone + std::fmt::Debug> Strategy for OneOf<T> {
+    type Value = T;
+
+    fn generate(&self, rng: &mut Xoshiro256) -> T {
+        self.0[rng.below(self.0.len() as u64) as usize].clone()
+    }
+}
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 64,
+            seed: 0xBEEF,
+            max_shrink_steps: 200,
+        }
+    }
+}
+
+/// Check `prop` over `cfg.cases` generated values; panic with the
+/// (shrunk) counterexample and seed on failure.
+pub fn check<S, P>(cfg: Config, strategy: &S, prop: P)
+where
+    S: Strategy,
+    P: Fn(&S::Value) -> bool,
+{
+    let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
+    for case in 0..cfg.cases {
+        let value = strategy.generate(&mut rng);
+        if prop(&value) {
+            continue;
+        }
+        // Shrink.
+        let mut worst = value.clone();
+        let mut steps = 0;
+        'outer: while steps < cfg.max_shrink_steps {
+            for cand in strategy.shrink(&worst) {
+                steps += 1;
+                if !prop(&cand) {
+                    worst = cand;
+                    continue 'outer;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property failed at case {case} (seed {:#x}): \
+             counterexample {worst:?} (original {value:?})",
+            cfg.seed
+        );
+    }
+}
+
+/// Two-strategy product helper.
+pub fn check2<A, B, P>(cfg: Config, sa: &A, sb: &B, prop: P)
+where
+    A: Strategy,
+    B: Strategy,
+    P: Fn(&A::Value, &B::Value) -> bool,
+{
+    let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
+    for case in 0..cfg.cases {
+        let a = sa.generate(&mut rng);
+        let b = sb.generate(&mut rng);
+        assert!(
+            prop(&a, &b),
+            "property failed at case {case} (seed {:#x}): ({a:?}, {b:?})",
+            cfg.seed
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(Config::default(), &FloatIn { lo: -1.0, hi: 1.0 }, |v| {
+            v.abs() <= 1.0
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_counterexample() {
+        check(Config::default(), &FloatIn { lo: 0.0, hi: 10.0 }, |v| *v < 5.0);
+    }
+
+    #[test]
+    fn shrinking_moves_toward_zero() {
+        let s = FloatIn { lo: -4.0, hi: 4.0 };
+        let shrunk = s.shrink(&4.0);
+        assert!(!shrunk.is_empty());
+        assert!(shrunk[0].abs() < 4.0);
+    }
+
+    #[test]
+    fn usize_strategy_in_bounds() {
+        let s = UsizeIn { lo: 2, hi: 9 };
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for _ in 0..100 {
+            let v = s.generate(&mut rng);
+            assert!((2..=9).contains(&v));
+        }
+        assert!(s.shrink(&9).contains(&2));
+    }
+
+    #[test]
+    fn one_of_picks_members() {
+        let s = OneOf(vec!["a", "b"]);
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        for _ in 0..20 {
+            let v = s.generate(&mut rng);
+            assert!(v == "a" || v == "b");
+        }
+    }
+
+    #[test]
+    fn check2_runs() {
+        check2(
+            Config::default(),
+            &UsizeIn { lo: 1, hi: 8 },
+            &FloatIn { lo: 0.1, hi: 2.0 },
+            |n, x| (*n as f64) * x > 0.0,
+        );
+    }
+}

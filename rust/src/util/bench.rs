@@ -1,0 +1,132 @@
+//! Micro-benchmark harness (criterion is not in the offline registry;
+//! this provides the same warmup/sample/report role for the
+//! `harness = false` bench targets in `rust/benches/`).
+//!
+//! Output format is one line per benchmark:
+//! `bench <name> ... median 12.345ms  mean 12.5ms  min 12.1ms  (n=10)`
+//! plus an optional throughput line when `items_per_iter` is set.
+
+use std::time::Instant;
+
+/// One benchmark's options.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOpts {
+    /// Measured samples.
+    pub samples: usize,
+    /// Warmup iterations (not measured).
+    pub warmup: usize,
+    /// If set, report items/s using this per-iteration item count.
+    pub items_per_iter: Option<f64>,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self { samples: 10, warmup: 2, items_per_iter: None }
+    }
+}
+
+/// Measured statistics in seconds.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub median: f64,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn items_per_sec(&self, items: f64) -> f64 {
+        items / self.median
+    }
+}
+
+fn pretty(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3}ms", secs * 1e3)
+    } else {
+        format!("{secs:.3}s")
+    }
+}
+
+/// Run one benchmark and print a report line.  Returns the stats so
+/// callers (EXPERIMENTS.md generation) can post-process.
+pub fn bench<F: FnMut()>(name: &str, opts: BenchOpts, mut f: F) -> BenchResult {
+    for _ in 0..opts.warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(opts.samples);
+    for _ in 0..opts.samples.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let result = BenchResult {
+        name: name.to_string(),
+        median,
+        mean,
+        min: times[0],
+        max: *times.last().unwrap(),
+        samples: times.len(),
+    };
+    println!(
+        "bench {name:<44} median {:>10}  mean {:>10}  min {:>10}  (n={})",
+        pretty(median),
+        pretty(mean),
+        pretty(result.min),
+        result.samples
+    );
+    if let Some(items) = opts.items_per_iter {
+        println!(
+            "      {:<44} throughput {:.3e} items/s",
+            "", result.items_per_sec(items)
+        );
+    }
+    result
+}
+
+/// Keep a value alive and opaque to the optimizer (std::hint wrapper).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench(
+            "noop-spin",
+            BenchOpts { samples: 5, warmup: 1, items_per_iter: Some(100.0) },
+            || {
+                let mut s = 0u64;
+                for i in 0..1000 {
+                    s = s.wrapping_add(black_box(i));
+                }
+                black_box(s);
+            },
+        );
+        assert_eq!(r.samples, 5);
+        assert!(r.min <= r.median && r.median <= r.max);
+        assert!(r.mean > 0.0);
+        assert!(r.items_per_sec(100.0) > 0.0);
+    }
+
+    #[test]
+    fn pretty_units() {
+        assert!(pretty(5e-9).ends_with("ns"));
+        assert!(pretty(5e-5).ends_with("us"));
+        assert!(pretty(5e-2).ends_with("ms"));
+        assert!(pretty(5.0).ends_with('s'));
+    }
+}

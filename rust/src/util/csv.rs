@@ -1,0 +1,137 @@
+//! CSV emission for figure series (one file per figure, consumed by
+//! any plotting frontend).  Quoting follows RFC 4180 for the subset we
+//! emit: fields containing comma/quote/newline get quoted, quotes are
+//! doubled.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::error::Result;
+
+/// An in-memory CSV table with a fixed header.
+#[derive(Debug, Clone)]
+pub struct CsvTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(header: I) -> Self {
+        Self {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn columns(&self) -> usize {
+        self.header.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Push a row of stringifiable cells; panics on arity mismatch
+    /// (programmer error, not data error).
+    pub fn push<S: ToString, I: IntoIterator<Item = S>>(&mut self, row: I) {
+        let row: Vec<String> = row.into_iter().map(|c| c.to_string()).collect();
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "csv row arity {} != header arity {}",
+            row.len(),
+            self.header.len()
+        );
+        self.rows.push(row);
+    }
+
+    /// Push a row of f64 cells formatted with full precision.
+    pub fn push_f64<I: IntoIterator<Item = f64>>(&mut self, row: I) {
+        self.push(row.into_iter().map(|v| format!("{v}")));
+    }
+
+    /// Serialize to CSV text.
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        write_row(&mut out, &self.header);
+        for row in &self.rows {
+            write_row(&mut out, row);
+        }
+        out
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn write_file<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())?;
+        Ok(())
+    }
+}
+
+fn write_row(out: &mut String, cells: &[String]) {
+    for (i, cell) in cells.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if cell.contains([',', '"', '\n']) {
+            out.push('"');
+            out.push_str(&cell.replace('"', "\"\""));
+            out.push('"');
+        } else {
+            out.push_str(cell);
+        }
+    }
+    out.push('\n');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_emission() {
+        let mut t = CsvTable::new(["a", "b"]);
+        t.push(["1", "2"]);
+        t.push_f64([0.5, -1.25]);
+        assert_eq!(t.to_string(), "a,b\n1,2\n0.5,-1.25\n");
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.columns(), 2);
+    }
+
+    #[test]
+    fn quoting() {
+        let mut t = CsvTable::new(["x"]);
+        t.push(["has,comma"]);
+        t.push(["has\"quote"]);
+        t.push(["has\nnewline"]);
+        assert_eq!(
+            t.to_string(),
+            "x\n\"has,comma\"\n\"has\"\"quote\"\n\"has\nnewline\"\n"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_mismatch_panics() {
+        let mut t = CsvTable::new(["a", "b"]);
+        t.push(["only-one"]);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("meliso_csv_test");
+        let path = dir.join("sub").join("t.csv");
+        let mut t = CsvTable::new(["a"]);
+        t.push(["1"]);
+        t.write_file(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "a\n1\n");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

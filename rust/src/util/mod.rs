@@ -1,0 +1,12 @@
+//! General-purpose substrates the offline environment forces us to own:
+//! PRNG (`rand` is not vendored), JSON/TOML/CSV codecs (`serde` facade
+//! is not vendored), a scoped worker pool (`tokio` is not vendored),
+//! and progress/timing helpers.
+
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod pool;
+pub mod progress;
+pub mod rng;
+pub mod toml;

@@ -1,0 +1,147 @@
+//! Scoped worker pool for compute-bound benchmark chunks.
+//!
+//! `tokio` is not in the offline registry, and the coordinator's
+//! workload is pure CPU batches, so the honest substrate is a scoped
+//! thread pool with an atomic work-stealing index: submit `n` chunk
+//! jobs, run them on `k` threads, collect results in submission order.
+//! Panics in workers are propagated to the caller.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Pool sizing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Parallelism {
+    /// One worker per available CPU (default).
+    Auto,
+    /// Exactly `n` workers (1 = sequential, still exercised through the
+    /// same code path for determinism tests).
+    Fixed(usize),
+}
+
+impl Parallelism {
+    pub fn threads(self) -> usize {
+        match self {
+            Parallelism::Auto => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            Parallelism::Fixed(n) => n.max(1),
+        }
+    }
+}
+
+impl Default for Parallelism {
+    fn default() -> Self {
+        Parallelism::Auto
+    }
+}
+
+/// Run `job(i)` for every `i in 0..n` on the pool and return results in
+/// index order.  `job` must be `Sync` (it is shared by workers); use
+/// interior chunk state, not shared mutable state.
+pub fn run_indexed<T, F>(par: Parallelism, n: usize, job: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = par.threads().min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(&job).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = job(i);
+                *results[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .expect("worker finished without storing a result")
+        })
+        .collect()
+}
+
+/// Map a slice in parallel, preserving order.
+pub fn par_map<T, U, F>(par: Parallelism, items: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    run_indexed(par, items.len(), |i| f(&items[i]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn results_in_submission_order() {
+        let out = run_indexed(Parallelism::Fixed(4), 100, |i| i * 2);
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sequential_path_matches_parallel() {
+        let seq = run_indexed(Parallelism::Fixed(1), 37, |i| i * i);
+        let par = run_indexed(Parallelism::Fixed(8), 37, |i| i * i);
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn all_jobs_run_exactly_once() {
+        let count = AtomicU64::new(0);
+        let n = 1000;
+        let _ = run_indexed(Parallelism::Auto, n, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), n as u64);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let out: Vec<usize> = run_indexed(Parallelism::Auto, 0, |i| i);
+        assert!(out.is_empty());
+        let out = run_indexed(Parallelism::Auto, 1, |i| i + 5);
+        assert_eq!(out, vec![5]);
+    }
+
+    #[test]
+    fn par_map_works() {
+        let items = vec![1.0f64, 2.0, 3.0];
+        let out = par_map(Parallelism::Fixed(2), &items, |x| x * 10.0);
+        assert_eq!(out, vec![10.0, 20.0, 30.0]);
+    }
+
+    #[test]
+    fn auto_threads_positive() {
+        assert!(Parallelism::Auto.threads() >= 1);
+        assert_eq!(Parallelism::Fixed(0).threads(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn worker_panic_propagates() {
+        let _ = run_indexed(Parallelism::Fixed(2), 4, |i| {
+            if i == 2 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+}

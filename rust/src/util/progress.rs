@@ -1,0 +1,105 @@
+//! Lightweight timing and progress reporting for long benchmark runs.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::time::Instant;
+
+/// Wall-clock stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Human-readable elapsed time, e.g. `1m23.4s` / `456ms`.
+    pub fn pretty(&self) -> String {
+        let s = self.elapsed_secs();
+        if s < 1.0 {
+            format!("{:.0}ms", s * 1e3)
+        } else if s < 60.0 {
+            format!("{s:.1}s")
+        } else {
+            format!("{}m{:.1}s", (s / 60.0) as u64, s % 60.0)
+        }
+    }
+}
+
+/// Shared progress counter for the coordinator's chunk loop.  Prints to
+/// stderr at most every `report_every` completions when enabled;
+/// completely silent otherwise (benches, tests).
+#[derive(Debug)]
+pub struct Progress {
+    label: String,
+    total: usize,
+    done: AtomicUsize,
+    enabled: AtomicBool,
+    report_every: usize,
+}
+
+impl Progress {
+    pub fn new(label: &str, total: usize) -> Self {
+        Self {
+            label: label.to_string(),
+            total,
+            done: AtomicUsize::new(0),
+            enabled: AtomicBool::new(false),
+            report_every: (total / 10).max(1),
+        }
+    }
+
+    pub fn enable(&self) {
+        self.enabled.store(true, Ordering::Relaxed);
+    }
+
+    /// Record one completed unit; returns the new completion count.
+    pub fn tick(&self) -> usize {
+        let done = self.done.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.enabled.load(Ordering::Relaxed)
+            && (done % self.report_every == 0 || done == self.total)
+        {
+            eprintln!("[{}] {}/{}", self.label, done, self.total);
+        }
+        done
+    }
+
+    pub fn done(&self) -> usize {
+        self.done.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_secs();
+        let b = sw.elapsed_secs();
+        assert!(b >= a);
+        assert!(!sw.pretty().is_empty());
+    }
+
+    #[test]
+    fn progress_counts() {
+        let p = Progress::new("t", 5);
+        for _ in 0..5 {
+            p.tick();
+        }
+        assert_eq!(p.done(), 5);
+    }
+
+    #[test]
+    fn pretty_formats() {
+        let sw = Stopwatch::start();
+        let s = sw.pretty();
+        assert!(s.ends_with("ms") || s.ends_with('s'));
+    }
+}

@@ -1,0 +1,282 @@
+//! TOML-subset parser for experiment/device configuration files.
+//!
+//! Supports the subset the config system uses: `[table]` and
+//! `[table.sub]` headers, `key = value` with string / float / integer /
+//! bool / array values, `#` comments.  No multi-line strings, no
+//! datetimes, no inline tables, no array-of-tables — config files in
+//! this repo do not need them, and failing loudly on unsupported syntax
+//! is safer than mis-parsing it.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A TOML scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Float(f64),
+    Int(i64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Numeric coercion: ints widen to f64.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed TOML document: dotted table path -> key -> value.
+/// Top-level keys live under the `""` table path.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct TomlDoc {
+    pub tables: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    /// Parse a document.
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut current = String::new();
+        doc.tables.entry(current.clone()).or_default();
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(lineno, "unterminated table header"))?
+                    .trim();
+                if name.is_empty() || name.starts_with('[') {
+                    return Err(err(lineno, "unsupported table header"));
+                }
+                current = name.to_string();
+                doc.tables.entry(current.clone()).or_default();
+            } else {
+                let eq = line
+                    .find('=')
+                    .ok_or_else(|| err(lineno, "expected key = value"))?;
+                let key = line[..eq].trim();
+                if key.is_empty() {
+                    return Err(err(lineno, "empty key"));
+                }
+                let value = parse_value(line[eq + 1..].trim(), lineno)?;
+                let table = doc.tables.entry(current.clone()).or_default();
+                if table.insert(key.to_string(), value).is_some() {
+                    return Err(err(lineno, &format!("duplicate key '{key}'")));
+                }
+            }
+        }
+        Ok(doc)
+    }
+
+    /// Look up `table.key`, with `""` for top level.
+    pub fn get(&self, table: &str, key: &str) -> Option<&TomlValue> {
+        self.tables.get(table).and_then(|t| t.get(key))
+    }
+
+    /// Table names in document order (BTreeMap: sorted).
+    pub fn table_names(&self) -> impl Iterator<Item = &str> {
+        self.tables.keys().map(|s| s.as_str())
+    }
+}
+
+fn err(lineno: usize, msg: &str) -> Error {
+    Error::Parse(format!("toml line {}: {msg}", lineno + 1))
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, lineno: usize) -> Result<TomlValue> {
+    let text = text.trim();
+    if text.is_empty() {
+        return Err(err(lineno, "missing value"));
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        if inner.contains('"') {
+            return Err(err(lineno, "embedded quote in string"));
+        }
+        return Ok(TomlValue::Str(inner.replace("\\n", "\n").replace("\\t", "\t")));
+    }
+    if text == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if text == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated array (single line only)"))?;
+        let mut items = Vec::new();
+        for piece in split_top_level(inner) {
+            let piece = piece.trim();
+            if !piece.is_empty() {
+                items.push(parse_value(piece, lineno)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    // Number: integer if it parses as i64 and has no float syntax.
+    let clean = text.replace('_', "");
+    if !clean.contains('.') && !clean.contains(['e', 'E']) {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    clean
+        .parse::<f64>()
+        .map(TomlValue::Float)
+        .map_err(|_| err(lineno, &format!("bad value '{text}'")))
+}
+
+/// Split an array body on commas not inside nested brackets/strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic_document() {
+        let doc = TomlDoc::parse(
+            r#"
+# benchmark config
+seed = 42
+name = "fig2a"
+
+[device]
+states = 97
+memory_window = 12.5
+nonideal = true
+sweep = [1.0, 2.0, 3.0]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "seed").unwrap().as_i64(), Some(42));
+        assert_eq!(doc.get("", "name").unwrap().as_str(), Some("fig2a"));
+        assert_eq!(doc.get("device", "states").unwrap().as_f64(), Some(97.0));
+        assert_eq!(
+            doc.get("device", "memory_window").unwrap().as_f64(),
+            Some(12.5)
+        );
+        assert_eq!(doc.get("device", "nonideal").unwrap().as_bool(), Some(true));
+        let arr = doc.get("device", "sweep").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn dotted_table_names() {
+        let doc = TomlDoc::parse("[a.b]\nx = 1\n[a.c]\nx = 2\n").unwrap();
+        assert_eq!(doc.get("a.b", "x").unwrap().as_i64(), Some(1));
+        assert_eq!(doc.get("a.c", "x").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let doc = TomlDoc::parse("s = \"a#b\" # trailing\n").unwrap();
+        assert_eq!(doc.get("", "s").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn mixed_and_nested_arrays() {
+        let doc = TomlDoc::parse("a = [[1, 2], [3]]\n").unwrap();
+        let outer = doc.get("", "a").unwrap().as_array().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[0].as_array().unwrap()[1].as_i64(), Some(2));
+    }
+
+    #[test]
+    fn negative_and_underscore_numbers() {
+        let doc = TomlDoc::parse("a = -3\nb = 1_000\nc = -2.5e-3\n").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_i64(), Some(-3));
+        assert_eq!(doc.get("", "b").unwrap().as_i64(), Some(1000));
+        assert!((doc.get("", "c").unwrap().as_f64().unwrap() + 0.0025).abs() < 1e-12);
+    }
+
+    #[test]
+    fn int_coerces_to_f64() {
+        let doc = TomlDoc::parse("a = 5\n").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_f64(), Some(5.0));
+    }
+
+    #[test]
+    fn rejects_errors() {
+        assert!(TomlDoc::parse("[unclosed\n").is_err());
+        assert!(TomlDoc::parse("novalue\n").is_err());
+        assert!(TomlDoc::parse("k = \"open\n").is_err());
+        assert!(TomlDoc::parse("k = 1\nk = 2\n").is_err());
+        assert!(TomlDoc::parse("k = zzz\n").is_err());
+    }
+}

@@ -1,0 +1,145 @@
+//! The engine abstraction: one batch of MELISO forward passes.
+
+use crate::device::params::DeviceParams;
+use crate::error::Result;
+
+/// One batch of VMM jobs, in the artifact's input layout.
+///
+/// * `w` — target weights, `(batch, rows, cols)` row-major, `[-1, 1]`.
+/// * `x` — input vectors, `(batch, rows)`, `[-1, 1]`.
+/// * `z` — standard-normal noise, `(batch, 3, rows, cols)`: channel 0
+///   C2C for the positive device, 1 for the negative device, 2 baseline
+///   mismatch.
+#[derive(Debug, Clone)]
+pub struct VmmBatch {
+    pub batch: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub w: Vec<f32>,
+    pub x: Vec<f32>,
+    pub z: Vec<f32>,
+}
+
+impl VmmBatch {
+    /// Allocate a zeroed batch.
+    pub fn zeros(batch: usize, rows: usize, cols: usize) -> Self {
+        Self {
+            batch,
+            rows,
+            cols,
+            w: vec![0.0; batch * rows * cols],
+            x: vec![0.0; batch * rows],
+            z: vec![0.0; batch * 3 * rows * cols],
+        }
+    }
+
+    /// Weight sub-slice of sample `b`.
+    pub fn w_of(&self, b: usize) -> &[f32] {
+        let n = self.rows * self.cols;
+        &self.w[b * n..(b + 1) * n]
+    }
+
+    /// Input sub-slice of sample `b`.
+    pub fn x_of(&self, b: usize) -> &[f32] {
+        &self.x[b * self.rows..(b + 1) * self.rows]
+    }
+
+    /// Noise sub-slice of sample `b`, channel `c`.
+    pub fn z_of(&self, b: usize, c: usize) -> &[f32] {
+        let n = self.rows * self.cols;
+        let base = (b * 3 + c) * n;
+        &self.z[base..base + n]
+    }
+
+    /// Validate internal consistency.
+    pub fn check(&self) -> Result<()> {
+        use crate::error::Error;
+        let (b, r, c) = (self.batch, self.rows, self.cols);
+        if self.w.len() != b * r * c {
+            return Err(Error::Shape(format!("w: {} != {}", self.w.len(), b * r * c)));
+        }
+        if self.x.len() != b * r {
+            return Err(Error::Shape(format!("x: {} != {}", self.x.len(), b * r)));
+        }
+        if self.z.len() != b * 3 * r * c {
+            return Err(Error::Shape(format!(
+                "z: {} != {}",
+                self.z.len(),
+                b * 3 * r * c
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Engine outputs: decoded hardware result and exact software result,
+/// both `(batch, cols)` row-major.
+#[derive(Debug, Clone)]
+pub struct VmmOutput {
+    pub y_hw: Vec<f32>,
+    pub y_sw: Vec<f32>,
+}
+
+impl VmmOutput {
+    /// Per-element errors `y_hw - y_sw` as f64.
+    pub fn errors(&self) -> Vec<f64> {
+        self.y_hw
+            .iter()
+            .zip(&self.y_sw)
+            .map(|(&h, &s)| h as f64 - s as f64)
+            .collect()
+    }
+}
+
+/// A MELISO compute backend.
+pub trait VmmEngine: Send + Sync {
+    /// Engine name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Run one batch of forward passes under the given device.
+    fn forward(&self, batch: &VmmBatch, params: &DeviceParams) -> Result<VmmOutput>;
+
+    /// Preferred batch sizes, descending (the coordinator chunks the
+    /// population to these).  Engines that accept any batch return an
+    /// empty slice.
+    fn preferred_batches(&self) -> Vec<usize> {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_layout_slices() {
+        let mut b = VmmBatch::zeros(2, 4, 4);
+        b.w[16] = 7.0; // sample 1, first weight
+        b.x[4] = 3.0; // sample 1, first input
+        b.z[(1 * 3 + 2) * 16] = 9.0; // sample 1, channel 2, first cell
+        assert_eq!(b.w_of(1)[0], 7.0);
+        assert_eq!(b.w_of(0)[0], 0.0);
+        assert_eq!(b.x_of(1)[0], 3.0);
+        assert_eq!(b.z_of(1, 2)[0], 9.0);
+        assert_eq!(b.z_of(1, 1)[0], 0.0);
+        assert!(b.check().is_ok());
+    }
+
+    #[test]
+    fn check_catches_bad_sizes() {
+        let mut b = VmmBatch::zeros(2, 4, 4);
+        b.w.pop();
+        assert!(b.check().is_err());
+    }
+
+    #[test]
+    fn errors_are_differences() {
+        let out = VmmOutput {
+            y_hw: vec![1.5, 2.0],
+            y_sw: vec![1.0, 2.5],
+        };
+        let e = out.errors();
+        assert!((e[0] - 0.5).abs() < 1e-12);
+        assert!((e[1] + 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,18 @@
+//! VMM engines: the pluggable compute backends of the benchmark.
+//!
+//! * [`SoftwareEngine`] — exact f64 reference (the paper's
+//!   "software-calculated dot product").
+//! * [`NativeEngine`] — pure-rust crossbar simulation, sample-by-sample
+//!   identical physics to the artifacts; runs without `make artifacts`.
+//! * [`XlaEngine`] — executes the AOT-lowered L2/L1 pipeline through
+//!   PJRT; the production hot path.
+
+pub mod engine;
+pub mod native;
+pub mod software;
+pub mod xla_engine;
+
+pub use engine::{VmmBatch, VmmEngine, VmmOutput};
+pub use native::NativeEngine;
+pub use software::{software_vmm_batch, SoftwareEngine};
+pub use xla_engine::XlaEngine;

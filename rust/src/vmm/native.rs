@@ -1,0 +1,124 @@
+//! Pure-rust crossbar simulation engine.
+//!
+//! Mirrors the artifact math exactly (same quantization, pulse curve,
+//! C2C accumulation, clipping, mismatch transform — all in f32 where
+//! the artifact computes in f32), so a population simulated natively is
+//! statistically identical to the XLA path and numerically identical
+//! per sample up to f32 associativity.  Used for artifact-free runs,
+//! cross-validation, and as the baseline in the perf comparison.
+
+use crate::crossbar::array::{CrossbarArray, ProgramNoise};
+use crate::device::params::DeviceParams;
+use crate::error::Result;
+
+use super::engine::{VmmBatch, VmmEngine, VmmOutput};
+use super::software::software_vmm_batch;
+
+/// Native (no-XLA) crossbar engine.
+#[derive(Debug, Default, Clone)]
+pub struct NativeEngine;
+
+impl VmmEngine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn forward(&self, batch: &VmmBatch, params: &DeviceParams) -> Result<VmmOutput> {
+        batch.check()?;
+        let (b, r, c) = (batch.batch, batch.rows, batch.cols);
+        let cells = r * c;
+        let mut y_hw = vec![0.0f32; b * c];
+        // Reusable noise view (copies are cheap relative to program()).
+        let mut noise = ProgramNoise::zeros(cells);
+        for s in 0..b {
+            noise.z0.copy_from_slice(batch.z_of(s, 0));
+            noise.z1.copy_from_slice(batch.z_of(s, 1));
+            noise.z2.copy_from_slice(batch.z_of(s, 2));
+            let arr = CrossbarArray::program(r, c, batch.w_of(s), params, &noise);
+            arr.read(batch.x_of(s), &mut y_hw[s * c..(s + 1) * c]);
+        }
+        let y_sw = software_vmm_batch(batch);
+        Ok(VmmOutput { y_hw, y_sw })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+    use crate::stats::moments::Moments;
+    use crate::util::rng::Xoshiro256;
+
+    fn random_batch(b: usize, r: usize, c: usize, seed: u64, noisy: bool) -> VmmBatch {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut vb = VmmBatch::zeros(b, r, c);
+        rng.fill_uniform_f32(&mut vb.w, -1.0, 1.0);
+        rng.fill_uniform_f32(&mut vb.x, -1.0, 1.0);
+        if noisy {
+            rng.fill_normal_f32(&mut vb.z);
+        }
+        vb
+    }
+
+    #[test]
+    fn ideal_device_near_zero_error() {
+        let b = random_batch(8, 32, 32, 141, false);
+        let out = NativeEngine.forward(&b, &DeviceParams::ideal()).unwrap();
+        for &e in &out.errors() {
+            assert!(e.abs() < 5e-3, "e={e}");
+        }
+    }
+
+    #[test]
+    fn table1_device_produces_structured_error() {
+        let b = random_batch(64, 32, 32, 142, true);
+        let params = presets::ag_si().params;
+        let out = NativeEngine.forward(&b, &params).unwrap();
+        let m = Moments::from_slice(&out.errors());
+        // Non-ideal Ag:a-Si: errors are definitely not zero…
+        assert!(m.variance() > 0.1);
+        // …but bounded (conductances clip, inputs are bounded).
+        assert!(m.max().abs() < 64.0 && m.min().abs() < 64.0);
+    }
+
+    #[test]
+    fn deterministic_given_noise() {
+        let b = random_batch(4, 16, 16, 143, true);
+        let params = presets::epiram().params;
+        let o1 = NativeEngine.forward(&b, &params).unwrap();
+        let o2 = NativeEngine.forward(&b, &params).unwrap();
+        assert_eq!(o1.y_hw, o2.y_hw);
+    }
+
+    #[test]
+    fn error_ordering_across_devices() {
+        // Fig. 5 shape at unit scale: EpiRAM < Ag:a-Si on identical
+        // workloads (both with non-idealities).
+        let b = random_batch(128, 32, 32, 144, true);
+        let var = |p: &DeviceParams| {
+            let out = NativeEngine.forward(&b, p).unwrap();
+            Moments::from_slice(&out.errors()).variance()
+        };
+        let epi = var(&presets::epiram().params);
+        let ag = var(&presets::ag_si().params);
+        let al = var(&presets::alox_hfo2().params);
+        assert!(epi < ag, "epi={epi} ag={ag}");
+        assert!(epi < al, "epi={epi} al={al}");
+    }
+
+    #[test]
+    fn software_reference_is_exact_dot() {
+        let b = random_batch(2, 8, 8, 145, true);
+        let out = NativeEngine
+            .forward(&b, &presets::taox_hfox().params)
+            .unwrap();
+        for s in 0..2 {
+            for j in 0..8 {
+                let want: f64 = (0..8)
+                    .map(|i| b.x_of(s)[i] as f64 * b.w_of(s)[i * 8 + j] as f64)
+                    .sum();
+                assert!((out.y_sw[s * 8 + j] as f64 - want).abs() < 1e-5);
+            }
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Exact software VMM — the reference side of every error measurement
+//! (the paper's "software-calculated dot product" at FP precision).
+
+use crate::device::params::DeviceParams;
+use crate::error::Result;
+
+use super::engine::{VmmBatch, VmmEngine, VmmOutput};
+
+/// Computes `y[b, j] = sum_i x[b, i] * w[b, i, j]` in f64, returned as
+/// f32 (the common output type); `y_hw == y_sw` by construction.
+#[derive(Debug, Default, Clone)]
+pub struct SoftwareEngine;
+
+/// Standalone batched software VMM in f64 accumulation.
+pub fn software_vmm_batch(batch: &VmmBatch) -> Vec<f32> {
+    let (b, r, c) = (batch.batch, batch.rows, batch.cols);
+    let mut y = vec![0.0f32; b * c];
+    for s in 0..b {
+        let w = batch.w_of(s);
+        let x = batch.x_of(s);
+        let out = &mut y[s * c..(s + 1) * c];
+        let mut acc = vec![0.0f64; c];
+        for i in 0..r {
+            let xi = x[i] as f64;
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &w[i * c..(i + 1) * c];
+            for j in 0..c {
+                acc[j] += xi * row[j] as f64;
+            }
+        }
+        for j in 0..c {
+            out[j] = acc[j] as f32;
+        }
+    }
+    y
+}
+
+impl VmmEngine for SoftwareEngine {
+    fn name(&self) -> &'static str {
+        "software"
+    }
+
+    fn forward(&self, batch: &VmmBatch, _params: &DeviceParams) -> Result<VmmOutput> {
+        batch.check()?;
+        let y = software_vmm_batch(batch);
+        Ok(VmmOutput { y_hw: y.clone(), y_sw: y })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn known_small_case() {
+        let mut b = VmmBatch::zeros(1, 2, 2);
+        // w = [[1, 2], [3, 4]], x = [1, 1] -> y = [4, 6]
+        b.w.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        b.x.copy_from_slice(&[1.0, 1.0]);
+        let y = software_vmm_batch(&b);
+        assert_eq!(y, vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn engine_has_zero_error() {
+        let mut rng = Xoshiro256::seed_from_u64(131);
+        let mut b = VmmBatch::zeros(4, 8, 8);
+        rng.fill_uniform_f32(&mut b.w, -1.0, 1.0);
+        rng.fill_uniform_f32(&mut b.x, -1.0, 1.0);
+        let out = SoftwareEngine.forward(&b, &DeviceParams::ideal()).unwrap();
+        assert!(out.errors().iter().all(|&e| e == 0.0));
+    }
+
+    #[test]
+    fn batch_samples_independent() {
+        let mut rng = Xoshiro256::seed_from_u64(132);
+        let mut big = VmmBatch::zeros(3, 4, 4);
+        rng.fill_uniform_f32(&mut big.w, -1.0, 1.0);
+        rng.fill_uniform_f32(&mut big.x, -1.0, 1.0);
+        let y_all = software_vmm_batch(&big);
+        // Each sample alone gives the same answer.
+        for s in 0..3 {
+            let mut one = VmmBatch::zeros(1, 4, 4);
+            one.w.copy_from_slice(big.w_of(s));
+            one.x.copy_from_slice(big.x_of(s));
+            let y = software_vmm_batch(&one);
+            assert_eq!(&y_all[s * 4..(s + 1) * 4], &y[..]);
+        }
+    }
+}

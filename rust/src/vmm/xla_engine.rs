@@ -1,0 +1,132 @@
+//! The XLA engine: runs the AOT-lowered MELISO pipeline (L2 model +
+//! L1 Pallas kernel) through PJRT.  This is the production request
+//! path — python is long gone by the time this executes.
+
+use std::sync::Arc;
+
+use crate::device::params::DeviceParams;
+use crate::error::{Error, Result};
+use crate::runtime::XlaRuntime;
+
+use super::engine::{VmmBatch, VmmEngine, VmmOutput};
+
+/// PJRT-backed engine over the `meliso_fwd` artifacts.
+#[derive(Debug, Clone)]
+pub struct XlaEngine {
+    rt: Arc<XlaRuntime>,
+    batches: Vec<usize>,
+}
+
+impl XlaEngine {
+    /// Wrap a runtime; discovers available `meliso_fwd` batch sizes
+    /// from the manifest.
+    pub fn new(rt: Arc<XlaRuntime>) -> Result<Self> {
+        let batches = rt.manifest().batches_for("meliso_fwd");
+        if batches.is_empty() {
+            return Err(Error::Artifact(
+                "manifest has no meliso_fwd artifacts".into(),
+            ));
+        }
+        Ok(Self { rt, batches })
+    }
+
+    /// Convenience: load from the default artifacts directory.
+    pub fn from_default_dir() -> Result<Self> {
+        let rt = Arc::new(XlaRuntime::new(&XlaRuntime::default_dir())?);
+        Self::new(rt)
+    }
+
+    pub fn runtime(&self) -> &Arc<XlaRuntime> {
+        &self.rt
+    }
+
+    /// Largest artifact batch ≤ n, or the smallest artifact if none fit.
+    pub fn plan_batch(&self, n: usize) -> usize {
+        self.batches
+            .iter()
+            .copied()
+            .find(|&b| b <= n)
+            .unwrap_or_else(|| *self.batches.last().unwrap())
+    }
+
+    /// Raw differential crossbar read through the `meliso_vmm`
+    /// artifact (the L1 kernel alone) — used by the kernel-level
+    /// cross-check and the hot-path bench.
+    pub fn raw_vmm(
+        &self,
+        gp: &[f32],
+        gn: &[f32],
+        v: &[f32],
+        batch: usize,
+    ) -> Result<Vec<f32>> {
+        let outs = self.rt.execute_f32("meliso_vmm", batch, &[gp, gn, v])?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+
+    /// Conductance programming through the `meliso_program` artifact.
+    pub fn program(
+        &self,
+        w: &[f32],
+        z: &[f32],
+        params: &DeviceParams,
+        batch: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let p = params.to_f32_vec();
+        let mut outs = self
+            .rt
+            .execute_f32("meliso_program", batch, &[w, z, &p])?;
+        let gn = outs.pop().unwrap();
+        let gp = outs.pop().unwrap();
+        Ok((gp, gn))
+    }
+}
+
+impl VmmEngine for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn forward(&self, batch: &VmmBatch, params: &DeviceParams) -> Result<VmmOutput> {
+        batch.check()?;
+        let b = batch.batch;
+        if !self.batches.contains(&b) {
+            return Err(Error::Artifact(format!(
+                "no meliso_fwd artifact for batch {b}; available: {:?} \
+                 (the coordinator chunks to these)",
+                self.batches
+            )));
+        }
+        let p = params.to_f32_vec();
+        let mut outs = self
+            .rt
+            .execute_f32("meliso_fwd", b, &[&batch.w, &batch.x, &batch.z, &p])?;
+        let y_sw = outs.pop().unwrap();
+        let y_hw = outs.pop().unwrap();
+        Ok(VmmOutput { y_hw, y_sw })
+    }
+
+    fn preferred_batches(&self) -> Vec<usize> {
+        self.batches.clone()
+    }
+}
+
+// Execution through PJRT is internally synchronized; the engine holds
+// only Arc'd state.
+unsafe impl Send for XlaEngine {}
+unsafe impl Sync for XlaEngine {}
+
+#[cfg(test)]
+mod tests {
+    //! Full engine behaviour (numerics vs native) is covered by
+    //! `rust/tests/integration_xla.rs`, which requires artifacts.
+    use super::*;
+
+    #[test]
+    fn missing_artifacts_error_is_actionable() {
+        std::env::set_var("MELISO_ARTIFACTS", "/nonexistent/meliso-artifacts");
+        let err = XlaEngine::from_default_dir().unwrap_err();
+        std::env::remove_var("MELISO_ARTIFACTS");
+        let msg = err.to_string();
+        assert!(msg.contains("artifact"), "{msg}");
+    }
+}

@@ -1,0 +1,105 @@
+//! Integration: the experiment registry end-to-end — every paper
+//! artifact regenerates, writes its files, and carries the paper's
+//! qualitative shape (at reduced population for test speed; the full
+//! protocol is exercised by `meliso run all` / EXPERIMENTS.md).
+
+use std::path::PathBuf;
+
+use meliso::experiments::{registry, Ctx};
+use meliso::util::json::Json;
+
+fn ctx(tag: &str, population: usize) -> (Ctx, PathBuf) {
+    let dir = std::env::temp_dir().join(format!("meliso_it_exp_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    (Ctx::native(population, &dir), dir)
+}
+
+#[test]
+fn every_registered_experiment_runs_and_writes_summary() {
+    let (ctx, dir) = ctx("all", 32);
+    for id in registry::all_ids() {
+        let summary = registry::run_by_id(id, &ctx).unwrap();
+        assert_eq!(summary.get("id").unwrap().as_str(), Some(id));
+        assert!(
+            dir.join(id).join("summary.json").exists(),
+            "{id} missing summary.json"
+        );
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn fig2a_series_covers_1_to_11_bits_and_falls() {
+    let (ctx, dir) = ctx("fig2a", 64);
+    let s = registry::run_by_id("fig2a", &ctx).unwrap();
+    let series = s.get("series").unwrap().as_arr().unwrap();
+    assert_eq!(series.len(), 11);
+    let first = series[0].get("variance").unwrap().as_f64().unwrap();
+    let last = series[10].get("variance").unwrap().as_f64().unwrap();
+    assert!(first / last > 10.0, "1-bit {first} vs 11-bit {last}");
+    // CSV series written with a header + 11 rows.
+    let csv = std::fs::read_to_string(dir.join("fig2a/series.csv")).unwrap();
+    assert_eq!(csv.lines().count(), 12);
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn fig4c_shows_nl_amplification() {
+    let (ctx, dir) = ctx("fig4c", 48);
+    let s = registry::run_by_id("fig4c", &ctx).unwrap();
+    let series = s.get("series").unwrap().as_arr().unwrap();
+    let last = &series[series.len() - 1];
+    let no_nl = last.get("var_no_nl").unwrap().as_f64().unwrap();
+    let with_nl = last.get("var_with_nl").unwrap().as_f64().unwrap();
+    assert!(with_nl > no_nl, "NL must amplify C2C error: {with_nl} vs {no_nl}");
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn fig5_writes_histograms_for_all_devices() {
+    let (ctx, dir) = ctx("fig5", 48);
+    registry::run_by_id("fig5b", &ctx).unwrap();
+    for id in ["ag-si", "taox-hfox", "alox-hfo2", "epiram"] {
+        assert!(
+            dir.join("fig5b").join(format!("hist_{id}.csv")).exists(),
+            "missing hist for {id}"
+        );
+    }
+    assert!(dir.join("fig5b/boxplot.csv").exists());
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn table2_best_fits_are_flexible_families_for_nonideal_devices() {
+    let (ctx, dir) = ctx("table2", 96);
+    let s = registry::run_by_id("table2", &ctx).unwrap();
+    let rows = s.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 8);
+    // Every non-ideal row of Table II picks a shape/mixture family
+    // (the paper reports no plain-normal winners).
+    for r in rows {
+        if r.get("nonideal").unwrap() == &Json::Bool(true) {
+            let fit = r.get("best_fit").unwrap().as_str().unwrap();
+            assert_ne!(fit, "Normal", "device {:?}", r.get("device"));
+        }
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn run_summaries_are_valid_json_documents() {
+    let (ctx, dir) = ctx("json", 24);
+    registry::run_by_id("fig3", &ctx).unwrap();
+    let text = std::fs::read_to_string(dir.join("fig3/summary.json")).unwrap();
+    let parsed = Json::parse(&text).unwrap();
+    assert_eq!(parsed.get("id").unwrap().as_str(), Some("fig3"));
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn registry_and_paper_sets_consistent() {
+    assert!(registry::paper_ids().len() >= 10);
+    for id in registry::paper_ids() {
+        assert!(registry::all_ids().contains(&id));
+    }
+}

@@ -1,0 +1,130 @@
+//! Integration: in-memory solvers on crossbar operators — device error
+//! propagating into algorithm behaviour.
+
+use meliso::device::params::NonIdealities;
+use meliso::device::presets;
+use meliso::solver::{
+    conjugate_gradient, jacobi, power_iteration, richardson, CrossbarOperator,
+    ExactOperator, SolveOpts,
+};
+use meliso::util::rng::Xoshiro256;
+
+/// SPD test system A = M^T M / n + I.
+fn spd(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let m: Vec<f64> = (0..n * n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+    let mut a = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0;
+            for k in 0..n {
+                s += m[k * n + i] * m[k * n + j];
+            }
+            a[i * n + j] = s / n as f64 + if i == j { 1.0 } else { 0.0 };
+        }
+    }
+    let b: Vec<f64> = (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+    (a, b)
+}
+
+#[test]
+fn cg_on_ideal_crossbar_converges_like_software() {
+    let n = 64;
+    let (a, b) = spd(n, 401);
+    let exact = ExactOperator::new(n, n, a.clone());
+    let mut rng = Xoshiro256::seed_from_u64(402);
+    let op = CrossbarOperator::program(
+        n,
+        n,
+        &a,
+        &meliso::device::params::DeviceParams::ideal(),
+        &mut rng,
+    );
+    // Ideal-device floor is set by f32 quantization of the (1±w)/2
+    // complementary encoding (~1e-4 relative).
+    let opts = SolveOpts { max_iters: 150, tol: 5e-4 };
+    let hw = conjugate_gradient(&op, &exact, &b, &opts).unwrap();
+    assert!(hw.converged, "floor: {:?}", hw.residual_history.last());
+}
+
+#[test]
+fn noisy_crossbar_sets_residual_floor_ordered_by_device_quality() {
+    let n = 64;
+    let (a, b) = spd(n, 403);
+    let exact = ExactOperator::new(n, n, a.clone());
+    let opts = SolveOpts { max_iters: 100, tol: 1e-12 };
+    let mut rng = Xoshiro256::seed_from_u64(404);
+
+    let mut floor = |device| {
+        let op = CrossbarOperator::program(n, n, &a, &device, &mut rng);
+        let r = conjugate_gradient(&op, &exact, &b, &opts).unwrap();
+        r.residual_history
+            .iter()
+            .copied()
+            .fold(f64::INFINITY, f64::min)
+    };
+
+    let f_epi = floor(presets::epiram().params.masked(NonIdealities::FULL));
+    let f_al = floor(presets::alox_hfo2().params.masked(NonIdealities::FULL));
+    let f_sw = {
+        let r = conjugate_gradient(&exact, &exact, &b, &opts).unwrap();
+        r.residual_history
+            .iter()
+            .copied()
+            .fold(f64::INFINITY, f64::min)
+    };
+    assert!(f_sw < 1e-10);
+    assert!(f_epi > f_sw, "noisy floor above software");
+    assert!(f_epi < f_al, "EpiRAM floor {f_epi} must beat AlOx {f_al}");
+    // Floors sit in physically sensible ranges.
+    assert!(f_epi < 0.3, "EpiRAM floor unexpectedly high: {f_epi}");
+}
+
+#[test]
+fn jacobi_and_richardson_tolerate_mild_noise() {
+    // Diagonally dominant system, EpiRAM operator: stationary methods
+    // should still drive the residual well below 10%.
+    let n = 48;
+    let mut rng = Xoshiro256::seed_from_u64(405);
+    let mut a = vec![0.0f64; n * n];
+    for i in 0..n {
+        let mut row = 0.0;
+        for j in 0..n {
+            if i != j {
+                let v = rng.uniform_in(-0.4, 0.4);
+                a[i * n + j] = v;
+                row += v.abs();
+            }
+        }
+        a[i * n + i] = row + 1.0;
+    }
+    let b: Vec<f64> = (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+    let exact = ExactOperator::new(n, n, a.clone());
+    let device = presets::epiram().params.masked(NonIdealities::FULL);
+    let op = CrossbarOperator::program(n, n, &a, &device, &mut rng);
+    let diag: Vec<f64> = (0..n).map(|i| a[i * n + i]).collect();
+    let opts = SolveOpts { max_iters: 200, tol: 1e-12 };
+
+    // Static D2D mismatch perturbs the operator; stationary methods
+    // converge to the perturbed system's solution, so the honest floor
+    // is ||E x|| / ||b|| — well under 20% for EpiRAM-class mismatch.
+    let ja = jacobi(&op, &exact, &diag, &b, &opts).unwrap();
+    let ri = richardson(&op, &exact, &b, 0.1, &opts).unwrap();
+    let floor = |h: &[f64]| h.iter().copied().fold(f64::INFINITY, f64::min);
+    assert!(floor(&ja.residual_history) < 0.2, "jacobi floor {}", floor(&ja.residual_history));
+    assert!(floor(&ri.residual_history) < 0.2, "richardson floor {}", floor(&ri.residual_history));
+}
+
+#[test]
+fn power_iteration_on_crossbar_approximates_spectrum() {
+    let n = 32;
+    let (a, _) = spd(n, 406);
+    let exact = ExactOperator::new(n, n, a.clone());
+    let truth = power_iteration(&exact, 1000, 1e-12).unwrap();
+    let mut rng = Xoshiro256::seed_from_u64(407);
+    let device = presets::epiram().params.masked(NonIdealities::FULL);
+    let op = CrossbarOperator::program(n, n, &a, &device, &mut rng);
+    let est = power_iteration(&op, 1000, 1e-9).unwrap();
+    let rel = (est.eigenvalue - truth.eigenvalue).abs() / truth.eigenvalue;
+    assert!(rel < 0.25, "eigenvalue {} vs {}", est.eigenvalue, truth.eigenvalue);
+}

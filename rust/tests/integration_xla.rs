@@ -1,0 +1,194 @@
+//! Integration: the XLA path (AOT artifacts through PJRT) against the
+//! native engine — the lock-step contract between the rust physics and
+//! the L2/L1 python pipeline.
+//!
+//! These tests need `make artifacts`; they **fail loudly** if the
+//! manifest is missing (the repo's test protocol builds artifacts
+//! first), except on machines that explicitly opt out with
+//! `MELISO_SKIP_XLA_TESTS=1`.
+
+use meliso::coordinator::{BenchmarkConfig, Coordinator};
+use meliso::device::params::{DeviceParams, NonIdealities};
+use meliso::device::presets;
+use meliso::runtime::XlaRuntime;
+use meliso::vmm::{NativeEngine, VmmBatch, VmmEngine, XlaEngine};
+
+fn engine_or_skip() -> Option<XlaEngine> {
+    match XlaEngine::from_default_dir() {
+        Ok(e) => Some(e),
+        Err(err) => {
+            if std::env::var("MELISO_SKIP_XLA_TESTS").as_deref() == Ok("1") {
+                eprintln!("skipping XLA tests: {err}");
+                None
+            } else {
+                panic!("artifacts missing — run `make artifacts` first ({err})")
+            }
+        }
+    }
+}
+
+fn random_batch(b: usize, seed: u64) -> VmmBatch {
+    use meliso::util::rng::Xoshiro256;
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut vb = VmmBatch::zeros(b, 32, 32);
+    rng.fill_uniform_f32(&mut vb.w, -1.0, 1.0);
+    rng.fill_uniform_f32(&mut vb.x, -1.0, 1.0);
+    rng.fill_normal_f32(&mut vb.z);
+    vb
+}
+
+#[test]
+fn manifest_loads_and_compiles() {
+    let Some(engine) = engine_or_skip() else { return };
+    let n = engine.runtime().warmup().unwrap();
+    assert!(n >= 9, "expected >= 9 artifacts, got {n}");
+    assert_eq!(engine.runtime().manifest().rows, 32);
+}
+
+#[test]
+fn raw_vmm_kernel_matches_software_contraction() {
+    let Some(engine) = engine_or_skip() else { return };
+    use meliso::util::rng::Xoshiro256;
+    let b = 32;
+    let mut rng = Xoshiro256::seed_from_u64(301);
+    let mut gp = vec![0.0f32; b * 32 * 32];
+    let mut gn = vec![0.0f32; b * 32 * 32];
+    let mut v = vec![0.0f32; b * 32];
+    rng.fill_uniform_f32(&mut gp, 0.0, 1.0);
+    rng.fill_uniform_f32(&mut gn, 0.0, 1.0);
+    rng.fill_uniform_f32(&mut v, -1.0, 1.0);
+
+    // The L1 Pallas kernel through PJRT…
+    let y = engine.raw_vmm(&gp, &gn, &v, b).unwrap();
+    // …against a plain f64 software contraction.
+    for s in 0..b {
+        for j in 0..32 {
+            let want: f64 = (0..32)
+                .map(|i| {
+                    v[s * 32 + i] as f64
+                        * (gp[(s * 32 + i) * 32 + j] as f64
+                            - gn[(s * 32 + i) * 32 + j] as f64)
+                })
+                .sum();
+            let got = y[s * 32 + j] as f64;
+            assert!(
+                (got - want).abs() < 1e-3,
+                "sample {s} col {j}: {got} vs {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn program_artifact_matches_native_conductances() {
+    let Some(engine) = engine_or_skip() else { return };
+    use meliso::crossbar::array::{CrossbarArray, ProgramNoise};
+
+    let batch = random_batch(32, 302);
+    let device = presets::ag_si().params.masked(NonIdealities::FULL);
+    let (gp, gn) = engine
+        .program(&batch.w, &batch.z, &device, 32)
+        .unwrap();
+
+    let mut noise = ProgramNoise::zeros(32 * 32);
+    for s in 0..32 {
+        noise.z0.copy_from_slice(batch.z_of(s, 0));
+        noise.z1.copy_from_slice(batch.z_of(s, 1));
+        noise.z2.copy_from_slice(batch.z_of(s, 2));
+        let arr = CrossbarArray::program(32, 32, batch.w_of(s), &device, &noise);
+        for c in 0..32 * 32 {
+            let idx = s * 32 * 32 + c;
+            assert!(
+                (arr.gp()[c] - gp[idx]).abs() < 2e-4,
+                "sample {s} cell {c}: native gp {} vs xla {}",
+                arr.gp()[c],
+                gp[idx]
+            );
+            assert!((arr.gn()[c] - gn[idx]).abs() < 2e-4);
+        }
+    }
+}
+
+#[test]
+fn fwd_artifact_matches_native_engine_per_sample() {
+    let Some(engine) = engine_or_skip() else { return };
+    let batch = random_batch(32, 303);
+    for preset in presets::all_presets() {
+        let device = preset.params.masked(NonIdealities::FULL);
+        let xla_out = engine.forward(&batch, &device).unwrap();
+        let native_out = NativeEngine.forward(&batch, &device).unwrap();
+        for i in 0..batch.batch * 32 {
+            let d = (xla_out.y_hw[i] - native_out.y_hw[i]).abs();
+            assert!(
+                d < 5e-3,
+                "{}: element {i}: xla {} vs native {}",
+                preset.name,
+                xla_out.y_hw[i],
+                native_out.y_hw[i]
+            );
+            let ds = (xla_out.y_sw[i] - native_out.y_sw[i]).abs();
+            assert!(ds < 5e-4, "software path diverged at {i}");
+        }
+    }
+}
+
+#[test]
+fn full_population_statistics_agree_between_engines() {
+    let Some(engine) = engine_or_skip() else { return };
+    let device = presets::epiram().params.masked(NonIdealities::FULL);
+    let cfg = BenchmarkConfig::paper_default(device).with_population(320);
+
+    let native = Coordinator::new(NativeEngine).run(&cfg).unwrap();
+    let xla = Coordinator::new(engine).run(&cfg).unwrap();
+
+    assert_eq!(native.len(), xla.len());
+    let (vn, vx) = (native.stats().variance(), xla.stats().variance());
+    assert!(
+        (vn / vx - 1.0).abs() < 0.02,
+        "variance: native {vn} vs xla {vx}"
+    );
+    let (mn, mx) = (native.stats().mean(), xla.stats().mean());
+    assert!((mn - mx).abs() < 5e-3, "mean: {mn} vs {mx}");
+}
+
+#[test]
+fn bad_input_shapes_are_rejected_cleanly() {
+    let Some(engine) = engine_or_skip() else { return };
+    let rt = engine.runtime();
+    // Wrong buffer length must error before reaching PJRT.
+    let short = vec![0.0f32; 3];
+    let err = rt
+        .execute_f32("meliso_vmm", 32, &[&short, &short, &short])
+        .unwrap_err();
+    assert!(err.to_string().contains("expected"), "{err}");
+    // Unknown program name.
+    assert!(rt.execute_f32("nonexistent", 32, &[]).is_err());
+}
+
+#[test]
+fn runtime_is_shareable_across_threads() {
+    let Some(engine) = engine_or_skip() else { return };
+    let engine = std::sync::Arc::new(engine);
+    let batch = random_batch(32, 304);
+    let device = presets::taox_hfox().params;
+    let baseline = engine.forward(&batch, &device).unwrap();
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let e = std::sync::Arc::clone(&engine);
+            let b = batch.clone();
+            let want = baseline.y_hw.clone();
+            s.spawn(move || {
+                let out = e.forward(&b, &device).unwrap();
+                assert_eq!(out.y_hw, want);
+            });
+        }
+    });
+}
+
+#[test]
+fn default_dir_env_override_works() {
+    let Some(_) = engine_or_skip() else { return };
+    // XlaRuntime::default_dir honors MELISO_ARTIFACTS (used by CI).
+    let dir = XlaRuntime::default_dir();
+    assert!(dir.join("manifest.json").exists());
+}

@@ -1,0 +1,203 @@
+//! Property-based invariant suites over the coordinator, device model
+//! and statistics substrates, using the in-repo `testkit` framework
+//! (the offline registry has no `proptest`; see DESIGN.md §6).
+
+use meliso::coordinator::WorkloadSpec;
+use meliso::crossbar::array::{CrossbarArray, ProgramNoise};
+use meliso::device::params::DeviceParams;
+use meliso::device::pulse::pulse_curve;
+use meliso::stats::fit::Normal;
+use meliso::stats::moments::Moments;
+use meliso::testkit::{check, check2, Config, FloatIn, OneOf, UsizeIn};
+use meliso::util::rng::Xoshiro256;
+use meliso::vmm::{NativeEngine, SoftwareEngine, VmmBatch, VmmEngine};
+
+fn cfg(cases: usize, seed: u64) -> Config {
+    Config { cases, seed, max_shrink_steps: 100 }
+}
+
+#[test]
+fn prop_pulse_curve_is_monotone_and_pinned_for_any_nu() {
+    check(cfg(128, 1), &FloatIn { lo: -10.0, hi: 10.0 }, |&nu| {
+        let mut prev = pulse_curve(0.0, nu);
+        if prev.abs() > 1e-12 {
+            return false;
+        }
+        for i in 1..=64 {
+            let g = pulse_curve(i as f64 / 64.0, nu);
+            if g < prev - 1e-12 {
+                return false;
+            }
+            prev = g;
+        }
+        (pulse_curve(1.0, nu) - 1.0).abs() < 1e-9
+    });
+}
+
+#[test]
+fn prop_programmed_conductances_stay_in_window() {
+    // For any (sigma, states) combination the clip keeps conductances
+    // physical.
+    check2(
+        cfg(40, 2),
+        &FloatIn { lo: 0.0, hi: 0.2 },
+        &UsizeIn { lo: 2, hi: 512 },
+        |&sigma, &states| {
+            let params = DeviceParams::ideal()
+                .with_c2c(sigma)
+                .with_nonlinearity(2.4, -4.88);
+            let params = DeviceParams { states: states as f64, ..params };
+            let mut rng = Xoshiro256::seed_from_u64((states as u64) << 8);
+            let mut w = vec![0.0f32; 64];
+            rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+            let noise = ProgramNoise::sample(&mut rng, 64);
+            let arr = CrossbarArray::program(8, 8, &w, &params, &noise);
+            arr.gp().iter().chain(arr.gn()).all(|&g| (0.0..=1.0).contains(&g))
+        },
+    );
+}
+
+#[test]
+fn prop_native_engine_error_vanishes_as_device_idealizes() {
+    // Any workload seed: ideal device => tiny error.
+    check(cfg(24, 3), &UsizeIn { lo: 0, hi: 1 << 20 }, |&seed| {
+        let spec = WorkloadSpec::paper_default(seed as u64);
+        let batch = spec.chunk(0, 4);
+        let out = NativeEngine.forward(&batch, &DeviceParams::ideal()).unwrap();
+        out.errors().iter().all(|e| e.abs() < 1e-2)
+    });
+}
+
+#[test]
+fn prop_software_engine_errors_always_zero() {
+    check(cfg(24, 4), &UsizeIn { lo: 0, hi: 1 << 20 }, |&seed| {
+        let spec = WorkloadSpec::paper_default(seed as u64);
+        let batch = spec.chunk(0, 2);
+        let out = SoftwareEngine.forward(&batch, &DeviceParams::ideal()).unwrap();
+        out.errors().iter().all(|&e| e == 0.0)
+    });
+}
+
+#[test]
+fn prop_workload_chunks_compose_for_any_split() {
+    // For any population and split point, chunk(0,n) equals
+    // chunk(0,k) ++ chunk(k,n-k).
+    check2(
+        cfg(24, 5),
+        &UsizeIn { lo: 2, hi: 24 },
+        &UsizeIn { lo: 1, hi: 23 },
+        |&n, &k| {
+            let k = k.min(n - 1);
+            let spec = WorkloadSpec::paper_default(99);
+            let whole = spec.chunk(0, n);
+            let a = spec.chunk(0, k);
+            let b = spec.chunk(k, n - k);
+            let cells = 32 * 32;
+            whole.w[..k * cells] == a.w[..]
+                && whole.w[k * cells..] == b.w[..]
+                && whole.z[..k * 3 * cells] == a.z[..]
+                && whole.z[k * 3 * cells..] == b.z[..]
+        },
+    );
+}
+
+#[test]
+fn prop_moments_merge_is_associative_enough() {
+    // Merging in any grouping agrees with the single stream to fp
+    // tolerance.
+    check(cfg(32, 6), &UsizeIn { lo: 3, hi: 400 }, |&n| {
+        let mut rng = Xoshiro256::seed_from_u64(n as u64 * 31);
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal_ms(1.0, 3.0)).collect();
+        let whole = Moments::from_slice(&xs);
+        let k = 1 + n / 3;
+        let mut left = Moments::from_slice(&xs[..k]);
+        left = left.merge(&Moments::from_slice(&xs[k..]));
+        (whole.variance() - left.variance()).abs() < 1e-9
+            && (whole.skewness() - left.skewness()).abs() < 1e-6
+    });
+}
+
+#[test]
+fn prop_normal_cdf_is_monotone_and_bounded() {
+    check2(
+        cfg(48, 7),
+        &FloatIn { lo: -5.0, hi: 5.0 },
+        &FloatIn { lo: 0.01, hi: 10.0 },
+        |&mu, &sigma| {
+            let d = Normal::new(mu, sigma);
+            let mut prev = 0.0;
+            for i in -40..=40 {
+                let x = mu + i as f64 * sigma / 8.0;
+                let c = d.cdf(x);
+                if !(0.0..=1.0).contains(&c) || c < prev - 1e-12 {
+                    return false;
+                }
+                prev = c;
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_engine_error_scales_with_c2c() {
+    // More C2C never reduces the error variance (statistically) — the
+    // Fig. 4 monotonicity, randomized over seeds.
+    check(cfg(12, 8), &UsizeIn { lo: 0, hi: 1 << 16 }, |&seed| {
+        let spec = WorkloadSpec::paper_default(seed as u64);
+        let batch = spec.chunk(0, 24);
+        let var = |sigma: f64| {
+            let p = DeviceParams::ideal()
+                .with_weight_bits(7)
+                .with_memory_window(100.0)
+                .with_c2c(sigma);
+            let out = NativeEngine.forward(&batch, &p).unwrap();
+            Moments::from_slice(&out.errors()).variance()
+        };
+        var(0.05) > var(0.01) && var(0.01) > var(0.0)
+    });
+}
+
+#[test]
+fn prop_boxplot_quartiles_ordered() {
+    check(cfg(32, 9), &UsizeIn { lo: 4, hi: 5000 }, |&n| {
+        let mut rng = Xoshiro256::seed_from_u64(n as u64);
+        let data: Vec<f64> = (0..n).map(|_| rng.normal_ms(0.0, 2.0)).collect();
+        let b = meliso::stats::quantile::BoxPlot::from_data(&data);
+        b.whisker_lo <= b.q1
+            && b.q1 <= b.median
+            && b.median <= b.q3
+            && b.q3 <= b.whisker_hi
+    });
+}
+
+#[test]
+fn prop_quantization_identity_on_grid_weights() {
+    // Weights already on the S-state grid program exactly (no noise,
+    // no NL): the crossbar is lossless on representable values.
+    let states = OneOf(vec![3usize, 5, 9, 17, 65]);
+    check(cfg(32, 10), &states, |&s| {
+        let n = (s - 1) as f32;
+        let params = DeviceParams { states: s as f64, ..DeviceParams::ideal() };
+        let w: Vec<f32> = (0..s).map(|i| i as f32 / n).collect();
+        let arr = CrossbarArray::program(1, s, &w, &params, &ProgramNoise::zeros(s));
+        w.iter()
+            .enumerate()
+            .all(|(i, &wi)| (arr.weight(0, i) - wi).abs() < 1e-6)
+    });
+}
+
+#[test]
+fn prop_batch_layout_roundtrip() {
+    check2(
+        cfg(24, 11),
+        &UsizeIn { lo: 1, hi: 16 },
+        &UsizeIn { lo: 1, hi: 24 },
+        |&b, &r| {
+            let vb = VmmBatch::zeros(b, r, r);
+            vb.check().is_ok()
+                && vb.w_of(b - 1).len() == r * r
+                && vb.z_of(b - 1, 2).len() == r * r
+        },
+    );
+}

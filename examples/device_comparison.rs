@@ -14,7 +14,7 @@ use meliso::report::table::{fnum, TextTable};
 use meliso::vmm::NativeEngine;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
-    let coord = Coordinator::new(NativeEngine);
+    let coord = Coordinator::new(NativeEngine::default());
     let population = 500; // half protocol for a fast demo
 
     for mask in [NonIdealities::IDEAL, NonIdealities::FULL] {

@@ -40,7 +40,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         );
     }
 
-    let native = Coordinator::new(NativeEngine);
+    let native = Coordinator::new(NativeEngine::default());
 
     let mut t = TextTable::new([
         "device", "engine", "VMM/s", "variance", "skewness", "kurtosis",

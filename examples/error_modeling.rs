@@ -18,7 +18,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     // (Johnson S_U, skew 3.34, kurtosis 15.7 in Table II).
     let device = presets::ag_si().params.masked(NonIdealities::FULL);
     let cfg = BenchmarkConfig::paper_default(device);
-    let pop = Coordinator::new(NativeEngine).run(&cfg)?;
+    let pop = Coordinator::new(NativeEngine::default()).run(&cfg)?;
     let s = pop.summary();
 
     println!(

@@ -28,7 +28,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     // 2. The paper protocol: 1000 random 32x32 VMMs, errors vs the
     //    exact software dot product.
     let cfg = BenchmarkConfig::paper_default(device);
-    let coord = Coordinator::new(NativeEngine);
+    let coord = Coordinator::new(NativeEngine::default());
     let (pop, tel) = coord.run_with_telemetry(&cfg)?;
 
     // 3. Moments (what Table II reports).

@@ -2,18 +2,19 @@
 //! instrumentation (EXPERIMENTS.md records these before/after).
 //!
 //!  * workload generation (host, L3)
-//!  * native crossbar engine (L3 baseline physics)
+//!  * native crossbar engine, sequential baseline vs parallel fan
+//!  * tiled crossbar engine at 128x128 and 256x256
 //!  * software reference VMM
 //!  * XLA engine single batch (L2+L1 through PJRT), if artifacts exist
 //!  * streaming statistics reduction
-//!  * end-to-end coordinator run (native + xla)
+//!  * end-to-end coordinator run (native + tiled + xla)
 
 use meliso::coordinator::{BenchmarkConfig, Coordinator, WorkloadSpec};
 use meliso::device::params::NonIdealities;
 use meliso::device::presets;
 use meliso::stats::moments::Moments;
 use meliso::util::bench::{bench, black_box, BenchOpts};
-use meliso::vmm::{NativeEngine, VmmEngine, XlaEngine};
+use meliso::vmm::{NativeEngine, TiledEngine, VmmEngine, XlaEngine};
 
 fn main() {
     let device = presets::ag_si().params.masked(NonIdealities::FULL);
@@ -29,14 +30,49 @@ fn main() {
         },
     );
 
-    // L3: native physics engine.
-    bench(
-        "native engine: forward 256 x 32x32",
+    // L3: native physics engine — the sequential post-fix baseline…
+    let seq = bench(
+        "native engine (sequential): forward 256 x 32x32",
         BenchOpts { samples: 10, warmup: 2, items_per_iter: Some(256.0) },
         || {
-            black_box(NativeEngine.forward(&b256, &device).unwrap());
+            black_box(
+                NativeEngine::sequential().forward(&b256, &device).unwrap(),
+            );
         },
     );
+    // …vs the pool-fanned engine (per-worker scratch, shared table).
+    let par = bench(
+        "native engine (parallel): forward 256 x 32x32",
+        BenchOpts { samples: 10, warmup: 2, items_per_iter: Some(256.0) },
+        || {
+            black_box(NativeEngine::default().forward(&b256, &device).unwrap());
+        },
+    );
+    println!(
+        "      native parallel speedup: {:.2}x samples/sec over sequential",
+        par.items_per_sec(256.0) / seq.items_per_sec(256.0)
+    );
+
+    // Tiled engine: arbitrary-size populations over 32x32 tile grids.
+    let tiled = TiledEngine::default();
+    for size in [128usize, 256] {
+        let mut tspec = WorkloadSpec::paper_default(2);
+        tspec.rows = size;
+        tspec.cols = size;
+        let samples = (16 * 128 * 128 / (size * size)).max(4);
+        let tb = tspec.chunk(0, samples);
+        bench(
+            &format!("tiled engine: forward {samples} x {size}x{size}"),
+            BenchOpts {
+                samples: 5,
+                warmup: 1,
+                items_per_iter: Some(samples as f64),
+            },
+            || {
+                black_box(tiled.forward(&tb, &device).unwrap());
+            },
+        );
+    }
 
     // Software reference.
     bench(
@@ -96,12 +132,26 @@ fn main() {
 
     // End-to-end coordinator on the native engine (parallel).
     let cfg = BenchmarkConfig::paper_default(device).with_population(1024);
-    let coord = Coordinator::new(NativeEngine);
+    let coord = Coordinator::new(NativeEngine::default());
     bench(
         "coordinator e2e: 1024 VMMs (native engine)",
         BenchOpts { samples: 5, warmup: 1, items_per_iter: Some(1024.0) },
         || {
             black_box(coord.run(&cfg).unwrap());
+        },
+    );
+
+    // End-to-end coordinator on the tiled engine at 128x128.
+    let mut cfg128 = BenchmarkConfig::paper_default(device).with_population(64);
+    cfg128.workload.rows = 128;
+    cfg128.workload.cols = 128;
+    cfg128.calibration_samples = 16;
+    let coord = Coordinator::new(TiledEngine::default());
+    bench(
+        "coordinator e2e: 64 VMMs at 128x128 (tiled engine)",
+        BenchOpts { samples: 3, warmup: 1, items_per_iter: Some(64.0) },
+        || {
+            black_box(coord.run(&cfg128).unwrap());
         },
     );
 }

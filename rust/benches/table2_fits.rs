@@ -24,7 +24,7 @@ fn main() {
     // Isolated fitting cost on a protocol-size error population.
     let device = presets::ag_si().params.masked(NonIdealities::FULL);
     let cfg = BenchmarkConfig::paper_default(device).with_population(1000);
-    let pop = Coordinator::new(NativeEngine).run(&cfg).unwrap();
+    let pop = Coordinator::new(NativeEngine::default()).run(&cfg).unwrap();
     bench(
         "fit_all on 32000-sample population",
         BenchOpts { samples: 3, warmup: 1, items_per_iter: None },

@@ -3,10 +3,11 @@
 //! ```text
 //! meliso list
 //! meliso devices
-//! meliso run <experiment|all> [--engine native|xla|software]
+//! meliso run <experiment|all> [--engine native|tiled|xla|software]
 //!            [--population N] [--seed N] [--out DIR] [--threads N]
+//!            [--engine-threads N] [--size N] [--tile N]
 //!            [--config FILE] [--quiet]
-//! meliso bench [--engine ...] [--population N]    # quick throughput check
+//! meliso bench [--engine ...] [--population N] [--size N]
 //! meliso fit --input FILE.csv [--column K]
 //! meliso solve [--device ID] [--n N] [--solver cg|jacobi|richardson]
 //! meliso warmup                                    # precompile artifacts
@@ -54,11 +55,18 @@ COMMANDS:
   help, version
 
 OPTIONS:
-  --engine <native|xla|software>   Compute backend [default: native]
+  --engine <native|tiled|xla|software>
+                                   Compute backend [default: native]
   --population <N>                 VMM samples per configuration [default: 1000]
   --seed <N>                       Workload seed
   --out <DIR>                      Output directory [default: out]
-  --threads <N>                    Worker threads (0 = auto)
+  --threads <N>                    Total worker budget (0 = auto)
+  --engine-threads <N>             Engine-level fan-out for native/tiled
+                                   (0 = auto, 1 = sequential engine)
+  --size <N>                       Workload geometry (rows = cols) for bench
+                                   [default: 32]
+  --tile <N>                       Physical tile size of the tiled engine
+                                   [default: 32]
   --config <FILE>                  TOML config file (CLI flags override)
   --quiet                          Suppress terminal tables
 ";
@@ -107,6 +115,21 @@ impl Args {
                 "seed" => config.seed = parse_num::<u64>(name, req(name, v)?)?,
                 "out" => config.out_dir = req(name, v)?.into(),
                 "threads" => config.threads = parse_num(name, req(name, v)?)?,
+                "engine-threads" => {
+                    config.engine_threads = parse_num(name, req(name, v)?)?;
+                }
+                "size" => {
+                    config.size = parse_num(name, req(name, v)?)?;
+                    if config.size == 0 {
+                        return Err(Error::Config("size must be > 0".into()));
+                    }
+                }
+                "tile" => {
+                    config.tile = parse_num(name, req(name, v)?)?;
+                    if config.tile == 0 {
+                        return Err(Error::Config("tile must be > 0".into()));
+                    }
+                }
                 "quiet" => config.quiet = true,
                 "config" | "input" | "column" | "device" | "n" | "solver" => {}
                 other => {
@@ -216,12 +239,25 @@ mod tests {
     }
 
     #[test]
+    fn parses_tiled_flags() {
+        let a = parse("bench --engine tiled --size 128 --tile 64 --engine-threads 4")
+            .unwrap();
+        assert_eq!(a.command, Command::Bench);
+        assert_eq!(a.config.engine, crate::config::EngineKind::Tiled);
+        assert_eq!(a.config.size, 128);
+        assert_eq!(a.config.tile, 64);
+        assert_eq!(a.config.engine_threads, 4);
+    }
+
+    #[test]
     fn rejects_bad_input() {
         assert!(parse("run").is_err());
         assert!(parse("frobnicate").is_err());
         assert!(parse("run fig3 --engine warp").is_err());
         assert!(parse("run fig3 --population zero").is_err());
         assert!(parse("run fig3 --population 0").is_err());
+        assert!(parse("run fig3 --size 0").is_err());
+        assert!(parse("bench --tile 0").is_err());
         assert!(parse("fit").is_err());
         assert!(parse("run fig3 --bogus 1").is_err());
         assert!(parse("run fig3 --engine").is_err());

@@ -73,23 +73,31 @@ fn run_experiments(args: &Args, which: &str) -> Result<i32> {
 fn bench(args: &Args) -> Result<i32> {
     let ctx = Ctx::from_config(&args.config)?;
     let device = presets::ag_si().params.masked(NonIdealities::FULL);
+    let size = args.config.size;
     let mut cfg = BenchmarkConfig::paper_default(device)
         .with_population(args.config.population)
         .with_seed(args.config.seed);
+    // Arbitrary workload geometry (tiled engine handles any size; the
+    // native engine programs one large array).
+    cfg.workload.rows = size;
+    cfg.workload.cols = size;
     cfg.parallelism = args.config.parallelism();
     let coord = Coordinator::new(ctx.engine.clone());
     let (pop, tel) = coord.run_with_telemetry(&cfg)?;
     let mut t = TextTable::new(["metric", "value"]).with_title("Engine throughput");
     t.push(["engine", ctx.engine_name()]);
+    t.push(["workload", &format!("{size}x{size}")]);
     t.push(["population", &tel.samples.to_string()]);
     t.push(["chunks", &tel.chunks.to_string()]);
+    t.push(["chunk threads", &tel.chunk_threads.to_string()]);
+    t.push(["engine threads", &tel.engine_threads.to_string()]);
     t.push(["wall (s)", &fnum(tel.wall_secs)]);
     t.push(["engine (s, summed)", &fnum(tel.engine_secs)]);
     t.push(["gen (s, summed)", &fnum(tel.gen_secs)]);
     t.push(["VMM/s", &fnum(tel.throughput())]);
     t.push([
         "error elements/s",
-        &fnum(tel.throughput() * crate::COLS as f64),
+        &fnum(tel.throughput() * size as f64),
     ]);
     t.push(["error variance", &fnum(pop.stats().variance())]);
     println!("{}", t.render());

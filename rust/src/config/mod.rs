@@ -33,6 +33,8 @@ pub enum EngineKind {
     /// Pure-rust crossbar simulation (no artifacts needed).
     #[default]
     Native,
+    /// Tiled crossbar simulation for arbitrary workload sizes.
+    Tiled,
     /// AOT artifacts through PJRT (the production path).
     Xla,
     /// Exact software VMM (zero error; sanity baseline).
@@ -43,10 +45,11 @@ impl EngineKind {
     pub fn parse(s: &str) -> Result<Self> {
         match s.to_ascii_lowercase().as_str() {
             "native" => Ok(EngineKind::Native),
+            "tiled" => Ok(EngineKind::Tiled),
             "xla" => Ok(EngineKind::Xla),
             "software" => Ok(EngineKind::Software),
             other => Err(Error::Config(format!(
-                "unknown engine '{other}' (native|xla|software)"
+                "unknown engine '{other}' (native|tiled|xla|software)"
             ))),
         }
     }
@@ -54,6 +57,7 @@ impl EngineKind {
     pub fn name(&self) -> &'static str {
         match self {
             EngineKind::Native => "native",
+            EngineKind::Tiled => "tiled",
             EngineKind::Xla => "xla",
             EngineKind::Software => "software",
         }
@@ -67,7 +71,17 @@ pub struct RunConfig {
     pub seed: u64,
     pub engine: EngineKind,
     pub out_dir: PathBuf,
+    /// Total host worker budget (0 = one per CPU); the coordinator
+    /// divides it by the engine fan-out.
     pub threads: usize,
+    /// Engine-level fan-out for the native/tiled engines (0 = one per
+    /// CPU, 1 = sequential engine).
+    pub engine_threads: usize,
+    /// Logical workload geometry (rows = cols = size) for `bench` and
+    /// size-parameterized runs; the paper protocol is 32.
+    pub size: usize,
+    /// Physical tile geometry of the tiled engine (square tiles).
+    pub tile: usize,
     pub quiet: bool,
     /// Optional custom device overriding the presets.
     pub custom_device: Option<DeviceParams>,
@@ -81,6 +95,9 @@ impl Default for RunConfig {
             engine: EngineKind::Native,
             out_dir: PathBuf::from("out"),
             threads: 0,
+            engine_threads: 0,
+            size: crate::ROWS,
+            tile: crate::ROWS,
             quiet: false,
             custom_device: None,
         }
@@ -93,6 +110,22 @@ impl RunConfig {
             Parallelism::Auto
         } else {
             Parallelism::Fixed(self.threads)
+        }
+    }
+
+    /// Engine-level parallelism for engines that fan internally,
+    /// capped by the total `threads` budget: `--threads 2` with an
+    /// auto-fanning engine must not light up every CPU.
+    pub fn engine_parallelism(&self) -> Parallelism {
+        let engine = if self.engine_threads == 0 {
+            usize::MAX
+        } else {
+            self.engine_threads
+        };
+        let budget = if self.threads == 0 { usize::MAX } else { self.threads };
+        match engine.min(budget) {
+            usize::MAX => Parallelism::Auto,
+            n => Parallelism::Fixed(n),
         }
     }
 
@@ -136,6 +169,28 @@ impl RunConfig {
                 .as_i64()
                 .filter(|&n| n >= 0)
                 .ok_or_else(|| Error::Config("threads must be a non-negative int".into()))?
+                as usize;
+        }
+        if let Some(v) = doc.get("", "engine_threads") {
+            cfg.engine_threads = v
+                .as_i64()
+                .filter(|&n| n >= 0)
+                .ok_or_else(|| {
+                    Error::Config("engine_threads must be a non-negative int".into())
+                })? as usize;
+        }
+        if let Some(v) = doc.get("", "size") {
+            cfg.size = v
+                .as_i64()
+                .filter(|&n| n > 0)
+                .ok_or_else(|| Error::Config("size must be a positive int".into()))?
+                as usize;
+        }
+        if let Some(v) = doc.get("", "tile") {
+            cfg.tile = v
+                .as_i64()
+                .filter(|&n| n > 0)
+                .ok_or_else(|| Error::Config("tile must be a positive int".into()))?
                 as usize;
         }
         if let Some(v) = doc.get("", "quiet") {
@@ -227,8 +282,40 @@ sigma_c2c = 0.035
     #[test]
     fn engine_kind_parse() {
         assert_eq!(EngineKind::parse("XLA").unwrap(), EngineKind::Xla);
+        assert_eq!(EngineKind::parse("tiled").unwrap(), EngineKind::Tiled);
         assert!(EngineKind::parse("gpu").is_err());
         assert_eq!(EngineKind::Native.name(), "native");
+        assert_eq!(EngineKind::Tiled.name(), "tiled");
+    }
+
+    #[test]
+    fn tiled_and_parallelism_keys_parse() {
+        let c = RunConfig::from_toml(
+            "engine = \"tiled\"\nsize = 128\ntile = 64\nengine_threads = 2\n",
+        )
+        .unwrap();
+        assert_eq!(c.engine, EngineKind::Tiled);
+        assert_eq!(c.size, 128);
+        assert_eq!(c.tile, 64);
+        assert_eq!(c.engine_parallelism(), Parallelism::Fixed(2));
+        assert!(RunConfig::from_toml("size = 0\n").is_err());
+        assert!(RunConfig::from_toml("tile = -3\n").is_err());
+    }
+
+    #[test]
+    fn total_budget_caps_engine_fanout() {
+        // --threads 2 with an auto engine: the engine fan is capped at
+        // the budget instead of lighting up every CPU.
+        let mut c = RunConfig { threads: 2, ..RunConfig::default() };
+        assert_eq!(c.engine_parallelism(), Parallelism::Fixed(2));
+        // Explicit engine fan larger than the budget is capped too.
+        c.engine_threads = 8;
+        assert_eq!(c.engine_parallelism(), Parallelism::Fixed(2));
+        // No budget -> the engine keeps its own setting.
+        c.threads = 0;
+        assert_eq!(c.engine_parallelism(), Parallelism::Fixed(8));
+        c.engine_threads = 0;
+        assert_eq!(c.engine_parallelism(), Parallelism::Auto);
     }
 
     #[test]

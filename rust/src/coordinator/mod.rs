@@ -11,5 +11,5 @@ pub mod runner;
 pub mod workload;
 
 pub use population::ErrorPopulation;
-pub use runner::{BenchmarkConfig, Coordinator};
+pub use runner::{BenchmarkConfig, CalibrationMode, Coordinator, RunTelemetry};
 pub use workload::WorkloadSpec;

@@ -20,6 +20,14 @@ pub struct BenchmarkConfig {
     pub device: DeviceParams,
     /// Chunk size hint; clamped to the engine's preferred batches.
     pub chunk: usize,
+    /// **Total** host worker budget for the run.  The coordinator
+    /// divides it by the engine's internal fan-out
+    /// ([`crate::vmm::VmmEngine::internal_parallelism`]) to size the
+    /// chunk-level pool, so chunk- and engine-level parallelism compose
+    /// instead of oversubscribing the host.  The coordinator cannot
+    /// shrink the engine's own fan-out — bound the engine to the budget
+    /// at construction (the CLI's `RunConfig::engine_parallelism` does
+    /// this) when the budget is below the CPU count.
     pub parallelism: Parallelism,
     /// The paper's backward step: "the resulting vector of VMM from the
     /// forward pass is then scaled and transformed".  The readout
@@ -66,6 +74,10 @@ pub struct RunTelemetry {
     pub engine_secs: f64,
     pub samples: usize,
     pub chunks: usize,
+    /// Chunk-level pool width actually used by the coordinator.
+    pub chunk_threads: usize,
+    /// Engine-level fan-out reported by the engine.
+    pub engine_threads: usize,
 }
 
 impl RunTelemetry {
@@ -116,6 +128,14 @@ impl<E: VmmEngine + 'static> Coordinator<E> {
         let device = cfg.device;
         let engine = Arc::clone(&self.engine);
 
+        // Compose the two parallelism levels: the config's budget is
+        // the total; engines that fan a chunk internally (native,
+        // tiled) get a sequential chunk loop, engines that don't (xla,
+        // software) get the full chunk-level pool.
+        let engine_threads = self.engine.internal_parallelism().max(1);
+        let chunk_threads = (cfg.parallelism.threads() / engine_threads).max(1);
+        let chunk_par = Parallelism::Fixed(chunk_threads);
+
         // Backward-step readout calibration (paper Fig. 1): fit
         // y_sw ≈ a·y_hw + b on an independent batch drawn *past* the
         // population indices, so it never overlaps the measured data.
@@ -131,7 +151,7 @@ impl<E: VmmEngine + 'static> Coordinator<E> {
         // Chunks are independently seeded (see WorkloadSpec::chunk), so
         // pool scheduling cannot change results.
         let results: Vec<Result<(Vec<f64>, f64, f64)>> =
-            run_indexed(cfg.parallelism, plan.len(), |i| {
+            run_indexed(chunk_par, plan.len(), |i| {
                 let (start, len) = plan[i];
                 let t0 = Stopwatch::start();
                 let batch = spec.chunk(start, len);
@@ -152,6 +172,8 @@ impl<E: VmmEngine + 'static> Coordinator<E> {
         let mut tel = RunTelemetry {
             samples: spec.population,
             chunks: plan.len(),
+            chunk_threads,
+            engine_threads,
             ..Default::default()
         };
         for r in results {
@@ -308,7 +330,7 @@ mod tests {
     fn native_run_paper_protocol_small() {
         let cfg = BenchmarkConfig::paper_default(presets::epiram().params)
             .with_population(64);
-        let coord = Coordinator::new(NativeEngine);
+        let coord = Coordinator::new(NativeEngine::default());
         let (pop, tel) = coord.run_with_telemetry(&cfg).unwrap();
         assert_eq!(pop.len(), 64 * 32);
         assert_eq!(tel.samples, 64);
@@ -320,11 +342,14 @@ mod tests {
 
     #[test]
     fn parallel_and_serial_identical() {
+        // Sequential engine so the chunk pool is what actually varies
+        // (a default Auto engine would collapse both legs to one chunk
+        // thread).
         let mut cfg = BenchmarkConfig::paper_default(presets::ag_si().params)
             .with_population(40);
         cfg.chunk = 8;
         cfg.parallelism = Parallelism::Fixed(1);
-        let coord = Coordinator::new(NativeEngine);
+        let coord = Coordinator::new(NativeEngine::sequential());
         let serial = coord.run(&cfg).unwrap();
         cfg.parallelism = Parallelism::Fixed(4);
         let parallel = coord.run(&cfg).unwrap();
@@ -333,7 +358,7 @@ mod tests {
 
     #[test]
     fn chunk_size_does_not_change_population() {
-        let coord = Coordinator::new(NativeEngine);
+        let coord = Coordinator::new(NativeEngine::default());
         let mut cfg = BenchmarkConfig::paper_default(presets::taox_hfox().params)
             .with_population(30);
         cfg.chunk = 30;
@@ -344,11 +369,47 @@ mod tests {
     }
 
     #[test]
+    fn chunk_and_engine_parallelism_compose() {
+        // Engine fans internally -> the chunk loop must go sequential.
+        let cfg = BenchmarkConfig::paper_default(presets::epiram().params)
+            .with_population(16);
+        let wide = Coordinator::new(NativeEngine::with_parallelism(Parallelism::Fixed(4)));
+        let (_, tel) = wide.run_with_telemetry(&cfg).unwrap();
+        assert_eq!(tel.engine_threads, 4);
+        let expected = (cfg.parallelism.threads() / 4).max(1);
+        assert_eq!(tel.chunk_threads, expected);
+        // Sequential engine -> the chunk loop gets the full budget.
+        let mut cfg = cfg;
+        cfg.parallelism = Parallelism::Fixed(6);
+        let seq = Coordinator::new(NativeEngine::sequential());
+        let (_, tel) = seq.run_with_telemetry(&cfg).unwrap();
+        assert_eq!(tel.engine_threads, 1);
+        assert_eq!(tel.chunk_threads, 6);
+    }
+
+    #[test]
+    fn composition_never_changes_results() {
+        let device = presets::ag_si().params;
+        let mut cfg = BenchmarkConfig::paper_default(device).with_population(24);
+        cfg.chunk = 6;
+        let runs: Vec<_> = [
+            NativeEngine::sequential(),
+            NativeEngine::with_parallelism(Parallelism::Fixed(3)),
+            NativeEngine::with_parallelism(Parallelism::Auto),
+        ]
+        .into_iter()
+        .map(|e| Coordinator::new(e).run(&cfg).unwrap())
+        .collect();
+        assert_eq!(runs[0].errors(), runs[1].errors());
+        assert_eq!(runs[0].errors(), runs[2].errors());
+    }
+
+    #[test]
     fn invalid_device_rejected() {
         let mut params = presets::ag_si().params;
         params.memory_window = 0.5;
         let cfg = BenchmarkConfig::paper_default(params).with_population(4);
-        let coord = Coordinator::new(NativeEngine);
+        let coord = Coordinator::new(NativeEngine::default());
         assert!(coord.run(&cfg).is_err());
     }
 }

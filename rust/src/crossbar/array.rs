@@ -43,6 +43,51 @@ impl ProgramNoise {
     }
 }
 
+/// Precomputed per-device pulse-curve state, shared across every array
+/// programmed under the same `(params, verify)` pair.
+///
+/// Perf: pulse counts are integers in `[0, S-1]`, so the curve values
+/// and `sqrt(s)` live on an S-point grid — build it once per device and
+/// reuse it for every sample/tile of a population instead of paying
+/// 4 exp() + 2 sqrt() per cell per array.  Direct evaluation remains
+/// for very large S (the "ideal" 65536-state device) where the table
+/// would cost more than it saves.
+#[derive(Debug, Clone)]
+pub struct PulseTable {
+    kappa_p: f64,
+    kappa_d: f64,
+    verify: bool,
+    /// `(curve_ltp, curve_ltd, sqrt(s))` on the state grid, when tabled.
+    grid: Option<(Vec<f64>, Vec<f64>, Vec<f64>)>,
+}
+
+impl PulseTable {
+    const TABLE_LIMIT: usize = 4096;
+
+    /// Build the table for a device (open-loop when `verify == false`).
+    pub fn new(params: &DeviceParams, verify: bool) -> Self {
+        let kappa_p = nl_to_curvature(params.nu_ltp);
+        let kappa_d = nl_to_curvature(params.nu_ltd);
+        let n = params.states - 1.0;
+        let grid = if !verify && (params.states as usize) <= Self::TABLE_LIMIT {
+            let states = params.states as usize;
+            let mut cp = Vec::with_capacity(states);
+            let mut cd = Vec::with_capacity(states);
+            let mut sq = Vec::with_capacity(states);
+            for s in 0..states {
+                let t = s as f64 / n;
+                cp.push(pulse_curve(t, kappa_p));
+                cd.push(pulse_curve(t, kappa_d));
+                sq.push((s as f64).sqrt());
+            }
+            Some((cp, cd, sq))
+        } else {
+            None
+        };
+        Self { kappa_p, kappa_d, verify, grid }
+    }
+}
+
 /// A programmed crossbar array holding normalized differential
 /// conductances plus the per-cell mismatch residue.
 #[derive(Debug, Clone)]
@@ -98,11 +143,59 @@ impl CrossbarArray {
         noise: &ProgramNoise,
         verify: bool,
     ) -> Self {
+        let table = PulseTable::new(params, verify);
+        let mut arr = Self::zeroed(rows, cols);
+        arr.reprogram(w, params, noise, &table);
+        arr
+    }
+
+    /// Allocate an unprogrammed (all-zero) array of the given geometry
+    /// — the reusable scratch the parallel engines program in place.
+    pub fn zeroed(rows: usize, cols: usize) -> Self {
         let cells = rows * cols;
+        Self {
+            rows,
+            cols,
+            g_diff: vec![0.0; cells],
+            mismatch: vec![0.0; cells],
+            gp: vec![0.0; cells],
+            gn: vec![0.0; cells],
+        }
+    }
+
+    /// Program target weights into this array **in place**, reusing its
+    /// buffers and a shared per-device [`PulseTable`].  Numerically
+    /// identical to [`CrossbarArray::program`] /
+    /// [`CrossbarArray::program_verified`] with the matching table.
+    pub fn reprogram(
+        &mut self,
+        w: &[f32],
+        params: &DeviceParams,
+        noise: &ProgramNoise,
+        table: &PulseTable,
+    ) {
+        self.reprogram_active(w, params, noise, table, self.rows * self.cols)
+    }
+
+    /// Like [`CrossbarArray::reprogram`], but normalizes the per-cycle
+    /// severity draw over `active_cells` real device cells.  Tiled edge
+    /// arrays pass the unpadded count: their padded lines carry zero
+    /// noise, and dividing by the full cell count would dilute the
+    /// lognormal cycle severity toward its deterministic limit.
+    pub fn reprogram_active(
+        &mut self,
+        w: &[f32],
+        params: &DeviceParams,
+        noise: &ProgramNoise,
+        table: &PulseTable,
+        active_cells: usize,
+    ) {
+        let cells = self.rows * self.cols;
         assert_eq!(w.len(), cells, "weight buffer size mismatch");
         assert_eq!(noise.z0.len(), cells);
         assert_eq!(noise.z1.len(), cells);
         assert_eq!(noise.z2.len(), cells);
+        let verify = table.verify;
 
         let n = params.states - 1.0;
         // Linear-in-sigma C2C law, scale fitted once (DESIGN.md §7).
@@ -113,41 +206,8 @@ impl CrossbarArray {
         // of this programming cycle (mirrors model.SEVERITY_SIGMA).
         const SEVERITY_SIGMA: f64 = 0.6;
         let zeta = noise.z0.iter().map(|&z| z as f64).sum::<f64>()
-            / (cells as f64).sqrt();
+            / (active_cells.max(1) as f64).sqrt();
         let sev = (SEVERITY_SIGMA * zeta - 0.5 * SEVERITY_SIGMA * SEVERITY_SIGMA).exp();
-
-        // NL label -> curve curvature (mirrors model.NL_GAMMA).
-        let kappa_p = nl_to_curvature(params.nu_ltp);
-        let kappa_d = nl_to_curvature(params.nu_ltd);
-
-        // Perf: pulse counts are integers in [0, n], so the curve
-        // values and sqrt(s) live on an S-point grid — precompute them
-        // once per array instead of paying 4 exp() + 2 sqrt() per
-        // cell.  Direct evaluation remains for very large S (the
-        // "ideal" 65536-state device) where the table would cost more
-        // than it saves.
-        const TABLE_LIMIT: usize = 4096;
-        let table: Option<(Vec<f64>, Vec<f64>, Vec<f64>)> =
-            if !verify && (params.states as usize) <= TABLE_LIMIT {
-                let states = params.states as usize;
-                let mut cp = Vec::with_capacity(states);
-                let mut cd = Vec::with_capacity(states);
-                let mut sq = Vec::with_capacity(states);
-                for s in 0..states {
-                    let t = s as f64 / n;
-                    cp.push(pulse_curve(t, kappa_p));
-                    cd.push(pulse_curve(t, kappa_d));
-                    sq.push((s as f64).sqrt());
-                }
-                Some((cp, cd, sq))
-            } else {
-                None
-            };
-
-        let mut gp = vec![0.0f32; cells];
-        let mut gn = vec![0.0f32; cells];
-        let mut g_diff = vec![0.0f32; cells];
-        let mut mismatch = vec![0.0f32; cells];
 
         for i in 0..cells {
             let wi = w[i] as f64;
@@ -168,7 +228,7 @@ impl CrossbarArray {
                     t_pos + params.sigma_c2c * noise.z0[i] as f64,
                     t_neg + params.sigma_c2c * noise.z1[i] as f64,
                 )
-            } else if let Some((cp, cd, sq)) = &table {
+            } else if let Some((cp, cd, sq)) = &table.grid {
                 let (ip, id) = (s_pos as usize, s_neg as usize);
                 (
                     cp[ip] + sev * acc * sq[ip] * noise.z0[i] as f64,
@@ -176,20 +236,20 @@ impl CrossbarArray {
                 )
             } else {
                 (
-                    pulse_curve(t_pos, kappa_p) + sev * acc * s_pos.sqrt() * noise.z0[i] as f64,
-                    pulse_curve(t_neg, kappa_d) + sev * acc * s_neg.sqrt() * noise.z1[i] as f64,
+                    pulse_curve(t_pos, table.kappa_p)
+                        + sev * acc * s_pos.sqrt() * noise.z0[i] as f64,
+                    pulse_curve(t_neg, table.kappa_d)
+                        + sev * acc * s_neg.sqrt() * noise.z1[i] as f64,
                 )
             };
             g_pos = g_pos.clamp(0.0, 1.0);
             g_neg = g_neg.clamp(0.0, 1.0);
 
-            gp[i] = g_pos as f32;
-            gn[i] = g_neg as f32;
-            g_diff[i] = (g_pos - g_neg) as f32;
-            mismatch[i] = (m * mismatch_transform(noise.z2[i] as f64)) as f32;
+            self.gp[i] = g_pos as f32;
+            self.gn[i] = g_neg as f32;
+            self.g_diff[i] = (g_pos - g_neg) as f32;
+            self.mismatch[i] = (m * mismatch_transform(noise.z2[i] as f64)) as f32;
         }
-
-        Self { rows, cols, g_diff, mismatch, gp, gn }
     }
 
     pub fn rows(&self) -> usize {
@@ -378,6 +438,41 @@ mod tests {
         for j in 0..8 {
             assert!((ysum[j] - y1[j] - y2[j]).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn reprogram_reuses_buffers_and_matches_fresh_program() {
+        let mut rng = Xoshiro256::seed_from_u64(107);
+        let params = DeviceParams::ideal()
+            .with_weight_bits(7)
+            .with_nonlinearity(2.4, -4.88)
+            .with_c2c(0.035);
+        let table = PulseTable::new(&params, false);
+        let mut scratch = CrossbarArray::zeroed(16, 16);
+        for trial in 0..4 {
+            let w = rand_w(&mut rng, 256);
+            let noise = ProgramNoise::sample(&mut rng, 256);
+            scratch.reprogram(&w, &params, &noise, &table);
+            let fresh = CrossbarArray::program(16, 16, &w, &params, &noise);
+            assert_eq!(scratch.gp(), fresh.gp(), "trial {trial}");
+            assert_eq!(scratch.gn(), fresh.gn(), "trial {trial}");
+            assert_eq!(scratch.g_diff, fresh.g_diff);
+            assert_eq!(scratch.mismatch, fresh.mismatch);
+        }
+    }
+
+    #[test]
+    fn verified_table_matches_program_verified() {
+        let mut rng = Xoshiro256::seed_from_u64(108);
+        let params = DeviceParams::ideal().with_weight_bits(6).with_c2c(0.02);
+        let w = rand_w(&mut rng, 64);
+        let noise = ProgramNoise::sample(&mut rng, 64);
+        let table = PulseTable::new(&params, true);
+        let mut scratch = CrossbarArray::zeroed(8, 8);
+        scratch.reprogram(&w, &params, &noise, &table);
+        let fresh = CrossbarArray::program_verified(8, 8, &w, &params, &noise);
+        assert_eq!(scratch.gp(), fresh.gp());
+        assert_eq!(scratch.gn(), fresh.gn());
     }
 
     #[test]

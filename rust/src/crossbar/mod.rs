@@ -8,7 +8,7 @@ pub mod energy;
 pub mod peripheral;
 pub mod tile;
 
-pub use array::CrossbarArray;
+pub use array::{CrossbarArray, ProgramNoise, PulseTable};
 pub use energy::EnergyModel;
 pub use peripheral::Peripherals;
 pub use tile::TiledCrossbar;

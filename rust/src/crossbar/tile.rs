@@ -6,7 +6,7 @@
 use crate::device::params::DeviceParams;
 use crate::util::rng::Xoshiro256;
 
-use super::array::{CrossbarArray, ProgramNoise};
+use super::array::{CrossbarArray, ProgramNoise, PulseTable};
 
 /// A logical matrix mapped onto a grid of physical crossbar tiles.
 #[derive(Debug)]
@@ -69,32 +69,104 @@ impl TiledCrossbar {
         let grid_c = cols.div_ceil(tile_cols);
         let mut tiles = Vec::with_capacity(grid_r * grid_c);
         let cells = tile_rows * tile_cols;
+        // One pulse table for the whole grid (device is shared).
+        let table = PulseTable::new(params, verify);
+        let mut tw = vec![0.0f32; cells];
 
         for tr in 0..grid_r {
             for tc in 0..grid_c {
-                let mut tw = vec![0.0f32; cells];
-                for i in 0..tile_rows {
-                    let gi = tr * tile_rows + i;
-                    if gi >= rows {
-                        break;
-                    }
-                    for j in 0..tile_cols {
-                        let gj = tc * tile_cols + j;
-                        if gj >= cols {
-                            break;
-                        }
-                        tw[i * tile_cols + j] = w[gi * cols + gj];
-                    }
-                }
+                gather_tile(w, rows, cols, tile_rows, tile_cols, tr, tc, &mut tw);
                 let noise = ProgramNoise::sample(rng, cells);
-                tiles.push(if verify {
-                    CrossbarArray::program_verified(tile_rows, tile_cols, &tw, params, &noise)
-                } else {
-                    CrossbarArray::program(tile_rows, tile_cols, &tw, params, &noise)
-                });
+                let mut arr = CrossbarArray::zeroed(tile_rows, tile_cols);
+                arr.reprogram(&tw, params, &noise, &table);
+                tiles.push(arr);
             }
         }
         Self { rows, cols, tile_rows, tile_cols, grid_r, grid_c, tiles }
+    }
+
+    /// Program with **explicit** per-cell noise planes over the logical
+    /// `rows x cols` geometry (`z0` C2C+, `z1` C2C-, `z2` mismatch, all
+    /// row-major `rows * cols`), instead of drawing from an RNG.  This
+    /// is the engine-batch contract: each tile's physics is a function
+    /// of its slice of the logical noise; padded cells get zero noise
+    /// (grounded lines) and are excluded from the per-cycle severity
+    /// normalization.  With `rows == tile_rows` and `cols == tile_cols`
+    /// the result is bit-identical to a single
+    /// [`CrossbarArray::reprogram`] on the same inputs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn program_with_noise(
+        rows: usize,
+        cols: usize,
+        w: &[f32],
+        params: &DeviceParams,
+        tile_rows: usize,
+        tile_cols: usize,
+        z: [&[f32]; 3],
+        table: &PulseTable,
+    ) -> Self {
+        assert_eq!(w.len(), rows * cols);
+        assert!(tile_rows > 0 && tile_cols > 0);
+        for plane in &z {
+            assert_eq!(plane.len(), rows * cols, "noise plane size mismatch");
+        }
+        let grid_r = rows.div_ceil(tile_rows);
+        let grid_c = cols.div_ceil(tile_cols);
+        let mut tiles = Vec::with_capacity(grid_r * grid_c);
+        let mut scratch = TileScratch::new(tile_rows, tile_cols);
+
+        for tr in 0..grid_r {
+            for tc in 0..grid_c {
+                scratch.program_tile(rows, cols, w, params, z, table, tr, tc);
+                tiles.push(scratch.arr.clone());
+            }
+        }
+        Self { rows, cols, tile_rows, tile_cols, grid_r, grid_c, tiles }
+    }
+
+    /// Streaming tiled VMM `y = x^T W` with explicit noise planes:
+    /// program each tile into the reusable `scratch` array, read its
+    /// partial product, and accumulate — same tile order and arithmetic
+    /// as [`TiledCrossbar::program_with_noise`] followed by
+    /// [`TiledCrossbar::read`], without materializing the grid.  This
+    /// is the engines' hot path: zero steady-state allocation.
+    #[allow(clippy::too_many_arguments)]
+    pub fn vmm_with_noise(
+        rows: usize,
+        cols: usize,
+        w: &[f32],
+        params: &DeviceParams,
+        z: [&[f32]; 3],
+        table: &PulseTable,
+        x: &[f32],
+        y: &mut [f32],
+        scratch: &mut TileScratch,
+    ) {
+        assert_eq!(w.len(), rows * cols);
+        assert_eq!(x.len(), rows);
+        assert_eq!(y.len(), cols);
+        for plane in &z {
+            assert_eq!(plane.len(), rows * cols, "noise plane size mismatch");
+        }
+        let (tile_rows, tile_cols) = (scratch.tile_rows, scratch.tile_cols);
+        let grid_r = rows.div_ceil(tile_rows);
+        let grid_c = cols.div_ceil(tile_cols);
+        y.fill(0.0);
+        for tr in 0..grid_r {
+            let r0 = tr * tile_rows;
+            let rlen = tile_rows.min(rows - r0);
+            scratch.tx.fill(0.0);
+            scratch.tx[..rlen].copy_from_slice(&x[r0..r0 + rlen]);
+            for tc in 0..grid_c {
+                scratch.program_tile(rows, cols, w, params, z, table, tr, tc);
+                scratch.arr.read(&scratch.tx, &mut scratch.ty);
+                let c0 = tc * tile_cols;
+                let clen = tile_cols.min(cols - c0);
+                for j in 0..clen {
+                    y[c0 + j] += scratch.ty[j];
+                }
+            }
+        }
     }
 
     pub fn rows(&self) -> usize {
@@ -138,6 +210,92 @@ impl TiledCrossbar {
         let mut y = vec![0.0; self.cols];
         self.read(x, &mut y);
         y
+    }
+}
+
+/// Reusable per-worker buffers for tiled programming and streaming
+/// VMMs: one physical array, its noise planes, and the gather/read
+/// staging vectors.  Engines keep one per pool worker.
+#[derive(Debug)]
+pub struct TileScratch {
+    tile_rows: usize,
+    tile_cols: usize,
+    arr: CrossbarArray,
+    noise: ProgramNoise,
+    tw: Vec<f32>,
+    tx: Vec<f32>,
+    ty: Vec<f32>,
+}
+
+impl TileScratch {
+    pub fn new(tile_rows: usize, tile_cols: usize) -> Self {
+        assert!(tile_rows > 0 && tile_cols > 0);
+        let cells = tile_rows * tile_cols;
+        Self {
+            tile_rows,
+            tile_cols,
+            arr: CrossbarArray::zeroed(tile_rows, tile_cols),
+            noise: ProgramNoise::zeros(cells),
+            tw: vec![0.0; cells],
+            tx: vec![0.0; tile_rows],
+            ty: vec![0.0; tile_cols],
+        }
+    }
+
+    /// Gather tile `(tr, tc)` of the logical weight/noise planes and
+    /// program it into the scratch array, normalizing the cycle
+    /// severity over the tile's real (unpadded) cells.
+    #[allow(clippy::too_many_arguments)]
+    fn program_tile(
+        &mut self,
+        rows: usize,
+        cols: usize,
+        w: &[f32],
+        params: &DeviceParams,
+        z: [&[f32]; 3],
+        table: &PulseTable,
+        tr: usize,
+        tc: usize,
+    ) {
+        let (tile_rows, tile_cols) = (self.tile_rows, self.tile_cols);
+        gather_tile(w, rows, cols, tile_rows, tile_cols, tr, tc, &mut self.tw);
+        gather_tile(z[0], rows, cols, tile_rows, tile_cols, tr, tc, &mut self.noise.z0);
+        gather_tile(z[1], rows, cols, tile_rows, tile_cols, tr, tc, &mut self.noise.z1);
+        gather_tile(z[2], rows, cols, tile_rows, tile_cols, tr, tc, &mut self.noise.z2);
+        let rlen = tile_rows.min(rows - tr * tile_rows);
+        let clen = tile_cols.min(cols - tc * tile_cols);
+        self.arr
+            .reprogram_active(&self.tw, params, &self.noise, table, rlen * clen);
+    }
+}
+
+/// Copy tile `(tr, tc)` of a logical `rows x cols` plane into a
+/// `tile_rows x tile_cols` buffer, zero-filling padded cells.
+#[allow(clippy::too_many_arguments)]
+fn gather_tile(
+    src: &[f32],
+    rows: usize,
+    cols: usize,
+    tile_rows: usize,
+    tile_cols: usize,
+    tr: usize,
+    tc: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), tile_rows * tile_cols);
+    out.fill(0.0);
+    for i in 0..tile_rows {
+        let gi = tr * tile_rows + i;
+        if gi >= rows {
+            break;
+        }
+        for j in 0..tile_cols {
+            let gj = tc * tile_cols + j;
+            if gj >= cols {
+                break;
+            }
+            out[i * tile_cols + j] = src[gi * cols + gj];
+        }
     }
 }
 
@@ -224,6 +382,97 @@ mod tests {
         for j in 0..16 {
             assert!((y[j] - want[j]).abs() < 0.01);
         }
+    }
+
+    #[test]
+    fn explicit_noise_single_tile_matches_plain_array() {
+        let mut rng = Xoshiro256::seed_from_u64(115);
+        let params = crate::device::presets::ag_si().params;
+        let cells = 32 * 32;
+        let mut w = vec![0.0f32; cells];
+        rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+        let noise = ProgramNoise::sample(&mut rng, cells);
+        let table = PulseTable::new(&params, false);
+        let t = TiledCrossbar::program_with_noise(
+            32,
+            32,
+            &w,
+            &params,
+            32,
+            32,
+            [&noise.z0, &noise.z1, &noise.z2],
+            &table,
+        );
+        assert_eq!(t.tile_count(), 1);
+        let arr = CrossbarArray::program(32, 32, &w, &params, &noise);
+        let mut x = vec![0.0f32; 32];
+        rng.fill_uniform_f32(&mut x, -1.0, 1.0);
+        assert_eq!(t.read_vec(&x), arr.read_vec(&x));
+    }
+
+    #[test]
+    fn explicit_noise_tiling_still_approximates_software() {
+        let mut rng = Xoshiro256::seed_from_u64(116);
+        let params = crate::device::presets::epiram().params;
+        let (rows, cols) = (80, 48); // ragged 3x2 grid
+        let n = rows * cols;
+        let mut w = vec![0.0f32; n];
+        let mut x = vec![0.0f32; rows];
+        rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+        rng.fill_uniform_f32(&mut x, -1.0, 1.0);
+        let mut z = vec![0.0f32; 3 * n];
+        rng.fill_normal_f32(&mut z);
+        let table = PulseTable::new(&params, false);
+        let t = TiledCrossbar::program_with_noise(
+            rows,
+            cols,
+            &w,
+            &params,
+            32,
+            32,
+            [&z[..n], &z[n..2 * n], &z[2 * n..]],
+            &table,
+        );
+        assert_eq!(t.tile_count(), 3 * 2);
+        let y = t.read_vec(&x);
+        let want = software_vmm(rows, cols, &w, &x);
+        for j in 0..cols {
+            assert!((y[j] - want[j]).abs() < 10.0, "col {j}: {} vs {}", y[j], want[j]);
+        }
+    }
+
+    #[test]
+    fn streaming_vmm_matches_materialized_grid() {
+        let mut rng = Xoshiro256::seed_from_u64(117);
+        let params = crate::device::presets::ag_si().params;
+        let (rows, cols) = (80, 48); // ragged grid incl. padded tiles
+        let n = rows * cols;
+        let mut w = vec![0.0f32; n];
+        let mut x = vec![0.0f32; rows];
+        rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+        rng.fill_uniform_f32(&mut x, -1.0, 1.0);
+        let mut z = vec![0.0f32; 3 * n];
+        rng.fill_normal_f32(&mut z);
+        let planes = [&z[..n], &z[n..2 * n], &z[2 * n..]];
+        let table = PulseTable::new(&params, false);
+
+        let grid =
+            TiledCrossbar::program_with_noise(rows, cols, &w, &params, 32, 32, planes, &table);
+        let want = grid.read_vec(&x);
+
+        let mut scratch = TileScratch::new(32, 32);
+        let mut y = vec![0.0f32; cols];
+        TiledCrossbar::vmm_with_noise(
+            rows, cols, &w, &params, planes, &table, &x, &mut y, &mut scratch,
+        );
+        assert_eq!(y, want);
+
+        // Scratch reuse across calls must not leak state.
+        let mut y2 = vec![0.0f32; cols];
+        TiledCrossbar::vmm_with_noise(
+            rows, cols, &w, &params, planes, &table, &x, &mut y2, &mut scratch,
+        );
+        assert_eq!(y2, want);
     }
 
     #[test]

@@ -6,6 +6,8 @@
 
 use thiserror::Error;
 
+use crate::xla;
+
 /// All errors surfaced by the MELISO library.
 #[derive(Debug, Error)]
 pub enum Error {

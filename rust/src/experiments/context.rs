@@ -9,7 +9,9 @@ use crate::device::params::DeviceParams;
 use crate::error::Result;
 use crate::report::writer::ReportWriter;
 use crate::util::pool::Parallelism;
-use crate::vmm::{NativeEngine, SoftwareEngine, VmmBatch, VmmEngine, VmmOutput, XlaEngine};
+use crate::vmm::{
+    NativeEngine, SoftwareEngine, TiledEngine, VmmBatch, VmmEngine, VmmOutput, XlaEngine,
+};
 
 /// Type-erased engine handle shared by all experiments.
 #[derive(Clone)]
@@ -33,6 +35,10 @@ impl VmmEngine for DynEngine {
     fn preferred_batches(&self) -> Vec<usize> {
         self.0.preferred_batches()
     }
+
+    fn internal_parallelism(&self) -> usize {
+        self.0.internal_parallelism()
+    }
 }
 
 /// Everything an experiment needs to run.
@@ -49,7 +55,12 @@ impl Ctx {
     /// Build from a resolved run configuration (constructs the engine).
     pub fn from_config(cfg: &RunConfig) -> Result<Ctx> {
         let engine = match cfg.engine {
-            EngineKind::Native => DynEngine::new(NativeEngine),
+            EngineKind::Native => DynEngine::new(NativeEngine::with_parallelism(
+                cfg.engine_parallelism(),
+            )),
+            EngineKind::Tiled => DynEngine::new(
+                TiledEngine::with_tile(cfg.tile).with_parallelism(cfg.engine_parallelism()),
+            ),
             EngineKind::Software => DynEngine::new(SoftwareEngine),
             EngineKind::Xla => DynEngine::new(XlaEngine::from_default_dir()?),
         };
@@ -66,7 +77,7 @@ impl Ctx {
     /// Quick native-engine context for tests/benches.
     pub fn native(population: usize, out: &std::path::Path) -> Ctx {
         Ctx {
-            engine: DynEngine::new(NativeEngine),
+            engine: DynEngine::new(NativeEngine::default()),
             population,
             seed: 0x4D45_4C49_534F,
             parallelism: Parallelism::Auto,

@@ -96,6 +96,12 @@ pub fn entries() -> Vec<Entry> {
             paper: false,
             run: xtra::run_energy,
         },
+        Entry {
+            id: "size-sweep",
+            title: "Extension: error vs matrix size (tiled engine)",
+            paper: false,
+            run: xtra::run_size_sweep,
+        },
     ]
 }
 

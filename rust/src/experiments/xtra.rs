@@ -1,8 +1,10 @@
 //! Extension experiments beyond the paper's evaluation — the §IV
 //! outlook items: in-memory solver convergence under device error, a
-//! peripheral (ADC/DAC) precision ablation, and the device energy
-//! comparison.
+//! peripheral (ADC/DAC) precision ablation, the device energy
+//! comparison, and the tiled error-vs-size sweep (the scalable /
+//! distributed direction of arXiv:2508.13298).
 
+use crate::coordinator::{BenchmarkConfig, Coordinator};
 use crate::crossbar::energy::EnergyModel;
 use crate::crossbar::peripheral::Peripherals;
 use crate::device::params::NonIdealities;
@@ -14,9 +16,93 @@ use crate::solver::{
 };
 use crate::util::csv::CsvTable;
 use crate::util::json::{obj, Json};
+use crate::util::pool::Parallelism;
 use crate::util::rng::Xoshiro256;
+use crate::vmm::{TiledEngine, VmmEngine};
 
 use super::context::Ctx;
+
+/// Logical geometries of the size sweep (square matrices, 32x32 tiles).
+pub const SWEEP_SIZES: [usize; 5] = [32, 64, 128, 256, 512];
+
+/// Size sweep: the paper protocol re-run at growing workload geometry
+/// on the tiled engine — error statistics vs matrix size, with the
+/// per-output error normalized by the row count (the accumulation
+/// depth).  Populations are scaled so each size does comparable work.
+pub fn run_size_sweep(ctx: &Ctx) -> Result<Json> {
+    let w = ctx.writer("size-sweep");
+    let device = epiram().params.masked(NonIdealities::FULL);
+    // Honor the configured engine fan-out (--engine-threads, already
+    // capped by the --threads budget): mirror the fan the context's
+    // engine was built with instead of grabbing the whole budget.
+    let engine_par = Parallelism::Fixed(ctx.engine.internal_parallelism().max(1));
+
+    let mut t = TextTable::new([
+        "size", "tiles", "samples", "mean", "variance", "var/row", "VMM/s",
+    ])
+    .with_title("Size sweep: VMM error vs matrix size (EpiRAM, tiled 32x32)");
+    let mut csv = CsvTable::new([
+        "size", "tiles", "samples", "mean", "variance", "var_per_row", "vmm_per_s",
+    ]);
+    let mut series = Vec::new();
+
+    for size in SWEEP_SIZES {
+        // Constant-work scaling: one 512x512 sample costs 256x one
+        // 32x32 sample, so shrink the population accordingly.
+        let cap = ctx.population.max(4);
+        let population =
+            (cap * crate::ROWS * crate::COLS / (size * size)).clamp(4, cap);
+        let engine = TiledEngine::default().with_parallelism(engine_par);
+        let tiles = engine.tiles_for(size, size);
+        let mut cfg = BenchmarkConfig::paper_default(device)
+            .with_population(population)
+            .with_seed(ctx.seed);
+        cfg.workload.rows = size;
+        cfg.workload.cols = size;
+        cfg.parallelism = ctx.parallelism;
+        // Offset calibration stabilizes with few samples; don't let the
+        // calibration pass dominate the big geometries.
+        cfg.calibration_samples = 16;
+        let coord = Coordinator::new(engine);
+        let (pop, tel) = coord.run_with_telemetry(&cfg)?;
+        let s = pop.summary();
+        let var_per_row = s.variance / size as f64;
+        t.push([
+            size.to_string(),
+            tiles.to_string(),
+            population.to_string(),
+            fnum(s.mean),
+            fnum(s.variance),
+            fnum(var_per_row),
+            fnum(tel.throughput()),
+        ]);
+        csv.push_f64([
+            size as f64,
+            tiles as f64,
+            population as f64,
+            s.mean,
+            s.variance,
+            var_per_row,
+            tel.throughput(),
+        ]);
+        series.push(obj([
+            ("size", Json::Num(size as f64)),
+            ("tiles", Json::Num(tiles as f64)),
+            ("samples", Json::Num(population as f64)),
+            ("variance", Json::Num(s.variance)),
+            ("var_per_row", Json::Num(var_per_row)),
+        ]));
+    }
+
+    w.echo(&t.render());
+    w.csv("series", &csv)?;
+    let summary = obj([
+        ("id", Json::Str("size-sweep".into())),
+        ("series", Json::Arr(series)),
+    ]);
+    w.json("summary", &summary)?;
+    Ok(summary)
+}
 
 /// Solver study: CG on an SPD system with the products computed by
 /// each Table I device's crossbar — convergence floors track the VMM
@@ -253,6 +339,27 @@ mod tests {
         // Coarser ADC (later rows) must not reduce error; 3-bit must be
         // clearly worse than ideal.
         assert!(v[v.len() - 1] > v[0] * 2.0, "{v:?}");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn size_sweep_covers_all_sizes_and_error_grows() {
+        let dir = std::env::temp_dir().join("meliso_xtra_size_test");
+        let ctx = Ctx::native(16, &dir);
+        let s = run_size_sweep(&ctx).unwrap();
+        let series = s.get("series").unwrap().as_arr().unwrap();
+        assert_eq!(series.len(), SWEEP_SIZES.len());
+        let var = |i: usize| -> f64 {
+            series[i].get("variance").unwrap().as_f64().unwrap()
+        };
+        // Accumulating over more rows must grow the absolute error.
+        assert!(var(series.len() - 1) > var(0), "512: {} 32: {}", var(4), var(0));
+        // 128x128 runs through the coordinator with 16 tiles.
+        let r128 = &series[2];
+        assert_eq!(r128.get("size").unwrap().as_f64(), Some(128.0));
+        assert_eq!(r128.get("tiles").unwrap().as_f64(), Some(16.0));
+        assert!(var(2).is_finite() && var(2) > 0.0);
+        assert!(dir.join("size-sweep/series.csv").exists());
         let _ = std::fs::remove_dir_all(dir);
     }
 

@@ -35,6 +35,7 @@ pub mod stats;
 pub mod testkit;
 pub mod util;
 pub mod vmm;
+pub mod xla;
 
 pub use error::{Error, Result};
 

@@ -6,6 +6,7 @@ use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
+use crate::xla;
 
 use super::manifest::{ArtifactEntry, Manifest};
 

@@ -75,6 +75,61 @@ where
         .collect()
 }
 
+/// Split `0..n` into at most `par.threads()` contiguous blocks (near-
+/// equal sizes, in index order).  Used by the engines to fan samples
+/// across workers while keeping per-worker scratch buffers.
+pub fn partition_blocks(par: Parallelism, n: usize) -> Vec<(usize, usize)> {
+    let threads = par.threads().min(n.max(1)).max(1);
+    let base = n / threads;
+    let extra = n % threads;
+    let mut blocks = Vec::with_capacity(threads);
+    let mut start = 0;
+    for i in 0..threads {
+        let len = base + usize::from(i < extra);
+        if len > 0 {
+            blocks.push((start, len));
+            start += len;
+        }
+    }
+    blocks
+}
+
+/// Run `job(i, &mut scratch, out_i)` for every `i in 0..n`, where
+/// `out_i` is the `i`-th `stride`-sized slice of the returned buffer.
+/// Work is fanned over the pool in contiguous blocks (one per worker,
+/// via [`run_indexed`]); each worker builds its scratch **once** with
+/// `make_scratch` and reuses it across its samples.  Results are
+/// bit-identical for any `par` because every index writes only its own
+/// slice and sample computations are independent.
+pub fn run_blocked<T, S, FS, F>(
+    par: Parallelism,
+    n: usize,
+    stride: usize,
+    make_scratch: FS,
+    job: F,
+) -> Vec<T>
+where
+    T: Default + Clone + Send,
+    FS: Fn() -> S + Sync,
+    F: Fn(usize, &mut S, &mut [T]) + Sync,
+{
+    let blocks = partition_blocks(par, n);
+    let outs: Vec<Vec<T>> = run_indexed(par, blocks.len(), |bi| {
+        let (start, len) = blocks[bi];
+        let mut scratch = make_scratch();
+        let mut out = vec![T::default(); len * stride];
+        for i in 0..len {
+            job(start + i, &mut scratch, &mut out[i * stride..(i + 1) * stride]);
+        }
+        out
+    });
+    let mut all = Vec::with_capacity(n * stride);
+    for o in outs {
+        all.extend(o);
+    }
+    all
+}
+
 /// Map a slice in parallel, preserving order.
 pub fn par_map<T, U, F>(par: Parallelism, items: &[T], f: F) -> Vec<U>
 where
@@ -132,6 +187,54 @@ mod tests {
     fn auto_threads_positive() {
         assert!(Parallelism::Auto.threads() >= 1);
         assert_eq!(Parallelism::Fixed(0).threads(), 1);
+    }
+
+    #[test]
+    fn partition_covers_everything_in_order() {
+        for n in [0usize, 1, 2, 7, 64, 1000] {
+            for t in [1usize, 2, 3, 8, 64] {
+                let blocks = partition_blocks(Parallelism::Fixed(t), n);
+                let mut next = 0;
+                for &(start, len) in &blocks {
+                    assert_eq!(start, next, "n={n} t={t}");
+                    assert!(len > 0);
+                    next += len;
+                }
+                assert_eq!(next, n, "n={n} t={t}");
+                assert!(blocks.len() <= t.max(1));
+            }
+        }
+    }
+
+    #[test]
+    fn run_blocked_matches_sequential_for_any_thread_count() {
+        let job = |i: usize, scratch: &mut u64, out: &mut [u64]| {
+            *scratch += 1; // scratch reuse must not affect results
+            out[0] = (i * 3) as u64;
+            out[1] = (i * 3 + 1) as u64;
+        };
+        let seq = run_blocked(Parallelism::Fixed(1), 33, 2, || 0u64, job);
+        let par = run_blocked(Parallelism::Fixed(7), 33, 2, || 0u64, job);
+        assert_eq!(seq, par);
+        assert_eq!(seq.len(), 66);
+        assert_eq!(seq[6], 9); // sample 3, first element
+    }
+
+    #[test]
+    fn run_blocked_scratch_is_per_worker() {
+        use std::sync::atomic::AtomicUsize;
+        let made = AtomicUsize::new(0);
+        let _ = run_blocked(
+            Parallelism::Fixed(4),
+            100,
+            1,
+            || {
+                made.fetch_add(1, Ordering::Relaxed);
+            },
+            |i, _s, out: &mut [usize]| out[0] = i,
+        );
+        // One scratch per block, and at most one block per worker.
+        assert!(made.load(Ordering::Relaxed) <= 4);
     }
 
     #[test]

@@ -105,6 +105,15 @@ pub trait VmmEngine: Send + Sync {
     fn preferred_batches(&self) -> Vec<usize> {
         Vec::new()
     }
+
+    /// Worker threads this engine fans one `forward` call across.
+    /// The coordinator divides its chunk-level parallelism by this so
+    /// chunk- and engine-level parallelism compose instead of
+    /// oversubscribing the host.  Engines that run a batch on the
+    /// calling thread report 1.
+    fn internal_parallelism(&self) -> usize {
+        1
+    }
 }
 
 #[cfg(test)]

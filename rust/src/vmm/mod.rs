@@ -3,16 +3,21 @@
 //! * [`SoftwareEngine`] — exact f64 reference (the paper's
 //!   "software-calculated dot product").
 //! * [`NativeEngine`] — pure-rust crossbar simulation, sample-by-sample
-//!   identical physics to the artifacts; runs without `make artifacts`.
+//!   identical physics to the artifacts; fans samples across the worker
+//!   pool; runs without `make artifacts`.
+//! * [`TiledEngine`] — arbitrary-size workloads over a grid of physical
+//!   crossbar tiles (64x64 through 512x512 and beyond).
 //! * [`XlaEngine`] — executes the AOT-lowered L2/L1 pipeline through
-//!   PJRT; the production hot path.
+//!   PJRT; the production hot path (requires the `xla` binding).
 
 pub mod engine;
 pub mod native;
 pub mod software;
+pub mod tiled;
 pub mod xla_engine;
 
 pub use engine::{VmmBatch, VmmEngine, VmmOutput};
 pub use native::NativeEngine;
 pub use software::{software_vmm_batch, SoftwareEngine};
+pub use tiled::TiledEngine;
 pub use xla_engine::XlaEngine;

@@ -6,17 +6,71 @@
 //! statistically identical to the XLA path and numerically identical
 //! per sample up to f32 associativity.  Used for artifact-free runs,
 //! cross-validation, and as the baseline in the perf comparison.
+//!
+//! ## Parallelism
+//!
+//! `forward` fans the batch across the scoped worker pool
+//! ([`crate::util::pool::run_blocked`]) in contiguous sample blocks.
+//! Each worker owns one reusable [`CrossbarArray`]/[`ProgramNoise`]
+//! scratch pair and the per-device [`PulseTable`] is built once per
+//! call — no per-sample allocation on the hot path.  Every sample's
+//! physics is independent and written to its own output slice, so the
+//! result is **bit-identical for any thread count** (the determinism
+//! guard in `rust/tests/integration_tiled.rs` enforces this).
 
-use crate::crossbar::array::{CrossbarArray, ProgramNoise};
+use crate::crossbar::array::{CrossbarArray, ProgramNoise, PulseTable};
 use crate::device::params::DeviceParams;
 use crate::error::Result;
+use crate::util::pool::{run_blocked, Parallelism};
 
 use super::engine::{VmmBatch, VmmEngine, VmmOutput};
 use super::software::software_vmm_batch;
 
-/// Native (no-XLA) crossbar engine.
-#[derive(Debug, Default, Clone)]
-pub struct NativeEngine;
+/// Native (no-XLA) crossbar engine with engine-level parallelism.
+#[derive(Debug, Clone, Copy)]
+pub struct NativeEngine {
+    /// How many workers one `forward` call fans samples across.
+    pub par: Parallelism,
+}
+
+impl Default for NativeEngine {
+    fn default() -> Self {
+        Self { par: Parallelism::Auto }
+    }
+}
+
+impl NativeEngine {
+    /// Engine that fans each batch across all available CPUs.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Engine with an explicit worker count (1 = the sequential
+    /// baseline, exercised through the same code path).
+    pub fn with_parallelism(par: Parallelism) -> Self {
+        Self { par }
+    }
+
+    /// The sequential post-fix baseline used by the perf comparison.
+    pub fn sequential() -> Self {
+        Self::with_parallelism(Parallelism::Fixed(1))
+    }
+}
+
+/// Per-worker reusable programming scratch.
+struct Scratch {
+    arr: CrossbarArray,
+    noise: ProgramNoise,
+}
+
+impl Scratch {
+    fn new(rows: usize, cols: usize) -> Self {
+        Self {
+            arr: CrossbarArray::zeroed(rows, cols),
+            noise: ProgramNoise::zeros(rows * cols),
+        }
+    }
+}
 
 impl VmmEngine for NativeEngine {
     fn name(&self) -> &'static str {
@@ -26,19 +80,28 @@ impl VmmEngine for NativeEngine {
     fn forward(&self, batch: &VmmBatch, params: &DeviceParams) -> Result<VmmOutput> {
         batch.check()?;
         let (b, r, c) = (batch.batch, batch.rows, batch.cols);
-        let cells = r * c;
-        let mut y_hw = vec![0.0f32; b * c];
-        // Reusable noise view (copies are cheap relative to program()).
-        let mut noise = ProgramNoise::zeros(cells);
-        for s in 0..b {
-            noise.z0.copy_from_slice(batch.z_of(s, 0));
-            noise.z1.copy_from_slice(batch.z_of(s, 1));
-            noise.z2.copy_from_slice(batch.z_of(s, 2));
-            let arr = CrossbarArray::program(r, c, batch.w_of(s), params, &noise);
-            arr.read(batch.x_of(s), &mut y_hw[s * c..(s + 1) * c]);
-        }
+        // Shared per-device pulse table: one grid build per call
+        // instead of one per sample.
+        let table = PulseTable::new(params, false);
+        let y_hw = run_blocked(
+            self.par,
+            b,
+            c,
+            || Scratch::new(r, c),
+            |s, scratch, out| {
+                scratch.noise.z0.copy_from_slice(batch.z_of(s, 0));
+                scratch.noise.z1.copy_from_slice(batch.z_of(s, 1));
+                scratch.noise.z2.copy_from_slice(batch.z_of(s, 2));
+                scratch.arr.reprogram(batch.w_of(s), params, &scratch.noise, &table);
+                scratch.arr.read(batch.x_of(s), out);
+            },
+        );
         let y_sw = software_vmm_batch(batch);
         Ok(VmmOutput { y_hw, y_sw })
+    }
+
+    fn internal_parallelism(&self) -> usize {
+        self.par.threads()
     }
 }
 
@@ -63,7 +126,9 @@ mod tests {
     #[test]
     fn ideal_device_near_zero_error() {
         let b = random_batch(8, 32, 32, 141, false);
-        let out = NativeEngine.forward(&b, &DeviceParams::ideal()).unwrap();
+        let out = NativeEngine::default()
+            .forward(&b, &DeviceParams::ideal())
+            .unwrap();
         for &e in &out.errors() {
             assert!(e.abs() < 5e-3, "e={e}");
         }
@@ -73,7 +138,7 @@ mod tests {
     fn table1_device_produces_structured_error() {
         let b = random_batch(64, 32, 32, 142, true);
         let params = presets::ag_si().params;
-        let out = NativeEngine.forward(&b, &params).unwrap();
+        let out = NativeEngine::default().forward(&b, &params).unwrap();
         let m = Moments::from_slice(&out.errors());
         // Non-ideal Ag:a-Si: errors are definitely not zero…
         assert!(m.variance() > 0.1);
@@ -85,9 +150,35 @@ mod tests {
     fn deterministic_given_noise() {
         let b = random_batch(4, 16, 16, 143, true);
         let params = presets::epiram().params;
-        let o1 = NativeEngine.forward(&b, &params).unwrap();
-        let o2 = NativeEngine.forward(&b, &params).unwrap();
+        let o1 = NativeEngine::default().forward(&b, &params).unwrap();
+        let o2 = NativeEngine::default().forward(&b, &params).unwrap();
         assert_eq!(o1.y_hw, o2.y_hw);
+    }
+
+    #[test]
+    fn parallel_fan_is_bit_identical_to_sequential() {
+        let b = random_batch(37, 32, 32, 146, true);
+        let params = presets::ag_si().params;
+        let seq = NativeEngine::sequential().forward(&b, &params).unwrap();
+        for threads in [2usize, 3, 8] {
+            let par = NativeEngine::with_parallelism(Parallelism::Fixed(threads))
+                .forward(&b, &params)
+                .unwrap();
+            assert_eq!(seq.y_hw, par.y_hw, "threads={threads}");
+            assert_eq!(seq.y_sw, par.y_sw);
+        }
+        let auto = NativeEngine::default().forward(&b, &params).unwrap();
+        assert_eq!(seq.y_hw, auto.y_hw);
+    }
+
+    #[test]
+    fn internal_parallelism_reported() {
+        assert_eq!(NativeEngine::sequential().internal_parallelism(), 1);
+        assert_eq!(
+            NativeEngine::with_parallelism(Parallelism::Fixed(5)).internal_parallelism(),
+            5
+        );
+        assert!(NativeEngine::default().internal_parallelism() >= 1);
     }
 
     #[test]
@@ -96,7 +187,7 @@ mod tests {
         // workloads (both with non-idealities).
         let b = random_batch(128, 32, 32, 144, true);
         let var = |p: &DeviceParams| {
-            let out = NativeEngine.forward(&b, p).unwrap();
+            let out = NativeEngine::default().forward(&b, p).unwrap();
             Moments::from_slice(&out.errors()).variance()
         };
         let epi = var(&presets::epiram().params);
@@ -109,7 +200,7 @@ mod tests {
     #[test]
     fn software_reference_is_exact_dot() {
         let b = random_batch(2, 8, 8, 145, true);
-        let out = NativeEngine
+        let out = NativeEngine::default()
             .forward(&b, &presets::taox_hfox().params)
             .unwrap();
         for s in 0..2 {

@@ -1,0 +1,201 @@
+//! Tiled crossbar engine: benchmark populations at arbitrary workload
+//! geometries by mapping each sample's weight matrix onto a grid of
+//! physical crossbar tiles ([`crate::crossbar::tile::TiledCrossbar`])
+//! with bit-line current summation across the grid.
+//!
+//! This opens the benchmark beyond the paper's single 32x32 protocol:
+//! the `size-sweep` experiment runs 64x64 through 512x512 populations
+//! through the same [`crate::coordinator::Coordinator`] path, following
+//! the scalable/distributed direction of arXiv:2508.13298.
+//!
+//! The engine consumes the standard [`VmmBatch`] contract — the noise
+//! planes cover the *logical* geometry and are sliced per tile, so
+//! each tile's physics is a deterministic function of the sample's
+//! `(w, z)` and the tile geometry (every tile is its own programming
+//! cycle, with the cycle severity normalized over its real cells).
+//! With a single tile the output is bit-identical to
+//! [`super::NativeEngine`].  Samples are fanned across the scoped pool
+//! exactly like the native engine; results are bit-identical for any
+//! thread count.
+
+use crate::crossbar::array::PulseTable;
+use crate::crossbar::tile::{TileScratch, TiledCrossbar};
+use crate::device::params::DeviceParams;
+use crate::error::{Error, Result};
+use crate::util::pool::{run_blocked, Parallelism};
+
+use super::engine::{VmmBatch, VmmEngine, VmmOutput};
+use super::software::software_vmm_batch;
+
+/// Crossbar engine for arbitrary-size workloads over a tile grid.
+#[derive(Debug, Clone, Copy)]
+pub struct TiledEngine {
+    /// Physical tile geometry (paper hardware: 32x32).
+    pub tile_rows: usize,
+    pub tile_cols: usize,
+    /// How many workers one `forward` call fans samples across.
+    pub par: Parallelism,
+}
+
+impl Default for TiledEngine {
+    fn default() -> Self {
+        Self {
+            tile_rows: crate::ROWS,
+            tile_cols: crate::COLS,
+            par: Parallelism::Auto,
+        }
+    }
+}
+
+impl TiledEngine {
+    /// Engine with square tiles of the given size.
+    pub fn with_tile(tile: usize) -> Self {
+        Self {
+            tile_rows: tile,
+            tile_cols: tile,
+            ..Self::default()
+        }
+    }
+
+    /// Set the engine-level parallelism.
+    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
+        self.par = par;
+        self
+    }
+
+    /// Tiles needed for one `rows x cols` sample.
+    pub fn tiles_for(&self, rows: usize, cols: usize) -> usize {
+        rows.div_ceil(self.tile_rows) * cols.div_ceil(self.tile_cols)
+    }
+}
+
+impl VmmEngine for TiledEngine {
+    fn name(&self) -> &'static str {
+        "tiled"
+    }
+
+    fn forward(&self, batch: &VmmBatch, params: &DeviceParams) -> Result<VmmOutput> {
+        batch.check()?;
+        if self.tile_rows == 0 || self.tile_cols == 0 {
+            return Err(Error::Config("tile geometry must be positive".into()));
+        }
+        let (b, r, c) = (batch.batch, batch.rows, batch.cols);
+        let table = PulseTable::new(params, false);
+        // Stream tiles through a per-worker scratch array — no
+        // per-sample allocation, same arithmetic as materializing a
+        // TiledCrossbar per sample.
+        let y_hw = run_blocked(
+            self.par,
+            b,
+            c,
+            || TileScratch::new(self.tile_rows, self.tile_cols),
+            |s, scratch, out| {
+                let z = [batch.z_of(s, 0), batch.z_of(s, 1), batch.z_of(s, 2)];
+                TiledCrossbar::vmm_with_noise(
+                    r,
+                    c,
+                    batch.w_of(s),
+                    params,
+                    z,
+                    &table,
+                    batch.x_of(s),
+                    out,
+                    scratch,
+                );
+            },
+        );
+        let y_sw = software_vmm_batch(batch);
+        Ok(VmmOutput { y_hw, y_sw })
+    }
+
+    fn internal_parallelism(&self) -> usize {
+        self.par.threads()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+    use crate::stats::moments::Moments;
+    use crate::util::rng::Xoshiro256;
+    use crate::vmm::NativeEngine;
+
+    fn random_batch(b: usize, r: usize, c: usize, seed: u64) -> VmmBatch {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut vb = VmmBatch::zeros(b, r, c);
+        rng.fill_uniform_f32(&mut vb.w, -1.0, 1.0);
+        rng.fill_uniform_f32(&mut vb.x, -1.0, 1.0);
+        rng.fill_normal_f32(&mut vb.z);
+        vb
+    }
+
+    #[test]
+    fn single_tile_bit_identical_to_native_engine() {
+        let b = random_batch(6, 32, 32, 211);
+        let params = presets::ag_si().params;
+        let tiled = TiledEngine::default().forward(&b, &params).unwrap();
+        let native = NativeEngine::sequential().forward(&b, &params).unwrap();
+        assert_eq!(tiled.y_hw, native.y_hw);
+        assert_eq!(tiled.y_sw, native.y_sw);
+    }
+
+    #[test]
+    fn parallel_fan_is_bit_identical_to_sequential() {
+        let b = random_batch(9, 64, 64, 212);
+        let params = presets::epiram().params;
+        let seq = TiledEngine::default()
+            .with_parallelism(Parallelism::Fixed(1))
+            .forward(&b, &params)
+            .unwrap();
+        let par = TiledEngine::default()
+            .with_parallelism(Parallelism::Fixed(4))
+            .forward(&b, &params)
+            .unwrap();
+        assert_eq!(seq.y_hw, par.y_hw);
+    }
+
+    #[test]
+    fn ideal_device_tracks_software_at_128() {
+        let b = random_batch(2, 128, 128, 213);
+        let out = TiledEngine::default()
+            .forward(&b, &DeviceParams::ideal())
+            .unwrap();
+        for (i, &e) in out.errors().iter().enumerate() {
+            // 128-term sums of f32-quantized weights: loose bound.
+            assert!(e.abs() < 0.1, "element {i}: e={e}");
+        }
+    }
+
+    #[test]
+    fn error_variance_grows_with_size() {
+        let params = presets::epiram().params;
+        let var_at = |size: usize, seed: u64| {
+            let b = random_batch(8, size, size, seed);
+            let out = TiledEngine::default().forward(&b, &params).unwrap();
+            Moments::from_slice(&out.errors()).variance()
+        };
+        let v32 = var_at(32, 214);
+        let v128 = var_at(128, 215);
+        // More rows per output -> more accumulated device error.
+        assert!(v128 > v32, "v128={v128} v32={v32}");
+    }
+
+    #[test]
+    fn ragged_geometry_supported() {
+        let b = random_batch(3, 50, 70, 216);
+        let params = presets::taox_hfox().params;
+        let out = TiledEngine::default().forward(&b, &params).unwrap();
+        assert_eq!(out.y_hw.len(), 3 * 70);
+        assert!(out.errors().iter().all(|e| e.is_finite()));
+        let eng = TiledEngine::default();
+        assert_eq!(eng.tiles_for(50, 70), 2 * 3);
+    }
+
+    #[test]
+    fn zero_tile_rejected() {
+        let eng = TiledEngine { tile_rows: 0, ..TiledEngine::default() };
+        let b = random_batch(1, 8, 8, 217);
+        assert!(eng.forward(&b, &presets::epiram().params).is_err());
+    }
+}

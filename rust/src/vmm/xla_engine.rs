@@ -123,9 +123,12 @@ mod tests {
 
     #[test]
     fn missing_artifacts_error_is_actionable() {
-        std::env::set_var("MELISO_ARTIFACTS", "/nonexistent/meliso-artifacts");
-        let err = XlaEngine::from_default_dir().unwrap_err();
-        std::env::remove_var("MELISO_ARTIFACTS");
+        // Note: build the runtime against an explicit bad path instead
+        // of mutating MELISO_ARTIFACTS — env mutation races the
+        // default_dir test in runtime::client under the parallel test
+        // runner.
+        let err = XlaRuntime::new(std::path::Path::new("/nonexistent/meliso-artifacts"))
+            .unwrap_err();
         let msg = err.to_string();
         assert!(msg.contains("artifact"), "{msg}");
     }

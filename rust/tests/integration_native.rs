@@ -10,7 +10,7 @@ use meliso::vmm::{NativeEngine, SoftwareEngine};
 
 fn run(device: DeviceParams, population: usize) -> meliso::coordinator::ErrorPopulation {
     let cfg = BenchmarkConfig::paper_default(device).with_population(population);
-    Coordinator::new(NativeEngine).run(&cfg).unwrap()
+    Coordinator::new(NativeEngine::default()).run(&cfg).unwrap()
 }
 
 #[test]
@@ -84,24 +84,28 @@ fn nonideal_epiram_has_heavy_tails() {
 
 #[test]
 fn population_is_engine_schedule_and_thread_invariant() {
+    // Sequential engine so the Fixed(1)-vs-Fixed(8) budget reaches the
+    // chunk pool instead of being absorbed by the engine fan-out
+    // division; engine-level thread invariance is covered by
+    // integration_tiled.rs.
     let device = presets::taox_hfox().params.masked(NonIdealities::FULL);
     let mut cfg = BenchmarkConfig::paper_default(device).with_population(64);
     cfg.parallelism = Parallelism::Fixed(1);
     cfg.chunk = 64;
-    let a = Coordinator::new(NativeEngine).run(&cfg).unwrap();
+    let a = Coordinator::new(NativeEngine::sequential()).run(&cfg).unwrap();
     cfg.parallelism = Parallelism::Fixed(8);
     cfg.chunk = 5;
-    let b = Coordinator::new(NativeEngine).run(&cfg).unwrap();
+    let b = Coordinator::new(NativeEngine::sequential()).run(&cfg).unwrap();
     assert_eq!(a.errors(), b.errors());
 }
 
 #[test]
 fn seeds_change_samples_not_statistics() {
     let device = presets::epiram().params.masked(NonIdealities::FULL);
-    let a = Coordinator::new(NativeEngine)
+    let a = Coordinator::new(NativeEngine::default())
         .run(&BenchmarkConfig::paper_default(device).with_population(400).with_seed(1))
         .unwrap();
-    let b = Coordinator::new(NativeEngine)
+    let b = Coordinator::new(NativeEngine::default())
         .run(&BenchmarkConfig::paper_default(device).with_population(400).with_seed(2))
         .unwrap();
     assert_ne!(a.errors()[..32], b.errors()[..32]);
@@ -114,7 +118,7 @@ fn seeds_change_samples_not_statistics() {
 fn error_telemetry_counts_match() {
     let device = presets::ag_si().params;
     let cfg = BenchmarkConfig::paper_default(device).with_population(123);
-    let (pop, tel) = Coordinator::new(NativeEngine)
+    let (pop, tel) = Coordinator::new(NativeEngine::default())
         .run_with_telemetry(&cfg)
         .unwrap();
     assert_eq!(tel.samples, 123);

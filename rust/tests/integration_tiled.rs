@@ -1,0 +1,108 @@
+//! Integration: the parallel engine path and the tiled engine through
+//! the coordinator — determinism guards for the engine-level fan-out
+//! refactor plus the arbitrary-geometry population contract.
+
+use meliso::coordinator::{BenchmarkConfig, Coordinator};
+use meliso::device::params::NonIdealities;
+use meliso::device::presets;
+use meliso::experiments::{registry, Ctx};
+use meliso::util::pool::Parallelism;
+use meliso::vmm::{NativeEngine, TiledEngine};
+
+/// The refactor's determinism guard: engine-level `Fixed(1)` and
+/// `Auto` produce **bit-identical** population statistics through the
+/// new parallel engine path.
+#[test]
+fn native_engine_fixed1_and_auto_bit_identical() {
+    let device = presets::ag_si().params.masked(NonIdealities::FULL);
+    let cfg = BenchmarkConfig::paper_default(device).with_population(96);
+
+    let serial = Coordinator::new(NativeEngine::with_parallelism(Parallelism::Fixed(1)))
+        .run(&cfg)
+        .unwrap();
+    let auto = Coordinator::new(NativeEngine::with_parallelism(Parallelism::Auto))
+        .run(&cfg)
+        .unwrap();
+
+    assert_eq!(serial.errors(), auto.errors());
+    assert_eq!(serial.stats().count(), auto.stats().count());
+    assert_eq!(serial.stats().mean(), auto.stats().mean());
+    assert_eq!(serial.stats().variance(), auto.stats().variance());
+}
+
+#[test]
+fn tiled_engine_fixed1_and_auto_bit_identical() {
+    let device = presets::epiram().params.masked(NonIdealities::FULL);
+    let mut cfg = BenchmarkConfig::paper_default(device).with_population(12);
+    cfg.workload.rows = 96;
+    cfg.workload.cols = 96;
+    cfg.calibration_samples = 8;
+
+    let serial = Coordinator::new(
+        TiledEngine::default().with_parallelism(Parallelism::Fixed(1)),
+    )
+    .run(&cfg)
+    .unwrap();
+    let auto = Coordinator::new(TiledEngine::default().with_parallelism(Parallelism::Auto))
+        .run(&cfg)
+        .unwrap();
+
+    assert_eq!(serial.errors(), auto.errors());
+}
+
+/// At the paper geometry the tiled engine degenerates to one tile and
+/// must reproduce the native engine's population exactly.
+#[test]
+fn tiled_at_paper_geometry_matches_native_engine() {
+    let device = presets::taox_hfox().params.masked(NonIdealities::FULL);
+    let cfg = BenchmarkConfig::paper_default(device).with_population(48);
+
+    let native = Coordinator::new(NativeEngine::default()).run(&cfg).unwrap();
+    let tiled = Coordinator::new(TiledEngine::default()).run(&cfg).unwrap();
+
+    assert_eq!(native.errors(), tiled.errors());
+}
+
+/// Acceptance: a >= 128x128 population completes through the
+/// coordinator with sane error statistics.
+#[test]
+fn tiled_population_at_128_completes_through_coordinator() {
+    let device = presets::epiram().params.masked(NonIdealities::FULL);
+    let mut cfg = BenchmarkConfig::paper_default(device).with_population(16);
+    cfg.workload.rows = 128;
+    cfg.workload.cols = 128;
+    cfg.calibration_samples = 8;
+
+    let coord = Coordinator::new(TiledEngine::default());
+    let (pop, tel) = coord.run_with_telemetry(&cfg).unwrap();
+
+    assert_eq!(pop.len(), 16 * 128);
+    assert_eq!(tel.samples, 16);
+    assert!(tel.engine_threads >= 1);
+    let var = pop.stats().variance();
+    assert!(var.is_finite() && var > 0.0, "var={var}");
+
+    // Error accumulates with depth: the 128-row population is wider
+    // than the paper-geometry one under the same device.
+    let cfg32 = BenchmarkConfig::paper_default(device).with_population(16);
+    let pop32 = coord.run(&cfg32).unwrap();
+    assert!(var > pop32.stats().variance(), "128: {var} 32: {}", pop32.stats().variance());
+}
+
+/// The size-sweep experiment reports error stats for every geometry
+/// (the reporting half of the acceptance criterion).
+#[test]
+fn size_sweep_experiment_reports_all_geometries() {
+    let dir = std::env::temp_dir().join("meliso_it_size_sweep");
+    let _ = std::fs::remove_dir_all(&dir);
+    let ctx = Ctx::native(12, &dir);
+    let s = registry::run_by_id("size-sweep", &ctx).unwrap();
+    let series = s.get("series").unwrap().as_arr().unwrap();
+    assert_eq!(series.len(), 5);
+    for row in series {
+        let v = row.get("variance").unwrap().as_f64().unwrap();
+        assert!(v.is_finite() && v > 0.0);
+    }
+    assert!(dir.join("size-sweep/summary.json").exists());
+    let _ = std::fs::remove_dir_all(dir);
+}

@@ -63,7 +63,7 @@ fn prop_native_engine_error_vanishes_as_device_idealizes() {
     check(cfg(24, 3), &UsizeIn { lo: 0, hi: 1 << 20 }, |&seed| {
         let spec = WorkloadSpec::paper_default(seed as u64);
         let batch = spec.chunk(0, 4);
-        let out = NativeEngine.forward(&batch, &DeviceParams::ideal()).unwrap();
+        let out = NativeEngine::default().forward(&batch, &DeviceParams::ideal()).unwrap();
         out.errors().iter().all(|e| e.abs() < 1e-2)
     });
 }
@@ -151,7 +151,7 @@ fn prop_engine_error_scales_with_c2c() {
                 .with_weight_bits(7)
                 .with_memory_window(100.0)
                 .with_c2c(sigma);
-            let out = NativeEngine.forward(&batch, &p).unwrap();
+            let out = NativeEngine::default().forward(&batch, &p).unwrap();
             Moments::from_slice(&out.errors()).variance()
         };
         var(0.05) > var(0.01) && var(0.01) > var(0.0)

@@ -12,6 +12,7 @@
 use meliso::coordinator::{BenchmarkConfig, Coordinator, WorkloadSpec};
 use meliso::device::params::NonIdealities;
 use meliso::device::presets;
+use meliso::mitigation::{MitigatedEngine, MitigationConfig};
 use meliso::stats::moments::Moments;
 use meliso::util::bench::{bench, black_box, BenchOpts};
 use meliso::vmm::{NativeEngine, TiledEngine, VmmEngine, XlaEngine};
@@ -52,6 +53,27 @@ fn main() {
         "      native parallel speedup: {:.2}x samples/sec over sequential",
         par.items_per_sec(256.0) / seq.items_per_sec(256.0)
     );
+
+    // Mitigation pipeline: throughput cost of each strategy (and the
+    // combined pipeline) over the parallel native engine — the price
+    // column of the mitigation-sweep experiment.
+    for spec in ["diff", "slice:2", "avg:4", "cal", "diff,slice:2,avg:4,cal"] {
+        let eng = MitigatedEngine::new(
+            NativeEngine::default(),
+            MitigationConfig::parse(spec).unwrap(),
+        );
+        let res = bench(
+            &format!("mitigated native ({spec}): forward 256 x 32x32"),
+            BenchOpts { samples: 5, warmup: 1, items_per_iter: Some(256.0) },
+            || {
+                black_box(eng.forward(&b256, &device).unwrap());
+            },
+        );
+        println!(
+            "      mitigation cost ({spec}): {:.2}x parallel-native throughput",
+            res.items_per_sec(256.0) / par.items_per_sec(256.0)
+        );
+    }
 
     // Tiled engine: arbitrary-size populations over 32x32 tile grids.
     let tiled = TiledEngine::default();

@@ -6,15 +6,17 @@
 //! meliso run <experiment|all> [--engine native|tiled|xla|software]
 //!            [--population N] [--seed N] [--out DIR] [--threads N]
 //!            [--engine-threads N] [--size N] [--tile N]
-//!            [--config FILE] [--quiet]
+//!            [--mitigation SPEC] [--config FILE] [--quiet]
 //! meliso bench [--engine ...] [--population N] [--size N]
 //! meliso fit --input FILE.csv [--column K]
 //! meliso solve [--device ID] [--n N] [--solver cg|jacobi|richardson]
+//!              [--mitigation SPEC]
 //! meliso warmup                                    # precompile artifacts
 //! ```
 
 use crate::config::{EngineKind, RunConfig};
 use crate::error::{Error, Result};
+use crate::mitigation::MitigationConfig;
 
 /// Parsed command line.
 #[derive(Debug, Clone)]
@@ -67,6 +69,9 @@ OPTIONS:
                                    [default: 32]
   --tile <N>                       Physical tile size of the tiled engine
                                    [default: 32]
+  --mitigation <SPEC>              Error-mitigation pipeline, a comma list of
+                                   diff | slice:K | avg:R | cal[:P]
+                                   (e.g. diff,slice:2,avg:4) [default: none]
   --config <FILE>                  TOML config file (CLI flags override)
   --quiet                          Suppress terminal tables
 ";
@@ -129,6 +134,9 @@ impl Args {
                     if config.tile == 0 {
                         return Err(Error::Config("tile must be > 0".into()));
                     }
+                }
+                "mitigation" => {
+                    config.mitigation = MitigationConfig::parse(req(name, v)?)?;
                 }
                 "quiet" => config.quiet = true,
                 "config" | "input" | "column" | "device" | "n" | "solver" => {}
@@ -247,6 +255,21 @@ mod tests {
         assert_eq!(a.config.size, 128);
         assert_eq!(a.config.tile, 64);
         assert_eq!(a.config.engine_threads, 4);
+    }
+
+    #[test]
+    fn parses_mitigation_flag() {
+        let a = parse("run mitigation-sweep --mitigation diff,slice:2,avg:4,cal").unwrap();
+        assert!(a.config.mitigation.differential);
+        assert_eq!(a.config.mitigation.slices, 2);
+        assert_eq!(a.config.mitigation.replicas, 4);
+        assert!(a.config.mitigation.calibrate);
+        let a = parse("solve --mitigation avg:2").unwrap();
+        assert_eq!(a.config.mitigation.replicas, 2);
+        // Default is the identity pipeline.
+        assert!(parse("run fig3").unwrap().config.mitigation.is_noop());
+        assert!(parse("run fig3 --mitigation bogus").is_err());
+        assert!(parse("run fig3 --mitigation").is_err());
     }
 
     #[test]

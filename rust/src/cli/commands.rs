@@ -160,7 +160,14 @@ fn solve(args: &Args, device_id: &str, n: usize, solver: &str) -> Result<i32> {
     }
     let b: Vec<f64> = (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
     let exact = ExactOperator::new(n, n, a.clone());
-    let op = CrossbarOperator::program(n, n, &a, &device, &mut rng);
+    let op = CrossbarOperator::program_mitigated(
+        n,
+        n,
+        &a,
+        &device,
+        &mut rng,
+        &args.config.mitigation,
+    );
     let opts = SolveOpts { max_iters: 300, tol: 1e-8 };
 
     let result = match solver {
@@ -179,6 +186,8 @@ fn solve(args: &Args, device_id: &str, n: usize, solver: &str) -> Result<i32> {
 
     let mut t = TextTable::new(["metric", "value"])
         .with_title(format!("In-memory {solver} on {}x{n} ({})", n, preset.name));
+    t.push(["mitigation", &args.config.mitigation.label()]);
+    t.push(["crossbar arrays", &op.array_count().to_string()]);
     t.push(["iterations", &result.iterations.to_string()]);
     t.push(["converged", &result.converged.to_string()]);
     t.push([

@@ -6,9 +6,10 @@
 //! # meliso.toml
 //! population = 1000
 //! seed = 42
-//! engine = "native"          # native | xla | software
+//! engine = "native"          # native | tiled | xla | software
 //! out = "out"
 //! threads = 0                 # 0 = auto
+//! mitigation = "diff,avg:4"   # error-mitigation pipeline (default none)
 //!
 //! [device]                    # optional custom device
 //! states = 97
@@ -24,6 +25,7 @@ use crate::device::params::{
     DeviceParams, DEFAULT_K_BASE, DEFAULT_K_C2C, DEFAULT_S_EXP,
 };
 use crate::error::{Error, Result};
+use crate::mitigation::MitigationConfig;
 use crate::util::pool::Parallelism;
 use crate::util::toml::TomlDoc;
 
@@ -82,6 +84,10 @@ pub struct RunConfig {
     pub size: usize,
     /// Physical tile geometry of the tiled engine (square tiles).
     pub tile: usize,
+    /// Error-mitigation pipeline applied to the engine and the solver
+    /// operators (`--mitigation diff,slice:2,avg:4,cal`; identity by
+    /// default).
+    pub mitigation: MitigationConfig,
     pub quiet: bool,
     /// Optional custom device overriding the presets.
     pub custom_device: Option<DeviceParams>,
@@ -98,6 +104,7 @@ impl Default for RunConfig {
             engine_threads: 0,
             size: crate::ROWS,
             tile: crate::ROWS,
+            mitigation: MitigationConfig::NONE,
             quiet: false,
             custom_device: None,
         }
@@ -193,6 +200,12 @@ impl RunConfig {
                 .ok_or_else(|| Error::Config("tile must be a positive int".into()))?
                 as usize;
         }
+        if let Some(v) = doc.get("", "mitigation") {
+            cfg.mitigation = MitigationConfig::parse(
+                v.as_str()
+                    .ok_or_else(|| Error::Config("mitigation must be a string".into()))?,
+            )?;
+        }
         if let Some(v) = doc.get("", "quiet") {
             cfg.quiet = v
                 .as_bool()
@@ -286,6 +299,17 @@ sigma_c2c = 0.035
         assert!(EngineKind::parse("gpu").is_err());
         assert_eq!(EngineKind::Native.name(), "native");
         assert_eq!(EngineKind::Tiled.name(), "tiled");
+    }
+
+    #[test]
+    fn mitigation_key_parses() {
+        let c = RunConfig::from_toml("mitigation = \"diff,slice:2,avg:4,cal\"\n").unwrap();
+        assert!(c.mitigation.differential && c.mitigation.calibrate);
+        assert_eq!(c.mitigation.slices, 2);
+        assert_eq!(c.mitigation.replicas, 4);
+        assert!(RunConfig::default().mitigation.is_noop());
+        assert!(RunConfig::from_toml("mitigation = \"frob\"\n").is_err());
+        assert!(RunConfig::from_toml("mitigation = 3\n").is_err());
     }
 
     #[test]

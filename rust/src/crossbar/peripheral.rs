@@ -63,13 +63,21 @@ impl Peripherals {
     }
 }
 
-/// Mid-rise uniform quantizer over `[-fs, fs]` with `2^bits` levels,
-/// clamping outside the full-scale range.
+/// Symmetric uniform quantizer with **exactly `2^bits` codes**: the
+/// two's-complement mid-tread grid `k * step` for
+/// `k in [-2^(bits-1), 2^(bits-1) - 1]`, step `2*fs / 2^bits`.  Zero is
+/// a code, the bottom rail `-fs` is a code, and the top code is
+/// `fs - step` — an N-bit converter cannot represent both rails.
+/// (The previous mid-rise variant emitted `2^bits + 1` levels: its
+/// positive clamp at `fs - step/2` still rounded up to `+fs`.)
 fn quantize_symmetric(x: f32, bits: u32, fs: f32) -> f32 {
-    let levels = (1u64 << bits) as f32;
-    let step = 2.0 * fs / levels;
-    let clamped = x.clamp(-fs, fs - step * 0.5);
-    ((clamped / step).round() * step).clamp(-fs, fs)
+    if bits == 0 {
+        return 0.0;
+    }
+    let half_codes = (1u64 << (bits - 1)) as f32;
+    let step = fs / half_codes;
+    let code = (x / step).round().clamp(-half_codes, half_codes - 1.0);
+    code * step
 }
 
 #[cfg(test)]
@@ -109,6 +117,31 @@ mod tests {
         assert!(err(2) > err(4));
         assert!(err(4) > err(8));
         assert!(err(8) < 0.005);
+    }
+
+    #[test]
+    fn quantizer_emits_exactly_two_pow_bits_codes() {
+        // The bug this guards against: the old mid-rise grid emitted
+        // 2^bits + 1 levels because both rails were representable.
+        for bits in [1u32, 2, 3, 5] {
+            let p = Peripherals::default().with_dac(bits);
+            let mut codes: Vec<i64> = (0..=20_000)
+                .map(|i| {
+                    let x = (i as f32 / 10_000.0) - 1.0; // [-1, 1]
+                    (p.dac(x) * 1e6).round() as i64
+                })
+                .collect();
+            codes.sort_unstable();
+            codes.dedup();
+            assert_eq!(codes.len(), 1usize << bits, "bits={bits}");
+        }
+        // Top code is fs - step, bottom code is -fs.
+        let p = Peripherals::default().with_adc(4);
+        let fs = 8.0f32;
+        let step = 2.0 * fs / 16.0;
+        assert_eq!(p.adc(fs, fs), fs - step);
+        assert_eq!(p.adc(1e9, fs), fs - step);
+        assert_eq!(p.adc(-fs, fs), -fs);
     }
 
     #[test]

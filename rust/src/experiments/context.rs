@@ -6,7 +6,8 @@ use std::sync::Arc;
 use crate::config::{EngineKind, RunConfig};
 use crate::coordinator::{BenchmarkConfig, Coordinator, ErrorPopulation};
 use crate::device::params::DeviceParams;
-use crate::error::Result;
+use crate::error::{Error, Result};
+use crate::mitigation::{MitigatedEngine, MitigationConfig};
 use crate::report::writer::ReportWriter;
 use crate::util::pool::Parallelism;
 use crate::vmm::{
@@ -43,7 +44,17 @@ impl VmmEngine for DynEngine {
 
 /// Everything an experiment needs to run.
 pub struct Ctx {
+    /// The configured engine — wrapped in the mitigation pipeline when
+    /// `--mitigation` is set.
     pub engine: DynEngine,
+    /// The same engine *without* any mitigation wrapper.  Experiments
+    /// that apply their own mitigation configs (`mitigation-sweep`)
+    /// build on this so their unmitigated baseline is genuine.
+    pub base_engine: DynEngine,
+    /// The configured mitigation pipeline (identity unless
+    /// `--mitigation` / the TOML key was set); experiments that manage
+    /// their own operators (`solver`) honor it from here.
+    pub mitigation: MitigationConfig,
     pub population: usize,
     pub seed: u64,
     pub parallelism: Parallelism,
@@ -52,8 +63,19 @@ pub struct Ctx {
 }
 
 impl Ctx {
-    /// Build from a resolved run configuration (constructs the engine).
+    /// Build from a resolved run configuration (constructs the engine,
+    /// wrapped in the mitigation pipeline when one is configured).
     pub fn from_config(cfg: &RunConfig) -> Result<Ctx> {
+        // Calibration enlarges probe batches, which an artifact-pinned
+        // engine cannot serve: fail at config time, not mid-experiment.
+        if cfg.engine == EngineKind::Xla && cfg.mitigation.calibrate {
+            return Err(Error::Config(
+                "mitigation 'cal' is not supported with --engine xla \
+                 (probe batches do not match the pinned artifact sizes); \
+                 use --engine native or tiled"
+                    .into(),
+            ));
+        }
         let engine = match cfg.engine {
             EngineKind::Native => DynEngine::new(NativeEngine::with_parallelism(
                 cfg.engine_parallelism(),
@@ -64,8 +86,16 @@ impl Ctx {
             EngineKind::Software => DynEngine::new(SoftwareEngine),
             EngineKind::Xla => DynEngine::new(XlaEngine::from_default_dir()?),
         };
+        let base_engine = engine.clone();
+        let engine = if cfg.mitigation.is_noop() {
+            engine
+        } else {
+            DynEngine::new(MitigatedEngine::new(engine, cfg.mitigation))
+        };
         Ok(Ctx {
             engine,
+            base_engine,
+            mitigation: cfg.mitigation,
             population: cfg.population,
             seed: cfg.seed,
             parallelism: cfg.parallelism(),
@@ -76,8 +106,11 @@ impl Ctx {
 
     /// Quick native-engine context for tests/benches.
     pub fn native(population: usize, out: &std::path::Path) -> Ctx {
+        let engine = DynEngine::new(NativeEngine::default());
         Ctx {
-            engine: DynEngine::new(NativeEngine::default()),
+            base_engine: engine.clone(),
+            engine,
+            mitigation: MitigationConfig::NONE,
             population,
             seed: 0x4D45_4C49_534F,
             parallelism: Parallelism::Auto,
@@ -140,5 +173,29 @@ mod tests {
         let ctx = Ctx::from_config(&cfg).unwrap();
         assert_eq!(ctx.engine.name(), "native");
         assert_eq!(ctx.population, 1000);
+    }
+
+    #[test]
+    fn from_config_wraps_mitigation() {
+        let cfg = RunConfig {
+            mitigation: crate::mitigation::MitigationConfig::parse("avg:2").unwrap(),
+            ..RunConfig::default()
+        };
+        let ctx = Ctx::from_config(&cfg).unwrap();
+        assert_eq!(ctx.engine.name(), "mitigated");
+        // The baseline handle stays unwrapped for experiments that
+        // apply their own mitigation configs.
+        assert_eq!(ctx.base_engine.name(), "native");
+        assert_eq!(ctx.mitigation.replicas, 2);
+    }
+
+    #[test]
+    fn from_config_rejects_cal_on_xla() {
+        let cfg = RunConfig {
+            engine: crate::config::EngineKind::Xla,
+            mitigation: crate::mitigation::MitigationConfig::parse("cal").unwrap(),
+            ..RunConfig::default()
+        };
+        assert!(Ctx::from_config(&cfg).is_err());
     }
 }

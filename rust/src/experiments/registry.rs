@@ -5,7 +5,7 @@ use crate::error::{Error, Result};
 use crate::util::json::Json;
 
 use super::context::Ctx;
-use super::{fig2, fig3, fig4, fig5, table1, table2, xtra};
+use super::{fig2, fig3, fig4, fig5, mitigation, table1, table2, xtra};
 
 /// Experiment descriptor.
 pub struct Entry {
@@ -101,6 +101,12 @@ pub fn entries() -> Vec<Entry> {
             title: "Extension: error vs matrix size (tiled engine)",
             paper: false,
             run: xtra::run_size_sweep,
+        },
+        Entry {
+            id: "mitigation-sweep",
+            title: "Extension: error vs mitigation strategy x device",
+            paper: false,
+            run: mitigation::run,
         },
     ]
 }

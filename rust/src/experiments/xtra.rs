@@ -10,6 +10,7 @@ use crate::crossbar::peripheral::Peripherals;
 use crate::device::params::NonIdealities;
 use crate::device::presets::{all_presets, epiram};
 use crate::error::Result;
+use crate::mitigation::MitigationConfig;
 use crate::report::table::{fnum, TextTable};
 use crate::solver::{
     conjugate_gradient, CrossbarOperator, ExactOperator, SolveOpts,
@@ -104,9 +105,18 @@ pub fn run_size_sweep(ctx: &Ctx) -> Result<Json> {
     Ok(summary)
 }
 
+/// Default mitigation pipeline the solver study runs alongside the
+/// plain operators: differential pairing plus 4-replica averaging cuts
+/// the write/read noise floor without touching the iteration count
+/// budget.  A user `--mitigation` config overrides it.
+pub const SOLVER_MITIGATION: &str = "diff,avg:4";
+
 /// Solver study: CG on an SPD system with the products computed by
 /// each Table I device's crossbar — convergence floors track the VMM
-/// error magnitudes from Fig. 5.
+/// error magnitudes from Fig. 5.  Each device is run twice: plain, and
+/// through the [`crate::mitigation`] pipeline (the configured
+/// `--mitigation`, or [`SOLVER_MITIGATION`] by default), showing the
+/// convergence floor dropping with mitigation enabled.
 pub fn run_solver(ctx: &Ctx) -> Result<Json> {
     let w = ctx.writer("solver");
     let n = 64;
@@ -127,50 +137,79 @@ pub fn run_solver(ctx: &Ctx) -> Result<Json> {
     let exact = ExactOperator::new(n, n, a.clone());
     let opts = SolveOpts { max_iters: 120, tol: 1e-10 };
 
-    let mut t = TextTable::new(["operator", "iters", "converged", "final rel. residual"])
-        .with_title("Solver study: CG convergence floor vs device error");
-    let mut csv = CsvTable::new(["operator", "iteration", "residual"]);
+    let mitigation = if ctx.mitigation.is_noop() {
+        MitigationConfig::parse(SOLVER_MITIGATION)?
+    } else {
+        ctx.mitigation
+    };
+
+    let mut t = TextTable::new([
+        "operator", "mitigation", "iters", "converged", "floor rel. residual",
+    ])
+    .with_title("Solver study: CG convergence floor vs device error");
+    let mut csv = CsvTable::new(["operator", "mitigation", "iteration", "residual"]);
     let mut rows = Vec::new();
 
     // Software baseline.
     let r = conjugate_gradient(&exact, &exact, &b, &opts)?;
     for (k, res) in r.residual_history.iter().enumerate() {
-        csv.push(["software".to_string(), k.to_string(), res.to_string()]);
+        csv.push([
+            "software".to_string(),
+            "none".to_string(),
+            k.to_string(),
+            res.to_string(),
+        ]);
     }
-    let base_floor = *r.residual_history.last().unwrap();
+    let base_floor = r
+        .residual_history
+        .iter()
+        .copied()
+        .fold(f64::INFINITY, f64::min);
     t.push([
         "software".to_string(),
+        "none".to_string(),
         r.iterations.to_string(),
         r.converged.to_string(),
         fnum(base_floor),
     ]);
     rows.push(obj([
         ("operator", Json::Str("software".into())),
+        ("mitigation", Json::Str("none".into())),
         ("floor", Json::Num(base_floor)),
     ]));
 
     for preset in all_presets() {
         let device = preset.params.masked(NonIdealities::FULL);
-        let op = CrossbarOperator::program(n, n, &a, &device, &mut rng);
-        let r = conjugate_gradient(&op, &exact, &b, &opts)?;
-        let floor = r
-            .residual_history
-            .iter()
-            .copied()
-            .fold(f64::INFINITY, f64::min);
-        for (k, res) in r.residual_history.iter().enumerate() {
-            csv.push([preset.id.to_string(), k.to_string(), res.to_string()]);
+        for cfg in [MitigationConfig::NONE, mitigation] {
+            let op = CrossbarOperator::program_mitigated(n, n, &a, &device, &mut rng, &cfg);
+            let r = conjugate_gradient(&op, &exact, &b, &opts)?;
+            let floor = r
+                .residual_history
+                .iter()
+                .copied()
+                .fold(f64::INFINITY, f64::min);
+            let label = cfg.label();
+            for (k, res) in r.residual_history.iter().enumerate() {
+                csv.push([
+                    preset.id.to_string(),
+                    label.clone(),
+                    k.to_string(),
+                    res.to_string(),
+                ]);
+            }
+            t.push([
+                preset.name.to_string(),
+                label.clone(),
+                r.iterations.to_string(),
+                r.converged.to_string(),
+                fnum(floor),
+            ]);
+            rows.push(obj([
+                ("operator", Json::Str(preset.name.into())),
+                ("mitigation", Json::Str(label)),
+                ("floor", Json::Num(floor)),
+            ]));
         }
-        t.push([
-            preset.name.to_string(),
-            r.iterations.to_string(),
-            r.converged.to_string(),
-            fnum(floor),
-        ]);
-        rows.push(obj([
-            ("operator", Json::Str(preset.name.into())),
-            ("floor", Json::Num(floor)),
-        ]));
     }
 
     w.echo(&t.render());
@@ -304,14 +343,17 @@ mod tests {
     use super::*;
 
     #[test]
-    fn solver_floors_track_device_quality() {
+    fn solver_floors_track_device_quality_and_mitigation() {
         let dir = std::env::temp_dir().join("meliso_xtra_solver_test");
         let ctx = Ctx::native(8, &dir);
         let s = run_solver(&ctx).unwrap();
         let rows = s.get("rows").unwrap().as_arr().unwrap();
-        let floor = |name: &str| -> f64 {
+        let floor = |name: &str, mitigation: &str| -> f64 {
             rows.iter()
-                .find(|r| r.get("operator").unwrap().as_str() == Some(name))
+                .find(|r| {
+                    r.get("operator").unwrap().as_str() == Some(name)
+                        && r.get("mitigation").unwrap().as_str() == Some(mitigation)
+                })
                 .unwrap()
                 .get("floor")
                 .unwrap()
@@ -320,9 +362,19 @@ mod tests {
         };
         // Software converges to ~machine precision; every crossbar has
         // a higher floor; EpiRAM's floor beats AlOx/HfO2's.
-        assert!(floor("software") < 1e-9);
-        assert!(floor("EpiRAM") > floor("software"));
-        assert!(floor("EpiRAM") < floor("AlOx/HfO2"));
+        assert!(floor("software", "none") < 1e-9);
+        assert!(floor("EpiRAM", "none") > floor("software", "none"));
+        assert!(floor("EpiRAM", "none") < floor("AlOx/HfO2", "none"));
+        // Mitigation lowers the convergence floor on every device.
+        let mit = MitigationConfig::parse(SOLVER_MITIGATION).unwrap().label();
+        for device in ["EpiRAM", "Ag:a-Si", "AlOx/HfO2", "TaOx/HfOx"] {
+            assert!(
+                floor(device, &mit) < floor(device, "none"),
+                "{device}: {} !< {}",
+                floor(device, &mit),
+                floor(device, "none")
+            );
+        }
         let _ = std::fs::remove_dir_all(dir);
     }
 

@@ -28,6 +28,7 @@ pub mod crossbar;
 pub mod device;
 pub mod error;
 pub mod experiments;
+pub mod mitigation;
 pub mod report;
 pub mod runtime;
 pub mod solver;

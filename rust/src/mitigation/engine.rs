@@ -1,0 +1,376 @@
+//! [`MitigatedEngine`]: a [`VmmEngine`] adapter that runs any inner
+//! engine (native, tiled, …) through the composable mitigation
+//! pipeline.
+//!
+//! The adapter expands each forward pass into a deterministic set of
+//! *array variants* — the cartesian product of differential sign ×
+//! bit-slice × replica — runs each variant through the inner engine
+//! (inheriting its per-worker scratch parallelism unchanged), and
+//! recombines the hardware outputs with the pipeline's linear weights
+//! in f64.  Per-column affine calibration, when enabled, is estimated
+//! from probe reads of the *same* combined pipeline against its
+//! noise-free programming and inverted on the data reads.
+//!
+//! ## Determinism
+//!
+//! Every variant's noise is a pure per-sample function of the batch's
+//! own noise planes (in-plane rotations by a variant-specific offset),
+//! so results are independent of chunking and bit-identical for any
+//! thread count — the same reproducibility contract the plain engines
+//! honour (`rust/tests/integration_mitigation.rs` enforces it).
+//! Replicas model *reprogramming cycles* of the same physical arrays:
+//! they redraw the C2C planes but share the mismatch plane (mismatch is
+//! a device property, which is exactly why averaging shrinks C2C by
+//! ~`1/√R` but leaves the mismatch floor).
+//!
+//! Engines that pin batch sizes (the XLA artifact path) are not
+//! supported behind calibration, which enlarges probe batches; use the
+//! native or tiled engine.
+//!
+//! Known overhead: each inner `forward` also computes the engine's own
+//! exact software reference, which the adapter discards (it computes
+//! the reference once itself), and the calibration's clean reference is
+//! a zero-noise *simulation* rather than the solver path's analytic
+//! model — simulating keeps the noise-free pipeline an exact bitwise
+//! identity, which the analytic f64 model cannot guarantee.  Removing
+//! the duplicate reference would need a hardware-only method on the
+//! `VmmEngine` contract; the `hotpath` bench prices the pipeline
+//! end-to-end as is.
+
+use crate::device::params::DeviceParams;
+use crate::device::pulse::mismatch_transform;
+use crate::error::Result;
+use crate::vmm::engine::{VmmBatch, VmmEngine, VmmOutput};
+use crate::vmm::software::software_vmm_batch;
+
+use super::{probe_affine_fit, probe_input, slice_digits, slice_gain, MitigationConfig};
+
+/// A mitigation pipeline wrapped around an inner compute engine.
+#[derive(Debug, Clone)]
+pub struct MitigatedEngine<E> {
+    inner: E,
+    cfg: MitigationConfig,
+}
+
+/// In-plane offsets decorrelating variant noise draws; both are odd, so
+/// they are coprime with every power-of-two plane size and cycle the
+/// whole plane before repeating.
+const MISMATCH_STRIDE: usize = 131;
+const C2C_STRIDE: usize = 257;
+
+impl<E: VmmEngine> MitigatedEngine<E> {
+    pub fn new(inner: E, cfg: MitigationConfig) -> Self {
+        Self { inner, cfg }
+    }
+
+    pub fn config(&self) -> &MitigationConfig {
+        &self.cfg
+    }
+
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+
+    /// Run the variant set and recombine into the mitigated hardware
+    /// output (no calibration applied here).
+    fn combined_forward(&self, batch: &VmmBatch, params: &DeviceParams) -> Result<Vec<f32>> {
+        let cfg = &self.cfg;
+        let (b, r, c) = (batch.batch, batch.rows, batch.cols);
+        let cells = r * c;
+        let signs: &[f64] = if cfg.differential { &[1.0, -1.0] } else { &[1.0] };
+        let pair_norm = 1.0 / signs.len() as f64;
+        let gain = slice_gain(params);
+        let digits = slice_digits(&batch.w, params, cfg.slices);
+
+        let mut acc = vec![0.0f64; b * c];
+        let mut variant = VmmBatch::zeros(b, r, c);
+        variant.x.copy_from_slice(&batch.x);
+
+        for (si, &sign) in signs.iter().enumerate() {
+            for (slice, plane) in digits.iter().enumerate() {
+                // One physical array set per (sign, slice): distinct
+                // devices, so all three noise planes are decorrelated.
+                let array = si * cfg.slices + slice;
+                if sign >= 0.0 {
+                    variant.w.copy_from_slice(plane);
+                } else {
+                    for (dst, &d) in variant.w.iter_mut().zip(plane.iter()) {
+                        *dst = -d;
+                    }
+                }
+                for s in 0..b {
+                    rotate_plane(
+                        batch.z_of(s, 2),
+                        array * MISMATCH_STRIDE,
+                        plane_mut(&mut variant.z, s, 2, cells),
+                    );
+                }
+                let combine = sign * pair_norm * gain.powi(-(slice as i32)) / cfg.replicas as f64;
+                for rep in 0..cfg.replicas {
+                    // Replicas reprogram the same arrays: fresh C2C
+                    // draws, shared mismatch.
+                    let cycle = (array * cfg.replicas + rep) * C2C_STRIDE;
+                    for s in 0..b {
+                        rotate_plane(
+                            batch.z_of(s, 0),
+                            cycle,
+                            plane_mut(&mut variant.z, s, 0, cells),
+                        );
+                        rotate_plane(
+                            batch.z_of(s, 1),
+                            cycle,
+                            plane_mut(&mut variant.z, s, 1, cells),
+                        );
+                    }
+                    let out = self.inner.forward(&variant, params)?;
+                    for (a, &y) in acc.iter_mut().zip(out.y_hw.iter()) {
+                        *a += combine * y as f64;
+                    }
+                }
+            }
+        }
+        Ok(acc.into_iter().map(|v| v as f32).collect())
+    }
+
+    /// Build the probe batch: `probes` reads per data sample, each with
+    /// the sample's weights, a deterministic probe drive, and either
+    /// the sample's noise planes (`noisy`) or zero noise (the known
+    /// clean programming).
+    fn probe_batch(&self, batch: &VmmBatch, noisy: bool) -> VmmBatch {
+        let (b, r, c) = (batch.batch, batch.rows, batch.cols);
+        let p = self.cfg.probes;
+        let cells = r * c;
+        let mut pb = VmmBatch::zeros(b * p, r, c);
+        for s in 0..b {
+            for k in 0..p {
+                let d = s * p + k;
+                pb.w[d * cells..(d + 1) * cells].copy_from_slice(batch.w_of(s));
+                for i in 0..r {
+                    pb.x[d * r + i] = probe_input(k, i, r);
+                }
+                if noisy {
+                    let src = (s * 3) * cells;
+                    let dst = (d * 3) * cells;
+                    pb.z[dst..dst + 3 * cells].copy_from_slice(&batch.z[src..src + 3 * cells]);
+                }
+            }
+        }
+        pb
+    }
+
+    /// Combined linear weight of the pipeline (what a constant per-cell
+    /// read offset is multiplied by after recombination): zero under
+    /// differential pairing, the slice-gain geometric sum otherwise.
+    fn combine_weight_sum(&self, params: &DeviceParams) -> f64 {
+        if self.cfg.differential {
+            return 0.0;
+        }
+        let gain = slice_gain(params);
+        (0..self.cfg.slices).map(|s| gain.powi(-(s as i32))).sum()
+    }
+
+    /// Estimate per-(sample, column) affine readout distortion from the
+    /// probe reads and invert it on `y`.
+    fn apply_calibration(
+        &self,
+        batch: &VmmBatch,
+        params: &DeviceParams,
+        y: &mut [f32],
+    ) -> Result<()> {
+        let (b, r, c) = (batch.batch, batch.rows, batch.cols);
+        let p = self.cfg.probes;
+        let noisy = self.combined_forward(&self.probe_batch(batch, true), params)?;
+        let clean = self.combined_forward(&self.probe_batch(batch, false), params)?;
+        // The zero-noise probe programming still carries the
+        // deterministic mismatch pedestal `m * h(0)` — the mismatch
+        // transform is zero-mean in z, not zero at z = 0 — which would
+        // bias the calibration target by `m * h(0) * sum(x)` per
+        // column.  Subtract it analytically so the target models the
+        // mismatch-free array, matching the solver path's analytic
+        // clean model.  (Exactly zero on mismatch-free devices, so the
+        // perfect-device identity property is preserved.)
+        let mis0 = params.mismatch_scale() * mismatch_transform(0.0);
+        let wsum = self.combine_weight_sum(params);
+        let pedestal: Vec<f64> = (0..p)
+            .map(|k| {
+                let drive: f64 = (0..r).map(|i| probe_input(k, i, r) as f64).sum();
+                mis0 * drive * wsum
+            })
+            .collect();
+        let mut yc = vec![0.0f64; p];
+        let mut yn = vec![0.0f64; p];
+        for s in 0..b {
+            for j in 0..c {
+                for k in 0..p {
+                    let idx = (s * p + k) * c + j;
+                    yc[k] = clean[idx] as f64 - pedestal[k];
+                    yn[k] = noisy[idx] as f64;
+                }
+                let (g, o) = probe_affine_fit(&yc, &yn);
+                let idx = s * c + j;
+                y[idx] = ((y[idx] as f64 - o) / g) as f32;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Copy `src` into `dst` rotated left by `offset` (mod the plane
+/// length).  Offset 0 is the identity, so the base variant consumes the
+/// batch's noise verbatim.
+fn rotate_plane(src: &[f32], offset: usize, dst: &mut [f32]) {
+    let n = src.len();
+    let off = offset % n.max(1);
+    dst[..n - off].copy_from_slice(&src[off..]);
+    dst[n - off..].copy_from_slice(&src[..off]);
+}
+
+/// Mutable view of sample `s`, channel `ch` of a packed noise buffer.
+fn plane_mut(z: &mut [f32], s: usize, ch: usize, cells: usize) -> &mut [f32] {
+    let base = (s * 3 + ch) * cells;
+    &mut z[base..base + cells]
+}
+
+impl<E: VmmEngine> VmmEngine for MitigatedEngine<E> {
+    fn name(&self) -> &'static str {
+        "mitigated"
+    }
+
+    fn forward(&self, batch: &VmmBatch, params: &DeviceParams) -> Result<VmmOutput> {
+        batch.check()?;
+        if self.cfg.is_noop() {
+            return self.inner.forward(batch, params);
+        }
+        let y_sw = software_vmm_batch(batch);
+        let mut y_hw = self.combined_forward(batch, params)?;
+        if self.cfg.calibrate {
+            self.apply_calibration(batch, params, &mut y_hw)?;
+        }
+        Ok(VmmOutput { y_hw, y_sw })
+    }
+
+    fn preferred_batches(&self) -> Vec<usize> {
+        self.inner.preferred_batches()
+    }
+
+    fn internal_parallelism(&self) -> usize {
+        self.inner.internal_parallelism()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+    use crate::stats::moments::Moments;
+    use crate::util::rng::Xoshiro256;
+    use crate::vmm::NativeEngine;
+
+    fn random_batch(b: usize, r: usize, c: usize, seed: u64) -> VmmBatch {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut vb = VmmBatch::zeros(b, r, c);
+        rng.fill_uniform_f32(&mut vb.w, -1.0, 1.0);
+        rng.fill_uniform_f32(&mut vb.x, 0.0, 1.0);
+        rng.fill_normal_f32(&mut vb.z);
+        vb
+    }
+
+    fn engine(spec: &str) -> MitigatedEngine<NativeEngine> {
+        MitigatedEngine::new(
+            NativeEngine::default(),
+            MitigationConfig::parse(spec).unwrap(),
+        )
+    }
+
+    fn err_var(spec: &str, b: &VmmBatch, params: &DeviceParams) -> f64 {
+        let out = engine(spec).forward(b, params).unwrap();
+        Moments::from_slice(&out.errors()).variance()
+    }
+
+    #[test]
+    fn noop_config_delegates_bitwise() {
+        let b = random_batch(6, 32, 32, 301);
+        let params = presets::ag_si().params;
+        let plain = NativeEngine::default().forward(&b, &params).unwrap();
+        let wrapped = engine("none").forward(&b, &params).unwrap();
+        assert_eq!(plain.y_hw, wrapped.y_hw);
+        assert_eq!(plain.y_sw, wrapped.y_sw);
+    }
+
+    #[test]
+    fn rotate_plane_identity_and_cycle() {
+        let src = vec![1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let mut dst = vec![0.0f32; 5];
+        rotate_plane(&src, 0, &mut dst);
+        assert_eq!(dst, src);
+        rotate_plane(&src, 2, &mut dst);
+        assert_eq!(dst, vec![3.0, 4.0, 5.0, 1.0, 2.0]);
+        rotate_plane(&src, 7, &mut dst);
+        assert_eq!(dst, vec![3.0, 4.0, 5.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn replica_averaging_shrinks_c2c_variance() {
+        // EpiRAM is C2C-dominated: averaging 4 reprogramming cycles
+        // must cut the error variance well below the single-cycle run.
+        let b = random_batch(48, 32, 32, 302);
+        let params = presets::epiram().params;
+        let v1 = err_var("none", &b, &params);
+        let v4 = err_var("avg:4", &b, &params);
+        assert!(v4 < v1 * 0.8, "v1={v1} v4={v4}");
+    }
+
+    #[test]
+    fn differential_pair_reduces_bias() {
+        // Strong-NL Ag:a-Si: the deterministic encoding bias dominates
+        // the mean error; the complementary array cancels it.
+        let b = random_batch(48, 32, 32, 303);
+        let params = presets::ag_si().params;
+        let base = engine("none").forward(&b, &params).unwrap();
+        let diff = engine("diff").forward(&b, &params).unwrap();
+        let mb = Moments::from_slice(&base.errors()).mean().abs();
+        let md = Moments::from_slice(&diff.errors()).mean().abs();
+        assert!(md < mb, "base mean {mb}, diff mean {md}");
+    }
+
+    #[test]
+    fn slicing_restores_resolution_on_coarse_device() {
+        // A quantization-limited device: 3-bit states, no NL, no C2C.
+        let params = DeviceParams::ideal().with_weight_bits(3);
+        let b = random_batch(16, 32, 32, 304);
+        let v1 = err_var("none", &b, &params);
+        let v2 = err_var("slice:2", &b, &params);
+        assert!(v2 < v1 * 0.1, "v1={v1} v2={v2}");
+    }
+
+    #[test]
+    fn calibration_never_explodes_error() {
+        let b = random_batch(24, 32, 32, 305);
+        let params = presets::epiram().params;
+        let base = err_var("none", &b, &params);
+        let cal = err_var("cal", &b, &params);
+        assert!(cal.is_finite() && cal < base * 2.0, "base={base} cal={cal}");
+    }
+
+    #[test]
+    fn combined_pipeline_beats_baseline() {
+        let b = random_batch(48, 32, 32, 306);
+        let params = presets::epiram().params;
+        let base = err_var("none", &b, &params);
+        let full = err_var("diff,slice:2,avg:4,cal", &b, &params);
+        assert!(full < base, "base={base} full={full}");
+    }
+
+    #[test]
+    fn works_through_tiled_engine_at_nonpaper_geometry() {
+        let b = random_batch(4, 48, 40, 307);
+        let params = presets::epiram().params;
+        let eng = MitigatedEngine::new(
+            crate::vmm::TiledEngine::default(),
+            MitigationConfig::parse("diff,avg:2").unwrap(),
+        );
+        let out = eng.forward(&b, &params).unwrap();
+        assert_eq!(out.y_hw.len(), 4 * 40);
+        assert!(out.errors().iter().all(|e| e.is_finite()));
+    }
+}

@@ -1,0 +1,342 @@
+//! [`MitigatedMatrix`]: a logical matrix programmed through the
+//! mitigation pipeline onto (tiled) crossbars — the solver-side
+//! counterpart of [`super::MitigatedEngine`].
+//!
+//! The pipeline programs one [`TiledCrossbar`] per (differential sign ×
+//! bit-slice × replica) with independent noise draws from the caller's
+//! RNG, recombines reads with the pipeline's linear weights in f64, and
+//! optionally inverts a per-column affine distortion estimated from
+//! probe reads against the analytically known clean programming.  With
+//! the identity config it programs exactly one crossbar and consumes
+//! exactly the RNG stream the unmitigated
+//! [`crate::solver::CrossbarOperator`] consumed before the mitigation
+//! layer existed, so existing results are bit-for-bit unchanged.
+//!
+//! Replica semantics deliberately differ from the engine path: a
+//! deployed solver replicates *spatially* — `R` redundant physical
+//! arrays at `R`× area cost — so every noise channel (mismatch
+//! included) is drawn independently and averaging attacks all of them.
+//! [`super::MitigatedEngine`] instead models *temporal* replicas
+//! (reprogramming cycles of the same arrays), where the mismatch floor
+//! survives averaging.  See DESIGN.md §10.
+
+use crate::crossbar::tile::TiledCrossbar;
+use crate::device::params::DeviceParams;
+use crate::util::rng::Xoshiro256;
+
+use super::{
+    clean_programmed_weight, probe_affine_fit, probe_input, slice_digits, slice_gain,
+    MitigationConfig,
+};
+
+/// A mitigation-pipelined crossbar realization of a `rows x cols`
+/// weight matrix (entries in `[-1, 1]`).
+#[derive(Debug)]
+pub struct MitigatedMatrix {
+    rows: usize,
+    cols: usize,
+    /// `(combine weight, crossbar)` per programmed array.
+    parts: Vec<(f64, TiledCrossbar)>,
+    /// Per-column `(gain, offset)`; corrected read is `(y - o) / g`.
+    cal: Option<Vec<(f64, f64)>>,
+}
+
+impl MitigatedMatrix {
+    /// Program `w` (row-major, `[-1, 1]`) under the mitigation config.
+    /// `verify` selects closed-loop write–verify programming (what the
+    /// solvers deploy with).
+    #[allow(clippy::too_many_arguments)]
+    pub fn program(
+        rows: usize,
+        cols: usize,
+        w: &[f32],
+        params: &DeviceParams,
+        tile_rows: usize,
+        tile_cols: usize,
+        rng: &mut Xoshiro256,
+        cfg: &MitigationConfig,
+        verify: bool,
+    ) -> Self {
+        assert_eq!(w.len(), rows * cols);
+        let signs: &[f64] = if cfg.differential { &[1.0, -1.0] } else { &[1.0] };
+        let pair_norm = 1.0 / signs.len() as f64;
+        let gain = slice_gain(params);
+        let digits = slice_digits(w, params, cfg.slices);
+
+        let mut parts = Vec::with_capacity(cfg.array_count());
+        // Clean model of the recombined realization (for calibration):
+        // replicas share targets, so each (sign, slice) contributes
+        // once with the replica normalization already folded in.
+        let mut clean = if cfg.calibrate {
+            vec![0.0f64; rows * cols]
+        } else {
+            Vec::new()
+        };
+        let mut target = vec![0.0f32; rows * cols];
+        for &sign in signs {
+            for (slice, plane) in digits.iter().enumerate() {
+                for (t, &d) in target.iter_mut().zip(plane.iter()) {
+                    *t = if sign >= 0.0 { d } else { -d };
+                }
+                let weight = sign * pair_norm * gain.powi(-(slice as i32));
+                if cfg.calibrate {
+                    for (acc, &t) in clean.iter_mut().zip(target.iter()) {
+                        // sign folds into the realization of ±d; weight
+                        // carries the sign back out, so accumulate the
+                        // signed product.
+                        *acc += weight * clean_programmed_weight(t, params, verify);
+                    }
+                }
+                for _rep in 0..cfg.replicas {
+                    let xbar = if verify {
+                        TiledCrossbar::program_verified(
+                            rows,
+                            cols,
+                            &target,
+                            params,
+                            tile_rows,
+                            tile_cols,
+                            rng,
+                        )
+                    } else {
+                        TiledCrossbar::program(
+                            rows,
+                            cols,
+                            &target,
+                            params,
+                            tile_rows,
+                            tile_cols,
+                            rng,
+                        )
+                    };
+                    parts.push((weight / cfg.replicas as f64, xbar));
+                }
+            }
+        }
+
+        let mut m = Self { rows, cols, parts, cal: None };
+        if cfg.calibrate {
+            m.cal = Some(m.fit_calibration(&clean, cfg.probes));
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Physical crossbars in the pipeline.
+    pub fn array_count(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Recombined (uncalibrated) pipeline read.
+    fn read_raw(&self, x: &[f32], y64: &mut [f64], scratch: &mut Vec<f32>) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y64.len(), self.cols);
+        scratch.resize(self.cols, 0.0);
+        y64.fill(0.0);
+        for (weight, xbar) in &self.parts {
+            xbar.read(x, scratch);
+            for (acc, &v) in y64.iter_mut().zip(scratch.iter()) {
+                *acc += weight * v as f64;
+            }
+        }
+    }
+
+    /// Full mitigated read `y = x^T W` in weight units.
+    pub fn read(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(y.len(), self.cols);
+        let mut y64 = vec![0.0f64; self.cols];
+        let mut scratch = Vec::new();
+        self.read_raw(x, &mut y64, &mut scratch);
+        if let Some(cal) = &self.cal {
+            for (v, &(g, o)) in y64.iter_mut().zip(cal.iter()) {
+                *v = (*v - o) / g;
+            }
+        }
+        for (out, &v) in y.iter_mut().zip(y64.iter()) {
+            *out = v as f32;
+        }
+    }
+
+    /// Convenience allocating read.
+    pub fn read_vec(&self, x: &[f32]) -> Vec<f32> {
+        let mut y = vec![0.0; self.cols];
+        self.read(x, &mut y);
+        y
+    }
+
+    /// Probe the programmed pipeline against the analytically clean
+    /// recombined matrix and fit per-column affine distortion.
+    fn fit_calibration(&self, clean: &[f64], probes: usize) -> Vec<(f64, f64)> {
+        let (rows, cols) = (self.rows, self.cols);
+        let mut yn = vec![vec![0.0f64; probes]; cols];
+        let mut yc = vec![vec![0.0f64; probes]; cols];
+        let mut x = vec![0.0f32; rows];
+        let mut y64 = vec![0.0f64; cols];
+        let mut scratch = Vec::new();
+        for k in 0..probes {
+            for (i, xi) in x.iter_mut().enumerate() {
+                *xi = probe_input(k, i, rows);
+            }
+            self.read_raw(&x, &mut y64, &mut scratch);
+            for j in 0..cols {
+                yn[j][k] = y64[j];
+                let mut e = 0.0f64;
+                for i in 0..rows {
+                    e += x[i] as f64 * clean[i * cols + j];
+                }
+                yc[j][k] = e;
+            }
+        }
+        (0..cols)
+            .map(|j| probe_affine_fit(&yc[j], &yn[j]))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+
+    fn rand_w(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut w = vec![0.0f32; n];
+        rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+        w
+    }
+
+    fn software_vmm(rows: usize, cols: usize, w: &[f32], x: &[f32]) -> Vec<f64> {
+        (0..cols)
+            .map(|j| {
+                (0..rows)
+                    .map(|i| x[i] as f64 * w[i * cols + j] as f64)
+                    .sum()
+            })
+            .collect()
+    }
+
+    fn read_error_rms(m: &MitigatedMatrix, w: &[f32], seed: u64) -> f64 {
+        let (rows, cols) = (m.rows(), m.cols());
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut x = vec![0.0f32; rows];
+        let mut sum = 0.0f64;
+        let mut n = 0usize;
+        for _ in 0..8 {
+            rng.fill_uniform_f32(&mut x, 0.0, 1.0);
+            let y = m.read_vec(&x);
+            let want = software_vmm(rows, cols, w, &x);
+            for j in 0..cols {
+                let e = y[j] as f64 - want[j];
+                sum += e * e;
+                n += 1;
+            }
+        }
+        (sum / n as f64).sqrt()
+    }
+
+    #[test]
+    fn noop_matches_single_tiled_crossbar() {
+        let (rows, cols) = (48, 40);
+        let w = rand_w(rows * cols, 401);
+        let params = presets::epiram().params;
+        let m = MitigatedMatrix::program(
+            rows,
+            cols,
+            &w,
+            &params,
+            32,
+            32,
+            &mut Xoshiro256::seed_from_u64(402),
+            &MitigationConfig::NONE,
+            true,
+        );
+        assert_eq!(m.array_count(), 1);
+        let plain = TiledCrossbar::program_verified(
+            rows,
+            cols,
+            &w,
+            &params,
+            32,
+            32,
+            &mut Xoshiro256::seed_from_u64(402),
+        );
+        let mut x = vec![0.0f32; rows];
+        Xoshiro256::seed_from_u64(403).fill_uniform_f32(&mut x, -1.0, 1.0);
+        assert_eq!(m.read_vec(&x), plain.read_vec(&x));
+    }
+
+    #[test]
+    fn replica_averaging_tightens_reads() {
+        let (rows, cols) = (32, 32);
+        let w = rand_w(rows * cols, 404);
+        let params = presets::epiram().params;
+        let mut rng = Xoshiro256::seed_from_u64(405);
+        let base = MitigatedMatrix::program(
+            rows,
+            cols,
+            &w,
+            &params,
+            32,
+            32,
+            &mut rng,
+            &MitigationConfig::NONE,
+            true,
+        );
+        let avg = MitigatedMatrix::program(
+            rows,
+            cols,
+            &w,
+            &params,
+            32,
+            32,
+            &mut rng,
+            &MitigationConfig::parse("avg:4").unwrap(),
+            true,
+        );
+        assert_eq!(avg.array_count(), 4);
+        let e_base = read_error_rms(&base, &w, 406);
+        let e_avg = read_error_rms(&avg, &w, 406);
+        assert!(e_avg < e_base, "base {e_base} vs avg {e_avg}");
+    }
+
+    #[test]
+    fn combined_pipeline_tightens_reads_further() {
+        let (rows, cols) = (32, 32);
+        let w = rand_w(rows * cols, 407);
+        let params = presets::ag_si().params;
+        let mut rng = Xoshiro256::seed_from_u64(408);
+        let base = MitigatedMatrix::program(
+            rows,
+            cols,
+            &w,
+            &params,
+            32,
+            32,
+            &mut rng,
+            &MitigationConfig::NONE,
+            true,
+        );
+        let full = MitigatedMatrix::program(
+            rows,
+            cols,
+            &w,
+            &params,
+            32,
+            32,
+            &mut rng,
+            &MitigationConfig::parse("diff,slice:2,avg:2,cal").unwrap(),
+            true,
+        );
+        assert_eq!(full.array_count(), 8);
+        let e_base = read_error_rms(&base, &w, 409);
+        let e_full = read_error_rms(&full, &w, 409);
+        assert!(e_full < e_base, "base {e_base} vs full {e_full}");
+    }
+}

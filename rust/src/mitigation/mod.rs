@@ -1,0 +1,418 @@
+//! Error-mitigation strategies for crossbar VMM — the "and mitigating"
+//! half of the paper's abstract, following the integrated-correction
+//! direction of arXiv:2508.13298 and the bit-sliced multi-crossbar
+//! encodings of the N-ary crossbar literature.
+//!
+//! Four composable strategies, each a physically meaningful circuit
+//! technique (DESIGN.md §10):
+//!
+//! * **Differential-pair encoding** (`diff`) — program a complementary
+//!   array with `-W` and read `y = (y⁺ - y⁻) / 2`.  Common-mode
+//!   additive programming bias (the deterministic non-linearity offset,
+//!   the mean of the baseline mismatch) cancels; independent random
+//!   terms average down by 2 in variance.
+//! * **Bit-slicing** (`slice:K`) — split each weight across `K`
+//!   crossbars with power-of-two inter-slice gains: slice 0 carries the
+//!   coarse value, each further slice carries the previous slice's
+//!   *quantization residual* amplified to full range.  Recombining with
+//!   gains `G⁻ⁱ` multiplies the effective state count by ~`G` per
+//!   slice (the N-ary multi-crossbar encoding); it attacks pulse-count
+//!   quantization, not programming noise or open-loop NL distortion.
+//! * **Replica averaging** (`avg:R`) — program `R` copies and average
+//!   the reads; cycle-to-cycle programming noise shrinks like `1/√R`.
+//! * **Affine read calibration** (`cal`) — estimate a per-column
+//!   `(gain, offset)` from probe reads against the known clean
+//!   (noise-free) programming of the same targets, then invert it on
+//!   every read — a per-column generalization of the coordinator's
+//!   offset trim.
+//!
+//! Strategies compose freely (`diff,slice:2,avg:4,cal`), are available
+//! on the engine path ([`MitigatedEngine`] wraps any
+//! [`crate::vmm::VmmEngine`]) and on the solver path
+//! ([`MitigatedMatrix`] backs
+//! [`crate::solver::CrossbarOperator`]), and are plumbed through the
+//! CLI (`--mitigation`) and TOML (`mitigation = "..."`).
+
+pub mod engine;
+pub mod matrix;
+
+pub use engine::MitigatedEngine;
+pub use matrix::MitigatedMatrix;
+
+use crate::device::params::DeviceParams;
+use crate::device::pulse::{nl_to_curvature, pulse_curve};
+use crate::error::{Error, Result};
+
+/// Which mitigation strategies are active, and their strengths.
+///
+/// The default is the identity pipeline (no mitigation): every field at
+/// its neutral value.  Build from a CLI/TOML spec with
+/// [`MitigationConfig::parse`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MitigationConfig {
+    /// Differential-pair encoding (complementary `-W` array).
+    pub differential: bool,
+    /// Bit-slice count (1 = off).
+    pub slices: usize,
+    /// Replica count for read averaging (1 = off).
+    pub replicas: usize,
+    /// Per-column affine read calibration.
+    pub calibrate: bool,
+    /// Probe reads used by the calibration fit (>= 3).
+    pub probes: usize,
+}
+
+impl Default for MitigationConfig {
+    fn default() -> Self {
+        Self::NONE
+    }
+}
+
+impl MitigationConfig {
+    /// The identity pipeline: no strategy active.
+    pub const NONE: MitigationConfig = MitigationConfig {
+        differential: false,
+        slices: 1,
+        replicas: 1,
+        calibrate: false,
+        probes: 4,
+    };
+
+    /// Parse a comma-separated strategy spec, e.g.
+    /// `"diff,slice:2,avg:4,cal"`.  `""` and `"none"` give the identity
+    /// pipeline.
+    pub fn parse(spec: &str) -> Result<MitigationConfig> {
+        let mut cfg = MitigationConfig::NONE;
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "none" {
+            return Ok(cfg);
+        }
+        for token in spec.split(',') {
+            let token = token.trim();
+            let (name, arg) = match token.split_once(':') {
+                Some((n, a)) => (n, Some(a)),
+                None => (token, None),
+            };
+            match name {
+                "diff" => {
+                    if arg.is_some() {
+                        return Err(Error::Config("diff takes no argument".into()));
+                    }
+                    cfg.differential = true;
+                }
+                "slice" => {
+                    let k: usize = parse_arg("slice", arg)?;
+                    if !(1..=8).contains(&k) {
+                        return Err(Error::Config(format!(
+                            "slice:K needs K in 1..=8, got {k}"
+                        )));
+                    }
+                    cfg.slices = k;
+                }
+                "avg" => {
+                    let r: usize = parse_arg("avg", arg)?;
+                    if !(1..=64).contains(&r) {
+                        return Err(Error::Config(format!(
+                            "avg:R needs R in 1..=64, got {r}"
+                        )));
+                    }
+                    cfg.replicas = r;
+                }
+                "cal" => {
+                    cfg.calibrate = true;
+                    if let Some(a) = arg {
+                        let p: usize = a.parse().map_err(|_| {
+                            Error::Config(format!("cal:P: bad number '{a}'"))
+                        })?;
+                        if !(3..=16).contains(&p) {
+                            return Err(Error::Config(format!(
+                                "cal:P needs P in 3..=16, got {p}"
+                            )));
+                        }
+                        cfg.probes = p;
+                    }
+                }
+                other => {
+                    return Err(Error::Config(format!(
+                        "unknown mitigation '{other}' (diff|slice:K|avg:R|cal[:P])"
+                    )));
+                }
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// True when no strategy is active (the identity pipeline).
+    pub fn is_noop(&self) -> bool {
+        !self.differential && self.slices <= 1 && self.replicas <= 1 && !self.calibrate
+    }
+
+    /// Canonical human-readable label (`"none"`, `"diff+avg:4"`, …).
+    pub fn label(&self) -> String {
+        if self.is_noop() {
+            return "none".into();
+        }
+        let mut parts = Vec::new();
+        if self.differential {
+            parts.push("diff".to_string());
+        }
+        if self.slices > 1 {
+            parts.push(format!("slice:{}", self.slices));
+        }
+        if self.replicas > 1 {
+            parts.push(format!("avg:{}", self.replicas));
+        }
+        if self.calibrate {
+            parts.push("cal".to_string());
+        }
+        parts.join("+")
+    }
+
+    /// Physical crossbar arrays the pipeline programs per logical
+    /// matrix (cost multiplier for programming).
+    pub fn array_count(&self) -> usize {
+        (if self.differential { 2 } else { 1 }) * self.slices * self.replicas
+    }
+}
+
+fn parse_arg(name: &str, arg: Option<&str>) -> Result<usize> {
+    let a = arg.ok_or_else(|| Error::Config(format!("{name}:N needs a value")))?;
+    a.parse()
+        .map_err(|_| Error::Config(format!("{name}:N: bad number '{a}'")))
+}
+
+/// Power-of-two inter-slice gain matched to the device resolution:
+/// `2^floor(log2(states))`, so each further slice refines the previous
+/// one's residual by roughly one full device word.
+pub fn slice_gain(params: &DeviceParams) -> f64 {
+    let bits = params.states.max(2.0).log2().floor() as i32;
+    (2.0f64).powi(bits.clamp(1, 15))
+}
+
+/// The differential weight the device would *deterministically* realize
+/// for target `v` (pulse-count quantization plus the open-loop NL
+/// curve; under write–verify the NL deviation is nulled, leaving pure
+/// quantization).  This is the model knowledge a closed-loop
+/// program-and-verify controller has about its own write, and what the
+/// bit-slice residuals are computed against.
+pub fn clean_programmed_weight(v: f32, params: &DeviceParams, verify: bool) -> f64 {
+    let n = params.states - 1.0;
+    let wi = v as f64;
+    // f32 rounding of the pulse targets mirrors `CrossbarArray`.
+    let s_pos = (((1.0 + wi) * 0.5 * n) as f32).round() as f64;
+    let s_neg = (((1.0 - wi) * 0.5 * n) as f32).round() as f64;
+    if verify {
+        return (s_pos - s_neg) / n;
+    }
+    let kp = nl_to_curvature(params.nu_ltp);
+    let kd = nl_to_curvature(params.nu_ltd);
+    let g_pos = pulse_curve(s_pos / n, kp).clamp(0.0, 1.0);
+    let g_neg = pulse_curve(s_neg / n, kd).clamp(0.0, 1.0);
+    g_pos - g_neg
+}
+
+/// Compute the `k` bit-slice digit planes for target weights `w`
+/// (any length, cell-independent).  Slice 0 is the raw target; slice
+/// `i+1` carries slice `i`'s pulse-count *quantization* residual
+/// amplified by the inter-slice gain and clamped to the programmable
+/// range.  Recombine reads with weights `G⁻ⁱ`.
+///
+/// Residuals are computed against the quantized target (classic digit
+/// decomposition), not the NL-distorted open-loop realization: on a
+/// strongly non-linear device an amplified model-based correction would
+/// itself be distorted at full scale, so slicing deliberately targets
+/// only the resolution limit.
+pub fn slice_digits(w: &[f32], params: &DeviceParams, k: usize) -> Vec<Vec<f32>> {
+    assert!(k >= 1, "slice count must be >= 1");
+    let gain = slice_gain(params);
+    let mut out = vec![vec![0.0f32; w.len()]; k];
+    for (i, &wi) in w.iter().enumerate() {
+        let mut resid = wi as f64;
+        let mut scale = 1.0f64;
+        for (s, plane) in out.iter_mut().enumerate() {
+            let d = (resid * scale).clamp(-1.0, 1.0) as f32;
+            plane[i] = d;
+            if s + 1 < k {
+                resid -= clean_programmed_weight(d, params, true) / scale;
+                scale *= gain;
+            }
+        }
+    }
+    out
+}
+
+/// Deterministic probe drive vector `k` over `rows` word lines.  The
+/// four base profiles (flat, ramp up, ramp down, alternating) span
+/// enough input variation for a per-column affine fit; higher probe
+/// indices reuse the profiles at reduced amplitude.
+pub fn probe_input(k: usize, i: usize, rows: usize) -> f32 {
+    let amp = 1.0 / (1 + k / 4) as f32;
+    let base = match k % 4 {
+        0 => 0.5,
+        1 => (i + 1) as f32 / rows as f32,
+        2 => 1.0 - i as f32 / rows as f32,
+        _ => {
+            if i % 2 == 0 {
+                0.25
+            } else {
+                0.75
+            }
+        }
+    };
+    amp * base
+}
+
+/// Least-squares affine fit `y_noisy ≈ g · y_clean + o` over probe
+/// pairs, with a guarded fallback to a pure offset trim when the fit is
+/// degenerate or implausible.  Returns `(g, o)`; correct a read with
+/// `(y - o) / g`.
+pub fn probe_affine_fit(y_clean: &[f64], y_noisy: &[f64]) -> (f64, f64) {
+    let n = y_clean.len() as f64;
+    debug_assert_eq!(y_clean.len(), y_noisy.len());
+    if y_clean.len() < 2 {
+        return (1.0, 0.0);
+    }
+    let mc = y_clean.iter().sum::<f64>() / n;
+    let mn = y_noisy.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut var = 0.0;
+    for (&c, &y) in y_clean.iter().zip(y_noisy) {
+        let dc = c - mc;
+        cov += dc * (y - mn);
+        var += dc * dc;
+    }
+    if var < 1e-18 {
+        return (1.0, mn - mc);
+    }
+    let g = cov / var;
+    if !g.is_finite() || !(0.25..=4.0).contains(&g) {
+        // Implausible column gain: fall back to offset-only trim.
+        return (1.0, mn - mc);
+    }
+    (g, mn - g * mc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+
+    #[test]
+    fn parse_roundtrip_and_labels() {
+        let c = MitigationConfig::parse("diff,slice:2,avg:4,cal").unwrap();
+        assert!(c.differential && c.calibrate);
+        assert_eq!(c.slices, 2);
+        assert_eq!(c.replicas, 4);
+        assert_eq!(c.label(), "diff+slice:2+avg:4+cal");
+        assert_eq!(c.array_count(), 16);
+
+        let none = MitigationConfig::parse("").unwrap();
+        assert!(none.is_noop());
+        assert_eq!(none.label(), "none");
+        assert_eq!(MitigationConfig::parse("none").unwrap(), none);
+        assert_eq!(none.array_count(), 1);
+
+        let avg = MitigationConfig::parse(" avg:2 ").unwrap();
+        assert_eq!(avg.replicas, 2);
+        assert!(!avg.is_noop());
+        assert_eq!(avg.label(), "avg:2");
+
+        let cal = MitigationConfig::parse("cal:8").unwrap();
+        assert_eq!(cal.probes, 8);
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(MitigationConfig::parse("frob").is_err());
+        assert!(MitigationConfig::parse("slice").is_err());
+        assert!(MitigationConfig::parse("slice:0").is_err());
+        assert!(MitigationConfig::parse("slice:99").is_err());
+        assert!(MitigationConfig::parse("avg:zero").is_err());
+        assert!(MitigationConfig::parse("avg:100").is_err());
+        assert!(MitigationConfig::parse("diff:2").is_err());
+        assert!(MitigationConfig::parse("cal:2").is_err());
+    }
+
+    #[test]
+    fn slice_gain_tracks_device_resolution() {
+        assert_eq!(slice_gain(&presets::epiram().params), 64.0); // 64 states
+        assert_eq!(slice_gain(&presets::ag_si().params), 64.0); // 97 states
+        assert_eq!(slice_gain(&presets::alox_hfo2().params), 32.0); // 40 states
+    }
+
+    #[test]
+    fn clean_programmed_weight_is_quantized_target() {
+        let params = crate::device::params::DeviceParams::ideal().with_weight_bits(6);
+        // No NL: the clean realized weight is the pulse-quantized target.
+        for &v in &[0.0f32, 0.5, -0.73, 1.0, -1.0] {
+            let got = clean_programmed_weight(v, &params, false);
+            assert!((got - v as f64).abs() <= 1.0 / 63.0 + 1e-9, "v={v} got={got}");
+        }
+        // Verified path quantizes but never applies the NL curve.
+        let nl = params.with_nonlinearity(2.4, -4.88);
+        let open = clean_programmed_weight(0.5, &nl, false);
+        let ver = clean_programmed_weight(0.5, &nl, true);
+        assert!((ver - 0.5).abs() < 0.02);
+        assert!((open - 0.5).abs() > (ver - 0.5).abs());
+    }
+
+    #[test]
+    fn slice_digits_refine_the_quantization_residual() {
+        let params = presets::ag_si().params; // 97 states, G = 64
+        let w: Vec<f32> = vec![0.3, -0.87, 0.501, 0.0, 1.0, -1.0, 0.013];
+        let digits = slice_digits(&w, &params, 3);
+        let gain = slice_gain(&params);
+        for (i, &wi) in w.iter().enumerate() {
+            // Recombined quantized realization must beat single-array
+            // pulse-count quantization.
+            let single = (clean_programmed_weight(wi, &params, true) - wi as f64).abs();
+            let mut combined = 0.0f64;
+            let mut scale = 1.0f64;
+            for plane in digits.iter() {
+                combined += clean_programmed_weight(plane[i], &params, true) / scale;
+                scale *= gain;
+            }
+            let sliced = (combined - wi as f64).abs();
+            assert!(
+                sliced <= single + 1e-12,
+                "w={wi}: sliced {sliced} vs single {single}"
+            );
+            // Three slices: residual below one part in G^2 of a step.
+            assert!(sliced < 1e-4, "w={wi}: sliced {sliced}");
+        }
+        // Digits stay programmable.
+        for plane in &digits {
+            assert!(plane.iter().all(|d| (-1.0..=1.0).contains(d)));
+        }
+    }
+
+    #[test]
+    fn probe_inputs_vary_across_probes() {
+        let rows = 32;
+        for k in 0..8 {
+            let v: Vec<f32> = (0..rows).map(|i| probe_input(k, i, rows)).collect();
+            assert!(v.iter().all(|&x| (0.0..=1.0).contains(&x)), "probe {k}");
+        }
+        // Distinct profiles: flat vs ramp.
+        assert_ne!(probe_input(0, 3, rows), probe_input(1, 3, rows));
+    }
+
+    #[test]
+    fn affine_fit_recovers_distortion() {
+        let clean: Vec<f64> = vec![0.1, 0.9, -0.4, 0.5];
+        let noisy: Vec<f64> = clean.iter().map(|&c| 1.1 * c + 0.07).collect();
+        let (g, o) = probe_affine_fit(&clean, &noisy);
+        assert!((g - 1.1).abs() < 1e-12);
+        assert!((o - 0.07).abs() < 1e-12);
+        // Identity data yields the exact identity map.
+        let (g, o) = probe_affine_fit(&clean, &clean);
+        assert_eq!(g, 1.0);
+        assert_eq!(o, 0.0);
+        // Degenerate clean variance: offset-only fallback.
+        let flat = vec![0.5; 4];
+        let off: Vec<f64> = flat.iter().map(|&c| c + 0.2).collect();
+        let (g, o) = probe_affine_fit(&flat, &off);
+        assert_eq!(g, 1.0);
+        assert!((o - 0.2).abs() < 1e-12);
+    }
+}

@@ -5,8 +5,12 @@
 //! stationary and Krylov solvers below take their matrix-vector
 //! products from a programmed (noisy) crossbar, so the VMM error
 //! populations measured by the benchmark translate directly into
-//! solver convergence behaviour (see `examples/linear_solver.rs` and
-//! the `fig_solver` ablation bench).
+//! solver convergence behaviour — see `examples/linear_solver.rs`, the
+//! `solver` registry experiment (`meliso run solver`), and the
+//! `meliso solve` subcommand.  [`CrossbarOperator::program_mitigated`]
+//! runs the products through the error-mitigation pipeline
+//! ([`crate::mitigation`]), which lowers the convergence floors the
+//! experiment measures.
 
 pub mod cg;
 pub mod jacobi;

@@ -1,7 +1,7 @@
 //! Linear operators: the exact matrix and its crossbar realization.
 
-use crate::crossbar::tile::TiledCrossbar;
 use crate::device::params::DeviceParams;
+use crate::mitigation::{MitigatedMatrix, MitigationConfig};
 use crate::util::rng::Xoshiro256;
 
 /// Anything that can apply `y = A x` (and `A^T x` for Krylov methods
@@ -68,25 +68,42 @@ impl LinearOperator for ExactOperator {
 /// Matrix entries must lie in `[-scale, scale]`; they are normalized by
 /// `scale` for programming and the read is rescaled, mirroring how a
 /// deployment maps numeric ranges onto conductance ranges.
+///
+/// Both directions run through the mitigation pipeline
+/// ([`MitigatedMatrix`]); [`CrossbarOperator::program`] uses the
+/// identity config and is bit-for-bit the pre-mitigation operator.
 #[derive(Debug)]
 pub struct CrossbarOperator {
     n: usize,
     m: usize,
     scale: f64,
-    /// Crossbar programmed with A^T (so a column read gives A x).
-    forward: TiledCrossbar,
-    /// Crossbar programmed with A (for transpose products).
-    transpose: TiledCrossbar,
+    /// Pipeline programmed with A^T (so a column read gives A x).
+    forward: MitigatedMatrix,
+    /// Pipeline programmed with A (for transpose products).
+    transpose: MitigatedMatrix,
 }
 
 impl CrossbarOperator {
-    /// Program matrix `a` (row-major `n x m`, f64) under `params`.
+    /// Program matrix `a` (row-major `n x m`, f64) under `params`,
+    /// without mitigation.
     pub fn program(
         n: usize,
         m: usize,
         a: &[f64],
         params: &DeviceParams,
         rng: &mut Xoshiro256,
+    ) -> Self {
+        Self::program_mitigated(n, m, a, params, rng, &MitigationConfig::NONE)
+    }
+
+    /// Program matrix `a` through the given mitigation pipeline.
+    pub fn program_mitigated(
+        n: usize,
+        m: usize,
+        a: &[f64],
+        params: &DeviceParams,
+        rng: &mut Xoshiro256,
+        mitigation: &MitigationConfig,
     ) -> Self {
         assert_eq!(a.len(), n * m);
         let scale = a
@@ -103,15 +120,21 @@ impl CrossbarOperator {
         }
         // Solvers deploy with write-verify (paper §III: "essential to
         // mitigate ... in real-world applications"); the residual
-        // programming error + read-path mismatch still set the floor.
-        let forward = TiledCrossbar::program_verified(m, n, &at, params, 32, 32, rng);
+        // programming error + read-path mismatch still set the floor —
+        // which is exactly what the mitigation pipeline then attacks.
+        let forward = MitigatedMatrix::program(m, n, &at, params, 32, 32, rng, mitigation, true);
         let aw: Vec<f32> = a.iter().map(|&v| (v / scale) as f32).collect();
-        let transpose = TiledCrossbar::program_verified(n, m, &aw, params, 32, 32, rng);
+        let transpose = MitigatedMatrix::program(n, m, &aw, params, 32, 32, rng, mitigation, true);
         Self { n, m, scale, forward, transpose }
     }
 
     pub fn scale(&self) -> f64 {
         self.scale
+    }
+
+    /// Physical crossbars programmed across both directions.
+    pub fn array_count(&self) -> usize {
+        self.forward.array_count() + self.transpose.array_count()
     }
 }
 
@@ -186,6 +209,39 @@ mod tests {
         for j in 0..m {
             assert!((yte[j] - ytx[j]).abs() < 0.05);
         }
+    }
+
+    #[test]
+    fn mitigated_operator_tightens_apply() {
+        use crate::device::presets;
+        let (n, m) = (48, 48);
+        let a = random_matrix(n, m, 164);
+        let exact = ExactOperator::new(n, m, a.clone());
+        let params = presets::ag_si().params;
+        let mut rng = Xoshiro256::seed_from_u64(165);
+        let plain = CrossbarOperator::program(n, m, &a, &params, &mut rng);
+        let mitigated = CrossbarOperator::program_mitigated(
+            n,
+            m,
+            &a,
+            &params,
+            &mut rng,
+            &MitigationConfig::parse("diff,avg:4").unwrap(),
+        );
+        assert_eq!(plain.array_count(), 2);
+        assert_eq!(mitigated.array_count(), 16);
+        let x: Vec<f64> = (0..m).map(|i| ((i % 7) as f64 - 3.0) / 3.0).collect();
+        let mut ye = vec![0.0; n];
+        exact.apply(&x, &mut ye);
+        let rms = |op: &CrossbarOperator| -> f64 {
+            let mut y = vec![0.0; n];
+            op.apply(&x, &mut y);
+            let s: f64 = y.iter().zip(&ye).map(|(a, b)| (a - b) * (a - b)).sum();
+            (s / n as f64).sqrt()
+        };
+        let e_plain = rms(&plain);
+        let e_mit = rms(&mitigated);
+        assert!(e_mit < e_plain, "plain {e_plain} vs mitigated {e_mit}");
     }
 
     #[test]

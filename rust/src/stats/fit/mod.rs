@@ -112,16 +112,20 @@ pub struct FitReport {
 }
 
 /// Fit all candidate families and return reports sorted by AIC
-/// (best first).  `data` need not be sorted.
+/// (best first).  `data` need not be sorted.  Non-finite observations
+/// (NaN or ±inf reads) are dropped before fitting — they used to panic
+/// the sort; the surviving sample count is what the error message
+/// reports when too few remain.
 pub fn fit_all(data: &[f64]) -> Result<Vec<FitReport>> {
-    if data.len() < 16 {
+    let mut sorted: Vec<f64> = data.iter().copied().filter(|v| v.is_finite()).collect();
+    if sorted.len() < 16 {
         return Err(Error::Fit(format!(
-            "need at least 16 samples, got {}",
-            data.len()
+            "need at least 16 finite samples, got {} ({} non-finite dropped)",
+            sorted.len(),
+            data.len() - sorted.len()
         )));
     }
-    let mut sorted = data.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(|a, b| a.total_cmp(b));
     let sub = subsample(&sorted);
 
     let mut models = vec![FittedModel::Normal(Normal::fit(&sorted))];
@@ -159,7 +163,7 @@ pub fn fit_all(data: &[f64]) -> Result<Vec<FitReport>> {
     if reports.is_empty() {
         return Err(Error::Fit("all families failed to fit".into()));
     }
-    reports.sort_by(|a, b| a.aic.partial_cmp(&b.aic).unwrap());
+    reports.sort_by(|a, b| a.aic.total_cmp(&b.aic));
     Ok(reports)
 }
 
@@ -245,6 +249,17 @@ mod tests {
     #[test]
     fn too_few_samples_errors() {
         assert!(best_fit(&[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn nan_reads_do_not_panic_the_fit() {
+        let mut data = normal_data(4_000, 0.0, 1.0, 36);
+        data[17] = f64::NAN;
+        data[1234] = f64::INFINITY;
+        let best = best_fit(&data).unwrap();
+        assert!(best.loglik.is_finite());
+        // All-NaN input is an error, not a panic.
+        assert!(fit_all(&[f64::NAN; 64]).is_err());
     }
 
     #[test]

@@ -6,6 +6,12 @@
 //! bit-identical statistics regardless of chunking.
 
 /// One-pass accumulator of count, mean and 2nd–4th central moments.
+///
+/// Non-finite observations (NaN or ±inf reads) are not accumulated:
+/// they would irreversibly poison every downstream statistic, so they
+/// are counted in [`Moments::nan_count`] instead and surfaced through
+/// [`Summary::nans`] — one bad read no longer takes down a whole
+/// experiment's reduction.
 #[derive(Debug, Clone, Default)]
 pub struct Moments {
     n: u64,
@@ -15,6 +21,7 @@ pub struct Moments {
     m4: f64,
     min: f64,
     max: f64,
+    nans: u64,
 }
 
 impl Moments {
@@ -27,11 +34,17 @@ impl Moments {
             m4: 0.0,
             min: f64::INFINITY,
             max: f64::NEG_INFINITY,
+            nans: 0,
         }
     }
 
-    /// Accumulate one observation.
+    /// Accumulate one observation (non-finite values are counted, not
+    /// accumulated).
     pub fn push(&mut self, x: f64) {
+        if !x.is_finite() {
+            self.nans += 1;
+            return;
+        }
         let n1 = self.n as f64;
         self.n += 1;
         let n = self.n as f64;
@@ -67,10 +80,14 @@ impl Moments {
     /// accumulators equals accumulating the concatenation.
     pub fn merge(&self, other: &Moments) -> Moments {
         if self.n == 0 {
-            return other.clone();
+            let mut m = other.clone();
+            m.nans += self.nans;
+            return m;
         }
         if other.n == 0 {
-            return self.clone();
+            let mut m = self.clone();
+            m.nans += other.nans;
+            return m;
         }
         let (na, nb) = (self.n as f64, other.n as f64);
         let n = na + nb;
@@ -99,11 +116,17 @@ impl Moments {
             m4,
             min: self.min.min(other.min),
             max: self.max.max(other.max),
+            nans: self.nans + other.nans,
         }
     }
 
     pub fn count(&self) -> u64 {
         self.n
+    }
+
+    /// Non-finite observations (NaN or ±inf) seen and excluded so far.
+    pub fn nan_count(&self) -> u64 {
+        self.nans
     }
 
     pub fn mean(&self) -> f64 {
@@ -171,6 +194,7 @@ impl Moments {
             excess_kurtosis: self.excess_kurtosis(),
             min: self.min,
             max: self.max,
+            nans: self.nans,
         }
     }
 }
@@ -186,6 +210,9 @@ pub struct Summary {
     pub excess_kurtosis: f64,
     pub min: f64,
     pub max: f64,
+    /// Non-finite observations (NaN or ±inf) dropped from the
+    /// accumulation.
+    pub nans: u64,
 }
 
 #[cfg(test)]
@@ -293,5 +320,30 @@ mod tests {
         assert_eq!(s.count, 4);
         assert_eq!(s.mean, m.mean());
         assert_eq!(s.variance, m.variance());
+        assert_eq!(s.nans, 0);
+    }
+
+    #[test]
+    fn nan_reads_counted_not_accumulated() {
+        let m = Moments::from_slice(&[1.0, f64::NAN, 2.0, 3.0, f64::NAN]);
+        assert_eq!(m.count(), 3);
+        assert_eq!(m.nan_count(), 2);
+        assert!((m.mean() - 2.0).abs() < 1e-15);
+        assert!(m.variance().is_finite());
+        assert_eq!(m.summary().nans, 2);
+        // Infinite reads would poison the mean/variance just the same
+        // (inf - inf = NaN inside the update): excluded and counted.
+        let inf = Moments::from_slice(&[1.0, f64::INFINITY, 2.0, f64::NEG_INFINITY]);
+        assert_eq!(inf.count(), 2);
+        assert_eq!(inf.nan_count(), 2);
+        assert!(inf.variance().is_finite());
+        // Merge accumulates the census, including through the
+        // empty-side fast paths.
+        let clean = Moments::from_slice(&[4.0]);
+        assert_eq!(m.merge(&clean).nan_count(), 2);
+        let only_nan = Moments::from_slice(&[f64::NAN]);
+        assert_eq!(only_nan.count(), 0);
+        assert_eq!(clean.merge(&only_nan).nan_count(), 1);
+        assert_eq!(only_nan.merge(&clean).nan_count(), 1);
     }
 }

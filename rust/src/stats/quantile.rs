@@ -35,14 +35,23 @@ pub struct BoxPlot {
     /// paper's "span of outliers" observation on AlOx/HfO2.
     pub outlier_span: f64,
     pub n: usize,
+    /// Non-finite observations (NaN or ±inf) dropped before
+    /// summarizing (surfaced instead of poisoning the whole experiment
+    /// — one bad read used to panic the sort here, and an infinity
+    /// turns interpolated quartiles into NaN).
+    pub nans: usize,
 }
 
 impl BoxPlot {
-    /// Compute from unsorted data (sorts a copy).
+    /// Compute from unsorted data (sorts a copy).  Non-finite values
+    /// are dropped and counted in [`BoxPlot::nans`]; input with no
+    /// finite values panics, as empty input always did.
     pub fn from_data(data: &[f64]) -> BoxPlot {
-        let mut sorted = data.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        Self::from_sorted(&sorted)
+        let mut sorted: Vec<f64> = data.iter().copied().filter(|v| v.is_finite()).collect();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let mut b = Self::from_sorted(&sorted);
+        b.nans = data.len() - sorted.len();
+        b
     }
 
     /// Compute from already-sorted data.
@@ -90,6 +99,7 @@ impl BoxPlot {
             outliers,
             outlier_span,
             n: sorted.len(),
+            nans: 0,
         }
     }
 }
@@ -142,6 +152,27 @@ mod tests {
         assert_eq!(b.outliers, 2);
         assert!(b.outlier_span > 100.0);
         assert!(b.whisker_hi <= 9.0 + 1.5 * b.iqr + 1e-12);
+    }
+
+    #[test]
+    fn boxplot_survives_nan_reads() {
+        // One poisoned read must not panic the whole summary (the old
+        // partial_cmp().unwrap() sort did).
+        let d = vec![1.0, f64::NAN, 2.0, 3.0, f64::NAN, 4.0, 5.0];
+        let b = BoxPlot::from_data(&d);
+        assert_eq!(b.n, 5);
+        assert_eq!(b.nans, 2);
+        assert_eq!(b.median, 3.0);
+        let clean = BoxPlot::from_data(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(clean.nans, 0);
+        assert_eq!(b.q1, clean.q1);
+        assert_eq!(b.q3, clean.q3);
+        // Infinities are dropped too: kept, they make the interpolated
+        // quartiles NaN (0 * inf) and the whiskers meaningless.
+        let inf = BoxPlot::from_data(&[1.0, f64::INFINITY, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(inf.nans, 1);
+        assert_eq!(inf.median, b.median);
+        assert!(inf.whisker_hi.is_finite());
     }
 
     #[test]

@@ -1,0 +1,151 @@
+//! Integration: property and determinism coverage for the mitigation
+//! pipeline (ISSUE 2).
+//!
+//! * On a *perfect* device (no noise channels at all) the linear
+//!   strategies are exact identities: mitigated output bit-equals the
+//!   unmitigated engine.  (Bit-slicing re-quantizes through the digit
+//!   grid, so it is checked to a tight tolerance instead.)
+//! * `Fixed(1)` and `Auto` thread counts are bit-identical through
+//!   `MitigatedEngine` — mitigation preserves PR 1's determinism
+//!   contract.
+//! * Replica averaging monotonically shrinks the error variance on the
+//!   C2C-dominated EpiRAM.
+
+use meliso::device::params::DeviceParams;
+use meliso::device::presets;
+use meliso::mitigation::{MitigatedEngine, MitigationConfig};
+use meliso::stats::moments::Moments;
+use meliso::util::pool::Parallelism;
+use meliso::util::rng::Xoshiro256;
+use meliso::vmm::{NativeEngine, VmmBatch, VmmEngine};
+
+fn random_batch(b: usize, r: usize, c: usize, seed: u64) -> VmmBatch {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut vb = VmmBatch::zeros(b, r, c);
+    rng.fill_uniform_f32(&mut vb.w, -1.0, 1.0);
+    rng.fill_uniform_f32(&mut vb.x, 0.0, 1.0);
+    rng.fill_normal_f32(&mut vb.z);
+    vb
+}
+
+/// An ideal device with the vestigial baseline-mismatch scale zeroed:
+/// every noise channel is exactly inert, so mitigation must be an
+/// exact linear identity.
+fn perfect_device() -> DeviceParams {
+    DeviceParams {
+        k_base: 0.0,
+        ..DeviceParams::ideal()
+    }
+}
+
+fn mitigated(spec: &str) -> MitigatedEngine<NativeEngine> {
+    MitigatedEngine::new(
+        NativeEngine::default(),
+        MitigationConfig::parse(spec).unwrap(),
+    )
+}
+
+#[test]
+fn perfect_device_mitigated_output_bit_equals_unmitigated() {
+    let batch = random_batch(9, 32, 32, 901);
+    let device = perfect_device();
+    let base = NativeEngine::default().forward(&batch, &device).unwrap();
+    // Differential pairing, replica averaging, calibration, and their
+    // compositions recombine to the exact same bits: the complementary
+    // array reads the exact negation, replicas are bit-identical under
+    // zero noise, and the calibration fit collapses to gain 1 offset 0.
+    for spec in ["diff", "avg:3", "avg:4", "cal", "diff,avg:4", "diff,avg:2,cal"] {
+        let out = mitigated(spec).forward(&batch, &device).unwrap();
+        assert_eq!(out.y_hw, base.y_hw, "strategy {spec}");
+        assert_eq!(out.y_sw, base.y_sw, "strategy {spec}");
+    }
+    // Bit-slicing re-quantizes through the digit grid; on the
+    // 65536-state perfect device both paths are exact to well below
+    // one state.
+    let sliced = mitigated("slice:2").forward(&batch, &device).unwrap();
+    for (a, b) in sliced.y_hw.iter().zip(base.y_hw.iter()) {
+        assert!((a - b).abs() < 1e-3, "slice: {a} vs {b}");
+    }
+}
+
+#[test]
+fn fixed1_and_auto_threads_bit_identical_through_mitigation() {
+    let batch = random_batch(37, 32, 32, 902);
+    let device = presets::epiram().params;
+    let cfg = MitigationConfig::parse("diff,slice:2,avg:2,cal").unwrap();
+    let seq = MitigatedEngine::new(NativeEngine::sequential(), cfg)
+        .forward(&batch, &device)
+        .unwrap();
+    for par in [Parallelism::Fixed(3), Parallelism::Auto] {
+        let out = MitigatedEngine::new(NativeEngine::with_parallelism(par), cfg)
+            .forward(&batch, &device)
+            .unwrap();
+        assert_eq!(seq.y_hw, out.y_hw, "{par:?}");
+        assert_eq!(seq.y_sw, out.y_sw, "{par:?}");
+    }
+}
+
+#[test]
+fn replica_averaging_monotonically_shrinks_variance_on_epiram() {
+    let batch = random_batch(48, 32, 32, 903);
+    let device = presets::epiram().params;
+    let var_of = |spec: &str| -> f64 {
+        let out = mitigated(spec).forward(&batch, &device).unwrap();
+        Moments::from_slice(&out.errors()).variance()
+    };
+    let v1 = var_of("none");
+    let v2 = var_of("avg:2");
+    let v4 = var_of("avg:4");
+    assert!(v2 < v1, "avg:2 {v2} !< none {v1}");
+    assert!(v4 < v2, "avg:4 {v4} !< avg:2 {v2}");
+    // ~1/R C2C shrink on a C2C-dominated device: the 4-replica run
+    // must cut well over half of the single-cycle variance.
+    assert!(v4 < v1 * 0.6, "v1={v1} v4={v4}");
+}
+
+#[test]
+fn mitigation_is_deterministic_across_calls() {
+    let batch = random_batch(8, 32, 32, 904);
+    let device = presets::ag_si().params;
+    let eng = mitigated("diff,slice:2,avg:2,cal");
+    let a = eng.forward(&batch, &device).unwrap();
+    let b = eng.forward(&batch, &device).unwrap();
+    assert_eq!(a.y_hw, b.y_hw);
+}
+
+#[test]
+fn mitigated_solver_operator_reaches_lower_cg_floor() {
+    use meliso::solver::{conjugate_gradient, CrossbarOperator, ExactOperator, SolveOpts};
+
+    let n = 48;
+    let mut rng = Xoshiro256::seed_from_u64(905);
+    // SPD system A = M^T M / n + I.
+    let m: Vec<f64> = (0..n * n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+    let mut a = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0;
+            for k in 0..n {
+                s += m[k * n + i] * m[k * n + j];
+            }
+            a[i * n + j] = s / n as f64 + if i == j { 1.0 } else { 0.0 };
+        }
+    }
+    let b: Vec<f64> = (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+    let exact = ExactOperator::new(n, n, a.clone());
+    let device = presets::epiram().params;
+    let opts = SolveOpts { max_iters: 100, tol: 1e-12 };
+
+    let floor_of = |cfg: &MitigationConfig, rng: &mut Xoshiro256| -> f64 {
+        let op = CrossbarOperator::program_mitigated(n, n, &a, &device, rng, cfg);
+        let r = conjugate_gradient(&op, &exact, &b, &opts).unwrap();
+        let mut floor = f64::INFINITY;
+        for &res in &r.residual_history {
+            floor = floor.min(res);
+        }
+        floor
+    };
+    let plain = floor_of(&MitigationConfig::NONE, &mut rng);
+    let mit = floor_of(&MitigationConfig::parse("diff,avg:4").unwrap(), &mut rng);
+    assert!(mit < plain, "mitigated floor {mit} !< plain floor {plain}");
+}

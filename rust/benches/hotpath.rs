@@ -4,6 +4,7 @@
 //!  * workload generation (host, L3)
 //!  * native crossbar engine, sequential baseline vs parallel fan
 //!  * tiled crossbar engine at 128x128 and 256x256
+//!  * layered inference pipeline, depth 4/8, plain vs mitigated
 //!  * software reference VMM
 //!  * XLA engine single batch (L2+L1 through PJRT), if artifacts exist
 //!  * streaming statistics reduction
@@ -13,9 +14,10 @@ use meliso::coordinator::{BenchmarkConfig, Coordinator, WorkloadSpec};
 use meliso::device::params::NonIdealities;
 use meliso::device::presets;
 use meliso::mitigation::{MitigatedEngine, MitigationConfig};
+use meliso::pipeline::{Activation, NetworkSpec, PipelineOptions, PipelineRunner};
 use meliso::stats::moments::Moments;
 use meliso::util::bench::{bench, black_box, BenchOpts};
-use meliso::vmm::{NativeEngine, TiledEngine, VmmEngine, XlaEngine};
+use meliso::vmm::{DynEngine, NativeEngine, TiledEngine, VmmEngine, XlaEngine};
 
 fn main() {
     let device = presets::ag_si().params.masked(NonIdealities::FULL);
@@ -94,6 +96,32 @@ fn main() {
                 black_box(tiled.forward(&tb, &device).unwrap());
             },
         );
+    }
+
+    // Layered inference pipeline: deep VMM chains through the parallel
+    // native engine, plain vs per-layer mitigation — the cost of the
+    // `pipeline` experiment's cells (samples x depth VMMs per run).
+    let runner = PipelineRunner::new(DynEngine::new(NativeEngine::default()));
+    let opts = PipelineOptions::default();
+    for depth in [4usize, 8] {
+        for mit in ["none", "diff,avg:2"] {
+            let mut net = NetworkSpec::uniform(depth, 32, Activation::Relu, 3)
+                .with_population(32);
+            if mit != "none" {
+                net = net.with_mitigation(MitigationConfig::parse(mit).unwrap());
+            }
+            bench(
+                &format!("pipeline depth-{depth} ({mit}): 32 samples x 32x32"),
+                BenchOpts {
+                    samples: 3,
+                    warmup: 1,
+                    items_per_iter: Some((32 * depth) as f64),
+                },
+                || {
+                    black_box(runner.run(&net, &device, &opts).unwrap());
+                },
+            );
+        }
     }
 
     // Software reference.

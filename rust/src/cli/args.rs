@@ -11,12 +11,15 @@
 //! meliso fit --input FILE.csv [--column K]
 //! meliso solve [--device ID] [--n N] [--solver cg|jacobi|richardson]
 //!              [--mitigation SPEC]
+//! meliso infer [--device ID] [--depth N] [--layers DIMS]
+//!              [--activation A] [--mitigation SPEC]
 //! meliso warmup                                    # precompile artifacts
 //! ```
 
 use crate::config::{EngineKind, RunConfig};
 use crate::error::{Error, Result};
 use crate::mitigation::MitigationConfig;
+use crate::pipeline::{parse_dims, Activation};
 
 /// Parsed command line.
 #[derive(Debug, Clone)]
@@ -34,6 +37,7 @@ pub enum Command {
     Bench,
     Fit { input: String, column: usize },
     Solve { device: String, n: usize, solver: String },
+    Infer { device: String },
     Warmup,
     Help,
     Version,
@@ -53,6 +57,10 @@ COMMANDS:
   fit --input F [--column K] Fit distributions to a CSV error column
   solve [--device ID] [--n N] [--solver S]
                              In-memory linear solve demo (cg|jacobi|richardson)
+  infer [--device ID]        Layered inference: chain VMMs through a seeded
+                             deep network and report per-layer error propagation
+                             (e.g. `meliso infer --depth 4 --activation relu`,
+                             `meliso infer --layers 32x48x10 --mitigation diff`)
   warmup                     Precompile all XLA artifacts
   help, version
 
@@ -72,6 +80,13 @@ OPTIONS:
   --mitigation <SPEC>              Error-mitigation pipeline, a comma list of
                                    diff | slice:K | avg:R | cal[:P]
                                    (e.g. diff,slice:2,avg:4) [default: none]
+  --depth <N>                      Layers in a uniform-width inference network
+                                   (width = --size) [default: 4]
+  --layers <DIMS>                  Explicit layer dimension chain, e.g. 32x48x10
+                                   (overrides --depth/--size)
+  --activation <A>                 Per-layer nonlinearity:
+                                   identity | relu | tanh | hardtanh
+                                   [default: relu]
   --config <FILE>                  TOML config file (CLI flags override)
   --quiet                          Suppress terminal tables
 ";
@@ -138,6 +153,18 @@ impl Args {
                 "mitigation" => {
                     config.mitigation = MitigationConfig::parse(req(name, v)?)?;
                 }
+                "depth" => {
+                    config.pipeline.depth = parse_num(name, req(name, v)?)?;
+                    if config.pipeline.depth == 0 {
+                        return Err(Error::Config("depth must be > 0".into()));
+                    }
+                }
+                "activation" => {
+                    config.pipeline.activation = Activation::parse(req(name, v)?)?;
+                }
+                "layers" => {
+                    config.pipeline.dims = Some(parse_dims(req(name, v)?)?);
+                }
                 "quiet" => config.quiet = true,
                 "config" | "input" | "column" | "device" | "n" | "solver" => {}
                 other => {
@@ -178,6 +205,9 @@ impl Args {
                     None => 64,
                 },
                 solver: flag("solver").unwrap_or_else(|| "cg".into()),
+            },
+            "infer" => Command::Infer {
+                device: flag("device").unwrap_or_else(|| "ag-si".into()),
             },
             "warmup" => Command::Warmup,
             "help" | "--help" | "-h" => Command::Help,
@@ -270,6 +300,29 @@ mod tests {
         assert!(parse("run fig3").unwrap().config.mitigation.is_noop());
         assert!(parse("run fig3 --mitigation bogus").is_err());
         assert!(parse("run fig3 --mitigation").is_err());
+    }
+
+    #[test]
+    fn parses_infer_flags() {
+        let a = parse("infer --device epiram --depth 6 --activation tanh --population 32")
+            .unwrap();
+        assert_eq!(a.command, Command::Infer { device: "epiram".into() });
+        assert_eq!(a.config.pipeline.depth, 6);
+        assert_eq!(a.config.pipeline.activation, crate::pipeline::Activation::Tanh);
+        assert_eq!(a.config.population, 32);
+        // Explicit layer chain.
+        let a = parse("infer --layers 32x48x10").unwrap();
+        assert_eq!(a.config.pipeline.dims, Some(vec![32, 48, 10]));
+        // Defaults.
+        let a = parse("infer").unwrap();
+        assert_eq!(a.command, Command::Infer { device: "ag-si".into() });
+        assert_eq!(a.config.pipeline.depth, 4);
+        assert!(a.config.pipeline.dims.is_none());
+        // Rejections.
+        assert!(parse("infer --depth 0").is_err());
+        assert!(parse("infer --depth two").is_err());
+        assert!(parse("infer --activation softmax").is_err());
+        assert!(parse("infer --layers 32").is_err());
     }
 
     #[test]

@@ -11,6 +11,11 @@
 //! threads = 0                 # 0 = auto
 //! mitigation = "diff,avg:4"   # error-mitigation pipeline (default none)
 //!
+//! [pipeline]                  # layered inference (`meliso infer`)
+//! depth = 4                   # layers in a uniform-width network
+//! activation = "relu"         # identity | relu | tanh | hardtanh
+//! layers = "32x48x10"         # explicit dimension chain (overrides depth)
+//!
 //! [device]                    # optional custom device
 //! states = 97
 //! memory_window = 12.5
@@ -26,6 +31,7 @@ use crate::device::params::{
 };
 use crate::error::{Error, Result};
 use crate::mitigation::MitigationConfig;
+use crate::pipeline::{parse_dims, Activation};
 use crate::util::pool::Parallelism;
 use crate::util::toml::TomlDoc;
 
@@ -66,6 +72,25 @@ impl EngineKind {
     }
 }
 
+/// Layered-inference settings (`meliso infer`, the `[pipeline]` TOML
+/// section, and the `--depth/--layers/--activation` flags).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineSettings {
+    /// Layers in a uniform-width network (the width is `RunConfig::
+    /// size`); ignored when `dims` pins an explicit chain.
+    pub depth: usize,
+    pub activation: Activation,
+    /// Explicit dimension chain `d_0, ..., d_L` (layer `k` is a
+    /// `d_k -> d_{k+1}` crossbar), from `--layers` / `layers = "..."`.
+    pub dims: Option<Vec<usize>>,
+}
+
+impl Default for PipelineSettings {
+    fn default() -> Self {
+        Self { depth: 4, activation: Activation::Relu, dims: None }
+    }
+}
+
 /// Fully resolved run configuration.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -88,6 +113,8 @@ pub struct RunConfig {
     /// operators (`--mitigation diff,slice:2,avg:4,cal`; identity by
     /// default).
     pub mitigation: MitigationConfig,
+    /// Layered-inference settings (`meliso infer`).
+    pub pipeline: PipelineSettings,
     pub quiet: bool,
     /// Optional custom device overriding the presets.
     pub custom_device: Option<DeviceParams>,
@@ -105,6 +132,7 @@ impl Default for RunConfig {
             size: crate::ROWS,
             tile: crate::ROWS,
             mitigation: MitigationConfig::NONE,
+            pipeline: PipelineSettings::default(),
             quiet: false,
             custom_device: None,
         }
@@ -211,6 +239,25 @@ impl RunConfig {
                 .as_bool()
                 .ok_or_else(|| Error::Config("quiet must be a bool".into()))?;
         }
+        if let Some(v) = doc.get("pipeline", "depth") {
+            cfg.pipeline.depth = v
+                .as_i64()
+                .filter(|&n| n > 0)
+                .ok_or_else(|| Error::Config("pipeline.depth must be a positive int".into()))?
+                as usize;
+        }
+        if let Some(v) = doc.get("pipeline", "activation") {
+            cfg.pipeline.activation = Activation::parse(
+                v.as_str()
+                    .ok_or_else(|| Error::Config("pipeline.activation must be a string".into()))?,
+            )?;
+        }
+        if let Some(v) = doc.get("pipeline", "layers") {
+            cfg.pipeline.dims = Some(parse_dims(
+                v.as_str()
+                    .ok_or_else(|| Error::Config("pipeline.layers must be a string".into()))?,
+            )?);
+        }
         if doc.tables.contains_key("device") {
             cfg.custom_device = Some(parse_device(&doc)?);
         }
@@ -310,6 +357,27 @@ sigma_c2c = 0.035
         assert!(RunConfig::default().mitigation.is_noop());
         assert!(RunConfig::from_toml("mitigation = \"frob\"\n").is_err());
         assert!(RunConfig::from_toml("mitigation = 3\n").is_err());
+    }
+
+    #[test]
+    fn pipeline_section_parses() {
+        let c = RunConfig::from_toml(
+            "[pipeline]\ndepth = 6\nactivation = \"tanh\"\nlayers = \"32x48x10\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.pipeline.depth, 6);
+        assert_eq!(c.pipeline.activation, Activation::Tanh);
+        assert_eq!(c.pipeline.dims, Some(vec![32, 48, 10]));
+        // Defaults.
+        let d = RunConfig::default().pipeline;
+        assert_eq!(d.depth, 4);
+        assert_eq!(d.activation, Activation::Relu);
+        assert_eq!(d.dims, None);
+        // Rejections.
+        assert!(RunConfig::from_toml("[pipeline]\ndepth = 0\n").is_err());
+        assert!(RunConfig::from_toml("[pipeline]\nactivation = \"softmax\"\n").is_err());
+        assert!(RunConfig::from_toml("[pipeline]\nlayers = \"32\"\n").is_err());
+        assert!(RunConfig::from_toml("[pipeline]\nlayers = 32\n").is_err());
     }
 
     #[test]

@@ -12,4 +12,4 @@ pub mod workload;
 
 pub use population::ErrorPopulation;
 pub use runner::{BenchmarkConfig, CalibrationMode, Coordinator, RunTelemetry};
-pub use workload::WorkloadSpec;
+pub use workload::{InputSpec, WorkloadSpec};

@@ -267,7 +267,11 @@ fn affine_calibration(y_hw: &[f32], y_sw: &[f32]) -> (f64, f64) {
 /// them; we use the largest fitting artifact and fall back to the
 /// smallest one for the remainder, padding never required because a
 /// batch-1 artifact always exists.
-fn plan_chunks(population: usize, hint: usize, preferred: &[usize]) -> Vec<(usize, usize)> {
+pub(crate) fn plan_chunks(
+    population: usize,
+    hint: usize,
+    preferred: &[usize],
+) -> Vec<(usize, usize)> {
     let mut plan = Vec::new();
     let mut start = 0;
     if preferred.is_empty() {

@@ -77,6 +77,48 @@ impl WorkloadSpec {
     }
 }
 
+/// Input-only population generation for the layered inference pipeline
+/// ([`crate::pipeline`]): `population` seeded input vectors of `dim`
+/// entries, chunked with the same independent per-sample child-seed
+/// discipline as [`WorkloadSpec::chunk`], so the full input population
+/// is identical regardless of chunk sizes, scheduling order, or thread
+/// count — the reproducibility contract the pipeline's determinism
+/// guards rely on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputSpec {
+    /// Entries per input vector (layer-0 word lines).
+    pub dim: usize,
+    /// Number of input samples in the population.
+    pub population: usize,
+    pub dist: EntryDist,
+    pub seed: u64,
+}
+
+impl InputSpec {
+    /// Network inputs default to non-negative read voltages, like the
+    /// paper protocol's `x`.
+    pub fn new(dim: usize, population: usize, seed: u64) -> Self {
+        Self {
+            dim,
+            population,
+            dist: EntryDist::Uniform { lo: 0.0, hi: 1.0 },
+            seed,
+        }
+    }
+
+    /// Generate input vectors `[start, start+len)`, row-major
+    /// `(len, dim)`.
+    pub fn chunk(&self, start: usize, len: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; len * self.dim];
+        let root = Xoshiro256::seed_from_u64(self.seed);
+        for s in 0..len {
+            let mut rng = root.child((start + s) as u64);
+            fill(&mut rng, self.dist, &mut out[s * self.dim..(s + 1) * self.dim]);
+        }
+        out
+    }
+}
+
 fn fill(rng: &mut Xoshiro256, dist: EntryDist, out: &mut [f32]) {
     match dist {
         EntryDist::Uniform { lo, hi } => rng.fill_uniform_f32(out, lo, hi),
@@ -147,6 +189,22 @@ mod tests {
         assert!(c.w.iter().all(|v| (-1.0..=1.0).contains(v)));
         // With sigma=2, clipping must actually occur somewhere.
         assert!(c.w.iter().any(|&v| v == 1.0 || v == -1.0));
+    }
+
+    #[test]
+    fn input_spec_is_chunk_invariant() {
+        let spec = InputSpec::new(16, 12, 77);
+        let whole = spec.chunk(0, 12);
+        let a = spec.chunk(0, 5);
+        let b = spec.chunk(5, 7);
+        assert_eq!(&whole[..5 * 16], &a[..]);
+        assert_eq!(&whole[5 * 16..], &b[..]);
+        for s in 0..12 {
+            let one = spec.chunk(s, 1);
+            assert_eq!(&whole[s * 16..(s + 1) * 16], &one[..], "sample {s}");
+        }
+        // Read voltages are physically non-negative by default.
+        assert!(whole.iter().all(|v| (0.0..=1.0).contains(v)));
     }
 
     #[test]

@@ -39,6 +39,12 @@ pub enum Error {
     #[error("unknown experiment: {0}")]
     UnknownExperiment(String),
 
+    /// Operation not supported by this implementation (e.g. a
+    /// transpose apply on an operator without a transpose pipeline) —
+    /// recoverable, unlike a panic.
+    #[error("unsupported operation: {0}")]
+    Unsupported(String),
+
     /// JSON / TOML parse errors.
     #[error("parse error: {0}")]
     Parse(String),

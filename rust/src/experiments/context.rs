@@ -1,8 +1,6 @@
 //! Shared experiment context: engine, protocol parameters, output
 //! sinks.
 
-use std::sync::Arc;
-
 use crate::config::{EngineKind, RunConfig};
 use crate::coordinator::{BenchmarkConfig, Coordinator, ErrorPopulation};
 use crate::device::params::DeviceParams;
@@ -10,37 +8,12 @@ use crate::error::{Error, Result};
 use crate::mitigation::{MitigatedEngine, MitigationConfig};
 use crate::report::writer::ReportWriter;
 use crate::util::pool::Parallelism;
-use crate::vmm::{
-    NativeEngine, SoftwareEngine, TiledEngine, VmmBatch, VmmEngine, VmmOutput, XlaEngine,
-};
+use crate::vmm::{NativeEngine, SoftwareEngine, TiledEngine, VmmEngine, XlaEngine};
 
-/// Type-erased engine handle shared by all experiments.
-#[derive(Clone)]
-pub struct DynEngine(Arc<dyn VmmEngine>);
-
-impl DynEngine {
-    pub fn new<E: VmmEngine + 'static>(e: E) -> Self {
-        Self(Arc::new(e))
-    }
-}
-
-impl VmmEngine for DynEngine {
-    fn name(&self) -> &'static str {
-        self.0.name()
-    }
-
-    fn forward(&self, batch: &VmmBatch, params: &DeviceParams) -> Result<VmmOutput> {
-        self.0.forward(batch, params)
-    }
-
-    fn preferred_batches(&self) -> Vec<usize> {
-        self.0.preferred_batches()
-    }
-
-    fn internal_parallelism(&self) -> usize {
-        self.0.internal_parallelism()
-    }
-}
+// The type-erased handle moved to the vmm layer (the pipeline shares
+// it); re-exported here for existing `experiments::context::DynEngine`
+// users.
+pub use crate::vmm::DynEngine;
 
 /// Everything an experiment needs to run.
 pub struct Ctx {

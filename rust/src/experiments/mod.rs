@@ -8,6 +8,7 @@ pub mod fig3;
 pub mod fig4;
 pub mod fig5;
 pub mod mitigation;
+pub mod pipeline;
 pub mod registry;
 pub mod table1;
 pub mod table2;

@@ -1,0 +1,206 @@
+//! Extension experiment `pipeline`: end-to-end error propagation
+//! through layered inference networks — error vs depth x width x
+//! device x mitigation.
+//!
+//! Each cell runs a deterministic seeded teacher network
+//! ([`crate::pipeline::NetworkSpec`]) through the hardware chain and
+//! its exact software twin ([`crate::pipeline::PipelineRunner`]),
+//! recording the per-layer accumulated error (the headline curve:
+//! errors compound with depth), the per-layer injected error, and the
+//! classification-style argmax-agreement rate at the output.
+
+use crate::device::params::NonIdealities;
+use crate::device::presets::{ag_si, epiram, DevicePreset};
+use crate::error::Result;
+use crate::mitigation::MitigationConfig;
+use crate::pipeline::{Activation, NetworkSpec, PipelineOptions, PipelineRunner};
+use crate::report::table::{fnum, TextTable};
+use crate::util::csv::CsvTable;
+use crate::util::json::{obj, Json};
+
+use super::context::Ctx;
+
+/// Mitigation specs swept per network (baseline first).
+pub const SWEEP_MITIGATIONS: [&str; 2] = ["none", "diff,avg:2"];
+
+/// `(depth, width)` network shapes swept: the depth axis at the paper
+/// geometry, plus width variants at depth 4.
+pub const SWEEP_SHAPES: [(usize, usize); 6] =
+    [(1, 32), (2, 32), (4, 32), (8, 32), (4, 16), (4, 48)];
+
+/// Devices swept (the cleanest and the strongest-NL Table I systems).
+fn sweep_devices() -> Vec<DevicePreset> {
+    vec![epiram(), ag_si()]
+}
+
+/// Run the sweep.  Emits one CSV row per network layer and a JSON
+/// summary with one entry per configuration.
+pub fn run(ctx: &Ctx) -> Result<Json> {
+    let w = ctx.writer("pipeline");
+    // A depth-8 mitigated network multiplies engine work ~32x over one
+    // plain VMM; bound the population so the default protocol stays
+    // interactive.
+    let population = ctx.population.min(96);
+    if population != ctx.population && !ctx.quiet {
+        eprintln!(
+            "pipeline: population capped at {population} (requested {})",
+            ctx.population
+        );
+    }
+
+    let mut t = TextTable::new([
+        "device",
+        "mitigation",
+        "net",
+        "L1 acc |e|",
+        "out acc |e|",
+        "out var",
+        "argmax agree",
+    ])
+    .with_title("Layered inference: error propagation vs depth x width x device x mitigation");
+    let mut csv = CsvTable::new([
+        "device",
+        "mitigation",
+        "depth",
+        "width",
+        "layer",
+        "injected_mean_abs",
+        "injected_var",
+        "accum_mean_abs",
+        "accum_var",
+        "argmax_agreement",
+    ]);
+    let mut rows = Vec::new();
+
+    let runner = PipelineRunner::new(ctx.base_engine.clone());
+    let opts = PipelineOptions { chunk: 32, parallelism: ctx.parallelism };
+    for preset in sweep_devices() {
+        let device = preset.params.masked(NonIdealities::FULL);
+        for spec in SWEEP_MITIGATIONS {
+            let cfg = MitigationConfig::parse(spec)?;
+            for (depth, width) in SWEEP_SHAPES {
+                // Build on the *unwrapped* engine and attach the sweep's
+                // own per-layer mitigation, so the "none" baseline is
+                // genuine even under a global `--mitigation`.
+                let mut net = NetworkSpec::uniform(depth, width, Activation::Relu, ctx.seed)
+                    .with_population(population);
+                if !cfg.is_noop() {
+                    net = net.with_mitigation(cfg);
+                }
+                let report = runner.run(&net, &device, &opts)?;
+                let mut inj_curve = Vec::with_capacity(depth);
+                let mut acc_curve = Vec::with_capacity(depth);
+                for l in &report.layers {
+                    let inj = l.injected_mean_abs();
+                    let acc = l.accumulated_mean_abs();
+                    csv.push([
+                        preset.id.to_string(),
+                        cfg.label(),
+                        depth.to_string(),
+                        width.to_string(),
+                        (l.index + 1).to_string(),
+                        inj.to_string(),
+                        l.injected.stats().variance().to_string(),
+                        acc.to_string(),
+                        l.accumulated.stats().variance().to_string(),
+                        report.argmax_agreement.to_string(),
+                    ]);
+                    inj_curve.push(Json::Num(inj));
+                    acc_curve.push(Json::Num(acc));
+                }
+                let out = report.end_to_end();
+                let out_mean_abs = report.layers.last().unwrap().accumulated_mean_abs();
+                t.push([
+                    preset.name.to_string(),
+                    cfg.label(),
+                    format!("{depth}x{width}"),
+                    fnum(report.layers[0].accumulated_mean_abs()),
+                    fnum(out_mean_abs),
+                    fnum(out.stats().variance()),
+                    format!("{:.3}", report.argmax_agreement),
+                ]);
+                rows.push(obj([
+                    ("device", Json::Str(preset.id.into())),
+                    ("mitigation", Json::Str(cfg.label())),
+                    ("depth", Json::Num(depth as f64)),
+                    ("width", Json::Num(width as f64)),
+                    ("out_mean_abs", Json::Num(out_mean_abs)),
+                    ("out_variance", Json::Num(out.stats().variance())),
+                    ("argmax_agreement", Json::Num(report.argmax_agreement)),
+                    ("injected_mean_abs", Json::Arr(inj_curve)),
+                    ("accum_mean_abs", Json::Arr(acc_curve)),
+                    ("vmm_per_s", Json::Num(report.vmm_per_sec())),
+                ]));
+            }
+        }
+    }
+
+    w.echo(&t.render());
+    w.csv("series", &csv)?;
+    let summary = obj([
+        ("id", Json::Str("pipeline".into())),
+        ("samples", Json::Num(population as f64)),
+        ("activation", Json::Str("relu".into())),
+        ("rows", Json::Arr(rows)),
+    ]);
+    w.json("summary", &summary)?;
+    Ok(summary)
+}
+
+/// Find the sweep row for `(device, mitigation, depth, width)`.
+pub fn find_row<'a>(
+    rows: &'a [Json],
+    device: &str,
+    mitigation: &str,
+    depth: usize,
+    width: usize,
+) -> Option<&'a Json> {
+    rows.iter().find(|r| {
+        r.get("device").and_then(|v| v.as_str()) == Some(device)
+            && r.get("mitigation").and_then(|v| v.as_str()) == Some(mitigation)
+            && r.get("depth").and_then(|v| v.as_f64()) == Some(depth as f64)
+            && r.get("width").and_then(|v| v.as_f64()) == Some(width as f64)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_shows_error_growth_with_depth() {
+        let dir = std::env::temp_dir().join("meliso_pipeline_sweep_test");
+        let ctx = Ctx::native(24, &dir);
+        let s = run(&ctx).unwrap();
+        let rows = s.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(
+            rows.len(),
+            sweep_devices().len() * SWEEP_MITIGATIONS.len() * SWEEP_SHAPES.len()
+        );
+
+        // The headline: on a non-ideal device, the accumulated output
+        // error of a depth-8 chain exceeds a single VMM's.
+        let d1 = find_row(rows, "epiram", "none", 1, 32).unwrap();
+        let d8 = find_row(rows, "epiram", "none", 8, 32).unwrap();
+        let e1 = d1.get("out_mean_abs").unwrap().as_f64().unwrap();
+        let e8 = d8.get("out_mean_abs").unwrap().as_f64().unwrap();
+        assert!(e8 > e1, "depth-1 {e1} vs depth-8 {e8}");
+
+        // Within the depth-8 chain the accumulated curve rises too.
+        let curve = d8.get("accum_mean_abs").unwrap().as_arr().unwrap();
+        assert_eq!(curve.len(), 8);
+        let first = curve[0].as_f64().unwrap();
+        let last = curve[7].as_f64().unwrap();
+        assert!(last > first, "layer-1 {first} vs layer-8 {last}");
+
+        // Agreement rates are rates.
+        for r in rows {
+            let a = r.get("argmax_agreement").unwrap().as_f64().unwrap();
+            assert!((0.0..=1.0).contains(&a));
+        }
+
+        assert!(dir.join("pipeline/series.csv").exists());
+        assert!(dir.join("pipeline/summary.json").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

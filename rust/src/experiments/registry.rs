@@ -5,7 +5,7 @@ use crate::error::{Error, Result};
 use crate::util::json::Json;
 
 use super::context::Ctx;
-use super::{fig2, fig3, fig4, fig5, mitigation, table1, table2, xtra};
+use super::{fig2, fig3, fig4, fig5, mitigation, pipeline, table1, table2, xtra};
 
 /// Experiment descriptor.
 pub struct Entry {
@@ -108,6 +108,12 @@ pub fn entries() -> Vec<Entry> {
             paper: false,
             run: mitigation::run,
         },
+        Entry {
+            id: "pipeline",
+            title: "Extension: layered inference error propagation",
+            paper: false,
+            run: pipeline::run,
+        },
     ]
 }
 
@@ -126,12 +132,15 @@ pub fn describe() -> Vec<(&'static str, &'static str, bool)> {
     entries().iter().map(|e| (e.id, e.title, e.paper)).collect()
 }
 
-/// Run one experiment by id.
+/// Run one experiment by id.  Unknown ids fail with the full list of
+/// available ids, so a typo is immediately actionable.
 pub fn run_by_id(id: &str, ctx: &Ctx) -> Result<Json> {
-    let entry = entries()
-        .into_iter()
-        .find(|e| e.id == id)
-        .ok_or_else(|| Error::UnknownExperiment(id.to_string()))?;
+    let entry = entries().into_iter().find(|e| e.id == id).ok_or_else(|| {
+        Error::UnknownExperiment(format!(
+            "'{id}' (available: {}; see `meliso list`)",
+            all_ids().join(", ")
+        ))
+    })?;
     (entry.run)(ctx)
 }
 
@@ -161,14 +170,26 @@ mod tests {
     }
 
     #[test]
-    fn unknown_id_is_error() {
+    fn unknown_id_is_error_listing_available_ids() {
         let dir = std::env::temp_dir().join("meliso_reg_test");
         let ctx = Ctx::native(4, &dir);
-        assert!(matches!(
-            run_by_id("figZZ", &ctx),
-            Err(Error::UnknownExperiment(_))
-        ));
+        let err = run_by_id("figZZ", &ctx).unwrap_err();
+        assert!(matches!(err, Error::UnknownExperiment(_)));
+        // The failure is actionable: it names every available id,
+        // including the extension set.
+        let msg = err.to_string();
+        assert!(msg.contains("figZZ"), "{msg}");
+        assert!(msg.contains("fig2a"), "{msg}");
+        assert!(msg.contains("pipeline"), "{msg}");
+        assert!(msg.contains("mitigation-sweep"), "{msg}");
         let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn pipeline_is_registered_as_extension() {
+        let ids = all_ids();
+        assert!(ids.contains(&"pipeline"));
+        assert!(!paper_ids().contains(&"pipeline"));
     }
 
     #[test]

@@ -29,6 +29,7 @@ pub mod device;
 pub mod error;
 pub mod experiments;
 pub mod mitigation;
+pub mod pipeline;
 pub mod report;
 pub mod runtime;
 pub mod solver;

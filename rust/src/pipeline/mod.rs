@@ -1,0 +1,298 @@
+//! Layered inference pipeline: chain crossbar VMMs through deep
+//! networks and measure error propagation end-to-end.
+//!
+//! The paper benchmarks one isolated VMM; real in-memory workloads
+//! compose them — layer `k`'s hardware output becomes layer `k+1`'s
+//! input, so programming noise, quantization, and read distortion
+//! *propagate*.  Following the multibit N-ary inference architecture
+//! (arXiv 2604.26979) and the distributed in-memory stack of
+//! arXiv 2508.13298, this subsystem models a feed-forward network in
+//! which every layer is one crossbar VMM followed by an activation and
+//! a requantization back to the crossbar's `[-1, 1]` input range:
+//!
+//! ```text
+//! program W_k -> y = VMM(W_k, a_{k-1}) -> activate -> requantize -> a_k
+//! ```
+//!
+//! [`runner::PipelineRunner`] runs the hardware chain on any
+//! [`crate::vmm::VmmEngine`] (native, tiled, mitigated) and, in
+//! lockstep, the exact software forward pass, so it can report
+//! **per-layer** error statistics:
+//!
+//! * *injected-at-layer* — the error layer `k` adds on its own, i.e.
+//!   hardware output minus the exact product *on the same (hardware)
+//!   input*;
+//! * *accumulated* — the running divergence of the hardware chain from
+//!   the software chain after layer `k`'s activation/requantization;
+//!
+//! plus the end-to-end output error and a classification-style
+//! argmax-agreement rate on deterministic seeded teacher networks
+//! ([`network`]).  Per-layer [`crate::mitigation::MitigationConfig`]s
+//! compose: each layer's crossbar can run behind its own mitigation
+//! pipeline.
+
+pub mod network;
+pub mod runner;
+
+pub use network::NetworkSpec;
+pub use runner::{InferenceReport, LayerReport, PipelineOptions, PipelineRunner};
+
+use crate::error::{Error, Result};
+use crate::mitigation::MitigationConfig;
+
+/// Per-layer nonlinearity applied to the raw VMM output before
+/// requantization.  All variants are NaN-free: a NaN input maps to 0
+/// (a hardware read never *is* NaN, but a defensive decode must not
+/// poison the chain).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Activation {
+    /// Pass-through (linear network).
+    Identity,
+    /// Rectifier `max(0, v)`.
+    #[default]
+    Relu,
+    /// Hyperbolic tangent.
+    Tanh,
+    /// Clipped hard-tanh `clamp(v, -1, 1)` — the cheapest saturating
+    /// nonlinearity, and what an ADC with a bounded code range does
+    /// implicitly.
+    HardTanh,
+}
+
+impl Activation {
+    /// Parse a CLI/TOML name.
+    pub fn parse(s: &str) -> Result<Activation> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "identity" | "id" | "linear" => Ok(Activation::Identity),
+            "relu" => Ok(Activation::Relu),
+            "tanh" => Ok(Activation::Tanh),
+            "hardtanh" | "hard-tanh" | "clipped" => Ok(Activation::HardTanh),
+            other => Err(Error::Config(format!(
+                "unknown activation '{other}' (identity|relu|tanh|hardtanh)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Activation::Identity => "identity",
+            Activation::Relu => "relu",
+            Activation::Tanh => "tanh",
+            Activation::HardTanh => "hardtanh",
+        }
+    }
+
+    /// Apply the nonlinearity to one raw VMM output element.
+    #[inline]
+    pub fn apply(&self, v: f32) -> f32 {
+        if v.is_nan() {
+            return 0.0;
+        }
+        match self {
+            Activation::Identity => v,
+            Activation::Relu => v.max(0.0),
+            Activation::Tanh => v.tanh(),
+            Activation::HardTanh => v.clamp(-1.0, 1.0),
+        }
+    }
+
+    /// Variance gain of the He/Xavier-style default requantization
+    /// scale: ReLU halves the signal power, so it gets the He factor.
+    fn init_gain(&self) -> f64 {
+        match self {
+            Activation::Relu => 6.0,
+            _ => 3.0,
+        }
+    }
+}
+
+/// Requantize a post-activation value back into the crossbar's
+/// `[-1, 1]` input range: scale, then saturate.  NaN maps to 0 so a
+/// poisoned element cannot take the whole chain down.
+#[inline]
+pub fn requantize(v: f32, scale: f32) -> f32 {
+    let r = v * scale;
+    if r.is_nan() {
+        return 0.0;
+    }
+    r.clamp(-1.0, 1.0)
+}
+
+/// One network layer: a `rows -> cols` crossbar VMM, its activation,
+/// its requantization scale, and an optional per-layer mitigation
+/// pipeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerSpec {
+    /// Input dimension (crossbar word lines).
+    pub rows: usize,
+    /// Output dimension (crossbar bit lines).
+    pub cols: usize,
+    pub activation: Activation,
+    /// Requantization scale applied after the activation
+    /// ([`requantize`]).  Defaults to the variance-preserving
+    /// `sqrt(gain / rows)` for uniform `[-1, 1]` teacher weights, so
+    /// activations neither explode nor vanish with depth.
+    pub requant: f32,
+    /// Per-layer error-mitigation pipeline (`None` = the network
+    /// default / no mitigation).
+    pub mitigation: Option<MitigationConfig>,
+}
+
+impl LayerSpec {
+    /// Layer with the default variance-preserving requantization.
+    pub fn new(rows: usize, cols: usize, activation: Activation) -> Self {
+        Self {
+            rows,
+            cols,
+            activation,
+            requant: default_requant(rows, activation),
+            mitigation: None,
+        }
+    }
+
+    /// Override the requantization scale.
+    pub fn with_requant(mut self, scale: f32) -> Self {
+        self.requant = scale;
+        self
+    }
+
+    /// Attach a mitigation pipeline to this layer.
+    pub fn with_mitigation(mut self, cfg: MitigationConfig) -> Self {
+        self.mitigation = Some(cfg);
+        self
+    }
+
+    /// Effective mitigation (identity when unset).
+    pub fn mitigation_or_none(&self) -> MitigationConfig {
+        self.mitigation.unwrap_or(MitigationConfig::NONE)
+    }
+}
+
+/// Default requantization scale `sqrt(gain / rows)`.
+pub fn default_requant(rows: usize, activation: Activation) -> f32 {
+    (activation.init_gain() / rows.max(1) as f64).sqrt() as f32
+}
+
+/// Parse a layer-dimension chain like `"32x48x10"` (or `"32-48-10"`):
+/// `d_0 x d_1 x ... x d_L` describes `L` layers where layer `k` is a
+/// `d_k -> d_{k+1}` crossbar.  Needs at least two dimensions.
+pub fn parse_dims(spec: &str) -> Result<Vec<usize>> {
+    let spec = spec.trim();
+    let dims: Vec<usize> = spec
+        .split(|c: char| c == 'x' || c == 'X' || c == '-')
+        .map(|tok| {
+            tok.trim()
+                .parse::<usize>()
+                .ok()
+                .filter(|&d| d > 0)
+                .ok_or_else(|| {
+                    Error::Config(format!(
+                        "bad layer spec '{spec}': '{tok}' is not a positive integer \
+                         (expected e.g. 32x48x10)"
+                    ))
+                })
+        })
+        .collect::<Result<_>>()?;
+    if dims.len() < 2 {
+        return Err(Error::Config(format!(
+            "layer spec '{spec}' needs at least two dimensions (input x output)"
+        )));
+    }
+    Ok(dims)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn activation_parse_and_names() {
+        assert_eq!(Activation::parse("relu").unwrap(), Activation::Relu);
+        assert_eq!(Activation::parse("ID").unwrap(), Activation::Identity);
+        assert_eq!(Activation::parse(" tanh ").unwrap(), Activation::Tanh);
+        assert_eq!(Activation::parse("hard-tanh").unwrap(), Activation::HardTanh);
+        assert_eq!(Activation::parse("clipped").unwrap(), Activation::HardTanh);
+        assert!(Activation::parse("softmax").is_err());
+        assert_eq!(Activation::Relu.name(), "relu");
+        assert_eq!(Activation::default(), Activation::Relu);
+    }
+
+    #[test]
+    fn activations_cover_saturation_edges() {
+        // Relu kills negatives, passes positives.
+        assert_eq!(Activation::Relu.apply(-3.5), 0.0);
+        assert_eq!(Activation::Relu.apply(2.5), 2.5);
+        // HardTanh saturates exactly at +/-1.
+        assert_eq!(Activation::HardTanh.apply(7.0), 1.0);
+        assert_eq!(Activation::HardTanh.apply(-7.0), -1.0);
+        assert_eq!(Activation::HardTanh.apply(0.25), 0.25);
+        // Tanh is bounded and odd.
+        assert!(Activation::Tanh.apply(100.0) <= 1.0);
+        assert!(Activation::Tanh.apply(-100.0) >= -1.0);
+        // Identity passes everything.
+        assert_eq!(Activation::Identity.apply(-42.0), -42.0);
+        // NaN never propagates.
+        for a in [
+            Activation::Identity,
+            Activation::Relu,
+            Activation::Tanh,
+            Activation::HardTanh,
+        ] {
+            assert_eq!(a.apply(f32::NAN), 0.0, "{}", a.name());
+        }
+        // The saturating activations also tame infinities.
+        assert_eq!(Activation::Tanh.apply(f32::INFINITY), 1.0);
+        assert_eq!(Activation::HardTanh.apply(f32::NEG_INFINITY), -1.0);
+    }
+
+    #[test]
+    fn requantize_saturates_and_is_nan_free() {
+        assert_eq!(requantize(10.0, 0.5), 1.0);
+        assert_eq!(requantize(-10.0, 0.5), -1.0);
+        assert_eq!(requantize(1.0, 0.5), 0.5);
+        assert_eq!(requantize(0.0, 0.5), 0.0);
+        // Exactly the edges.
+        assert_eq!(requantize(2.0, 0.5), 1.0);
+        assert_eq!(requantize(-2.0, 0.5), -1.0);
+        // NaN input and NaN-producing scale both map to 0.
+        assert_eq!(requantize(f32::NAN, 1.0), 0.0);
+        assert_eq!(requantize(f32::INFINITY, 0.0), 0.0);
+        // Infinities saturate.
+        assert_eq!(requantize(f32::INFINITY, 1.0), 1.0);
+        assert_eq!(requantize(f32::NEG_INFINITY, 1.0), -1.0);
+    }
+
+    #[test]
+    fn default_requant_is_variance_preserving_scale() {
+        let relu = default_requant(32, Activation::Relu);
+        let id = default_requant(32, Activation::Identity);
+        assert!((relu as f64 - (6.0f64 / 32.0).sqrt()).abs() < 1e-7);
+        assert!((id as f64 - (3.0f64 / 32.0).sqrt()).abs() < 1e-7);
+        // ReLU gets the He factor (sqrt(2) larger).
+        assert!((relu / id - std::f32::consts::SQRT_2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn layer_spec_builders() {
+        let l = LayerSpec::new(32, 16, Activation::Relu);
+        assert_eq!(l.rows, 32);
+        assert_eq!(l.cols, 16);
+        assert!(l.mitigation.is_none());
+        assert!(l.mitigation_or_none().is_noop());
+        let m = l.with_mitigation(MitigationConfig::parse("avg:2").unwrap());
+        assert_eq!(m.mitigation_or_none().replicas, 2);
+        let r = l.with_requant(1.0);
+        assert_eq!(r.requant, 1.0);
+    }
+
+    #[test]
+    fn parse_dims_accepts_both_separators() {
+        assert_eq!(parse_dims("32x48x10").unwrap(), vec![32, 48, 10]);
+        assert_eq!(parse_dims("32-48-10").unwrap(), vec![32, 48, 10]);
+        assert_eq!(parse_dims(" 8X8 ").unwrap(), vec![8, 8]);
+        assert!(parse_dims("32").is_err());
+        assert!(parse_dims("32x0x8").is_err());
+        assert!(parse_dims("32xfrogx8").is_err());
+        assert!(parse_dims("").is_err());
+    }
+}

@@ -1,0 +1,311 @@
+//! Deterministic seeded teacher networks: layer weights, input
+//! populations, and per-(sample, layer) programming-noise streams.
+//!
+//! Every stream is keyed by `(network seed, purpose tag, index)`
+//! through SplitMix64, mirroring the per-chunk child-seed discipline of
+//! [`crate::coordinator::WorkloadSpec`]: weights, inputs, and noise are
+//! pure functions of the spec, independent of chunking, scheduling
+//! order, and thread count.  That is what makes the pipeline's layer
+//! trace bit-reproducible.
+
+use crate::coordinator::workload::{EntryDist, InputSpec};
+use crate::error::{Error, Result};
+use crate::mitigation::MitigationConfig;
+use crate::util::rng::{splitmix64, Xoshiro256};
+use crate::vmm::engine::VmmBatch;
+
+use super::{Activation, LayerSpec};
+
+/// Stream tags separating the weight, input, and noise populations of
+/// one network seed (arbitrary distinct constants).
+const TAG_WEIGHTS: u64 = 0x5745_4947_4854; // "WEIGHT"
+const TAG_INPUTS: u64 = 0x494E_5055_54; // "INPUT"
+const TAG_NOISE: u64 = 0x4E4F_4953_45; // "NOISE"
+
+/// Derive an independent stream seed for `(seed, tag)`.
+fn stream_seed(seed: u64, tag: u64) -> u64 {
+    let mut t = seed ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    splitmix64(&mut t)
+}
+
+/// A complete layered-network specification: the layer chain, the
+/// input population, and the seed every deterministic stream derives
+/// from.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkSpec {
+    pub layers: Vec<LayerSpec>,
+    /// Number of input samples run through the network.
+    pub population: usize,
+    /// Distribution of the layer-0 input entries.
+    pub inputs: EntryDist,
+    pub seed: u64,
+}
+
+impl NetworkSpec {
+    /// A uniform `depth`-layer, `width`-wide network (every crossbar is
+    /// `width x width`).
+    ///
+    /// # Panics
+    ///
+    /// Panics when `depth` or `width` is 0 — this is the infallible
+    /// convenience constructor for literal shapes; use
+    /// [`Self::from_dims`] for fallible construction from user input.
+    pub fn uniform(depth: usize, width: usize, activation: Activation, seed: u64) -> Self {
+        assert!(depth >= 1, "network depth must be >= 1 (use from_dims for fallible input)");
+        assert!(width >= 1, "network width must be >= 1 (use from_dims for fallible input)");
+        let dims = vec![width; depth + 1];
+        Self::from_dims(&dims, activation, seed)
+            .expect("uniform dims of a positive depth and width are a valid chain")
+    }
+
+    /// Build from a dimension chain `d_0, ..., d_L` (layer `k` is a
+    /// `d_k -> d_{k+1}` crossbar); see [`super::parse_dims`].
+    pub fn from_dims(dims: &[usize], activation: Activation, seed: u64) -> Result<Self> {
+        if dims.len() < 2 {
+            return Err(Error::Config(
+                "a network needs at least two dimensions (input x output)".into(),
+            ));
+        }
+        if let Some(&bad) = dims.iter().find(|&&d| d == 0) {
+            return Err(Error::Config(format!("layer dimension must be > 0, got {bad}")));
+        }
+        let layers = dims
+            .windows(2)
+            .map(|w| LayerSpec::new(w[0], w[1], activation))
+            .collect();
+        Ok(Self {
+            layers,
+            population: 64,
+            inputs: EntryDist::Uniform { lo: 0.0, hi: 1.0 },
+            seed,
+        })
+    }
+
+    pub fn with_population(mut self, population: usize) -> Self {
+        self.population = population;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Apply one mitigation pipeline to every layer.
+    pub fn with_mitigation(mut self, cfg: MitigationConfig) -> Self {
+        for l in &mut self.layers {
+            l.mitigation = Some(cfg);
+        }
+        self
+    }
+
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.layers.first().map(|l| l.rows).unwrap_or(0)
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.layers.last().map(|l| l.cols).unwrap_or(0)
+    }
+
+    /// Validate the layer chain (non-empty, dims connect, dims > 0).
+    pub fn validate(&self) -> Result<()> {
+        if self.layers.is_empty() {
+            return Err(Error::Config("network has no layers".into()));
+        }
+        if self.population == 0 {
+            return Err(Error::Config("network population must be > 0".into()));
+        }
+        for (k, l) in self.layers.iter().enumerate() {
+            if l.rows == 0 || l.cols == 0 {
+                return Err(Error::Config(format!(
+                    "layer {k}: dimensions must be > 0 (got {}x{})",
+                    l.rows, l.cols
+                )));
+            }
+            if !l.requant.is_finite() || l.requant <= 0.0 {
+                return Err(Error::Config(format!(
+                    "layer {k}: requant scale must be finite and > 0, got {}",
+                    l.requant
+                )));
+            }
+        }
+        for (k, w) in self.layers.windows(2).enumerate() {
+            if w[0].cols != w[1].rows {
+                return Err(Error::Config(format!(
+                    "layer {k} outputs {} columns but layer {} expects {} rows",
+                    w[0].cols,
+                    k + 1,
+                    w[1].rows
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Human-readable dimension chain, e.g. `"32x32x16"`.
+    pub fn dims_label(&self) -> String {
+        let mut parts = Vec::with_capacity(self.depth() + 1);
+        parts.push(self.input_dim().to_string());
+        for l in &self.layers {
+            parts.push(l.cols.to_string());
+        }
+        parts.join("x")
+    }
+
+    /// The input population generator (lives in the coordinator, like
+    /// every other population of the framework).
+    pub fn input_spec(&self) -> InputSpec {
+        InputSpec {
+            dim: self.input_dim(),
+            population: self.population,
+            dist: self.inputs,
+            seed: stream_seed(self.seed, TAG_INPUTS),
+        }
+    }
+
+    /// Teacher weights of layer `k`, row-major `(rows, cols)` in
+    /// `[-1, 1]` — a pure function of `(seed, k)`.
+    pub fn layer_weights(&self, k: usize) -> Vec<f32> {
+        let l = &self.layers[k];
+        let mut rng =
+            Xoshiro256::seed_from_u64(stream_seed(self.seed, TAG_WEIGHTS)).child(k as u64);
+        let mut w = vec![0.0f32; l.rows * l.cols];
+        rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+        w
+    }
+
+    /// Build the engine batch for layer `k` over the global sample
+    /// range `[start, start+len)`, with per-sample inputs `x`
+    /// (row-major `(len, rows)`).  Weights are the layer's teacher
+    /// weights replicated per sample; the three noise planes are drawn
+    /// from the `(seed, sample, layer)` stream — per-sample Monte-Carlo
+    /// programming instances, independent of chunking.
+    pub fn layer_batch(&self, k: usize, start: usize, len: usize, x: &[f32]) -> VmmBatch {
+        self.layer_batch_with_weights(k, start, len, x, &self.layer_weights(k))
+    }
+
+    /// [`Self::layer_batch`] with the layer's teacher weights supplied
+    /// by the caller (the runner generates each matrix once and shares
+    /// it across chunks; `w` must equal `self.layer_weights(k)`).
+    pub fn layer_batch_with_weights(
+        &self,
+        k: usize,
+        start: usize,
+        len: usize,
+        x: &[f32],
+        w: &[f32],
+    ) -> VmmBatch {
+        let l = &self.layers[k];
+        let (r, c) = (l.rows, l.cols);
+        assert_eq!(x.len(), len * r, "layer {k}: input length mismatch");
+        let cells = r * c;
+        assert_eq!(w.len(), cells, "layer {k}: weight length mismatch");
+        let mut vb = VmmBatch::zeros(len, r, c);
+        vb.x.copy_from_slice(x);
+        let noise_root = Xoshiro256::seed_from_u64(stream_seed(self.seed, TAG_NOISE));
+        for s in 0..len {
+            vb.w[s * cells..(s + 1) * cells].copy_from_slice(w);
+            let mut rng = noise_root.child((start + s) as u64).child(k as u64);
+            let zbase = s * 3 * cells;
+            rng.fill_normal_f32(&mut vb.z[zbase..zbase + 3 * cells]);
+        }
+        vb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_and_dims_builders() {
+        let n = NetworkSpec::uniform(4, 32, Activation::Relu, 9);
+        assert_eq!(n.depth(), 4);
+        assert_eq!(n.input_dim(), 32);
+        assert_eq!(n.output_dim(), 32);
+        assert_eq!(n.dims_label(), "32x32x32x32x32");
+        n.validate().unwrap();
+
+        let m = NetworkSpec::from_dims(&[32, 48, 10], Activation::Tanh, 9).unwrap();
+        assert_eq!(m.depth(), 2);
+        assert_eq!(m.layers[0].cols, 48);
+        assert_eq!(m.layers[1].rows, 48);
+        assert_eq!(m.dims_label(), "32x48x10");
+        m.validate().unwrap();
+
+        assert!(NetworkSpec::from_dims(&[32], Activation::Relu, 9).is_err());
+        assert!(NetworkSpec::from_dims(&[32, 0], Activation::Relu, 9).is_err());
+    }
+
+    #[test]
+    fn validate_catches_broken_chains() {
+        let mut n = NetworkSpec::uniform(2, 16, Activation::Relu, 1);
+        n.layers[1].rows = 8; // breaks the 16 -> 16 chain
+        assert!(n.validate().is_err());
+        let mut p = NetworkSpec::uniform(1, 16, Activation::Relu, 1);
+        p.population = 0;
+        assert!(p.validate().is_err());
+        let mut q = NetworkSpec::uniform(1, 16, Activation::Relu, 1);
+        q.layers[0].requant = 0.0;
+        assert!(q.validate().is_err());
+    }
+
+    #[test]
+    fn weights_are_deterministic_per_layer_and_seed() {
+        let n = NetworkSpec::uniform(3, 16, Activation::Relu, 42);
+        assert_eq!(n.layer_weights(0), n.layer_weights(0));
+        assert_ne!(n.layer_weights(0), n.layer_weights(1));
+        let other = n.clone().with_seed(43);
+        assert_ne!(n.layer_weights(0), other.layer_weights(0));
+        assert!(n.layer_weights(2).iter().all(|v| (-1.0..=1.0).contains(v)));
+    }
+
+    #[test]
+    fn streams_are_disjoint() {
+        // The weight, input, and noise streams of one seed must not
+        // alias (a collision would correlate weights with noise).
+        let n = NetworkSpec::uniform(1, 8, Activation::Identity, 5).with_population(1);
+        let w = n.layer_weights(0);
+        let x = n.input_spec().chunk(0, 1);
+        let b = n.layer_batch(0, 0, 1, &x);
+        assert_ne!(&w[..8], &b.z[..8]);
+        assert_ne!(&x[..], &b.z[..8]);
+    }
+
+    #[test]
+    fn layer_batch_is_chunk_invariant() {
+        let n = NetworkSpec::uniform(2, 8, Activation::Relu, 7).with_population(6);
+        let x = n.input_spec().chunk(0, 6);
+        let whole = n.layer_batch(1, 0, 6, &x);
+        for s in 0..6 {
+            let one = n.layer_batch(1, s, 1, &x[s * 8..(s + 1) * 8]);
+            assert_eq!(whole.w_of(s), one.w_of(0));
+            assert_eq!(whole.x_of(s), one.x_of(0));
+            for ch in 0..3 {
+                assert_eq!(whole.z_of(s, ch), one.z_of(0, ch), "sample {s} ch {ch}");
+            }
+        }
+        whole.check().unwrap();
+    }
+
+    #[test]
+    fn noise_differs_across_layers_and_samples() {
+        let n = NetworkSpec::uniform(2, 8, Activation::Relu, 7).with_population(2);
+        let x = n.input_spec().chunk(0, 2);
+        let l0 = n.layer_batch(0, 0, 2, &x);
+        let l1 = n.layer_batch(1, 0, 2, &x);
+        assert_ne!(l0.z_of(0, 0), l1.z_of(0, 0));
+        assert_ne!(l0.z_of(0, 0), l0.z_of(1, 0));
+    }
+
+    #[test]
+    fn with_mitigation_covers_every_layer() {
+        let cfg = MitigationConfig::parse("diff,avg:2").unwrap();
+        let n = NetworkSpec::uniform(3, 8, Activation::Relu, 1).with_mitigation(cfg);
+        assert!(n.layers.iter().all(|l| l.mitigation_or_none() == cfg));
+    }
+}

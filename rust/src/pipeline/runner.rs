@@ -1,0 +1,466 @@
+//! [`PipelineRunner`]: execute a layered network on a crossbar engine
+//! and its exact software twin in lockstep, collecting per-layer error
+//! populations.
+//!
+//! ## Execution model
+//!
+//! The input population is split into fixed-size chunks (engine
+//! batch-size preferences are honoured, as in the coordinator) and the
+//! chunks are fanned over the worker pool.  Within a chunk the layers
+//! run sequentially: layer `k`'s *hardware* activations feed layer
+//! `k+1`'s crossbar, while a parallel software chain applies the exact
+//! f64 product to its own activations.  Both chains share the same
+//! activation + requantization arithmetic, so their divergence is
+//! purely the hardware's doing.
+//!
+//! ## Determinism
+//!
+//! Chunk boundaries depend only on [`PipelineOptions::chunk`] (never on
+//! the thread count), every weight/input/noise stream is a pure
+//! function of `(seed, sample, layer)`
+//! ([`super::network::NetworkSpec`]), and chunk results are reduced in
+//! submission order — so the full layer trace is bit-identical for any
+//! `parallelism` (`rust/tests/integration_pipeline.rs` enforces this).
+
+use crate::coordinator::runner::plan_chunks;
+use crate::coordinator::ErrorPopulation;
+use crate::device::params::DeviceParams;
+use crate::error::Result;
+use crate::mitigation::MitigatedEngine;
+use crate::util::pool::{run_indexed, Parallelism};
+use crate::util::progress::Stopwatch;
+use crate::vmm::engine::DynEngine;
+use crate::vmm::software::software_vmm_single;
+use crate::vmm::VmmEngine;
+
+use super::{requantize, NetworkSpec};
+
+/// Execution options for one pipeline run.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineOptions {
+    /// Samples per chunk (fixed — chunking must not depend on the
+    /// thread count or determinism breaks).
+    pub chunk: usize,
+    /// Chunk-level worker budget; divided by the engine's internal
+    /// fan-out exactly like the coordinator's.
+    pub parallelism: Parallelism,
+}
+
+impl Default for PipelineOptions {
+    fn default() -> Self {
+        Self { chunk: 64, parallelism: Parallelism::Auto }
+    }
+}
+
+/// Per-layer error report: the injected-at-layer and accumulated error
+/// populations (both feed the existing stats/fit machinery).
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    pub index: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub activation: &'static str,
+    /// Mitigation label of this layer (`"none"` when unmitigated).
+    pub mitigation: String,
+    pub requant: f32,
+    /// Error layer `index` adds on its own: raw hardware output minus
+    /// the exact product on the *same hardware* input.
+    pub injected: ErrorPopulation,
+    /// Divergence of the hardware chain from the software chain after
+    /// this layer's activation + requantization.
+    pub accumulated: ErrorPopulation,
+}
+
+impl LayerReport {
+    /// Mean absolute injected error.
+    pub fn injected_mean_abs(&self) -> f64 {
+        mean_abs(self.injected.errors())
+    }
+
+    /// Mean absolute accumulated error.
+    pub fn accumulated_mean_abs(&self) -> f64 {
+        mean_abs(self.accumulated.errors())
+    }
+}
+
+/// The full result of one pipeline run.
+#[derive(Debug, Clone)]
+pub struct InferenceReport {
+    pub layers: Vec<LayerReport>,
+    pub samples: usize,
+    /// Fraction of samples whose hardware argmax equals the software
+    /// argmax at the network output (classification agreement).
+    pub argmax_agreement: f64,
+    /// Final hardware activations, row-major `(samples, output_dim)`.
+    pub final_hw: Vec<f32>,
+    /// Final software activations, same layout.
+    pub final_sw: Vec<f32>,
+    pub wall_secs: f64,
+    pub engine: &'static str,
+}
+
+impl InferenceReport {
+    /// End-to-end output error population (the last layer's accumulated
+    /// errors).
+    pub fn end_to_end(&self) -> &ErrorPopulation {
+        &self
+            .layers
+            .last()
+            .expect("a validated network has at least one layer")
+            .accumulated
+    }
+
+    /// Hardware VMMs per second of wall time (samples x depth).
+    pub fn vmm_per_sec(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            (self.samples * self.layers.len()) as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Mean absolute value of an error vector (NaN when empty).
+pub fn mean_abs(errors: &[f64]) -> f64 {
+    if errors.is_empty() {
+        return f64::NAN;
+    }
+    errors.iter().map(|e| e.abs()).sum::<f64>() / errors.len() as f64
+}
+
+/// Index of the first maximum (classification argmax; deterministic
+/// first-wins tie-breaking, NaN-proof because requantized activations
+/// are always finite).
+pub fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate().skip(1) {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Per-chunk raw trace, merged in submission order.
+struct ChunkTrace {
+    /// `(injected, accumulated)` per layer.
+    layers: Vec<(Vec<f64>, Vec<f64>)>,
+    matches: usize,
+    final_hw: Vec<f32>,
+    final_sw: Vec<f32>,
+}
+
+/// Runs layered networks on one engine (plus per-layer mitigation
+/// wrappers built on demand from the network spec).
+pub struct PipelineRunner {
+    engine: DynEngine,
+}
+
+impl PipelineRunner {
+    pub fn new(engine: DynEngine) -> Self {
+        Self { engine }
+    }
+
+    pub fn engine(&self) -> &DynEngine {
+        &self.engine
+    }
+
+    /// Run `net` on `device`, returning the per-layer error report.
+    pub fn run(
+        &self,
+        net: &NetworkSpec,
+        device: &DeviceParams,
+        opts: &PipelineOptions,
+    ) -> Result<InferenceReport> {
+        net.validate()?;
+        device.validate().map_err(crate::error::Error::Config)?;
+        let wall = Stopwatch::start();
+
+        // One engine handle per layer: the base engine, or the base
+        // engine behind that layer's mitigation pipeline.
+        let engines: Vec<DynEngine> = net
+            .layers
+            .iter()
+            .map(|l| {
+                let cfg = l.mitigation_or_none();
+                if cfg.is_noop() {
+                    self.engine.clone()
+                } else {
+                    DynEngine::new(MitigatedEngine::new(self.engine.clone(), cfg))
+                }
+            })
+            .collect();
+
+        let plan = plan_chunks(net.population, opts.chunk.max(1), &self.engine.preferred_batches());
+        let engine_threads = self.engine.internal_parallelism().max(1);
+        let chunk_threads = (opts.parallelism.threads() / engine_threads).max(1);
+        let chunk_par = Parallelism::Fixed(chunk_threads);
+
+        let inputs = net.input_spec();
+        let device = *device;
+        let engines_ref = &engines;
+        // Teacher weights are chunk-invariant: generate each layer's
+        // matrix once and share it across the fan-out.
+        let weights: Vec<Vec<f32>> = (0..net.depth()).map(|k| net.layer_weights(k)).collect();
+        let weights_ref = &weights;
+        let results: Vec<Result<ChunkTrace>> = run_indexed(chunk_par, plan.len(), |ci| {
+            let (start, len) = plan[ci];
+            let mut a_hw = inputs.chunk(start, len);
+            let mut a_sw = a_hw.clone();
+            let mut layers = Vec::with_capacity(net.depth());
+            for (k, layer) in net.layers.iter().enumerate() {
+                let batch = net.layer_batch_with_weights(k, start, len, &a_hw, &weights_ref[k]);
+                let out = engines_ref[k].forward(&batch, &device)?;
+                // Injected-at-layer: hardware vs exact product on the
+                // same (hardware) input — the engine computes that
+                // exact product as its software reference.
+                let injected: Vec<f64> = out
+                    .y_hw
+                    .iter()
+                    .zip(&out.y_sw)
+                    .map(|(&h, &s)| h as f64 - s as f64)
+                    .collect();
+                // Software chain: exact product on the software
+                // activations, then the shared activation/requantize.
+                let y_sw_chain =
+                    exact_forward(&weights_ref[k], &a_sw, len, layer.rows, layer.cols);
+                let next_hw: Vec<f32> = out
+                    .y_hw
+                    .iter()
+                    .map(|&v| requantize(layer.activation.apply(v), layer.requant))
+                    .collect();
+                let next_sw: Vec<f32> = y_sw_chain
+                    .iter()
+                    .map(|&v| requantize(layer.activation.apply(v), layer.requant))
+                    .collect();
+                let accumulated: Vec<f64> = next_hw
+                    .iter()
+                    .zip(&next_sw)
+                    .map(|(&h, &s)| h as f64 - s as f64)
+                    .collect();
+                layers.push((injected, accumulated));
+                a_hw = next_hw;
+                a_sw = next_sw;
+            }
+            let d = net.output_dim();
+            let matches = (0..len)
+                .filter(|&s| {
+                    argmax(&a_hw[s * d..(s + 1) * d]) == argmax(&a_sw[s * d..(s + 1) * d])
+                })
+                .count();
+            Ok(ChunkTrace { layers, matches, final_hw: a_hw, final_sw: a_sw })
+        });
+
+        // Reduce in submission order (determinism).
+        let mut layers: Vec<LayerReport> = net
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(k, l)| LayerReport {
+                index: k,
+                rows: l.rows,
+                cols: l.cols,
+                activation: l.activation.name(),
+                mitigation: l.mitigation_or_none().label(),
+                requant: l.requant,
+                injected: ErrorPopulation::with_capacity(net.population * l.cols),
+                accumulated: ErrorPopulation::with_capacity(net.population * l.cols),
+            })
+            .collect();
+        let mut matches = 0usize;
+        let mut final_hw = Vec::with_capacity(net.population * net.output_dim());
+        let mut final_sw = Vec::with_capacity(net.population * net.output_dim());
+        for r in results {
+            let trace = r?;
+            for (k, (inj, acc)) in trace.layers.into_iter().enumerate() {
+                layers[k].injected.extend(&inj);
+                layers[k].accumulated.extend(&acc);
+            }
+            matches += trace.matches;
+            final_hw.extend_from_slice(&trace.final_hw);
+            final_sw.extend_from_slice(&trace.final_sw);
+        }
+        Ok(InferenceReport {
+            layers,
+            samples: net.population,
+            argmax_agreement: matches as f64 / net.population as f64,
+            final_hw,
+            final_sw,
+            wall_secs: wall.elapsed_secs(),
+            engine: self.engine.name(),
+        })
+    }
+}
+
+/// Exact batched product `y[s, j] = sum_i x[s, i] * w[i, j]` (shared
+/// teacher weights, per-sample inputs) — the software chain's forward
+/// step, delegating to the engines' single-sample reference kernel so
+/// both sides of every error measurement share one arithmetic.
+fn exact_forward(w: &[f32], x: &[f32], len: usize, rows: usize, cols: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), len * rows);
+    let mut y = vec![0.0f32; len * cols];
+    let mut acc = vec![0.0f64; cols];
+    for s in 0..len {
+        software_vmm_single(
+            w,
+            &x[s * rows..(s + 1) * rows],
+            rows,
+            cols,
+            &mut acc,
+            &mut y[s * cols..(s + 1) * cols],
+        );
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+    use crate::mitigation::MitigationConfig;
+    use crate::pipeline::Activation;
+    use crate::vmm::{NativeEngine, SoftwareEngine, TiledEngine};
+
+    fn native() -> DynEngine {
+        DynEngine::new(NativeEngine::default())
+    }
+
+    #[test]
+    fn argmax_first_wins() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.9, 0.2]), 1);
+        assert_eq!(argmax(&[1.0]), 0);
+        assert_eq!(argmax(&[-2.0, -1.0, -3.0]), 1);
+    }
+
+    #[test]
+    fn exact_forward_matches_hand_case() {
+        // w = [[1, 2], [3, 4]] (2x2), x = [[1, 1], [0.5, 0]].
+        let w = vec![1.0f32, 2.0, 3.0, 4.0];
+        let x = vec![1.0f32, 1.0, 0.5, 0.0];
+        let y = exact_forward(&w, &x, 2, 2, 2);
+        assert_eq!(y, vec![4.0, 6.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn software_engine_pipeline_has_zero_error() {
+        // On the exact software engine the hardware chain IS the
+        // software chain: every population must be identically zero and
+        // argmax agreement exact.
+        let net = NetworkSpec::uniform(3, 16, Activation::Relu, 11).with_population(20);
+        let runner = PipelineRunner::new(DynEngine::new(SoftwareEngine));
+        let r = runner
+            .run(&net, &DeviceParams::ideal(), &PipelineOptions::default())
+            .unwrap();
+        assert_eq!(r.samples, 20);
+        assert_eq!(r.layers.len(), 3);
+        for l in &r.layers {
+            assert_eq!(l.injected.len(), 20 * 16);
+            assert!(l.injected.errors().iter().all(|&e| e == 0.0));
+            assert!(l.accumulated.errors().iter().all(|&e| e == 0.0));
+        }
+        assert_eq!(r.argmax_agreement, 1.0);
+        assert_eq!(r.final_hw, r.final_sw);
+        assert!(r.vmm_per_sec() >= 0.0);
+    }
+
+    #[test]
+    fn ideal_device_stays_near_software() {
+        let net = NetworkSpec::uniform(4, 16, Activation::HardTanh, 12).with_population(12);
+        let runner = PipelineRunner::new(native());
+        let r = runner
+            .run(&net, &DeviceParams::ideal(), &PipelineOptions::default())
+            .unwrap();
+        // Ideal device: tiny decode error only, never exploding.
+        assert!(r.end_to_end().stats().max().abs() < 0.1);
+        // Near-ties can still flip an argmax under ~1e-3 decode error;
+        // most samples must agree regardless.
+        assert!(r.argmax_agreement > 0.5);
+    }
+
+    #[test]
+    fn noisy_device_errors_grow_with_depth() {
+        let net = NetworkSpec::uniform(4, 16, Activation::Relu, 13).with_population(24);
+        let runner = PipelineRunner::new(native());
+        let r = runner
+            .run(&net, &presets::ag_si().params, &PipelineOptions::default())
+            .unwrap();
+        // Every layer injects nonzero error…
+        for l in &r.layers {
+            assert!(l.injected_mean_abs() > 0.0, "layer {}", l.index);
+            assert!(l.accumulated.errors().iter().all(|e| e.is_finite()));
+        }
+        // …and the chain accumulates: the output diverges more than the
+        // first layer alone.
+        let first = r.layers[0].accumulated_mean_abs();
+        let last = r.layers[3].accumulated_mean_abs();
+        assert!(last > first * 0.5, "first={first} last={last}");
+        assert!(r.end_to_end().len() == 24 * 16);
+    }
+
+    #[test]
+    fn chunking_does_not_change_the_trace() {
+        let net = NetworkSpec::uniform(2, 8, Activation::Relu, 14).with_population(10);
+        let runner = PipelineRunner::new(native());
+        let device = presets::epiram().params;
+        let whole = runner
+            .run(&net, &device, &PipelineOptions { chunk: 10, parallelism: Parallelism::Fixed(1) })
+            .unwrap();
+        let split = runner
+            .run(&net, &device, &PipelineOptions { chunk: 3, parallelism: Parallelism::Fixed(1) })
+            .unwrap();
+        for (a, b) in whole.layers.iter().zip(&split.layers) {
+            assert_eq!(a.injected.errors(), b.injected.errors());
+            assert_eq!(a.accumulated.errors(), b.accumulated.errors());
+        }
+        assert_eq!(whole.final_hw, split.final_hw);
+    }
+
+    #[test]
+    fn per_layer_mitigation_tightens_injected_error() {
+        let device = presets::epiram().params;
+        let plain = NetworkSpec::uniform(2, 16, Activation::Relu, 15).with_population(16);
+        let mitigated = plain
+            .clone()
+            .with_mitigation(MitigationConfig::parse("avg:4").unwrap());
+        let runner = PipelineRunner::new(native());
+        let rp = runner.run(&plain, &device, &PipelineOptions::default()).unwrap();
+        let rm = runner
+            .run(&mitigated, &device, &PipelineOptions::default())
+            .unwrap();
+        assert_eq!(rm.layers[0].mitigation, "avg:4");
+        assert_eq!(rp.layers[0].mitigation, "none");
+        // Replica averaging on the C2C-dominated EpiRAM must cut the
+        // first layer's injected error variance.
+        let vp = rp.layers[0].injected.stats().variance();
+        let vm = rm.layers[0].injected.stats().variance();
+        assert!(vm < vp, "plain {vp} vs mitigated {vm}");
+    }
+
+    #[test]
+    fn tiled_engine_runs_nonsquare_chains() {
+        let net = NetworkSpec::from_dims(&[48, 40, 8], Activation::Tanh, 16)
+            .unwrap()
+            .with_population(6);
+        let runner = PipelineRunner::new(DynEngine::new(TiledEngine::default()));
+        let r = runner
+            .run(&net, &presets::epiram().params, &PipelineOptions::default())
+            .unwrap();
+        assert_eq!(r.layers.len(), 2);
+        assert_eq!(r.final_hw.len(), 6 * 8);
+        assert!(r.end_to_end().errors().iter().all(|e| e.is_finite()));
+    }
+
+    #[test]
+    fn invalid_network_and_device_rejected() {
+        let runner = PipelineRunner::new(native());
+        let mut net = NetworkSpec::uniform(2, 8, Activation::Relu, 17);
+        net.layers[1].rows = 4;
+        assert!(runner
+            .run(&net, &DeviceParams::ideal(), &PipelineOptions::default())
+            .is_err());
+        let net = NetworkSpec::uniform(1, 8, Activation::Relu, 17);
+        let mut bad = presets::ag_si().params;
+        bad.memory_window = 0.5;
+        assert!(runner.run(&net, &bad, &PipelineOptions::default()).is_err());
+    }
+}

@@ -1,6 +1,7 @@
 //! Linear operators: the exact matrix and its crossbar realization.
 
 use crate::device::params::DeviceParams;
+use crate::error::{Error, Result};
 use crate::mitigation::{MitigatedMatrix, MitigationConfig};
 use crate::util::rng::Xoshiro256;
 
@@ -9,10 +10,14 @@ use crate::util::rng::Xoshiro256;
 pub trait LinearOperator {
     fn dim(&self) -> (usize, usize);
     fn apply(&self, x: &[f64], y: &mut [f64]);
-    /// Transpose apply; default panics for operators that don't
-    /// support it.
-    fn apply_t(&self, _x: &[f64], _y: &mut [f64]) {
-        unimplemented!("transpose apply not supported by this operator")
+    /// Transpose apply.  Operators without a transpose pipeline return
+    /// [`Error::Unsupported`] — a recoverable error, so library callers
+    /// can fall back (e.g. to a normal-equations-free method) instead
+    /// of aborting.
+    fn apply_t(&self, _x: &[f64], _y: &mut [f64]) -> Result<()> {
+        Err(Error::Unsupported(
+            "transpose apply not supported by this operator".into(),
+        ))
     }
 }
 
@@ -49,7 +54,7 @@ impl LinearOperator for ExactOperator {
         }
     }
 
-    fn apply_t(&self, x: &[f64], y: &mut [f64]) {
+    fn apply_t(&self, x: &[f64], y: &mut [f64]) -> Result<()> {
         assert_eq!(x.len(), self.n);
         assert_eq!(y.len(), self.m);
         y.fill(0.0);
@@ -59,6 +64,7 @@ impl LinearOperator for ExactOperator {
                 y[j] += self.a[i * self.m + j] * xi;
             }
         }
+        Ok(())
     }
 }
 
@@ -153,7 +159,7 @@ impl LinearOperator for CrossbarOperator {
         }
     }
 
-    fn apply_t(&self, x: &[f64], y: &mut [f64]) {
+    fn apply_t(&self, x: &[f64], y: &mut [f64]) -> Result<()> {
         assert_eq!(x.len(), self.n);
         assert_eq!(y.len(), self.m);
         let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
@@ -161,6 +167,7 @@ impl LinearOperator for CrossbarOperator {
         for (o, v) in y.iter_mut().zip(yf) {
             *o = v as f64 * self.scale;
         }
+        Ok(())
     }
 }
 
@@ -181,8 +188,27 @@ mod tests {
         a.apply(&[1.0, 0.0, -1.0], &mut y);
         assert_eq!(y, vec![-2.0, -2.0]);
         let mut yt = vec![0.0; 3];
-        a.apply_t(&[1.0, 1.0], &mut yt);
+        a.apply_t(&[1.0, 1.0], &mut yt).unwrap();
         assert_eq!(yt, vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn default_transpose_apply_is_recoverable() {
+        // An operator without a transpose pipeline must return a typed
+        // error, not abort the process.
+        struct ForwardOnly;
+        impl LinearOperator for ForwardOnly {
+            fn dim(&self) -> (usize, usize) {
+                (2, 2)
+            }
+            fn apply(&self, _x: &[f64], y: &mut [f64]) {
+                y.fill(0.0);
+            }
+        }
+        let mut y = vec![0.0; 2];
+        let err = ForwardOnly.apply_t(&[1.0, 1.0], &mut y).unwrap_err();
+        assert!(matches!(err, Error::Unsupported(_)));
+        assert!(err.to_string().contains("transpose"));
     }
 
     #[test]
@@ -204,8 +230,8 @@ mod tests {
         let xt: Vec<f64> = (0..n).map(|i| (i as f64 / n as f64) - 0.5).collect();
         let mut yte = vec![0.0; m];
         let mut ytx = vec![0.0; m];
-        exact.apply_t(&xt, &mut yte);
-        xb.apply_t(&xt, &mut ytx);
+        exact.apply_t(&xt, &mut yte).unwrap();
+        xb.apply_t(&xt, &mut ytx).unwrap();
         for j in 0..m {
             assert!((yte[j] - ytx[j]).abs() < 0.05);
         }

@@ -91,6 +91,37 @@ impl VmmOutput {
     }
 }
 
+/// Type-erased engine handle: a cheaply cloneable [`VmmEngine`] shared
+/// by the experiments, the layered inference pipeline, and anything
+/// else that composes engines dynamically (e.g. wrapping one in a
+/// [`crate::mitigation::MitigatedEngine`] per network layer).
+#[derive(Clone)]
+pub struct DynEngine(std::sync::Arc<dyn VmmEngine>);
+
+impl DynEngine {
+    pub fn new<E: VmmEngine + 'static>(e: E) -> Self {
+        Self(std::sync::Arc::new(e))
+    }
+}
+
+impl VmmEngine for DynEngine {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+
+    fn forward(&self, batch: &VmmBatch, params: &DeviceParams) -> Result<VmmOutput> {
+        self.0.forward(batch, params)
+    }
+
+    fn preferred_batches(&self) -> Vec<usize> {
+        self.0.preferred_batches()
+    }
+
+    fn internal_parallelism(&self) -> usize {
+        self.0.internal_parallelism()
+    }
+}
+
 /// A MELISO compute backend.
 pub trait VmmEngine: Send + Sync {
     /// Engine name for reports.

@@ -16,8 +16,8 @@ pub mod software;
 pub mod tiled;
 pub mod xla_engine;
 
-pub use engine::{VmmBatch, VmmEngine, VmmOutput};
+pub use engine::{DynEngine, VmmBatch, VmmEngine, VmmOutput};
 pub use native::NativeEngine;
-pub use software::{software_vmm_batch, SoftwareEngine};
+pub use software::{software_vmm_batch, software_vmm_single, SoftwareEngine};
 pub use tiled::TiledEngine;
 pub use xla_engine::XlaEngine;

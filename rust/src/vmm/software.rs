@@ -11,28 +11,54 @@ use super::engine::{VmmBatch, VmmEngine, VmmOutput};
 #[derive(Debug, Default, Clone)]
 pub struct SoftwareEngine;
 
+/// One exact sample `y[j] = sum_i x[i] * w[i, j]` in f64 accumulation,
+/// written into `out` (f32).  `acc` is caller-provided scratch of
+/// `cols` elements.  This is the single source of truth for the exact
+/// reference arithmetic — the batched reference below and the layered
+/// pipeline's software chain both call it, so they stay bit-identical
+/// by construction.
+pub fn software_vmm_single(
+    w: &[f32],
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    acc: &mut [f64],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(w.len(), rows * cols);
+    debug_assert_eq!(x.len(), rows);
+    debug_assert_eq!(acc.len(), cols);
+    debug_assert_eq!(out.len(), cols);
+    acc.fill(0.0);
+    for i in 0..rows {
+        let xi = x[i] as f64;
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * cols..(i + 1) * cols];
+        for j in 0..cols {
+            acc[j] += xi * row[j] as f64;
+        }
+    }
+    for j in 0..cols {
+        out[j] = acc[j] as f32;
+    }
+}
+
 /// Standalone batched software VMM in f64 accumulation.
 pub fn software_vmm_batch(batch: &VmmBatch) -> Vec<f32> {
     let (b, r, c) = (batch.batch, batch.rows, batch.cols);
     let mut y = vec![0.0f32; b * c];
+    let mut acc = vec![0.0f64; c];
     for s in 0..b {
-        let w = batch.w_of(s);
-        let x = batch.x_of(s);
-        let out = &mut y[s * c..(s + 1) * c];
-        let mut acc = vec![0.0f64; c];
-        for i in 0..r {
-            let xi = x[i] as f64;
-            if xi == 0.0 {
-                continue;
-            }
-            let row = &w[i * c..(i + 1) * c];
-            for j in 0..c {
-                acc[j] += xi * row[j] as f64;
-            }
-        }
-        for j in 0..c {
-            out[j] = acc[j] as f32;
-        }
+        software_vmm_single(
+            batch.w_of(s),
+            batch.x_of(s),
+            r,
+            c,
+            &mut acc,
+            &mut y[s * c..(s + 1) * c],
+        );
     }
     y
 }

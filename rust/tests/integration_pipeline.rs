@@ -1,0 +1,225 @@
+//! Integration: the layered inference pipeline — determinism across
+//! thread counts, the depth-1 <-> single-forward equivalence, the
+//! engine matrix (native / tiled / mitigated), and the `meliso infer`
+//! CLI surface with its CSV + JSON artifacts.
+
+use meliso::cli::{dispatch, Args};
+use meliso::device::params::DeviceParams;
+use meliso::device::presets;
+use meliso::mitigation::MitigationConfig;
+use meliso::pipeline::{Activation, NetworkSpec, PipelineOptions, PipelineRunner};
+use meliso::util::json::Json;
+use meliso::util::pool::Parallelism;
+use meliso::vmm::{DynEngine, NativeEngine, TiledEngine, VmmEngine};
+
+fn run_with(
+    engine: DynEngine,
+    net: &NetworkSpec,
+    device: &meliso::device::params::DeviceParams,
+    threads: Parallelism,
+) -> meliso::pipeline::InferenceReport {
+    PipelineRunner::new(engine)
+        .run(net, device, &PipelineOptions { chunk: 4, parallelism: threads })
+        .unwrap()
+}
+
+/// The subsystem's reproducibility contract: the same seed yields a
+/// **bit-identical layer trace** for any thread count, on both the
+/// plain and the per-layer-mitigated path.
+#[test]
+fn layer_trace_bit_identical_across_thread_counts() {
+    let device = presets::ag_si().params;
+    let mut net = NetworkSpec::uniform(4, 16, Activation::Relu, 99).with_population(12);
+    // Mix mitigated and unmitigated layers to cover both paths.
+    net.layers[1].mitigation = Some(MitigationConfig::parse("diff,avg:2").unwrap());
+
+    let baseline = run_with(
+        DynEngine::new(NativeEngine::sequential()),
+        &net,
+        &device,
+        Parallelism::Fixed(1),
+    );
+    for threads in [2usize, 3, 8] {
+        let par = run_with(
+            DynEngine::new(NativeEngine::sequential()),
+            &net,
+            &device,
+            Parallelism::Fixed(threads),
+        );
+        for (a, b) in baseline.layers.iter().zip(&par.layers) {
+            assert_eq!(a.injected.errors(), b.injected.errors(), "threads={threads}");
+            assert_eq!(
+                a.accumulated.errors(),
+                b.accumulated.errors(),
+                "threads={threads}"
+            );
+        }
+        assert_eq!(baseline.final_hw, par.final_hw, "threads={threads}");
+        assert_eq!(baseline.final_sw, par.final_sw, "threads={threads}");
+        assert_eq!(baseline.argmax_agreement, par.argmax_agreement);
+    }
+    // Engine-internal fan-out composes with the chunk pool without
+    // changing a bit either.
+    let fanned = run_with(
+        DynEngine::new(NativeEngine::default()),
+        &net,
+        &device,
+        Parallelism::Auto,
+    );
+    assert_eq!(baseline.final_hw, fanned.final_hw);
+    for (a, b) in baseline.layers.iter().zip(&fanned.layers) {
+        assert_eq!(a.accumulated.errors(), b.accumulated.errors());
+    }
+}
+
+/// A depth-1 pipeline is exactly one engine forward: the injected
+/// error population equals `VmmEngine::forward`'s error vector
+/// bit-for-bit on the same seed.
+#[test]
+fn depth_1_pipeline_matches_single_forward() {
+    let device = presets::epiram().params;
+    let mut net = NetworkSpec::uniform(1, 32, Activation::Identity, 1234).with_population(16);
+    net.layers[0].requant = 1.0;
+
+    // The pipeline's own batch for layer 0 over the whole population…
+    let inputs = net.input_spec().chunk(0, 16);
+    let batch = net.layer_batch(0, 0, 16, &inputs);
+    let engine = NativeEngine::default();
+    let direct = engine.forward(&batch, &device).unwrap();
+
+    // …and the pipeline run (one chunk, so the same batch shape).
+    let report = PipelineRunner::new(DynEngine::new(engine))
+        .run(
+            &net,
+            &device,
+            &PipelineOptions { chunk: 16, parallelism: Parallelism::Fixed(1) },
+        )
+        .unwrap();
+
+    assert_eq!(report.layers.len(), 1);
+    assert_eq!(report.layers[0].injected.errors(), direct.errors().as_slice());
+    // With identity activation and unit requantization the final
+    // hardware activations are the (saturated) raw outputs.
+    let clamped: Vec<f32> = direct.y_hw.iter().map(|&v| v.clamp(-1.0, 1.0)).collect();
+    assert_eq!(report.final_hw, clamped);
+}
+
+/// The engine matrix of the acceptance criterion: native, tiled, and
+/// mitigated engines all run a depth-4 seeded network and report
+/// finite, engine-consistent traces.
+#[test]
+fn depth_4_network_runs_on_native_tiled_and_mitigated() {
+    let device = presets::epiram().params;
+    let net = NetworkSpec::uniform(4, 32, Activation::Relu, 55).with_population(8);
+    let mitigated_net = net
+        .clone()
+        .with_mitigation(MitigationConfig::parse("avg:2").unwrap());
+
+    let engines: [(&str, DynEngine, &NetworkSpec); 3] = [
+        ("native", DynEngine::new(NativeEngine::default()), &net),
+        ("tiled", DynEngine::new(TiledEngine::default()), &net),
+        ("mitigated", DynEngine::new(NativeEngine::default()), &mitigated_net),
+    ];
+    for (label, engine, n) in engines {
+        let r = PipelineRunner::new(engine)
+            .run(n, &device, &PipelineOptions::default())
+            .unwrap();
+        assert_eq!(r.layers.len(), 4, "{label}");
+        assert_eq!(r.end_to_end().len(), 8 * 32, "{label}");
+        assert!(
+            r.end_to_end().errors().iter().all(|e| e.is_finite()),
+            "{label}"
+        );
+        assert!((0.0..=1.0).contains(&r.argmax_agreement), "{label}");
+    }
+
+    // Tiled at the native tile size is the same physics: identical
+    // trace to the native engine on the same seed.
+    let rn = PipelineRunner::new(DynEngine::new(NativeEngine::default()))
+        .run(&net, &device, &PipelineOptions::default())
+        .unwrap();
+    let rt = PipelineRunner::new(DynEngine::new(TiledEngine::default()))
+        .run(&net, &device, &PipelineOptions::default())
+        .unwrap();
+    for (a, b) in rn.layers.iter().zip(&rt.layers) {
+        assert_eq!(a.injected.errors(), b.injected.errors());
+    }
+}
+
+/// Ideal-device sanity: requantization alone (no noise) keeps the two
+/// chains glued together through many layers.
+#[test]
+fn ideal_device_chain_stays_tight_at_depth_8() {
+    let net = NetworkSpec::uniform(8, 16, Activation::Tanh, 7).with_population(8);
+    let r = PipelineRunner::new(DynEngine::new(NativeEngine::default()))
+        .run(&net, &DeviceParams::ideal(), &PipelineOptions::default())
+        .unwrap();
+    for l in &r.layers {
+        assert!(l.accumulated_mean_abs() < 0.05, "layer {}", l.index);
+    }
+}
+
+/// `meliso infer` end-to-end through the CLI: runs a depth-4 seeded
+/// network and emits the per-layer accumulated-error CSV + JSON.
+#[test]
+fn infer_cli_emits_per_layer_csv_and_json() {
+    let dir = std::env::temp_dir().join("meliso_infer_cli_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    let out = dir.to_string_lossy().to_string();
+
+    for engine_args in [
+        vec!["--engine", "native"],
+        vec!["--engine", "tiled"],
+        vec!["--engine", "native", "--mitigation", "avg:2"],
+    ] {
+        let mut argv = vec![
+            "infer",
+            "--device",
+            "epiram",
+            "--depth",
+            "4",
+            "--population",
+            "6",
+            "--out",
+            out.as_str(),
+            "--quiet",
+        ];
+        argv.extend(&engine_args);
+        let args = Args::parse(argv.iter().map(|s| s.to_string())).unwrap();
+        let code = dispatch(&args).unwrap();
+        assert_eq!(code, 0, "{engine_args:?}");
+
+        let csv = std::fs::read_to_string(dir.join("infer/layers.csv")).unwrap();
+        let mut lines = csv.lines();
+        let header = lines.next().unwrap();
+        assert!(header.contains("accum_mean_abs"), "{header}");
+        assert_eq!(lines.count(), 4, "one row per layer ({engine_args:?})");
+
+        let json = std::fs::read_to_string(dir.join("infer/summary.json")).unwrap();
+        let summary = Json::parse(&json).unwrap();
+        assert_eq!(summary.get("id").unwrap().as_str(), Some("infer"));
+        assert_eq!(summary.get("network").unwrap().as_str(), Some("32x32x32x32x32"));
+        let layers = summary.get("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers.len(), 4);
+        for l in layers {
+            assert!(l.get("accum_mean_abs").unwrap().as_f64().unwrap().is_finite());
+        }
+        let agree = summary.get("argmax_agreement").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&agree));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The registry path: `meliso run pipeline` exists and the unknown-id
+/// failure lists it.
+#[test]
+fn registry_knows_the_pipeline_experiment() {
+    assert!(meliso::experiments::all_ids().contains(&"pipeline"));
+    let dir = std::env::temp_dir().join("meliso_pipeline_reg_msg_test");
+    let ctx = meliso::experiments::Ctx::native(4, &dir);
+    let err = meliso::experiments::run_by_id("nope", &ctx).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("pipeline"), "{msg}");
+    assert!(msg.contains("size-sweep"), "{msg}");
+    let _ = std::fs::remove_dir_all(dir);
+}

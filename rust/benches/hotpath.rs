@@ -1,207 +1,43 @@
 //! Bench: the hot paths of the stack, layer by layer — the §Perf
-//! instrumentation (EXPERIMENTS.md records these before/after).
+//! instrumentation.  The suite itself lives in `meliso::perf` (shared
+//! with the `meliso bench` subcommand, which runs it in quick mode and
+//! writes machine-readable `BENCH.json`); this target runs it in full
+//! mode:
 //!
 //!  * workload generation (host, L3)
 //!  * native crossbar engine, sequential baseline vs parallel fan
+//!  * error-mitigation pipeline cost per strategy
 //!  * tiled crossbar engine at 128x128 and 256x256
+//!  * sharded multi-crossbar engine (1x1/2x2/4x4 grids, checksum
+//!    reduction, fault-injection campaign)
 //!  * layered inference pipeline, depth 4/8, plain vs mitigated
 //!  * software reference VMM
 //!  * XLA engine single batch (L2+L1 through PJRT), if artifacts exist
 //!  * streaming statistics reduction
-//!  * end-to-end coordinator run (native + tiled + xla)
+//!  * end-to-end coordinator runs (native + tiled + sharded + xla)
+//!
+//! Set `MELISO_BENCH_OUT=<dir>` to also write `<dir>/BENCH.json`.
 
-use meliso::coordinator::{BenchmarkConfig, Coordinator, WorkloadSpec};
-use meliso::device::params::NonIdealities;
-use meliso::device::presets;
-use meliso::mitigation::{MitigatedEngine, MitigationConfig};
-use meliso::pipeline::{Activation, NetworkSpec, PipelineOptions, PipelineRunner};
-use meliso::stats::moments::Moments;
-use meliso::util::bench::{bench, black_box, BenchOpts};
-use meliso::vmm::{DynEngine, NativeEngine, TiledEngine, VmmEngine, XlaEngine};
+use meliso::perf::{run_suite, SuiteOpts};
+use meliso::util::bench::write_bench_json;
 
 fn main() {
-    let device = presets::ag_si().params.masked(NonIdealities::FULL);
-    let spec = WorkloadSpec::paper_default(1);
-    let b256 = spec.chunk(0, 256);
-
-    // L3: workload generation (w, x and 3 noise planes per sample).
-    bench(
-        "workload gen: 256 x (32x32 + noise)",
-        BenchOpts { samples: 10, warmup: 2, items_per_iter: Some(256.0) },
-        || {
-            black_box(spec.chunk(0, 256));
-        },
-    );
-
-    // L3: native physics engine — the sequential post-fix baseline…
-    let seq = bench(
-        "native engine (sequential): forward 256 x 32x32",
-        BenchOpts { samples: 10, warmup: 2, items_per_iter: Some(256.0) },
-        || {
-            black_box(
-                NativeEngine::sequential().forward(&b256, &device).unwrap(),
-            );
-        },
-    );
-    // …vs the pool-fanned engine (per-worker scratch, shared table).
-    let par = bench(
-        "native engine (parallel): forward 256 x 32x32",
-        BenchOpts { samples: 10, warmup: 2, items_per_iter: Some(256.0) },
-        || {
-            black_box(NativeEngine::default().forward(&b256, &device).unwrap());
-        },
-    );
-    println!(
-        "      native parallel speedup: {:.2}x samples/sec over sequential",
-        par.items_per_sec(256.0) / seq.items_per_sec(256.0)
-    );
-
-    // Mitigation pipeline: throughput cost of each strategy (and the
-    // combined pipeline) over the parallel native engine — the price
-    // column of the mitigation-sweep experiment.
-    for spec in ["diff", "slice:2", "avg:4", "cal", "diff,slice:2,avg:4,cal"] {
-        let eng = MitigatedEngine::new(
-            NativeEngine::default(),
-            MitigationConfig::parse(spec).unwrap(),
+    let filter = std::env::var("MELISO_BENCH_FILTER").ok();
+    let results = run_suite(&SuiteOpts { quick: false, filter: filter.clone() });
+    if results.is_empty() {
+        // Same guard as the `meliso bench` CLI: an empty BENCH.json
+        // reads as "no regressions" downstream.
+        eprintln!(
+            "error: MELISO_BENCH_FILTER '{}' matched no benchmarks",
+            filter.as_deref().unwrap_or("")
         );
-        let res = bench(
-            &format!("mitigated native ({spec}): forward 256 x 32x32"),
-            BenchOpts { samples: 5, warmup: 1, items_per_iter: Some(256.0) },
-            || {
-                black_box(eng.forward(&b256, &device).unwrap());
-            },
-        );
-        println!(
-            "      mitigation cost ({spec}): {:.2}x parallel-native throughput",
-            res.items_per_sec(256.0) / par.items_per_sec(256.0)
-        );
+        std::process::exit(1);
     }
-
-    // Tiled engine: arbitrary-size populations over 32x32 tile grids.
-    let tiled = TiledEngine::default();
-    for size in [128usize, 256] {
-        let mut tspec = WorkloadSpec::paper_default(2);
-        tspec.rows = size;
-        tspec.cols = size;
-        let samples = (16 * 128 * 128 / (size * size)).max(4);
-        let tb = tspec.chunk(0, samples);
-        bench(
-            &format!("tiled engine: forward {samples} x {size}x{size}"),
-            BenchOpts {
-                samples: 5,
-                warmup: 1,
-                items_per_iter: Some(samples as f64),
-            },
-            || {
-                black_box(tiled.forward(&tb, &device).unwrap());
-            },
-        );
-    }
-
-    // Layered inference pipeline: deep VMM chains through the parallel
-    // native engine, plain vs per-layer mitigation — the cost of the
-    // `pipeline` experiment's cells (samples x depth VMMs per run).
-    let runner = PipelineRunner::new(DynEngine::new(NativeEngine::default()));
-    let opts = PipelineOptions::default();
-    for depth in [4usize, 8] {
-        for mit in ["none", "diff,avg:2"] {
-            let mut net = NetworkSpec::uniform(depth, 32, Activation::Relu, 3)
-                .with_population(32);
-            if mit != "none" {
-                net = net.with_mitigation(MitigationConfig::parse(mit).unwrap());
-            }
-            bench(
-                &format!("pipeline depth-{depth} ({mit}): 32 samples x 32x32"),
-                BenchOpts {
-                    samples: 3,
-                    warmup: 1,
-                    items_per_iter: Some((32 * depth) as f64),
-                },
-                || {
-                    black_box(runner.run(&net, &device, &opts).unwrap());
-                },
-            );
+    if let Ok(dir) = std::env::var("MELISO_BENCH_OUT") {
+        let path = std::path::Path::new(&dir).join("BENCH.json");
+        match write_bench_json(&results, &path) {
+            Ok(()) => println!("wrote {} results to {}", results.len(), path.display()),
+            Err(e) => eprintln!("error: could not write {}: {e}", path.display()),
         }
     }
-
-    // Software reference.
-    bench(
-        "software vmm: 256 x 32x32 (f64 acc)",
-        BenchOpts { samples: 10, warmup: 2, items_per_iter: Some(256.0) },
-        || {
-            black_box(meliso::vmm::software_vmm_batch(&b256));
-        },
-    );
-
-    // L2+L1 through PJRT.
-    match XlaEngine::from_default_dir() {
-        Ok(engine) => {
-            engine.runtime().warmup().unwrap();
-            bench(
-                "xla engine: forward 256 x 32x32 (meliso_fwd)",
-                BenchOpts { samples: 10, warmup: 2, items_per_iter: Some(256.0) },
-                || {
-                    black_box(engine.forward(&b256, &device).unwrap());
-                },
-            );
-            // Kernel-only artifact.
-            let gp = vec![0.5f32; 256 * 32 * 32];
-            let gn = vec![0.25f32; 256 * 32 * 32];
-            let v = vec![0.1f32; 256 * 32];
-            bench(
-                "xla kernel: raw crossbar read 256 x 32x32",
-                BenchOpts { samples: 10, warmup: 2, items_per_iter: Some(256.0) },
-                || {
-                    black_box(engine.raw_vmm(&gp, &gn, &v, 256).unwrap());
-                },
-            );
-            // End-to-end coordinator on the XLA engine.
-            let cfg =
-                BenchmarkConfig::paper_default(device).with_population(1024);
-            let coord = Coordinator::new(engine);
-            bench(
-                "coordinator e2e: 1024 VMMs (xla engine)",
-                BenchOpts { samples: 5, warmup: 1, items_per_iter: Some(1024.0) },
-                || {
-                    black_box(coord.run(&cfg).unwrap());
-                },
-            );
-        }
-        Err(e) => eprintln!("(xla benches skipped: {e})"),
-    }
-
-    // Stats reduction over a protocol-size error vector.
-    let errs: Vec<f64> = (0..32_000).map(|i| (i as f64 * 0.37).sin()).collect();
-    bench(
-        "stats: streaming 4-moment reduce of 32000",
-        BenchOpts { samples: 10, warmup: 2, items_per_iter: Some(32_000.0) },
-        || {
-            black_box(Moments::from_slice(&errs));
-        },
-    );
-
-    // End-to-end coordinator on the native engine (parallel).
-    let cfg = BenchmarkConfig::paper_default(device).with_population(1024);
-    let coord = Coordinator::new(NativeEngine::default());
-    bench(
-        "coordinator e2e: 1024 VMMs (native engine)",
-        BenchOpts { samples: 5, warmup: 1, items_per_iter: Some(1024.0) },
-        || {
-            black_box(coord.run(&cfg).unwrap());
-        },
-    );
-
-    // End-to-end coordinator on the tiled engine at 128x128.
-    let mut cfg128 = BenchmarkConfig::paper_default(device).with_population(64);
-    cfg128.workload.rows = 128;
-    cfg128.workload.cols = 128;
-    cfg128.calibration_samples = 16;
-    let coord = Coordinator::new(TiledEngine::default());
-    bench(
-        "coordinator e2e: 64 VMMs at 128x128 (tiled engine)",
-        BenchOpts { samples: 3, warmup: 1, items_per_iter: Some(64.0) },
-        || {
-            black_box(coord.run(&cfg128).unwrap());
-        },
-    );
 }

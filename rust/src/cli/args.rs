@@ -3,11 +3,11 @@
 //! ```text
 //! meliso list
 //! meliso devices
-//! meliso run <experiment|all> [--engine native|tiled|xla|software]
+//! meliso run <experiment|all> [--engine native|tiled|sharded|xla|software]
 //!            [--population N] [--seed N] [--out DIR] [--threads N]
-//!            [--engine-threads N] [--size N] [--tile N]
+//!            [--engine-threads N] [--size N] [--tile N] [--shards RxC]
 //!            [--mitigation SPEC] [--config FILE] [--quiet]
-//! meliso bench [--engine ...] [--population N] [--size N]
+//! meliso bench [--filter SUBSTR] [--baseline FILE] [--out DIR]
 //! meliso fit --input FILE.csv [--column K]
 //! meliso solve [--device ID] [--n N] [--solver cg|jacobi|richardson]
 //!              [--mitigation SPEC]
@@ -20,6 +20,7 @@ use crate::config::{EngineKind, RunConfig};
 use crate::error::{Error, Result};
 use crate::mitigation::MitigationConfig;
 use crate::pipeline::{parse_dims, Activation};
+use crate::shard::parse_grid;
 
 /// Parsed command line.
 #[derive(Debug, Clone)]
@@ -34,7 +35,7 @@ pub enum Command {
     List,
     Devices,
     Run { experiment: String },
-    Bench,
+    Bench { filter: Option<String>, baseline: Option<String> },
     Fit { input: String, column: usize },
     Solve { device: String, n: usize, solver: String },
     Infer { device: String },
@@ -53,7 +54,10 @@ COMMANDS:
   list                       List available experiments
   devices                    Print Table I device presets
   run <id|all|paper>         Run one experiment, or the full paper set
-  bench                      Quick engine throughput measurement
+  bench                      Run the hotpath bench suite in quick mode and
+                             write machine-readable <out>/BENCH.json
+                             (e.g. `meliso bench --filter native --out perf`,
+                             `meliso bench --baseline rust/benches/baseline.json`)
   fit --input F [--column K] Fit distributions to a CSV error column
   solve [--device ID] [--n N] [--solver S]
                              In-memory linear solve demo (cg|jacobi|richardson)
@@ -65,18 +69,24 @@ COMMANDS:
   help, version
 
 OPTIONS:
-  --engine <native|tiled|xla|software>
+  --engine <native|tiled|sharded|xla|software>
                                    Compute backend [default: native]
   --population <N>                 VMM samples per configuration [default: 1000]
   --seed <N>                       Workload seed
   --out <DIR>                      Output directory [default: out]
   --threads <N>                    Total worker budget (0 = auto)
-  --engine-threads <N>             Engine-level fan-out for native/tiled
+  --engine-threads <N>             Engine-level fan-out for native/tiled/sharded
                                    (0 = auto, 1 = sequential engine)
-  --size <N>                       Workload geometry (rows = cols) for bench
+  --size <N>                       Workload geometry (rows = cols)
                                    [default: 32]
   --tile <N>                       Physical tile size of the tiled engine
                                    [default: 32]
+  --shards <RxC>                   Shard grid of the sharded engine
+                                   [default: 2x2]
+  --filter <SUBSTR>                bench: run only benchmarks whose name
+                                   contains SUBSTR (errors if none match)
+  --baseline <FILE>                bench: warn (never fail) when a median
+                                   regresses >2x against this BENCH.json
   --mitigation <SPEC>              Error-mitigation pipeline, a comma list of
                                    diff | slice:K | avg:R | cal[:P]
                                    (e.g. diff,slice:2,avg:4) [default: none]
@@ -150,6 +160,11 @@ impl Args {
                         return Err(Error::Config("tile must be > 0".into()));
                     }
                 }
+                "shards" => {
+                    let (r, c) = parse_grid(req(name, v)?)?;
+                    config.shard.grid_r = r;
+                    config.shard.grid_c = c;
+                }
                 "mitigation" => {
                     config.mitigation = MitigationConfig::parse(req(name, v)?)?;
                 }
@@ -166,7 +181,8 @@ impl Args {
                     config.pipeline.dims = Some(parse_dims(req(name, v)?)?);
                 }
                 "quiet" => config.quiet = true,
-                "config" | "input" | "column" | "device" | "n" | "solver" => {}
+                "config" | "input" | "column" | "device" | "n" | "solver" | "filter"
+                | "baseline" => {}
                 other => {
                     return Err(Error::Config(format!("unknown flag --{other}")));
                 }
@@ -189,7 +205,7 @@ impl Args {
                     .cloned()
                     .ok_or_else(|| Error::Config("run needs an experiment id".into()))?,
             },
-            "bench" => Command::Bench,
+            "bench" => Command::Bench { filter: flag("filter"), baseline: flag("baseline") },
             "fit" => Command::Fit {
                 input: flag("input")
                     .ok_or_else(|| Error::Config("fit needs --input FILE".into()))?,
@@ -278,13 +294,51 @@ mod tests {
 
     #[test]
     fn parses_tiled_flags() {
-        let a = parse("bench --engine tiled --size 128 --tile 64 --engine-threads 4")
+        let a = parse("run fig3 --engine tiled --size 128 --tile 64 --engine-threads 4")
             .unwrap();
-        assert_eq!(a.command, Command::Bench);
         assert_eq!(a.config.engine, crate::config::EngineKind::Tiled);
         assert_eq!(a.config.size, 128);
         assert_eq!(a.config.tile, 64);
         assert_eq!(a.config.engine_threads, 4);
+    }
+
+    #[test]
+    fn parses_sharded_flags() {
+        let a = parse("run shard-sweep --engine sharded --shards 4x2").unwrap();
+        assert_eq!(a.config.engine, crate::config::EngineKind::Sharded);
+        assert_eq!((a.config.shard.grid_r, a.config.shard.grid_c), (4, 2));
+        // Default grid without the flag.
+        let a = parse("run shard-sweep --engine sharded").unwrap();
+        assert_eq!((a.config.shard.grid_r, a.config.shard.grid_c), (2, 2));
+        // Rejections.
+        assert!(parse("run x --shards 4").is_err());
+        assert!(parse("run x --shards 0x2").is_err());
+        assert!(parse("run x --shards").is_err());
+    }
+
+    #[test]
+    fn parses_bench_flags() {
+        let a = parse("bench").unwrap();
+        assert_eq!(a.command, Command::Bench { filter: None, baseline: None });
+        let a = parse("bench --filter native --baseline benches/baseline.json --out perf")
+            .unwrap();
+        assert_eq!(
+            a.command,
+            Command::Bench {
+                filter: Some("native".into()),
+                baseline: Some("benches/baseline.json".into()),
+            }
+        );
+        assert_eq!(a.config.out_dir, std::path::PathBuf::from("perf"));
+        assert!(parse("bench --filter").is_err());
+    }
+
+    #[test]
+    fn unknown_engine_error_names_every_engine() {
+        let msg = parse("run fig3 --engine warp").unwrap_err().to_string();
+        for name in ["native", "tiled", "sharded", "xla", "software"] {
+            assert!(msg.contains(name), "missing '{name}' in: {msg}");
+        }
     }
 
     #[test]

@@ -1,14 +1,15 @@
 //! Subcommand implementations.
 
 
-use crate::coordinator::{BenchmarkConfig, Coordinator};
 use crate::device::params::NonIdealities;
 use crate::device::presets;
 use crate::error::{Error, Result};
 use crate::experiments::{registry, Ctx};
+use crate::perf;
 use crate::pipeline::{NetworkSpec, PipelineOptions, PipelineRunner};
 use crate::report::table::{fnum, TextTable};
 use crate::runtime::XlaRuntime;
+use crate::util::bench::{read_bench_json, write_bench_json};
 use crate::util::csv::CsvTable;
 use crate::util::json::{obj, Json};
 use crate::solver::{
@@ -45,7 +46,7 @@ pub fn dispatch(args: &Args) -> Result<i32> {
             Ok(0)
         }
         Command::Run { experiment } => run_experiments(args, experiment),
-        Command::Bench => bench(args),
+        Command::Bench { filter, baseline } => bench(args, filter, baseline),
         Command::Fit { input, column } => fit_csv(input, *column),
         Command::Solve { device, n, solver } => solve(args, device, *n, solver),
         Command::Infer { device } => infer(args, device),
@@ -74,37 +75,68 @@ fn run_experiments(args: &Args, which: &str) -> Result<i32> {
     Ok(0)
 }
 
-fn bench(args: &Args) -> Result<i32> {
-    let ctx = Ctx::from_config(&args.config)?;
-    let device = presets::ag_si().params.masked(NonIdealities::FULL);
-    let size = args.config.size;
-    let mut cfg = BenchmarkConfig::paper_default(device)
-        .with_population(args.config.population)
-        .with_seed(args.config.seed);
-    // Arbitrary workload geometry (tiled engine handles any size; the
-    // native engine programs one large array).
-    cfg.workload.rows = size;
-    cfg.workload.cols = size;
-    cfg.parallelism = args.config.parallelism();
-    let coord = Coordinator::new(ctx.engine.clone());
-    let (pop, tel) = coord.run_with_telemetry(&cfg)?;
-    let mut t = TextTable::new(["metric", "value"]).with_title("Engine throughput");
-    t.push(["engine", ctx.engine_name()]);
-    t.push(["workload", &format!("{size}x{size}")]);
-    t.push(["population", &tel.samples.to_string()]);
-    t.push(["chunks", &tel.chunks.to_string()]);
-    t.push(["chunk threads", &tel.chunk_threads.to_string()]);
-    t.push(["engine threads", &tel.engine_threads.to_string()]);
-    t.push(["wall (s)", &fnum(tel.wall_secs)]);
-    t.push(["engine (s, summed)", &fnum(tel.engine_secs)]);
-    t.push(["gen (s, summed)", &fnum(tel.gen_secs)]);
-    t.push(["VMM/s", &fnum(tel.throughput())]);
-    t.push([
-        "error elements/s",
-        &fnum(tel.throughput() * size as f64),
-    ]);
-    t.push(["error variance", &fnum(pop.stats().variance())]);
-    println!("{}", t.render());
+/// `meliso bench`: run the hotpath suite in quick mode, write
+/// machine-readable `<out>/BENCH.json`, and (with `--baseline`)
+/// soft-gate medians against a committed baseline document — warnings
+/// only, never a failing exit, because absolute timings are machine
+/// dependent.  An unmatched `--filter` is an error: an empty
+/// `BENCH.json` would read as "no regressions" in CI.
+fn bench(args: &Args, filter: &Option<String>, baseline: &Option<String>) -> Result<i32> {
+    // The pre-BENCH.json `bench` took workload/engine flags; the suite
+    // pins its own workloads, so a caller still passing any of them
+    // must hear that they no longer steer the measurement.
+    let defaults = crate::config::RunConfig::default();
+    let stale_flags = args.config.engine != defaults.engine
+        || args.config.size != defaults.size
+        || args.config.population != defaults.population
+        || args.config.tile != defaults.tile
+        || args.config.threads != defaults.threads
+        || args.config.engine_threads != defaults.engine_threads
+        || args.config.seed != defaults.seed
+        || args.config.shard != defaults.shard
+        || !args.config.mitigation.is_noop();
+    if stale_flags && !args.config.quiet {
+        eprintln!(
+            "note: `meliso bench` runs the fixed hotpath suite; workload and \
+             engine flags (--engine/--size/--population/--tile/--threads/\
+             --engine-threads/--seed/--shards/--mitigation) do not affect it \
+             (use --filter to select benchmarks, `meliso run` to measure a \
+             specific configuration)"
+        );
+    }
+    let results = perf::run_suite(&perf::SuiteOpts { quick: true, filter: filter.clone() });
+    if results.is_empty() {
+        return Err(Error::Config(format!(
+            "--filter '{}' matched no benchmarks (run `meliso bench` without \
+             --filter and check the names in BENCH.json)",
+            filter.as_deref().unwrap_or("")
+        )));
+    }
+    let path = args.config.out_dir.join("BENCH.json");
+    write_bench_json(&results, &path)?;
+    if !args.config.quiet {
+        eprintln!("wrote {} bench results to {}", results.len(), path.display());
+    }
+    if let Some(baseline_path) = baseline {
+        let base = read_bench_json(std::path::Path::new(baseline_path))?;
+        let regressions = perf::compare_to_baseline(&results, &base, 2.0);
+        for r in &regressions {
+            // `::warning::` renders as an annotation on GitHub Actions
+            // and is harmless plain text everywhere else.
+            println!(
+                "::warning::bench '{}' median regressed {:.2}x vs baseline \
+                 ({:.6}s -> {:.6}s)",
+                r.name, r.ratio, r.baseline_median, r.current_median
+            );
+        }
+        if regressions.is_empty() && !args.config.quiet {
+            eprintln!(
+                "no >2x median regressions against {baseline_path} \
+                 ({} comparable benchmarks)",
+                results.len()
+            );
+        }
+    }
     Ok(0)
 }
 
@@ -334,4 +366,79 @@ fn warmup() -> Result<i32> {
         sw.pretty()
     );
     Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bench::BenchResult;
+
+    fn parse(argv: &[&str]) -> Args {
+        Args::parse(argv.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn bench_with_unmatched_filter_errors_without_writing() {
+        let dir = std::env::temp_dir().join("meliso_bench_cli_err_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let args = parse(&[
+            "bench",
+            "--filter",
+            "no-such-bench-name",
+            "--quiet",
+            "--out",
+            dir.to_str().unwrap(),
+        ]);
+        let err = dispatch(&args).unwrap_err();
+        assert!(err.to_string().contains("no-such-bench-name"), "{err}");
+        // No half-written document: an empty BENCH.json would read as
+        // "no regressions" downstream.
+        assert!(!dir.join("BENCH.json").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn bench_filtered_writes_bench_json_and_soft_gates() {
+        let dir = std::env::temp_dir().join("meliso_bench_cli_ok_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let args = parse(&[
+            "bench",
+            "--filter",
+            "stats-moments",
+            "--quiet",
+            "--out",
+            dir.to_str().unwrap(),
+        ]);
+        assert_eq!(dispatch(&args).unwrap(), 0);
+        let results = read_bench_json(&dir.join("BENCH.json")).unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].name, "stats-moments");
+        assert!(results[0].median > 0.0);
+
+        // Soft gate: even a guaranteed >2x "regression" against an
+        // absurdly fast baseline must warn, not fail.
+        let baseline = vec![BenchResult {
+            name: "stats-moments".into(),
+            median: 1e-12,
+            mean: 1e-12,
+            min: 1e-12,
+            max: 1e-12,
+            samples: 3,
+            items_per_iter: None,
+        }];
+        let baseline_path = dir.join("baseline.json");
+        write_bench_json(&baseline, &baseline_path).unwrap();
+        let args = parse(&[
+            "bench",
+            "--filter",
+            "stats-moments",
+            "--quiet",
+            "--baseline",
+            baseline_path.to_str().unwrap(),
+            "--out",
+            dir.to_str().unwrap(),
+        ]);
+        assert_eq!(dispatch(&args).unwrap(), 0);
+        let _ = std::fs::remove_dir_all(dir);
+    }
 }

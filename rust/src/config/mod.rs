@@ -16,6 +16,14 @@
 //! activation = "relu"         # identity | relu | tanh | hardtanh
 //! layers = "32x48x10"         # explicit dimension chain (overrides depth)
 //!
+//! [shard]                     # sharded engine (`--engine sharded`)
+//! grid = "2x2"                # shard grid RxC (also `--shards`)
+//! checksum = true             # ABFT checksum correction on/off
+//! threshold = 0.35            # detection factor x sqrt(shard cells)
+//! fault_rate = 0.0            # injected gross faults per (sample, shard)
+//! fault_level = 1.0           # stuck differential level of injections
+//! fault_seed = 7              # fault-stream seed
+//!
 //! [device]                    # optional custom device
 //! states = 97
 //! memory_window = 12.5
@@ -32,6 +40,7 @@ use crate::device::params::{
 use crate::error::{Error, Result};
 use crate::mitigation::MitigationConfig;
 use crate::pipeline::{parse_dims, Activation};
+use crate::shard::parse_grid;
 use crate::util::pool::Parallelism;
 use crate::util::toml::TomlDoc;
 
@@ -43,6 +52,8 @@ pub enum EngineKind {
     Native,
     /// Tiled crossbar simulation for arbitrary workload sizes.
     Tiled,
+    /// Sharded multi-crossbar execution with checksum error correction.
+    Sharded,
     /// AOT artifacts through PJRT (the production path).
     Xla,
     /// Exact software VMM (zero error; sanity baseline).
@@ -50,25 +61,44 @@ pub enum EngineKind {
 }
 
 impl EngineKind {
+    /// Every engine, in documentation order — the single source of the
+    /// engine-name list, so `parse` failures and `--help` can never
+    /// drift out of sync with the enum.
+    pub const ALL: [EngineKind; 5] = [
+        EngineKind::Native,
+        EngineKind::Tiled,
+        EngineKind::Sharded,
+        EngineKind::Xla,
+        EngineKind::Software,
+    ];
+
     pub fn parse(s: &str) -> Result<Self> {
-        match s.to_ascii_lowercase().as_str() {
-            "native" => Ok(EngineKind::Native),
-            "tiled" => Ok(EngineKind::Tiled),
-            "xla" => Ok(EngineKind::Xla),
-            "software" => Ok(EngineKind::Software),
-            other => Err(Error::Config(format!(
-                "unknown engine '{other}' (native|tiled|xla|software)"
-            ))),
-        }
+        let lower = s.to_ascii_lowercase();
+        Self::ALL
+            .iter()
+            .copied()
+            .find(|e| e.name() == lower)
+            .ok_or_else(|| {
+                Error::Config(format!(
+                    "unknown engine '{s}' (available: {})",
+                    Self::names().join(", ")
+                ))
+            })
     }
 
     pub fn name(&self) -> &'static str {
         match self {
             EngineKind::Native => "native",
             EngineKind::Tiled => "tiled",
+            EngineKind::Sharded => "sharded",
             EngineKind::Xla => "xla",
             EngineKind::Software => "software",
         }
+    }
+
+    /// All engine names, in documentation order.
+    pub fn names() -> Vec<&'static str> {
+        Self::ALL.iter().map(|e| e.name()).collect()
     }
 }
 
@@ -88,6 +118,42 @@ pub struct PipelineSettings {
 impl Default for PipelineSettings {
     fn default() -> Self {
         Self { depth: 4, activation: Activation::Relu, dims: None }
+    }
+}
+
+/// Sharded-engine settings (`--engine sharded --shards RxC` and the
+/// `[shard]` TOML section).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShardSettings {
+    /// Shard grid rows.
+    pub grid_r: usize,
+    /// Shard grid columns.
+    pub grid_c: usize,
+    /// Checksum columns + reduction verification on/off.
+    pub checksum: bool,
+    /// Detection-threshold factor (scaled by `sqrt(shard cells)`; see
+    /// [`crate::vmm::sharded`]).
+    pub threshold: f64,
+    /// Gross-fault injection rate per `(sample, shard)` cycle
+    /// (`0.0` = no injection).
+    pub fault_rate: f64,
+    /// Stuck differential level of injected faults, in `[-1, 1]`.
+    pub fault_level: f64,
+    /// Root seed of the fault stream.
+    pub fault_seed: u64,
+}
+
+impl Default for ShardSettings {
+    fn default() -> Self {
+        Self {
+            grid_r: 2,
+            grid_c: 2,
+            checksum: true,
+            threshold: crate::vmm::DEFAULT_CHECKSUM_THRESHOLD,
+            fault_rate: 0.0,
+            fault_level: 1.0,
+            fault_seed: 0x5A4D_4544, // "SHRD"-ish tag, independent of the workload seed
+        }
     }
 }
 
@@ -115,6 +181,8 @@ pub struct RunConfig {
     pub mitigation: MitigationConfig,
     /// Layered-inference settings (`meliso infer`).
     pub pipeline: PipelineSettings,
+    /// Sharded-engine settings (`--engine sharded`).
+    pub shard: ShardSettings,
     pub quiet: bool,
     /// Optional custom device overriding the presets.
     pub custom_device: Option<DeviceParams>,
@@ -133,6 +201,7 @@ impl Default for RunConfig {
             tile: crate::ROWS,
             mitigation: MitigationConfig::NONE,
             pipeline: PipelineSettings::default(),
+            shard: ShardSettings::default(),
             quiet: false,
             custom_device: None,
         }
@@ -258,6 +327,43 @@ impl RunConfig {
                     .ok_or_else(|| Error::Config("pipeline.layers must be a string".into()))?,
             )?);
         }
+        if let Some(v) = doc.get("shard", "grid") {
+            let (r, c) = parse_grid(
+                v.as_str()
+                    .ok_or_else(|| Error::Config("shard.grid must be a string".into()))?,
+            )?;
+            cfg.shard.grid_r = r;
+            cfg.shard.grid_c = c;
+        }
+        if let Some(v) = doc.get("shard", "checksum") {
+            cfg.shard.checksum = v
+                .as_bool()
+                .ok_or_else(|| Error::Config("shard.checksum must be a bool".into()))?;
+        }
+        if let Some(v) = doc.get("shard", "threshold") {
+            cfg.shard.threshold = v
+                .as_f64()
+                .filter(|t| t.is_finite() && *t > 0.0)
+                .ok_or_else(|| Error::Config("shard.threshold must be positive".into()))?;
+        }
+        if let Some(v) = doc.get("shard", "fault_rate") {
+            cfg.shard.fault_rate = v
+                .as_f64()
+                .filter(|r| (0.0..=1.0).contains(r))
+                .ok_or_else(|| Error::Config("shard.fault_rate must be in [0, 1]".into()))?;
+        }
+        if let Some(v) = doc.get("shard", "fault_level") {
+            cfg.shard.fault_level = v
+                .as_f64()
+                .filter(|l| (-1.0..=1.0).contains(l))
+                .ok_or_else(|| Error::Config("shard.fault_level must be in [-1, 1]".into()))?;
+        }
+        if let Some(v) = doc.get("shard", "fault_seed") {
+            cfg.shard.fault_seed = v
+                .as_i64()
+                .ok_or_else(|| Error::Config("shard.fault_seed must be an int".into()))?
+                as u64;
+        }
         if doc.tables.contains_key("device") {
             cfg.custom_device = Some(parse_device(&doc)?);
         }
@@ -343,9 +449,58 @@ sigma_c2c = 0.035
     fn engine_kind_parse() {
         assert_eq!(EngineKind::parse("XLA").unwrap(), EngineKind::Xla);
         assert_eq!(EngineKind::parse("tiled").unwrap(), EngineKind::Tiled);
+        assert_eq!(EngineKind::parse("sharded").unwrap(), EngineKind::Sharded);
         assert!(EngineKind::parse("gpu").is_err());
         assert_eq!(EngineKind::Native.name(), "native");
         assert_eq!(EngineKind::Tiled.name(), "tiled");
+        assert_eq!(EngineKind::Sharded.name(), "sharded");
+    }
+
+    #[test]
+    fn unknown_engine_error_lists_every_engine() {
+        // The failure must be actionable: every engine name, including
+        // the sharded engine, in one message.
+        let msg = EngineKind::parse("warp").unwrap_err().to_string();
+        for name in EngineKind::names() {
+            assert!(msg.contains(name), "missing '{name}' in: {msg}");
+        }
+        assert!(msg.contains("warp"), "{msg}");
+        // The list itself covers the full enum.
+        assert_eq!(EngineKind::names().len(), EngineKind::ALL.len());
+        assert!(EngineKind::names().contains(&"sharded"));
+    }
+
+    #[test]
+    fn shard_section_parses() {
+        let c = RunConfig::from_toml(
+            "engine = \"sharded\"\n\
+             [shard]\n\
+             grid = \"4x2\"\n\
+             checksum = false\n\
+             threshold = 1.25\n\
+             fault_rate = 0.1\n\
+             fault_level = -1.0\n\
+             fault_seed = 99\n",
+        )
+        .unwrap();
+        assert_eq!(c.engine, EngineKind::Sharded);
+        assert_eq!((c.shard.grid_r, c.shard.grid_c), (4, 2));
+        assert!(!c.shard.checksum);
+        assert_eq!(c.shard.threshold, 1.25);
+        assert_eq!(c.shard.fault_rate, 0.1);
+        assert_eq!(c.shard.fault_level, -1.0);
+        assert_eq!(c.shard.fault_seed, 99);
+        // Defaults.
+        let d = RunConfig::default().shard;
+        assert_eq!((d.grid_r, d.grid_c), (2, 2));
+        assert!(d.checksum);
+        assert_eq!(d.fault_rate, 0.0);
+        // Rejections.
+        assert!(RunConfig::from_toml("[shard]\ngrid = \"0x2\"\n").is_err());
+        assert!(RunConfig::from_toml("[shard]\ngrid = 4\n").is_err());
+        assert!(RunConfig::from_toml("[shard]\nthreshold = 0\n").is_err());
+        assert!(RunConfig::from_toml("[shard]\nfault_rate = 1.5\n").is_err());
+        assert!(RunConfig::from_toml("[shard]\nfault_level = 2.0\n").is_err());
     }
 
     #[test]

@@ -252,6 +252,23 @@ impl CrossbarArray {
         }
     }
 
+    /// Force every cell of column `j` to a stuck differential level —
+    /// gross-fault injection for the sharded engine's checksum studies.
+    /// `level = ±1` models a rail-stuck bit line, `0.0` a dead (open)
+    /// line.  The column's mismatch residue is cleared: a gross defect
+    /// dominates the per-cell baseline wander.
+    pub fn force_column(&mut self, j: usize, level: f32) {
+        assert!(j < self.cols, "column {j} out of range");
+        let level = level.clamp(-1.0, 1.0);
+        for i in 0..self.rows {
+            let idx = i * self.cols + j;
+            self.gp[idx] = (1.0 + level) * 0.5;
+            self.gn[idx] = (1.0 - level) * 0.5;
+            self.g_diff[idx] = level;
+            self.mismatch[idx] = 0.0;
+        }
+    }
+
     pub fn rows(&self) -> usize {
         self.rows
     }
@@ -473,6 +490,28 @@ mod tests {
         let fresh = CrossbarArray::program_verified(8, 8, &w, &params, &noise);
         assert_eq!(scratch.gp(), fresh.gp());
         assert_eq!(scratch.gn(), fresh.gn());
+    }
+
+    #[test]
+    fn force_column_sticks_reads_at_level() {
+        let mut rng = Xoshiro256::seed_from_u64(109);
+        let w = rand_w(&mut rng, 8 * 8);
+        let noise = ProgramNoise::sample(&mut rng, 8 * 8);
+        let params = DeviceParams::ideal().with_c2c(0.02);
+        let mut arr = CrossbarArray::program(8, 8, &w, &params, &noise);
+        let before = arr.clone();
+        arr.force_column(3, 1.0);
+        let mut x = vec![0.0f32; 8];
+        rng.fill_uniform_f32(&mut x, 0.0, 1.0);
+        let y = arr.read_vec(&x);
+        let want: f32 = x.iter().sum();
+        assert!((y[3] - want).abs() < 1e-5, "{} vs {want}", y[3]);
+        // Other columns are untouched.
+        let y_before = before.read_vec(&x);
+        for j in [0usize, 1, 2, 4, 5, 6, 7] {
+            assert_eq!(y[j], y_before[j], "col {j}");
+            assert_eq!(arr.weight(2, j), before.weight(2, j));
+        }
     }
 
     #[test]

@@ -7,8 +7,11 @@ use crate::device::params::DeviceParams;
 use crate::error::{Error, Result};
 use crate::mitigation::{MitigatedEngine, MitigationConfig};
 use crate::report::writer::ReportWriter;
+use crate::shard::FaultSpec;
 use crate::util::pool::Parallelism;
-use crate::vmm::{NativeEngine, SoftwareEngine, TiledEngine, VmmEngine, XlaEngine};
+use crate::vmm::{
+    NativeEngine, ShardedEngine, SoftwareEngine, TiledEngine, VmmEngine, XlaEngine,
+};
 
 // The type-erased handle moved to the vmm layer (the pipeline shares
 // it); re-exported here for existing `experiments::context::DynEngine`
@@ -56,6 +59,21 @@ impl Ctx {
             EngineKind::Tiled => DynEngine::new(
                 TiledEngine::with_tile(cfg.tile).with_parallelism(cfg.engine_parallelism()),
             ),
+            EngineKind::Sharded => {
+                let s = cfg.shard;
+                let mut engine = ShardedEngine::new(s.grid_r, s.grid_c)
+                    .with_parallelism(cfg.engine_parallelism())
+                    .with_checksum(s.checksum)
+                    .with_threshold(s.threshold);
+                if s.fault_rate > 0.0 {
+                    engine = engine.with_fault(FaultSpec {
+                        rate: s.fault_rate,
+                        level: s.fault_level as f32,
+                        seed: s.fault_seed,
+                    });
+                }
+                DynEngine::new(engine)
+            }
             EngineKind::Software => DynEngine::new(SoftwareEngine),
             EngineKind::Xla => DynEngine::new(XlaEngine::from_default_dir()?),
         };
@@ -160,6 +178,24 @@ mod tests {
         // apply their own mitigation configs.
         assert_eq!(ctx.base_engine.name(), "native");
         assert_eq!(ctx.mitigation.replicas, 2);
+    }
+
+    #[test]
+    fn from_config_sharded() {
+        let mut cfg = RunConfig {
+            engine: crate::config::EngineKind::Sharded,
+            population: 24,
+            ..RunConfig::default()
+        };
+        cfg.shard.grid_r = 4;
+        cfg.shard.fault_rate = 0.5;
+        let ctx = Ctx::from_config(&cfg).unwrap();
+        assert_eq!(ctx.engine.name(), "sharded");
+        // The sharded engine runs the protocol end-to-end.
+        let pop = ctx
+            .run_device(crate::device::presets::epiram().params)
+            .unwrap();
+        assert_eq!(pop.len(), 24 * 32);
     }
 
     #[test]

@@ -11,6 +11,7 @@ use crate::device::params::NonIdealities;
 use crate::device::presets::{ag_si, alox_hfo2, epiram, DevicePreset};
 use crate::error::Result;
 use crate::mitigation::{MitigatedEngine, MitigationConfig};
+use crate::pipeline::runner::mean_abs;
 use crate::report::table::{fnum, TextTable};
 use crate::util::csv::CsvTable;
 use crate::util::json::{obj, Json};
@@ -113,13 +114,6 @@ pub fn run(ctx: &Ctx) -> Result<Json> {
     ]);
     w.json("summary", &summary)?;
     Ok(summary)
-}
-
-fn mean_abs(errors: &[f64]) -> f64 {
-    if errors.is_empty() {
-        return f64::NAN;
-    }
-    errors.iter().map(|e| e.abs()).sum::<f64>() / errors.len() as f64
 }
 
 /// Cheap self-check used by `meliso run mitigation-sweep` consumers:

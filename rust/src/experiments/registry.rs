@@ -5,7 +5,7 @@ use crate::error::{Error, Result};
 use crate::util::json::Json;
 
 use super::context::Ctx;
-use super::{fig2, fig3, fig4, fig5, mitigation, pipeline, table1, table2, xtra};
+use super::{fig2, fig3, fig4, fig5, mitigation, pipeline, shard, table1, table2, xtra};
 
 /// Experiment descriptor.
 pub struct Entry {
@@ -114,6 +114,12 @@ pub fn entries() -> Vec<Entry> {
             paper: false,
             run: pipeline::run,
         },
+        Entry {
+            id: "shard-sweep",
+            title: "Extension: sharded VMM error/throughput vs grid x fault rate",
+            paper: false,
+            run: shard::run,
+        },
     ]
 }
 
@@ -182,6 +188,7 @@ mod tests {
         assert!(msg.contains("fig2a"), "{msg}");
         assert!(msg.contains("pipeline"), "{msg}");
         assert!(msg.contains("mitigation-sweep"), "{msg}");
+        assert!(msg.contains("shard-sweep"), "{msg}");
         let _ = std::fs::remove_dir_all(dir);
     }
 

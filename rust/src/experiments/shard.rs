@@ -1,0 +1,206 @@
+//! Extension experiment `shard-sweep`: VMM error and throughput vs
+//! shard grid × device × fault-injection rate, with the ABFT checksum
+//! reduction of [`crate::vmm::ShardedEngine`] measured both on and off.
+//!
+//! Each cell runs the paper protocol through a sharded engine and
+//! reports the error population alongside the engine's checksum
+//! telemetry (faults injected, detections, corrections, refused
+//! corrections).  At fault rates above zero the sweep adds a
+//! checksum-off leg, so the correction's error payoff — and its
+//! false-fire cost on clean runs — is measured on the same path, same
+//! workload, same injected faults.
+
+use crate::coordinator::{BenchmarkConfig, CalibrationMode, Coordinator};
+use crate::device::params::NonIdealities;
+use crate::device::presets::{ag_si, epiram, DevicePreset};
+use crate::error::Result;
+use crate::pipeline::runner::mean_abs;
+use crate::report::table::{fnum, TextTable};
+use crate::shard::FaultSpec;
+use crate::util::csv::CsvTable;
+use crate::util::json::{obj, Json};
+use crate::util::pool::Parallelism;
+use crate::vmm::{ShardedEngine, VmmEngine};
+
+use super::context::Ctx;
+
+/// Shard grids swept (the `1x1` grid is the unsharded baseline).
+pub const SWEEP_GRIDS: [(usize, usize); 3] = [(1, 1), (2, 2), (4, 4)];
+
+/// Fault-injection rates swept (per `(sample, shard)` cycle).
+pub const SWEEP_FAULT_RATES: [f64; 2] = [0.0, 0.25];
+
+/// Devices swept (the best and the paper's model system).
+fn sweep_devices() -> Vec<DevicePreset> {
+    vec![epiram(), ag_si()]
+}
+
+/// Run the sweep.
+pub fn run(ctx: &Ctx) -> Result<Json> {
+    let w = ctx.writer("shard-sweep");
+    let population = ctx.population.clamp(4, 200);
+    if population != ctx.population && !ctx.quiet {
+        eprintln!(
+            "shard-sweep: population capped at {population} (requested {})",
+            ctx.population
+        );
+    }
+    // Mirror the fan-out the context's engine was built with (see
+    // size-sweep): the sweep constructs its own engines.
+    let engine_par = Parallelism::Fixed(ctx.engine.internal_parallelism().max(1));
+
+    let mut t = TextTable::new([
+        "device", "grid", "fault rate", "checksum", "mean |e|", "variance", "inj",
+        "corr", "refused", "VMM/s",
+    ])
+    .with_title("Shard sweep: error vs shard grid x device x fault rate (32x32 protocol)");
+    let mut csv = CsvTable::new([
+        "device",
+        "grid_r",
+        "grid_c",
+        "fault_rate",
+        "checksum",
+        "mean_abs",
+        "variance",
+        "injected",
+        "detected",
+        "corrected",
+        "uncorrectable",
+        "vmm_per_s",
+    ]);
+    let mut rows = Vec::new();
+
+    for preset in sweep_devices() {
+        let device = preset.params.masked(NonIdealities::FULL);
+        for (gr, gc) in SWEEP_GRIDS {
+            for rate in SWEEP_FAULT_RATES {
+                // At nonzero fault rates, measure the reduction both
+                // ways; clean runs only need the checksum-on leg (its
+                // false-fire cost is visible against the 1x1 baseline).
+                let legs: &[bool] = if rate > 0.0 { &[true, false] } else { &[true] };
+                for &checksum in legs {
+                    let mut engine = ShardedEngine::new(gr, gc)
+                        .with_parallelism(engine_par)
+                        .with_checksum(checksum);
+                    if rate > 0.0 {
+                        engine = engine.with_fault(FaultSpec {
+                            rate,
+                            level: 1.0,
+                            seed: ctx.seed ^ 0x5A4D_4544,
+                        });
+                    }
+                    let stats = engine.stats();
+                    let mut bcfg = BenchmarkConfig::paper_default(device)
+                        .with_population(population)
+                        .with_seed(ctx.seed);
+                    bcfg.parallelism = ctx.parallelism;
+                    // No calibration batch: the checksum telemetry
+                    // counters cover every forward call, and the whole
+                    // point of this sweep is that the counts line up
+                    // with the measured population (every leg shares
+                    // the raw-decode mode, so rows stay comparable).
+                    bcfg.calibrate = CalibrationMode::None;
+                    let coord = Coordinator::new(engine);
+                    let (pop, tel) = coord.run_with_telemetry(&bcfg)?;
+                    let counts = stats.snapshot();
+                    let mabs = mean_abs(pop.errors());
+                    let variance = pop.stats().variance();
+                    let grid_label = format!("{gr}x{gc}");
+                    let cs_label = if checksum { "on" } else { "off" };
+                    t.push([
+                        preset.name.to_string(),
+                        grid_label.clone(),
+                        format!("{rate}"),
+                        cs_label.to_string(),
+                        fnum(mabs),
+                        fnum(variance),
+                        counts.injected.to_string(),
+                        counts.corrected.to_string(),
+                        counts.uncorrectable.to_string(),
+                        fnum(tel.throughput()),
+                    ]);
+                    csv.push([
+                        preset.id.to_string(),
+                        gr.to_string(),
+                        gc.to_string(),
+                        rate.to_string(),
+                        cs_label.to_string(),
+                        mabs.to_string(),
+                        variance.to_string(),
+                        counts.injected.to_string(),
+                        counts.detected.to_string(),
+                        counts.corrected.to_string(),
+                        counts.uncorrectable.to_string(),
+                        tel.throughput().to_string(),
+                    ]);
+                    rows.push(obj([
+                        ("device", Json::Str(preset.id.into())),
+                        ("grid_r", Json::Num(gr as f64)),
+                        ("grid_c", Json::Num(gc as f64)),
+                        ("fault_rate", Json::Num(rate)),
+                        ("checksum", Json::Bool(checksum)),
+                        ("mean_abs", Json::Num(mabs)),
+                        ("variance", Json::Num(variance)),
+                        ("injected", Json::Num(counts.injected as f64)),
+                        ("detected", Json::Num(counts.detected as f64)),
+                        ("corrected", Json::Num(counts.corrected as f64)),
+                        ("uncorrectable", Json::Num(counts.uncorrectable as f64)),
+                        ("vmm_per_s", Json::Num(tel.throughput())),
+                    ]));
+                }
+            }
+        }
+    }
+
+    w.echo(&t.render());
+    w.csv("series", &csv)?;
+    let summary = obj([
+        ("id", Json::Str("shard-sweep".into())),
+        ("samples", Json::Num(population as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    w.json("summary", &summary)?;
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_reports_all_cells_with_consistent_telemetry() {
+        let dir = std::env::temp_dir().join("meliso_shard_sweep_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ctx = Ctx::native(16, &dir);
+        let s = run(&ctx).unwrap();
+        let rows = s.get("rows").unwrap().as_arr().unwrap();
+        // 2 devices x 3 grids x (1 clean leg + 2 faulted legs).
+        assert_eq!(rows.len(), sweep_devices().len() * SWEEP_GRIDS.len() * 3);
+        let num = |r: &Json, k: &str| r.get(k).unwrap().as_f64().unwrap();
+        let mut injected_total = 0.0;
+        for r in rows {
+            assert!(num(r, "mean_abs").is_finite());
+            assert!(num(r, "variance") > 0.0);
+            let injected = num(r, "injected");
+            let detected = num(r, "detected");
+            let corrected = num(r, "corrected");
+            let uncorrectable = num(r, "uncorrectable");
+            assert_eq!(corrected + uncorrectable, detected);
+            let checksum = matches!(r.get("checksum"), Some(Json::Bool(true)));
+            if num(r, "fault_rate") == 0.0 {
+                assert_eq!(injected, 0.0);
+            } else {
+                injected_total += injected;
+            }
+            if !checksum {
+                assert_eq!(detected, 0.0, "checksum-off legs must not correct");
+            }
+        }
+        // rate 0.25 over hundreds of (sample, shard) cells: injections
+        // are statistically certain.
+        assert!(injected_total > 0.0);
+        assert!(dir.join("shard-sweep/series.csv").exists());
+        assert!(dir.join("shard-sweep/summary.json").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

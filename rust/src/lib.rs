@@ -30,8 +30,10 @@ pub mod error;
 pub mod experiments;
 pub mod mitigation;
 pub mod pipeline;
+pub mod perf;
 pub mod report;
 pub mod runtime;
+pub mod shard;
 pub mod solver;
 pub mod stats;
 pub mod testkit;

@@ -1,0 +1,370 @@
+//! The hotpath bench suite as a library: every layer of the stack,
+//! measured through [`crate::util::bench`] with **stable, slug-style
+//! benchmark names**, so the suite can run both as the
+//! `cargo bench --bench hotpath` target (full mode) and as the
+//! `meliso bench` subcommand (quick mode, writing `BENCH.json` for
+//! CI's `perf-smoke` soft-gate).
+//!
+//! Names are mode-independent on purpose: a quick-mode `BENCH.json`
+//! compares against a quick-mode baseline by name, and the recorded
+//! `items_per_iter` makes the per-mode workload explicit in the
+//! document itself.  Quick mode shrinks populations and sample counts
+//! (CI smoke budget); full mode keeps the historical workloads of the
+//! pre-PR-4 `hotpath` bench.
+
+use crate::coordinator::{BenchmarkConfig, Coordinator, WorkloadSpec};
+use crate::device::params::NonIdealities;
+use crate::device::presets;
+use crate::mitigation::{MitigatedEngine, MitigationConfig};
+use crate::pipeline::{Activation, NetworkSpec, PipelineOptions, PipelineRunner};
+use crate::shard::FaultSpec;
+use crate::stats::moments::Moments;
+use crate::util::bench::{bench, black_box, BenchOpts, BenchResult};
+use crate::vmm::{
+    DynEngine, NativeEngine, ShardedEngine, TiledEngine, VmmEngine, XlaEngine,
+};
+
+/// Suite execution options.
+#[derive(Debug, Clone, Default)]
+pub struct SuiteOpts {
+    /// Shrink workloads and sample counts to a CI smoke budget.
+    pub quick: bool,
+    /// Run only benchmarks whose name contains this substring.
+    pub filter: Option<String>,
+}
+
+/// One >2x-median regression against a baseline document.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Regression {
+    pub name: String,
+    pub baseline_median: f64,
+    pub current_median: f64,
+    /// `current / baseline` (always `> factor` for reported entries).
+    pub ratio: f64,
+}
+
+/// Compare suite results against a baseline by name and report every
+/// median that regressed by more than `factor` — the `perf-smoke`
+/// soft-gate (the caller warns; it never fails the build).  Benchmarks
+/// missing from either side are skipped: machines differ, suites grow.
+pub fn compare_to_baseline(
+    current: &[BenchResult],
+    baseline: &[BenchResult],
+    factor: f64,
+) -> Vec<Regression> {
+    let mut out = Vec::new();
+    for cur in current {
+        let Some(base) = baseline.iter().find(|b| b.name == cur.name) else {
+            continue;
+        };
+        if base.median <= 0.0 || !cur.median.is_finite() {
+            continue;
+        }
+        let ratio = cur.median / base.median;
+        if ratio > factor {
+            out.push(Regression {
+                name: cur.name.clone(),
+                baseline_median: base.median,
+                current_median: cur.median,
+                ratio,
+            });
+        }
+    }
+    out
+}
+
+struct Suite {
+    quick: bool,
+    filter: Option<String>,
+    results: Vec<BenchResult>,
+}
+
+impl Suite {
+    fn matches(&self, name: &str) -> bool {
+        match &self.filter {
+            Some(f) => name.contains(f.as_str()),
+            None => true,
+        }
+    }
+
+    /// Run one benchmark unless filtered out; quick mode caps the
+    /// measured samples.
+    fn go<F: FnMut()>(&mut self, name: &str, opts: BenchOpts, f: F) -> Option<BenchResult> {
+        if !self.matches(name) {
+            return None;
+        }
+        let opts = if self.quick {
+            BenchOpts { samples: opts.samples.min(3), warmup: 1, ..opts }
+        } else {
+            opts
+        };
+        let r = bench(name, opts, f);
+        self.results.push(r.clone());
+        Some(r)
+    }
+}
+
+/// Run the hotpath suite and return every measured result (in run
+/// order).  An empty return means the filter matched nothing.
+pub fn run_suite(opts: &SuiteOpts) -> Vec<BenchResult> {
+    let mut suite = Suite {
+        quick: opts.quick,
+        filter: opts.filter.clone(),
+        results: Vec::new(),
+    };
+    let quick = opts.quick;
+    let device = presets::ag_si().params.masked(NonIdealities::FULL);
+    let spec = WorkloadSpec::paper_default(1);
+    let base_n = if quick { 64 } else { 256 };
+    let batch = spec.chunk(0, base_n);
+    let items = Some(base_n as f64);
+    let std_opts = BenchOpts { samples: 10, warmup: 2, items_per_iter: items };
+
+    // L3: workload generation (w, x and 3 noise planes per sample).
+    suite.go("workload-gen", std_opts, || {
+        black_box(spec.chunk(0, base_n));
+    });
+
+    // L3: native physics engine — the sequential baseline vs the
+    // pool-fanned engine (per-worker scratch, shared pulse table).
+    let seq = suite.go("native-seq", std_opts, || {
+        black_box(NativeEngine::sequential().forward(&batch, &device).unwrap());
+    });
+    let par = suite.go("native-par", std_opts, || {
+        black_box(NativeEngine::default().forward(&batch, &device).unwrap());
+    });
+    if let (Some(seq), Some(par)) = (&seq, &par) {
+        println!(
+            "      native parallel speedup: {:.2}x samples/sec over sequential",
+            par.items_per_sec(base_n as f64) / seq.items_per_sec(base_n as f64)
+        );
+    }
+
+    // Mitigation pipeline: throughput cost of each strategy over the
+    // parallel native engine.
+    for (slug, spec_str) in [
+        ("mitigated-diff", "diff"),
+        ("mitigated-slice2", "slice:2"),
+        ("mitigated-avg4", "avg:4"),
+        ("mitigated-cal", "cal"),
+        ("mitigated-combo", "diff,slice:2,avg:4,cal"),
+    ] {
+        let eng = MitigatedEngine::new(
+            NativeEngine::default(),
+            MitigationConfig::parse(spec_str).unwrap(),
+        );
+        suite.go(
+            slug,
+            BenchOpts { samples: 5, warmup: 1, items_per_iter: items },
+            || {
+                black_box(eng.forward(&batch, &device).unwrap());
+            },
+        );
+    }
+
+    // Tiled engine: arbitrary-size populations over 32x32 tile grids.
+    let tiled = TiledEngine::default();
+    for size in [128usize, 256] {
+        let mut tspec = WorkloadSpec::paper_default(2);
+        tspec.rows = size;
+        tspec.cols = size;
+        let scale = if quick { 4 } else { 16 };
+        let samples = (scale * 128 * 128 / (size * size)).max(2);
+        let tb = tspec.chunk(0, samples);
+        suite.go(
+            &format!("tiled-{size}"),
+            BenchOpts { samples: 5, warmup: 1, items_per_iter: Some(samples as f64) },
+            || {
+                black_box(tiled.forward(&tb, &device).unwrap());
+            },
+        );
+    }
+
+    // Sharded engine: grid partitioning + checksum reduction cost at
+    // the paper geometry, plus a fault-campaign leg (injection +
+    // detection + correction on the same path).
+    for (gr, gc) in [(1usize, 1usize), (2, 2), (4, 4)] {
+        let eng = ShardedEngine::new(gr, gc);
+        suite.go(
+            &format!("sharded-{gr}x{gc}"),
+            BenchOpts { samples: 5, warmup: 1, items_per_iter: items },
+            || {
+                black_box(eng.forward(&batch, &device).unwrap());
+            },
+        );
+    }
+    let faulted = ShardedEngine::new(2, 2).with_fault(FaultSpec::stuck_at_on(0.05, 7));
+    suite.go(
+        "sharded-2x2-faulted",
+        BenchOpts { samples: 5, warmup: 1, items_per_iter: items },
+        || {
+            black_box(faulted.forward(&batch, &device).unwrap());
+        },
+    );
+
+    // Layered inference pipeline: deep VMM chains, plain vs mitigated.
+    let runner = PipelineRunner::new(DynEngine::new(NativeEngine::default()));
+    let popts = PipelineOptions::default();
+    let pipe_pop = if quick { 8 } else { 32 };
+    for depth in [4usize, 8] {
+        for (tag, mit) in [("", "none"), ("-mitigated", "diff,avg:2")] {
+            let mut net = NetworkSpec::uniform(depth, 32, Activation::Relu, 3)
+                .with_population(pipe_pop);
+            if mit != "none" {
+                net = net.with_mitigation(MitigationConfig::parse(mit).unwrap());
+            }
+            suite.go(
+                &format!("pipeline-d{depth}{tag}"),
+                BenchOpts {
+                    samples: 3,
+                    warmup: 1,
+                    items_per_iter: Some((pipe_pop * depth) as f64),
+                },
+                || {
+                    black_box(runner.run(&net, &device, &popts).unwrap());
+                },
+            );
+        }
+    }
+
+    // Software reference.
+    suite.go("software-vmm", std_opts, || {
+        black_box(crate::vmm::software_vmm_batch(&batch));
+    });
+
+    // L2+L1 through PJRT, when artifacts exist.
+    match XlaEngine::from_default_dir() {
+        Ok(engine) => match engine.runtime().warmup() {
+            Ok(_) => {
+                suite.go("xla-forward", std_opts, || {
+                    black_box(engine.forward(&batch, &device).unwrap());
+                });
+                let gp = vec![0.5f32; base_n * 32 * 32];
+                let gn = vec![0.25f32; base_n * 32 * 32];
+                let v = vec![0.1f32; base_n * 32];
+                suite.go("xla-raw-read", std_opts, || {
+                    black_box(engine.raw_vmm(&gp, &gn, &v, base_n).unwrap());
+                });
+                let pop = if quick { 128 } else { 1024 };
+                let cfg = BenchmarkConfig::paper_default(device).with_population(pop);
+                let coord = Coordinator::new(engine);
+                suite.go(
+                    "e2e-xla",
+                    BenchOpts { samples: 5, warmup: 1, items_per_iter: Some(pop as f64) },
+                    || {
+                        black_box(coord.run(&cfg).unwrap());
+                    },
+                );
+            }
+            Err(e) => eprintln!("(xla benches skipped: {e})"),
+        },
+        Err(e) => eprintln!("(xla benches skipped: {e})"),
+    }
+
+    // Stats reduction over a protocol-size error vector.
+    let errs: Vec<f64> = (0..32_000).map(|i| (i as f64 * 0.37).sin()).collect();
+    suite.go(
+        "stats-moments",
+        BenchOpts { samples: 10, warmup: 2, items_per_iter: Some(32_000.0) },
+        || {
+            black_box(Moments::from_slice(&errs));
+        },
+    );
+
+    // End-to-end coordinator runs.
+    let pop = if quick { 128 } else { 1024 };
+    let cfg = BenchmarkConfig::paper_default(device).with_population(pop);
+    let coord = Coordinator::new(NativeEngine::default());
+    suite.go(
+        "e2e-native",
+        BenchOpts { samples: 5, warmup: 1, items_per_iter: Some(pop as f64) },
+        || {
+            black_box(coord.run(&cfg).unwrap());
+        },
+    );
+
+    let tpop = if quick { 8 } else { 64 };
+    let mut cfg128 = BenchmarkConfig::paper_default(device).with_population(tpop);
+    cfg128.workload.rows = 128;
+    cfg128.workload.cols = 128;
+    cfg128.calibration_samples = 16;
+    let coord = Coordinator::new(TiledEngine::default());
+    suite.go(
+        "e2e-tiled-128",
+        BenchOpts { samples: 3, warmup: 1, items_per_iter: Some(tpop as f64) },
+        || {
+            black_box(coord.run(&cfg128).unwrap());
+        },
+    );
+
+    let spop = if quick { 8 } else { 64 };
+    let mut scfg = BenchmarkConfig::paper_default(device).with_population(spop);
+    scfg.workload.rows = 128;
+    scfg.workload.cols = 128;
+    scfg.calibration_samples = 16;
+    let coord = Coordinator::new(ShardedEngine::new(4, 4));
+    suite.go(
+        "e2e-sharded-128",
+        BenchOpts { samples: 3, warmup: 1, items_per_iter: Some(spop as f64) },
+        || {
+            black_box(coord.run(&scfg).unwrap());
+        },
+    );
+
+    suite.results
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(name: &str, median: f64) -> BenchResult {
+        BenchResult {
+            name: name.into(),
+            median,
+            mean: median,
+            min: median,
+            max: median,
+            samples: 3,
+            items_per_iter: None,
+        }
+    }
+
+    #[test]
+    fn quick_filtered_suite_runs_and_reports() {
+        // One cheap benchmark end-to-end through the real harness.
+        let results = run_suite(&SuiteOpts {
+            quick: true,
+            filter: Some("stats-moments".into()),
+        });
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].name, "stats-moments");
+        assert!(results[0].median > 0.0);
+        assert_eq!(results[0].items_per_iter, Some(32_000.0));
+    }
+
+    #[test]
+    fn unmatched_filter_returns_empty() {
+        let results = run_suite(&SuiteOpts {
+            quick: true,
+            filter: Some("no-such-bench-name".into()),
+        });
+        assert!(results.is_empty());
+    }
+
+    #[test]
+    fn baseline_comparison_flags_only_regressions() {
+        let baseline = vec![result("a", 1.0), result("b", 1.0), result("c", 1.0)];
+        let current = vec![
+            result("a", 2.5),  // 2.5x: regression
+            result("b", 1.9),  // within 2x
+            result("d", 50.0), // not in baseline: skipped
+        ];
+        let regs = compare_to_baseline(&current, &baseline, 2.0);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].name, "a");
+        assert!((regs[0].ratio - 2.5).abs() < 1e-12);
+        // Faster-than-baseline never fires.
+        assert!(compare_to_baseline(&[result("a", 0.1)], &baseline, 2.0).is_empty());
+    }
+}

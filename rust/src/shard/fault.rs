@@ -1,0 +1,99 @@
+//! Deterministic gross-fault injection for the sharded engine.
+//!
+//! The fault model is the one the checksum reduction targets: a whole
+//! bit line of one shard goes gross — stuck at a differential rail
+//! (`level = ±1`) or dead (`level = 0`, an open line reading zero
+//! current).  Faults are drawn per `(sample, shard)` cell from a
+//! dedicated seed, so whether a given cell faults — and which column —
+//! is a pure function of `(seed, sample, shard)`: independent of the
+//! thread count, chunk sizes, and scheduling order, which keeps the
+//! engine's bit-determinism contract intact under injection.
+
+use crate::util::rng::Xoshiro256;
+
+/// Gross-fault injection policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    /// Probability that a given `(sample, shard)` programming cycle
+    /// suffers one faulty bit line.
+    pub rate: f64,
+    /// Stuck differential conductance level in `[-1, 1]`: `1.0` is a
+    /// rail-stuck line (every cell reads as a full-scale `+1` weight),
+    /// `0.0` a dead line.
+    pub level: f32,
+    /// Root seed of the fault stream (independent of the workload
+    /// seed, as real defects are independent of the data).
+    pub seed: u64,
+}
+
+impl FaultSpec {
+    /// A rail-stuck-line policy at the given rate.
+    pub fn stuck_at_on(rate: f64, seed: u64) -> Self {
+        Self { rate, level: 1.0, seed }
+    }
+
+    /// Decide whether shard `shard` of sample `sample` faults, and if
+    /// so which of its `clen` data columns.  Deterministic in
+    /// `(seed, sample, shard)`.
+    pub fn draw(&self, sample: usize, shard: usize, clen: usize) -> Option<usize> {
+        if self.rate <= 0.0 || clen == 0 {
+            return None;
+        }
+        let mut rng = Xoshiro256::seed_from_u64(self.seed)
+            .child(sample as u64)
+            .child(shard as u64);
+        if rng.uniform() < self.rate {
+            Some(rng.below(clen as u64) as usize)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn draw_is_deterministic() {
+        let f = FaultSpec::stuck_at_on(0.5, 42);
+        for sample in 0..20 {
+            for shard in 0..4 {
+                assert_eq!(f.draw(sample, shard, 8), f.draw(sample, shard, 8));
+            }
+        }
+    }
+
+    #[test]
+    fn rate_zero_never_fires_rate_one_always() {
+        let off = FaultSpec::stuck_at_on(0.0, 7);
+        let on = FaultSpec::stuck_at_on(1.0, 7);
+        for sample in 0..50 {
+            assert_eq!(off.draw(sample, 0, 8), None);
+            let col = on.draw(sample, 0, 8).expect("rate 1.0 must fire");
+            assert!(col < 8);
+        }
+    }
+
+    #[test]
+    fn rate_is_approximately_honored() {
+        let f = FaultSpec::stuck_at_on(0.25, 99);
+        let n = 4000;
+        let hits = (0..n).filter(|&s| f.draw(s, 0, 16).is_some()).count();
+        let p = hits as f64 / n as f64;
+        assert!((p - 0.25).abs() < 0.03, "p={p}");
+    }
+
+    #[test]
+    fn cells_are_independent() {
+        let f = FaultSpec::stuck_at_on(0.5, 5);
+        // Different shards of the same sample must not share the draw.
+        let a: Vec<_> = (0..64).map(|s| f.draw(s, 0, 8)).collect();
+        let b: Vec<_> = (0..64).map(|s| f.draw(s, 1, 8)).collect();
+        assert_ne!(a, b);
+        // Different seeds reshuffle everything.
+        let g = FaultSpec::stuck_at_on(0.5, 6);
+        let c: Vec<_> = (0..64).map(|s| g.draw(s, 0, 8)).collect();
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,173 @@
+//! Shard grid geometry: partition one logical `rows x cols` weight
+//! matrix into an `R x C` grid of independently programmed crossbar
+//! shards with near-equal block sizes.
+//!
+//! Unlike the tiled engine (fixed *physical* tile size, grid derived
+//! from the workload), the shard grid fixes the *grid* and derives the
+//! block sizes — the deployment question is "how many crossbars do I
+//! spread this matrix over", not "how big is one crossbar".  Blocks
+//! follow the same near-equal split as
+//! [`crate::util::pool::partition_blocks`]: `base = n / parts` with the
+//! first `n % parts` blocks one element longer, in index order.
+
+use crate::error::{Error, Result};
+
+/// One shard's rectangle of the logical matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardRegion {
+    /// First logical row covered by this shard.
+    pub r0: usize,
+    /// Rows covered.
+    pub rlen: usize,
+    /// First logical column covered by this shard.
+    pub c0: usize,
+    /// Columns covered.
+    pub clen: usize,
+}
+
+/// A validated `R x C` partition of a `rows x cols` matrix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardGrid {
+    rows: usize,
+    cols: usize,
+    grid_r: usize,
+    grid_c: usize,
+    row_blocks: Vec<(usize, usize)>,
+    col_blocks: Vec<(usize, usize)>,
+}
+
+impl ShardGrid {
+    /// Partition `rows x cols` into `grid_r x grid_c` shards.  Every
+    /// shard must cover at least one row and one column, so the grid
+    /// may not exceed the matrix in either dimension.
+    pub fn new(rows: usize, cols: usize, grid_r: usize, grid_c: usize) -> Result<Self> {
+        if grid_r == 0 || grid_c == 0 {
+            return Err(Error::Config("shard grid must be positive".into()));
+        }
+        if grid_r > rows || grid_c > cols {
+            return Err(Error::Config(format!(
+                "shard grid {grid_r}x{grid_c} exceeds the {rows}x{cols} workload \
+                 (every shard needs at least one row and one column)"
+            )));
+        }
+        Ok(Self {
+            rows,
+            cols,
+            grid_r,
+            grid_c,
+            row_blocks: blocks(rows, grid_r),
+            col_blocks: blocks(cols, grid_c),
+        })
+    }
+
+    /// Total shards in the grid.
+    pub fn count(&self) -> usize {
+        self.grid_r * self.grid_c
+    }
+
+    /// Grid shape `(R, C)`.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.grid_r, self.grid_c)
+    }
+
+    /// Region of shard `index` (row-major over the grid:
+    /// `index = sr * C + sc`).
+    pub fn region(&self, index: usize) -> ShardRegion {
+        let (sr, sc) = (index / self.grid_c, index % self.grid_c);
+        let (r0, rlen) = self.row_blocks[sr];
+        let (c0, clen) = self.col_blocks[sc];
+        ShardRegion { r0, rlen, c0, clen }
+    }
+
+    /// Largest shard row count (scratch sizing).
+    pub fn max_rlen(&self) -> usize {
+        self.row_blocks.iter().map(|&(_, l)| l).max().unwrap_or(0)
+    }
+
+    /// Largest shard column count (scratch sizing).
+    pub fn max_clen(&self) -> usize {
+        self.col_blocks.iter().map(|&(_, l)| l).max().unwrap_or(0)
+    }
+}
+
+/// Near-equal `(start, len)` blocks covering `0..n` in order.
+fn blocks(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        out.push((start, len));
+        start += len;
+    }
+    out
+}
+
+/// Parse an `RxC` grid spec (e.g. `"2x4"`), as used by `--shards` and
+/// the `[shard] grid` TOML key.
+pub fn parse_grid(s: &str) -> Result<(usize, usize)> {
+    let bad = || Error::Config(format!("shard grid must be RxC with R,C >= 1 (got '{s}')"));
+    let spec = s.trim().to_ascii_lowercase();
+    let (r, c) = spec.split_once('x').ok_or_else(bad)?;
+    let r: usize = r.trim().parse().map_err(|_| bad())?;
+    let c: usize = c.trim().parse().map_err(|_| bad())?;
+    if r == 0 || c == 0 {
+        return Err(bad());
+    }
+    Ok((r, c))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_matrix_in_order() {
+        let g = ShardGrid::new(70, 33, 3, 2).unwrap();
+        assert_eq!(g.count(), 6);
+        assert_eq!(g.shape(), (3, 2));
+        // Row blocks: 24, 23, 23; col blocks: 17, 16.
+        let mut next_row = vec![0usize; 2];
+        for sr in 0..3 {
+            for sc in 0..2 {
+                let reg = g.region(sr * 2 + sc);
+                assert_eq!(reg.r0, next_row[sc], "shard {sr}x{sc}");
+                assert!(reg.rlen > 0 && reg.clen > 0);
+                next_row[sc] = reg.r0 + reg.rlen;
+            }
+        }
+        assert_eq!(next_row, vec![70, 70]);
+        let cols: usize = (0..2).map(|sc| g.region(sc).clen).sum();
+        assert_eq!(cols, 33);
+        assert_eq!(g.max_rlen(), 24);
+        assert_eq!(g.max_clen(), 17);
+    }
+
+    #[test]
+    fn unit_grid_is_the_whole_matrix() {
+        let g = ShardGrid::new(32, 32, 1, 1).unwrap();
+        assert_eq!(g.count(), 1);
+        assert_eq!(g.region(0), ShardRegion { r0: 0, rlen: 32, c0: 0, clen: 32 });
+    }
+
+    #[test]
+    fn degenerate_grids_rejected() {
+        assert!(ShardGrid::new(32, 32, 0, 2).is_err());
+        assert!(ShardGrid::new(32, 32, 2, 0).is_err());
+        assert!(ShardGrid::new(8, 8, 9, 1).is_err());
+        assert!(ShardGrid::new(8, 8, 1, 9).is_err());
+        // One shard per cell is the finest legal partition.
+        assert!(ShardGrid::new(8, 8, 8, 8).is_ok());
+    }
+
+    #[test]
+    fn parse_grid_specs() {
+        assert_eq!(parse_grid("2x4").unwrap(), (2, 4));
+        assert_eq!(parse_grid(" 1X1 ").unwrap(), (1, 1));
+        assert!(parse_grid("2").is_err());
+        assert!(parse_grid("0x2").is_err());
+        assert!(parse_grid("2x").is_err());
+        assert!(parse_grid("ax2").is_err());
+    }
+}

@@ -1,0 +1,31 @@
+//! Sharded multi-crossbar execution support: grid partitioning,
+//! ABFT-style checksum coding, and deterministic gross-fault injection.
+//!
+//! This is the geometry/coding layer under
+//! [`crate::vmm::ShardedEngine`], which partitions one large VMM across
+//! a grid of independently programmed crossbar shards and reduces the
+//! partial sums with per-shard checksum verification — the
+//! scalable/distributed direction of arXiv:2508.13298, where the error
+//! correction is integrated into the partitioning rather than bolted
+//! onto single devices (contrast [`crate::mitigation`], whose
+//! strategies act per device pair/cell and cannot express a
+//! shard-granular gross fault).
+//!
+//! * [`grid`] — [`ShardGrid`]: near-equal `R x C` block partition of a
+//!   `rows x cols` matrix, plus the `"RxC"` spec parser behind
+//!   `--shards` and the `[shard]` TOML section.
+//! * [`checksum`] — [`ChecksumCode`]: sum + binary-locator checksum
+//!   columns appended to each shard at program time; verification
+//!   locates and reconstructs a single gross per-shard fault at
+//!   reduction time.
+//! * [`fault`] — [`FaultSpec`]: seeded stuck/dead bit-line injection,
+//!   a pure function of `(seed, sample, shard)` so determinism
+//!   guarantees survive fault campaigns.
+
+pub mod checksum;
+pub mod fault;
+pub mod grid;
+
+pub use checksum::{extra_cols, locator_count, ChecksumCode, Verdict};
+pub use fault::FaultSpec;
+pub use grid::{parse_grid, ShardGrid, ShardRegion};

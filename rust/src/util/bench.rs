@@ -5,8 +5,22 @@
 //! Output format is one line per benchmark:
 //! `bench <name> ... median 12.345ms  mean 12.5ms  min 12.1ms  (n=10)`
 //! plus an optional throughput line when `items_per_iter` is set.
+//!
+//! Results are also machine-readable: [`BenchResult`] round-trips
+//! through [`crate::util::json`], and [`write_bench_json`] /
+//! [`read_bench_json`] serialize a whole suite as one `BENCH.json`
+//! document (schema documented in `rust/DESIGN.md` §13) — the format
+//! `meliso bench` emits and CI's `perf-smoke` job archives and
+//! soft-gates against.
 
+use std::path::Path;
 use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::util::json::{obj, Json};
+
+/// Schema version of the `BENCH.json` document.
+pub const BENCH_SCHEMA_VERSION: f64 = 1.0;
 
 /// One benchmark's options.
 #[derive(Debug, Clone, Copy)]
@@ -34,12 +48,104 @@ pub struct BenchResult {
     pub min: f64,
     pub max: f64,
     pub samples: usize,
+    /// Items one iteration processes, when the benchmark declared a
+    /// throughput denominator ([`BenchOpts::items_per_iter`]).
+    pub items_per_iter: Option<f64>,
 }
 
 impl BenchResult {
     pub fn items_per_sec(&self, items: f64) -> f64 {
         items / self.median
     }
+
+    /// Median-based throughput, when the benchmark declared an item
+    /// count.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|items| self.items_per_sec(items))
+    }
+
+    /// Serialize to the `BENCH.json` result schema.
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("name", Json::Str(self.name.clone())),
+            ("median_secs", Json::Num(self.median)),
+            ("mean_secs", Json::Num(self.mean)),
+            ("min_secs", Json::Num(self.min)),
+            ("max_secs", Json::Num(self.max)),
+            ("samples", Json::Num(self.samples as f64)),
+            (
+                "items_per_iter",
+                self.items_per_iter.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            (
+                "items_per_s",
+                self.throughput().map(Json::Num).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    /// Parse one result back from its `BENCH.json` entry.
+    pub fn from_json(v: &Json) -> Result<BenchResult> {
+        let field = |key: &str| -> Result<f64> {
+            v.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| Error::Parse(format!("bench result missing '{key}'")))
+        };
+        Ok(BenchResult {
+            name: v
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Parse("bench result missing 'name'".into()))?
+                .to_string(),
+            median: field("median_secs")?,
+            mean: field("mean_secs")?,
+            min: field("min_secs")?,
+            max: field("max_secs")?,
+            samples: field("samples")? as usize,
+            items_per_iter: v.get("items_per_iter").and_then(Json::as_f64),
+        })
+    }
+}
+
+/// Serialize a bench suite as one `BENCH.json` document (pretty,
+/// versioned — see `rust/DESIGN.md` §13 for the schema contract).
+pub fn bench_suite_json(results: &[BenchResult]) -> Json {
+    obj([
+        ("version", Json::Num(BENCH_SCHEMA_VERSION)),
+        (
+            "results",
+            Json::Arr(results.iter().map(BenchResult::to_json).collect()),
+        ),
+    ])
+}
+
+/// Write `BENCH.json` for a suite, creating parent directories.
+pub fn write_bench_json(results: &[BenchResult], path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, bench_suite_json(results).to_string_pretty())?;
+    Ok(())
+}
+
+/// Read a `BENCH.json` document back into results.
+pub fn read_bench_json(path: &Path) -> Result<Vec<BenchResult>> {
+    let doc = Json::parse(&std::fs::read_to_string(path)?)?;
+    let version = doc
+        .get("version")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| Error::Parse("BENCH.json missing 'version'".into()))?;
+    if version > BENCH_SCHEMA_VERSION {
+        return Err(Error::Parse(format!(
+            "BENCH.json schema version {version} is newer than this binary ({BENCH_SCHEMA_VERSION})"
+        )));
+    }
+    doc.get("results")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Parse("BENCH.json missing 'results'".into()))?
+        .iter()
+        .map(BenchResult::from_json)
+        .collect()
 }
 
 fn pretty(secs: f64) -> String {
@@ -76,6 +182,7 @@ pub fn bench<F: FnMut()>(name: &str, opts: BenchOpts, mut f: F) -> BenchResult {
         min: times[0],
         max: *times.last().unwrap(),
         samples: times.len(),
+        items_per_iter: opts.items_per_iter,
     };
     println!(
         "bench {name:<44} median {:>10}  mean {:>10}  min {:>10}  (n={})",
@@ -128,5 +235,79 @@ mod tests {
         assert!(pretty(5e-5).ends_with("us"));
         assert!(pretty(5e-2).ends_with("ms"));
         assert!(pretty(5.0).ends_with('s'));
+    }
+
+    fn sample_results() -> Vec<BenchResult> {
+        vec![
+            BenchResult {
+                name: "native-par".into(),
+                median: 0.0125,
+                mean: 0.013,
+                min: 0.012,
+                max: 0.016,
+                samples: 10,
+                items_per_iter: Some(256.0),
+            },
+            BenchResult {
+                name: "stats-moments".into(),
+                median: 2.5e-4,
+                mean: 2.6e-4,
+                min: 2.4e-4,
+                max: 3.0e-4,
+                samples: 5,
+                items_per_iter: None,
+            },
+        ]
+    }
+
+    #[test]
+    fn result_json_roundtrip_preserves_fields() {
+        for r in sample_results() {
+            let back = BenchResult::from_json(&r.to_json()).unwrap();
+            assert_eq!(back.name, r.name);
+            assert_eq!(back.median, r.median);
+            assert_eq!(back.mean, r.mean);
+            assert_eq!(back.min, r.min);
+            assert_eq!(back.max, r.max);
+            assert_eq!(back.samples, r.samples);
+            assert_eq!(back.items_per_iter, r.items_per_iter);
+            assert_eq!(back.throughput(), r.throughput());
+        }
+    }
+
+    #[test]
+    fn bench_json_file_roundtrip() {
+        let dir = std::env::temp_dir().join("meliso_bench_json_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("BENCH.json");
+        let results = sample_results();
+        write_bench_json(&results, &path).unwrap();
+        // The document is plain parseable JSON with the schema header.
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("version").unwrap().as_f64(), Some(BENCH_SCHEMA_VERSION));
+        let back = read_bench_json(&path).unwrap();
+        assert_eq!(back.len(), results.len());
+        assert_eq!(back[0].name, "native-par");
+        assert_eq!(back[0].median, 0.0125);
+        assert_eq!(back[0].items_per_iter, Some(256.0));
+        assert_eq!(back[1].items_per_iter, None);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn malformed_bench_json_rejected() {
+        let dir = std::env::temp_dir().join("meliso_bench_json_bad_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH.json");
+        std::fs::write(&path, "{\"results\": []}").unwrap(); // no version
+        assert!(read_bench_json(&path).is_err());
+        std::fs::write(&path, "{\"version\": 99, \"results\": []}").unwrap();
+        assert!(read_bench_json(&path).is_err());
+        std::fs::write(&path, "{\"version\": 1, \"results\": [{\"name\": \"x\"}]}").unwrap();
+        assert!(read_bench_json(&path).is_err()); // missing stats
+        std::fs::write(&path, "{\"version\": 1, \"results\": []}").unwrap();
+        assert_eq!(read_bench_json(&path).unwrap().len(), 0);
+        let _ = std::fs::remove_dir_all(dir);
     }
 }

@@ -7,17 +7,22 @@
 //!   pool; runs without `make artifacts`.
 //! * [`TiledEngine`] — arbitrary-size workloads over a grid of physical
 //!   crossbar tiles (64x64 through 512x512 and beyond).
+//! * [`ShardedEngine`] — one VMM partitioned across a grid of
+//!   independently programmed crossbar shards, with ABFT-style checksum
+//!   detection/correction of gross shard faults in the reduction.
 //! * [`XlaEngine`] — executes the AOT-lowered L2/L1 pipeline through
 //!   PJRT; the production hot path (requires the `xla` binding).
 
 pub mod engine;
 pub mod native;
+pub mod sharded;
 pub mod software;
 pub mod tiled;
 pub mod xla_engine;
 
 pub use engine::{DynEngine, VmmBatch, VmmEngine, VmmOutput};
 pub use native::NativeEngine;
+pub use sharded::{ShardCounts, ShardStats, ShardedEngine, DEFAULT_CHECKSUM_THRESHOLD};
 pub use software::{software_vmm_batch, software_vmm_single, SoftwareEngine};
 pub use tiled::TiledEngine;
 pub use xla_engine::XlaEngine;

@@ -1,0 +1,477 @@
+//! Sharded multi-crossbar engine: partition each sample's weight
+//! matrix into an `R x C` grid of independently programmed crossbar
+//! shards ([`crate::shard::ShardGrid`]), compute the shard partials in
+//! parallel, and reduce them with an ABFT-style checksum check
+//! ([`crate::shard::ChecksumCode`]) that detects — and for a single
+//! gross per-shard fault, corrects — stuck/dead bit lines **before**
+//! the partials are accumulated into the output.  This is the
+//! scalable/distributed execution model of arXiv:2508.13298 with the
+//! error correction integrated into the partitioning, a mitigation the
+//! per-device strategies in [`crate::mitigation`] cannot express.
+//!
+//! ## Physics
+//!
+//! Each shard is its own programming cycle over its slice of the
+//! logical weight/noise planes, with the per-cycle severity normalized
+//! over the shard's real cells — the same sub-block contract as
+//! [`crate::crossbar::tile::TiledCrossbar`], so with a `1x1` grid (and
+//! no correction firing) the output is **bit-identical** to
+//! [`super::NativeEngine`].  Checksum columns are appended to the
+//! shard's array with zero programming noise, modeling verified
+//! (closed-loop trimmed) reference lines: real ABFT deployments
+//! program the checksum lines with write–verify because the whole
+//! correction hinges on them.  They still pass through the device's
+//! quantization, so the check sees honest encode error.
+//!
+//! ## Detection threshold
+//!
+//! The sum check accumulates the analog error of all `clen` data
+//! columns, so its clean-run floor grows like
+//! `sqrt(rlen * clen) * sigma_cell`, while a gross stuck-line fault
+//! grows like `rlen * level / 2`.  The engine therefore scales its
+//! [`ShardedEngine::threshold`] factor by `sqrt(rlen * clen)`:
+//! `abs_threshold = threshold * sqrt(shard cells)`.  The default
+//! ([`DEFAULT_CHECKSUM_THRESHOLD`]) balances false fires against missed
+//! faults on the Table I devices; deployments with quieter devices (or
+//! mitigated programming) should lower it, and the `shard-sweep`
+//! experiment measures exactly this operating curve.
+//!
+//! ## Determinism
+//!
+//! Shard partials are fanned over the scoped pool in `(sample, shard)`
+//! jobs, each writing only its own slice; fault draws are pure
+//! functions of `(fault seed, sample, shard)`; and the
+//! verify-correct-accumulate reduction runs on the calling thread in
+//! fixed shard order.  The result is bit-identical for any thread
+//! count (`rust/tests/integration_sharded.rs` enforces this).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::crossbar::array::{CrossbarArray, ProgramNoise, PulseTable};
+use crate::device::params::DeviceParams;
+use crate::error::Result;
+use crate::shard::{ChecksumCode, FaultSpec, ShardGrid, ShardRegion, Verdict};
+use crate::util::pool::{run_blocked, Parallelism};
+
+use super::engine::{VmmBatch, VmmEngine, VmmOutput};
+use super::software::software_vmm_batch;
+
+/// Default detection-threshold factor (scaled by `sqrt(shard cells)`;
+/// see the module docs).  Chosen from the operating curve: a rail
+/// fault shifts the sum check by `~rlen/2` while the clean floor sits
+/// at the accumulated per-cell noise, so `0.35 * sqrt(cells)` (≈ 11 at
+/// a 32x32 shard vs a ~16 mean fault) detects ~90% of rail faults on
+/// quiet-to-moderate devices with near-zero false fires; on very noisy
+/// devices detection is genuinely marginal — the `shard-sweep`
+/// experiment measures exactly this.
+pub const DEFAULT_CHECKSUM_THRESHOLD: f64 = 0.35;
+
+/// Checksum telemetry counters, shared by every clone of an engine
+/// (and with the [`crate::coordinator::Coordinator`] it is moved into).
+/// Counts accumulate across `forward` calls until [`ShardStats::reset`].
+#[derive(Debug, Default)]
+pub struct ShardStats {
+    injected: AtomicU64,
+    detected: AtomicU64,
+    corrected: AtomicU64,
+    uncorrectable: AtomicU64,
+}
+
+impl ShardStats {
+    /// Consistent snapshot of the counters.
+    pub fn snapshot(&self) -> ShardCounts {
+        ShardCounts {
+            injected: self.injected.load(Ordering::Relaxed),
+            detected: self.detected.load(Ordering::Relaxed),
+            corrected: self.corrected.load(Ordering::Relaxed),
+            uncorrectable: self.uncorrectable.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero all counters.
+    pub fn reset(&self) {
+        self.injected.store(0, Ordering::Relaxed);
+        self.detected.store(0, Ordering::Relaxed);
+        self.corrected.store(0, Ordering::Relaxed);
+        self.uncorrectable.store(0, Ordering::Relaxed);
+    }
+}
+
+/// One snapshot of [`ShardStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardCounts {
+    /// Faults injected by the configured [`FaultSpec`].
+    pub injected: u64,
+    /// Shard partials whose sum check fired.
+    pub detected: u64,
+    /// Detections that decoded to a single column and were corrected.
+    pub corrected: u64,
+    /// Detections with an inconsistent locator pattern, left untouched.
+    pub uncorrectable: u64,
+}
+
+/// Sharded multi-crossbar engine with checksum error correction.
+#[derive(Debug, Clone)]
+pub struct ShardedEngine {
+    /// Shard grid rows (row blocks of the weight matrix).
+    pub grid_r: usize,
+    /// Shard grid columns (column blocks of the weight matrix).
+    pub grid_c: usize,
+    /// How many workers one `forward` call fans `(sample, shard)` jobs
+    /// across.
+    pub par: Parallelism,
+    /// Append checksum columns and verify/correct at reduction time.
+    pub checksum: bool,
+    /// Detection-threshold factor, scaled by `sqrt(shard cells)` at
+    /// verification (see the module docs).
+    pub threshold: f64,
+    /// Optional gross-fault injection policy.
+    pub fault: Option<FaultSpec>,
+    stats: Arc<ShardStats>,
+}
+
+impl Default for ShardedEngine {
+    fn default() -> Self {
+        Self::new(2, 2)
+    }
+}
+
+impl ShardedEngine {
+    /// Engine over an `grid_r x grid_c` shard grid with checksum
+    /// correction on at the default threshold.
+    pub fn new(grid_r: usize, grid_c: usize) -> Self {
+        Self {
+            grid_r,
+            grid_c,
+            par: Parallelism::Auto,
+            checksum: true,
+            threshold: DEFAULT_CHECKSUM_THRESHOLD,
+            fault: None,
+            stats: Arc::new(ShardStats::default()),
+        }
+    }
+
+    /// Set the engine-level parallelism.
+    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
+        self.par = par;
+        self
+    }
+
+    /// Enable or disable the checksum columns + reduction check.
+    pub fn with_checksum(mut self, on: bool) -> Self {
+        self.checksum = on;
+        self
+    }
+
+    /// Set the detection-threshold factor.
+    pub fn with_threshold(mut self, threshold: f64) -> Self {
+        self.threshold = threshold;
+        self
+    }
+
+    /// Attach a fault-injection policy.
+    pub fn with_fault(mut self, fault: FaultSpec) -> Self {
+        self.fault = Some(fault);
+        self
+    }
+
+    /// Shared telemetry handle (survives moving the engine into a
+    /// coordinator).
+    pub fn stats(&self) -> Arc<ShardStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// Current counter snapshot.
+    pub fn counts(&self) -> ShardCounts {
+        self.stats.snapshot()
+    }
+}
+
+/// Per-worker reusable programming scratch for one augmented shard.
+struct ShardScratch {
+    arr: CrossbarArray,
+    noise: ProgramNoise,
+    w: Vec<f32>,
+    x: Vec<f32>,
+}
+
+impl ShardScratch {
+    fn new(max_r: usize, width: usize) -> Self {
+        Self {
+            arr: CrossbarArray::zeroed(max_r, width),
+            noise: ProgramNoise::zeros(max_r * width),
+            w: vec![0.0; max_r * width],
+            x: vec![0.0; max_r],
+        }
+    }
+}
+
+/// Copy shard region `reg` of a logical `(_, cols)` plane into the
+/// scratch plane of row stride `width`, zero-filling everything else
+/// (padded rows/columns and the checksum columns' noise).
+fn gather_region(src: &[f32], cols: usize, reg: &ShardRegion, width: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    for i in 0..reg.rlen {
+        let s0 = (reg.r0 + i) * cols + reg.c0;
+        out[i * width..i * width + reg.clen].copy_from_slice(&src[s0..s0 + reg.clen]);
+    }
+}
+
+impl VmmEngine for ShardedEngine {
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn forward(&self, batch: &VmmBatch, params: &DeviceParams) -> Result<VmmOutput> {
+        batch.check()?;
+        let (b, r, c) = (batch.batch, batch.rows, batch.cols);
+        let grid = ShardGrid::new(r, c, self.grid_r, self.grid_c)?;
+        let nshards = grid.count();
+        let max_r = grid.max_rlen();
+        // Scratch width covers the widest shard plus its checksum
+        // columns; every job's partial slice shares this stride.
+        let extra_max = if self.checksum {
+            crate::shard::extra_cols(grid.max_clen())
+        } else {
+            0
+        };
+        let width = grid.max_clen() + extra_max;
+        let table = PulseTable::new(params, false);
+        let stats = &self.stats;
+        let checksum = self.checksum;
+        let fault = self.fault;
+        // One code per shard index (shared by every sample's job and
+        // the reduction): a grid has at most two distinct column-block
+        // widths, so per-job construction would be pure waste.
+        let codes: Vec<ChecksumCode> = if checksum {
+            (0..nshards)
+                .map(|k| ChecksumCode::new(grid.region(k).clen))
+                .collect()
+        } else {
+            Vec::new()
+        };
+
+        // Parallel phase: one job per (sample, shard), each programming
+        // its augmented shard array and reading its partial into its
+        // own stride-`width` slice — bit-deterministic for any pool
+        // width.
+        let mut partials = run_blocked(
+            self.par,
+            b * nshards,
+            width,
+            || ShardScratch::new(max_r, width),
+            |q, scratch, out| {
+                let (s, k) = (q / nshards, q % nshards);
+                let reg = grid.region(k);
+                gather_region(batch.w_of(s), c, &reg, width, &mut scratch.w);
+                gather_region(batch.z_of(s, 0), c, &reg, width, &mut scratch.noise.z0);
+                gather_region(batch.z_of(s, 1), c, &reg, width, &mut scratch.noise.z1);
+                gather_region(batch.z_of(s, 2), c, &reg, width, &mut scratch.noise.z2);
+                if checksum {
+                    let code = &codes[k];
+                    for i in 0..reg.rlen {
+                        let row = &mut scratch.w[i * width..i * width + reg.clen + code.extra()];
+                        let (data, cs) = row.split_at_mut(reg.clen);
+                        code.encode_row(data, cs);
+                    }
+                }
+                let active = reg.rlen * reg.clen;
+                scratch
+                    .arr
+                    .reprogram_active(&scratch.w, params, &scratch.noise, &table, active);
+                if let Some(f) = fault {
+                    if let Some(col) = f.draw(s, k, reg.clen) {
+                        scratch.arr.force_column(col, f.level);
+                        stats.injected.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                scratch.x.fill(0.0);
+                let xs = &batch.x_of(s)[reg.r0..reg.r0 + reg.rlen];
+                scratch.x[..reg.rlen].copy_from_slice(xs);
+                scratch.arr.read(&scratch.x, out);
+            },
+        );
+
+        // Sequential reduction: verify/correct each shard partial, then
+        // accumulate into the output in fixed shard order.
+        let mut y_hw = vec![0.0f32; b * c];
+        let (mut detected, mut corrected, mut uncorrectable) = (0u64, 0u64, 0u64);
+        for s in 0..b {
+            for k in 0..nshards {
+                let reg = grid.region(k);
+                let base = (s * nshards + k) * width;
+                let part = &mut partials[base..base + width];
+                let (data, rest) = part.split_at_mut(reg.clen);
+                if checksum {
+                    let code = &codes[k];
+                    let cells = (reg.rlen * reg.clen) as f64;
+                    let abs_threshold = self.threshold * cells.sqrt();
+                    match code.verify(data, &rest[..code.extra()], abs_threshold) {
+                        Verdict::Clean => {}
+                        Verdict::Fault { col, delta } => {
+                            data[col] = (data[col] as f64 + delta) as f32;
+                            detected += 1;
+                            corrected += 1;
+                        }
+                        Verdict::Detected => {
+                            detected += 1;
+                            uncorrectable += 1;
+                        }
+                    }
+                }
+                let yrow = &mut y_hw[s * c + reg.c0..s * c + reg.c0 + reg.clen];
+                for (yj, &pj) in yrow.iter_mut().zip(data.iter()) {
+                    *yj += pj;
+                }
+            }
+        }
+        if detected > 0 {
+            self.stats.detected.fetch_add(detected, Ordering::Relaxed);
+            self.stats.corrected.fetch_add(corrected, Ordering::Relaxed);
+            self.stats
+                .uncorrectable
+                .fetch_add(uncorrectable, Ordering::Relaxed);
+        }
+
+        let y_sw = software_vmm_batch(batch);
+        Ok(VmmOutput { y_hw, y_sw })
+    }
+
+    fn internal_parallelism(&self) -> usize {
+        self.par.threads()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+    use crate::util::rng::Xoshiro256;
+    use crate::vmm::NativeEngine;
+
+    fn random_batch(b: usize, r: usize, c: usize, seed: u64) -> VmmBatch {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut vb = VmmBatch::zeros(b, r, c);
+        rng.fill_uniform_f32(&mut vb.w, -1.0, 1.0);
+        rng.fill_uniform_f32(&mut vb.x, 0.0, 1.0);
+        rng.fill_normal_f32(&mut vb.z);
+        vb
+    }
+
+    #[test]
+    fn unit_grid_without_checksum_bit_identical_to_native() {
+        let b = random_batch(6, 32, 32, 301);
+        let params = presets::ag_si().params;
+        let sharded = ShardedEngine::new(1, 1)
+            .with_checksum(false)
+            .forward(&b, &params)
+            .unwrap();
+        let native = NativeEngine::sequential().forward(&b, &params).unwrap();
+        assert_eq!(sharded.y_hw, native.y_hw);
+        assert_eq!(sharded.y_sw, native.y_sw);
+    }
+
+    #[test]
+    fn unit_grid_with_clean_checksum_bit_identical_to_native() {
+        // Checksum columns must be transparent when no correction
+        // fires: a high threshold guarantees Clean verdicts here.
+        let b = random_batch(6, 32, 32, 302);
+        let params = presets::epiram().params;
+        let sharded = ShardedEngine::new(1, 1)
+            .with_threshold(64.0)
+            .forward(&b, &params)
+            .unwrap();
+        let native = NativeEngine::sequential().forward(&b, &params).unwrap();
+        assert_eq!(sharded.y_hw, native.y_hw);
+        assert_eq!(sharded.counts().detected, 0);
+    }
+
+    #[test]
+    fn parallel_fan_is_bit_identical_to_sequential() {
+        let b = random_batch(9, 48, 40, 303);
+        let params = presets::epiram().params;
+        let fault = FaultSpec::stuck_at_on(0.3, 77);
+        let run = |threads| {
+            ShardedEngine::new(3, 2)
+                .with_parallelism(Parallelism::Fixed(threads))
+                .with_fault(fault)
+                .forward(&b, &params)
+                .unwrap()
+        };
+        let seq = run(1);
+        for threads in [2usize, 4, 8] {
+            assert_eq!(seq.y_hw, run(threads).y_hw, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn injected_gross_fault_is_corrected_on_quiet_device() {
+        // Near-ideal device: the checksum floor is tiny, so a low
+        // threshold cleanly separates faults from clean shards.
+        let b = random_batch(8, 64, 64, 304);
+        let params = DeviceParams::ideal();
+        let fault = FaultSpec::stuck_at_on(1.0, 9);
+        let corrected = ShardedEngine::new(2, 2)
+            .with_threshold(0.05)
+            .with_fault(fault)
+            .forward(&b, &params)
+            .unwrap();
+        let broken = ShardedEngine::new(2, 2)
+            .with_checksum(false)
+            .with_fault(fault)
+            .forward(&b, &params)
+            .unwrap();
+        fn max_abs(out: &VmmOutput) -> f64 {
+            out.errors().iter().fold(0.0f64, |m, e| m.max(e.abs()))
+        }
+        assert!(max_abs(&broken) > 4.0, "fault too small: {}", max_abs(&broken));
+        assert!(max_abs(&corrected) < 1.0, "residual too big: {}", max_abs(&corrected));
+    }
+
+    #[test]
+    fn counters_track_injection_and_correction() {
+        let b = random_batch(8, 64, 64, 305);
+        let engine = ShardedEngine::new(2, 2)
+            .with_threshold(0.05)
+            .with_fault(FaultSpec::stuck_at_on(1.0, 9));
+        engine.forward(&b, &DeviceParams::ideal()).unwrap();
+        let counts = engine.counts();
+        // rate 1.0: one fault per (sample, shard).
+        assert_eq!(counts.injected, 8 * 4);
+        assert_eq!(counts.detected, counts.injected);
+        assert_eq!(counts.corrected, counts.injected);
+        assert_eq!(counts.uncorrectable, 0);
+        engine.stats().reset();
+        assert_eq!(engine.counts(), ShardCounts::default());
+    }
+
+    #[test]
+    fn ragged_grid_supported() {
+        let b = random_batch(3, 50, 70, 306);
+        let params = presets::taox_hfox().params;
+        let out = ShardedEngine::new(3, 4).forward(&b, &params).unwrap();
+        assert_eq!(out.y_hw.len(), 3 * 70);
+        assert!(out.errors().iter().all(|e| e.is_finite()));
+    }
+
+    #[test]
+    fn oversize_or_zero_grid_rejected() {
+        let b = random_batch(1, 8, 8, 307);
+        let params = presets::epiram().params;
+        assert!(ShardedEngine::new(0, 1).forward(&b, &params).is_err());
+        assert!(ShardedEngine::new(9, 1).forward(&b, &params).is_err());
+        assert!(ShardedEngine::new(1, 9).forward(&b, &params).is_err());
+    }
+
+    #[test]
+    fn internal_parallelism_reported() {
+        assert_eq!(
+            ShardedEngine::new(2, 2)
+                .with_parallelism(Parallelism::Fixed(5))
+                .internal_parallelism(),
+            5
+        );
+        assert!(ShardedEngine::default().internal_parallelism() >= 1);
+    }
+}

@@ -1,0 +1,164 @@
+//! Integration: the sharded multi-crossbar engine through the
+//! coordinator, the registry, and the inference pipeline — the
+//! acceptance guards of the shard subsystem:
+//!
+//! * a `1x1` shard grid is bit-identical to the native engine,
+//! * an injected single-shard gross fault is detected and corrected by
+//!   the checksum reduction,
+//! * engine-level `Fixed(1)` and `Auto` parallelism are bit-identical
+//!   (including under fault injection).
+
+use meliso::coordinator::{BenchmarkConfig, Coordinator};
+use meliso::device::params::{DeviceParams, NonIdealities};
+use meliso::device::presets;
+use meliso::experiments::{registry, Ctx};
+use meliso::pipeline::{Activation, NetworkSpec, PipelineOptions, PipelineRunner};
+use meliso::shard::FaultSpec;
+use meliso::util::pool::Parallelism;
+use meliso::util::rng::Xoshiro256;
+use meliso::vmm::{
+    DynEngine, NativeEngine, ShardedEngine, VmmBatch, VmmEngine, VmmOutput,
+};
+
+fn random_batch(b: usize, r: usize, c: usize, seed: u64) -> VmmBatch {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut vb = VmmBatch::zeros(b, r, c);
+    rng.fill_uniform_f32(&mut vb.w, -1.0, 1.0);
+    rng.fill_uniform_f32(&mut vb.x, 0.0, 1.0);
+    rng.fill_normal_f32(&mut vb.z);
+    vb
+}
+
+/// Acceptance: at a `1x1` grid the sharded engine degenerates to one
+/// programming cycle over the full matrix and must reproduce the
+/// native engine **bit-identically** — through the coordinator, with
+/// the checksum columns present (they are transparent when no
+/// correction fires; the high threshold guarantees that here).
+#[test]
+fn sharded_1x1_bit_identical_to_native_through_coordinator() {
+    let device = presets::ag_si().params.masked(NonIdealities::FULL);
+    let cfg = BenchmarkConfig::paper_default(device).with_population(48);
+
+    let native = Coordinator::new(NativeEngine::default()).run(&cfg).unwrap();
+    let sharded = Coordinator::new(ShardedEngine::new(1, 1).with_threshold(64.0))
+        .run(&cfg)
+        .unwrap();
+    assert_eq!(native.errors(), sharded.errors());
+
+    // And with the checksum machinery disabled entirely.
+    let bare = Coordinator::new(ShardedEngine::new(1, 1).with_checksum(false))
+        .run(&cfg)
+        .unwrap();
+    assert_eq!(native.errors(), bare.errors());
+}
+
+/// Acceptance: an injected single-shard gross fault (stuck-at-rail bit
+/// line) is detected by the sum check, located by the binary locator
+/// columns, and corrected before accumulation.  On a quiet device the
+/// corrected population is indistinguishable from fault-free scale,
+/// while the uncorrected one carries the raw fault.
+#[test]
+fn injected_single_shard_fault_is_detected_and_corrected() {
+    let device = DeviceParams::ideal();
+    let batch = random_batch(12, 64, 64, 41);
+    let fault = FaultSpec { rate: 1.0, level: 1.0, seed: 13 };
+
+    let corrected_engine = ShardedEngine::new(2, 2)
+        .with_threshold(0.05)
+        .with_fault(fault);
+    let corrected = corrected_engine.forward(&batch, &device).unwrap();
+    let broken = ShardedEngine::new(2, 2)
+        .with_checksum(false)
+        .with_fault(fault)
+        .forward(&batch, &device)
+        .unwrap();
+
+    let max_abs = |out: &VmmOutput| out.errors().iter().fold(0.0f64, |m, e| m.max(e.abs()));
+    // Without correction the stuck lines are gross outliers…
+    assert!(max_abs(&broken) > 4.0, "injected fault too small: {}", max_abs(&broken));
+    // …with correction every output is back at benchmark error scale.
+    assert!(max_abs(&corrected) < 1.0, "residual too large: {}", max_abs(&corrected));
+
+    // The telemetry agrees: every injected fault was corrected.
+    let counts = corrected_engine.counts();
+    assert_eq!(counts.injected, 12 * 4);
+    assert_eq!(counts.detected, counts.injected);
+    assert_eq!(counts.corrected, counts.injected);
+    assert_eq!(counts.uncorrectable, 0);
+}
+
+/// Determinism guard: engine-level `Fixed(1)` and `Auto` produce
+/// bit-identical populations through the coordinator — including with
+/// checksum correction active and faults being injected (fault draws
+/// are pure functions of `(seed, sample, shard)`).
+#[test]
+fn sharded_fixed1_and_auto_bit_identical() {
+    let device = presets::epiram().params.masked(NonIdealities::FULL);
+    let mut cfg = BenchmarkConfig::paper_default(device).with_population(16);
+    cfg.workload.rows = 64;
+    cfg.workload.cols = 64;
+    cfg.calibration_samples = 8;
+
+    let engine = |par| {
+        ShardedEngine::new(2, 2)
+            .with_parallelism(par)
+            .with_fault(FaultSpec { rate: 0.3, level: 1.0, seed: 5 })
+    };
+    let serial = Coordinator::new(engine(Parallelism::Fixed(1))).run(&cfg).unwrap();
+    let auto = Coordinator::new(engine(Parallelism::Auto)).run(&cfg).unwrap();
+    assert_eq!(serial.errors(), auto.errors());
+    assert_eq!(serial.stats().mean(), auto.stats().mean());
+    assert_eq!(serial.stats().variance(), auto.stats().variance());
+}
+
+/// The shard-sweep experiment runs through the registry and reports
+/// every cell (the reporting half of the acceptance criterion).
+#[test]
+fn shard_sweep_experiment_runs_through_registry() {
+    let dir = std::env::temp_dir().join("meliso_it_shard_sweep");
+    let _ = std::fs::remove_dir_all(&dir);
+    let ctx = Ctx::native(8, &dir);
+    let s = registry::run_by_id("shard-sweep", &ctx).unwrap();
+    let rows = s.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 2 * 3 * 3); // devices x grids x legs
+    for row in rows {
+        let v = row.get("variance").unwrap().as_f64().unwrap();
+        assert!(v.is_finite() && v > 0.0);
+    }
+    assert!(dir.join("shard-sweep/series.csv").exists());
+    assert!(dir.join("shard-sweep/summary.json").exists());
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Pipeline support via `DynEngine`: a layered network driven by the
+/// sharded engine (1x1 grid, no corrections firing) reproduces the
+/// native engine's full layer trace bitwise.
+#[test]
+fn pipeline_on_sharded_engine_matches_native_trace() {
+    let device = presets::epiram().params.masked(NonIdealities::FULL);
+    let net = NetworkSpec::uniform(3, 32, Activation::Relu, 7).with_population(12);
+    let opts = PipelineOptions { chunk: 4, parallelism: Parallelism::Fixed(2) };
+
+    let native = PipelineRunner::new(DynEngine::new(NativeEngine::default()))
+        .run(&net, &device, &opts)
+        .unwrap();
+    let sharded = PipelineRunner::new(DynEngine::new(
+        ShardedEngine::new(1, 1).with_threshold(64.0),
+    ))
+    .run(&net, &device, &opts)
+    .unwrap();
+
+    assert_eq!(native.final_hw, sharded.final_hw);
+    assert_eq!(native.final_sw, sharded.final_sw);
+    for (a, b) in native.layers.iter().zip(&sharded.layers) {
+        assert_eq!(a.accumulated.errors(), b.accumulated.errors(), "layer {}", a.index);
+        assert_eq!(a.injected.errors(), b.injected.errors(), "layer {}", a.index);
+    }
+
+    // A real shard grid also runs end-to-end through the pipeline.
+    let gridded = PipelineRunner::new(DynEngine::new(ShardedEngine::new(2, 2)))
+        .run(&net, &device, &opts)
+        .unwrap();
+    assert_eq!(gridded.final_hw.len(), native.final_hw.len());
+    assert!(gridded.end_to_end().errors().iter().all(|e| e.is_finite()));
+}

@@ -12,7 +12,10 @@
 //! meliso solve [--device ID] [--n N] [--solver cg|jacobi|richardson]
 //!              [--mitigation SPEC]
 //! meliso infer [--device ID] [--depth N] [--layers DIMS]
-//!              [--activation A] [--mitigation SPEC]
+//!              [--activation A] [--mitigation SPEC] [--deploy]
+//! meliso serve-bench [--device ID] [--clients N] [--requests N]
+//!              [--models N] [--window-us N] [--batch-max N]
+//!              [--queue-cap N] [--serve-workers N] [--serve-cache on|off]
 //! meliso warmup                                    # precompile artifacts
 //! ```
 
@@ -39,6 +42,7 @@ pub enum Command {
     Fit { input: String, column: usize },
     Solve { device: String, n: usize, solver: String },
     Infer { device: String },
+    ServeBench { device: String },
     Warmup,
     Help,
     Version,
@@ -65,6 +69,12 @@ COMMANDS:
                              deep network and report per-layer error propagation
                              (e.g. `meliso infer --depth 4 --activation relu`,
                              `meliso infer --layers 32x48x10 --mitigation diff`)
+  serve-bench [--device ID]  Concurrent request serving: simulated clients ->
+                             bounded queue -> batched scheduler over the
+                             programmed-crossbar cache; reports p50/p95/p99
+                             latency, throughput, and cache hits, and writes
+                             <out>/serve-bench/{summary,BENCH}.json
+                             (e.g. `meliso serve-bench --clients 16 --models 4`)
   warmup                     Precompile all XLA artifacts
   help, version
 
@@ -97,6 +107,24 @@ OPTIONS:
   --activation <A>                 Per-layer nonlinearity:
                                    identity | relu | tanh | hardtanh
                                    [default: relu]
+  --deploy                         infer: program each layer once through the
+                                   serving cache (deployed-instance statistics)
+                                   instead of per-sample reprogramming
+  --clients <N>                    serve-bench: simulated client threads
+                                   [default: 8]
+  --requests <N>                   serve-bench: requests per client [default: 64]
+  --models <N>                     serve-bench: distinct deployed models
+                                   [default: 4]
+  --window-us <N>                  serve-bench: batching window in microseconds
+                                   (0 = serve whatever is queued) [default: 200]
+  --batch-max <N>                  serve-bench: largest coalesced batch
+                                   [default: 32]
+  --queue-cap <N>                  serve-bench: bounded-queue capacity
+                                   (backpressure bound) [default: 256]
+  --serve-workers <N>              serve-bench: scheduler worker threads
+                                   [default: 2]
+  --serve-cache <on|off>           serve-bench: programmed-crossbar cache
+                                   [default: on]
   --config <FILE>                  TOML config file (CLI flags override)
   --quiet                          Suppress terminal tables
 ";
@@ -113,7 +141,7 @@ impl Args {
         let mut flags: Vec<(String, Option<String>)> = Vec::new();
         while let Some(tok) = it.next() {
             if let Some(name) = tok.strip_prefix("--") {
-                let needs_value = !matches!(name, "quiet");
+                let needs_value = !matches!(name, "quiet" | "deploy");
                 let value = if needs_value {
                     Some(it.next().ok_or_else(|| {
                         Error::Config(format!("flag --{name} needs a value"))
@@ -181,6 +209,39 @@ impl Args {
                     config.pipeline.dims = Some(parse_dims(req(name, v)?)?);
                 }
                 "quiet" => config.quiet = true,
+                "deploy" => config.pipeline.deploy = true,
+                "clients" => {
+                    config.serve.clients = parse_positive(name, req(name, v)?)?;
+                }
+                "requests" => {
+                    config.serve.requests = parse_positive(name, req(name, v)?)?;
+                }
+                "models" => {
+                    config.serve.models = parse_positive(name, req(name, v)?)?;
+                }
+                "window-us" => {
+                    config.serve.window_us = parse_num(name, req(name, v)?)?;
+                }
+                "batch-max" => {
+                    config.serve.batch_max = parse_positive(name, req(name, v)?)?;
+                }
+                "queue-cap" => {
+                    config.serve.queue = parse_positive(name, req(name, v)?)?;
+                }
+                "serve-workers" => {
+                    config.serve.workers = parse_positive(name, req(name, v)?)?;
+                }
+                "serve-cache" => {
+                    config.serve.cache = match req(name, v)?.to_ascii_lowercase().as_str() {
+                        "on" | "true" | "1" => true,
+                        "off" | "false" | "0" => false,
+                        other => {
+                            return Err(Error::Config(format!(
+                                "--serve-cache must be on|off, got '{other}'"
+                            )))
+                        }
+                    };
+                }
                 "config" | "input" | "column" | "device" | "n" | "solver" | "filter"
                 | "baseline" => {}
                 other => {
@@ -225,6 +286,9 @@ impl Args {
             "infer" => Command::Infer {
                 device: flag("device").unwrap_or_else(|| "ag-si".into()),
             },
+            "serve-bench" => Command::ServeBench {
+                device: flag("device").unwrap_or_else(|| "ag-si".into()),
+            },
             "warmup" => Command::Warmup,
             "help" | "--help" | "-h" => Command::Help,
             "version" | "--version" | "-V" => Command::Version,
@@ -245,6 +309,14 @@ fn req<'a>(name: &str, v: Option<&'a str>) -> Result<&'a str> {
 fn parse_num<T: std::str::FromStr>(name: &str, v: &str) -> Result<T> {
     v.parse()
         .map_err(|_| Error::Config(format!("flag --{name}: bad number '{v}'")))
+}
+
+fn parse_positive(name: &str, v: &str) -> Result<usize> {
+    let n: usize = parse_num(name, v)?;
+    if n == 0 {
+        return Err(Error::Config(format!("flag --{name} must be > 0")));
+    }
+    Ok(n)
 }
 
 #[cfg(test)]
@@ -377,6 +449,44 @@ mod tests {
         assert!(parse("infer --depth two").is_err());
         assert!(parse("infer --activation softmax").is_err());
         assert!(parse("infer --layers 32").is_err());
+    }
+
+    #[test]
+    fn parses_serve_bench_flags() {
+        let a = parse(
+            "serve-bench --device epiram --clients 16 --requests 32 --models 3 \
+             --window-us 0 --batch-max 8 --queue-cap 64 --serve-workers 4 \
+             --serve-cache off --size 64",
+        )
+        .unwrap();
+        assert_eq!(a.command, Command::ServeBench { device: "epiram".into() });
+        assert_eq!(a.config.serve.clients, 16);
+        assert_eq!(a.config.serve.requests, 32);
+        assert_eq!(a.config.serve.models, 3);
+        assert_eq!(a.config.serve.window_us, 0);
+        assert_eq!(a.config.serve.batch_max, 8);
+        assert_eq!(a.config.serve.queue, 64);
+        assert_eq!(a.config.serve.workers, 4);
+        assert!(!a.config.serve.cache);
+        assert_eq!(a.config.size, 64);
+        // Defaults.
+        let a = parse("serve-bench").unwrap();
+        assert_eq!(a.command, Command::ServeBench { device: "ag-si".into() });
+        assert_eq!(a.config.serve.clients, 8);
+        assert!(a.config.serve.cache);
+        // Rejections.
+        assert!(parse("serve-bench --clients 0").is_err());
+        assert!(parse("serve-bench --batch-max 0").is_err());
+        assert!(parse("serve-bench --serve-cache maybe").is_err());
+        assert!(parse("serve-bench --window-us minus").is_err());
+    }
+
+    #[test]
+    fn parses_deploy_flag() {
+        let a = parse("infer --deploy --depth 3").unwrap();
+        assert!(a.config.pipeline.deploy);
+        assert_eq!(a.config.pipeline.depth, 3);
+        assert!(!parse("infer").unwrap().config.pipeline.deploy);
     }
 
     #[test]

@@ -9,7 +9,8 @@ use crate::perf;
 use crate::pipeline::{NetworkSpec, PipelineOptions, PipelineRunner};
 use crate::report::table::{fnum, TextTable};
 use crate::runtime::XlaRuntime;
-use crate::util::bench::{read_bench_json, write_bench_json};
+use crate::serve::{run_serve, ProgramCache, ServeOptions};
+use crate::util::bench::{read_bench_json, write_bench_json, BenchResult};
 use crate::util::csv::CsvTable;
 use crate::util::json::{obj, Json};
 use crate::solver::{
@@ -50,6 +51,7 @@ pub fn dispatch(args: &Args) -> Result<i32> {
         Command::Fit { input, column } => fit_csv(input, *column),
         Command::Solve { device, n, solver } => solve(args, device, *n, solver),
         Command::Infer { device } => infer(args, device),
+        Command::ServeBench { device } => serve_bench(args, device),
         Command::Warmup => warmup(),
     }
 }
@@ -269,7 +271,20 @@ fn infer(args: &Args, device_id: &str) -> Result<i32> {
     // gets the *unwrapped* engine — a globally mitigated engine would
     // run every layer through the pipeline twice.
     let runner = PipelineRunner::new(ctx.base_engine.clone());
-    let opts = PipelineOptions { chunk: 64, parallelism: ctx.parallelism };
+    // Deployed mode: program each layer once through the serving cache
+    // and read every sample against that instance (the cache outlives
+    // this run, so repeated `runner.run` calls in one process share
+    // layer programs).
+    let deploy_cache = args
+        .config
+        .pipeline
+        .deploy
+        .then(|| std::sync::Arc::new(ProgramCache::new(64)));
+    let opts = PipelineOptions {
+        chunk: 64,
+        parallelism: ctx.parallelism,
+        deploy: deploy_cache.clone(),
+    };
     let report = runner.run(&net, &device, &opts)?;
 
     let mut t = TextTable::new([
@@ -336,6 +351,13 @@ fn infer(args: &Args, device_id: &str) -> Result<i32> {
         fnum(report.layers.last().map(|l| l.accumulated_mean_abs()).unwrap_or(f64::NAN)),
         report.vmm_per_sec(),
     ));
+    if let Some(cache) = &deploy_cache {
+        let c = cache.counts();
+        w.echo(&format!(
+            "deployed: {} layer programs cached ({} hits, {} misses)",
+            c.entries, c.hits, c.misses
+        ));
+    }
     w.csv("layers", &csv)?;
     w.json(
         "summary",
@@ -346,6 +368,7 @@ fn infer(args: &Args, device_id: &str) -> Result<i32> {
             ("device", Json::Str(device_label)),
             ("engine", Json::Str(report.engine.into())),
             ("mitigation", Json::Str(args.config.mitigation.label())),
+            ("deployed", Json::Bool(args.config.pipeline.deploy)),
             ("samples", Json::Num(report.samples as f64)),
             ("argmax_agreement", Json::Num(report.argmax_agreement)),
             ("wall_secs", Json::Num(report.wall_secs)),
@@ -353,6 +376,119 @@ fn infer(args: &Args, device_id: &str) -> Result<i32> {
             ("layers", Json::Arr(layer_rows)),
         ]),
     )?;
+    Ok(0)
+}
+
+/// `meliso serve-bench`: run the request-serving simulation (simulated
+/// clients -> bounded queue -> batched scheduler over the programmed-
+/// crossbar cache) on the configured engine and report latency,
+/// throughput, cache, and error telemetry.  Writes
+/// `<out>/serve-bench/summary.json` and a bench-schema
+/// `<out>/serve-bench/BENCH.json` (its own directory, so sharing
+/// `--out` with `meliso bench` never clobbers the hotpath document)
+/// for CI to archive next to the hotpath suite's.
+fn serve_bench(args: &Args, device_id: &str) -> Result<i32> {
+    let ctx = Ctx::from_config(&args.config)?;
+    let (device, device_label) = match args.config.custom_device {
+        Some(d) => (d, "custom".to_string()),
+        None => {
+            let preset = presets::by_id(device_id)
+                .ok_or_else(|| Error::Config(format!("unknown device '{device_id}'")))?;
+            (preset.params.masked(NonIdealities::FULL), preset.id.to_string())
+        }
+    };
+    let s = &args.config.serve;
+    let opts = ServeOptions {
+        clients: s.clients,
+        requests_per_client: s.requests,
+        models: s.models,
+        rows: args.config.size,
+        cols: args.config.size,
+        queue_capacity: s.queue,
+        batch_max: s.batch_max,
+        window: std::time::Duration::from_micros(s.window_us),
+        workers: s.workers,
+        cache: s.cache,
+        cache_capacity: s.cache_capacity,
+        measure_error: true,
+        seed: args.config.seed,
+        ..ServeOptions::default()
+    };
+    let report = run_serve(&ctx.engine, &device, &opts)?;
+
+    let mut t = TextTable::new(["metric", "value"]).with_title(format!(
+        "Request serving: {} models of {}x{} on {} (engine={}, cache={})",
+        opts.models,
+        opts.rows,
+        opts.cols,
+        device_label,
+        ctx.engine_name(),
+        if opts.cache { "on" } else { "off" },
+    ));
+    t.push(["clients x requests", &format!("{} x {}", opts.clients, opts.requests_per_client)]);
+    t.push(["requests served", &report.requests.to_string()]);
+    t.push(["throughput (req/s)", &fnum(report.throughput)]);
+    t.push(["p50 latency (ms)", &fnum(report.p50_ms)]);
+    t.push(["p95 latency (ms)", &fnum(report.p95_ms)]);
+    t.push(["p99 latency (ms)", &fnum(report.p99_ms)]);
+    t.push(["mean batch", &fnum(report.mean_batch)]);
+    t.push(["batches", &report.batches.to_string()]);
+    t.push(["programs", &report.programs.to_string()]);
+    t.push([
+        "cache hits/misses",
+        &format!("{}/{}", report.cache.hits, report.cache.misses),
+    ]);
+    t.push(["mean |e|", &fnum(report.mean_abs_error)]);
+    let w = ctx.writer("serve-bench");
+    w.echo(&t.render());
+    w.json(
+        "summary",
+        &obj([
+            ("id", Json::Str("serve-bench".into())),
+            ("engine", Json::Str(ctx.engine_name().into())),
+            ("device", Json::Str(device_label)),
+            ("rows", Json::Num(opts.rows as f64)),
+            ("cols", Json::Num(opts.cols as f64)),
+            ("clients", Json::Num(opts.clients as f64)),
+            ("requests_per_client", Json::Num(opts.requests_per_client as f64)),
+            ("models", Json::Num(opts.models as f64)),
+            ("window_us", Json::Num(s.window_us as f64)),
+            ("batch_max", Json::Num(opts.batch_max as f64)),
+            ("queue_capacity", Json::Num(opts.queue_capacity as f64)),
+            ("workers", Json::Num(opts.workers as f64)),
+            ("cache", Json::Bool(opts.cache)),
+            ("requests", Json::Num(report.requests as f64)),
+            ("batches", Json::Num(report.batches as f64)),
+            ("mean_batch", Json::Num(report.mean_batch)),
+            ("wall_secs", Json::Num(report.wall_secs)),
+            ("throughput_req_s", Json::Num(report.throughput)),
+            ("p50_ms", Json::Num(report.p50_ms)),
+            ("p95_ms", Json::Num(report.p95_ms)),
+            ("p99_ms", Json::Num(report.p99_ms)),
+            ("programs", Json::Num(report.programs as f64)),
+            ("cache_hits", Json::Num(report.cache.hits as f64)),
+            ("cache_misses", Json::Num(report.cache.misses as f64)),
+            ("cache_evictions", Json::Num(report.cache.evictions as f64)),
+            ("mean_abs_error", Json::Num(report.mean_abs_error)),
+        ]),
+    )?;
+    // Bench-schema document for CI artifact upload, named like a perf
+    // slug so baselines can track it.
+    let slug = format!(
+        "serve-bench-{}-{}",
+        ctx.engine_name(),
+        if opts.cache { "cached" } else { "uncached" }
+    );
+    let bench = vec![BenchResult {
+        name: slug,
+        median: report.wall_secs,
+        mean: report.wall_secs,
+        min: report.wall_secs,
+        max: report.wall_secs,
+        samples: 1,
+        items_per_iter: Some(report.requests as f64),
+    }];
+    write_bench_json(&bench, &args.config.out_dir.join("serve-bench/BENCH.json"))?;
     Ok(0)
 }
 
@@ -394,6 +530,46 @@ mod tests {
         // No half-written document: an empty BENCH.json would read as
         // "no regressions" downstream.
         assert!(!dir.join("BENCH.json").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn serve_bench_writes_summary_and_bench_json() {
+        let dir = std::env::temp_dir().join("meliso_serve_bench_cli_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let args = parse(&[
+            "serve-bench",
+            "--device",
+            "epiram",
+            "--clients",
+            "3",
+            "--requests",
+            "8",
+            "--models",
+            "2",
+            "--size",
+            "16",
+            "--queue-cap",
+            "8",
+            "--batch-max",
+            "4",
+            "--quiet",
+            "--out",
+            dir.to_str().unwrap(),
+        ]);
+        assert_eq!(dispatch(&args).unwrap(), 0);
+        let summary = std::fs::read_to_string(dir.join("serve-bench/summary.json")).unwrap();
+        let doc = crate::util::json::Json::parse(&summary).unwrap();
+        assert_eq!(doc.get("requests").unwrap().as_f64(), Some(24.0));
+        assert!(doc.get("throughput_req_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(doc.get("mean_abs_error").unwrap().as_f64().unwrap().is_finite());
+        let bench = read_bench_json(&dir.join("serve-bench/BENCH.json")).unwrap();
+        assert_eq!(bench.len(), 1);
+        assert_eq!(bench[0].name, "serve-bench-native-cached");
+        assert_eq!(bench[0].items_per_iter, Some(24.0));
+        // Unknown device is a clean config error.
+        let args = parse(&["serve-bench", "--device", "unobtainium", "--quiet"]);
+        assert!(dispatch(&args).is_err());
         let _ = std::fs::remove_dir_all(dir);
     }
 

@@ -16,6 +16,17 @@
 //! activation = "relu"         # identity | relu | tanh | hardtanh
 //! layers = "32x48x10"         # explicit dimension chain (overrides depth)
 //!
+//! [serve]                     # request serving (`meliso serve-bench`)
+//! clients = 8                 # simulated client threads
+//! requests = 64               # requests per client
+//! models = 4                  # distinct deployed weight matrices
+//! queue = 256                 # bounded-queue capacity (backpressure)
+//! batch_max = 32              # largest coalesced batch
+//! window_us = 200             # batching window, microseconds
+//! workers = 2                 # scheduler worker threads
+//! cache = true                # programmed-crossbar cache on/off
+//! cache_capacity = 32         # models resident at once
+//!
 //! [shard]                     # sharded engine (`--engine sharded`)
 //! grid = "2x2"                # shard grid RxC (also `--shards`)
 //! checksum = true             # ABFT checksum correction on/off
@@ -113,11 +124,57 @@ pub struct PipelineSettings {
     /// Explicit dimension chain `d_0, ..., d_L` (layer `k` is a
     /// `d_k -> d_{k+1}` crossbar), from `--layers` / `layers = "..."`.
     pub dims: Option<Vec<usize>>,
+    /// Deployed mode (`--deploy` / `deploy = true`): program each
+    /// layer once through the serving program cache and read every
+    /// sample against that instance, instead of per-sample Monte-Carlo
+    /// reprogramming.
+    pub deploy: bool,
 }
 
 impl Default for PipelineSettings {
     fn default() -> Self {
-        Self { depth: 4, activation: Activation::Relu, dims: None }
+        Self { depth: 4, activation: Activation::Relu, dims: None, deploy: false }
+    }
+}
+
+/// Request-serving settings (`meliso serve-bench` and the `[serve]`
+/// TOML section).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeSettings {
+    /// Simulated client threads.
+    pub clients: usize,
+    /// Requests each client submits.
+    pub requests: usize,
+    /// Distinct deployed models rotated across requests.
+    pub models: usize,
+    /// Bounded request-queue capacity (backpressure bound).
+    pub queue: usize,
+    /// Largest coalesced batch.
+    pub batch_max: usize,
+    /// Batching window in microseconds (0 = serve whatever is queued).
+    pub window_us: u64,
+    /// Scheduler worker threads.
+    pub workers: usize,
+    /// Serve through the program cache (off = reprogram per batch
+    /// group, the measurable status-quo baseline).
+    pub cache: bool,
+    /// Program-cache capacity (models resident at once).
+    pub cache_capacity: usize,
+}
+
+impl Default for ServeSettings {
+    fn default() -> Self {
+        Self {
+            clients: 8,
+            requests: 64,
+            models: 4,
+            queue: 256,
+            batch_max: 32,
+            window_us: 200,
+            workers: 2,
+            cache: true,
+            cache_capacity: 32,
+        }
     }
 }
 
@@ -183,6 +240,8 @@ pub struct RunConfig {
     pub pipeline: PipelineSettings,
     /// Sharded-engine settings (`--engine sharded`).
     pub shard: ShardSettings,
+    /// Request-serving settings (`meliso serve-bench`).
+    pub serve: ServeSettings,
     pub quiet: bool,
     /// Optional custom device overriding the presets.
     pub custom_device: Option<DeviceParams>,
@@ -202,6 +261,7 @@ impl Default for RunConfig {
             mitigation: MitigationConfig::NONE,
             pipeline: PipelineSettings::default(),
             shard: ShardSettings::default(),
+            serve: ServeSettings::default(),
             quiet: false,
             custom_device: None,
         }
@@ -326,6 +386,60 @@ impl RunConfig {
                 v.as_str()
                     .ok_or_else(|| Error::Config("pipeline.layers must be a string".into()))?,
             )?);
+        }
+        if let Some(v) = doc.get("pipeline", "deploy") {
+            cfg.pipeline.deploy = v
+                .as_bool()
+                .ok_or_else(|| Error::Config("pipeline.deploy must be a bool".into()))?;
+        }
+        {
+            // Positive-int [serve] keys share one parse shape.
+            let positive = |doc: &TomlDoc, key: &str| -> Result<Option<usize>> {
+                match doc.get("serve", key) {
+                    None => Ok(None),
+                    Some(v) => v
+                        .as_i64()
+                        .filter(|&n| n > 0)
+                        .map(|n| Some(n as usize))
+                        .ok_or_else(|| {
+                            Error::Config(format!("serve.{key} must be a positive int"))
+                        }),
+                }
+            };
+            let s = &mut cfg.serve;
+            if let Some(n) = positive(&doc, "clients")? {
+                s.clients = n;
+            }
+            if let Some(n) = positive(&doc, "requests")? {
+                s.requests = n;
+            }
+            if let Some(n) = positive(&doc, "models")? {
+                s.models = n;
+            }
+            if let Some(n) = positive(&doc, "queue")? {
+                s.queue = n;
+            }
+            if let Some(n) = positive(&doc, "batch_max")? {
+                s.batch_max = n;
+            }
+            if let Some(n) = positive(&doc, "workers")? {
+                s.workers = n;
+            }
+            if let Some(n) = positive(&doc, "cache_capacity")? {
+                s.cache_capacity = n;
+            }
+        }
+        if let Some(v) = doc.get("serve", "window_us") {
+            cfg.serve.window_us = v
+                .as_i64()
+                .filter(|&n| n >= 0)
+                .ok_or_else(|| Error::Config("serve.window_us must be a non-negative int".into()))?
+                as u64;
+        }
+        if let Some(v) = doc.get("serve", "cache") {
+            cfg.serve.cache = v
+                .as_bool()
+                .ok_or_else(|| Error::Config("serve.cache must be a bool".into()))?;
         }
         if let Some(v) = doc.get("shard", "grid") {
             let (r, c) = parse_grid(
@@ -501,6 +615,50 @@ sigma_c2c = 0.035
         assert!(RunConfig::from_toml("[shard]\nthreshold = 0\n").is_err());
         assert!(RunConfig::from_toml("[shard]\nfault_rate = 1.5\n").is_err());
         assert!(RunConfig::from_toml("[shard]\nfault_level = 2.0\n").is_err());
+    }
+
+    #[test]
+    fn serve_section_parses() {
+        let c = RunConfig::from_toml(
+            "[serve]\n\
+             clients = 12\n\
+             requests = 100\n\
+             models = 3\n\
+             queue = 64\n\
+             batch_max = 16\n\
+             window_us = 0\n\
+             workers = 4\n\
+             cache = false\n\
+             cache_capacity = 5\n",
+        )
+        .unwrap();
+        assert_eq!(c.serve.clients, 12);
+        assert_eq!(c.serve.requests, 100);
+        assert_eq!(c.serve.models, 3);
+        assert_eq!(c.serve.queue, 64);
+        assert_eq!(c.serve.batch_max, 16);
+        assert_eq!(c.serve.window_us, 0);
+        assert_eq!(c.serve.workers, 4);
+        assert!(!c.serve.cache);
+        assert_eq!(c.serve.cache_capacity, 5);
+        // Defaults.
+        let d = RunConfig::default().serve;
+        assert_eq!(d.clients, 8);
+        assert_eq!(d.batch_max, 32);
+        assert!(d.cache);
+        // Rejections.
+        assert!(RunConfig::from_toml("[serve]\nclients = 0\n").is_err());
+        assert!(RunConfig::from_toml("[serve]\nrequests = -4\n").is_err());
+        assert!(RunConfig::from_toml("[serve]\nwindow_us = -1\n").is_err());
+        assert!(RunConfig::from_toml("[serve]\ncache = 3\n").is_err());
+    }
+
+    #[test]
+    fn pipeline_deploy_parses() {
+        let c = RunConfig::from_toml("[pipeline]\ndeploy = true\n").unwrap();
+        assert!(c.pipeline.deploy);
+        assert!(!RunConfig::default().pipeline.deploy);
+        assert!(RunConfig::from_toml("[pipeline]\ndeploy = 1\n").is_err());
     }
 
     #[test]

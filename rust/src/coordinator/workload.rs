@@ -106,6 +106,14 @@ impl InputSpec {
         }
     }
 
+    /// Single input vector `index` — the per-request form of
+    /// [`InputSpec::chunk`] used by the serving clients
+    /// ([`crate::serve`]); bit-identical to the corresponding row of
+    /// any chunk covering `index`.
+    pub fn sample(&self, index: usize) -> Vec<f32> {
+        self.chunk(index, 1)
+    }
+
     /// Generate input vectors `[start, start+len)`, row-major
     /// `(len, dim)`.
     pub fn chunk(&self, start: usize, len: usize) -> Vec<f32> {
@@ -202,6 +210,7 @@ mod tests {
         for s in 0..12 {
             let one = spec.chunk(s, 1);
             assert_eq!(&whole[s * 16..(s + 1) * 16], &one[..], "sample {s}");
+            assert_eq!(spec.sample(s), one, "sample {s}");
         }
         // Read voltages are physically non-negative by default.
         assert!(whole.iter().all(|v| (0.0..=1.0).contains(v)));

@@ -10,6 +10,7 @@ pub mod fig5;
 pub mod mitigation;
 pub mod pipeline;
 pub mod registry;
+pub mod serve;
 pub mod shard;
 pub mod table1;
 pub mod table2;

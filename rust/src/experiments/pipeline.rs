@@ -73,7 +73,7 @@ pub fn run(ctx: &Ctx) -> Result<Json> {
     let mut rows = Vec::new();
 
     let runner = PipelineRunner::new(ctx.base_engine.clone());
-    let opts = PipelineOptions { chunk: 32, parallelism: ctx.parallelism };
+    let opts = PipelineOptions { chunk: 32, parallelism: ctx.parallelism, ..PipelineOptions::default() };
     for preset in sweep_devices() {
         let device = preset.params.masked(NonIdealities::FULL);
         for spec in SWEEP_MITIGATIONS {

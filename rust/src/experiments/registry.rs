@@ -5,7 +5,7 @@ use crate::error::{Error, Result};
 use crate::util::json::Json;
 
 use super::context::Ctx;
-use super::{fig2, fig3, fig4, fig5, mitigation, pipeline, shard, table1, table2, xtra};
+use super::{fig2, fig3, fig4, fig5, mitigation, pipeline, serve, shard, table1, table2, xtra};
 
 /// Experiment descriptor.
 pub struct Entry {
@@ -120,6 +120,12 @@ pub fn entries() -> Vec<Entry> {
             paper: false,
             run: shard::run,
         },
+        Entry {
+            id: "serve-sweep",
+            title: "Extension: request-serving throughput/latency vs clients x window x engine",
+            paper: false,
+            run: serve::run,
+        },
     ]
 }
 
@@ -189,6 +195,7 @@ mod tests {
         assert!(msg.contains("pipeline"), "{msg}");
         assert!(msg.contains("mitigation-sweep"), "{msg}");
         assert!(msg.contains("shard-sweep"), "{msg}");
+        assert!(msg.contains("serve-sweep"), "{msg}");
         let _ = std::fs::remove_dir_all(dir);
     }
 

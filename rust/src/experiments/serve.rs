@@ -1,0 +1,215 @@
+//! Extension experiment `serve-sweep`: request-serving throughput,
+//! latency, and error vs clients × batching window × engine, with the
+//! programmed-crossbar cache measured on and off.
+//!
+//! Each cell runs the full serving simulation
+//! ([`crate::serve::run_serve`]): seeded clients submit single-vector
+//! requests against a rotation of deployed models through the bounded
+//! queue, scheduler workers coalesce them into batches, and the
+//! program cache (when on) amortizes programming across repeated-model
+//! traffic.  The cache-off leg reprograms per batch group — the
+//! pre-serving status quo — so the cache's throughput payoff is
+//! measured on the same path, same requests, same physics (the error
+//! column must agree between legs: caching a program changes nothing
+//! the outputs depend on).
+
+use std::time::Duration;
+
+use crate::device::params::NonIdealities;
+use crate::device::presets;
+use crate::error::Result;
+use crate::report::table::{fnum, TextTable};
+use crate::serve::{run_serve, ServeOptions};
+use crate::util::csv::CsvTable;
+use crate::util::json::{obj, Json};
+use crate::util::pool::Parallelism;
+use crate::vmm::{DynEngine, NativeEngine, ShardedEngine, TiledEngine, VmmEngine};
+
+use super::context::Ctx;
+
+/// Client counts swept.
+pub const SWEEP_CLIENTS: [usize; 2] = [2, 6];
+
+/// Batching windows swept (microseconds; 0 = serve whatever is
+/// queued).
+pub const SWEEP_WINDOWS_US: [u64; 2] = [0, 200];
+
+/// Engines swept (name, builder).
+fn sweep_engines(par: Parallelism) -> Vec<(&'static str, DynEngine)> {
+    vec![
+        ("native", DynEngine::new(NativeEngine::with_parallelism(par))),
+        (
+            "tiled",
+            DynEngine::new(TiledEngine::default().with_parallelism(par)),
+        ),
+        (
+            "sharded",
+            DynEngine::new(ShardedEngine::new(2, 2).with_parallelism(par)),
+        ),
+    ]
+}
+
+/// Run the sweep.
+pub fn run(ctx: &Ctx) -> Result<Json> {
+    let w = ctx.writer("serve-sweep");
+    let device = presets::ag_si().params.masked(NonIdealities::FULL);
+    let requests_per_client = ctx.population.clamp(4, 64);
+    if requests_per_client != ctx.population && !ctx.quiet {
+        eprintln!(
+            "serve-sweep: requests per client capped at {requests_per_client} \
+             (requested {})",
+            ctx.population
+        );
+    }
+    let engine_par = Parallelism::Fixed(ctx.engine.internal_parallelism().max(1));
+
+    let mut t = TextTable::new([
+        "engine", "clients", "window us", "cache", "req/s", "p50 ms", "p95 ms", "p99 ms",
+        "mean batch", "hits", "programs", "mean |e|",
+    ])
+    .with_title("Serve sweep: throughput/latency/error vs clients x window x engine (32x32)");
+    let mut csv = CsvTable::new([
+        "engine",
+        "clients",
+        "window_us",
+        "cache",
+        "requests",
+        "throughput_req_s",
+        "p50_ms",
+        "p95_ms",
+        "p99_ms",
+        "mean_batch",
+        "cache_hits",
+        "cache_misses",
+        "programs",
+        "mean_abs_error",
+    ]);
+    let mut rows = Vec::new();
+
+    for (engine_name, engine) in sweep_engines(engine_par) {
+        for clients in SWEEP_CLIENTS {
+            for window_us in SWEEP_WINDOWS_US {
+                for cache in [true, false] {
+                    let opts = ServeOptions {
+                        clients,
+                        requests_per_client,
+                        models: 2,
+                        rows: crate::ROWS,
+                        cols: crate::COLS,
+                        queue_capacity: 64,
+                        batch_max: 16,
+                        window: Duration::from_micros(window_us),
+                        workers: 2,
+                        cache,
+                        cache_capacity: 8,
+                        measure_error: true,
+                        seed: ctx.seed,
+                        ..ServeOptions::default()
+                    };
+                    let r = run_serve(&engine, &device, &opts)?;
+                    let cs_label = if cache { "on" } else { "off" };
+                    t.push([
+                        engine_name.to_string(),
+                        clients.to_string(),
+                        window_us.to_string(),
+                        cs_label.to_string(),
+                        fnum(r.throughput),
+                        fnum(r.p50_ms),
+                        fnum(r.p95_ms),
+                        fnum(r.p99_ms),
+                        fnum(r.mean_batch),
+                        r.cache.hits.to_string(),
+                        r.programs.to_string(),
+                        fnum(r.mean_abs_error),
+                    ]);
+                    csv.push([
+                        engine_name.to_string(),
+                        clients.to_string(),
+                        window_us.to_string(),
+                        cs_label.to_string(),
+                        r.requests.to_string(),
+                        r.throughput.to_string(),
+                        r.p50_ms.to_string(),
+                        r.p95_ms.to_string(),
+                        r.p99_ms.to_string(),
+                        r.mean_batch.to_string(),
+                        r.cache.hits.to_string(),
+                        r.cache.misses.to_string(),
+                        r.programs.to_string(),
+                        r.mean_abs_error.to_string(),
+                    ]);
+                    rows.push(obj([
+                        ("engine", Json::Str(engine_name.into())),
+                        ("clients", Json::Num(clients as f64)),
+                        ("window_us", Json::Num(window_us as f64)),
+                        ("cache", Json::Bool(cache)),
+                        ("requests", Json::Num(r.requests as f64)),
+                        ("throughput_req_s", Json::Num(r.throughput)),
+                        ("p50_ms", Json::Num(r.p50_ms)),
+                        ("p95_ms", Json::Num(r.p95_ms)),
+                        ("p99_ms", Json::Num(r.p99_ms)),
+                        ("mean_batch", Json::Num(r.mean_batch)),
+                        ("cache_hits", Json::Num(r.cache.hits as f64)),
+                        ("cache_misses", Json::Num(r.cache.misses as f64)),
+                        ("programs", Json::Num(r.programs as f64)),
+                        ("mean_abs_error", Json::Num(r.mean_abs_error)),
+                    ]));
+                }
+            }
+        }
+    }
+
+    w.echo(&t.render());
+    w.csv("series", &csv)?;
+    let summary = obj([
+        ("id", Json::Str("serve-sweep".into())),
+        ("requests_per_client", Json::Num(requests_per_client as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    w.json("summary", &summary)?;
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_reports_every_cell_with_consistent_telemetry() {
+        let dir = std::env::temp_dir().join("meliso_serve_sweep_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ctx = Ctx::native(6, &dir);
+        let s = run(&ctx).unwrap();
+        let rows = s.get("rows").unwrap().as_arr().unwrap();
+        // 3 engines x 2 client counts x 2 windows x cache on/off.
+        assert_eq!(rows.len(), 3 * 2 * 2 * 2);
+        let num = |r: &Json, k: &str| r.get(k).unwrap().as_f64().unwrap();
+        for r in rows {
+            assert!(num(r, "throughput_req_s") > 0.0);
+            assert!(num(r, "p50_ms") <= num(r, "p95_ms"));
+            assert!(num(r, "p95_ms") <= num(r, "p99_ms"));
+            assert!(num(r, "mean_batch") >= 1.0);
+            assert!(num(r, "mean_abs_error").is_finite());
+            assert!(num(r, "programs") >= 1.0);
+            let cached = matches!(r.get("cache"), Some(Json::Bool(true)));
+            if cached {
+                // 2 models over many requests: repeats must hit.
+                assert!(num(r, "cache_hits") >= 1.0, "cached leg without hits");
+                assert!(num(r, "cache_misses") >= 2.0);
+            } else {
+                assert_eq!(num(r, "cache_hits"), 0.0);
+            }
+        }
+        // Physics is cache-invariant: matching legs agree on the error
+        // to reduction-order tolerance.
+        for pair in rows.chunks(2) {
+            let (on, off) = (&pair[0], &pair[1]);
+            assert_eq!(on.get("engine").unwrap().as_str(), off.get("engine").unwrap().as_str());
+            let (a, b) = (num(on, "mean_abs_error"), num(off, "mean_abs_error"));
+            assert!((a - b).abs() < 1e-9 + 1e-9 * a.abs(), "{a} vs {b}");
+        }
+        assert!(dir.join("serve-sweep/series.csv").exists());
+        assert!(dir.join("serve-sweep/summary.json").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -33,6 +33,7 @@ pub mod pipeline;
 pub mod perf;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod shard;
 pub mod solver;
 pub mod stats;

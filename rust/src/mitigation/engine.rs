@@ -40,7 +40,8 @@
 use crate::device::params::DeviceParams;
 use crate::device::pulse::mismatch_transform;
 use crate::error::Result;
-use crate::vmm::engine::{VmmBatch, VmmEngine, VmmOutput};
+use crate::vmm::engine::{DynEngine, VmmBatch, VmmEngine, VmmOutput};
+use crate::vmm::program::{ProgramSpec, ProgrammedVmm, ReplayProgrammed};
 use crate::vmm::software::software_vmm_batch;
 
 use super::{probe_affine_fit, probe_input, slice_digits, slice_gain, MitigationConfig};
@@ -231,7 +232,7 @@ fn plane_mut(z: &mut [f32], s: usize, ch: usize, cells: usize) -> &mut [f32] {
     &mut z[base..base + cells]
 }
 
-impl<E: VmmEngine> VmmEngine for MitigatedEngine<E> {
+impl<E: VmmEngine + Clone + 'static> VmmEngine for MitigatedEngine<E> {
     fn name(&self) -> &'static str {
         "mitigated"
     }
@@ -255,6 +256,23 @@ impl<E: VmmEngine> VmmEngine for MitigatedEngine<E> {
 
     fn internal_parallelism(&self) -> usize {
         self.inner.internal_parallelism()
+    }
+
+    /// The mitigation pipeline rotates noise planes per variant, so a
+    /// materialized single-array program cannot represent it; serving
+    /// replays the full mitigated forward per read batch —
+    /// bit-identical, unamortized (the variant arrays themselves are
+    /// reprogrammed per read, exactly as the batch path does).
+    fn program(&self, spec: &ProgramSpec, params: &DeviceParams) -> Result<ProgrammedVmm> {
+        spec.check()?;
+        Ok(ProgrammedVmm::new(
+            spec,
+            ReplayProgrammed::new(DynEngine::new(self.clone()), spec.clone(), *params),
+        ))
+    }
+
+    fn cache_config(&self) -> String {
+        format!("mitigated[{}]:{}", self.cfg.label(), self.inner.cache_config())
     }
 }
 

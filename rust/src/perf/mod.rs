@@ -20,8 +20,9 @@ use crate::pipeline::{Activation, NetworkSpec, PipelineOptions, PipelineRunner};
 use crate::shard::FaultSpec;
 use crate::stats::moments::Moments;
 use crate::util::bench::{bench, black_box, BenchOpts, BenchResult};
+use crate::util::rng::Xoshiro256;
 use crate::vmm::{
-    DynEngine, NativeEngine, ShardedEngine, TiledEngine, VmmEngine, XlaEngine,
+    DynEngine, NativeEngine, ProgramSpec, ShardedEngine, TiledEngine, VmmEngine, XlaEngine,
 };
 
 /// Suite execution options.
@@ -202,6 +203,40 @@ pub fn run_suite(opts: &SuiteOpts) -> Vec<BenchResult> {
         },
     );
 
+    // Serving hot path: program-once/read-many amortization on
+    // repeated-weight traffic (DESIGN.md §14).  The uncached leg
+    // reprograms per request — what every batch engine did before the
+    // serving split — while the cached leg serves all requests from
+    // one programmed array; both measure the hardware read path only.
+    {
+        let (srows, scols) = (128usize, 128);
+        let nreq = if quick { 8 } else { 32 };
+        let mut rng = Xoshiro256::seed_from_u64(0x53455256); // "SERV"
+        let mut w = vec![0.0f32; srows * scols];
+        rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+        let sspec = ProgramSpec::from_seed(srows, scols, w, 0x50524F47); // "PROG"
+        let mut x = vec![0.0f32; nreq * srows];
+        rng.fill_uniform_f32(&mut x, 0.0, 1.0);
+        let sengine = NativeEngine::default();
+        let programmed = sengine.program(&sspec, &device).unwrap();
+        let sopts = BenchOpts { samples: 5, warmup: 1, items_per_iter: Some(nreq as f64) };
+        let cached = suite.go("serve-cached-128", sopts, || {
+            black_box(programmed.read(&x, nreq).unwrap());
+        });
+        let uncached = suite.go("serve-uncached-128", sopts, || {
+            for s in 0..nreq {
+                let fresh = sengine.program(&sspec, &device).unwrap();
+                black_box(fresh.read(&x[s * srows..(s + 1) * srows], 1).unwrap());
+            }
+        });
+        if let (Some(cached), Some(uncached)) = (&cached, &uncached) {
+            println!(
+                "      serve cache speedup: {:.2}x requests/sec over reprogram-per-request",
+                cached.items_per_sec(nreq as f64) / uncached.items_per_sec(nreq as f64)
+            );
+        }
+    }
+
     // Layered inference pipeline: deep VMM chains, plain vs mitigated.
     let runner = PipelineRunner::new(DynEngine::new(NativeEngine::default()));
     let popts = PipelineOptions::default();
@@ -350,6 +385,35 @@ mod tests {
             filter: Some("no-such-bench-name".into()),
         });
         assert!(results.is_empty());
+    }
+
+    #[test]
+    fn serve_cache_slugs_show_amortization() {
+        // The acceptance bar of the serving subsystem: on repeated-
+        // weight traffic the cached read path beats reprogram-per-
+        // request by >= 3x median throughput (the real margin is an
+        // order of magnitude — programming touches every cell with
+        // rounding/table work the read path never pays).
+        let results = run_suite(&SuiteOpts { quick: true, filter: Some("serve-".into()) });
+        // Compare the *minimum* samples: under parallel-test scheduler
+        // contention a descheduled quantum can inflate individual
+        // samples of the (very short) cached leg, but the min of five
+        // approaches the true cost on both sides.
+        let min_of = |name: &str| {
+            results
+                .iter()
+                .find(|r| r.name == name)
+                .unwrap_or_else(|| panic!("missing slug {name}"))
+                .min
+        };
+        let (cached, uncached) = (min_of("serve-cached-128"), min_of("serve-uncached-128"));
+        assert!(cached > 0.0 && uncached > 0.0);
+        assert!(
+            uncached / cached >= 3.0,
+            "serve cache speedup {:.2}x below the 3x bar (cached {cached:.6}s, \
+             uncached {uncached:.6}s)",
+            uncached / cached
+        );
     }
 
     #[test]

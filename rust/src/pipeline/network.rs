@@ -9,10 +9,12 @@
 //! trace bit-reproducible.
 
 use crate::coordinator::workload::{EntryDist, InputSpec};
+use crate::crossbar::array::ProgramNoise;
 use crate::error::{Error, Result};
 use crate::mitigation::MitigationConfig;
 use crate::util::rng::{splitmix64, Xoshiro256};
 use crate::vmm::engine::VmmBatch;
+use crate::vmm::program::ProgramSpec;
 
 use super::{Activation, LayerSpec};
 
@@ -178,6 +180,34 @@ impl NetworkSpec {
         w
     }
 
+    /// Program-once spec of layer `k` for deployed serving
+    /// ([`crate::pipeline::PipelineOptions::deploy`]): the teacher
+    /// weights under the `(sample 0, layer k)` programming-noise
+    /// stream.  A deployed fabric programs **one** physical instance
+    /// per layer; pinning it to the population's sample-0 Monte-Carlo
+    /// draw keeps deployed traces reproducible and bit-comparable to
+    /// the per-sample path's first sample.
+    pub fn layer_program_spec(&self, k: usize) -> ProgramSpec {
+        let l = &self.layers[k];
+        let cells = l.rows * l.cols;
+        let noise_root = Xoshiro256::seed_from_u64(stream_seed(self.seed, TAG_NOISE));
+        let mut rng = noise_root.child(0).child(k as u64);
+        // One contiguous fill, split into channels — bitwise the same
+        // packing as `layer_batch_with_weights` uses for sample 0.
+        let mut z = vec![0.0f32; 3 * cells];
+        rng.fill_normal_f32(&mut z);
+        let noise = ProgramNoise {
+            z0: z[..cells].to_vec(),
+            z1: z[cells..2 * cells].to_vec(),
+            z2: z[2 * cells..].to_vec(),
+        };
+        // Cache-identity label: unique per (network noise stream,
+        // layer).
+        let mut tag =
+            stream_seed(self.seed, TAG_NOISE) ^ (k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        ProgramSpec::with_noise(l.rows, l.cols, self.layer_weights(k), noise, splitmix64(&mut tag))
+    }
+
     /// Build the engine batch for layer `k` over the global sample
     /// range `[start, start+len)`, with per-sample inputs `x`
     /// (row-major `(len, rows)`).  Weights are the layer's teacher
@@ -300,6 +330,21 @@ mod tests {
         let l1 = n.layer_batch(1, 0, 2, &x);
         assert_ne!(l0.z_of(0, 0), l1.z_of(0, 0));
         assert_ne!(l0.z_of(0, 0), l0.z_of(1, 0));
+    }
+
+    #[test]
+    fn layer_program_spec_matches_sample_zero_stream() {
+        let n = NetworkSpec::uniform(2, 8, Activation::Relu, 19).with_population(3);
+        let x = n.input_spec().chunk(0, 3);
+        let batch = n.layer_batch(1, 0, 3, &x[..]);
+        let spec = n.layer_program_spec(1);
+        spec.check().unwrap();
+        assert_eq!(&spec.w[..], batch.w_of(0));
+        assert_eq!(&spec.noise.z0[..], batch.z_of(0, 0));
+        assert_eq!(&spec.noise.z1[..], batch.z_of(0, 1));
+        assert_eq!(&spec.noise.z2[..], batch.z_of(0, 2));
+        // Distinct layers get distinct cache labels.
+        assert_ne!(n.layer_program_spec(0).program_seed, spec.program_seed);
     }
 
     #[test]

@@ -36,7 +36,7 @@ use crate::vmm::VmmEngine;
 use super::{requantize, NetworkSpec};
 
 /// Execution options for one pipeline run.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct PipelineOptions {
     /// Samples per chunk (fixed — chunking must not depend on the
     /// thread count or determinism breaks).
@@ -44,11 +44,18 @@ pub struct PipelineOptions {
     /// Chunk-level worker budget; divided by the engine's internal
     /// fan-out exactly like the coordinator's.
     pub parallelism: Parallelism,
+    /// Deployed mode: program each layer **once** (through this
+    /// serving cache, so layer programs persist across `run` calls)
+    /// and read every sample against that instance — deployment
+    /// statistics, versus the default per-sample Monte-Carlo
+    /// reprogramming.  Layer specs are pinned to the network's
+    /// sample-0 noise stream ([`NetworkSpec::layer_program_spec`]).
+    pub deploy: Option<std::sync::Arc<crate::serve::ProgramCache>>,
 }
 
 impl Default for PipelineOptions {
     fn default() -> Self {
-        Self { chunk: 64, parallelism: Parallelism::Auto }
+        Self { chunk: 64, parallelism: Parallelism::Auto, deploy: None }
     }
 }
 
@@ -203,14 +210,30 @@ impl PipelineRunner {
         // matrix once and share it across the fan-out.
         let weights: Vec<Vec<f32>> = (0..net.depth()).map(|k| net.layer_weights(k)).collect();
         let weights_ref = &weights;
+        // Deployed mode: one program spec per layer, resolved through
+        // the shared serving cache inside the chunk jobs.
+        let deploy = opts.deploy.clone();
+        let deploy_ref = &deploy;
+        let specs: Option<Vec<crate::vmm::ProgramSpec>> = deploy
+            .as_ref()
+            .map(|_| (0..net.depth()).map(|k| net.layer_program_spec(k)).collect());
+        let specs_ref = &specs;
         let results: Vec<Result<ChunkTrace>> = run_indexed(chunk_par, plan.len(), |ci| {
             let (start, len) = plan[ci];
             let mut a_hw = inputs.chunk(start, len);
             let mut a_sw = a_hw.clone();
             let mut layers = Vec::with_capacity(net.depth());
             for (k, layer) in net.layers.iter().enumerate() {
-                let batch = net.layer_batch_with_weights(k, start, len, &a_hw, &weights_ref[k]);
-                let out = engines_ref[k].forward(&batch, &device)?;
+                let out = if let (Some(cache), Some(specs)) =
+                    (deploy_ref.as_ref(), specs_ref.as_ref())
+                {
+                    let handle = cache.get_or_program(&engines_ref[k], &specs[k], &device)?;
+                    handle.forward(&a_hw, len)?
+                } else {
+                    let batch =
+                        net.layer_batch_with_weights(k, start, len, &a_hw, &weights_ref[k]);
+                    engines_ref[k].forward(&batch, &device)?
+                };
                 // Injected-at-layer: hardware vs exact product on the
                 // same (hardware) input — the engine computes that
                 // exact product as its software reference.
@@ -403,10 +426,10 @@ mod tests {
         let runner = PipelineRunner::new(native());
         let device = presets::epiram().params;
         let whole = runner
-            .run(&net, &device, &PipelineOptions { chunk: 10, parallelism: Parallelism::Fixed(1) })
+            .run(&net, &device, &PipelineOptions { chunk: 10, parallelism: Parallelism::Fixed(1), ..PipelineOptions::default() })
             .unwrap();
         let split = runner
-            .run(&net, &device, &PipelineOptions { chunk: 3, parallelism: Parallelism::Fixed(1) })
+            .run(&net, &device, &PipelineOptions { chunk: 3, parallelism: Parallelism::Fixed(1), ..PipelineOptions::default() })
             .unwrap();
         for (a, b) in whole.layers.iter().zip(&split.layers) {
             assert_eq!(a.injected.errors(), b.injected.errors());

@@ -1,0 +1,425 @@
+//! The request-serving driver: simulated clients -> bounded queue ->
+//! batching scheduler workers -> programmed-crossbar cache -> engine
+//! reads, with end-to-end telemetry.
+//!
+//! The driver is what `meliso serve-bench`, the `serve-sweep`
+//! experiment, and the serving integration tests all run.  Everything
+//! the served *outputs* depend on is deterministic — model weights,
+//! programming noise, and request vectors are pure functions of the
+//! seeds, and a cached program serves bit-identically to an uncached
+//! one — while the *timing* telemetry (latency percentiles,
+//! throughput, realized batch sizes) reflects the actual concurrent
+//! execution.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::workload::{EntryDist, InputSpec};
+use crate::device::params::DeviceParams;
+use crate::error::{Error, Result};
+use crate::util::progress::Stopwatch;
+use crate::util::rng::{splitmix64, Xoshiro256};
+use crate::vmm::{DynEngine, ProgramSpec, VmmEngine};
+
+use super::cache::{CacheCounts, ProgramCache};
+use super::scheduler::{percentile, BoundedQueue, Request};
+
+/// Stream tags separating the model-weight and request-input
+/// populations of one serve seed.
+const TAG_MODELS: u64 = 0x4D4F_4445_4C53; // "MODELS"
+const TAG_REQUESTS: u64 = 0x5245_5155; // "REQU"
+
+/// One serving run's shape.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Simulated client threads.
+    pub clients: usize,
+    /// Requests each client submits.
+    pub requests_per_client: usize,
+    /// Distinct deployed models rotated across requests.
+    pub models: usize,
+    /// Model geometry (weights are `rows x cols`).
+    pub rows: usize,
+    pub cols: usize,
+    /// Bounded request-queue capacity (backpressure bound).
+    pub queue_capacity: usize,
+    /// Largest coalesced batch.
+    pub batch_max: usize,
+    /// Batching window: how long a scheduler worker keeps draining
+    /// after the first request of a batch.
+    pub window: Duration,
+    /// Scheduler worker threads.
+    pub workers: usize,
+    /// Serve through the program cache; `false` reprograms per batch
+    /// group — the pre-serving status quo, kept as the measurable
+    /// baseline.
+    pub cache: bool,
+    /// Program-cache capacity (models resident at once).
+    pub cache_capacity: usize,
+    /// Also compute the exact software reference per request and
+    /// report the mean absolute error (the benchmark-harness mode;
+    /// off on the pure-throughput path).
+    pub measure_error: bool,
+    /// Root seed of the model-weight and request streams.
+    pub seed: u64,
+    /// Programming-noise seed of model 0 (model `m` uses a derived
+    /// child label).
+    pub program_seed: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            clients: 8,
+            requests_per_client: 64,
+            models: 4,
+            rows: crate::ROWS,
+            cols: crate::COLS,
+            queue_capacity: 256,
+            batch_max: 32,
+            window: Duration::from_micros(200),
+            workers: 2,
+            cache: true,
+            cache_capacity: 32,
+            measure_error: false,
+            seed: 0x53_45_52_56, // "SERV"
+            program_seed: 0x50_52_4F_47, // "PROG"
+        }
+    }
+}
+
+impl ServeOptions {
+    /// Total requests of the run.
+    pub fn total_requests(&self) -> usize {
+        self.clients * self.requests_per_client
+    }
+
+    fn validate(&self) -> Result<()> {
+        for (name, v) in [
+            ("clients", self.clients),
+            ("requests", self.requests_per_client),
+            ("models", self.models),
+            ("rows", self.rows),
+            ("cols", self.cols),
+            ("batch_max", self.batch_max),
+        ] {
+            if v == 0 {
+                return Err(Error::Config(format!("serve: {name} must be > 0")));
+            }
+        }
+        Ok(())
+    }
+
+    /// The deployed model specs of this run — pure functions of
+    /// `(seed, program_seed, model index)`.
+    pub fn model_specs(&self) -> Vec<ProgramSpec> {
+        let root = Xoshiro256::seed_from_u64(self.seed ^ TAG_MODELS);
+        (0..self.models)
+            .map(|m| {
+                let mut rng = root.child(m as u64);
+                let mut w = vec![0.0f32; self.rows * self.cols];
+                rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+                let mut tag = self.program_seed ^ (m as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                ProgramSpec::from_seed(self.rows, self.cols, w, splitmix64(&mut tag))
+            })
+            .collect()
+    }
+
+    /// The request-input population (read voltages, like the paper
+    /// protocol's `x`).
+    pub fn request_inputs(&self) -> InputSpec {
+        InputSpec {
+            dim: self.rows,
+            population: self.total_requests(),
+            dist: EntryDist::Uniform { lo: 0.0, hi: 1.0 },
+            seed: self.seed ^ TAG_REQUESTS,
+        }
+    }
+}
+
+/// End-to-end telemetry of one serving run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Requests served to completion.
+    pub requests: usize,
+    /// Coalesced batches processed.
+    pub batches: usize,
+    /// Mean realized batch size.
+    pub mean_batch: f64,
+    pub wall_secs: f64,
+    /// Requests per second of wall time.
+    pub throughput: f64,
+    /// Enqueue-to-decode latency percentiles, milliseconds.
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// Program-cache counters (all zero with the cache disabled).
+    pub cache: CacheCounts,
+    /// Programming cycles actually executed (cache misses, or one per
+    /// batch group when the cache is off).
+    pub programs: u64,
+    /// Mean absolute request error vs the exact reference (NaN unless
+    /// [`ServeOptions::measure_error`]).
+    pub mean_abs_error: f64,
+}
+
+/// Shared mutable tallies of one run.
+struct Tallies {
+    latencies: Vec<f64>,
+    batches: usize,
+    batched_requests: usize,
+    programs: u64,
+    err_sum: f64,
+    err_n: usize,
+}
+
+/// Run one serving simulation against `engine` under `device`.
+pub fn run_serve(
+    engine: &DynEngine,
+    device: &DeviceParams,
+    opts: &ServeOptions,
+) -> Result<ServeReport> {
+    opts.validate()?;
+    device.validate().map_err(Error::Config)?;
+    let specs = opts.model_specs();
+    let inputs = opts.request_inputs();
+    let cache = ProgramCache::new(opts.cache_capacity);
+    let queue: BoundedQueue<Request> = BoundedQueue::new(opts.queue_capacity);
+    let tallies = Mutex::new(Tallies {
+        latencies: Vec::with_capacity(opts.total_requests()),
+        batches: 0,
+        batched_requests: 0,
+        programs: 0,
+        err_sum: 0.0,
+        err_n: 0,
+    });
+    let failure: Mutex<Option<Error>> = Mutex::new(None);
+    let workers = opts.workers.max(1);
+    let wall = Stopwatch::start();
+
+    std::thread::scope(|scope| {
+        // Scheduler workers: coalesce, group by model, program-or-hit,
+        // read, account.
+        for _ in 0..workers {
+            let queue = &queue;
+            let cache = &cache;
+            let specs = &specs;
+            let tallies = &tallies;
+            let failure = &failure;
+            scope.spawn(move || loop {
+                let batch = queue.pop_batch(opts.batch_max, opts.window);
+                if batch.is_empty() {
+                    break; // closed and drained
+                }
+                if let Err(e) = serve_batch(
+                    engine, device, opts, cache, specs, &batch, tallies,
+                ) {
+                    let mut slot = failure.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(e);
+                    }
+                    drop(slot);
+                    // Unblock producers and let every worker drain out.
+                    queue.close();
+                    break;
+                }
+            });
+        }
+
+        // Simulated clients: seeded single-vector requests, rotating
+        // across models, blocking on the bounded queue (backpressure).
+        let client_handles: Vec<_> = (0..opts.clients)
+            .map(|c| {
+                let queue = &queue;
+                let inputs = &inputs;
+                scope.spawn(move || {
+                    for i in 0..opts.requests_per_client {
+                        let id = (c * opts.requests_per_client + i) as u64;
+                        let request = Request {
+                            model: id as usize % opts.models,
+                            id,
+                            x: inputs.sample(id as usize),
+                            enqueued: Instant::now(),
+                        };
+                        if !queue.push(request) {
+                            break; // shut down mid-stream
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in client_handles {
+            h.join().expect("serve client panicked");
+        }
+        queue.close();
+    });
+
+    if let Some(e) = failure.into_inner().unwrap() {
+        return Err(e);
+    }
+    let wall_secs = wall.elapsed_secs();
+    let t = tallies.into_inner().unwrap();
+    let mut lat = t.latencies;
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let requests = lat.len();
+    Ok(ServeReport {
+        requests,
+        batches: t.batches,
+        mean_batch: if t.batches > 0 {
+            t.batched_requests as f64 / t.batches as f64
+        } else {
+            0.0
+        },
+        wall_secs,
+        throughput: if wall_secs > 0.0 {
+            requests as f64 / wall_secs
+        } else {
+            0.0
+        },
+        p50_ms: percentile(&lat, 50.0) * 1e3,
+        p95_ms: percentile(&lat, 95.0) * 1e3,
+        p99_ms: percentile(&lat, 99.0) * 1e3,
+        cache: cache.counts(),
+        programs: if opts.cache { cache.counts().misses } else { t.programs },
+        mean_abs_error: if t.err_n > 0 {
+            t.err_sum / t.err_n as f64
+        } else {
+            f64::NAN
+        },
+    })
+}
+
+/// Serve one coalesced batch: group by model, resolve each group's
+/// program (cache hit or fresh), read, account latency and error.
+#[allow(clippy::too_many_arguments)]
+fn serve_batch(
+    engine: &DynEngine,
+    device: &DeviceParams,
+    opts: &ServeOptions,
+    cache: &ProgramCache,
+    specs: &[ProgramSpec],
+    batch: &[Request],
+    tallies: &Mutex<Tallies>,
+) -> Result<()> {
+    // Group requests by model, preserving arrival order within groups.
+    let mut groups: Vec<(usize, Vec<&Request>)> = Vec::new();
+    for req in batch {
+        match groups.iter_mut().find(|(m, _)| *m == req.model) {
+            Some((_, g)) => g.push(req),
+            None => groups.push((req.model, vec![req])),
+        }
+    }
+    let mut fresh_programs = 0u64;
+    let mut err_sum = 0.0f64;
+    let mut err_n = 0usize;
+    for (model, reqs) in &groups {
+        let spec = &specs[*model];
+        let handle = if opts.cache {
+            cache.get_or_program(engine, spec, device)?
+        } else {
+            fresh_programs += 1;
+            engine.program(spec, device)?
+        };
+        let n = reqs.len();
+        let mut x = Vec::with_capacity(n * opts.rows);
+        for r in reqs {
+            x.extend_from_slice(&r.x);
+        }
+        if opts.measure_error {
+            let out = handle.forward(&x, n)?;
+            err_sum += out.errors().iter().map(|e| e.abs()).sum::<f64>();
+            err_n += out.y_hw.len();
+        } else {
+            let _ = handle.read(&x, n)?;
+        }
+    }
+    let done = Instant::now();
+    let mut t = tallies.lock().unwrap();
+    for req in batch {
+        t.latencies
+            .push(done.duration_since(req.enqueued).as_secs_f64());
+    }
+    t.batches += 1;
+    t.batched_requests += batch.len();
+    t.programs += fresh_programs;
+    t.err_sum += err_sum;
+    t.err_n += err_n;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+    use crate::vmm::NativeEngine;
+
+    fn tiny(cache: bool, workers: usize) -> ServeOptions {
+        ServeOptions {
+            clients: 3,
+            requests_per_client: 8,
+            models: 2,
+            rows: 16,
+            cols: 16,
+            queue_capacity: 8,
+            batch_max: 4,
+            window: Duration::from_micros(100),
+            workers,
+            cache,
+            cache_capacity: 8,
+            measure_error: true,
+            ..ServeOptions::default()
+        }
+    }
+
+    #[test]
+    fn cached_run_serves_every_request_and_hits() {
+        let engine = DynEngine::new(NativeEngine::default());
+        let device = presets::epiram().params;
+        let r = run_serve(&engine, &device, &tiny(true, 1)).unwrap();
+        assert_eq!(r.requests, 24);
+        assert!(r.batches >= 1 && r.batches <= 24);
+        assert!(r.mean_batch >= 1.0);
+        // One worker: each model programs exactly once.
+        assert_eq!(r.cache.misses, 2);
+        assert_eq!(r.programs, 2);
+        assert!(r.cache.hits >= 1);
+        assert!(r.p50_ms <= r.p95_ms && r.p95_ms <= r.p99_ms);
+        assert!(r.throughput > 0.0);
+        assert!(r.mean_abs_error.is_finite());
+    }
+
+    #[test]
+    fn cached_and_uncached_serve_identical_physics() {
+        // The cache is a pure amortization: per-request outputs (and
+        // hence the error telemetry) match the reprogram-per-batch
+        // baseline to reduction-order tolerance.
+        let engine = DynEngine::new(NativeEngine::default());
+        let device = presets::ag_si().params;
+        let cached = run_serve(&engine, &device, &tiny(true, 2)).unwrap();
+        let uncached = run_serve(&engine, &device, &tiny(false, 2)).unwrap();
+        assert_eq!(cached.requests, uncached.requests);
+        assert_eq!(uncached.cache.hits + uncached.cache.misses, 0);
+        assert!(uncached.programs >= 2, "each batch group reprograms");
+        let (a, b) = (cached.mean_abs_error, uncached.mean_abs_error);
+        assert!((a - b).abs() < 1e-9 + 1e-9 * a.abs(), "{a} vs {b}");
+    }
+
+    #[test]
+    fn backpressure_capacity_one_still_completes() {
+        let engine = DynEngine::new(NativeEngine::default());
+        let device = presets::epiram().params;
+        let mut opts = tiny(true, 2);
+        opts.queue_capacity = 1;
+        let r = run_serve(&engine, &device, &opts).unwrap();
+        assert_eq!(r.requests, 24);
+    }
+
+    #[test]
+    fn zero_shape_rejected() {
+        let engine = DynEngine::new(NativeEngine::default());
+        let device = presets::epiram().params;
+        let mut opts = tiny(true, 1);
+        opts.models = 0;
+        assert!(run_serve(&engine, &device, &opts).is_err());
+    }
+}

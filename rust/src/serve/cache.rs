@@ -1,0 +1,323 @@
+//! [`ProgramCache`]: the programmed-crossbar cache behind the serving
+//! subsystem.
+//!
+//! Keyed by `(weights digest, device digest, program seed, engine
+//! config)` — everything that determines the programmed conductances
+//! bit-for-bit — so repeated requests against the same deployed model
+//! skip reprogramming entirely.  What is cached is the **program**
+//! (the arrays), never a read result: reads are recomputed per request
+//! against the cached conductances, which is what keeps any read-path
+//! variation fresh per request (see DESIGN.md §14).  Parallelism knobs
+//! are deliberately absent from the key: engine results are
+//! bit-identical for any thread count, so differently-fanned clones of
+//! one configuration share entries.
+//!
+//! The cache is a bounded LRU behind one mutex; programming itself
+//! runs **outside** the lock, so a slow program never stalls hits on
+//! other models.  Two workers racing on the same cold key may both
+//! program (both count as misses); the first insert wins and both get
+//! handles over identical arrays, so results are unaffected.
+
+use std::collections::hash_map::Entry as MapEntry;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::device::params::DeviceParams;
+use crate::error::Result;
+use crate::vmm::{ProgramSpec, ProgrammedVmm, VmmEngine};
+
+/// FNV-1a over a stream of 64-bit words (64-bit offset basis and
+/// prime, `0x100000001b3`).
+fn fnv1a(words: impl IntoIterator<Item = u64>) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for w in words {
+        // Fold the full word through in two halves so every bit of the
+        // input reaches the accumulator.
+        for part in [w as u32 as u64, w >> 32] {
+            h = (h ^ part).wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Cache identity of one programmed model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    /// Digest of `(rows, cols, w bits)`.
+    pub weights: u64,
+    /// Digest of the device parameter bits.
+    pub device: u64,
+    /// The spec's programming-noise seed label.
+    pub program_seed: u64,
+    /// Digest of [`VmmEngine::cache_config`].
+    pub engine: u64,
+}
+
+impl CacheKey {
+    pub fn new<E: VmmEngine + ?Sized>(
+        engine: &E,
+        spec: &ProgramSpec,
+        params: &DeviceParams,
+    ) -> Self {
+        let weights = fnv1a(
+            [spec.rows as u64, spec.cols as u64]
+                .into_iter()
+                .chain(spec.w.iter().map(|v| v.to_bits() as u64)),
+        );
+        // Full f64 bits of every field: the programmed conductances
+        // are computed in f64, so an f32-truncated digest would let
+        // sub-f32 parameter differences collide on one key.
+        let device = fnv1a(
+            [
+                params.states,
+                params.memory_window,
+                params.nu_ltp,
+                params.nu_ltd,
+                params.sigma_c2c,
+                params.k_c2c,
+                params.k_base,
+                params.s_exp,
+            ]
+            .map(f64::to_bits),
+        );
+        let engine = fnv1a(engine.cache_config().bytes().map(u64::from));
+        Self {
+            weights,
+            device,
+            program_seed: spec.program_seed,
+            engine,
+        }
+    }
+}
+
+struct CacheEntry {
+    handle: ProgrammedVmm,
+    last_used: u64,
+}
+
+struct CacheInner {
+    map: HashMap<CacheKey, CacheEntry>,
+    tick: u64,
+}
+
+/// Consistent counter snapshot of a [`ProgramCache`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheCounts {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Entries currently resident.
+    pub entries: u64,
+}
+
+impl CacheCounts {
+    /// Hit fraction of all lookups (NaN with zero lookups).
+    pub fn hit_rate(&self) -> f64 {
+        self.hits as f64 / (self.hits + self.misses) as f64
+    }
+}
+
+/// Bounded LRU cache of programmed models.
+pub struct ProgramCache {
+    capacity: usize,
+    inner: Mutex<CacheInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl std::fmt::Debug for ProgramCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let c = self.counts();
+        f.debug_struct("ProgramCache")
+            .field("capacity", &self.capacity)
+            .field("counts", &c)
+            .finish()
+    }
+}
+
+impl ProgramCache {
+    /// Cache holding at most `capacity` programmed models (clamped to
+    /// at least 1).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity: capacity.max(1),
+            inner: Mutex::new(CacheInner { map: HashMap::new(), tick: 0 }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Look the program up, programming (outside the lock) on a miss.
+    pub fn get_or_program<E: VmmEngine + ?Sized>(
+        &self,
+        engine: &E,
+        spec: &ProgramSpec,
+        params: &DeviceParams,
+    ) -> Result<ProgrammedVmm> {
+        let key = CacheKey::new(engine, spec, params);
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(e) = inner.map.get_mut(&key) {
+                e.last_used = tick;
+                let handle = e.handle.clone();
+                drop(inner);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(handle);
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let fresh = engine.program(spec, params)?;
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let handle = match inner.map.entry(key) {
+            MapEntry::Occupied(mut o) => {
+                // A racing worker inserted first; its arrays are
+                // bit-identical (same key), keep them.
+                o.get_mut().last_used = tick;
+                o.get().handle.clone()
+            }
+            MapEntry::Vacant(v) => {
+                v.insert(CacheEntry { handle: fresh.clone(), last_used: tick });
+                fresh
+            }
+        };
+        while inner.map.len() > self.capacity {
+            let victim = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+                .expect("map over capacity is non-empty");
+            inner.map.remove(&victim);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(handle)
+    }
+
+    pub fn counts(&self) -> CacheCounts {
+        let entries = self.inner.lock().unwrap().map.len() as u64;
+        CacheCounts {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+    use crate::util::rng::Xoshiro256;
+    use crate::vmm::{NativeEngine, TiledEngine};
+
+    fn spec(rows: usize, cols: usize, seed: u64) -> ProgramSpec {
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0xABCD);
+        let mut w = vec![0.0f32; rows * cols];
+        rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+        ProgramSpec::from_seed(rows, cols, w, seed)
+    }
+
+    #[test]
+    fn hit_on_repeat_miss_on_change() {
+        let cache = ProgramCache::new(8);
+        let engine = NativeEngine::sequential();
+        let params = presets::epiram().params;
+        let a = spec(8, 8, 1);
+        cache.get_or_program(&engine, &a, &params).unwrap();
+        cache.get_or_program(&engine, &a, &params).unwrap();
+        assert_eq!(cache.counts().hits, 1);
+        assert_eq!(cache.counts().misses, 1);
+        // Different weights, program seed, or device: all misses.
+        cache.get_or_program(&engine, &spec(8, 8, 2), &params).unwrap();
+        let reseeded = ProgramSpec::from_seed(8, 8, a.w.clone(), 99);
+        cache.get_or_program(&engine, &reseeded, &params).unwrap();
+        cache
+            .get_or_program(&engine, &a, &presets::ag_si().params)
+            .unwrap();
+        // Sub-f32 device differences are distinct programs too: the
+        // physics runs in f64.
+        let mut tweaked = params;
+        tweaked.k_base += 1e-9;
+        cache.get_or_program(&engine, &a, &tweaked).unwrap();
+        let c = cache.counts();
+        assert_eq!(c.misses, 5);
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.entries, 5);
+    }
+
+    #[test]
+    fn engine_config_separates_entries_but_parallelism_does_not() {
+        let cache = ProgramCache::new(8);
+        let params = presets::epiram().params;
+        let s = spec(8, 8, 3);
+        cache
+            .get_or_program(&NativeEngine::sequential(), &s, &params)
+            .unwrap();
+        // Same engine config, different fan-out: a hit.
+        cache
+            .get_or_program(&NativeEngine::default(), &s, &params)
+            .unwrap();
+        assert_eq!(cache.counts().hits, 1);
+        // A different engine (or tile geometry) is a different program.
+        cache
+            .get_or_program(&TiledEngine::with_tile(4), &s, &params)
+            .unwrap();
+        cache
+            .get_or_program(&TiledEngine::with_tile(8), &s, &params)
+            .unwrap();
+        let c = cache.counts();
+        assert_eq!(c.misses, 3);
+        assert_eq!(c.entries, 3);
+    }
+
+    #[test]
+    fn lru_eviction_bounds_residency() {
+        let cache = ProgramCache::new(2);
+        let engine = NativeEngine::sequential();
+        let params = presets::epiram().params;
+        let (a, b, c) = (spec(4, 4, 10), spec(4, 4, 11), spec(4, 4, 12));
+        cache.get_or_program(&engine, &a, &params).unwrap();
+        cache.get_or_program(&engine, &b, &params).unwrap();
+        // Touch a so b is the LRU victim when c arrives.
+        cache.get_or_program(&engine, &a, &params).unwrap();
+        cache.get_or_program(&engine, &c, &params).unwrap();
+        let counts = cache.counts();
+        assert_eq!(counts.entries, 2);
+        assert_eq!(counts.evictions, 1);
+        // a stayed resident, b was evicted.
+        cache.get_or_program(&engine, &a, &params).unwrap();
+        assert_eq!(cache.counts().hits, 2);
+        cache.get_or_program(&engine, &b, &params).unwrap();
+        assert_eq!(cache.counts().misses, 4);
+        assert!((cache.counts().hit_rate() - 2.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cached_handle_serves_identical_outputs() {
+        let cache = ProgramCache::new(4);
+        let engine = NativeEngine::default();
+        let params = presets::ag_si().params;
+        let s = spec(16, 16, 21);
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let mut x = vec![0.0f32; 3 * 16];
+        rng.fill_uniform_f32(&mut x, 0.0, 1.0);
+        let first = cache.get_or_program(&engine, &s, &params).unwrap();
+        let second = cache.get_or_program(&engine, &s, &params).unwrap();
+        assert_eq!(
+            first.read(&x, 3).unwrap(),
+            second.read(&x, 3).unwrap()
+        );
+    }
+}

@@ -1,0 +1,40 @@
+//! Request serving: concurrent VMM inference over programmed-crossbar
+//! caching and batched scheduling.
+//!
+//! MELISO's batch engines characterize error populations; a deployed
+//! RRAM fabric *serves traffic* — weights are programmed once and read
+//! millions of times (the serving-oriented case of arXiv:2508.13298).
+//! This subsystem is that deployment layer, built on the
+//! program-once/read-many engine contract ([`crate::vmm::program`]):
+//!
+//! ```text
+//! clients ──> BoundedQueue (backpressure) ──> scheduler workers
+//!                                               │  coalesce ≤ batch_max
+//!                                               │  within the window
+//!                                               ▼
+//!                                     ProgramCache ──miss──> VmmEngine::program
+//!                                               │hit
+//!                                               ▼
+//!                                     ProgrammedVmm::read  (fresh per request)
+//! ```
+//!
+//! * [`cache::ProgramCache`] — bounded LRU of programmed models keyed
+//!   by `(weights digest, device, program seed, engine config)`;
+//!   caches **programs**, never reads.
+//! * [`scheduler`] — the bounded blocking queue (producers throttle
+//!   when it fills) and window-based batch coalescing.
+//! * [`bench::run_serve`] — the simulation driver behind
+//!   `meliso serve-bench` and the `serve-sweep` experiment, reporting
+//!   p50/p95/p99 latency, throughput, realized batch sizes, cache
+//!   counters, and (optionally) the exact-reference error.
+//!
+//! Architecture, cache-keying rationale, and backpressure semantics:
+//! DESIGN.md §14.
+
+pub mod bench;
+pub mod cache;
+pub mod scheduler;
+
+pub use bench::{run_serve, ServeOptions, ServeReport};
+pub use cache::{CacheCounts, CacheKey, ProgramCache};
+pub use scheduler::{percentile, BoundedQueue, Request};

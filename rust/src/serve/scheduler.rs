@@ -1,0 +1,221 @@
+//! Batching scheduler primitives: a bounded blocking queue with
+//! backpressure, the request type, and latency accounting.
+//!
+//! `tokio` is not in the offline registry; the serving substrate is
+//! therefore the same honest one the engines use — OS threads over a
+//! `Mutex`/`Condvar` queue.  Clients block in
+//! [`BoundedQueue::push`] when the queue is full (bounded-queue
+//! backpressure: a slow fabric throttles its producers instead of
+//! buffering unboundedly), and scheduler workers coalesce queued
+//! single-vector requests into engine-sized batches with
+//! [`BoundedQueue::pop_batch`]: block for the first request, then keep
+//! draining until the batch is full or the batching window has
+//! elapsed.  A zero window degenerates to "whatever is already
+//! queued"; a long window trades tail latency for larger batches —
+//! the `serve-sweep` experiment measures exactly this trade.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One single-vector VMM request from a simulated client.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Which deployed model (weight matrix) this request targets.
+    pub model: usize,
+    /// Global request id (client id x per-client sequence).
+    pub id: u64,
+    /// The input vector (`rows` entries).
+    pub x: Vec<f32>,
+    /// Enqueue timestamp — latency is measured enqueue-to-decode.
+    pub enqueued: Instant,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded MPMC queue: blocking producers (backpressure), batching
+/// consumers, explicit close-and-drain shutdown.
+pub struct BoundedQueue<T> {
+    inner: Mutex<QueueState<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    /// Queue holding at most `capacity` items (clamped to at least 1).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            inner: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enqueue, blocking while the queue is full.  Returns `false`
+    /// (dropping the item) if the queue was closed — producers use
+    /// this to stop on shutdown or on a downstream error.
+    pub fn push(&self, item: T) -> bool {
+        let mut st = self.inner.lock().unwrap();
+        loop {
+            if st.closed {
+                return false;
+            }
+            if st.items.len() < self.capacity {
+                st.items.push_back(item);
+                self.not_empty.notify_one();
+                return true;
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Close the queue: producers stop, consumers drain what remains.
+    pub fn close(&self) {
+        let mut st = self.inner.lock().unwrap();
+        st.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Pop one coalesced batch of up to `max` items: block for the
+    /// first item, then drain until the batch is full or `window` has
+    /// elapsed since the first item was taken.  An empty return means
+    /// the queue is closed and fully drained — the consumer's stop
+    /// signal.
+    pub fn pop_batch(&self, max: usize, window: Duration) -> Vec<T> {
+        let max = max.max(1);
+        let mut st = self.inner.lock().unwrap();
+        while st.items.is_empty() {
+            if st.closed {
+                return Vec::new();
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+        let mut batch = Vec::with_capacity(max.min(st.items.len()));
+        let deadline = Instant::now() + window;
+        loop {
+            while batch.len() < max {
+                match st.items.pop_front() {
+                    Some(item) => batch.push(item),
+                    None => break,
+                }
+            }
+            if !batch.is_empty() {
+                self.not_full.notify_all();
+            }
+            if batch.len() >= max || st.closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _timeout) = self
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = guard;
+            if st.items.is_empty() && Instant::now() >= deadline {
+                break;
+            }
+        }
+        batch
+    }
+}
+
+/// Latency percentile over raw samples (seconds); `sorted` must be
+/// ascending.  Nearest-rank on the inclusive index grid; NaN when
+/// empty.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order_and_drain_on_close() {
+        let q = BoundedQueue::new(16);
+        for i in 0..5 {
+            assert!(q.push(i));
+        }
+        q.close();
+        assert!(!q.push(99), "closed queue must refuse new items");
+        let batch = q.pop_batch(3, Duration::from_millis(0));
+        assert_eq!(batch, vec![0, 1, 2]);
+        let batch = q.pop_batch(8, Duration::from_millis(0));
+        assert_eq!(batch, vec![3, 4]);
+        assert!(q.pop_batch(8, Duration::from_millis(0)).is_empty());
+    }
+
+    #[test]
+    fn window_coalesces_trickling_producers() {
+        let q = Arc::new(BoundedQueue::new(16));
+        let producer = Arc::clone(&q);
+        let handle = std::thread::spawn(move || {
+            for i in 0..4 {
+                producer.push(i);
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        });
+        // A generous window sees more than the first item.
+        let batch = q.pop_batch(4, Duration::from_millis(500));
+        assert!(!batch.is_empty());
+        assert_eq!(batch[0], 0);
+        handle.join().unwrap();
+        q.close();
+        let rest = q.pop_batch(16, Duration::from_millis(0));
+        assert_eq!(batch.len() + rest.len(), 4);
+    }
+
+    #[test]
+    fn backpressure_blocks_until_consumed() {
+        let q = Arc::new(BoundedQueue::new(2));
+        assert!(q.push(1));
+        assert!(q.push(2));
+        let producer = Arc::clone(&q);
+        let handle = std::thread::spawn(move || producer.push(3));
+        // The producer is blocked on a full queue; popping frees it.
+        std::thread::sleep(Duration::from_millis(5));
+        let batch = q.pop_batch(1, Duration::from_millis(0));
+        assert_eq!(batch, vec![1]);
+        assert!(handle.join().unwrap());
+        q.close();
+        let rest = q.pop_batch(8, Duration::from_millis(0));
+        assert_eq!(rest, vec![2, 3]);
+    }
+
+    #[test]
+    fn percentile_ranks() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert!((percentile(&xs, 50.0) - 51.0).abs() <= 1.0);
+        assert!(percentile(&xs, 95.0) >= 94.0);
+        assert!(percentile(&[], 50.0).is_nan());
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+}

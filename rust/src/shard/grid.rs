@@ -106,16 +106,33 @@ fn blocks(n: usize, parts: usize) -> Vec<(usize, usize)> {
 
 /// Parse an `RxC` grid spec (e.g. `"2x4"`), as used by `--shards` and
 /// the `[shard] grid` TOML key.
+///
+/// Failures are actionable, not bare parse errors: every message
+/// states the expected `RxC` shape, quotes the offending input, and
+/// names which half is wrong (mirroring the `EngineKind::ALL`
+/// unknown-engine message, which lists every valid name).
 pub fn parse_grid(s: &str) -> Result<(usize, usize)> {
-    let bad = || Error::Config(format!("shard grid must be RxC with R,C >= 1 (got '{s}')"));
+    let bad = |what: &str| {
+        Error::Config(format!(
+            "shard grid must be 'RxC' with positive integers, e.g. '2x4' — \
+             got '{s}' ({what})"
+        ))
+    };
     let spec = s.trim().to_ascii_lowercase();
-    let (r, c) = spec.split_once('x').ok_or_else(bad)?;
-    let r: usize = r.trim().parse().map_err(|_| bad())?;
-    let c: usize = c.trim().parse().map_err(|_| bad())?;
-    if r == 0 || c == 0 {
-        return Err(bad());
-    }
-    Ok((r, c))
+    let (r, c) = spec
+        .split_once('x')
+        .ok_or_else(|| bad("missing the 'x' separator"))?;
+    let parse_half = |half: &str, name: &str| -> Result<usize> {
+        let n: usize = half
+            .trim()
+            .parse()
+            .map_err(|_| bad(&format!("{name} '{}' is not an integer", half.trim())))?;
+        if n == 0 {
+            return Err(bad(&format!("{name} must be >= 1")));
+        }
+        Ok(n)
+    };
+    Ok((parse_half(r, "rows")?, parse_half(c, "columns")?))
 }
 
 #[cfg(test)]
@@ -169,5 +186,29 @@ mod tests {
         assert!(parse_grid("0x2").is_err());
         assert!(parse_grid("2x").is_err());
         assert!(parse_grid("ax2").is_err());
+        assert!(parse_grid("2x3x4").is_err());
+    }
+
+    #[test]
+    fn parse_grid_errors_name_format_input_and_cause() {
+        // A malformed spec must report the expected RxC format and the
+        // offending input — never a bare integer-parse error.
+        for (input, cause) in [
+            ("4", "separator"),
+            ("x4", "not an integer"),
+            ("4x", "not an integer"),
+            ("axb", "not an integer"),
+            ("0x2", ">= 1"),
+            ("2x0", ">= 1"),
+            ("2x3x4", "not an integer"),
+        ] {
+            let msg = parse_grid(input).unwrap_err().to_string();
+            assert!(msg.contains("RxC"), "input {input:?}: {msg}");
+            assert!(msg.contains(input), "input {input:?}: {msg}");
+            assert!(msg.contains(cause), "input {input:?}: {msg}");
+        }
+        // Which half is wrong is named.
+        assert!(parse_grid("ax2").unwrap_err().to_string().contains("rows"));
+        assert!(parse_grid("2xb").unwrap_err().to_string().contains("columns"));
     }
 }

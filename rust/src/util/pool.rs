@@ -20,14 +20,34 @@ pub enum Parallelism {
 }
 
 impl Parallelism {
+    /// Environment override for `Auto`: CI pins this to 1 and 4 to
+    /// exercise the thread-count-determinism contract on fixed widths
+    /// (results are bit-identical either way; this pins the *width*).
+    pub const THREADS_ENV: &'static str = "MELISO_THREADS";
+
     pub fn threads(self) -> usize {
         match self {
-            Parallelism::Auto => std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1),
+            Parallelism::Auto => {
+                parse_threads_override(std::env::var(Self::THREADS_ENV).ok().as_deref())
+                    .unwrap_or_else(|| {
+                        std::thread::available_parallelism()
+                            .map(|n| n.get())
+                            .unwrap_or(1)
+                    })
+            }
             Parallelism::Fixed(n) => n.max(1),
         }
     }
+}
+
+/// Parse a `MELISO_THREADS` value; `None`/invalid/zero disables the
+/// override (factored out so the policy is unit-testable without
+/// mutating the process environment, which would race concurrent
+/// `env::var` readers in the parallel test binary).
+fn parse_threads_override(value: Option<&str>) -> Option<usize> {
+    value
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
 }
 
 impl Default for Parallelism {
@@ -187,6 +207,23 @@ mod tests {
     fn auto_threads_positive() {
         assert!(Parallelism::Auto.threads() >= 1);
         assert_eq!(Parallelism::Fixed(0).threads(), 1);
+    }
+
+    #[test]
+    fn meliso_threads_override_policy() {
+        // The policy is tested on the pure parser — mutating the real
+        // environment here would race concurrent env::var readers in
+        // the parallel test binary.  CI's MELISO_THREADS=1/4 legs
+        // exercise the env wiring end-to-end.
+        assert_eq!(parse_threads_override(Some("3")), Some(3));
+        assert_eq!(parse_threads_override(Some(" 4 ")), Some(4));
+        for bad in ["0", "-2", "lots", ""] {
+            assert_eq!(parse_threads_override(Some(bad)), None, "value {bad:?}");
+        }
+        assert_eq!(parse_threads_override(None), None);
+        // Fixed is never overridden; Auto stays positive either way.
+        assert_eq!(Parallelism::Fixed(2).threads(), 2);
+        assert!(Parallelism::Auto.threads() >= 1);
     }
 
     #[test]

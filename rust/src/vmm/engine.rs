@@ -1,7 +1,11 @@
-//! The engine abstraction: one batch of MELISO forward passes.
+//! The engine abstraction: one batch of MELISO forward passes, plus
+//! the program-once/read-many split used by the serving subsystem
+//! (see [`super::program`]).
 
 use crate::device::params::DeviceParams;
 use crate::error::Result;
+
+use super::program::{ProgramSpec, ProgrammedVmm};
 
 /// One batch of VMM jobs, in the artifact's input layout.
 ///
@@ -120,6 +124,14 @@ impl VmmEngine for DynEngine {
     fn internal_parallelism(&self) -> usize {
         self.0.internal_parallelism()
     }
+
+    fn program(&self, spec: &ProgramSpec, params: &DeviceParams) -> Result<ProgrammedVmm> {
+        self.0.program(spec, params)
+    }
+
+    fn cache_config(&self) -> String {
+        self.0.cache_config()
+    }
 }
 
 /// A MELISO compute backend.
@@ -144,6 +156,31 @@ pub trait VmmEngine: Send + Sync {
     /// calling thread report 1.
     fn internal_parallelism(&self) -> usize {
         1
+    }
+
+    /// Program `spec`'s weights once under `params` and return a
+    /// read-many handle whose reads are **bit-identical** to `forward`
+    /// on a batch carrying the same `(w, z)` per sample.  Every
+    /// shipped engine overrides this — with materialized arrays
+    /// (native/tiled/sharded/software) or a replay adapter
+    /// ([`super::program::ReplayProgrammed`]; XLA, mitigation).  The
+    /// default is an explicit unsupported error so a new engine cannot
+    /// silently serve nothing.
+    fn program(&self, spec: &ProgramSpec, params: &DeviceParams) -> Result<ProgrammedVmm> {
+        let _ = (spec, params);
+        Err(crate::error::Error::Unsupported(format!(
+            "engine '{}' has no program-once path (VmmEngine::program)",
+            self.name()
+        )))
+    }
+
+    /// Configuration identity for the serving program cache: two
+    /// engines with the same `cache_config` must program bit-identical
+    /// arrays from the same [`ProgramSpec`].  Parallelism knobs are
+    /// deliberately excluded — results are bit-identical for any
+    /// thread count, so differently-fanned clones share cache entries.
+    fn cache_config(&self) -> String {
+        self.name().to_string()
     }
 }
 

@@ -12,15 +12,21 @@
 //!   detection/correction of gross shard faults in the reduction.
 //! * [`XlaEngine`] — executes the AOT-lowered L2/L1 pipeline through
 //!   PJRT; the production hot path (requires the `xla` binding).
+//!
+//! Every engine also implements the program-once/read-many split
+//! ([`VmmEngine::program`] -> [`ProgrammedVmm`], see [`program`]) that
+//! the request-serving subsystem ([`crate::serve`]) builds on.
 
 pub mod engine;
 pub mod native;
+pub mod program;
 pub mod sharded;
 pub mod software;
 pub mod tiled;
 pub mod xla_engine;
 
 pub use engine::{DynEngine, VmmBatch, VmmEngine, VmmOutput};
+pub use program::{ProgramSpec, ProgrammedRead, ProgrammedVmm, ReplayProgrammed};
 pub use native::NativeEngine;
 pub use sharded::{ShardCounts, ShardStats, ShardedEngine, DEFAULT_CHECKSUM_THRESHOLD};
 pub use software::{software_vmm_batch, software_vmm_single, SoftwareEngine};

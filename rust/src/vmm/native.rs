@@ -24,6 +24,7 @@ use crate::error::Result;
 use crate::util::pool::{run_blocked, Parallelism};
 
 use super::engine::{VmmBatch, VmmEngine, VmmOutput};
+use super::program::{ProgramSpec, ProgrammedRead, ProgrammedVmm};
 use super::software::software_vmm_batch;
 
 /// Native (no-XLA) crossbar engine with engine-level parallelism.
@@ -72,9 +73,42 @@ impl Scratch {
     }
 }
 
+/// Program-once handle of the native engine: one materialized array;
+/// reads are fanned over the pool exactly like `forward` fans samples
+/// (the array is immutable at read time, so sharing it is free).
+struct ProgrammedArray {
+    arr: CrossbarArray,
+    par: Parallelism,
+}
+
+impl ProgrammedRead for ProgrammedArray {
+    fn rows(&self) -> usize {
+        self.arr.rows()
+    }
+
+    fn cols(&self) -> usize {
+        self.arr.cols()
+    }
+
+    fn read_batch(&self, x: &[f32], batch: usize) -> crate::error::Result<Vec<f32>> {
+        let (r, c) = (self.arr.rows(), self.arr.cols());
+        Ok(run_blocked(self.par, batch, c, || (), |s, _scratch, out| {
+            self.arr.read(&x[s * r..(s + 1) * r], out);
+        }))
+    }
+}
+
 impl VmmEngine for NativeEngine {
     fn name(&self) -> &'static str {
         "native"
+    }
+
+    fn program(&self, spec: &ProgramSpec, params: &DeviceParams) -> Result<ProgrammedVmm> {
+        spec.check()?;
+        let table = PulseTable::new(params, false);
+        let mut arr = CrossbarArray::zeroed(spec.rows, spec.cols);
+        arr.reprogram(&spec.w, params, &spec.noise, &table);
+        Ok(ProgrammedVmm::new(spec, ProgrammedArray { arr, par: self.par }))
     }
 
     fn forward(&self, batch: &VmmBatch, params: &DeviceParams) -> Result<VmmOutput> {
@@ -179,6 +213,32 @@ mod tests {
             5
         );
         assert!(NativeEngine::default().internal_parallelism() >= 1);
+    }
+
+    #[test]
+    fn programmed_read_bit_identical_to_uncached_forward() {
+        // Program once, serve many: every request must decode exactly
+        // as the uncached per-sample path with the same (w, z).
+        let mut rng = Xoshiro256::seed_from_u64(147);
+        let mut w = vec![0.0f32; 32 * 32];
+        rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+        let spec = ProgramSpec::from_seed(32, 32, w, 1470);
+        let params = presets::ag_si().params;
+        let mut x = vec![0.0f32; 5 * 32];
+        rng.fill_uniform_f32(&mut x, 0.0, 1.0);
+        let uncached = NativeEngine::sequential()
+            .forward(&spec.to_batch(&x, 5), &params)
+            .unwrap();
+        for par in [Parallelism::Fixed(1), Parallelism::Auto] {
+            let handle = NativeEngine::with_parallelism(par)
+                .program(&spec, &params)
+                .unwrap();
+            let served = handle.forward(&x, 5).unwrap();
+            assert_eq!(served.y_hw, uncached.y_hw, "{par:?}");
+            assert_eq!(served.y_sw, uncached.y_sw);
+            // The hot read path agrees with the measurement path.
+            assert_eq!(handle.read(&x, 5).unwrap(), served.y_hw);
+        }
     }
 
     #[test]

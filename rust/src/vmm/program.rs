@@ -1,0 +1,417 @@
+//! Program-once/read-many split of the engine contract.
+//!
+//! Every batch engine in this crate historically reprogrammed its
+//! crossbar from scratch for every sample of every `forward` call —
+//! the right model for Monte-Carlo error populations, and exactly the
+//! wrong one for *serving*, where weights are programmed once and read
+//! millions of times (the deployment model of arXiv:2508.13298).  The
+//! device physics already separates the two phases: all stochastic
+//! draws (C2C walk, mismatch residue) enter at **program** time, and
+//! the analog **read** is a deterministic function of the programmed
+//! conductances and the drive vector.  Splitting the contract is
+//! therefore physically faithful, not an approximation:
+//!
+//! * [`ProgramSpec`] — one weight matrix plus the explicit noise draws
+//!   of its single programming cycle (seedable via
+//!   [`ProgramSpec::from_seed`]).
+//! * [`crate::vmm::VmmEngine::program`] — engine-specific programming,
+//!   returning a [`ProgrammedVmm`] handle.
+//! * [`ProgrammedVmm::read`] / [`ProgrammedVmm::forward`] — the
+//!   read-many phase: serve any number of input vectors against the
+//!   programmed arrays, **bit-identical** to the engine's `forward` on
+//!   a batch carrying the same `(w, z)` per sample (the property suite
+//!   in `rust/tests/proptests.rs` enforces this for every engine).
+//!
+//! Engines without a materialized-array path (the artifact-pinned XLA
+//! engine, the mitigation adapter) return a [`ReplayProgrammed`]
+//! handle, which replays the full `forward` with the stored `(w, z)`
+//! replicated per request — bit-identical by construction, amortizing
+//! nothing, but letting the serving layer treat every engine uniformly
+//! (the [`crate::serve::ProgramCache`] still deduplicates handles).
+
+use std::sync::Arc;
+
+use crate::crossbar::array::ProgramNoise;
+use crate::device::params::DeviceParams;
+use crate::error::{Error, Result};
+use crate::util::rng::Xoshiro256;
+
+use super::engine::{DynEngine, VmmBatch, VmmEngine, VmmOutput};
+use super::software::software_vmm_single;
+
+/// One weight matrix plus the explicit programming-noise draws of its
+/// single programming cycle — everything an engine needs to program
+/// arrays once and serve reads forever after.
+#[derive(Debug, Clone)]
+pub struct ProgramSpec {
+    pub rows: usize,
+    pub cols: usize,
+    /// Target weights, row-major `(rows, cols)`, in `[-1, 1]`.
+    pub w: Vec<f32>,
+    /// The cycle's noise draws over the logical geometry (`z0` C2C+,
+    /// `z1` C2C-, `z2` mismatch).
+    pub noise: ProgramNoise,
+    /// Seed label identifying the noise content (cache identity; see
+    /// [`crate::serve::ProgramCache`]).
+    pub program_seed: u64,
+}
+
+impl ProgramSpec {
+    /// Spec with noise drawn from `program_seed` in channel order
+    /// (`z0`, `z1`, `z2`) — the same stream discipline as the
+    /// coordinator's artifact-input packing.
+    pub fn from_seed(rows: usize, cols: usize, w: Vec<f32>, program_seed: u64) -> Self {
+        let mut rng = Xoshiro256::seed_from_u64(program_seed);
+        let noise = ProgramNoise::sample(&mut rng, rows * cols);
+        Self { rows, cols, w, noise, program_seed }
+    }
+
+    /// Spec with caller-supplied noise planes; `program_seed` is the
+    /// caller's label for that noise content (it must uniquely identify
+    /// the planes, or the program cache will conflate distinct
+    /// programs).
+    pub fn with_noise(
+        rows: usize,
+        cols: usize,
+        w: Vec<f32>,
+        noise: ProgramNoise,
+        program_seed: u64,
+    ) -> Self {
+        Self { rows, cols, w, noise, program_seed }
+    }
+
+    /// Validate internal consistency.
+    pub fn check(&self) -> Result<()> {
+        let cells = self.rows * self.cols;
+        if self.rows == 0 || self.cols == 0 {
+            return Err(Error::Shape("program spec geometry must be positive".into()));
+        }
+        if self.w.len() != cells {
+            return Err(Error::Shape(format!(
+                "program spec w: {} != {cells}",
+                self.w.len()
+            )));
+        }
+        for (name, plane) in [
+            ("z0", &self.noise.z0),
+            ("z1", &self.noise.z1),
+            ("z2", &self.noise.z2),
+        ] {
+            if plane.len() != cells {
+                return Err(Error::Shape(format!(
+                    "program spec {name}: {} != {cells}",
+                    plane.len()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// The uncached batch equivalent to serving `batch` requests
+    /// against this program: every sample carries the spec's `(w, z)`,
+    /// inputs are the request vectors (row-major `(batch, rows)`).
+    /// This is the comparison object of the cached-vs-uncached
+    /// bit-equality properties.
+    pub fn to_batch(&self, x: &[f32], batch: usize) -> VmmBatch {
+        assert_eq!(x.len(), batch * self.rows, "request buffer size mismatch");
+        let cells = self.rows * self.cols;
+        let mut vb = VmmBatch::zeros(batch, self.rows, self.cols);
+        vb.x.copy_from_slice(x);
+        for s in 0..batch {
+            vb.w[s * cells..(s + 1) * cells].copy_from_slice(&self.w);
+            let zb = s * 3 * cells;
+            vb.z[zb..zb + cells].copy_from_slice(&self.noise.z0);
+            vb.z[zb + cells..zb + 2 * cells].copy_from_slice(&self.noise.z1);
+            vb.z[zb + 2 * cells..zb + 3 * cells].copy_from_slice(&self.noise.z2);
+        }
+        vb
+    }
+}
+
+/// Engine-specific programmed state: the read-many half of the split
+/// contract.  Implementations hold materialized arrays (or a replay
+/// closure over the full engine) and serve batched reads from them.
+pub trait ProgrammedRead: Send + Sync {
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+    /// Decoded analog reads of `batch` input vectors (row-major
+    /// `(batch, rows)`), returned row-major `(batch, cols)`.
+    fn read_batch(&self, x: &[f32], batch: usize) -> Result<Vec<f32>>;
+}
+
+/// A programmed crossbar handle: program once, read many.  Cheaply
+/// cloneable (the programmed state is shared), so the serving cache
+/// can hand the same program to many scheduler workers.
+#[derive(Clone)]
+pub struct ProgrammedVmm {
+    read: Arc<dyn ProgrammedRead>,
+    /// Exact target weights, retained for the software reference of
+    /// [`ProgrammedVmm::forward`].
+    w: Arc<Vec<f32>>,
+    rows: usize,
+    cols: usize,
+}
+
+impl std::fmt::Debug for ProgrammedVmm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ProgrammedVmm")
+            .field("rows", &self.rows)
+            .field("cols", &self.cols)
+            .finish()
+    }
+}
+
+impl ProgrammedVmm {
+    /// Wrap an engine's programmed state for the given spec.
+    pub fn new<R: ProgrammedRead + 'static>(spec: &ProgramSpec, read: R) -> Self {
+        debug_assert_eq!(read.rows(), spec.rows);
+        debug_assert_eq!(read.cols(), spec.cols);
+        Self {
+            read: Arc::new(read),
+            w: Arc::new(spec.w.clone()),
+            rows: spec.rows,
+            cols: spec.cols,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The serving hot path: hardware reads only, row-major
+    /// `(batch, cols)`.  Nothing here is cached — every read is a
+    /// fresh pass over the programmed conductances, so any read-path
+    /// stochasticity stays fresh per request by construction.
+    pub fn read(&self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        if x.len() != batch * self.rows {
+            return Err(Error::Shape(format!(
+                "serve read: x {} != {} ({} requests x {} rows)",
+                x.len(),
+                batch * self.rows,
+                batch,
+                self.rows
+            )));
+        }
+        self.read.read_batch(x, batch)
+    }
+
+    /// The measurement path: hardware reads plus the exact software
+    /// reference — the same output contract as
+    /// [`crate::vmm::VmmEngine::forward`], for error telemetry and the
+    /// bit-equality properties.
+    pub fn forward(&self, x: &[f32], batch: usize) -> Result<VmmOutput> {
+        let y_hw = self.read(x, batch)?;
+        let mut y_sw = vec![0.0f32; batch * self.cols];
+        let mut acc = vec![0.0f64; self.cols];
+        for s in 0..batch {
+            software_vmm_single(
+                &self.w,
+                &x[s * self.rows..(s + 1) * self.rows],
+                self.rows,
+                self.cols,
+                &mut acc,
+                &mut y_sw[s * self.cols..(s + 1) * self.cols],
+            );
+        }
+        Ok(VmmOutput { y_hw, y_sw })
+    }
+}
+
+/// Fallback programmed handle for engines without a materialized-array
+/// path: every read replays the engine's full `forward` on the stored
+/// `(w, z)` replicated per request — bit-identical to the uncached
+/// path by construction, with zero amortization.
+pub struct ReplayProgrammed {
+    engine: DynEngine,
+    spec: ProgramSpec,
+    params: DeviceParams,
+}
+
+impl ReplayProgrammed {
+    pub fn new(engine: DynEngine, spec: ProgramSpec, params: DeviceParams) -> Self {
+        Self { engine, spec, params }
+    }
+}
+
+impl ProgrammedRead for ReplayProgrammed {
+    fn rows(&self) -> usize {
+        self.spec.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.spec.cols
+    }
+
+    fn read_batch(&self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let cols = self.spec.cols;
+        let rows = self.spec.rows;
+        let mut y = vec![0.0f32; batch * cols];
+        // Honour pinned batch sizes (XLA artifacts): serve the request
+        // batch in engine-sized chunks, largest fitting first.  A
+        // remainder smaller than every pinned size is padded up to the
+        // smallest one with zero drives (grounded word lines) — sample
+        // physics is independent, so the real requests decode
+        // bit-identically and the pad outputs are discarded.
+        let preferred = self.engine.preferred_batches();
+        let mut start = 0;
+        while start < batch {
+            let remaining = batch - start;
+            let (len, run) = if preferred.is_empty() {
+                (remaining, remaining)
+            } else {
+                match preferred.iter().copied().find(|&b| b <= remaining) {
+                    Some(b) => (b, b),
+                    None => (remaining, *preferred.last().unwrap()),
+                }
+            };
+            let mut xs = vec![0.0f32; run * rows];
+            xs[..len * rows].copy_from_slice(&x[start * rows..(start + len) * rows]);
+            let vb = self.spec.to_batch(&xs, run);
+            let out = self.engine.forward(&vb, &self.params)?;
+            y[start * cols..(start + len) * cols].copy_from_slice(&out.y_hw[..len * cols]);
+            start += len;
+        }
+        Ok(y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+    use crate::vmm::{NativeEngine, SoftwareEngine};
+
+    fn spec(rows: usize, cols: usize, seed: u64) -> ProgramSpec {
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x57);
+        let mut w = vec![0.0f32; rows * cols];
+        rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+        ProgramSpec::from_seed(rows, cols, w, seed)
+    }
+
+    #[test]
+    fn from_seed_is_deterministic_and_checked() {
+        let a = spec(8, 6, 11);
+        let b = spec(8, 6, 11);
+        assert_eq!(a.noise.z0, b.noise.z0);
+        assert_eq!(a.noise.z2, b.noise.z2);
+        a.check().unwrap();
+        let mut bad = spec(4, 4, 1);
+        bad.w.pop();
+        assert!(bad.check().is_err());
+        let mut bad = spec(4, 4, 1);
+        bad.noise.z1.pop();
+        assert!(bad.check().is_err());
+    }
+
+    #[test]
+    fn to_batch_replicates_program_per_sample() {
+        let sp = spec(5, 7, 21);
+        let mut rng = Xoshiro256::seed_from_u64(99);
+        let mut x = vec![0.0f32; 3 * 5];
+        rng.fill_uniform_f32(&mut x, 0.0, 1.0);
+        let vb = sp.to_batch(&x, 3);
+        vb.check().unwrap();
+        for s in 0..3 {
+            assert_eq!(vb.w_of(s), &sp.w[..]);
+            assert_eq!(vb.z_of(s, 0), &sp.noise.z0[..]);
+            assert_eq!(vb.z_of(s, 1), &sp.noise.z1[..]);
+            assert_eq!(vb.z_of(s, 2), &sp.noise.z2[..]);
+            assert_eq!(vb.x_of(s), &x[s * 5..(s + 1) * 5]);
+        }
+    }
+
+    #[test]
+    fn replay_handle_bit_equals_uncached_forward() {
+        let sp = spec(16, 12, 31);
+        let params = presets::ag_si().params;
+        let engine = DynEngine::new(NativeEngine::sequential());
+        let handle = ProgrammedVmm::new(
+            &sp,
+            ReplayProgrammed::new(engine.clone(), sp.clone(), params),
+        );
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let mut x = vec![0.0f32; 4 * 16];
+        rng.fill_uniform_f32(&mut x, 0.0, 1.0);
+        let served = handle.forward(&x, 4).unwrap();
+        let uncached = engine.forward(&sp.to_batch(&x, 4), &params).unwrap();
+        assert_eq!(served.y_hw, uncached.y_hw);
+        assert_eq!(served.y_sw, uncached.y_sw);
+    }
+
+    #[test]
+    fn replay_pads_remainders_for_pinned_batch_engines() {
+        // An engine with pinned batch sizes and no batch-1 artifact:
+        // the replay handle must pad the remainder up to a supported
+        // size (zero drives), never submit an unsupported batch, and
+        // still serve the real requests bit-identically.
+        #[derive(Clone)]
+        struct Pinned(NativeEngine);
+        impl VmmEngine for Pinned {
+            fn name(&self) -> &'static str {
+                "pinned"
+            }
+            fn forward(&self, batch: &VmmBatch, params: &DeviceParams) -> Result<VmmOutput> {
+                assert_eq!(batch.batch, 4, "only batch-4 'artifacts' exist");
+                self.0.forward(batch, params)
+            }
+            fn preferred_batches(&self) -> Vec<usize> {
+                vec![4]
+            }
+        }
+        let sp = spec(8, 8, 51);
+        let params = presets::epiram().params;
+        let handle = ProgrammedVmm::new(
+            &sp,
+            ReplayProgrammed::new(
+                DynEngine::new(Pinned(NativeEngine::sequential())),
+                sp.clone(),
+                params,
+            ),
+        );
+        let mut rng = Xoshiro256::seed_from_u64(8);
+        let mut x = vec![0.0f32; 6 * 8];
+        rng.fill_uniform_f32(&mut x, 0.0, 1.0);
+        // 6 requests = one full pinned batch + a padded remainder of 2.
+        let served = handle.forward(&x, 6).unwrap();
+        let uncached = NativeEngine::sequential()
+            .forward(&sp.to_batch(&x, 6), &params)
+            .unwrap();
+        assert_eq!(served.y_hw, uncached.y_hw);
+        assert_eq!(served.y_hw.len(), 6 * 8);
+    }
+
+    #[test]
+    fn read_rejects_bad_request_buffer() {
+        let sp = spec(8, 8, 41);
+        let handle = ProgrammedVmm::new(
+            &sp,
+            ReplayProgrammed::new(
+                DynEngine::new(SoftwareEngine),
+                sp.clone(),
+                DeviceParams::ideal(),
+            ),
+        );
+        assert!(handle.read(&[0.0; 7], 1).is_err());
+        assert!(handle.read(&[], 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn default_trait_program_is_unsupported() {
+        struct Bare;
+        impl VmmEngine for Bare {
+            fn name(&self) -> &'static str {
+                "bare"
+            }
+            fn forward(&self, _: &VmmBatch, _: &DeviceParams) -> Result<VmmOutput> {
+                unreachable!()
+            }
+        }
+        let err = Bare.program(&spec(4, 4, 5), &DeviceParams::ideal()).unwrap_err();
+        assert!(err.to_string().contains("bare"), "{err}");
+        assert_eq!(Bare.cache_config(), "bare");
+    }
+}

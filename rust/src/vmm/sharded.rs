@@ -55,6 +55,7 @@ use crate::shard::{ChecksumCode, FaultSpec, ShardGrid, ShardRegion, Verdict};
 use crate::util::pool::{run_blocked, Parallelism};
 
 use super::engine::{VmmBatch, VmmEngine, VmmOutput};
+use super::program::{ProgramSpec, ProgrammedRead, ProgrammedVmm};
 use super::software::software_vmm_batch;
 
 /// Default detection-threshold factor (scaled by `sqrt(shard cells)`;
@@ -218,9 +219,163 @@ fn gather_region(src: &[f32], cols: usize, reg: &ShardRegion, width: usize, out:
     }
 }
 
+/// Program-once handle of the sharded engine: every shard's augmented
+/// array materialized once (checksum columns encoded, faults — if a
+/// policy is attached — drawn as the stream's *sample 0* cell, since a
+/// deployed fabric programs one physical instance).  Reads fan over
+/// requests; each request's verify-correct-accumulate reduction runs
+/// in fixed shard order with the same arithmetic as `forward`, so
+/// served outputs are bit-identical to the uncached path on the same
+/// `(w, z)`.
+struct ProgrammedShards {
+    rows: usize,
+    cols: usize,
+    grid: ShardGrid,
+    codes: Vec<ChecksumCode>,
+    arrays: Vec<CrossbarArray>,
+    width: usize,
+    max_r: usize,
+    checksum: bool,
+    threshold: f64,
+    par: Parallelism,
+    stats: Arc<ShardStats>,
+}
+
+impl ProgrammedRead for ProgrammedShards {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn read_batch(&self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let nshards = self.grid.count();
+        let y = run_blocked(
+            self.par,
+            batch,
+            self.cols,
+            || (vec![0.0f32; self.max_r], vec![0.0f32; self.width]),
+            |s, scratch, out| {
+                let (tx, partial) = scratch;
+                for k in 0..nshards {
+                    let reg = self.grid.region(k);
+                    tx.fill(0.0);
+                    let x0 = s * self.rows + reg.r0;
+                    tx[..reg.rlen].copy_from_slice(&x[x0..x0 + reg.rlen]);
+                    self.arrays[k].read(&tx[..], &mut partial[..]);
+                    let (data, rest) = partial.split_at_mut(reg.clen);
+                    if self.checksum {
+                        let code = &self.codes[k];
+                        let cells = (reg.rlen * reg.clen) as f64;
+                        let abs_threshold = self.threshold * cells.sqrt();
+                        match code.verify(data, &rest[..code.extra()], abs_threshold) {
+                            Verdict::Clean => {}
+                            Verdict::Fault { col, delta } => {
+                                data[col] = (data[col] as f64 + delta) as f32;
+                                self.stats.detected.fetch_add(1, Ordering::Relaxed);
+                                self.stats.corrected.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Verdict::Detected => {
+                                self.stats.detected.fetch_add(1, Ordering::Relaxed);
+                                self.stats.uncorrectable.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    let yrow = &mut out[reg.c0..reg.c0 + reg.clen];
+                    for (yj, &pj) in yrow.iter_mut().zip(data.iter()) {
+                        *yj += pj;
+                    }
+                }
+            },
+        );
+        Ok(y)
+    }
+}
+
 impl VmmEngine for ShardedEngine {
     fn name(&self) -> &'static str {
         "sharded"
+    }
+
+    fn program(&self, spec: &ProgramSpec, params: &DeviceParams) -> Result<ProgrammedVmm> {
+        spec.check()?;
+        let (r, c) = (spec.rows, spec.cols);
+        let grid = ShardGrid::new(r, c, self.grid_r, self.grid_c)?;
+        let nshards = grid.count();
+        let extra_max = if self.checksum {
+            crate::shard::extra_cols(grid.max_clen())
+        } else {
+            0
+        };
+        let width = grid.max_clen() + extra_max;
+        let max_r = grid.max_rlen();
+        let table = PulseTable::new(params, false);
+        let codes: Vec<ChecksumCode> = if self.checksum {
+            (0..nshards)
+                .map(|k| ChecksumCode::new(grid.region(k).clen))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let mut scratch = ShardScratch::new(max_r, width);
+        let mut arrays = Vec::with_capacity(nshards);
+        let mut injected = 0u64;
+        for k in 0..nshards {
+            let reg = grid.region(k);
+            gather_region(&spec.w, c, &reg, width, &mut scratch.w);
+            gather_region(&spec.noise.z0, c, &reg, width, &mut scratch.noise.z0);
+            gather_region(&spec.noise.z1, c, &reg, width, &mut scratch.noise.z1);
+            gather_region(&spec.noise.z2, c, &reg, width, &mut scratch.noise.z2);
+            if self.checksum {
+                let code = &codes[k];
+                for i in 0..reg.rlen {
+                    let row = &mut scratch.w[i * width..i * width + reg.clen + code.extra()];
+                    let (data, cs) = row.split_at_mut(reg.clen);
+                    code.encode_row(data, cs);
+                }
+            }
+            let mut arr = CrossbarArray::zeroed(max_r, width);
+            arr.reprogram_active(&scratch.w, params, &scratch.noise, &table, reg.rlen * reg.clen);
+            if let Some(f) = self.fault {
+                if let Some(col) = f.draw(0, k, reg.clen) {
+                    arr.force_column(col, f.level);
+                    injected += 1;
+                }
+            }
+            arrays.push(arr);
+        }
+        if injected > 0 {
+            self.stats.injected.fetch_add(injected, Ordering::Relaxed);
+        }
+        Ok(ProgrammedVmm::new(
+            spec,
+            ProgrammedShards {
+                rows: r,
+                cols: c,
+                grid,
+                codes,
+                arrays,
+                width,
+                max_r,
+                checksum: self.checksum,
+                threshold: self.threshold,
+                par: self.par,
+                stats: Arc::clone(&self.stats),
+            },
+        ))
+    }
+
+    fn cache_config(&self) -> String {
+        let fault = match self.fault {
+            Some(f) => format!("{}@{}:{}", f.rate, f.level, f.seed),
+            None => "none".into(),
+        };
+        format!(
+            "sharded:{}x{}:cs={}:t={}:fault={}",
+            self.grid_r, self.grid_c, self.checksum, self.threshold, fault
+        )
     }
 
     fn forward(&self, batch: &VmmBatch, params: &DeviceParams) -> Result<VmmOutput> {
@@ -444,6 +599,60 @@ mod tests {
         assert_eq!(counts.uncorrectable, 0);
         engine.stats().reset();
         assert_eq!(engine.counts(), ShardCounts::default());
+    }
+
+    #[test]
+    fn programmed_read_bit_identical_to_uncached_forward() {
+        // A served request must decode exactly as the uncached path on
+        // the same (w, z) — including through the checksum reduction.
+        let mut rng = Xoshiro256::seed_from_u64(310);
+        let (r, c) = (48, 40);
+        let mut w = vec![0.0f32; r * c];
+        rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+        let spec = ProgramSpec::from_seed(r, c, w, 3100);
+        let params = presets::epiram().params;
+        let mut x = vec![0.0f32; 5 * r];
+        rng.fill_uniform_f32(&mut x, 0.0, 1.0);
+        let engine = |par| ShardedEngine::new(3, 2).with_parallelism(par);
+        let uncached = engine(Parallelism::Fixed(1))
+            .forward(&spec.to_batch(&x, 5), &params)
+            .unwrap();
+        for par in [Parallelism::Fixed(1), Parallelism::Auto] {
+            let handle = engine(par).program(&spec, &params).unwrap();
+            let served = handle.forward(&x, 5).unwrap();
+            assert_eq!(served.y_hw, uncached.y_hw, "{par:?}");
+            assert_eq!(served.y_sw, uncached.y_sw);
+        }
+    }
+
+    #[test]
+    fn programmed_fault_draw_matches_sample_zero() {
+        // A deployed fabric programs once: its fault cells are the
+        // stream's sample-0 draws, so serving one request bit-equals
+        // the uncached single-sample batch under the same policy.
+        let mut rng = Xoshiro256::seed_from_u64(311);
+        let mut w = vec![0.0f32; 64 * 64];
+        rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+        let spec = ProgramSpec::from_seed(64, 64, w, 3110);
+        let mut x = vec![0.0f32; 64];
+        rng.fill_uniform_f32(&mut x, 0.0, 1.0);
+        let fault = FaultSpec::stuck_at_on(1.0, 9);
+        let engine = ShardedEngine::new(2, 2)
+            .with_threshold(0.05)
+            .with_fault(fault);
+        let handle = engine.program(&spec, &DeviceParams::ideal()).unwrap();
+        let served = handle.forward(&x, 1).unwrap();
+        let uncached = ShardedEngine::new(2, 2)
+            .with_threshold(0.05)
+            .with_fault(fault)
+            .forward(&spec.to_batch(&x, 1), &DeviceParams::ideal())
+            .unwrap();
+        assert_eq!(served.y_hw, uncached.y_hw);
+        // Programming injected one fault per shard; the read detected
+        // and corrected each.
+        let counts = engine.counts();
+        assert_eq!(counts.injected, 4);
+        assert_eq!(counts.corrected, 4);
     }
 
     #[test]

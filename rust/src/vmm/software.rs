@@ -5,11 +5,47 @@ use crate::device::params::DeviceParams;
 use crate::error::Result;
 
 use super::engine::{VmmBatch, VmmEngine, VmmOutput};
+use super::program::{ProgramSpec, ProgrammedRead, ProgrammedVmm};
 
 /// Computes `y[b, j] = sum_i x[b, i] * w[b, i, j]` in f64, returned as
 /// f32 (the common output type); `y_hw == y_sw` by construction.
 #[derive(Debug, Default, Clone)]
 pub struct SoftwareEngine;
+
+/// Program-once handle of the exact engine: "programming" stores the
+/// weights losslessly, reads are the exact product (the same kernel as
+/// the software reference, so `y_hw == y_sw` stays bitwise true).
+struct ProgrammedExact {
+    rows: usize,
+    cols: usize,
+    w: Vec<f32>,
+}
+
+impl ProgrammedRead for ProgrammedExact {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn read_batch(&self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let mut y = vec![0.0f32; batch * self.cols];
+        let mut acc = vec![0.0f64; self.cols];
+        for s in 0..batch {
+            software_vmm_single(
+                &self.w,
+                &x[s * self.rows..(s + 1) * self.rows],
+                self.rows,
+                self.cols,
+                &mut acc,
+                &mut y[s * self.cols..(s + 1) * self.cols],
+            );
+        }
+        Ok(y)
+    }
+}
 
 /// One exact sample `y[j] = sum_i x[i] * w[i, j]` in f64 accumulation,
 /// written into `out` (f32).  `acc` is caller-provided scratch of
@@ -72,6 +108,18 @@ impl VmmEngine for SoftwareEngine {
         batch.check()?;
         let y = software_vmm_batch(batch);
         Ok(VmmOutput { y_hw: y.clone(), y_sw: y })
+    }
+
+    fn program(&self, spec: &ProgramSpec, _params: &DeviceParams) -> Result<ProgrammedVmm> {
+        spec.check()?;
+        Ok(ProgrammedVmm::new(
+            spec,
+            ProgrammedExact {
+                rows: spec.rows,
+                cols: spec.cols,
+                w: spec.w.clone(),
+            },
+        ))
     }
 }
 

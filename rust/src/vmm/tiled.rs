@@ -25,6 +25,7 @@ use crate::error::{Error, Result};
 use crate::util::pool::{run_blocked, Parallelism};
 
 use super::engine::{VmmBatch, VmmEngine, VmmOutput};
+use super::program::{ProgramSpec, ProgrammedRead, ProgrammedVmm};
 use super::software::software_vmm_batch;
 
 /// Crossbar engine for arbitrary-size workloads over a tile grid.
@@ -69,9 +70,57 @@ impl TiledEngine {
     }
 }
 
+/// Program-once handle of the tiled engine: the materialized tile grid
+/// ([`TiledCrossbar::program_with_noise`], bit-identical to the
+/// streaming `forward` path), read in parallel over requests.
+struct ProgrammedTiles {
+    grid: TiledCrossbar,
+    par: Parallelism,
+}
+
+impl ProgrammedRead for ProgrammedTiles {
+    fn rows(&self) -> usize {
+        self.grid.rows()
+    }
+
+    fn cols(&self) -> usize {
+        self.grid.cols()
+    }
+
+    fn read_batch(&self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let (r, c) = (self.grid.rows(), self.grid.cols());
+        Ok(run_blocked(self.par, batch, c, || (), |s, _scratch, out| {
+            self.grid.read(&x[s * r..(s + 1) * r], out);
+        }))
+    }
+}
+
 impl VmmEngine for TiledEngine {
     fn name(&self) -> &'static str {
         "tiled"
+    }
+
+    fn program(&self, spec: &ProgramSpec, params: &DeviceParams) -> Result<ProgrammedVmm> {
+        spec.check()?;
+        if self.tile_rows == 0 || self.tile_cols == 0 {
+            return Err(Error::Config("tile geometry must be positive".into()));
+        }
+        let table = PulseTable::new(params, false);
+        let grid = TiledCrossbar::program_with_noise(
+            spec.rows,
+            spec.cols,
+            &spec.w,
+            params,
+            self.tile_rows,
+            self.tile_cols,
+            [&spec.noise.z0, &spec.noise.z1, &spec.noise.z2],
+            &table,
+        );
+        Ok(ProgrammedVmm::new(spec, ProgrammedTiles { grid, par: self.par }))
+    }
+
+    fn cache_config(&self) -> String {
+        format!("tiled:{}x{}", self.tile_rows, self.tile_cols)
     }
 
     fn forward(&self, batch: &VmmBatch, params: &DeviceParams) -> Result<VmmOutput> {
@@ -190,6 +239,33 @@ mod tests {
         assert!(out.errors().iter().all(|e| e.is_finite()));
         let eng = TiledEngine::default();
         assert_eq!(eng.tiles_for(50, 70), 2 * 3);
+    }
+
+    #[test]
+    fn programmed_read_bit_identical_to_uncached_forward() {
+        // Ragged grid incl. padded tiles: the materialized program
+        // must serve exactly what the streaming per-sample path does.
+        let mut rng = Xoshiro256::seed_from_u64(218);
+        let (r, c) = (50, 70);
+        let mut w = vec![0.0f32; r * c];
+        rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+        let spec = ProgramSpec::from_seed(r, c, w, 2180);
+        let params = presets::epiram().params;
+        let mut x = vec![0.0f32; 4 * r];
+        rng.fill_uniform_f32(&mut x, 0.0, 1.0);
+        let uncached = TiledEngine::default()
+            .with_parallelism(Parallelism::Fixed(1))
+            .forward(&spec.to_batch(&x, 4), &params)
+            .unwrap();
+        for par in [Parallelism::Fixed(1), Parallelism::Auto] {
+            let handle = TiledEngine::default()
+                .with_parallelism(par)
+                .program(&spec, &params)
+                .unwrap();
+            let served = handle.forward(&x, 4).unwrap();
+            assert_eq!(served.y_hw, uncached.y_hw, "{par:?}");
+            assert_eq!(served.y_sw, uncached.y_sw);
+        }
     }
 
     #[test]

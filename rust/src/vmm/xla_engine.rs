@@ -8,7 +8,8 @@ use crate::device::params::DeviceParams;
 use crate::error::{Error, Result};
 use crate::runtime::XlaRuntime;
 
-use super::engine::{VmmBatch, VmmEngine, VmmOutput};
+use super::engine::{DynEngine, VmmBatch, VmmEngine, VmmOutput};
+use super::program::{ProgramSpec, ProgrammedVmm, ReplayProgrammed};
 
 /// PJRT-backed engine over the `meliso_fwd` artifacts.
 #[derive(Debug, Clone)]
@@ -107,6 +108,17 @@ impl VmmEngine for XlaEngine {
 
     fn preferred_batches(&self) -> Vec<usize> {
         self.batches.clone()
+    }
+
+    /// The artifact path has no materialized-array form (conductances
+    /// live device-side, behind pinned shapes), so serving replays the
+    /// full forward per read batch — bit-identical, unamortized.
+    fn program(&self, spec: &ProgramSpec, params: &DeviceParams) -> Result<ProgrammedVmm> {
+        spec.check()?;
+        Ok(ProgrammedVmm::new(
+            spec,
+            ReplayProgrammed::new(DynEngine::new(self.clone()), spec.clone(), *params),
+        ))
     }
 }
 

@@ -19,7 +19,7 @@ fn run_with(
     threads: Parallelism,
 ) -> meliso::pipeline::InferenceReport {
     PipelineRunner::new(engine)
-        .run(net, device, &PipelineOptions { chunk: 4, parallelism: threads })
+        .run(net, device, &PipelineOptions { chunk: 4, parallelism: threads, ..PipelineOptions::default() })
         .unwrap()
 }
 
@@ -92,7 +92,7 @@ fn depth_1_pipeline_matches_single_forward() {
         .run(
             &net,
             &device,
-            &PipelineOptions { chunk: 16, parallelism: Parallelism::Fixed(1) },
+            &PipelineOptions { chunk: 16, parallelism: Parallelism::Fixed(1), ..PipelineOptions::default() },
         )
         .unwrap();
 

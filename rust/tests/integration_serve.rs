@@ -1,0 +1,194 @@
+//! Integration: the request-serving subsystem end-to-end — the serve
+//! driver over real engines, the program cache across pipeline runs
+//! (`meliso infer --deploy` semantics), and the registry-facing
+//! `serve-sweep` experiment:
+//!
+//! * a full simulated-client run serves every request with consistent
+//!   cache/latency telemetry, on the native and the sharded engine;
+//! * the cache is a pure amortization: cached and uncached runs report
+//!   the same physics (error telemetry agrees);
+//! * a shared [`ProgramCache`] turns the second `meliso infer`-style
+//!   pipeline run into all-hits, and deployed traces are deterministic;
+//! * the `serve-sweep` experiment runs through the registry.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use meliso::device::params::NonIdealities;
+use meliso::device::presets;
+use meliso::experiments::{registry, Ctx};
+use meliso::pipeline::{Activation, NetworkSpec, PipelineOptions, PipelineRunner};
+use meliso::serve::{run_serve, ProgramCache, ServeOptions};
+use meliso::util::pool::Parallelism;
+use meliso::vmm::{DynEngine, NativeEngine, ShardedEngine, VmmEngine};
+
+fn opts(cache: bool, workers: usize) -> ServeOptions {
+    ServeOptions {
+        clients: 4,
+        requests_per_client: 12,
+        models: 3,
+        rows: 24,
+        cols: 24,
+        queue_capacity: 16,
+        batch_max: 6,
+        window: Duration::from_micros(150),
+        workers,
+        cache,
+        cache_capacity: 8,
+        measure_error: true,
+        ..ServeOptions::default()
+    }
+}
+
+#[test]
+fn serving_run_completes_with_consistent_telemetry() {
+    let device = presets::ag_si().params.masked(NonIdealities::FULL);
+    for engine in [
+        DynEngine::new(NativeEngine::default()),
+        DynEngine::new(ShardedEngine::new(2, 2)),
+    ] {
+        let r = run_serve(&engine, &device, &opts(true, 2)).unwrap();
+        assert_eq!(r.requests, 48, "{}", engine.name());
+        assert!(r.batches >= 1 && r.batches <= 48);
+        assert!(r.mean_batch >= 1.0);
+        assert!(r.throughput > 0.0);
+        assert!(r.p50_ms.is_finite() && r.p50_ms <= r.p95_ms && r.p95_ms <= r.p99_ms);
+        // 3 models over 48 requests: repeats must hit; racing workers
+        // may at worst double-program each model.
+        assert!(r.cache.misses >= 3 && r.cache.misses <= 6, "{:?}", r.cache);
+        assert!(r.cache.hits >= 1);
+        assert!(r.mean_abs_error.is_finite() && r.mean_abs_error > 0.0);
+    }
+}
+
+#[test]
+fn cache_is_pure_amortization_same_physics_fewer_programs() {
+    let device = presets::epiram().params.masked(NonIdealities::FULL);
+    let engine = DynEngine::new(NativeEngine::default());
+    let cached = run_serve(&engine, &device, &opts(true, 1)).unwrap();
+    let uncached = run_serve(&engine, &device, &opts(false, 1)).unwrap();
+    assert_eq!(cached.requests, uncached.requests);
+    // One worker: exactly one program per model with the cache on; at
+    // least one per batch group without it.
+    assert_eq!(cached.programs, 3);
+    assert!(uncached.programs > cached.programs);
+    // Same per-request outputs, so the same error telemetry (up to
+    // f64 reduction order across differently-assembled batches).
+    let (a, b) = (cached.mean_abs_error, uncached.mean_abs_error);
+    assert!((a - b).abs() < 1e-9 + 1e-9 * a.abs(), "{a} vs {b}");
+}
+
+#[test]
+fn backpressure_bounded_queue_never_deadlocks() {
+    let device = presets::epiram().params.masked(NonIdealities::FULL);
+    let engine = DynEngine::new(NativeEngine::default());
+    let mut o = opts(true, 2);
+    o.queue_capacity = 1; // every push waits on the scheduler
+    let r = run_serve(&engine, &device, &o).unwrap();
+    assert_eq!(r.requests, 48);
+}
+
+#[test]
+fn deployed_pipeline_shares_layer_programs_across_runs() {
+    // `meliso infer --deploy`: layer programs resolved through a
+    // serving cache persist across pipeline runs in one process — the
+    // second run programs nothing.
+    let device = presets::epiram().params.masked(NonIdealities::FULL);
+    let net = NetworkSpec::uniform(3, 16, Activation::Relu, 23).with_population(10);
+    let cache = Arc::new(ProgramCache::new(16));
+    let runner = PipelineRunner::new(DynEngine::new(NativeEngine::default()));
+    let run_opts = |cache: &Arc<ProgramCache>, par| PipelineOptions {
+        chunk: 4,
+        parallelism: par,
+        deploy: Some(Arc::clone(cache)),
+    };
+
+    let first = runner
+        .run(&net, &device, &run_opts(&cache, Parallelism::Fixed(1)))
+        .unwrap();
+    let after_first = cache.counts();
+    assert_eq!(after_first.entries, 3, "one program per layer");
+    assert!(after_first.misses >= 3);
+
+    let second = runner
+        .run(&net, &device, &run_opts(&cache, Parallelism::Fixed(1)))
+        .unwrap();
+    let after_second = cache.counts();
+    assert_eq!(after_second.misses, after_first.misses, "second run is all hits");
+    assert!(after_second.hits > after_first.hits);
+    assert_eq!(first.final_hw, second.final_hw);
+
+    // Deployed traces are deterministic across fresh caches and
+    // thread counts.
+    let other_cache = Arc::new(ProgramCache::new(16));
+    let third = runner
+        .run(&net, &device, &run_opts(&other_cache, Parallelism::Auto))
+        .unwrap();
+    assert_eq!(first.final_hw, third.final_hw);
+    assert_eq!(first.final_sw, third.final_sw);
+    for (a, b) in first.layers.iter().zip(&third.layers) {
+        assert_eq!(a.injected.errors(), b.injected.errors(), "layer {}", a.index);
+        assert_eq!(a.accumulated.errors(), b.accumulated.errors());
+    }
+
+    // Deployed mode shares one programming draw across samples, so
+    // per-sample injected errors exist and are finite but the run is
+    // distinct from the per-sample Monte-Carlo path.
+    let monte = runner
+        .run(&net, &device, &PipelineOptions { chunk: 4, ..PipelineOptions::default() })
+        .unwrap();
+    assert_eq!(monte.final_hw.len(), first.final_hw.len());
+    assert_ne!(monte.final_hw, first.final_hw);
+}
+
+#[test]
+fn deployed_first_chunk_matches_per_sample_path_for_sample_zero() {
+    // The deployed instance is pinned to the sample-0 noise stream, so
+    // layer 0's injected error for sample 0 must agree bitwise with
+    // the per-sample path's sample 0.
+    let device = presets::ag_si().params.masked(NonIdealities::FULL);
+    let net = NetworkSpec::uniform(1, 12, Activation::Identity, 29).with_population(6);
+    let runner = PipelineRunner::new(DynEngine::new(NativeEngine::default()));
+    let deployed = runner
+        .run(
+            &net,
+            &device,
+            &PipelineOptions {
+                chunk: 6,
+                parallelism: Parallelism::Fixed(1),
+                deploy: Some(Arc::new(ProgramCache::new(4))),
+            },
+        )
+        .unwrap();
+    let monte = runner
+        .run(
+            &net,
+            &device,
+            &PipelineOptions {
+                chunk: 6,
+                parallelism: Parallelism::Fixed(1),
+                ..PipelineOptions::default()
+            },
+        )
+        .unwrap();
+    let d = &deployed.layers[0].injected.errors()[..12];
+    let m = &monte.layers[0].injected.errors()[..12];
+    assert_eq!(d, m, "sample 0 shares the programming draw");
+}
+
+#[test]
+fn serve_sweep_experiment_runs_through_registry() {
+    let dir = std::env::temp_dir().join("meliso_it_serve_sweep");
+    let _ = std::fs::remove_dir_all(&dir);
+    let ctx = Ctx::native(4, &dir);
+    let s = registry::run_by_id("serve-sweep", &ctx).unwrap();
+    let rows = s.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 3 * 2 * 2 * 2); // engines x clients x windows x cache
+    for row in rows {
+        let thr = row.get("throughput_req_s").unwrap().as_f64().unwrap();
+        assert!(thr.is_finite() && thr > 0.0);
+    }
+    assert!(dir.join("serve-sweep/series.csv").exists());
+    assert!(dir.join("serve-sweep/summary.json").exists());
+    let _ = std::fs::remove_dir_all(dir);
+}

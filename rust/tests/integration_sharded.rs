@@ -137,7 +137,7 @@ fn shard_sweep_experiment_runs_through_registry() {
 fn pipeline_on_sharded_engine_matches_native_trace() {
     let device = presets::epiram().params.masked(NonIdealities::FULL);
     let net = NetworkSpec::uniform(3, 32, Activation::Relu, 7).with_population(12);
-    let opts = PipelineOptions { chunk: 4, parallelism: Parallelism::Fixed(2) };
+    let opts = PipelineOptions { chunk: 4, parallelism: Parallelism::Fixed(2), ..PipelineOptions::default() };
 
     let native = PipelineRunner::new(DynEngine::new(NativeEngine::default()))
         .run(&net, &device, &opts)

@@ -191,6 +191,34 @@ fn runtime_is_shareable_across_threads() {
 }
 
 #[test]
+fn served_replay_program_bit_equals_uncached_forward() {
+    // The XLA engine serves through the replay handle: a programmed
+    // model must decode bit-identically to the uncached batch path on
+    // the same (w, z), chunked to the pinned artifact batches.
+    let Some(engine) = engine_or_skip() else { return };
+    use meliso::util::rng::Xoshiro256;
+    use meliso::vmm::ProgramSpec;
+    let mut rng = Xoshiro256::seed_from_u64(305);
+    let mut w = vec![0.0f32; 32 * 32];
+    rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+    let spec = ProgramSpec::from_seed(32, 32, w, 3050);
+    let device = presets::ag_si().params.masked(NonIdealities::FULL);
+    let n = 32;
+    let mut x = vec![0.0f32; n * 32];
+    rng.fill_uniform_f32(&mut x, 0.0, 1.0);
+    let handle = VmmEngine::program(&engine, &spec, &device).unwrap();
+    let served = handle.forward(&x, n).unwrap();
+    let uncached = engine.forward(&spec.to_batch(&x, n), &device).unwrap();
+    // Hardware path: the replay IS the uncached path, so bitwise.
+    assert_eq!(served.y_hw, uncached.y_hw);
+    // Software reference: the handle computes it in rust f64, the
+    // artifact in XLA f32 — same contraction, tolerance-equal.
+    for i in 0..n * 32 {
+        assert!((served.y_sw[i] - uncached.y_sw[i]).abs() < 5e-4, "element {i}");
+    }
+}
+
+#[test]
 fn default_dir_env_override_works() {
     let Some(_) = engine_or_skip() else { return };
     // XlaRuntime::default_dir honors MELISO_ARTIFACTS (used by CI).

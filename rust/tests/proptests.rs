@@ -5,12 +5,19 @@
 use meliso::coordinator::WorkloadSpec;
 use meliso::crossbar::array::{CrossbarArray, ProgramNoise};
 use meliso::device::params::DeviceParams;
+use meliso::device::presets;
 use meliso::device::pulse::pulse_curve;
+use meliso::mitigation::{MitigatedEngine, MitigationConfig};
+use meliso::shard::{ChecksumCode, Verdict};
 use meliso::stats::fit::Normal;
 use meliso::stats::moments::Moments;
-use meliso::testkit::{check, check2, Config, FloatIn, OneOf, UsizeIn};
+use meliso::testkit::{check, check2, Config, FloatIn, OneOf, Tuple2, Tuple3, UsizeIn};
+use meliso::util::pool::Parallelism;
 use meliso::util::rng::Xoshiro256;
-use meliso::vmm::{NativeEngine, SoftwareEngine, VmmBatch, VmmEngine};
+use meliso::vmm::{
+    DynEngine, NativeEngine, ProgramSpec, ShardedEngine, SoftwareEngine, TiledEngine,
+    VmmBatch, VmmEngine,
+};
 
 fn cfg(cases: usize, seed: u64) -> Config {
     Config { cases, seed, max_shrink_steps: 100 }
@@ -184,6 +191,204 @@ fn prop_quantization_identity_on_grid_weights() {
         w.iter()
             .enumerate()
             .all(|(i, &wi)| (arr.weight(0, i) - wi).abs() < 1e-6)
+    });
+}
+
+/// Every serving-capable engine by name, at the given fan-out.
+fn engine_by_name(name: &str, par: Parallelism) -> DynEngine {
+    match name {
+        "native" => DynEngine::new(NativeEngine::with_parallelism(par)),
+        "tiled" => DynEngine::new(TiledEngine::with_tile(16).with_parallelism(par)),
+        "sharded" => DynEngine::new(ShardedEngine::new(2, 2).with_parallelism(par)),
+        "software" => DynEngine::new(SoftwareEngine),
+        "mitigated" => DynEngine::new(MitigatedEngine::new(
+            NativeEngine::with_parallelism(par),
+            MitigationConfig::parse("diff,avg:2").unwrap(),
+        )),
+        other => panic!("unknown engine {other}"),
+    }
+}
+
+#[test]
+fn prop_cached_programmed_forward_bit_equals_uncached_for_every_engine() {
+    // The serving core's contract: a cached `ProgrammedVmm::forward`
+    // is bit-identical to the engine's uncached `forward` on a batch
+    // carrying the same program `(w, z)` — for random geometries x
+    // devices x engines, at Fixed(1) and Auto parallelism, shrinking
+    // toward the smallest geometry/batch that still disagrees.
+    let geom = Tuple3(
+        UsizeIn { lo: 2, hi: 40 },
+        UsizeIn { lo: 2, hi: 40 },
+        UsizeIn { lo: 1, hi: 3 },
+    );
+    check(cfg(12, 31), &geom, |&(rows, cols, b)| {
+        let mut rng =
+            Xoshiro256::seed_from_u64(((rows * 41 + cols) * 7 + b) as u64 ^ 0xCAFE);
+        let mut w = vec![0.0f32; rows * cols];
+        rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+        let spec = ProgramSpec::from_seed(
+            rows,
+            cols,
+            w,
+            ((rows as u64) << 20) ^ ((cols as u64) << 4) ^ b as u64,
+        );
+        let mut x = vec![0.0f32; b * rows];
+        rng.fill_uniform_f32(&mut x, 0.0, 1.0);
+        let batch = spec.to_batch(&x, b);
+        let devices = [
+            DeviceParams::ideal(),
+            presets::epiram().params,
+            presets::ag_si().params,
+        ];
+        for device in devices {
+            for name in ["native", "tiled", "sharded", "software", "mitigated"] {
+                let uncached = engine_by_name(name, Parallelism::Fixed(1))
+                    .forward(&batch, &device)
+                    .unwrap();
+                for par in [Parallelism::Fixed(1), Parallelism::Auto] {
+                    let engine = engine_by_name(name, par);
+                    let handle = engine.program(&spec, &device).unwrap();
+                    let served = handle.forward(&x, b).unwrap();
+                    if served.y_hw != uncached.y_hw || served.y_sw != uncached.y_sw {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    });
+}
+
+/// Exact synthetic shard (mirrors the helper the checksum unit tests
+/// use): `y_data` and `y_cs` computed from the same `(W, x)` in f64,
+/// so the only check discrepancy is f32 rounding of encoded targets.
+fn exact_shard(rows: usize, clen: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let code = ChecksumCode::new(clen);
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut w = vec![0.0f32; rows * clen];
+    let mut x = vec![0.0f32; rows];
+    rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+    rng.fill_uniform_f32(&mut x, 0.0, 1.0);
+    let mut y = vec![0.0f32; clen];
+    for j in 0..clen {
+        y[j] = (0..rows)
+            .map(|i| x[i] as f64 * w[i * clen + j] as f64)
+            .sum::<f64>() as f32;
+    }
+    let mut cs_w = vec![0.0f32; rows * code.extra()];
+    for i in 0..rows {
+        code.encode_row(
+            &w[i * clen..(i + 1) * clen],
+            &mut cs_w[i * code.extra()..(i + 1) * code.extra()],
+        );
+    }
+    let mut y_cs = vec![0.0f32; code.extra()];
+    for (k, yc) in y_cs.iter_mut().enumerate() {
+        *yc = (0..rows)
+            .map(|i| x[i] as f64 * cs_w[i * code.extra() + k] as f64)
+            .sum::<f64>() as f32;
+    }
+    (y, y_cs)
+}
+
+#[test]
+fn prop_checksum_single_fault_corrected_exactly_at_any_column() {
+    // Any single gross bit-line fault — random shard shape, random
+    // column, random magnitude and sign — is detected, located at
+    // exactly that column, and reconstructed from the checksum.
+    // Replaces the fixed-case asserts that previously lived in
+    // `shard/checksum.rs`.
+    let s = Tuple3(
+        UsizeIn { lo: 1, hi: 40 },
+        UsizeIn { lo: 4, hi: 64 },
+        UsizeIn { lo: 0, hi: 1 << 16 },
+    );
+    check(cfg(64, 32), &s, |&(clen, rows, seed)| {
+        let code = ChecksumCode::new(clen);
+        let (mut y, y_cs) = exact_shard(rows, clen, 7000 + seed as u64);
+        let mut rng = Xoshiro256::seed_from_u64(seed as u64 ^ 0xFA11);
+        let target = rng.below(clen as u64) as usize;
+        let sign = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+        let e = (2.0 + 6.0 * rng.uniform()) * sign;
+        let truth = y[target] as f64;
+        y[target] = (truth + e) as f32;
+        match code.verify(&y, &y_cs, 1.0) {
+            Verdict::Fault { col, delta } => {
+                col == target && ((y[target] as f64 + delta) - truth).abs() < 0.1
+            }
+            _ => false,
+        }
+    });
+}
+
+#[test]
+fn prop_checksum_equal_double_fault_refused() {
+    // Two equal, same-sign gross faults at distinct columns decode
+    // every differing locator bit to a ~0.5 ratio — outside both
+    // accept windows — so the code must refuse to "correct" rather
+    // than damage a healthy column.
+    let s = Tuple3(
+        UsizeIn { lo: 2, hi: 40 },
+        UsizeIn { lo: 4, hi: 48 },
+        UsizeIn { lo: 0, hi: 1 << 16 },
+    );
+    check(cfg(64, 33), &s, |&(clen, rows, seed)| {
+        let code = ChecksumCode::new(clen);
+        let (mut y, y_cs) = exact_shard(rows, clen, 9000 + seed as u64);
+        let mut rng = Xoshiro256::seed_from_u64(seed as u64 ^ 0xD0B1);
+        let a = rng.below(clen as u64) as usize;
+        let mut b = rng.below(clen as u64) as usize;
+        if b == a {
+            b = (a + 1) % clen;
+        }
+        let e = 3.0 + 5.0 * rng.uniform();
+        y[a] = (y[a] as f64 + e) as f32;
+        y[b] = (y[b] as f64 + e) as f32;
+        code.verify(&y, &y_cs, 1.0) == Verdict::Detected
+    });
+}
+
+#[test]
+fn prop_sharded_any_grid_bit_equals_native_on_exact_device() {
+    // f32 addition is not associative, so regrouped shard partials may
+    // differ from the native flat sum in the last ulp on a generic
+    // device.  On a binary-exact device — 257 states put every
+    // conductance on the 2^-8 grid, zero C2C, zero mismatch — every
+    // product and partial sum is exactly representable, so ANY
+    // row/column partition must reproduce the native engine
+    // bit-for-bit.  Extends the fixed 1x1 check in
+    // `tests/integration_sharded.rs` to random grids and batch shapes.
+    let s = Tuple2(
+        Tuple2(UsizeIn { lo: 1, hi: 4 }, UsizeIn { lo: 1, hi: 4 }),
+        Tuple2(UsizeIn { lo: 4, hi: 40 }, UsizeIn { lo: 4, hi: 40 }),
+    );
+    let device = DeviceParams {
+        states: 257.0,
+        k_base: 0.0, // no mismatch pedestal: reads stay on the grid
+        ..DeviceParams::ideal()
+    };
+    check(cfg(24, 34), &s, |&((gr, gc), (rows, cols))| {
+        let b = 2usize;
+        let mut rng =
+            Xoshiro256::seed_from_u64((rows * 131 + cols * 7 + gr * 3 + gc) as u64);
+        let mut vb = VmmBatch::zeros(b, rows, cols);
+        rng.fill_uniform_f32(&mut vb.w, -1.0, 1.0);
+        // Drive voltages on the same 2^-8 grid keep products exact.
+        for v in vb.x.iter_mut() {
+            *v = rng.below(257) as f32 / 256.0;
+        }
+        let native = NativeEngine::sequential().forward(&vb, &device).unwrap();
+        for checksum in [false, true] {
+            let out = ShardedEngine::new(gr, gc)
+                .with_checksum(checksum)
+                .with_threshold(1e9)
+                .forward(&vb, &device)
+                .unwrap();
+            if out.y_hw != native.y_hw || out.y_sw != native.y_sw {
+                return false;
+            }
+        }
+        true
     });
 }
 

@@ -38,7 +38,11 @@ pub enum Command {
     List,
     Devices,
     Run { experiment: String },
-    Bench { filter: Option<String>, baseline: Option<String> },
+    Bench {
+        filter: Option<String>,
+        baseline: Option<String>,
+        delta_md: Option<String>,
+    },
     Fit { input: String, column: usize },
     Solve { device: String, n: usize, solver: String },
     Infer { device: String },
@@ -97,6 +101,8 @@ OPTIONS:
                                    contains SUBSTR (errors if none match)
   --baseline <FILE>                bench: warn (never fail) when a median
                                    regresses >2x against this BENCH.json
+  --delta-md <FILE>                bench: write an old-vs-new median delta
+                                   table (GitHub markdown) against --baseline
   --mitigation <SPEC>              Error-mitigation pipeline, a comma list of
                                    diff | slice:K | avg:R | cal[:P]
                                    (e.g. diff,slice:2,avg:4) [default: none]
@@ -243,7 +249,7 @@ impl Args {
                     };
                 }
                 "config" | "input" | "column" | "device" | "n" | "solver" | "filter"
-                | "baseline" => {}
+                | "baseline" | "delta-md" => {}
                 other => {
                     return Err(Error::Config(format!("unknown flag --{other}")));
                 }
@@ -266,7 +272,11 @@ impl Args {
                     .cloned()
                     .ok_or_else(|| Error::Config("run needs an experiment id".into()))?,
             },
-            "bench" => Command::Bench { filter: flag("filter"), baseline: flag("baseline") },
+            "bench" => Command::Bench {
+                filter: flag("filter"),
+                baseline: flag("baseline"),
+                delta_md: flag("delta-md"),
+            },
             "fit" => Command::Fit {
                 input: flag("input")
                     .ok_or_else(|| Error::Config("fit needs --input FILE".into()))?,
@@ -391,18 +401,26 @@ mod tests {
     #[test]
     fn parses_bench_flags() {
         let a = parse("bench").unwrap();
-        assert_eq!(a.command, Command::Bench { filter: None, baseline: None });
-        let a = parse("bench --filter native --baseline benches/baseline.json --out perf")
-            .unwrap();
+        assert_eq!(
+            a.command,
+            Command::Bench { filter: None, baseline: None, delta_md: None }
+        );
+        let a = parse(
+            "bench --filter native --baseline benches/baseline.json \
+             --delta-md perf/delta.md --out perf",
+        )
+        .unwrap();
         assert_eq!(
             a.command,
             Command::Bench {
                 filter: Some("native".into()),
                 baseline: Some("benches/baseline.json".into()),
+                delta_md: Some("perf/delta.md".into()),
             }
         );
         assert_eq!(a.config.out_dir, std::path::PathBuf::from("perf"));
         assert!(parse("bench --filter").is_err());
+        assert!(parse("bench --delta-md").is_err());
     }
 
     #[test]

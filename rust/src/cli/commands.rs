@@ -47,7 +47,9 @@ pub fn dispatch(args: &Args) -> Result<i32> {
             Ok(0)
         }
         Command::Run { experiment } => run_experiments(args, experiment),
-        Command::Bench { filter, baseline } => bench(args, filter, baseline),
+        Command::Bench { filter, baseline, delta_md } => {
+            bench(args, filter, baseline, delta_md)
+        }
         Command::Fit { input, column } => fit_csv(input, *column),
         Command::Solve { device, n, solver } => solve(args, device, *n, solver),
         Command::Infer { device } => infer(args, device),
@@ -78,12 +80,26 @@ fn run_experiments(args: &Args, which: &str) -> Result<i32> {
 }
 
 /// `meliso bench`: run the hotpath suite in quick mode, write
-/// machine-readable `<out>/BENCH.json`, and (with `--baseline`)
+/// machine-readable `<out>/BENCH.json` (plus a binary `BENCH.melb`
+/// twin — same document, codec framing), and (with `--baseline`)
 /// soft-gate medians against a committed baseline document — warnings
 /// only, never a failing exit, because absolute timings are machine
-/// dependent.  An unmatched `--filter` is an error: an empty
-/// `BENCH.json` would read as "no regressions" in CI.
-fn bench(args: &Args, filter: &Option<String>, baseline: &Option<String>) -> Result<i32> {
+/// dependent.  `--delta-md FILE` additionally writes the full
+/// old-vs-new median table as GitHub markdown (the `perf-smoke` job
+/// appends it to `$GITHUB_STEP_SUMMARY`).  An unmatched `--filter` is
+/// an error: an empty `BENCH.json` would read as "no regressions" in
+/// CI.
+fn bench(
+    args: &Args,
+    filter: &Option<String>,
+    baseline: &Option<String>,
+    delta_md: &Option<String>,
+) -> Result<i32> {
+    if delta_md.is_some() && baseline.is_none() {
+        return Err(Error::Config(
+            "--delta-md needs --baseline to diff against".into(),
+        ));
+    }
     // The pre-BENCH.json `bench` took workload/engine flags; the suite
     // pins its own workloads, so a caller still passing any of them
     // must hear that they no longer steer the measurement.
@@ -116,8 +132,13 @@ fn bench(args: &Args, filter: &Option<String>, baseline: &Option<String>) -> Res
     }
     let path = args.config.out_dir.join("BENCH.json");
     write_bench_json(&results, &path)?;
+    write_bench_json(&results, &args.config.out_dir.join("BENCH.melb"))?;
     if !args.config.quiet {
-        eprintln!("wrote {} bench results to {}", results.len(), path.display());
+        eprintln!(
+            "wrote {} bench results to {} (+ binary twin BENCH.melb)",
+            results.len(),
+            path.display()
+        );
     }
     if let Some(baseline_path) = baseline {
         let base = read_bench_json(std::path::Path::new(baseline_path))?;
@@ -137,6 +158,18 @@ fn bench(args: &Args, filter: &Option<String>, baseline: &Option<String>) -> Res
                  ({} comparable benchmarks)",
                 results.len()
             );
+        }
+        if let Some(md_path) = delta_md {
+            let md_path = std::path::Path::new(md_path);
+            if let Some(parent) = md_path.parent() {
+                if !parent.as_os_str().is_empty() {
+                    std::fs::create_dir_all(parent)?;
+                }
+            }
+            std::fs::write(md_path, perf::delta_table_md(&results, &base))?;
+            if !args.config.quiet {
+                eprintln!("wrote median delta table to {}", md_path.display());
+            }
         }
     }
     Ok(0)
@@ -439,6 +472,11 @@ fn serve_bench(args: &Args, device_id: &str) -> Result<i32> {
         &format!("{}/{}", report.cache.hits, report.cache.misses),
     ]);
     t.push(["mean |e|", &fnum(report.mean_abs_error)]);
+    t.push(["fitted rate (req/s)", &fnum(report.fitted_rps)]);
+    t.push([
+        "nodes @ 1e8 req/day",
+        &report.nodes_for_1e8_per_day.to_string(),
+    ]);
     let w = ctx.writer("serve-bench");
     w.echo(&t.render());
     w.json(
@@ -470,8 +508,18 @@ fn serve_bench(args: &Args, device_id: &str) -> Result<i32> {
             ("cache_misses", Json::Num(report.cache.misses as f64)),
             ("cache_evictions", Json::Num(report.cache.evictions as f64)),
             ("mean_abs_error", Json::Num(report.mean_abs_error)),
+            ("fitted_req_s", Json::Num(report.fitted_rps)),
+            (
+                "nodes_for_1e8_per_day",
+                Json::Num(report.nodes_for_1e8_per_day as f64),
+            ),
         ]),
     )?;
+    w.echo(&format!(
+        "capacity: at 1e8 requests/day this fabric needs {} node(s) \
+         (fitted {:.0} req/s/node)",
+        report.nodes_for_1e8_per_day, report.fitted_rps,
+    ));
     // Bench-schema document for CI artifact upload, named like a perf
     // slug so baselines can track it.
     let slug = format!(
@@ -563,6 +611,8 @@ mod tests {
         assert_eq!(doc.get("requests").unwrap().as_f64(), Some(24.0));
         assert!(doc.get("throughput_req_s").unwrap().as_f64().unwrap() > 0.0);
         assert!(doc.get("mean_abs_error").unwrap().as_f64().unwrap().is_finite());
+        assert!(doc.get("fitted_req_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(doc.get("nodes_for_1e8_per_day").unwrap().as_f64().unwrap() >= 1.0);
         let bench = read_bench_json(&dir.join("serve-bench/BENCH.json")).unwrap();
         assert_eq!(bench.len(), 1);
         assert_eq!(bench[0].name, "serve-bench-native-cached");
@@ -590,6 +640,11 @@ mod tests {
         assert_eq!(results.len(), 1);
         assert_eq!(results[0].name, "stats-moments");
         assert!(results[0].median > 0.0);
+        // The binary twin decodes to the same suite document.
+        let twin = read_bench_json(&dir.join("BENCH.melb")).unwrap();
+        assert_eq!(twin.len(), 1);
+        assert_eq!(twin[0].name, "stats-moments");
+        assert_eq!(twin[0].median, results[0].median);
 
         // Soft gate: even a guaranteed >2x "regression" against an
         // absurdly fast baseline must warn, not fail.
@@ -604,6 +659,7 @@ mod tests {
         }];
         let baseline_path = dir.join("baseline.json");
         write_bench_json(&baseline, &baseline_path).unwrap();
+        let delta_path = dir.join("report/delta.md");
         let args = parse(&[
             "bench",
             "--filter",
@@ -611,10 +667,25 @@ mod tests {
             "--quiet",
             "--baseline",
             baseline_path.to_str().unwrap(),
+            "--delta-md",
+            delta_path.to_str().unwrap(),
             "--out",
             dir.to_str().unwrap(),
         ]);
         assert_eq!(dispatch(&args).unwrap(), 0);
+        // The delta table reports the matched benchmark as slower than
+        // the absurdly fast baseline, in markdown table shape.
+        let md = std::fs::read_to_string(&delta_path).unwrap();
+        assert!(md.contains("| `stats-moments` |"), "{md}");
+        assert!(md.contains("x slower"), "{md}");
+        assert!(md.contains("1 benchmark(s) compared"), "{md}");
         let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn delta_md_without_baseline_is_a_config_error() {
+        let args = parse(&["bench", "--delta-md", "delta.md", "--quiet"]);
+        let err = dispatch(&args).unwrap_err();
+        assert!(err.to_string().contains("--baseline"), "{err}");
     }
 }

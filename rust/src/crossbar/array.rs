@@ -9,6 +9,8 @@ use crate::device::params::DeviceParams;
 use crate::device::pulse::{mismatch_transform, nl_to_curvature, pulse_curve};
 use crate::util::rng::Xoshiro256;
 
+use super::kernel;
+
 /// Per-cell noise draws for programming one array: three channels, as
 /// in the artifact's `z` input (`z0` C2C+, `z1` C2C-, `z2` mismatch).
 #[derive(Debug, Clone)]
@@ -90,6 +92,12 @@ impl PulseTable {
 
 /// A programmed crossbar array holding normalized differential
 /// conductances plus the per-cell mismatch residue.
+///
+/// Reads go through one fused **column-major** plane
+/// (`g_diff + mismatch`, laid out `plane[j*rows + i]`) built at
+/// program time, so the hot read loop in [`kernel`] streams
+/// unit-stride columns; the row-major planes are kept for inspection,
+/// the artifact cross-check, and the programming-side tests.
 #[derive(Debug, Clone)]
 pub struct CrossbarArray {
     rows: usize,
@@ -98,6 +106,8 @@ pub struct CrossbarArray {
     g_diff: Vec<f32>,
     /// Per-cell mismatch current coefficient (already scaled by `m`).
     mismatch: Vec<f32>,
+    /// Fused read plane `g_diff + mismatch`, **column-major**.
+    plane: Vec<f32>,
     /// Normalized positive/negative conductances (kept for inspection
     /// and the program-only artifact cross-check).
     gp: Vec<f32>,
@@ -158,6 +168,7 @@ impl CrossbarArray {
             cols,
             g_diff: vec![0.0; cells],
             mismatch: vec![0.0; cells],
+            plane: vec![0.0; cells],
             gp: vec![0.0; cells],
             gn: vec![0.0; cells],
         }
@@ -192,10 +203,9 @@ impl CrossbarArray {
     ) {
         let cells = self.rows * self.cols;
         assert_eq!(w.len(), cells, "weight buffer size mismatch");
-        assert_eq!(noise.z0.len(), cells);
-        assert_eq!(noise.z1.len(), cells);
-        assert_eq!(noise.z2.len(), cells);
-        let verify = table.verify;
+        assert_eq!(noise.z0.len(), cells, "z0 noise plane size mismatch");
+        assert_eq!(noise.z1.len(), cells, "z1 noise plane size mismatch");
+        assert_eq!(noise.z2.len(), cells, "z2 noise plane size mismatch");
 
         let n = params.states - 1.0;
         // Linear-in-sigma C2C law, scale fitted once (DESIGN.md §7).
@@ -208,48 +218,68 @@ impl CrossbarArray {
         let zeta = noise.z0.iter().map(|&z| z as f64).sum::<f64>()
             / (active_cells.max(1) as f64).sqrt();
         let sev = (SEVERITY_SIGMA * zeta - 0.5 * SEVERITY_SIGMA * SEVERITY_SIGMA).exp();
+        let sa = sev * acc;
 
-        for i in 0..cells {
-            let wi = w[i] as f64;
-            // Complementary pulse targets (1±w)/2 — both devices of the
-            // pair are actively programmed, as in the NeuroSim scheme.
-            // f32 rounding mirrors the artifact, which computes in f32.
-            let s_pos = (((1.0 + wi) * 0.5 * n) as f32).round() as f64;
-            let s_neg = (((1.0 - wi) * 0.5 * n) as f32).round() as f64;
-            let t_pos = s_pos / n;
-            let t_neg = s_neg / n;
-
-            // Open-loop NL deviation (label -> curvature mapping) +
-            // severity-scaled pulse-domain C2C noise; write-verify
-            // nulls the NL deviation and leaves one pulse of residual
-            // C2C disturbance.
-            let (mut g_pos, mut g_neg) = if verify {
-                (
-                    t_pos + params.sigma_c2c * noise.z0[i] as f64,
-                    t_neg + params.sigma_c2c * noise.z1[i] as f64,
-                )
-            } else if let Some((cp, cd, sq)) = &table.grid {
-                let (ip, id) = (s_pos as usize, s_neg as usize);
-                (
-                    cp[ip] + sev * acc * sq[ip] * noise.z0[i] as f64,
-                    cd[id] + sev * acc * sq[id] * noise.z1[i] as f64,
-                )
-            } else {
-                (
-                    pulse_curve(t_pos, table.kappa_p)
-                        + sev * acc * s_pos.sqrt() * noise.z0[i] as f64,
-                    pulse_curve(t_neg, table.kappa_d)
-                        + sev * acc * s_neg.sqrt() * noise.z1[i] as f64,
-                )
-            };
-            g_pos = g_pos.clamp(0.0, 1.0);
-            g_neg = g_neg.clamp(0.0, 1.0);
-
-            self.gp[i] = g_pos as f32;
-            self.gn[i] = g_neg as f32;
-            self.g_diff[i] = (g_pos - g_neg) as f32;
-            self.mismatch[i] = (m * mismatch_transform(noise.z2[i] as f64)) as f32;
+        // The mode branch (verify / tabled / direct) is hoisted out of
+        // the per-cell loop: each mode gets its own branch-free pass
+        // over the cells.  Per-cell arithmetic — complementary pulse
+        // targets `(1±w)/2` with f32 rounding (mirroring the artifact,
+        // which computes in f32), open-loop NL deviation plus
+        // severity-scaled pulse-domain C2C noise, clamp to the
+        // conductance window — is unchanged bit-for-bit.
+        if table.verify {
+            // Write-verify nulls the NL deviation and leaves one pulse
+            // of residual C2C disturbance.
+            for (i, &wv) in w.iter().enumerate() {
+                let wi = wv as f64;
+                let s_pos = (((1.0 + wi) * 0.5 * n) as f32).round() as f64;
+                let s_neg = (((1.0 - wi) * 0.5 * n) as f32).round() as f64;
+                let g_pos =
+                    (s_pos / n + params.sigma_c2c * noise.z0[i] as f64).clamp(0.0, 1.0);
+                let g_neg =
+                    (s_neg / n + params.sigma_c2c * noise.z1[i] as f64).clamp(0.0, 1.0);
+                self.gp[i] = g_pos as f32;
+                self.gn[i] = g_neg as f32;
+                self.g_diff[i] = (g_pos - g_neg) as f32;
+            }
+        } else if let Some((cp, cd, sq)) = &table.grid {
+            // Batched table path: pulse counts are integers on the
+            // device grid, so curve values and sqrt(s) are lookups.
+            for (i, &wv) in w.iter().enumerate() {
+                let wi = wv as f64;
+                let ip = (((1.0 + wi) * 0.5 * n) as f32).round() as usize;
+                let id = (((1.0 - wi) * 0.5 * n) as f32).round() as usize;
+                let g_pos = (cp[ip] + sa * sq[ip] * noise.z0[i] as f64).clamp(0.0, 1.0);
+                let g_neg = (cd[id] + sa * sq[id] * noise.z1[i] as f64).clamp(0.0, 1.0);
+                self.gp[i] = g_pos as f32;
+                self.gn[i] = g_neg as f32;
+                self.g_diff[i] = (g_pos - g_neg) as f32;
+            }
+        } else {
+            // Direct evaluation for very large state counts.
+            for (i, &wv) in w.iter().enumerate() {
+                let wi = wv as f64;
+                let s_pos = (((1.0 + wi) * 0.5 * n) as f32).round() as f64;
+                let s_neg = (((1.0 - wi) * 0.5 * n) as f32).round() as f64;
+                let g_pos = (pulse_curve(s_pos / n, table.kappa_p)
+                    + sa * s_pos.sqrt() * noise.z0[i] as f64)
+                    .clamp(0.0, 1.0);
+                let g_neg = (pulse_curve(s_neg / n, table.kappa_d)
+                    + sa * s_neg.sqrt() * noise.z1[i] as f64)
+                    .clamp(0.0, 1.0);
+                self.gp[i] = g_pos as f32;
+                self.gn[i] = g_neg as f32;
+                self.g_diff[i] = (g_pos - g_neg) as f32;
+            }
         }
+
+        // Mismatch residue plane (read-path baseline wander).
+        for (mm, z) in self.mismatch.iter_mut().zip(&noise.z2) {
+            *mm = (m * mismatch_transform(*z as f64)) as f32;
+        }
+
+        // Build the fused column-major read plane once per cycle.
+        kernel::fuse_plane(&self.g_diff, &self.mismatch, self.rows, self.cols, &mut self.plane);
     }
 
     /// Force every cell of column `j` to a stuck differential level —
@@ -267,6 +297,9 @@ impl CrossbarArray {
             self.g_diff[idx] = level;
             self.mismatch[idx] = 0.0;
         }
+        // The stuck column is contiguous in the column-major read
+        // plane; `g_diff + mismatch = level + 0.0` exactly.
+        self.plane[j * self.rows..(j + 1) * self.rows].fill(level);
     }
 
     pub fn rows(&self) -> usize {
@@ -293,24 +326,25 @@ impl CrossbarArray {
         self.g_diff[i * self.cols + j]
     }
 
+    /// Fused column-major read plane (`g_diff + mismatch`, laid out
+    /// `plane[j*rows + i]`) — the buffer [`kernel::read_columnar`]
+    /// consumes.
+    pub fn plane(&self) -> &[f32] {
+        &self.plane
+    }
+
     /// Analog read: `y[j] = sum_i x[i] * (g_diff + mismatch)[i,j]`,
     /// already decoded to weight units (the differential read cancels
     /// `Gmin` and the decode divides by the range — see DESIGN.md §4).
+    ///
+    /// Geometry is a `debug_assert!` here: this is the innermost hot
+    /// loop, and the engines perform one typed
+    /// [`crate::error::Error::Geometry`] check per batch at their
+    /// entry points instead of two asserts per tile read.
     pub fn read(&self, x: &[f32], y: &mut [f32]) {
-        assert_eq!(x.len(), self.rows);
-        assert_eq!(y.len(), self.cols);
-        y.fill(0.0);
-        for i in 0..self.rows {
-            let xi = x[i];
-            if xi == 0.0 {
-                continue;
-            }
-            let row_d = &self.g_diff[i * self.cols..(i + 1) * self.cols];
-            let row_m = &self.mismatch[i * self.cols..(i + 1) * self.cols];
-            for j in 0..self.cols {
-                y[j] += xi * (row_d[j] + row_m[j]);
-            }
-        }
+        debug_assert_eq!(x.len(), self.rows);
+        debug_assert_eq!(y.len(), self.cols);
+        kernel::read_columnar(&self.plane, self.rows, self.cols, x, y);
     }
 
     /// Convenience allocating read.
@@ -318,6 +352,44 @@ impl CrossbarArray {
         let mut y = vec![0.0; self.cols];
         self.read(x, &mut y);
         y
+    }
+}
+
+/// Reusable per-worker programming scratch shared by the batch
+/// engines: one array, its noise planes, and weight/input gather
+/// staging for engines that program sub-blocks of a logical matrix.
+/// One instance per pool worker replaces the engines' former ad-hoc
+/// scratch structs — zero steady-state allocation on the hot path.
+#[derive(Debug)]
+pub struct ProgramScratch {
+    /// The reusable physical array, programmed in place per job.
+    pub arr: CrossbarArray,
+    /// Per-cell noise planes staged for [`CrossbarArray::reprogram`].
+    pub noise: ProgramNoise,
+    /// Weight gather staging (`rows * cols`), for region/tile gathers.
+    pub w: Vec<f32>,
+    /// Input gather staging (`rows`), zero-padded for partial regions.
+    pub x: Vec<f32>,
+}
+
+impl ProgramScratch {
+    /// Scratch for a `rows x cols` physical array.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        let cells = rows * cols;
+        Self {
+            arr: CrossbarArray::zeroed(rows, cols),
+            noise: ProgramNoise::zeros(cells),
+            w: vec![0.0; cells],
+            x: vec![0.0; rows],
+        }
+    }
+
+    /// Copy three full-size logical noise planes into the scratch
+    /// (the whole-matrix engines' staging step).
+    pub fn load_noise(&mut self, z: [&[f32]; 3]) {
+        self.noise.z0.copy_from_slice(z[0]);
+        self.noise.z1.copy_from_slice(z[1]);
+        self.noise.z2.copy_from_slice(z[2]);
     }
 }
 
@@ -512,6 +584,27 @@ mod tests {
             assert_eq!(y[j], y_before[j], "col {j}");
             assert_eq!(arr.weight(2, j), before.weight(2, j));
         }
+    }
+
+    #[test]
+    fn fused_plane_tracks_programmed_conductances() {
+        let mut rng = Xoshiro256::seed_from_u64(110);
+        let params = DeviceParams::ideal().with_weight_bits(6).with_c2c(0.03);
+        let w = rand_w(&mut rng, 12 * 7);
+        let noise = ProgramNoise::sample(&mut rng, 12 * 7);
+        let arr = CrossbarArray::program(12, 7, &w, &params, &noise);
+        for i in 0..12 {
+            for j in 0..7 {
+                let want = arr.g_diff[i * 7 + j] + arr.mismatch[i * 7 + j];
+                assert_eq!(arr.plane()[j * 12 + i], want, "cell ({i},{j})");
+            }
+        }
+        // The read is exactly the kernel reference over the plane.
+        let mut x = vec![0.0f32; 12];
+        rng.fill_uniform_f32(&mut x, -1.0, 1.0);
+        let mut want = vec![0.0f32; 7];
+        super::kernel::read_reference(arr.plane(), 12, 7, &x, &mut want);
+        assert_eq!(arr.read_vec(&x), want);
     }
 
     #[test]

@@ -1,0 +1,218 @@
+//! Columnar VMM inner loops: the single read kernel every engine
+//! routes through, plus its retained scalar reference.
+//!
+//! ## Layout
+//!
+//! [`super::array::CrossbarArray`] keeps one fused read plane
+//! `g_diff + mismatch` in **column-major** order
+//! (`plane[j * rows + i]`), built once at program time.  A read is
+//! then `cols` independent dot products over contiguous columns —
+//! half the memory traffic of the old row-major
+//! `g_diff`/`mismatch` pair, with unit-stride streaming access.
+//!
+//! ## Accumulation-order contract
+//!
+//! The dot product is lane-blocked with a fixed lane width
+//! ([`LANES`]): rows are consumed in chunks of `LANES` with one f32
+//! partial accumulator per lane, the lane accumulators are combined
+//! by a fixed pairwise tree, and the non-multiple tail is accumulated
+//! left-to-right and added last:
+//!
+//! ```text
+//! a[l] = sum_k x[k*LANES + l] * col[k*LANES + l]      (per lane)
+//! y    = ((a0+a1) + (a2+a3)) + ((a4+a5) + (a6+a7)) + tail
+//! ```
+//!
+//! Every engine, tile, shard, and thread count performs exactly this
+//! operation order, so the bit-identity invariants (`Fixed(1) ==
+//! Auto`, cached == uncached, sharded 1x1 == native) hold by
+//! construction.  Zero inputs are **not** skipped: an `x[i] == 0` row
+//! contributes `0.0 * g`, which never changes a finite f32 sum (it
+//! can only flip the sign of a zero, and `-0.0 == 0.0`).  The
+//! independent per-lane accumulators are what lets the compiler keep
+//! the loop in SIMD registers without reassociating f32 math.
+//!
+//! [`dot_reference`]/[`read_reference`] are the naive indexed
+//! transcription of this contract; `prop_kernel_matches_reference`
+//! (in `rust/tests/proptests.rs`) holds the optimized kernel to exact
+//! bit-equality against them over random geometries, including ragged
+//! non-lane-multiple row counts.
+
+/// Fixed kernel lane width (f32 lanes per accumulator block).
+///
+/// Part of the numeric contract: changing it changes every simulated
+/// read, so it is a constant, not a tuning knob.
+pub const LANES: usize = 8;
+
+/// Fixed pairwise reduction of the lane accumulators plus the tail.
+#[inline]
+fn reduce(acc: [f32; LANES], tail: f32) -> f32 {
+    let s01 = acc[0] + acc[1];
+    let s23 = acc[2] + acc[3];
+    let s45 = acc[4] + acc[5];
+    let s67 = acc[6] + acc[7];
+    let lo = s01 + s23;
+    let hi = s45 + s67;
+    lo + hi + tail
+}
+
+/// Lane-blocked dot product of `x` against one contiguous column.
+///
+/// Branch-free inner loop (no zero-skip, no bounds checks after the
+/// slice split); the accumulation order is the module contract.
+#[inline]
+pub fn dot(x: &[f32], col: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), col.len());
+    let mut acc = [0.0f32; LANES];
+    let mut xc = x.chunks_exact(LANES);
+    let mut cc = col.chunks_exact(LANES);
+    for (xs, cs) in xc.by_ref().zip(cc.by_ref()) {
+        for (a, (&xv, &cv)) in acc.iter_mut().zip(xs.iter().zip(cs)) {
+            *a += xv * cv;
+        }
+    }
+    let mut tail = 0.0f32;
+    for (&xv, &cv) in xc.remainder().iter().zip(cc.remainder()) {
+        tail += xv * cv;
+    }
+    reduce(acc, tail)
+}
+
+/// Full columnar read: `y[j] = dot(x, plane[:, j])` for every column
+/// of a column-major `rows x cols` plane.  This is the sole read
+/// implementation behind [`super::array::CrossbarArray::read`].
+#[inline]
+pub fn read_columnar(plane: &[f32], rows: usize, cols: usize, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(plane.len(), rows * cols);
+    debug_assert_eq!(x.len(), rows);
+    debug_assert_eq!(y.len(), cols);
+    for (j, yj) in y.iter_mut().enumerate() {
+        *yj = dot(x, &plane[j * rows..(j + 1) * rows]);
+    }
+}
+
+/// Fuse the row-major differential and mismatch planes into the
+/// column-major read plane:
+/// `plane[j*rows + i] = g_diff[i*cols + j] + mismatch[i*cols + j]`.
+///
+/// Runs once per programming cycle; the per-cell f32 add here is the
+/// same add the old read path performed on every read.
+pub fn fuse_plane(g_diff: &[f32], mismatch: &[f32], rows: usize, cols: usize, plane: &mut [f32]) {
+    debug_assert_eq!(g_diff.len(), rows * cols);
+    debug_assert_eq!(mismatch.len(), rows * cols);
+    debug_assert_eq!(plane.len(), rows * cols);
+    for i in 0..rows {
+        let row_d = &g_diff[i * cols..(i + 1) * cols];
+        let row_m = &mismatch[i * cols..(i + 1) * cols];
+        for (j, (&d, &mm)) in row_d.iter().zip(row_m).enumerate() {
+            plane[j * rows + i] = d + mm;
+        }
+    }
+}
+
+/// Naive indexed transcription of the lane-accumulation contract —
+/// the executable spec [`dot`] must match **bit-for-bit**.  Kept
+/// scalar and index-based on purpose; do not "optimize" it.
+#[allow(clippy::needless_range_loop)]
+pub fn dot_reference(x: &[f32], col: &[f32]) -> f32 {
+    assert_eq!(x.len(), col.len());
+    let n = x.len();
+    let chunks = n / LANES;
+    let mut acc = [0.0f32; LANES];
+    for k in 0..chunks {
+        for l in 0..LANES {
+            acc[l] += x[k * LANES + l] * col[k * LANES + l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * LANES..n {
+        tail += x[i] * col[i];
+    }
+    reduce(acc, tail)
+}
+
+/// Matrix-level scalar reference mirroring [`read_columnar`].
+pub fn read_reference(plane: &[f32], rows: usize, cols: usize, x: &[f32], y: &mut [f32]) {
+    assert_eq!(plane.len(), rows * cols);
+    assert_eq!(x.len(), rows);
+    assert_eq!(y.len(), cols);
+    for (j, yj) in y.iter_mut().enumerate() {
+        *yj = dot_reference(x, &plane[j * rows..(j + 1) * rows]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn rand_vec(rng: &mut Xoshiro256, n: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        rng.fill_uniform_f32(&mut v, -1.0, 1.0);
+        v
+    }
+
+    #[test]
+    fn dot_matches_reference_across_lengths() {
+        let mut rng = Xoshiro256::seed_from_u64(301);
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 31, 32, 100, 257] {
+            let x = rand_vec(&mut rng, n);
+            let c = rand_vec(&mut rng, n);
+            let got = dot(&x, &c);
+            let want = dot_reference(&x, &c);
+            assert_eq!(got.to_bits(), want.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn empty_and_zero_inputs() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        let x = vec![0.0f32; 13];
+        let c = vec![-0.5f32; 13];
+        // Zero drive reads exactly zero (zero rows are not skipped,
+        // but 0.0 * g only ever produces a signed zero).
+        assert_eq!(dot(&x, &c), 0.0);
+    }
+
+    #[test]
+    fn zero_rows_do_not_perturb_the_sum() {
+        // Padding a vector with zero-drive rows must not change the
+        // value: the tiled engine relies on this for padded tiles.
+        let mut rng = Xoshiro256::seed_from_u64(302);
+        let x = rand_vec(&mut rng, 24);
+        let c = rand_vec(&mut rng, 24);
+        let mut xp = x.clone();
+        let mut cp = c.clone();
+        xp.extend_from_slice(&[0.0; 16]);
+        cp.extend_from_slice(&rand_vec(&mut rng, 16));
+        assert_eq!(dot(&xp, &cp), dot(&x, &c));
+    }
+
+    #[test]
+    fn read_columnar_matches_reference_ragged() {
+        let mut rng = Xoshiro256::seed_from_u64(303);
+        for (rows, cols) in [(5usize, 3usize), (8, 8), (33, 9), (50, 41)] {
+            let plane = rand_vec(&mut rng, rows * cols);
+            let x = rand_vec(&mut rng, rows);
+            let mut y = vec![0.0f32; cols];
+            let mut yr = vec![0.0f32; cols];
+            read_columnar(&plane, rows, cols, &x, &mut y);
+            read_reference(&plane, rows, cols, &x, &mut yr);
+            assert_eq!(y, yr, "{rows}x{cols}");
+        }
+    }
+
+    #[test]
+    fn fuse_plane_transposes_and_adds() {
+        let (rows, cols) = (3usize, 4usize);
+        let g: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        let m: Vec<f32> = (0..12).map(|v| 0.5 * v as f32).collect();
+        let mut plane = vec![0.0f32; 12];
+        fuse_plane(&g, &m, rows, cols, &mut plane);
+        for i in 0..rows {
+            for j in 0..cols {
+                assert_eq!(plane[j * rows + i], g[i * cols + j] + m[i * cols + j]);
+            }
+        }
+    }
+}

@@ -5,10 +5,11 @@
 
 pub mod array;
 pub mod energy;
+pub mod kernel;
 pub mod peripheral;
 pub mod tile;
 
-pub use array::{CrossbarArray, ProgramNoise, PulseTable};
+pub use array::{CrossbarArray, ProgramNoise, ProgramScratch, PulseTable};
 pub use energy::EnergyModel;
 pub use peripheral::Peripherals;
 pub use tile::TiledCrossbar;

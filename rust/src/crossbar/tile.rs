@@ -181,22 +181,48 @@ impl TiledCrossbar {
         self.tiles.len()
     }
 
+    /// Physical tile row count (per-worker read scratch is sized off
+    /// this).
+    pub fn tile_rows(&self) -> usize {
+        self.tile_rows
+    }
+
+    /// Physical tile column count.
+    pub fn tile_cols(&self) -> usize {
+        self.tile_cols
+    }
+
     /// Full VMM `y = x^T W` by summing partial currents across the
     /// tile grid (bit-line current summation across tile rows).
+    ///
+    /// Convenience wrapper that allocates its staging buffers once per
+    /// call; hot loops (the serving read path) use
+    /// [`TiledCrossbar::read_with`] with per-worker scratch instead.
     pub fn read(&self, x: &[f32], y: &mut [f32]) {
-        assert_eq!(x.len(), self.rows);
-        assert_eq!(y.len(), self.cols);
-        y.fill(0.0);
+        let mut tx = vec![0.0f32; self.tile_rows];
         let mut ty = vec![0.0f32; self.tile_cols];
+        self.read_with(x, y, &mut tx, &mut ty);
+    }
+
+    /// Allocation-free tiled read into caller-owned staging buffers
+    /// (`tx` of length [`TiledCrossbar::tile_rows`], `ty` of length
+    /// [`TiledCrossbar::tile_cols`]).  Geometry is `debug_assert!`-ed:
+    /// callers validate once per batch at their entry points.
+    pub fn read_with(&self, x: &[f32], y: &mut [f32], tx: &mut [f32], ty: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.rows);
+        debug_assert_eq!(y.len(), self.cols);
+        debug_assert_eq!(tx.len(), self.tile_rows);
+        debug_assert_eq!(ty.len(), self.tile_cols);
+        y.fill(0.0);
         for tr in 0..self.grid_r {
             let r0 = tr * self.tile_rows;
             let rlen = self.tile_rows.min(self.rows - r0);
             // Zero-padded input slice for this tile row.
-            let mut tx = vec![0.0f32; self.tile_rows];
+            tx.fill(0.0);
             tx[..rlen].copy_from_slice(&x[r0..r0 + rlen]);
             for tc in 0..self.grid_c {
                 let tile = &self.tiles[tr * self.grid_c + tc];
-                tile.read(&tx, &mut ty);
+                tile.read(tx, ty);
                 let c0 = tc * self.tile_cols;
                 let clen = self.tile_cols.min(self.cols - c0);
                 for j in 0..clen {

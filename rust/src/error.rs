@@ -27,6 +27,11 @@ pub enum Error {
     #[error("shape error: {0}")]
     Shape(String),
 
+    /// Buffer geometry mismatch caught at an engine entry point (the
+    /// hot crossbar read loops themselves only `debug_assert!`).
+    #[error("geometry error: {0}")]
+    Geometry(String),
+
     /// A distribution fit failed to converge or got degenerate data.
     #[error("fit error: {0}")]
     Fit(String),

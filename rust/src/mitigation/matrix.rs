@@ -135,25 +135,27 @@ impl MitigatedMatrix {
     }
 
     /// Recombined (uncalibrated) pipeline read.
-    fn read_raw(&self, x: &[f32], y64: &mut [f64], scratch: &mut Vec<f32>) {
-        assert_eq!(x.len(), self.rows);
-        assert_eq!(y64.len(), self.cols);
-        scratch.resize(self.cols, 0.0);
+    fn read_raw(&self, x: &[f32], y64: &mut [f64], scratch: &mut ReadScratch) {
+        debug_assert_eq!(x.len(), self.rows);
+        debug_assert_eq!(y64.len(), self.cols);
+        scratch.prepare(self);
         y64.fill(0.0);
         for (weight, xbar) in &self.parts {
-            xbar.read(x, scratch);
-            for (acc, &v) in y64.iter_mut().zip(scratch.iter()) {
+            xbar.read_with(x, &mut scratch.y32, &mut scratch.tx, &mut scratch.ty);
+            for (acc, &v) in y64.iter_mut().zip(scratch.y32.iter()) {
                 *acc += weight * v as f64;
             }
         }
     }
 
-    /// Full mitigated read `y = x^T W` in weight units.
-    pub fn read(&self, x: &[f32], y: &mut [f32]) {
-        assert_eq!(y.len(), self.cols);
-        let mut y64 = vec![0.0f64; self.cols];
-        let mut scratch = Vec::new();
-        self.read_raw(x, &mut y64, &mut scratch);
+    /// Full mitigated read `y = x^T W` in weight units, staging
+    /// through caller-owned scratch — the hot path for callers that
+    /// read in a loop (solver iterations, probe sweeps).
+    pub fn read_scratch(&self, x: &[f32], y: &mut [f32], scratch: &mut ReadScratch) {
+        debug_assert_eq!(y.len(), self.cols);
+        let mut y64 = std::mem::take(&mut scratch.y64);
+        y64.resize(self.cols, 0.0);
+        self.read_raw(x, &mut y64, scratch);
         if let Some(cal) = &self.cal {
             for (v, &(g, o)) in y64.iter_mut().zip(cal.iter()) {
                 *v = (*v - o) / g;
@@ -162,6 +164,14 @@ impl MitigatedMatrix {
         for (out, &v) in y.iter_mut().zip(y64.iter()) {
             *out = v as f32;
         }
+        scratch.y64 = y64;
+    }
+
+    /// Full mitigated read `y = x^T W` in weight units (allocating
+    /// convenience wrapper over [`MitigatedMatrix::read_scratch`]).
+    pub fn read(&self, x: &[f32], y: &mut [f32]) {
+        let mut scratch = ReadScratch::default();
+        self.read_scratch(x, y, &mut scratch);
     }
 
     /// Convenience allocating read.
@@ -179,7 +189,7 @@ impl MitigatedMatrix {
         let mut yc = vec![vec![0.0f64; probes]; cols];
         let mut x = vec![0.0f32; rows];
         let mut y64 = vec![0.0f64; cols];
-        let mut scratch = Vec::new();
+        let mut scratch = ReadScratch::default();
         for k in 0..probes {
             for (i, xi) in x.iter_mut().enumerate() {
                 *xi = probe_input(k, i, rows);
@@ -197,6 +207,29 @@ impl MitigatedMatrix {
         (0..cols)
             .map(|j| probe_affine_fit(&yc[j], &yn[j]))
             .collect()
+    }
+}
+
+/// Reusable staging buffers for [`MitigatedMatrix`] reads: the f32
+/// partial-read plane, the tiled read's tile staging, and the f64
+/// recombination accumulator.  `resize` is a no-op once warmed, so a
+/// caller looping over reads (solver iterations, probe fits) pays zero
+/// steady-state allocation.
+#[derive(Debug, Default)]
+pub struct ReadScratch {
+    y32: Vec<f32>,
+    tx: Vec<f32>,
+    ty: Vec<f32>,
+    y64: Vec<f64>,
+}
+
+impl ReadScratch {
+    fn prepare(&mut self, m: &MitigatedMatrix) {
+        self.y32.resize(m.cols, 0.0);
+        if let Some((_, xbar)) = m.parts.first() {
+            self.tx.resize(xbar.tile_rows(), 0.0);
+            self.ty.resize(xbar.tile_cols(), 0.0);
+        }
     }
 }
 

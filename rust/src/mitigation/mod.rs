@@ -37,7 +37,7 @@ pub mod engine;
 pub mod matrix;
 
 pub use engine::MitigatedEngine;
-pub use matrix::MitigatedMatrix;
+pub use matrix::{MitigatedMatrix, ReadScratch};
 
 use crate::device::params::DeviceParams;
 use crate::device::pulse::{nl_to_curvature, pulse_curve};

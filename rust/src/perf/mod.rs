@@ -74,6 +74,66 @@ pub fn compare_to_baseline(
     out
 }
 
+fn fmt_secs(secs: f64) -> String {
+    if secs < 1e-3 {
+        format!("{:.2}us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3}ms", secs * 1e3)
+    } else {
+        format!("{secs:.3}s")
+    }
+}
+
+/// Render an old-vs-new median table (GitHub-flavored markdown) for
+/// every benchmark present in both documents — the `perf-smoke` job
+/// appends this to `$GITHUB_STEP_SUMMARY`.  Unlike
+/// [`compare_to_baseline`] this reports *every* matched benchmark,
+/// improvements included, so the summary shows the whole trajectory
+/// rather than only >2x regressions.
+pub fn delta_table_md(current: &[BenchResult], baseline: &[BenchResult]) -> String {
+    let mut out = String::from(
+        "#### `meliso bench` median delta vs baseline\n\n\
+         | benchmark | baseline median | current median | delta |\n\
+         | --- | ---: | ---: | ---: |\n",
+    );
+    let mut matched = 0usize;
+    for cur in current {
+        let Some(base) = baseline.iter().find(|b| b.name == cur.name) else {
+            continue;
+        };
+        if base.median <= 0.0 || !cur.median.is_finite() {
+            continue;
+        }
+        matched += 1;
+        let ratio = cur.median / base.median;
+        let delta = if ratio <= 1.0 {
+            format!("**{:.2}x faster**", 1.0 / ratio)
+        } else {
+            format!("{ratio:.2}x slower")
+        };
+        out.push_str(&format!(
+            "| `{}` | {} | {} | {} |\n",
+            cur.name,
+            fmt_secs(base.median),
+            fmt_secs(cur.median),
+            delta
+        ));
+    }
+    let only_current = current
+        .iter()
+        .filter(|c| !baseline.iter().any(|b| b.name == c.name))
+        .count();
+    let only_baseline = baseline
+        .iter()
+        .filter(|b| !current.iter().any(|c| c.name == b.name))
+        .count();
+    out.push_str(&format!(
+        "\n_{matched} benchmark(s) compared; {only_current} new without a \
+         baseline entry; {only_baseline} baseline-only._\n"
+    ));
+    out
+}
+
 struct Suite {
     quick: bool,
     filter: Option<String>,
@@ -430,5 +490,28 @@ mod tests {
         assert!((regs[0].ratio - 2.5).abs() < 1e-12);
         // Faster-than-baseline never fires.
         assert!(compare_to_baseline(&[result("a", 0.1)], &baseline, 2.0).is_empty());
+    }
+
+    #[test]
+    fn delta_table_reports_every_matched_benchmark() {
+        let baseline = vec![result("a", 1.0), result("b", 0.010), result("gone", 1.0)];
+        let current = vec![
+            result("a", 0.5),   // 2x faster
+            result("b", 0.020), // 2x slower
+            result("new", 3.0), // no baseline entry
+        ];
+        let md = delta_table_md(&current, &baseline);
+        assert!(md.contains("| `a` | 1.000s | 500.000ms | **2.00x faster** |"), "{md}");
+        assert!(md.contains("| `b` | 10.000ms | 20.000ms | 2.00x slower |"), "{md}");
+        assert!(!md.contains("`new`"), "{md}");
+        assert!(!md.contains("`gone`"), "{md}");
+        assert!(
+            md.contains("2 benchmark(s) compared; 1 new without a baseline entry; 1 baseline-only."),
+            "{md}"
+        );
+        // Every data row renders the full 4-column markdown shape.
+        for line in md.lines().filter(|l| l.starts_with("| `")) {
+            assert_eq!(line.matches(" | ").count(), 3, "{line}");
+        }
     }
 }

@@ -161,6 +161,16 @@ pub struct ServeReport {
     /// Mean absolute request error vs the exact reference (NaN unless
     /// [`ServeOptions::measure_error`]).
     pub mean_abs_error: f64,
+    /// Least-squares requests/sec fitted over the run's
+    /// batch-completion points (cumulative served requests vs wall
+    /// time) — the sustained rate the capacity projection
+    /// extrapolates from.  Falls back to the mean throughput when the
+    /// run finished in fewer than two batches.
+    pub fitted_rps: f64,
+    /// Capacity projection: nodes of this fabric needed to sustain
+    /// 10^8 requests/day at the fitted rate (0 when no rate could be
+    /// estimated).
+    pub nodes_for_1e8_per_day: u64,
 }
 
 /// Shared mutable tallies of one run.
@@ -171,6 +181,41 @@ struct Tallies {
     programs: u64,
     err_sum: f64,
     err_n: usize,
+    /// `(wall secs, cumulative served requests)` at each batch
+    /// completion — the regression points of the capacity projection.
+    points: Vec<(f64, f64)>,
+}
+
+/// Least-squares slope of cumulative served requests over wall time
+/// (requests/sec) and the node count that rate implies for a
+/// 10^8-requests/day deployment.  With fewer than two batch points the
+/// slope falls back to `fallback_rps` (the run's mean throughput).
+fn capacity_projection(points: &[(f64, f64)], fallback_rps: f64) -> (f64, u64) {
+    let mut rate = fallback_rps;
+    if points.len() >= 2 {
+        let n = points.len() as f64;
+        let mt = points.iter().map(|p| p.0).sum::<f64>() / n;
+        let mr = points.iter().map(|p| p.1).sum::<f64>() / n;
+        let mut cov = 0.0f64;
+        let mut var = 0.0f64;
+        for &(t, r) in points {
+            cov += (t - mt) * (r - mr);
+            var += (t - mt) * (t - mt);
+        }
+        if var > 0.0 {
+            let slope = cov / var;
+            if slope.is_finite() && slope > 0.0 {
+                rate = slope;
+            }
+        }
+    }
+    let target_rps = 1e8 / 86_400.0;
+    let nodes = if rate > 0.0 && rate.is_finite() {
+        (target_rps / rate).ceil() as u64
+    } else {
+        0
+    };
+    (rate, nodes)
 }
 
 /// Run one serving simulation against `engine` under `device`.
@@ -192,6 +237,7 @@ pub fn run_serve(
         programs: 0,
         err_sum: 0.0,
         err_n: 0,
+        points: Vec::new(),
     });
     let failure: Mutex<Option<Error>> = Mutex::new(None);
     let workers = opts.workers.max(1);
@@ -206,13 +252,14 @@ pub fn run_serve(
             let specs = &specs;
             let tallies = &tallies;
             let failure = &failure;
+            let wall = &wall;
             scope.spawn(move || loop {
                 let batch = queue.pop_batch(opts.batch_max, opts.window);
                 if batch.is_empty() {
                     break; // closed and drained
                 }
                 if let Err(e) = serve_batch(
-                    engine, device, opts, cache, specs, &batch, tallies,
+                    engine, device, opts, cache, specs, &batch, tallies, &wall,
                 ) {
                     let mut slot = failure.lock().unwrap();
                     if slot.is_none() {
@@ -262,6 +309,12 @@ pub fn run_serve(
     let mut lat = t.latencies;
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let requests = lat.len();
+    let mean_rps = if wall_secs > 0.0 {
+        requests as f64 / wall_secs
+    } else {
+        0.0
+    };
+    let (fitted_rps, nodes_for_1e8_per_day) = capacity_projection(&t.points, mean_rps);
     Ok(ServeReport {
         requests,
         batches: t.batches,
@@ -271,11 +324,7 @@ pub fn run_serve(
             0.0
         },
         wall_secs,
-        throughput: if wall_secs > 0.0 {
-            requests as f64 / wall_secs
-        } else {
-            0.0
-        },
+        throughput: mean_rps,
         p50_ms: percentile(&lat, 50.0) * 1e3,
         p95_ms: percentile(&lat, 95.0) * 1e3,
         p99_ms: percentile(&lat, 99.0) * 1e3,
@@ -286,11 +335,14 @@ pub fn run_serve(
         } else {
             f64::NAN
         },
+        fitted_rps,
+        nodes_for_1e8_per_day,
     })
 }
 
 /// Serve one coalesced batch: group by model, resolve each group's
-/// program (cache hit or fresh), read, account latency and error.
+/// program (cache hit, fused program+read on a miss, or fresh), read,
+/// account latency and error.
 #[allow(clippy::too_many_arguments)]
 fn serve_batch(
     engine: &DynEngine,
@@ -300,6 +352,7 @@ fn serve_batch(
     specs: &[ProgramSpec],
     batch: &[Request],
     tallies: &Mutex<Tallies>,
+    wall: &Stopwatch,
 ) -> Result<()> {
     // Group requests by model, preserving arrival order within groups.
     let mut groups: Vec<(usize, Vec<&Request>)> = Vec::new();
@@ -314,23 +367,35 @@ fn serve_batch(
     let mut err_n = 0usize;
     for (model, reqs) in &groups {
         let spec = &specs[*model];
-        let handle = if opts.cache {
-            cache.get_or_program(engine, spec, device)?
-        } else {
-            fresh_programs += 1;
-            engine.program(spec, device)?
-        };
         let n = reqs.len();
         let mut x = Vec::with_capacity(n * opts.rows);
         for r in reqs {
             x.extend_from_slice(&r.x);
         }
         if opts.measure_error {
+            // Harness mode keeps the measurement path (hardware +
+            // exact software reference per request).
+            let handle = if opts.cache {
+                cache.get_or_program(engine, spec, device)?
+            } else {
+                fresh_programs += 1;
+                engine.program(spec, device)?
+            };
             let out = handle.forward(&x, n)?;
             err_sum += out.errors().iter().map(|e| e.abs()).sum::<f64>();
             err_n += out.y_hw.len();
+        } else if opts.cache {
+            // Hot path: a cold model programs and answers this batch
+            // in one fused pass; a warm model reads through the
+            // cached handle.
+            let (handle, fused) =
+                cache.get_or_program_read(engine, spec, device, &x, n)?;
+            if fused.is_none() {
+                let _ = handle.read(&x, n)?;
+            }
         } else {
-            let _ = handle.read(&x, n)?;
+            fresh_programs += 1;
+            let _ = engine.program_read(spec, device, &x, n)?;
         }
     }
     let done = Instant::now();
@@ -341,6 +406,7 @@ fn serve_batch(
     }
     t.batches += 1;
     t.batched_requests += batch.len();
+    t.points.push((wall.elapsed_secs(), t.batched_requests as f64));
     t.programs += fresh_programs;
     t.err_sum += err_sum;
     t.err_n += err_n;
@@ -402,6 +468,36 @@ mod tests {
         assert!(uncached.programs >= 2, "each batch group reprograms");
         let (a, b) = (cached.mean_abs_error, uncached.mean_abs_error);
         assert!((a - b).abs() < 1e-9 + 1e-9 * a.abs(), "{a} vs {b}");
+    }
+
+    #[test]
+    fn projection_fits_a_linear_ramp() {
+        let points: Vec<(f64, f64)> =
+            (1..=5).map(|i| (i as f64 * 0.1, i as f64 * 50.0)).collect();
+        let (rps, nodes) = capacity_projection(&points, 1.0);
+        assert!((rps - 500.0).abs() < 1e-9);
+        // 1e8/day ~ 1157.4 req/s -> 3 nodes at 500 req/s.
+        assert_eq!(nodes, 3);
+        // Too few points: fall back to the mean throughput.
+        let (rps, nodes) = capacity_projection(&[(0.1, 10.0)], 250.0);
+        assert_eq!(rps, 250.0);
+        assert_eq!(nodes, 5);
+    }
+
+    #[test]
+    fn throughput_run_uses_fused_path_and_projects_capacity() {
+        let engine = DynEngine::new(NativeEngine::default());
+        let device = presets::epiram().params;
+        let mut opts = tiny(true, 2);
+        opts.measure_error = false;
+        let r = run_serve(&engine, &device, &opts).unwrap();
+        assert_eq!(r.requests, 24);
+        assert!(r.fitted_rps > 0.0);
+        assert!(r.nodes_for_1e8_per_day >= 1);
+        assert!(r.mean_abs_error.is_nan());
+        // Fused misses are still counted as misses/programs.
+        assert_eq!(r.cache.misses, r.programs);
+        assert!(r.cache.misses >= 2);
     }
 
     #[test]

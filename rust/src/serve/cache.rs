@@ -204,6 +204,67 @@ impl ProgramCache {
         Ok(handle)
     }
 
+    /// Fused lookup for the serving hot path: on a hit, return the
+    /// cached handle and `None` (the caller reads through the handle);
+    /// on a miss, run the engine's fused
+    /// [`VmmEngine::program_read`] **outside the lock** and return the
+    /// first batch's outputs alongside the fresh handle — the cold
+    /// model's first batch is programmed and answered in one pass.
+    ///
+    /// Counter semantics match [`ProgramCache::get_or_program`]
+    /// exactly (one miss per cold lookup, racing workers may both
+    /// miss).  If a racing worker's insert wins, its arrays are
+    /// bit-identical (same key), so the `y` computed against the local
+    /// program is still the served answer.
+    pub fn get_or_program_read<E: VmmEngine + ?Sized>(
+        &self,
+        engine: &E,
+        spec: &ProgramSpec,
+        params: &DeviceParams,
+        x: &[f32],
+        batch: usize,
+    ) -> Result<(ProgrammedVmm, Option<Vec<f32>>)> {
+        let key = CacheKey::new(engine, spec, params);
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(e) = inner.map.get_mut(&key) {
+                e.last_used = tick;
+                let handle = e.handle.clone();
+                drop(inner);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok((handle, None));
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let (fresh, y) = engine.program_read(spec, params, x, batch)?;
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let handle = match inner.map.entry(key) {
+            MapEntry::Occupied(mut o) => {
+                o.get_mut().last_used = tick;
+                o.get().handle.clone()
+            }
+            MapEntry::Vacant(v) => {
+                v.insert(CacheEntry { handle: fresh.clone(), last_used: tick });
+                fresh
+            }
+        };
+        while inner.map.len() > self.capacity {
+            let victim = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+                .expect("map over capacity is non-empty");
+            inner.map.remove(&victim);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok((handle, Some(y)))
+    }
+
     pub fn counts(&self) -> CacheCounts {
         let entries = self.inner.lock().unwrap().map.len() as u64;
         CacheCounts {
@@ -302,6 +363,29 @@ mod tests {
         cache.get_or_program(&engine, &b, &params).unwrap();
         assert_eq!(cache.counts().misses, 4);
         assert!((cache.counts().hit_rate() - 2.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fused_miss_answers_first_batch() {
+        let cache = ProgramCache::new(4);
+        let engine = NativeEngine::default();
+        let params = presets::ag_si().params;
+        let s = spec(16, 16, 31);
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let mut x = vec![0.0f32; 2 * 16];
+        rng.fill_uniform_f32(&mut x, 0.0, 1.0);
+        let (h1, y1) = cache
+            .get_or_program_read(&engine, &s, &params, &x, 2)
+            .unwrap();
+        let y1 = y1.expect("cold lookup answers the batch inline");
+        assert_eq!(y1, h1.read(&x, 2).unwrap());
+        let (h2, y2) = cache
+            .get_or_program_read(&engine, &s, &params, &x, 2)
+            .unwrap();
+        assert!(y2.is_none(), "hit defers to the cached handle");
+        assert_eq!(h2.read(&x, 2).unwrap(), y1);
+        let c = cache.counts();
+        assert_eq!((c.hits, c.misses), (1, 1));
     }
 
     #[test]

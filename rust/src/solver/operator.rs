@@ -1,8 +1,10 @@
 //! Linear operators: the exact matrix and its crossbar realization.
 
+use std::sync::Mutex;
+
 use crate::device::params::DeviceParams;
 use crate::error::{Error, Result};
-use crate::mitigation::{MitigatedMatrix, MitigationConfig};
+use crate::mitigation::{MitigatedMatrix, MitigationConfig, ReadScratch};
 use crate::util::rng::Xoshiro256;
 
 /// Anything that can apply `y = A x` (and `A^T x` for Krylov methods
@@ -87,6 +89,18 @@ pub struct CrossbarOperator {
     forward: MitigatedMatrix,
     /// Pipeline programmed with A (for transpose products).
     transpose: MitigatedMatrix,
+    /// Reusable apply staging (`LinearOperator::apply` takes `&self`,
+    /// so the per-iteration buffers live behind an uncontended lock).
+    scratch: Mutex<ApplyScratch>,
+}
+
+/// Input/output staging reused across solver iterations: f32 views of
+/// the f64 vectors plus the mitigation pipeline's read scratch.
+#[derive(Debug, Default)]
+struct ApplyScratch {
+    xf: Vec<f32>,
+    yf: Vec<f32>,
+    read: ReadScratch,
 }
 
 impl CrossbarOperator {
@@ -131,7 +145,14 @@ impl CrossbarOperator {
         let forward = MitigatedMatrix::program(m, n, &at, params, 32, 32, rng, mitigation, true);
         let aw: Vec<f32> = a.iter().map(|&v| (v / scale) as f32).collect();
         let transpose = MitigatedMatrix::program(n, m, &aw, params, 32, 32, rng, mitigation, true);
-        Self { n, m, scale, forward, transpose }
+        Self {
+            n,
+            m,
+            scale,
+            forward,
+            transpose,
+            scratch: Mutex::new(ApplyScratch::default()),
+        }
     }
 
     pub fn scale(&self) -> f64 {
@@ -152,9 +173,13 @@ impl LinearOperator for CrossbarOperator {
     fn apply(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.m);
         assert_eq!(y.len(), self.n);
-        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
-        let yf = self.forward.read_vec(&xf);
-        for (o, v) in y.iter_mut().zip(yf) {
+        let mut guard = self.scratch.lock().unwrap();
+        let s = &mut *guard;
+        s.xf.clear();
+        s.xf.extend(x.iter().map(|&v| v as f32));
+        s.yf.resize(self.n, 0.0);
+        self.forward.read_scratch(&s.xf, &mut s.yf, &mut s.read);
+        for (o, &v) in y.iter_mut().zip(s.yf.iter()) {
             *o = v as f64 * self.scale;
         }
     }
@@ -162,9 +187,13 @@ impl LinearOperator for CrossbarOperator {
     fn apply_t(&self, x: &[f64], y: &mut [f64]) -> Result<()> {
         assert_eq!(x.len(), self.n);
         assert_eq!(y.len(), self.m);
-        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
-        let yf = self.transpose.read_vec(&xf);
-        for (o, v) in y.iter_mut().zip(yf) {
+        let mut guard = self.scratch.lock().unwrap();
+        let s = &mut *guard;
+        s.xf.clear();
+        s.xf.extend(x.iter().map(|&v| v as f32));
+        s.yf.resize(self.m, 0.0);
+        self.transpose.read_scratch(&s.xf, &mut s.yf, &mut s.read);
+        for (o, &v) in y.iter_mut().zip(s.yf.iter()) {
             *o = v as f64 * self.scale;
         }
         Ok(())

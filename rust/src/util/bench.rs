@@ -17,6 +17,7 @@ use std::path::Path;
 use std::time::Instant;
 
 use crate::error::{Error, Result};
+use crate::util::codec::Codec;
 use crate::util::json::{obj, Json};
 
 /// Schema version of the `BENCH.json` document.
@@ -119,18 +120,17 @@ pub fn bench_suite_json(results: &[BenchResult]) -> Json {
     ])
 }
 
-/// Write `BENCH.json` for a suite, creating parent directories.
+/// Write a bench-suite document, creating parent directories.  The
+/// framing follows the path convention ([`Codec::for_path`]): a
+/// `.json` path writes pretty text, a `.melb` path the binary framing.
 pub fn write_bench_json(results: &[BenchResult], path: &Path) -> Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    std::fs::write(path, bench_suite_json(results).to_string_pretty())?;
-    Ok(())
+    Codec::for_path(path).write(path, &bench_suite_json(results))
 }
 
-/// Read a `BENCH.json` document back into results.
+/// Read a bench-suite document back into results (either framing —
+/// the codec sniffs).
 pub fn read_bench_json(path: &Path) -> Result<Vec<BenchResult>> {
-    let doc = Json::parse(&std::fs::read_to_string(path)?)?;
+    let doc = Codec::read(path)?;
     let version = doc
         .get("version")
         .and_then(Json::as_f64)
@@ -290,6 +290,24 @@ mod tests {
         assert_eq!(back[0].name, "native-par");
         assert_eq!(back[0].median, 0.0125);
         assert_eq!(back[0].items_per_iter, Some(256.0));
+        assert_eq!(back[1].items_per_iter, None);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn bench_melb_file_roundtrip() {
+        // The binary twin of the suite document decodes to the same
+        // results (sniffing read; no text re-parse).
+        let dir = std::env::temp_dir().join("meliso_bench_melb_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let results = sample_results();
+        let path = dir.join("BENCH.melb");
+        write_bench_json(&results, &path).unwrap();
+        let raw = std::fs::read(&path).unwrap();
+        assert_eq!(&raw[..4], b"MELB");
+        let back = read_bench_json(&path).unwrap();
+        assert_eq!(back.len(), results.len());
+        assert_eq!(back[0].median, results[0].median);
         assert_eq!(back[1].items_per_iter, None);
         let _ = std::fs::remove_dir_all(dir);
     }

@@ -1,0 +1,386 @@
+//! Pluggable artifact codec: one [`Json`] value model, two framings.
+//!
+//! * **Json** — the pretty text framing every report already uses;
+//!   human-diffable, universally consumable.
+//! * **Binary** — a length-prefixed tagged framing (`MELB` magic +
+//!   version byte) for large machine-read artifacts (bench suites,
+//!   sweep outputs, persisted program specs): no text re-parse on the
+//!   read path, and `f64` payloads round-trip bit-exactly.
+//!
+//! Decoding always sniffs: [`Codec::decode`] accepts either framing,
+//! so a reader never needs to know how an artifact was written.
+//!
+//! ## Binary framing (version 1)
+//!
+//! ```text
+//! "MELB"  u8 version  value
+//! value := tag u8 + payload
+//!   0 null | 1 false | 2 true
+//!   3 f64 (8 bytes LE)
+//!   4 str (u32 LE byte length + UTF-8 bytes)
+//!   5 arr (u32 LE count + count values)
+//!   6 obj (u32 LE count + count (str key, value) pairs)
+//! ```
+//!
+//! All integers little-endian; object keys are written in the
+//! [`Json::Obj`] `BTreeMap` order, so encoding is deterministic.
+//! Framing contract: `rust/DESIGN.md` §15.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Leading magic of the binary framing.
+pub const BINARY_MAGIC: [u8; 4] = *b"MELB";
+/// Current binary framing version.
+pub const BINARY_VERSION: u8 = 1;
+/// Nesting bound of the binary decoder (corrupt inputs must error, not
+/// exhaust the stack).
+const MAX_DEPTH: usize = 512;
+
+/// Artifact framing selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Codec {
+    /// Pretty JSON text.
+    #[default]
+    Json,
+    /// Length-prefixed tagged binary (`MELB`).
+    Binary,
+}
+
+impl Codec {
+    /// Framing convention by file extension: `.melb`/`.bin` is binary,
+    /// anything else (`.json` included) is text.
+    pub fn for_path(path: &Path) -> Codec {
+        match path.extension().and_then(|e| e.to_str()) {
+            Some("melb") | Some("bin") => Codec::Binary,
+            _ => Codec::Json,
+        }
+    }
+
+    /// Encode one value in this framing.
+    pub fn encode(&self, v: &Json) -> Vec<u8> {
+        match self {
+            Codec::Json => v.to_string_pretty().into_bytes(),
+            Codec::Binary => {
+                let mut out = Vec::with_capacity(64);
+                out.extend_from_slice(&BINARY_MAGIC);
+                out.push(BINARY_VERSION);
+                encode_value(v, &mut out);
+                out
+            }
+        }
+    }
+
+    /// Decode either framing: binary when the `MELB` magic leads, JSON
+    /// text otherwise.
+    pub fn decode(bytes: &[u8]) -> Result<Json> {
+        if bytes.starts_with(&BINARY_MAGIC) {
+            let version = *bytes
+                .get(4)
+                .ok_or_else(|| Error::Parse("melb: truncated header".into()))?;
+            if version > BINARY_VERSION {
+                return Err(Error::Parse(format!(
+                    "melb: framing version {version} is newer than this \
+                     binary ({BINARY_VERSION})"
+                )));
+            }
+            let mut r = Reader { bytes, pos: 5 };
+            let v = r.value(0)?;
+            if r.pos != bytes.len() {
+                return Err(Error::Parse(format!(
+                    "melb: {} trailing bytes",
+                    bytes.len() - r.pos
+                )));
+            }
+            Ok(v)
+        } else {
+            let text = std::str::from_utf8(bytes)
+                .map_err(|_| Error::Parse("artifact is neither melb nor UTF-8 text".into()))?;
+            Json::parse(text)
+        }
+    }
+
+    /// Write one value to `path` in this framing, creating parents.
+    pub fn write(&self, path: &Path, v: &Json) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.encode(v))?;
+        Ok(())
+    }
+
+    /// Read one value from `path`, sniffing the framing.
+    pub fn read(path: &Path) -> Result<Json> {
+        Self::decode(&std::fs::read(path)?)
+    }
+}
+
+fn encode_value(v: &Json, out: &mut Vec<u8>) {
+    match v {
+        Json::Null => out.push(0),
+        Json::Bool(false) => out.push(1),
+        Json::Bool(true) => out.push(2),
+        Json::Num(n) => {
+            out.push(3);
+            out.extend_from_slice(&n.to_le_bytes());
+        }
+        Json::Str(s) => {
+            out.push(4);
+            encode_str(s, out);
+        }
+        Json::Arr(a) => {
+            out.push(5);
+            out.extend_from_slice(&(a.len() as u32).to_le_bytes());
+            for item in a {
+                encode_value(item, out);
+            }
+        }
+        Json::Obj(o) => {
+            out.push(6);
+            out.extend_from_slice(&(o.len() as u32).to_le_bytes());
+            for (k, item) in o {
+                encode_str(k, out);
+                encode_value(item, out);
+            }
+        }
+    }
+}
+
+fn encode_str(s: &str, out: &mut Vec<u8>) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn err<T>(&self, msg: &str) -> Result<T> {
+        Err(Error::Parse(format!("melb: {msg} at offset {}", self.pos)))
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.bytes.len() - self.pos < n {
+            return self.err("truncated value");
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// A declared element/byte count; every element costs at least one
+    /// byte, so a count beyond the remaining buffer is corrupt (and
+    /// must not drive a huge allocation).
+    fn count(&mut self) -> Result<usize> {
+        let n = self.u32()? as usize;
+        if n > self.bytes.len() - self.pos {
+            return self.err("declared length exceeds buffer");
+        }
+        Ok(n)
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.count()?;
+        let raw = self.take(n)?;
+        match std::str::from_utf8(raw) {
+            Ok(s) => Ok(s.to_string()),
+            Err(_) => self.err("invalid UTF-8 string"),
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json> {
+        if depth > MAX_DEPTH {
+            return self.err("nesting too deep");
+        }
+        let tag = self.take(1)?[0];
+        match tag {
+            0 => Ok(Json::Null),
+            1 => Ok(Json::Bool(false)),
+            2 => Ok(Json::Bool(true)),
+            3 => {
+                let b = self.take(8)?;
+                let mut raw = [0u8; 8];
+                raw.copy_from_slice(b);
+                Ok(Json::Num(f64::from_le_bytes(raw)))
+            }
+            4 => Ok(Json::Str(self.string()?)),
+            5 => {
+                let n = self.count()?;
+                let mut items = Vec::with_capacity(n);
+                for _ in 0..n {
+                    items.push(self.value(depth + 1)?);
+                }
+                Ok(Json::Arr(items))
+            }
+            6 => {
+                let n = self.count()?;
+                let mut map = BTreeMap::new();
+                for _ in 0..n {
+                    let k = self.string()?;
+                    let v = self.value(depth + 1)?;
+                    map.insert(k, v);
+                }
+                Ok(Json::Obj(map))
+            }
+            t => self.err(&format!("unknown tag {t}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::obj;
+    use crate::util::rng::Xoshiro256;
+
+    fn sample() -> Json {
+        obj([
+            ("name", Json::Str("native-par".into())),
+            ("median_secs", Json::Num(0.012_345_678_901_234_5)),
+            ("flags", Json::Arr(vec![Json::Bool(true), Json::Null])),
+            (
+                "nested",
+                obj([("unicode", Json::Str("héllo — wörld 😀".into()))]),
+            ),
+            ("empty_arr", Json::Arr(vec![])),
+            ("empty_obj", Json::Obj(Default::default())),
+        ])
+    }
+
+    #[test]
+    fn binary_roundtrip_is_exact() {
+        let v = sample();
+        let bytes = Codec::Binary.encode(&v);
+        assert_eq!(&bytes[..4], &BINARY_MAGIC);
+        assert_eq!(bytes[4], BINARY_VERSION);
+        assert_eq!(Codec::decode(&bytes).unwrap(), v);
+    }
+
+    #[test]
+    fn sniffing_accepts_both_framings() {
+        let v = sample();
+        assert_eq!(Codec::decode(&Codec::Json.encode(&v)).unwrap(), v);
+        assert_eq!(Codec::decode(&Codec::Binary.encode(&v)).unwrap(), v);
+    }
+
+    #[test]
+    fn f64_bits_survive_binary() {
+        // Values whose shortest decimal text could be mis-rounded by a
+        // sloppy reader: binary carries raw bits.
+        for &x in &[f64::MIN_POSITIVE, 1.0 + f64::EPSILON, -0.0, 1e-300, 0.1 + 0.2] {
+            let v = Json::Num(x);
+            let back = Codec::decode(&Codec::Binary.encode(&v)).unwrap();
+            assert_eq!(back.as_f64().unwrap().to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn path_convention_selects_framing() {
+        assert_eq!(Codec::for_path(Path::new("a/BENCH.json")), Codec::Json);
+        assert_eq!(Codec::for_path(Path::new("a/BENCH.melb")), Codec::Binary);
+        assert_eq!(Codec::for_path(Path::new("a/dump.bin")), Codec::Binary);
+        assert_eq!(Codec::for_path(Path::new("noext")), Codec::Json);
+    }
+
+    #[test]
+    fn file_roundtrip_both_framings() {
+        let dir = std::env::temp_dir().join("meliso_codec_file_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let v = sample();
+        for name in ["artifact.json", "artifact.melb"] {
+            let path = dir.join(name);
+            Codec::for_path(&path).write(&path, &v).unwrap();
+            assert_eq!(Codec::read(&path).unwrap(), v);
+        }
+        // The two files hold the same value in different framings.
+        let j = std::fs::read(dir.join("artifact.json")).unwrap();
+        let b = std::fs::read(dir.join("artifact.melb")).unwrap();
+        assert_ne!(j, b);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn corrupt_binary_is_rejected_not_panicked() {
+        let good = Codec::Binary.encode(&sample());
+        // Truncations at every prefix length must error cleanly.
+        for cut in 0..good.len() {
+            assert!(Codec::decode(&good[..cut]).is_err() || cut == 0, "cut={cut}");
+        }
+        // Unknown tag.
+        let mut bad = good.clone();
+        bad[5] = 99;
+        assert!(Codec::decode(&bad).is_err());
+        // Future version.
+        let mut newer = good.clone();
+        newer[4] = BINARY_VERSION + 1;
+        assert!(Codec::decode(&newer).is_err());
+        // A declared length far beyond the buffer must not allocate.
+        let mut huge = Vec::from(&BINARY_MAGIC[..]);
+        huge.push(BINARY_VERSION);
+        huge.push(5); // arr
+        huge.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Codec::decode(&huge).is_err());
+    }
+
+    /// Seeded random value generator for the fuzz round-trip.
+    fn random_value(rng: &mut Xoshiro256, depth: usize) -> Json {
+        let kind = if depth >= 4 {
+            rng.uniform_in(0.0, 4.0) as usize // scalars only at depth
+        } else {
+            rng.uniform_in(0.0, 6.0) as usize
+        };
+        match kind {
+            0 => Json::Null,
+            1 => Json::Bool(rng.uniform_in(0.0, 1.0) < 0.5),
+            2 => Json::Num(rng.uniform_in(-1e9, 1e9)),
+            3 => {
+                let n = rng.uniform_in(0.0, 12.0) as usize;
+                let chars: Vec<char> = "ab\"\\\n\tμλ😀 xyz".chars().collect();
+                let s: String = (0..n)
+                    .map(|_| {
+                        let i = rng.uniform_in(0.0, chars.len() as f64) as usize;
+                        chars[i.min(chars.len() - 1)]
+                    })
+                    .collect();
+                Json::Str(s)
+            }
+            4 => {
+                let n = rng.uniform_in(0.0, 5.0) as usize;
+                Json::Arr((0..n).map(|_| random_value(rng, depth + 1)).collect())
+            }
+            _ => {
+                let n = rng.uniform_in(0.0, 5.0) as usize;
+                Json::Obj(
+                    (0..n)
+                        .map(|i| (format!("k{i}"), random_value(rng, depth + 1)))
+                        .collect(),
+                )
+            }
+        }
+    }
+
+    #[test]
+    fn fuzz_json_and_binary_decode_identically() {
+        let mut rng = Xoshiro256::seed_from_u64(0xC0DEC);
+        for _ in 0..200 {
+            let v = random_value(&mut rng, 0);
+            let from_json = Codec::decode(&Codec::Json.encode(&v)).unwrap();
+            let from_bin = Codec::decode(&Codec::Binary.encode(&v)).unwrap();
+            // Binary is exact; JSON text of finite f64 re-parses
+            // exactly (shortest round-trip formatting) — so all three
+            // agree bit-for-bit.
+            assert_eq!(from_bin, v);
+            assert_eq!(from_json, from_bin);
+        }
+    }
+}

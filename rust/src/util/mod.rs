@@ -4,6 +4,7 @@
 //! and progress/timing helpers.
 
 pub mod bench;
+pub mod codec;
 pub mod csv;
 pub mod json;
 pub mod pool;

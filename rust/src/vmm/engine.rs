@@ -132,6 +132,16 @@ impl VmmEngine for DynEngine {
     fn cache_config(&self) -> String {
         self.0.cache_config()
     }
+
+    fn program_read(
+        &self,
+        spec: &ProgramSpec,
+        params: &DeviceParams,
+        x: &[f32],
+        batch: usize,
+    ) -> Result<(ProgrammedVmm, Vec<f32>)> {
+        self.0.program_read(spec, params, x, batch)
+    }
 }
 
 /// A MELISO compute backend.
@@ -181,6 +191,26 @@ pub trait VmmEngine: Send + Sync {
     /// thread count, so differently-fanned clones share cache entries.
     fn cache_config(&self) -> String {
         self.name().to_string()
+    }
+
+    /// Fused program+read: program `spec` once and answer the first
+    /// request batch against the fresh arrays in one pass, returning
+    /// both the read-many handle and the batch's outputs.  The serving
+    /// layer uses this on a cache miss so a cold model's first batch
+    /// never goes back through the cache lock between programming and
+    /// reading.  The returned `y` is bit-identical to
+    /// `handle.read(x, batch)` — the default is exactly that call, and
+    /// overrides must preserve it.
+    fn program_read(
+        &self,
+        spec: &ProgramSpec,
+        params: &DeviceParams,
+        x: &[f32],
+        batch: usize,
+    ) -> Result<(ProgrammedVmm, Vec<f32>)> {
+        let handle = self.program(spec, params)?;
+        let y = handle.read(x, batch)?;
+        Ok((handle, y))
     }
 }
 

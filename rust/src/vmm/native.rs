@@ -18,9 +18,9 @@
 //! result is **bit-identical for any thread count** (the determinism
 //! guard in `rust/tests/integration_tiled.rs` enforces this).
 
-use crate::crossbar::array::{CrossbarArray, ProgramNoise, PulseTable};
+use crate::crossbar::array::{CrossbarArray, ProgramScratch, PulseTable};
 use crate::device::params::DeviceParams;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::util::pool::{run_blocked, Parallelism};
 
 use super::engine::{VmmBatch, VmmEngine, VmmOutput};
@@ -58,21 +58,6 @@ impl NativeEngine {
     }
 }
 
-/// Per-worker reusable programming scratch.
-struct Scratch {
-    arr: CrossbarArray,
-    noise: ProgramNoise,
-}
-
-impl Scratch {
-    fn new(rows: usize, cols: usize) -> Self {
-        Self {
-            arr: CrossbarArray::zeroed(rows, cols),
-            noise: ProgramNoise::zeros(rows * cols),
-        }
-    }
-}
-
 /// Program-once handle of the native engine: one materialized array;
 /// reads are fanned over the pool exactly like `forward` fans samples
 /// (the array is immutable at read time, so sharing it is free).
@@ -92,6 +77,13 @@ impl ProgrammedRead for ProgrammedArray {
 
     fn read_batch(&self, x: &[f32], batch: usize) -> crate::error::Result<Vec<f32>> {
         let (r, c) = (self.arr.rows(), self.arr.cols());
+        if x.len() != batch * r {
+            return Err(Error::Geometry(format!(
+                "read batch expects {} inputs ({batch} x {r} rows), got {}",
+                batch * r,
+                x.len()
+            )));
+        }
         Ok(run_blocked(self.par, batch, c, || (), |s, _scratch, out| {
             self.arr.read(&x[s * r..(s + 1) * r], out);
         }))
@@ -121,11 +113,9 @@ impl VmmEngine for NativeEngine {
             self.par,
             b,
             c,
-            || Scratch::new(r, c),
+            || ProgramScratch::new(r, c),
             |s, scratch, out| {
-                scratch.noise.z0.copy_from_slice(batch.z_of(s, 0));
-                scratch.noise.z1.copy_from_slice(batch.z_of(s, 1));
-                scratch.noise.z2.copy_from_slice(batch.z_of(s, 2));
+                scratch.load_noise([batch.z_of(s, 0), batch.z_of(s, 1), batch.z_of(s, 2)]);
                 scratch.arr.reprogram(batch.w_of(s), params, &scratch.noise, &table);
                 scratch.arr.read(batch.x_of(s), out);
             },

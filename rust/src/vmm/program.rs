@@ -34,6 +34,8 @@ use std::sync::Arc;
 use crate::crossbar::array::ProgramNoise;
 use crate::device::params::DeviceParams;
 use crate::error::{Error, Result};
+use crate::util::codec::Codec;
+use crate::util::json::{obj, Json};
 use crate::util::rng::Xoshiro256;
 
 use super::engine::{DynEngine, VmmBatch, VmmEngine, VmmOutput};
@@ -125,6 +127,71 @@ impl ProgramSpec {
             vb.z[zb + 2 * cells..zb + 3 * cells].copy_from_slice(&self.noise.z2);
         }
         vb
+    }
+
+    /// Serialize every field to the artifact value model, losslessly:
+    /// each `f32` widens exactly to `f64`, and the 64-bit seed label is
+    /// split into two 32-bit halves (a single `f64` cannot carry all
+    /// 64 bits).  Custom-noise specs ([`ProgramSpec::with_noise`])
+    /// round-trip too — the planes travel with the document.
+    pub fn to_json(&self) -> Json {
+        let plane =
+            |p: &[f32]| Json::Arr(p.iter().map(|&v| Json::Num(v as f64)).collect());
+        obj([
+            ("kind", Json::Str("program-spec".into())),
+            ("rows", Json::Num(self.rows as f64)),
+            ("cols", Json::Num(self.cols as f64)),
+            ("seed_hi", Json::Num((self.program_seed >> 32) as f64)),
+            ("seed_lo", Json::Num((self.program_seed & 0xFFFF_FFFF) as f64)),
+            ("w", plane(&self.w)),
+            ("z0", plane(&self.noise.z0)),
+            ("z1", plane(&self.noise.z1)),
+            ("z2", plane(&self.noise.z2)),
+        ])
+    }
+
+    /// Rebuild a spec from [`ProgramSpec::to_json`] output, validating
+    /// geometry.
+    pub fn from_json(v: &Json) -> Result<ProgramSpec> {
+        let num = |key: &str| -> Result<f64> {
+            v.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| Error::Parse(format!("program spec missing '{key}'")))
+        };
+        let plane = |key: &str| -> Result<Vec<f32>> {
+            v.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::Parse(format!("program spec missing '{key}'")))?
+                .iter()
+                .map(|e| {
+                    e.as_f64()
+                        .map(|x| x as f32)
+                        .ok_or_else(|| Error::Parse(format!("non-numeric entry in '{key}'")))
+                })
+                .collect()
+        };
+        let program_seed = ((num("seed_hi")? as u64) << 32) | (num("seed_lo")? as u64);
+        let spec = ProgramSpec::with_noise(
+            num("rows")? as usize,
+            num("cols")? as usize,
+            plane("w")?,
+            ProgramNoise { z0: plane("z0")?, z1: plane("z1")?, z2: plane("z2")? },
+            program_seed,
+        );
+        spec.check()?;
+        Ok(spec)
+    }
+
+    /// Persist to `path` in the framing the path convention selects
+    /// ([`Codec::for_path`]): `.json` text or `.melb` binary — the
+    /// deployment artifact a serving node programs its cache from.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        Codec::for_path(path).write(path, &self.to_json())
+    }
+
+    /// Load a persisted spec (either framing — the codec sniffs).
+    pub fn load(path: &std::path::Path) -> Result<ProgramSpec> {
+        Self::from_json(&Codec::read(path)?)
     }
 }
 
@@ -397,6 +464,36 @@ mod tests {
         );
         assert!(handle.read(&[0.0; 7], 1).is_err());
         assert!(handle.read(&[], 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn spec_roundtrips_through_both_codec_framings() {
+        let sp = spec(9, 7, 0xDEAD_BEEF_CAFE_F00D); // full-width seed
+        let doc = sp.to_json();
+        let back = ProgramSpec::from_json(&doc).unwrap();
+        assert_eq!(back.rows, sp.rows);
+        assert_eq!(back.cols, sp.cols);
+        assert_eq!(back.program_seed, sp.program_seed);
+        assert_eq!(back.w, sp.w);
+        assert_eq!(back.noise.z0, sp.noise.z0);
+        assert_eq!(back.noise.z1, sp.noise.z1);
+        assert_eq!(back.noise.z2, sp.noise.z2);
+        // Through files in both framings: still bit-exact.
+        let dir = std::env::temp_dir().join("meliso_spec_codec_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        for name in ["spec.json", "spec.melb"] {
+            let path = dir.join(name);
+            sp.save(&path).unwrap();
+            let loaded = ProgramSpec::load(&path).unwrap();
+            assert_eq!(loaded.w, sp.w, "{name}");
+            assert_eq!(loaded.noise.z2, sp.noise.z2, "{name}");
+            assert_eq!(loaded.program_seed, sp.program_seed, "{name}");
+        }
+        // Corrupt geometry is rejected by the embedded check.
+        let mut truncated = sp.clone();
+        truncated.w.pop();
+        assert!(ProgramSpec::from_json(&truncated.to_json()).is_err());
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

@@ -48,9 +48,9 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use crate::crossbar::array::{CrossbarArray, ProgramNoise, PulseTable};
+use crate::crossbar::array::{CrossbarArray, ProgramScratch, PulseTable};
 use crate::device::params::DeviceParams;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::shard::{ChecksumCode, FaultSpec, ShardGrid, ShardRegion, Verdict};
 use crate::util::pool::{run_blocked, Parallelism};
 
@@ -189,25 +189,6 @@ impl ShardedEngine {
     }
 }
 
-/// Per-worker reusable programming scratch for one augmented shard.
-struct ShardScratch {
-    arr: CrossbarArray,
-    noise: ProgramNoise,
-    w: Vec<f32>,
-    x: Vec<f32>,
-}
-
-impl ShardScratch {
-    fn new(max_r: usize, width: usize) -> Self {
-        Self {
-            arr: CrossbarArray::zeroed(max_r, width),
-            noise: ProgramNoise::zeros(max_r * width),
-            w: vec![0.0; max_r * width],
-            x: vec![0.0; max_r],
-        }
-    }
-}
-
 /// Copy shard region `reg` of a logical `(_, cols)` plane into the
 /// scratch plane of row stride `width`, zero-filling everything else
 /// (padded rows/columns and the checksum columns' noise).
@@ -251,6 +232,14 @@ impl ProgrammedRead for ProgrammedShards {
     }
 
     fn read_batch(&self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        if x.len() != batch * self.rows {
+            return Err(Error::Geometry(format!(
+                "read batch expects {} inputs ({batch} x {} rows), got {}",
+                batch * self.rows,
+                self.rows,
+                x.len()
+            )));
+        }
         let nshards = self.grid.count();
         let y = run_blocked(
             self.par,
@@ -319,7 +308,7 @@ impl VmmEngine for ShardedEngine {
         } else {
             Vec::new()
         };
-        let mut scratch = ShardScratch::new(max_r, width);
+        let mut scratch = ProgramScratch::new(max_r, width);
         let mut arrays = Vec::with_capacity(nshards);
         let mut injected = 0u64;
         for k in 0..nshards {
@@ -415,7 +404,7 @@ impl VmmEngine for ShardedEngine {
             self.par,
             b * nshards,
             width,
-            || ShardScratch::new(max_r, width),
+            || ProgramScratch::new(max_r, width),
             |q, scratch, out| {
                 let (s, k) = (q / nshards, q % nshards);
                 let reg = grid.region(k);

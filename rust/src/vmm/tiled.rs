@@ -89,9 +89,24 @@ impl ProgrammedRead for ProgrammedTiles {
 
     fn read_batch(&self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
         let (r, c) = (self.grid.rows(), self.grid.cols());
-        Ok(run_blocked(self.par, batch, c, || (), |s, _scratch, out| {
-            self.grid.read(&x[s * r..(s + 1) * r], out);
-        }))
+        if x.len() != batch * r {
+            return Err(Error::Geometry(format!(
+                "read batch expects {} inputs ({batch} x {r} rows), got {}",
+                batch * r,
+                x.len()
+            )));
+        }
+        // Per-worker tile staging: zero allocation per served request.
+        let (tr, tc) = (self.grid.tile_rows(), self.grid.tile_cols());
+        Ok(run_blocked(
+            self.par,
+            batch,
+            c,
+            || (vec![0.0f32; tr], vec![0.0f32; tc]),
+            |s, (tx, ty), out| {
+                self.grid.read_with(&x[s * r..(s + 1) * r], out, tx, ty);
+            },
+        ))
     }
 }
 

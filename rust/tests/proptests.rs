@@ -4,6 +4,7 @@
 
 use meliso::coordinator::WorkloadSpec;
 use meliso::crossbar::array::{CrossbarArray, ProgramNoise};
+use meliso::crossbar::kernel;
 use meliso::device::params::DeviceParams;
 use meliso::device::presets;
 use meliso::device::pulse::pulse_curve;
@@ -389,6 +390,51 @@ fn prop_sharded_any_grid_bit_equals_native_on_exact_device() {
             }
         }
         true
+    });
+}
+
+#[test]
+fn prop_kernel_matches_reference() {
+    // The columnar read kernel's accumulation-order contract
+    // (crossbar/kernel.rs): the lane-blocked `dot`/`read_columnar`
+    // must be **bit-identical** to the retained naive scalar
+    // reference over random ragged geometries — row counts straddle
+    // multiples of LANES so empty, partial, and full tails are all
+    // exercised, and values span magnitudes where reassociating the
+    // f32 sum would visibly change the bits.
+    let geom = Tuple3(
+        UsizeIn { lo: 1, hi: 4 * kernel::LANES + 3 },
+        UsizeIn { lo: 1, hi: 24 },
+        UsizeIn { lo: 0, hi: 1 << 16 },
+    );
+    check(cfg(96, 35), &geom, |&(rows, cols, seed)| {
+        let mut rng = Xoshiro256::seed_from_u64(seed as u64 ^ 0x5EED_DA7A);
+        let mut plane = vec![0.0f32; rows * cols];
+        let mut x = vec![0.0f32; rows];
+        rng.fill_uniform_f32(&mut plane, -1.0, 1.0);
+        rng.fill_uniform_f32(&mut x, -1.0, 1.0);
+        // Mix in magnitude spread and exact zeros (the no-zero-skip
+        // clause) so order-of-accumulation bugs cannot hide.
+        for (i, v) in x.iter_mut().enumerate() {
+            match i % 5 {
+                0 => *v *= 1e4,
+                1 => *v *= 1e-4,
+                2 => *v = 0.0,
+                _ => {}
+            }
+        }
+        for col in plane.chunks_exact(rows) {
+            let got = kernel::dot(&x, col);
+            let want = kernel::dot_reference(&x, col);
+            if got.to_bits() != want.to_bits() {
+                return false;
+            }
+        }
+        let mut y = vec![0.0f32; cols];
+        let mut yr = vec![0.0f32; cols];
+        kernel::read_columnar(&plane, rows, cols, &x, &mut y);
+        kernel::read_reference(&plane, rows, cols, &x, &mut yr);
+        y.iter().zip(&yr).all(|(a, b)| a.to_bits() == b.to_bits())
     });
 }
 

@@ -16,6 +16,8 @@
 //! meliso serve-bench [--device ID] [--clients N] [--requests N]
 //!              [--models N] [--window-us N] [--batch-max N]
 //!              [--queue-cap N] [--serve-workers N] [--serve-cache on|off]
+//! meliso fleet-bench [--device ID] [--fleet-nodes N] [--replication N]
+//!              [--fail-rate F] [--fail-seed N] [+ serve-bench flags]
 //! meliso warmup                                    # precompile artifacts
 //! ```
 
@@ -47,6 +49,7 @@ pub enum Command {
     Solve { device: String, n: usize, solver: String },
     Infer { device: String },
     ServeBench { device: String },
+    FleetBench { device: String },
     Warmup,
     Help,
     Version,
@@ -79,6 +82,14 @@ COMMANDS:
                              latency, throughput, and cache hits, and writes
                              <out>/serve-bench/{summary,BENCH}.json
                              (e.g. `meliso serve-bench --clients 16 --models 4`)
+  fleet-bench [--device ID]  Node/router fleet serving: clients -> router
+                             (consistent-hash placement, replication,
+                             failure recovery) -> serialized frames -> N
+                             serving nodes; reports per-node and fleet-wide
+                             telemetry and writes
+                             <out>/fleet-bench/{summary,BENCH}.json
+                             (e.g. `meliso fleet-bench --fleet-nodes 3
+                             --replication 2 --fail-rate 0.5`)
   warmup                     Precompile all XLA artifacts
   help, version
 
@@ -131,6 +142,13 @@ OPTIONS:
                                    [default: 2]
   --serve-cache <on|off>           serve-bench: programmed-crossbar cache
                                    [default: on]
+  --fleet-nodes <N>                fleet-bench: serving nodes behind the
+                                   router [default: 2]
+  --replication <N>                fleet-bench: replicas per model digest
+                                   (clamped to the fleet size) [default: 1]
+  --fail-rate <F>                  fleet-bench: failure-injection intensity
+                                   in [0, 1] (0 = off) [default: 0]
+  --fail-seed <N>                  fleet-bench: failure-point seed
   --config <FILE>                  TOML config file (CLI flags override)
   --quiet                          Suppress terminal tables
 ";
@@ -248,6 +266,24 @@ impl Args {
                         }
                     };
                 }
+                "fleet-nodes" => {
+                    config.fleet.nodes = parse_positive(name, req(name, v)?)?;
+                }
+                "replication" => {
+                    config.fleet.replication = parse_positive(name, req(name, v)?)?;
+                }
+                "fail-rate" => {
+                    let r: f64 = parse_num(name, req(name, v)?)?;
+                    if !(0.0..=1.0).contains(&r) {
+                        return Err(Error::Config(
+                            "--fail-rate must be in [0, 1]".into(),
+                        ));
+                    }
+                    config.fleet.fail_rate = r;
+                }
+                "fail-seed" => {
+                    config.fleet.fail_seed = parse_num::<u64>(name, req(name, v)?)?;
+                }
                 "config" | "input" | "column" | "device" | "n" | "solver" | "filter"
                 | "baseline" | "delta-md" => {}
                 other => {
@@ -297,6 +333,9 @@ impl Args {
                 device: flag("device").unwrap_or_else(|| "ag-si".into()),
             },
             "serve-bench" => Command::ServeBench {
+                device: flag("device").unwrap_or_else(|| "ag-si".into()),
+            },
+            "fleet-bench" => Command::FleetBench {
                 device: flag("device").unwrap_or_else(|| "ag-si".into()),
             },
             "warmup" => Command::Warmup,
@@ -497,6 +536,33 @@ mod tests {
         assert!(parse("serve-bench --batch-max 0").is_err());
         assert!(parse("serve-bench --serve-cache maybe").is_err());
         assert!(parse("serve-bench --window-us minus").is_err());
+    }
+
+    #[test]
+    fn parses_fleet_bench_flags() {
+        let a = parse(
+            "fleet-bench --device epiram --fleet-nodes 3 --replication 2 \
+             --fail-rate 0.5 --fail-seed 13 --clients 6 --models 4",
+        )
+        .unwrap();
+        assert_eq!(a.command, Command::FleetBench { device: "epiram".into() });
+        assert_eq!(a.config.fleet.nodes, 3);
+        assert_eq!(a.config.fleet.replication, 2);
+        assert_eq!(a.config.fleet.fail_rate, 0.5);
+        assert_eq!(a.config.fleet.fail_seed, 13);
+        assert_eq!(a.config.serve.clients, 6);
+        assert_eq!(a.config.serve.models, 4);
+        // Defaults.
+        let a = parse("fleet-bench").unwrap();
+        assert_eq!(a.command, Command::FleetBench { device: "ag-si".into() });
+        assert_eq!(a.config.fleet.nodes, 2);
+        assert_eq!(a.config.fleet.replication, 1);
+        assert_eq!(a.config.fleet.fail_rate, 0.0);
+        // Rejections.
+        assert!(parse("fleet-bench --fleet-nodes 0").is_err());
+        assert!(parse("fleet-bench --replication 0").is_err());
+        assert!(parse("fleet-bench --fail-rate 1.5").is_err());
+        assert!(parse("fleet-bench --fail-rate often").is_err());
     }
 
     #[test]

@@ -9,7 +9,7 @@ use crate::perf;
 use crate::pipeline::{NetworkSpec, PipelineOptions, PipelineRunner};
 use crate::report::table::{fnum, TextTable};
 use crate::runtime::XlaRuntime;
-use crate::serve::{run_serve, ProgramCache, ServeOptions};
+use crate::serve::{run_fleet, run_serve, FleetOptions, ProgramCache, ServeOptions};
 use crate::util::bench::{read_bench_json, write_bench_json, BenchResult};
 use crate::util::csv::CsvTable;
 use crate::util::json::{obj, Json};
@@ -54,6 +54,7 @@ pub fn dispatch(args: &Args) -> Result<i32> {
         Command::Solve { device, n, solver } => solve(args, device, *n, solver),
         Command::Infer { device } => infer(args, device),
         Command::ServeBench { device } => serve_bench(args, device),
+        Command::FleetBench { device } => fleet_bench(args, device),
         Command::Warmup => warmup(),
     }
 }
@@ -540,6 +541,196 @@ fn serve_bench(args: &Args, device_id: &str) -> Result<i32> {
     Ok(0)
 }
 
+/// `meliso fleet-bench`: run the node/router fleet simulation (clients
+/// -> consistent-hash router -> serialized frames -> N serving nodes,
+/// each with its own programmed-crossbar cache, queue, and worker
+/// pool) and report fleet-wide plus per-node telemetry.  Writes
+/// `<out>/fleet-bench/summary.json` and a bench-schema
+/// `<out>/fleet-bench/{BENCH.json,BENCH.melb}` for CI to archive next
+/// to the serve-bench documents.
+fn fleet_bench(args: &Args, device_id: &str) -> Result<i32> {
+    let ctx = Ctx::from_config(&args.config)?;
+    let (device, device_label) = match args.config.custom_device {
+        Some(d) => (d, "custom".to_string()),
+        None => {
+            let preset = presets::by_id(device_id)
+                .ok_or_else(|| Error::Config(format!("unknown device '{device_id}'")))?;
+            (preset.params.masked(NonIdealities::FULL), preset.id.to_string())
+        }
+    };
+    let s = &args.config.serve;
+    let f = &args.config.fleet;
+    let opts = FleetOptions {
+        serve: ServeOptions {
+            clients: s.clients,
+            requests_per_client: s.requests,
+            models: s.models,
+            rows: args.config.size,
+            cols: args.config.size,
+            queue_capacity: s.queue,
+            batch_max: s.batch_max,
+            window: std::time::Duration::from_micros(s.window_us),
+            workers: s.workers,
+            cache: s.cache,
+            cache_capacity: s.cache_capacity,
+            measure_error: true,
+            seed: args.config.seed,
+            ..ServeOptions::default()
+        },
+        nodes: f.nodes,
+        replication: f.replication,
+        fail_rate: f.fail_rate,
+        fail_seed: f.fail_seed,
+        collect_responses: false,
+    };
+    let report = run_fleet(&ctx.engine, &device, &opts)?;
+    let agg = &report.aggregate;
+
+    let mut t = TextTable::new(["metric", "value"]).with_title(format!(
+        "Fleet serving: {} nodes x{} repl, {} models of {}x{} on {} (engine={})",
+        opts.nodes,
+        report.replication,
+        opts.serve.models,
+        opts.serve.rows,
+        opts.serve.cols,
+        device_label,
+        ctx.engine_name(),
+    ));
+    t.push([
+        "clients x requests",
+        &format!("{} x {}", opts.serve.clients, opts.serve.requests_per_client),
+    ]);
+    t.push(["requests served", &agg.requests.to_string()]);
+    t.push(["throughput (req/s)", &fnum(agg.throughput)]);
+    t.push(["p50 latency (ms)", &fnum(agg.p50_ms)]);
+    t.push(["p95 latency (ms)", &fnum(agg.p95_ms)]);
+    t.push(["p99 latency (ms)", &fnum(agg.p99_ms)]);
+    t.push(["mean batch", &fnum(agg.mean_batch)]);
+    t.push(["programs", &agg.programs.to_string()]);
+    t.push([
+        "cache hits/misses",
+        &format!("{}/{}", agg.cache.hits, agg.cache.misses),
+    ]);
+    t.push(["mean |e|", &fnum(agg.mean_abs_error)]);
+    t.push(["shed (re-routed)", &report.shed.to_string()]);
+    t.push([
+        "failed nodes",
+        &format!("{:?}", report.failed_nodes),
+    ]);
+    t.push(["recovered models", &report.recovered_models.to_string()]);
+    t.push(["transport bytes", &report.transport_bytes.to_string()]);
+    t.push(["per-node rate (req/s)", &fnum(report.per_node_rps)]);
+    t.push([
+        "nodes @ 1e8 req/day",
+        &agg.nodes_for_1e8_per_day.to_string(),
+    ]);
+    let w = ctx.writer("fleet-bench");
+    w.echo(&t.render());
+    let mut node_t = TextTable::new([
+        "node", "alive", "requests", "batches", "programs", "p99 ms", "bytes in/out",
+    ])
+    .with_title("Per-node telemetry");
+    let mut node_rows = Vec::new();
+    for n in &report.nodes {
+        node_t.push([
+            n.id.to_string(),
+            n.alive.to_string(),
+            n.requests.to_string(),
+            n.batches.to_string(),
+            n.programs.to_string(),
+            fnum(n.p99_ms),
+            format!("{}/{}", n.bytes_in, n.bytes_out),
+        ]);
+        node_rows.push(obj([
+            ("id", Json::Num(n.id as f64)),
+            ("alive", Json::Bool(n.alive)),
+            ("requests", Json::Num(n.requests as f64)),
+            ("batches", Json::Num(n.batches as f64)),
+            ("mean_batch", Json::Num(n.mean_batch)),
+            ("programs", Json::Num(n.programs as f64)),
+            ("cache_hits", Json::Num(n.cache.hits as f64)),
+            ("cache_misses", Json::Num(n.cache.misses as f64)),
+            ("p50_ms", Json::Num(n.p50_ms)),
+            ("p95_ms", Json::Num(n.p95_ms)),
+            ("p99_ms", Json::Num(n.p99_ms)),
+            ("bytes_in", Json::Num(n.bytes_in as f64)),
+            ("bytes_out", Json::Num(n.bytes_out as f64)),
+        ]));
+    }
+    w.echo(&node_t.render());
+    w.json(
+        "summary",
+        &obj([
+            ("id", Json::Str("fleet-bench".into())),
+            ("engine", Json::Str(ctx.engine_name().into())),
+            ("device", Json::Str(device_label)),
+            ("rows", Json::Num(opts.serve.rows as f64)),
+            ("cols", Json::Num(opts.serve.cols as f64)),
+            ("clients", Json::Num(opts.serve.clients as f64)),
+            (
+                "requests_per_client",
+                Json::Num(opts.serve.requests_per_client as f64),
+            ),
+            ("models", Json::Num(opts.serve.models as f64)),
+            ("fleet_nodes", Json::Num(opts.nodes as f64)),
+            ("replication", Json::Num(report.replication as f64)),
+            ("fail_rate", Json::Num(opts.fail_rate)),
+            ("requests", Json::Num(agg.requests as f64)),
+            ("batches", Json::Num(agg.batches as f64)),
+            ("mean_batch", Json::Num(agg.mean_batch)),
+            ("wall_secs", Json::Num(agg.wall_secs)),
+            ("throughput_req_s", Json::Num(agg.throughput)),
+            ("p50_ms", Json::Num(agg.p50_ms)),
+            ("p95_ms", Json::Num(agg.p95_ms)),
+            ("p99_ms", Json::Num(agg.p99_ms)),
+            ("programs", Json::Num(agg.programs as f64)),
+            ("cache_hits", Json::Num(agg.cache.hits as f64)),
+            ("cache_misses", Json::Num(agg.cache.misses as f64)),
+            ("mean_abs_error", Json::Num(agg.mean_abs_error)),
+            ("shed", Json::Num(report.shed as f64)),
+            (
+                "failed_nodes",
+                Json::Arr(
+                    report
+                        .failed_nodes
+                        .iter()
+                        .map(|&n| Json::Num(n as f64))
+                        .collect(),
+                ),
+            ),
+            ("recovered_models", Json::Num(report.recovered_models as f64)),
+            ("transport_bytes", Json::Num(report.transport_bytes as f64)),
+            ("fitted_req_s", Json::Num(agg.fitted_rps)),
+            ("per_node_req_s", Json::Num(report.per_node_rps)),
+            (
+                "nodes_for_1e8_per_day",
+                Json::Num(agg.nodes_for_1e8_per_day as f64),
+            ),
+            ("per_node", Json::Arr(node_rows)),
+        ]),
+    )?;
+    w.echo(&format!(
+        "capacity: at 1e8 requests/day this fabric needs {} node(s) \
+         (fitted {:.0} req/s/node across {} nodes)",
+        agg.nodes_for_1e8_per_day, report.per_node_rps, opts.nodes,
+    ));
+    // Bench-schema document for CI artifact upload, named like a perf
+    // slug so baselines can track capacity by node count.
+    let slug = format!("fleet-bench-{}-n{}", ctx.engine_name(), opts.nodes);
+    let bench = vec![BenchResult {
+        name: slug,
+        median: agg.wall_secs,
+        mean: agg.wall_secs,
+        min: agg.wall_secs,
+        max: agg.wall_secs,
+        samples: 1,
+        items_per_iter: Some(agg.requests as f64),
+    }];
+    write_bench_json(&bench, &args.config.out_dir.join("fleet-bench/BENCH.json"))?;
+    write_bench_json(&bench, &args.config.out_dir.join("fleet-bench/BENCH.melb"))?;
+    Ok(0)
+}
+
 fn warmup() -> Result<i32> {
     let sw = Stopwatch::start();
     let rt = XlaRuntime::new(&XlaRuntime::default_dir())?;
@@ -619,6 +810,54 @@ mod tests {
         assert_eq!(bench[0].items_per_iter, Some(24.0));
         // Unknown device is a clean config error.
         let args = parse(&["serve-bench", "--device", "unobtainium", "--quiet"]);
+        assert!(dispatch(&args).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn fleet_bench_writes_summary_and_bench_json() {
+        let dir = std::env::temp_dir().join("meliso_fleet_bench_cli_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let args = parse(&[
+            "fleet-bench",
+            "--device",
+            "epiram",
+            "--fleet-nodes",
+            "2",
+            "--clients",
+            "3",
+            "--requests",
+            "8",
+            "--models",
+            "2",
+            "--size",
+            "16",
+            "--queue-cap",
+            "8",
+            "--batch-max",
+            "4",
+            "--quiet",
+            "--out",
+            dir.to_str().unwrap(),
+        ]);
+        assert_eq!(dispatch(&args).unwrap(), 0);
+        let summary = std::fs::read_to_string(dir.join("fleet-bench/summary.json")).unwrap();
+        let doc = crate::util::json::Json::parse(&summary).unwrap();
+        assert_eq!(doc.get("requests").unwrap().as_f64(), Some(24.0));
+        assert_eq!(doc.get("fleet_nodes").unwrap().as_f64(), Some(2.0));
+        assert_eq!(doc.get("shed").unwrap().as_f64(), Some(0.0));
+        assert!(doc.get("mean_abs_error").unwrap().as_f64().unwrap().is_finite());
+        assert!(doc.get("transport_bytes").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(doc.get("per_node").unwrap().as_arr().unwrap().len(), 2);
+        let bench = read_bench_json(&dir.join("fleet-bench/BENCH.json")).unwrap();
+        assert_eq!(bench.len(), 1);
+        assert_eq!(bench[0].name, "fleet-bench-native-n2");
+        assert_eq!(bench[0].items_per_iter, Some(24.0));
+        // The binary twin decodes to the same document.
+        let twin = read_bench_json(&dir.join("fleet-bench/BENCH.melb")).unwrap();
+        assert_eq!(twin[0].name, "fleet-bench-native-n2");
+        // Unknown device is a clean config error.
+        let args = parse(&["fleet-bench", "--device", "unobtainium", "--quiet"]);
         assert!(dispatch(&args).is_err());
         let _ = std::fs::remove_dir_all(dir);
     }

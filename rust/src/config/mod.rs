@@ -27,6 +27,12 @@
 //! cache = true                # programmed-crossbar cache on/off
 //! cache_capacity = 32         # models resident at once
 //!
+//! [fleet]                     # node/router fleet (`meliso fleet-bench`)
+//! nodes = 2                   # serving nodes behind the router
+//! replication = 1             # replicas per model digest
+//! fail_rate = 0.0             # failure-injection intensity in [0, 1]
+//! fail_seed = 7               # failure-point seed
+//!
 //! [shard]                     # sharded engine (`--engine sharded`)
 //! grid = "2x2"                # shard grid RxC (also `--shards`)
 //! checksum = true             # ABFT checksum correction on/off
@@ -178,6 +184,34 @@ impl Default for ServeSettings {
     }
 }
 
+/// Fleet-fabric settings (`meliso fleet-bench` and the `[fleet]` TOML
+/// section).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetSettings {
+    /// Fleet size (serving nodes behind the router).
+    pub nodes: usize,
+    /// Replicas per model digest (clamped to the fleet size at run
+    /// time).
+    pub replication: usize,
+    /// Failure-injection intensity in `[0, 1]`:
+    /// `ceil(fail_rate * (nodes - 1))` seeded mid-stream node deaths
+    /// (0.0 disables).
+    pub fail_rate: f64,
+    /// Seed of the failure-point draws.
+    pub fail_seed: u64,
+}
+
+impl Default for FleetSettings {
+    fn default() -> Self {
+        Self {
+            nodes: 2,
+            replication: 1,
+            fail_rate: 0.0,
+            fail_seed: 0x464C_4554, // "FLET"
+        }
+    }
+}
+
 /// Sharded-engine settings (`--engine sharded --shards RxC` and the
 /// `[shard]` TOML section).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -242,6 +276,8 @@ pub struct RunConfig {
     pub shard: ShardSettings,
     /// Request-serving settings (`meliso serve-bench`).
     pub serve: ServeSettings,
+    /// Fleet-fabric settings (`meliso fleet-bench`).
+    pub fleet: FleetSettings,
     pub quiet: bool,
     /// Optional custom device overriding the presets.
     pub custom_device: Option<DeviceParams>,
@@ -262,6 +298,7 @@ impl Default for RunConfig {
             pipeline: PipelineSettings::default(),
             shard: ShardSettings::default(),
             serve: ServeSettings::default(),
+            fleet: FleetSettings::default(),
             quiet: false,
             custom_device: None,
         }
@@ -478,6 +515,39 @@ impl RunConfig {
                 .ok_or_else(|| Error::Config("shard.fault_seed must be an int".into()))?
                 as u64;
         }
+        {
+            // Positive-int [fleet] keys share the [serve] parse shape.
+            let positive = |doc: &TomlDoc, key: &str| -> Result<Option<usize>> {
+                match doc.get("fleet", key) {
+                    None => Ok(None),
+                    Some(v) => v
+                        .as_i64()
+                        .filter(|&n| n > 0)
+                        .map(|n| Some(n as usize))
+                        .ok_or_else(|| {
+                            Error::Config(format!("fleet.{key} must be a positive int"))
+                        }),
+                }
+            };
+            if let Some(n) = positive(&doc, "nodes")? {
+                cfg.fleet.nodes = n;
+            }
+            if let Some(n) = positive(&doc, "replication")? {
+                cfg.fleet.replication = n;
+            }
+        }
+        if let Some(v) = doc.get("fleet", "fail_rate") {
+            cfg.fleet.fail_rate = v
+                .as_f64()
+                .filter(|r| (0.0..=1.0).contains(r))
+                .ok_or_else(|| Error::Config("fleet.fail_rate must be in [0, 1]".into()))?;
+        }
+        if let Some(v) = doc.get("fleet", "fail_seed") {
+            cfg.fleet.fail_seed = v
+                .as_i64()
+                .ok_or_else(|| Error::Config("fleet.fail_seed must be an int".into()))?
+                as u64;
+        }
         if doc.tables.contains_key("device") {
             cfg.custom_device = Some(parse_device(&doc)?);
         }
@@ -651,6 +721,32 @@ sigma_c2c = 0.035
         assert!(RunConfig::from_toml("[serve]\nrequests = -4\n").is_err());
         assert!(RunConfig::from_toml("[serve]\nwindow_us = -1\n").is_err());
         assert!(RunConfig::from_toml("[serve]\ncache = 3\n").is_err());
+    }
+
+    #[test]
+    fn fleet_section_parses() {
+        let c = RunConfig::from_toml(
+            "[fleet]\n\
+             nodes = 4\n\
+             replication = 2\n\
+             fail_rate = 0.5\n\
+             fail_seed = 13\n",
+        )
+        .unwrap();
+        assert_eq!(c.fleet.nodes, 4);
+        assert_eq!(c.fleet.replication, 2);
+        assert_eq!(c.fleet.fail_rate, 0.5);
+        assert_eq!(c.fleet.fail_seed, 13);
+        // Defaults.
+        let d = RunConfig::default().fleet;
+        assert_eq!(d.nodes, 2);
+        assert_eq!(d.replication, 1);
+        assert_eq!(d.fail_rate, 0.0);
+        // Rejections.
+        assert!(RunConfig::from_toml("[fleet]\nnodes = 0\n").is_err());
+        assert!(RunConfig::from_toml("[fleet]\nreplication = -1\n").is_err());
+        assert!(RunConfig::from_toml("[fleet]\nfail_rate = 1.5\n").is_err());
+        assert!(RunConfig::from_toml("[fleet]\nfail_seed = \"x\"\n").is_err());
     }
 
     #[test]

@@ -1,0 +1,206 @@
+//! Extension experiment `fleet-sweep`: fleet serving over nodes ×
+//! replication × failure rate.
+//!
+//! Each cell runs the full node/router fabric
+//! ([`crate::serve::run_fleet`]): seeded clients encode requests into
+//! MELB envelope frames, the router places each model digest on the
+//! consistent-hash ring and submits to the chosen replica, and every
+//! node serves through its own programmed-crossbar cache, bounded
+//! queue, and worker pool.  The failure legs kill the heaviest model
+//! owners mid-stream; the sweep records what the fabric paid to absorb
+//! that — shed (re-routed, never lost) requests, models re-programmed
+//! on survivors, transport bytes — next to throughput and latency, so
+//! replication's insurance premium is measured on the same traffic as
+//! its payout.
+
+use std::time::Duration;
+
+use crate::device::params::NonIdealities;
+use crate::device::presets;
+use crate::error::Result;
+use crate::report::table::{fnum, TextTable};
+use crate::serve::{run_fleet, FleetOptions, ServeOptions};
+use crate::util::csv::CsvTable;
+use crate::util::json::{obj, Json};
+use crate::util::pool::Parallelism;
+use crate::vmm::{DynEngine, NativeEngine, VmmEngine};
+
+use super::context::Ctx;
+
+/// Fleet sizes swept.
+pub const SWEEP_NODES: [usize; 3] = [1, 2, 3];
+
+/// Replication factors swept (clamped to the fleet size per cell).
+pub const SWEEP_REPLICATION: [usize; 2] = [1, 2];
+
+/// Failure-injection rates swept.
+pub const SWEEP_FAIL_RATES: [f64; 2] = [0.0, 0.5];
+
+/// Run the sweep.
+pub fn run(ctx: &Ctx) -> Result<Json> {
+    let w = ctx.writer("fleet-sweep");
+    let device = presets::ag_si().params.masked(NonIdealities::FULL);
+    let requests_per_client = ctx.population.clamp(4, 24);
+    if requests_per_client != ctx.population && !ctx.quiet {
+        eprintln!(
+            "fleet-sweep: requests per client capped at {requests_per_client} \
+             (requested {})",
+            ctx.population
+        );
+    }
+    let engine_par = Parallelism::Fixed(ctx.engine.internal_parallelism().max(1));
+    let engine = DynEngine::new(NativeEngine::with_parallelism(engine_par));
+
+    let mut t = TextTable::new([
+        "nodes", "repl", "fail", "req/s", "p99 ms", "shed", "failed", "recovered",
+        "programs", "kB wire", "mean |e|",
+    ])
+    .with_title("Fleet sweep: serving vs nodes x replication x failure rate (32x32)");
+    let mut csv = CsvTable::new([
+        "nodes",
+        "replication",
+        "fail_rate",
+        "requests",
+        "throughput_req_s",
+        "p50_ms",
+        "p99_ms",
+        "shed",
+        "failed_nodes",
+        "recovered_models",
+        "programs",
+        "transport_bytes",
+        "per_node_req_s",
+        "mean_abs_error",
+    ]);
+    let mut rows = Vec::new();
+
+    for nodes in SWEEP_NODES {
+        for replication in SWEEP_REPLICATION {
+            if replication > nodes {
+                continue; // would clamp to an already-swept cell
+            }
+            for fail_rate in SWEEP_FAIL_RATES {
+                if fail_rate > 0.0 && nodes < 2 {
+                    continue; // a 1-node fleet keeps its only node
+                }
+                let opts = FleetOptions {
+                    serve: ServeOptions {
+                        clients: 3,
+                        requests_per_client,
+                        models: 4,
+                        rows: crate::ROWS,
+                        cols: crate::COLS,
+                        queue_capacity: 32,
+                        batch_max: 8,
+                        window: Duration::from_micros(100),
+                        workers: 1,
+                        cache: true,
+                        cache_capacity: 8,
+                        measure_error: true,
+                        seed: ctx.seed,
+                        ..ServeOptions::default()
+                    },
+                    nodes,
+                    replication,
+                    fail_rate,
+                    collect_responses: false,
+                    ..FleetOptions::default()
+                };
+                let r = run_fleet(&engine, &device, &opts)?;
+                let agg = &r.aggregate;
+                t.push([
+                    nodes.to_string(),
+                    r.replication.to_string(),
+                    fnum(fail_rate),
+                    fnum(agg.throughput),
+                    fnum(agg.p99_ms),
+                    r.shed.to_string(),
+                    r.failed_nodes.len().to_string(),
+                    r.recovered_models.to_string(),
+                    agg.programs.to_string(),
+                    fnum(r.transport_bytes as f64 / 1024.0),
+                    fnum(agg.mean_abs_error),
+                ]);
+                csv.push([
+                    nodes.to_string(),
+                    r.replication.to_string(),
+                    fail_rate.to_string(),
+                    agg.requests.to_string(),
+                    agg.throughput.to_string(),
+                    agg.p50_ms.to_string(),
+                    agg.p99_ms.to_string(),
+                    r.shed.to_string(),
+                    r.failed_nodes.len().to_string(),
+                    r.recovered_models.to_string(),
+                    agg.programs.to_string(),
+                    r.transport_bytes.to_string(),
+                    r.per_node_rps.to_string(),
+                    agg.mean_abs_error.to_string(),
+                ]);
+                rows.push(obj([
+                    ("nodes", Json::Num(nodes as f64)),
+                    ("replication", Json::Num(r.replication as f64)),
+                    ("fail_rate", Json::Num(fail_rate)),
+                    ("requests", Json::Num(agg.requests as f64)),
+                    ("throughput_req_s", Json::Num(agg.throughput)),
+                    ("p50_ms", Json::Num(agg.p50_ms)),
+                    ("p99_ms", Json::Num(agg.p99_ms)),
+                    ("shed", Json::Num(r.shed as f64)),
+                    ("failed_nodes", Json::Num(r.failed_nodes.len() as f64)),
+                    ("recovered_models", Json::Num(r.recovered_models as f64)),
+                    ("programs", Json::Num(agg.programs as f64)),
+                    ("transport_bytes", Json::Num(r.transport_bytes as f64)),
+                    ("per_node_req_s", Json::Num(r.per_node_rps)),
+                    ("mean_abs_error", Json::Num(agg.mean_abs_error)),
+                ]));
+            }
+        }
+    }
+
+    w.echo(&t.render());
+    w.csv("series", &csv)?;
+    let summary = obj([
+        ("id", Json::Str("fleet-sweep".into())),
+        ("requests_per_client", Json::Num(requests_per_client as f64)),
+        ("clients", Json::Num(3.0)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    w.json("summary", &summary)?;
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_loses_no_request_in_any_cell() {
+        let dir = std::env::temp_dir().join("meliso_fleet_sweep_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ctx = Ctx::native(4, &dir);
+        let s = run(&ctx).unwrap();
+        let rows = s.get("rows").unwrap().as_arr().unwrap();
+        // nodes x replication (<= nodes) x fail legs (failure needs a
+        // survivor): n1 has 1 cell, n2 has 4, n3 has 4.
+        assert_eq!(rows.len(), 1 + 4 + 4);
+        let total = 3.0 * 4.0; // clients x capped requests
+        let num = |r: &Json, k: &str| r.get(k).unwrap().as_f64().unwrap();
+        for r in rows {
+            // Zero lost requests everywhere — shed detours included.
+            assert_eq!(num(r, "requests"), total);
+            assert!(num(r, "throughput_req_s") > 0.0);
+            assert!(num(r, "transport_bytes") > 0.0);
+            assert!(num(r, "mean_abs_error").is_finite());
+            assert!(num(r, "p50_ms") <= num(r, "p99_ms"));
+            if num(r, "fail_rate") == 0.0 {
+                assert_eq!(num(r, "shed"), 0.0);
+                assert_eq!(num(r, "failed_nodes"), 0.0);
+            } else {
+                assert!(num(r, "failed_nodes") >= 1.0);
+            }
+        }
+        assert!(dir.join("fleet-sweep/series.csv").exists());
+        assert!(dir.join("fleet-sweep/summary.json").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

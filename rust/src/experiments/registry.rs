@@ -5,7 +5,9 @@ use crate::error::{Error, Result};
 use crate::util::json::Json;
 
 use super::context::Ctx;
-use super::{fig2, fig3, fig4, fig5, mitigation, pipeline, serve, shard, table1, table2, xtra};
+use super::{
+    fig2, fig3, fig4, fig5, fleet, mitigation, pipeline, serve, shard, table1, table2, xtra,
+};
 
 /// Experiment descriptor.
 pub struct Entry {
@@ -126,6 +128,12 @@ pub fn entries() -> Vec<Entry> {
             paper: false,
             run: serve::run,
         },
+        Entry {
+            id: "fleet-sweep",
+            title: "Extension: fleet serving vs nodes x replication x failure rate",
+            paper: false,
+            run: fleet::run,
+        },
     ]
 }
 
@@ -196,6 +204,7 @@ mod tests {
         assert!(msg.contains("mitigation-sweep"), "{msg}");
         assert!(msg.contains("shard-sweep"), "{msg}");
         assert!(msg.contains("serve-sweep"), "{msg}");
+        assert!(msg.contains("fleet-sweep"), "{msg}");
         let _ = std::fs::remove_dir_all(dir);
     }
 

@@ -84,12 +84,14 @@ fn fmt_secs(secs: f64) -> String {
     }
 }
 
-/// Render an old-vs-new median table (GitHub-flavored markdown) for
-/// every benchmark present in both documents — the `perf-smoke` job
-/// appends this to `$GITHUB_STEP_SUMMARY`.  Unlike
-/// [`compare_to_baseline`] this reports *every* matched benchmark,
-/// improvements included, so the summary shows the whole trajectory
-/// rather than only >2x regressions.
+/// Render an old-vs-new median table (GitHub-flavored markdown) — the
+/// `perf-smoke` job appends this to `$GITHUB_STEP_SUMMARY`.  Unlike
+/// [`compare_to_baseline`] this reports *every* benchmark in either
+/// document: matched names get a delta (improvements included, so the
+/// summary shows the whole trajectory rather than only >2x
+/// regressions), current-only names render as explicit `added` rows,
+/// and baseline-only names as `removed` rows — a suite that grows or
+/// shrinks is visible in the table itself, not silently dropped.
 pub fn delta_table_md(current: &[BenchResult], baseline: &[BenchResult]) -> String {
     let mut out = String::from(
         "#### `meliso bench` median delta vs baseline\n\n\
@@ -97,39 +99,52 @@ pub fn delta_table_md(current: &[BenchResult], baseline: &[BenchResult]) -> Stri
          | --- | ---: | ---: | ---: |\n",
     );
     let mut matched = 0usize;
+    let mut added = 0usize;
     for cur in current {
-        let Some(base) = baseline.iter().find(|b| b.name == cur.name) else {
-            continue;
-        };
-        if base.median <= 0.0 || !cur.median.is_finite() {
+        match baseline.iter().find(|b| b.name == cur.name) {
+            Some(base) => {
+                if base.median <= 0.0 || !cur.median.is_finite() {
+                    continue;
+                }
+                matched += 1;
+                let ratio = cur.median / base.median;
+                let delta = if ratio <= 1.0 {
+                    format!("**{:.2}x faster**", 1.0 / ratio)
+                } else {
+                    format!("{ratio:.2}x slower")
+                };
+                out.push_str(&format!(
+                    "| `{}` | {} | {} | {} |\n",
+                    cur.name,
+                    fmt_secs(base.median),
+                    fmt_secs(cur.median),
+                    delta
+                ));
+            }
+            None => {
+                added += 1;
+                out.push_str(&format!(
+                    "| `{}` | — | {} | added |\n",
+                    cur.name,
+                    fmt_secs(cur.median),
+                ));
+            }
+        }
+    }
+    let mut removed = 0usize;
+    for base in baseline {
+        if current.iter().any(|c| c.name == base.name) {
             continue;
         }
-        matched += 1;
-        let ratio = cur.median / base.median;
-        let delta = if ratio <= 1.0 {
-            format!("**{:.2}x faster**", 1.0 / ratio)
-        } else {
-            format!("{ratio:.2}x slower")
-        };
+        removed += 1;
         out.push_str(&format!(
-            "| `{}` | {} | {} | {} |\n",
-            cur.name,
+            "| `{}` | {} | — | removed |\n",
+            base.name,
             fmt_secs(base.median),
-            fmt_secs(cur.median),
-            delta
         ));
     }
-    let only_current = current
-        .iter()
-        .filter(|c| !baseline.iter().any(|b| b.name == c.name))
-        .count();
-    let only_baseline = baseline
-        .iter()
-        .filter(|b| !current.iter().any(|c| c.name == b.name))
-        .count();
     out.push_str(&format!(
-        "\n_{matched} benchmark(s) compared; {only_current} new without a \
-         baseline entry; {only_baseline} baseline-only._\n"
+        "\n_{matched} benchmark(s) compared; {added} added; {removed} removed._\n"
     ));
     out
 }
@@ -294,6 +309,56 @@ pub fn run_suite(opts: &SuiteOpts) -> Vec<BenchResult> {
                 "      serve cache speedup: {:.2}x requests/sec over reprogram-per-request",
                 cached.items_per_sec(nreq as f64) / uncached.items_per_sec(nreq as f64)
             );
+        }
+    }
+
+    // Fleet fabric: the whole node/router path (encode -> consistent-
+    // hash route -> serialized envelope hop -> per-node cache/queue/
+    // workers -> response rollup) at 1 and 2 nodes, with the per-node
+    // capacity the projection scales from (DESIGN.md §16).
+    {
+        use crate::serve::{run_fleet, FleetOptions, ServeOptions};
+        let fengine = DynEngine::new(NativeEngine::default());
+        let rpc = if quick { 8 } else { 32 };
+        for nodes in [1usize, 2] {
+            let fopts = FleetOptions {
+                serve: ServeOptions {
+                    clients: 4,
+                    requests_per_client: rpc,
+                    models: 3,
+                    rows: 32,
+                    cols: 32,
+                    queue_capacity: 32,
+                    batch_max: 8,
+                    window: std::time::Duration::from_micros(100),
+                    workers: 1,
+                    cache: true,
+                    cache_capacity: 8,
+                    measure_error: false,
+                    ..ServeOptions::default()
+                },
+                nodes,
+                replication: 1,
+                fail_rate: 0.0,
+                collect_responses: false,
+                ..FleetOptions::default()
+            };
+            let total = fopts.serve.total_requests();
+            let measured = suite.go(
+                &format!("fleet-n{nodes}"),
+                BenchOpts { samples: 3, warmup: 1, items_per_iter: Some(total as f64) },
+                || {
+                    black_box(run_fleet(&fengine, &device, &fopts).unwrap());
+                },
+            );
+            if measured.is_some() {
+                let r = run_fleet(&fengine, &device, &fopts).unwrap();
+                println!(
+                    "      fleet-n{nodes}: {:.0} req/s/node fitted -> {} node(s) \
+                     at 1e8 req/day",
+                    r.per_node_rps, r.aggregate.nodes_for_1e8_per_day
+                );
+            }
         }
     }
 
@@ -477,6 +542,18 @@ mod tests {
     }
 
     #[test]
+    fn fleet_slugs_cover_both_node_counts() {
+        let results = run_suite(&SuiteOpts { quick: true, filter: Some("fleet-n".into()) });
+        let names: Vec<&str> = results.iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(names, ["fleet-n1", "fleet-n2"]);
+        for r in &results {
+            assert!(r.median > 0.0);
+            // 4 clients x 8 quick requests through the whole fabric.
+            assert_eq!(r.items_per_iter, Some(32.0));
+        }
+    }
+
+    #[test]
     fn baseline_comparison_flags_only_regressions() {
         let baseline = vec![result("a", 1.0), result("b", 1.0), result("c", 1.0)];
         let current = vec![
@@ -493,7 +570,7 @@ mod tests {
     }
 
     #[test]
-    fn delta_table_reports_every_matched_benchmark() {
+    fn delta_table_reports_every_benchmark_in_either_document() {
         let baseline = vec![result("a", 1.0), result("b", 0.010), result("gone", 1.0)];
         let current = vec![
             result("a", 0.5),   // 2x faster
@@ -503,15 +580,16 @@ mod tests {
         let md = delta_table_md(&current, &baseline);
         assert!(md.contains("| `a` | 1.000s | 500.000ms | **2.00x faster** |"), "{md}");
         assert!(md.contains("| `b` | 10.000ms | 20.000ms | 2.00x slower |"), "{md}");
-        assert!(!md.contains("`new`"), "{md}");
-        assert!(!md.contains("`gone`"), "{md}");
-        assert!(
-            md.contains("2 benchmark(s) compared; 1 new without a baseline entry; 1 baseline-only."),
-            "{md}"
-        );
+        // Asymmetric names render as explicit rows, not silence.
+        assert!(md.contains("| `new` | — | 3.000s | added |"), "{md}");
+        assert!(md.contains("| `gone` | 1.000s | — | removed |"), "{md}");
+        assert!(md.contains("2 benchmark(s) compared; 1 added; 1 removed."), "{md}");
         // Every data row renders the full 4-column markdown shape.
         for line in md.lines().filter(|l| l.starts_with("| `")) {
             assert_eq!(line.matches(" | ").count(), 3, "{line}");
         }
+        // Identical documents: all compared, nothing added/removed.
+        let md = delta_table_md(&baseline, &baseline);
+        assert!(md.contains("3 benchmark(s) compared; 0 added; 0 removed."), "{md}");
     }
 }

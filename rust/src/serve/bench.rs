@@ -19,7 +19,7 @@ use crate::device::params::DeviceParams;
 use crate::error::{Error, Result};
 use crate::util::progress::Stopwatch;
 use crate::util::rng::{splitmix64, Xoshiro256};
-use crate::vmm::{DynEngine, ProgramSpec, VmmEngine};
+use crate::vmm::{DynEngine, ProgramSpec};
 
 use super::cache::{CacheCounts, ProgramCache};
 use super::scheduler::{percentile, BoundedQueue, Request};
@@ -94,7 +94,7 @@ impl ServeOptions {
         self.clients * self.requests_per_client
     }
 
-    fn validate(&self) -> Result<()> {
+    pub(crate) fn validate(&self) -> Result<()> {
         for (name, v) in [
             ("clients", self.clients),
             ("requests", self.requests_per_client),
@@ -190,7 +190,7 @@ struct Tallies {
 /// (requests/sec) and the node count that rate implies for a
 /// 10^8-requests/day deployment.  With fewer than two batch points the
 /// slope falls back to `fallback_rps` (the run's mean throughput).
-fn capacity_projection(points: &[(f64, f64)], fallback_rps: f64) -> (f64, u64) {
+pub(crate) fn capacity_projection(points: &[(f64, f64)], fallback_rps: f64) -> (f64, u64) {
     let mut rate = fallback_rps;
     if points.len() >= 2 {
         let n = points.len() as f64;
@@ -288,7 +288,7 @@ pub fn run_serve(
                             x: inputs.sample(id as usize),
                             enqueued: Instant::now(),
                         };
-                        if !queue.push(request) {
+                        if queue.push(request).is_err() {
                             break; // shut down mid-stream
                         }
                     }
@@ -372,31 +372,21 @@ fn serve_batch(
         for r in reqs {
             x.extend_from_slice(&r.x);
         }
-        if opts.measure_error {
-            // Harness mode keeps the measurement path (hardware +
-            // exact software reference per request).
-            let handle = if opts.cache {
-                cache.get_or_program(engine, spec, device)?
-            } else {
-                fresh_programs += 1;
-                engine.program(spec, device)?
-            };
-            let out = handle.forward(&x, n)?;
-            err_sum += out.errors().iter().map(|e| e.abs()).sum::<f64>();
-            err_n += out.y_hw.len();
-        } else if opts.cache {
-            // Hot path: a cold model programs and answers this batch
-            // in one fused pass; a warm model reads through the
-            // cached handle.
-            let (handle, fused) =
-                cache.get_or_program_read(engine, spec, device, &x, n)?;
-            if fused.is_none() {
-                let _ = handle.read(&x, n)?;
-            }
-        } else {
-            fresh_programs += 1;
-            let _ = engine.program_read(spec, device, &x, n)?;
-        }
+        // The shared fleet-node core: cache hit, fused program+read on
+        // a miss, or reprogram-per-group, per the run options.
+        let outcome = super::node::serve_model_group(
+            engine,
+            device,
+            opts.cache.then_some(cache),
+            spec,
+            &x,
+            n,
+            opts.measure_error,
+            false,
+        )?;
+        fresh_programs += outcome.fresh_programs;
+        err_sum += outcome.err_per_req.iter().sum::<f64>();
+        err_n += outcome.err_cols * outcome.err_per_req.len();
     }
     let done = Instant::now();
     let mut t = tallies.lock().unwrap();

@@ -28,8 +28,9 @@ use crate::error::Result;
 use crate::vmm::{ProgramSpec, ProgrammedVmm, VmmEngine};
 
 /// FNV-1a over a stream of 64-bit words (64-bit offset basis and
-/// prime, `0x100000001b3`).
-fn fnv1a(words: impl IntoIterator<Item = u64>) -> u64 {
+/// prime, `0x100000001b3`).  Shared with the fleet router, whose
+/// consistent-hash ring and model digests use the same stream hash.
+pub(crate) fn fnv1a(words: impl IntoIterator<Item = u64>) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for w in words {
         // Fold the full word through in two halves so every bit of the

@@ -1,5 +1,6 @@
 //! Request serving: concurrent VMM inference over programmed-crossbar
-//! caching and batched scheduling.
+//! caching and batched scheduling — single-process, or as a node/router
+//! fleet fabric over a serialized transport boundary.
 //!
 //! MELISO's batch engines characterize error populations; a deployed
 //! RRAM fabric *serves traffic* — weights are programmed once and read
@@ -18,23 +19,53 @@
 //!                                     ProgrammedVmm::read  (fresh per request)
 //! ```
 //!
+//! The fleet fabric stacks a router in front of N such nodes:
+//!
+//! ```text
+//! clients ──encode──> router (consistent-hash placement, replication)
+//!                       │ serialized frames (MELB envelopes)
+//!          ┌────────────┼────────────┐
+//!          ▼            ▼            ▼
+//!        node 0       node 1  ...  node N-1     each: own cache +
+//!          └────────────┴─────┬──────┘          queue + workers
+//!                             ▼
+//!                   response collector (rollup)
+//! ```
+//!
 //! * [`cache::ProgramCache`] — bounded LRU of programmed models keyed
 //!   by `(weights digest, device, program seed, engine config)`;
 //!   caches **programs**, never reads.
 //! * [`scheduler`] — the bounded blocking queue (producers throttle
-//!   when it fills) and window-based batch coalescing.
-//! * [`bench::run_serve`] — the simulation driver behind
-//!   `meliso serve-bench` and the `serve-sweep` experiment, reporting
-//!   p50/p95/p99 latency, throughput, realized batch sizes, cache
-//!   counters, and (optionally) the exact-reference error.
+//!   when it fills; a closed queue rejects with a typed, recoverable
+//!   error) and window-based batch coalescing.
+//! * [`transport`] — typed request/response envelopes serialized
+//!   through the MELB codec; every node hop round-trips bytes.
+//! * [`node`] — one fleet node: per-node cache, queue, worker pool,
+//!   telemetry.
+//! * [`router`] — consistent-hash placement, replication, failure
+//!   detection and recovery, fleet-wide rollup
+//!   ([`router::run_fleet`], behind `meliso fleet-bench` and the
+//!   `fleet-sweep` experiment).
+//! * [`bench::run_serve`] — the single-process simulation driver
+//!   behind `meliso serve-bench` and the `serve-sweep` experiment,
+//!   reporting p50/p95/p99 latency, throughput, realized batch sizes,
+//!   cache counters, and (optionally) the exact-reference error.
 //!
 //! Architecture, cache-keying rationale, and backpressure semantics:
-//! DESIGN.md §14.
+//! DESIGN.md §14; fleet fabric: DESIGN.md §16.
 
 pub mod bench;
 pub mod cache;
+pub mod node;
+pub mod router;
 pub mod scheduler;
+pub mod transport;
 
 pub use bench::{run_serve, ServeOptions, ServeReport};
 pub use cache::{CacheCounts, CacheKey, ProgramCache};
-pub use scheduler::{percentile, BoundedQueue, Request};
+pub use node::{Node, NodeReport};
+pub use router::{
+    model_digest, run_fleet, run_fleet_nodes, FleetOptions, FleetReport, Placement,
+};
+pub use scheduler::{percentile, BoundedQueue, QueueClosed, Request};
+pub use transport::{Frame, RequestEnvelope, ResponseEnvelope};

@@ -1,0 +1,438 @@
+//! One crossbar node of the fleet fabric.
+//!
+//! A node owns everything a single serving process owned before the
+//! fleet refactor: its [`ProgramCache`] (programmed-handle ownership
+//! is strictly per node — a model re-placed onto another node
+//! re-programs there), its [`BoundedQueue`] scheduler, its worker
+//! pool, and its telemetry (per-node cache counters, submit-to-served
+//! latency, and the engine's ABFT [`ShardCounts`] when the engine
+//! shards).  Requests arrive as serialized
+//! [`RequestEnvelope`](super::transport::RequestEnvelope) frames and
+//! leave as serialized response frames — the node decodes and encodes
+//! on every hop, paying the transport boundary honestly.
+//!
+//! The batch-serving core ([`serve_model_group`]) is the exact logic
+//! `run_serve`'s worker loop used to carry inline; both the
+//! single-process driver and the fleet nodes now call it, which is
+//! what makes a 1-node fleet bit-identical to `run_serve` on the same
+//! seeds.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::time::Instant;
+
+use crate::device::params::DeviceParams;
+use crate::error::Result;
+use crate::vmm::{DynEngine, ProgramSpec, ShardCounts, VmmEngine};
+
+use super::bench::ServeOptions;
+use super::cache::{CacheCounts, ProgramCache};
+use super::scheduler::{percentile, BoundedQueue, QueueClosed};
+use super::transport::{Frame, RequestEnvelope, ResponseEnvelope};
+
+/// Outcome of serving one model group of a coalesced batch.
+pub(crate) struct GroupOutcome {
+    /// Programming cycles executed outside the cache (0 or 1).
+    pub fresh_programs: u64,
+    /// Per-request `sum |y_hw - y_sw|` in group order (empty unless
+    /// error is measured).
+    pub err_per_req: Vec<f64>,
+    /// Columns behind each `err_per_req` entry (0 unless measured).
+    pub err_cols: usize,
+    /// Flat `(n, cols)` served outputs, when the caller keeps them.
+    pub y: Option<Vec<f32>>,
+}
+
+/// Serve one model group: resolve the program (cache hit, fused
+/// program+read on a miss, or fresh), then read.  This is the shared
+/// core of `run_serve` and the fleet nodes; the three paths preserve
+/// the pre-fleet semantics exactly:
+///
+/// * measured — `forward` against the programmed handle, keeping the
+///   exact software reference per request;
+/// * cached hot path — fused program+read on a miss, plain read on a
+///   hit;
+/// * uncached — reprogram per group (the measurable baseline).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn serve_model_group(
+    engine: &DynEngine,
+    device: &DeviceParams,
+    cache: Option<&ProgramCache>,
+    spec: &ProgramSpec,
+    x: &[f32],
+    n: usize,
+    measure_error: bool,
+    keep_outputs: bool,
+) -> Result<GroupOutcome> {
+    let mut fresh_programs = 0u64;
+    if measure_error {
+        let handle = match cache {
+            Some(c) => c.get_or_program(engine, spec, device)?,
+            None => {
+                fresh_programs += 1;
+                engine.program(spec, device)?
+            }
+        };
+        let out = handle.forward(x, n)?;
+        let errs = out.errors();
+        let cols = out.y_hw.len() / n.max(1);
+        let err_per_req = (0..n)
+            .map(|r| errs[r * cols..(r + 1) * cols].iter().map(|e| e.abs()).sum())
+            .collect();
+        Ok(GroupOutcome {
+            fresh_programs,
+            err_per_req,
+            err_cols: cols,
+            y: keep_outputs.then_some(out.y_hw),
+        })
+    } else {
+        let y = match cache {
+            Some(c) => {
+                let (handle, fused) = c.get_or_program_read(engine, spec, device, x, n)?;
+                match fused {
+                    Some(y) => y,
+                    None => handle.read(x, n)?,
+                }
+            }
+            None => {
+                fresh_programs += 1;
+                engine.program_read(spec, device, x, n)?.1
+            }
+        };
+        Ok(GroupOutcome {
+            fresh_programs,
+            err_per_req: Vec::new(),
+            err_cols: 0,
+            y: keep_outputs.then_some(y),
+        })
+    }
+}
+
+/// Per-node mutable tallies.
+struct NodeTallies {
+    requests: usize,
+    batches: usize,
+    batched_requests: usize,
+    fresh_programs: u64,
+    latencies: Vec<f64>,
+    bytes_in: u64,
+    bytes_out: u64,
+}
+
+/// Telemetry snapshot of one node after a run.
+#[derive(Debug, Clone)]
+pub struct NodeReport {
+    pub id: usize,
+    /// `false` once the node failed (injected or detected).
+    pub alive: bool,
+    /// Requests this node served to completion.
+    pub requests: usize,
+    /// Coalesced batches it processed.
+    pub batches: usize,
+    /// Mean realized batch size.
+    pub mean_batch: f64,
+    /// Programming cycles executed (cache misses, or one per batch
+    /// group with the cache off) — re-programs after a re-placement
+    /// land here on the surviving node.
+    pub programs: u64,
+    /// This node's program-cache counters.
+    pub cache: CacheCounts,
+    /// Submit-to-served latency percentiles (queue wait + service),
+    /// milliseconds.
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// ABFT checksum counters accumulated by this node's engine over
+    /// the run; `None` for engines without shard correction.  Nodes
+    /// sharing one engine clone share counters — per-node attribution
+    /// needs per-node engine instances (the fleet-sweep builds them).
+    pub shard: Option<ShardCounts>,
+    /// Serialized request bytes decoded by this node.
+    pub bytes_in: u64,
+    /// Serialized response bytes it emitted.
+    pub bytes_out: u64,
+}
+
+/// One fleet node: per-node cache, bounded queue, worker pool,
+/// telemetry.
+pub struct Node {
+    id: usize,
+    engine: DynEngine,
+    cache: Option<ProgramCache>,
+    queue: BoundedQueue<Frame>,
+    alive: AtomicBool,
+    tallies: Mutex<NodeTallies>,
+    /// Engine shard counters at node construction; the report carries
+    /// the delta accumulated during the run.
+    shard_base: Option<ShardCounts>,
+}
+
+impl Node {
+    /// A node serving through `engine`, shaped by the run options.
+    pub fn new(id: usize, engine: DynEngine, opts: &ServeOptions) -> Self {
+        let shard_base = engine.shard_counts();
+        Self {
+            id,
+            cache: opts.cache.then(|| ProgramCache::new(opts.cache_capacity)),
+            queue: BoundedQueue::new(opts.queue_capacity),
+            alive: AtomicBool::new(true),
+            tallies: Mutex::new(NodeTallies {
+                requests: 0,
+                batches: 0,
+                batched_requests: 0,
+                fresh_programs: 0,
+                latencies: Vec::new(),
+                bytes_in: 0,
+                bytes_out: 0,
+            }),
+            shard_base,
+            engine,
+        }
+    }
+
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::SeqCst)
+    }
+
+    /// Submit one serialized request frame.  A dead (or shut-down)
+    /// node rejects with the typed [`QueueClosed`] carrying the frame
+    /// back, which is exactly what the router's detect-and-re-route
+    /// path recovers.
+    pub fn submit(&self, frame: Frame) -> std::result::Result<(), QueueClosed<Frame>> {
+        self.queue.push(frame)
+    }
+
+    /// Kill the node: stop accepting, let workers drain what was
+    /// already accepted (close-and-drain), and report not-alive.
+    pub fn fail(&self) {
+        self.alive.store(false, Ordering::SeqCst);
+        self.queue.close();
+    }
+
+    /// Graceful end-of-run: stop accepting, drain, stay "alive" in the
+    /// report.
+    pub fn shutdown(&self) {
+        self.queue.close();
+    }
+
+    /// One scheduler worker: coalesce frames from the node queue,
+    /// decode, serve by model group through this node's cache, encode
+    /// and emit response frames.  Returns when the queue is closed and
+    /// drained; an engine error propagates to the caller (which fails
+    /// the fleet run, mirroring `run_serve`).
+    pub fn worker_loop(
+        &self,
+        device: &DeviceParams,
+        specs: &[ProgramSpec],
+        opts: &ServeOptions,
+        responses: &mpsc::Sender<Vec<u8>>,
+    ) -> Result<()> {
+        loop {
+            let batch = self.queue.pop_batch(opts.batch_max, opts.window);
+            if batch.is_empty() {
+                return Ok(()); // closed and drained
+            }
+            self.serve_frames(&batch, device, specs, opts, responses)?;
+        }
+    }
+
+    fn serve_frames(
+        &self,
+        batch: &[Frame],
+        device: &DeviceParams,
+        specs: &[ProgramSpec],
+        opts: &ServeOptions,
+        responses: &mpsc::Sender<Vec<u8>>,
+    ) -> Result<()> {
+        // Transport boundary: every frame decodes from bytes.
+        let mut bytes_in = 0u64;
+        let mut reqs = Vec::with_capacity(batch.len());
+        for frame in batch {
+            bytes_in += frame.bytes.len() as u64;
+            let (req, _) = RequestEnvelope::decode(&frame.bytes)?;
+            reqs.push(req);
+        }
+        // Group by model, preserving arrival order within groups.
+        let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
+        for (i, req) in reqs.iter().enumerate() {
+            match groups.iter_mut().find(|(m, _)| *m == req.model) {
+                Some((_, g)) => g.push(i),
+                None => groups.push((req.model, vec![i])),
+            }
+        }
+        let mut fresh_programs = 0u64;
+        let mut bytes_out = 0u64;
+        for (model, members) in &groups {
+            let spec = &specs[*model];
+            let n = members.len();
+            let mut x = Vec::with_capacity(n * opts.rows);
+            for &i in members {
+                x.extend_from_slice(&reqs[i].x);
+            }
+            let outcome = serve_model_group(
+                &self.engine,
+                device,
+                self.cache.as_ref(),
+                spec,
+                &x,
+                n,
+                opts.measure_error,
+                true,
+            )?;
+            fresh_programs += outcome.fresh_programs;
+            let y = outcome.y.expect("fleet nodes keep outputs");
+            let cols = y.len() / n.max(1);
+            for (slot, &i) in members.iter().enumerate() {
+                let resp = ResponseEnvelope {
+                    id: reqs[i].id,
+                    model: *model,
+                    node: self.id,
+                    y: y[slot * cols..(slot + 1) * cols].to_vec(),
+                    err_abs_sum: outcome.err_per_req.get(slot).copied().unwrap_or(0.0),
+                    err_cols: outcome.err_cols,
+                };
+                let frame = resp.encode();
+                bytes_out += frame.len() as u64;
+                // A dropped receiver means the run is tearing down;
+                // nothing useful remains for this worker to do.
+                let _ = responses.send(frame);
+            }
+        }
+        let done = Instant::now();
+        let mut t = self.tallies.lock().unwrap();
+        for frame in batch {
+            t.latencies
+                .push(done.duration_since(frame.submitted).as_secs_f64());
+        }
+        t.requests += batch.len();
+        t.batches += 1;
+        t.batched_requests += batch.len();
+        t.fresh_programs += fresh_programs;
+        t.bytes_in += bytes_in;
+        t.bytes_out += bytes_out;
+        Ok(())
+    }
+
+    /// This node's cache counters (zeroed when the cache is off).
+    pub fn cache_counts(&self) -> CacheCounts {
+        self.cache.as_ref().map(|c| c.counts()).unwrap_or_default()
+    }
+
+    /// Telemetry snapshot after the run.
+    pub fn report(&self) -> NodeReport {
+        let t = self.tallies.lock().unwrap();
+        let mut lat = t.latencies.clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let cache = self.cache_counts();
+        let shard = match (self.engine.shard_counts(), self.shard_base) {
+            (Some(now), Some(base)) => Some(ShardCounts {
+                injected: now.injected.saturating_sub(base.injected),
+                detected: now.detected.saturating_sub(base.detected),
+                corrected: now.corrected.saturating_sub(base.corrected),
+                uncorrectable: now.uncorrectable.saturating_sub(base.uncorrectable),
+            }),
+            _ => None,
+        };
+        NodeReport {
+            id: self.id,
+            alive: self.is_alive(),
+            requests: t.requests,
+            batches: t.batches,
+            mean_batch: if t.batches > 0 {
+                t.batched_requests as f64 / t.batches as f64
+            } else {
+                0.0
+            },
+            programs: if self.cache.is_some() {
+                cache.misses
+            } else {
+                t.fresh_programs
+            },
+            cache,
+            p50_ms: percentile(&lat, 50.0) * 1e3,
+            p95_ms: percentile(&lat, 95.0) * 1e3,
+            p99_ms: percentile(&lat, 99.0) * 1e3,
+            shard,
+            bytes_in: t.bytes_in,
+            bytes_out: t.bytes_out,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+    use crate::vmm::NativeEngine;
+    use std::time::Duration;
+
+    fn opts() -> ServeOptions {
+        ServeOptions {
+            clients: 1,
+            requests_per_client: 6,
+            models: 2,
+            rows: 16,
+            cols: 16,
+            queue_capacity: 8,
+            batch_max: 4,
+            window: Duration::from_micros(0),
+            workers: 1,
+            cache: true,
+            cache_capacity: 4,
+            measure_error: true,
+            ..ServeOptions::default()
+        }
+    }
+
+    #[test]
+    fn node_serves_submitted_frames_and_reports() {
+        let opts = opts();
+        let engine = DynEngine::new(NativeEngine::default());
+        let device = presets::epiram().params;
+        let specs = opts.model_specs();
+        let inputs = opts.request_inputs();
+        let node = Node::new(0, engine, &opts);
+        let (tx, rx) = mpsc::channel();
+        for id in 0..6u64 {
+            let env = super::super::transport::RequestEnvelope {
+                model: id as usize % 2,
+                id,
+                x: inputs.sample(id as usize),
+            };
+            node.submit(Frame { bytes: env.encode(), submitted: Instant::now() })
+                .unwrap();
+        }
+        node.shutdown();
+        node.worker_loop(&device, &specs, &opts, &tx).unwrap();
+        drop(tx);
+        let mut got: Vec<u64> = rx
+            .iter()
+            .map(|b| ResponseEnvelope::decode(&b).unwrap().0.id)
+            .collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..6).collect::<Vec<_>>());
+        let r = node.report();
+        assert!(r.alive);
+        assert_eq!(r.requests, 6);
+        assert_eq!(r.cache.misses, 2, "two models, one worker");
+        assert_eq!(r.programs, 2);
+        assert!(r.bytes_in > 0 && r.bytes_out > 0);
+        assert!(r.shard.is_none(), "native engine has no shard counters");
+    }
+
+    #[test]
+    fn dead_node_rejects_with_recoverable_frame() {
+        let opts = opts();
+        let engine = DynEngine::new(NativeEngine::default());
+        let node = Node::new(3, engine, &opts);
+        node.fail();
+        assert!(!node.is_alive());
+        let frame = Frame { bytes: vec![1, 2, 3], submitted: Instant::now() };
+        let back = node.submit(frame).expect_err("dead node must reject");
+        assert_eq!(back.into_inner().bytes, vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,713 @@
+//! The fleet router: consistent-hash placement of model digests onto
+//! nodes, replication with deterministic replica choice, node-failure
+//! injection with detect → re-route → re-program recovery, and the
+//! fleet-wide telemetry rollup.
+//!
+//! ## Placement
+//!
+//! Each node contributes [`VNODES`] points to a hash ring (FNV-1a over
+//! `(ring tag, node, vnode)` — the same stream hash the program cache
+//! keys with); a model digest walks the ring clockwise from its own
+//! hash, collecting the first `replication` distinct *live* nodes.
+//! Because the walk skips dead nodes in place, removing a node only
+//! re-places the models whose replica walk passed through it — every
+//! other digest sees an unchanged prefix and keeps its assignment
+//! (`rust/tests/proptests.rs` checks exactly this).  The replica that
+//! serves a given request is `replicas[id % replicas.len()]`: a pure
+//! function of the request id, so placement is deterministic for any
+//! thread count.
+//!
+//! ## Failure and recovery
+//!
+//! Failure injection kills a node (its queue closes and drains — see
+//! [`super::scheduler::BoundedQueue`]) *without telling the router*.
+//! The router discovers the death the way a real fabric does: a
+//! submit against the dead node comes back as a typed
+//! [`QueueClosed`](super::scheduler::QueueClosed) rejection carrying
+//! the frame, the router marks the node dead (detect), re-assigns the
+//! digest over the surviving ring (re-route), and the surviving
+//! replica's cold cache re-programs the model on first touch
+//! (re-program).  Rejected-then-re-routed pushes are counted as
+//! `shed`; no request is ever lost.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::time::Instant;
+
+use crate::device::params::DeviceParams;
+use crate::error::{Error, Result};
+use crate::util::progress::Stopwatch;
+use crate::util::rng::Xoshiro256;
+use crate::vmm::{DynEngine, ProgramSpec, ShardCounts, VmmEngine};
+
+use super::bench::{capacity_projection, ServeOptions, ServeReport};
+use super::cache::fnv1a;
+use super::node::{Node, NodeReport};
+use super::scheduler::percentile;
+use super::transport::{Frame, RequestEnvelope, ResponseEnvelope};
+
+/// Virtual points each node contributes to the placement ring.
+const VNODES: usize = 16;
+/// Stream tag separating ring points from every other FNV-1a use.
+const RING_TAG: u64 = 0x524F_5554; // "ROUT"
+
+/// Digest identifying one deployed model for placement: geometry,
+/// weight bits, and programming-noise label — the same identity the
+/// program cache keys on, so two placement-equal models are
+/// cache-equal on whichever node they land.
+pub fn model_digest(spec: &ProgramSpec) -> u64 {
+    fnv1a(
+        [spec.rows as u64, spec.cols as u64, spec.program_seed]
+            .into_iter()
+            .chain(spec.w.iter().map(|v| u64::from(v.to_bits()))),
+    )
+}
+
+/// Consistent-hash placement of model digests onto a fixed node set
+/// with some nodes possibly dead.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    /// `(point, node)`, sorted by point.
+    ring: Vec<(u64, usize)>,
+    alive: Vec<bool>,
+    replication: usize,
+}
+
+impl Placement {
+    /// A ring over `nodes` nodes (clamped to at least 1) with the
+    /// given replication factor (clamped to `1..=nodes`).
+    pub fn new(nodes: usize, replication: usize) -> Placement {
+        let nodes = nodes.max(1);
+        let mut ring: Vec<(u64, usize)> = (0..nodes)
+            .flat_map(|n| {
+                (0..VNODES).map(move |v| (fnv1a([RING_TAG, n as u64, v as u64]), n))
+            })
+            .collect();
+        ring.sort_unstable();
+        Placement {
+            ring,
+            alive: vec![true; nodes],
+            replication: replication.clamp(1, nodes),
+        }
+    }
+
+    /// Total nodes (live or dead).
+    pub fn nodes(&self) -> usize {
+        self.alive.len()
+    }
+
+    /// Configured replication factor.
+    pub fn replication(&self) -> usize {
+        self.replication
+    }
+
+    /// Live nodes remaining.
+    pub fn live(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
+    }
+
+    pub fn is_alive(&self, node: usize) -> bool {
+        self.alive.get(node).copied().unwrap_or(false)
+    }
+
+    /// Mark a node dead; its models re-place onto survivors.
+    pub fn fail(&mut self, node: usize) {
+        if let Some(a) = self.alive.get_mut(node) {
+            *a = false;
+        }
+    }
+
+    /// The live replica set of `digest`: walk the ring clockwise from
+    /// the digest's point, collecting distinct live nodes until
+    /// `replication` are found (or every live node has been seen —
+    /// fewer live nodes than replicas means the whole survivor set).
+    /// Pure function of `(ring, alive, digest)` — deterministic for
+    /// any thread count.
+    pub fn assign(&self, digest: u64) -> Vec<usize> {
+        let want = self.replication.min(self.live());
+        let mut out = Vec::with_capacity(want);
+        if want == 0 {
+            return out;
+        }
+        let start = self.ring.partition_point(|&(p, _)| p < digest);
+        for i in 0..self.ring.len() {
+            let (_, n) = self.ring[(start + i) % self.ring.len()];
+            if self.alive[n] && !out.contains(&n) {
+                out.push(n);
+                if out.len() == want {
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One fleet run's shape.
+#[derive(Debug, Clone)]
+pub struct FleetOptions {
+    /// The per-run serving shape (clients, requests, models, batching,
+    /// per-node cache/queue/worker configuration, seeds).
+    pub serve: ServeOptions,
+    /// Fleet size.
+    pub nodes: usize,
+    /// Replicas per model digest (clamped to the fleet size).
+    pub replication: usize,
+    /// Failure-injection intensity: `ceil(fail_rate * (nodes - 1))`
+    /// victims (clamped to keep at least one node alive; 0.0 disables,
+    /// as does a 1-node fleet).  Victims are the heaviest model owners
+    /// so the recovery path is actually exercised, each dying at a
+    /// seeded point mid-stream.
+    pub fail_rate: f64,
+    /// Seed of the failure-point draws.
+    pub fail_seed: u64,
+    /// Keep every served output (id-ordered) in the report — the
+    /// bit-identity harness; off for pure benchmarking.
+    pub collect_responses: bool,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        Self {
+            serve: ServeOptions::default(),
+            nodes: 2,
+            replication: 1,
+            fail_rate: 0.0,
+            fail_seed: 0x464C_4554, // "FLET"
+            collect_responses: false,
+        }
+    }
+}
+
+/// Fleet-wide telemetry rollup plus the per-node breakdown.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    /// The familiar serving rollup: requests, batches, end-to-end
+    /// latency percentiles, summed cache counters, programs, error,
+    /// and the capacity projection (see [`FleetReport::per_node_rps`]).
+    pub aggregate: ServeReport,
+    /// Per-node telemetry (cache, latency, shard counters, bytes).
+    pub nodes: Vec<NodeReport>,
+    /// Replication factor the run actually used.
+    pub replication: usize,
+    /// Typed push rejections against dead nodes that were re-routed to
+    /// a surviving replica.  Every shed request was served — shed
+    /// counts detours, not losses.
+    pub shed: u64,
+    /// Nodes that died during the run.
+    pub failed_nodes: Vec<usize>,
+    /// Models whose replica set included a failed node — re-placed
+    /// onto survivors and re-programmed there on first touch.
+    pub recovered_models: u64,
+    /// Serialized bytes through the transport boundary (request frames
+    /// decoded by nodes + response frames emitted).
+    pub transport_bytes: u64,
+    /// Fleet-wide ABFT rollup (summed per-node deltas; `None` when no
+    /// engine shards).
+    pub shard: Option<ShardCounts>,
+    /// Fitted requests/sec of a single node of this fabric
+    /// (`aggregate.fitted_rps / nodes`); the aggregate's
+    /// `nodes_for_1e8_per_day` projects from this per-node rate.
+    pub per_node_rps: f64,
+    /// Served outputs by request id, when collected.
+    pub responses: Option<Vec<(u64, Vec<f32>)>>,
+}
+
+/// What the response collector accumulates.
+struct Collected {
+    count: usize,
+    duplicates: u64,
+    latencies: Vec<f64>,
+    /// Per-request `sum |err|` by id (0.0 when unmeasured).
+    err_by_id: Vec<f64>,
+    /// Total measured columns.
+    err_cols: usize,
+    /// `(wall secs, cumulative responses)` capacity-projection points.
+    points: Vec<(f64, f64)>,
+    responses: Option<Vec<Option<(u64, Vec<f32>)>>>,
+}
+
+struct Router<'a> {
+    nodes: &'a [Node],
+    placement: Mutex<Placement>,
+    digests: &'a [u64],
+    /// Requests routed so far (drives failure injection).
+    routed: AtomicU64,
+    shed: AtomicU64,
+    /// `(routed-count threshold, victim)`, ascending by threshold.
+    pending_failures: Mutex<Vec<(u64, usize)>>,
+}
+
+impl Router<'_> {
+    /// Route one serialized request frame: decode (the router pays the
+    /// transport boundary too), place, submit — and on a typed
+    /// rejection, detect the dead node, re-place, and re-submit until
+    /// a live replica accepts.  Errors only when every node is dead.
+    fn route(&self, frame: Vec<u8>) -> Result<()> {
+        let (req, _) = RequestEnvelope::decode(&frame)?;
+        let digest = self.digests[req.model];
+        let mut bytes = frame;
+        loop {
+            let replicas = self.placement.lock().unwrap().assign(digest);
+            if replicas.is_empty() {
+                return Err(Error::Config("fleet: every node is dead".into()));
+            }
+            // Deterministic replica choice: spread requests across the
+            // replica set by id.
+            let pick = replicas[req.id as usize % replicas.len()];
+            match self.nodes[pick].submit(Frame { bytes, submitted: Instant::now() }) {
+                Ok(()) => break,
+                Err(rejected) => {
+                    // Detect → re-route: the frame comes back typed.
+                    bytes = rejected.into_inner().bytes;
+                    self.placement.lock().unwrap().fail(pick);
+                    self.shed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        let routed = self.routed.fetch_add(1, Ordering::Relaxed) + 1;
+        self.maybe_inject(routed);
+        Ok(())
+    }
+
+    /// Kill any victim whose routed-count threshold has passed.  The
+    /// placement is deliberately *not* updated here: the router must
+    /// discover the death through the typed push rejection.
+    fn maybe_inject(&self, routed: u64) {
+        let mut pending = self.pending_failures.lock().unwrap();
+        while let Some(&(threshold, victim)) = pending.first() {
+            if routed < threshold {
+                break;
+            }
+            pending.remove(0);
+            self.nodes[victim].fail();
+        }
+    }
+}
+
+/// The injection plan: `ceil(fail_rate * (nodes-1))` victims (at least
+/// one survivor always remains), chosen heaviest-owner-first from the
+/// initial placement so killing them actually forces re-placement,
+/// each at a seeded mid-stream routed-count threshold.
+fn failure_plan(opts: &FleetOptions, digests: &[u64], initial: &Placement) -> Vec<(u64, usize)> {
+    if opts.fail_rate <= 0.0 || opts.nodes < 2 {
+        return Vec::new();
+    }
+    let max_victims = opts.nodes - 1;
+    let k = ((opts.fail_rate * max_victims as f64).ceil() as usize).clamp(1, max_victims);
+    let mut owned = vec![0usize; opts.nodes];
+    for &d in digests {
+        for n in initial.assign(d) {
+            owned[n] += 1;
+        }
+    }
+    let mut order: Vec<usize> = (0..opts.nodes).collect();
+    order.sort_by(|&a, &b| owned[b].cmp(&owned[a]).then(a.cmp(&b)));
+    let mut rng = Xoshiro256::seed_from_u64(opts.fail_seed);
+    let total = opts.serve.total_requests() as f64;
+    let mut plan: Vec<(u64, usize)> = order
+        .into_iter()
+        .take(k)
+        .map(|victim| {
+            // Mid-stream: enough traffic before the death to warm the
+            // victim, enough after to exercise recovery.
+            let at = (total * rng.uniform_in(0.35, 0.65)) as u64;
+            (at.max(1), victim)
+        })
+        .collect();
+    plan.sort_unstable();
+    plan
+}
+
+/// Run one fleet simulation with every node serving through a clone of
+/// `engine` (shared instance: per-node shard attribution is not
+/// meaningful, so the ABFT rollup is taken from the engine directly
+/// and the per-node `shard` fields are cleared).  For per-node
+/// engines — and honest per-node shard telemetry — use
+/// [`run_fleet_nodes`].
+pub fn run_fleet(
+    engine: &DynEngine,
+    device: &DeviceParams,
+    opts: &FleetOptions,
+) -> Result<FleetReport> {
+    let base = engine.shard_counts();
+    let engines = vec![engine.clone(); opts.nodes.max(1)];
+    let mut report = run_fleet_nodes(engines, device, opts)?;
+    if let (Some(now), Some(base)) = (engine.shard_counts(), base) {
+        report.shard = Some(ShardCounts {
+            injected: now.injected.saturating_sub(base.injected),
+            detected: now.detected.saturating_sub(base.detected),
+            corrected: now.corrected.saturating_sub(base.corrected),
+            uncorrectable: now.uncorrectable.saturating_sub(base.uncorrectable),
+        });
+        for nr in &mut report.nodes {
+            nr.shard = None;
+        }
+    }
+    Ok(report)
+}
+
+/// Run one fleet simulation with one engine per node (`engines[i]`
+/// serves node `i`).
+pub fn run_fleet_nodes(
+    engines: Vec<DynEngine>,
+    device: &DeviceParams,
+    opts: &FleetOptions,
+) -> Result<FleetReport> {
+    opts.serve.validate()?;
+    device.validate().map_err(Error::Config)?;
+    if opts.nodes == 0 {
+        return Err(Error::Config("fleet: nodes must be > 0".into()));
+    }
+    if engines.len() != opts.nodes {
+        return Err(Error::Config(format!(
+            "fleet: {} engines for {} nodes",
+            engines.len(),
+            opts.nodes
+        )));
+    }
+    let specs = opts.serve.model_specs();
+    let inputs = opts.serve.request_inputs();
+    let digests: Vec<u64> = specs.iter().map(model_digest).collect();
+    let initial = Placement::new(opts.nodes, opts.replication);
+    let replication = initial.replication();
+    let plan = failure_plan(opts, &digests, &initial);
+    let nodes: Vec<Node> = engines
+        .into_iter()
+        .enumerate()
+        .map(|(i, e)| Node::new(i, e, &opts.serve))
+        .collect();
+    let router = Router {
+        nodes: &nodes,
+        placement: Mutex::new(initial.clone()),
+        digests: &digests,
+        routed: AtomicU64::new(0),
+        shed: AtomicU64::new(0),
+        pending_failures: Mutex::new(plan),
+    };
+    let total = opts.serve.total_requests();
+    let enqueued: Mutex<Vec<Option<Instant>>> = Mutex::new(vec![None; total]);
+    let engine_failure: Mutex<Option<Error>> = Mutex::new(None);
+    let collected_slot: Mutex<Option<Result<Collected>>> = Mutex::new(None);
+    let workers = opts.serve.workers.max(1);
+    let wall = Stopwatch::start();
+
+    std::thread::scope(|scope| {
+        let (tx, rx) = mpsc::channel::<Vec<u8>>();
+        // Per-node scheduler worker pools.
+        for node in &nodes {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                let specs = &specs;
+                let serve_opts = &opts.serve;
+                let engine_failure = &engine_failure;
+                let nodes = &nodes;
+                scope.spawn(move || {
+                    if let Err(e) = node.worker_loop(device, specs, serve_opts, &tx) {
+                        let mut slot = engine_failure.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(e);
+                        }
+                        drop(slot);
+                        // Tear the whole fleet down so clients and
+                        // sibling workers drain out.
+                        for n in nodes.iter() {
+                            n.fail();
+                        }
+                    }
+                });
+            }
+        }
+        drop(tx); // collector ends when the last worker exits
+
+        // Response collector: decode every response frame, account
+        // end-to-end latency and error by request id.
+        {
+            let enqueued = &enqueued;
+            let wall = &wall;
+            let collected_slot = &collected_slot;
+            let collect_responses = opts.collect_responses;
+            scope.spawn(move || {
+                let run = || -> Result<Collected> {
+                    let mut c = Collected {
+                        count: 0,
+                        duplicates: 0,
+                        latencies: Vec::with_capacity(total),
+                        err_by_id: vec![0.0; total],
+                        err_cols: 0,
+                        points: Vec::with_capacity(total),
+                        responses: collect_responses.then(|| {
+                            let mut v = Vec::with_capacity(total);
+                            v.resize_with(total, || None);
+                            v
+                        }),
+                    };
+                    let mut seen = vec![false; total];
+                    for frame in rx.iter() {
+                        let (resp, _) = ResponseEnvelope::decode(&frame)?;
+                        let idx = resp.id as usize;
+                        if idx >= total || seen[idx] {
+                            c.duplicates += 1;
+                            continue;
+                        }
+                        seen[idx] = true;
+                        c.count += 1;
+                        if let Some(t0) = enqueued.lock().unwrap()[idx] {
+                            c.latencies
+                                .push(Instant::now().duration_since(t0).as_secs_f64());
+                        }
+                        c.err_by_id[idx] = resp.err_abs_sum;
+                        c.err_cols += resp.err_cols;
+                        c.points.push((wall.elapsed_secs(), c.count as f64));
+                        if let Some(store) = c.responses.as_mut() {
+                            store[idx] = Some((resp.id, resp.y));
+                        }
+                    }
+                    Ok(c)
+                };
+                *collected_slot.lock().unwrap() = Some(run());
+            });
+        }
+
+        // Simulated clients: encode, route through the fabric.
+        let client_handles: Vec<_> = (0..opts.serve.clients)
+            .map(|cl| {
+                let router = &router;
+                let inputs = &inputs;
+                let enqueued = &enqueued;
+                let serve_opts = &opts.serve;
+                scope.spawn(move || {
+                    for i in 0..serve_opts.requests_per_client {
+                        let id = (cl * serve_opts.requests_per_client + i) as u64;
+                        let env = RequestEnvelope {
+                            model: id as usize % serve_opts.models,
+                            id,
+                            x: inputs.sample(id as usize),
+                        };
+                        let frame = env.encode();
+                        enqueued.lock().unwrap()[id as usize] = Some(Instant::now());
+                        if router.route(frame).is_err() {
+                            break; // fleet torn down mid-stream
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in client_handles {
+            h.join().expect("fleet client panicked");
+        }
+        // Graceful end-of-run: close every intake, workers drain.
+        for node in &nodes {
+            node.shutdown();
+        }
+    });
+
+    if let Some(e) = engine_failure.into_inner().unwrap() {
+        return Err(e);
+    }
+    let wall_secs = wall.elapsed_secs();
+    let collected = collected_slot
+        .into_inner()
+        .unwrap()
+        .ok_or_else(|| Error::Config("fleet: collector never ran".into()))??;
+    let node_reports: Vec<NodeReport> = nodes.iter().map(|n| n.report()).collect();
+
+    let failed_nodes: Vec<usize> = node_reports
+        .iter()
+        .filter(|r| !r.alive)
+        .map(|r| r.id)
+        .collect();
+    let recovered_models = digests
+        .iter()
+        .filter(|&&d| initial.assign(d).iter().any(|n| failed_nodes.contains(n)))
+        .count() as u64;
+
+    let mut lat = collected.latencies;
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let requests = collected.count;
+    let mean_rps = if wall_secs > 0.0 {
+        requests as f64 / wall_secs
+    } else {
+        0.0
+    };
+    let (fitted_rps, _) = capacity_projection(&collected.points, mean_rps);
+    let per_node_rps = fitted_rps / opts.nodes as f64;
+    let target_rps = 1e8 / 86_400.0;
+    let nodes_for_1e8_per_day = if per_node_rps > 0.0 && per_node_rps.is_finite() {
+        (target_rps / per_node_rps).ceil() as u64
+    } else {
+        0
+    };
+    // Deterministic error rollup: sum per-request sums in id order.
+    let err_sum: f64 = collected.err_by_id.iter().sum();
+    let batches: usize = node_reports.iter().map(|r| r.batches).sum();
+    let batched: f64 = node_reports
+        .iter()
+        .map(|r| r.mean_batch * r.batches as f64)
+        .sum();
+    let cache = node_reports.iter().fold(
+        super::cache::CacheCounts::default(),
+        |acc, r| super::cache::CacheCounts {
+            hits: acc.hits + r.cache.hits,
+            misses: acc.misses + r.cache.misses,
+            evictions: acc.evictions + r.cache.evictions,
+            entries: acc.entries + r.cache.entries,
+        },
+    );
+    let programs: u64 = node_reports.iter().map(|r| r.programs).sum();
+    let shard = node_reports
+        .iter()
+        .filter_map(|r| r.shard)
+        .fold(None, |acc: Option<ShardCounts>, s| {
+            let a = acc.unwrap_or_default();
+            Some(ShardCounts {
+                injected: a.injected + s.injected,
+                detected: a.detected + s.detected,
+                corrected: a.corrected + s.corrected,
+                uncorrectable: a.uncorrectable + s.uncorrectable,
+            })
+        });
+    let transport_bytes: u64 = node_reports
+        .iter()
+        .map(|r| r.bytes_in + r.bytes_out)
+        .sum();
+    let responses = collected
+        .responses
+        .map(|v| v.into_iter().flatten().collect::<Vec<_>>());
+
+    Ok(FleetReport {
+        aggregate: ServeReport {
+            requests,
+            batches,
+            mean_batch: if batches > 0 { batched / batches as f64 } else { 0.0 },
+            wall_secs,
+            throughput: mean_rps,
+            p50_ms: percentile(&lat, 50.0) * 1e3,
+            p95_ms: percentile(&lat, 95.0) * 1e3,
+            p99_ms: percentile(&lat, 99.0) * 1e3,
+            cache,
+            programs,
+            mean_abs_error: if collected.err_cols > 0 {
+                err_sum / collected.err_cols as f64
+            } else {
+                f64::NAN
+            },
+            fitted_rps,
+            nodes_for_1e8_per_day,
+        },
+        nodes: node_reports,
+        replication,
+        shed: router.shed.load(Ordering::Relaxed),
+        failed_nodes,
+        recovered_models,
+        transport_bytes,
+        shard,
+        per_node_rps,
+        responses,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+    use crate::vmm::NativeEngine;
+    use std::time::Duration;
+
+    fn tiny_fleet(nodes: usize, replication: usize, fail_rate: f64) -> FleetOptions {
+        FleetOptions {
+            serve: ServeOptions {
+                clients: 3,
+                requests_per_client: 10,
+                models: 5,
+                rows: 16,
+                cols: 16,
+                queue_capacity: 8,
+                batch_max: 4,
+                window: Duration::from_micros(100),
+                workers: 1,
+                cache: true,
+                cache_capacity: 8,
+                measure_error: true,
+                ..ServeOptions::default()
+            },
+            nodes,
+            replication,
+            fail_rate,
+            collect_responses: true,
+            ..FleetOptions::default()
+        }
+    }
+
+    #[test]
+    fn placement_is_deterministic_and_respects_replication() {
+        let p = Placement::new(5, 2);
+        for digest in [0u64, 1, u64::MAX, 0xDEAD_BEEF] {
+            let a = p.assign(digest);
+            assert_eq!(a, p.assign(digest), "assignment is pure");
+            assert_eq!(a.len(), 2);
+            assert_ne!(a[0], a[1], "replicas are distinct nodes");
+        }
+        // Replication clamps to the fleet size.
+        assert_eq!(Placement::new(2, 9).replication(), 2);
+        assert_eq!(Placement::new(1, 1).assign(42), vec![0]);
+    }
+
+    #[test]
+    fn dead_node_disappears_from_assignments() {
+        let mut p = Placement::new(4, 2);
+        p.fail(2);
+        assert_eq!(p.live(), 3);
+        for digest in 0..64u64 {
+            assert!(!p.assign(digest).contains(&2));
+        }
+        // More deaths than replicas: the survivor set is returned.
+        p.fail(0);
+        p.fail(1);
+        for digest in 0..8u64 {
+            assert_eq!(p.assign(digest), vec![3]);
+        }
+    }
+
+    #[test]
+    fn fleet_serves_all_requests_across_nodes() {
+        let engine = DynEngine::new(NativeEngine::default());
+        let device = presets::epiram().params;
+        let opts = tiny_fleet(3, 1, 0.0);
+        let r = run_fleet(&engine, &device, &opts).unwrap();
+        assert_eq!(r.aggregate.requests, 30);
+        assert_eq!(r.shed, 0);
+        assert!(r.failed_nodes.is_empty());
+        assert_eq!(r.recovered_models, 0);
+        assert_eq!(r.nodes.len(), 3);
+        let by_node: usize = r.nodes.iter().map(|n| n.requests).sum();
+        assert_eq!(by_node, 30, "every request served by exactly one node");
+        assert!(r.transport_bytes > 0, "the wire was paid");
+        assert!(r.aggregate.mean_abs_error.is_finite());
+        let got = r.responses.unwrap();
+        assert_eq!(got.len(), 30);
+    }
+
+    #[test]
+    fn replicated_fleet_spreads_a_model_over_distinct_nodes() {
+        let engine = DynEngine::new(NativeEngine::default());
+        let device = presets::epiram().params;
+        let opts = tiny_fleet(3, 2, 0.0);
+        let r = run_fleet(&engine, &device, &opts).unwrap();
+        assert_eq!(r.aggregate.requests, 30);
+        assert_eq!(r.replication, 2);
+        // With two replicas per model the fleet programs more arrays
+        // than models, never more than models x replication.
+        assert!(r.aggregate.programs as usize >= 5);
+        assert!(r.aggregate.programs as usize <= 10);
+    }
+
+    #[test]
+    fn engine_failure_fails_the_run_not_hangs() {
+        let engine = DynEngine::new(NativeEngine::default());
+        let device = presets::epiram().params;
+        let mut opts = tiny_fleet(2, 1, 0.0);
+        opts.serve.models = 0; // invalid shape
+        assert!(run_fleet(&engine, &device, &opts).is_err());
+    }
+}

@@ -31,6 +31,28 @@ pub struct Request {
     pub enqueued: Instant,
 }
 
+/// Typed rejection of a push against a closed queue.  The item is
+/// handed back untouched so the caller can recover it — the fleet
+/// router re-routes a rejected request to a surviving replica instead
+/// of losing it (or blocking forever) on a dead node's queue.
+#[derive(Debug)]
+pub struct QueueClosed<T>(pub T);
+
+impl<T> QueueClosed<T> {
+    /// Recover the rejected item.
+    pub fn into_inner(self) -> T {
+        self.0
+    }
+}
+
+impl<T> std::fmt::Display for QueueClosed<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "queue closed: push rejected")
+    }
+}
+
+impl<T: std::fmt::Debug> std::error::Error for QueueClosed<T> {}
+
 struct QueueState<T> {
     items: VecDeque<T>,
     closed: bool,
@@ -68,19 +90,22 @@ impl<T> BoundedQueue<T> {
         self.len() == 0
     }
 
-    /// Enqueue, blocking while the queue is full.  Returns `false`
-    /// (dropping the item) if the queue was closed — producers use
-    /// this to stop on shutdown or on a downstream error.
-    pub fn push(&self, item: T) -> bool {
+    /// Enqueue, blocking while the queue is full.  A push against a
+    /// closed queue — including a pusher that was already blocked on a
+    /// full queue when [`BoundedQueue::close`] fired — returns the
+    /// item inside a typed [`QueueClosed`] error instead of dropping
+    /// it, so producers can stop on shutdown and the fleet router can
+    /// re-route the very request that detected a dead node.
+    pub fn push(&self, item: T) -> Result<(), QueueClosed<T>> {
         let mut st = self.inner.lock().unwrap();
         loop {
             if st.closed {
-                return false;
+                return Err(QueueClosed(item));
             }
             if st.items.len() < self.capacity {
                 st.items.push_back(item);
                 self.not_empty.notify_one();
-                return true;
+                return Ok(());
             }
             st = self.not_full.wait(st).unwrap();
         }
@@ -160,10 +185,11 @@ mod tests {
     fn fifo_order_and_drain_on_close() {
         let q = BoundedQueue::new(16);
         for i in 0..5 {
-            assert!(q.push(i));
+            assert!(q.push(i).is_ok());
         }
         q.close();
-        assert!(!q.push(99), "closed queue must refuse new items");
+        let rejected = q.push(99).expect_err("closed queue must refuse new items");
+        assert_eq!(rejected.into_inner(), 99, "the rejected item comes back");
         let batch = q.pop_batch(3, Duration::from_millis(0));
         assert_eq!(batch, vec![0, 1, 2]);
         let batch = q.pop_batch(8, Duration::from_millis(0));
@@ -194,18 +220,39 @@ mod tests {
     #[test]
     fn backpressure_blocks_until_consumed() {
         let q = Arc::new(BoundedQueue::new(2));
-        assert!(q.push(1));
-        assert!(q.push(2));
+        assert!(q.push(1).is_ok());
+        assert!(q.push(2).is_ok());
         let producer = Arc::clone(&q);
         let handle = std::thread::spawn(move || producer.push(3));
         // The producer is blocked on a full queue; popping frees it.
         std::thread::sleep(Duration::from_millis(5));
         let batch = q.pop_batch(1, Duration::from_millis(0));
         assert_eq!(batch, vec![1]);
-        assert!(handle.join().unwrap());
+        assert!(handle.join().unwrap().is_ok());
         q.close();
         let rest = q.pop_batch(8, Duration::from_millis(0));
         assert_eq!(rest, vec![2, 3]);
+    }
+
+    #[test]
+    fn close_unblocks_stuck_pusher_with_recoverable_item() {
+        // Regression for the node-failure path: a producer blocked on
+        // a dead node's *full* queue must not wait forever — close()
+        // wakes it and hands the request back for re-routing.
+        let q = Arc::new(BoundedQueue::new(1));
+        assert!(q.push(10).is_ok());
+        let producer = Arc::clone(&q);
+        let handle = std::thread::spawn(move || producer.push(11));
+        std::thread::sleep(Duration::from_millis(5));
+        q.close(); // the node dies with its queue full
+        let rejected = handle
+            .join()
+            .unwrap()
+            .expect_err("blocked pusher must be rejected, not stuck");
+        assert_eq!(rejected.into_inner(), 11, "re-routable item recovered");
+        // The close-and-drain contract still holds for what was queued.
+        assert_eq!(q.pop_batch(8, Duration::from_millis(0)), vec![10]);
+        assert!(q.pop_batch(8, Duration::from_millis(0)).is_empty());
     }
 
     #[test]

@@ -1,0 +1,215 @@
+//! Serialized transport boundary of the fleet fabric.
+//!
+//! Typed request/response envelopes, serialized through the MELB
+//! codec's envelope framing ([`crate::util::codec::encode_envelope`])
+//! and carried between router and nodes as raw byte frames over
+//! in-process `mpsc` channels.  Every hop round-trips *bytes*, not
+//! references: the router decodes a client frame to place it, forwards
+//! the same bytes, and the node decodes them again before serving — so
+//! the fabric pays honest (de)serialization cost on every request from
+//! day one, and swapping the channel for a socket later changes no
+//! envelope code.
+//!
+//! `f32` payloads survive exactly: each entry is widened to `f64` for
+//! the MELB `Num` tag (every `f32` is exactly representable) and
+//! narrowed back on decode, so a served `y` is bit-identical across
+//! the wire.  Framing contract: `rust/DESIGN.md` §16.
+
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::util::codec::{
+    decode_envelope, encode_envelope, ENVELOPE_REQUEST, ENVELOPE_RESPONSE,
+};
+use crate::util::json::{obj, Json};
+
+/// One single-vector VMM request on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestEnvelope {
+    /// Deployed model (weight matrix) this request targets.
+    pub model: usize,
+    /// Global request id.
+    pub id: u64,
+    /// Input vector (`rows` entries).
+    pub x: Vec<f32>,
+}
+
+/// One served output on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResponseEnvelope {
+    /// Echo of the request id.
+    pub id: u64,
+    /// Echo of the model id.
+    pub model: usize,
+    /// Fleet node that served the request.
+    pub node: usize,
+    /// The served output vector (`cols` entries).
+    pub y: Vec<f32>,
+    /// Sum of `|y_hw - y_sw|` over this request's columns when the
+    /// node measures error; `0.0` otherwise.
+    pub err_abs_sum: f64,
+    /// Number of columns behind `err_abs_sum` (`0` when unmeasured).
+    pub err_cols: usize,
+}
+
+/// A request frame in flight inside a node: the raw bytes plus the
+/// submit timestamp the node uses for its queue+service latency
+/// telemetry (an `Instant` cannot cross a serialization boundary, so
+/// it rides next to the frame, never inside it).
+#[derive(Debug)]
+pub struct Frame {
+    /// Serialized [`RequestEnvelope`] bytes.
+    pub bytes: Vec<u8>,
+    /// When the router submitted the frame to the node's queue.
+    pub submitted: Instant,
+}
+
+fn f32_arr(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|&v| Json::Num(f64::from(v))).collect())
+}
+
+fn get_usize(v: &Json, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| Error::Parse(format!("envelope: missing/invalid '{key}'")))
+}
+
+fn get_f64(v: &Json, key: &str) -> Result<f64> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| Error::Parse(format!("envelope: missing/invalid '{key}'")))
+}
+
+fn get_f32_arr(v: &Json, key: &str) -> Result<Vec<f32>> {
+    let arr = v
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Parse(format!("envelope: missing/invalid '{key}'")))?;
+    arr.iter()
+        .map(|e| {
+            e.as_f64()
+                .map(|f| f as f32)
+                .ok_or_else(|| Error::Parse(format!("envelope: non-numeric entry in '{key}'")))
+        })
+        .collect()
+}
+
+impl RequestEnvelope {
+    /// Serialize to one MELB envelope frame.
+    pub fn encode(&self) -> Vec<u8> {
+        let payload = obj([
+            ("model", Json::Num(self.model as f64)),
+            ("id", Json::Num(self.id as f64)),
+            ("x", f32_arr(&self.x)),
+        ]);
+        encode_envelope(ENVELOPE_REQUEST, &payload)
+    }
+
+    /// Decode one request frame from the head of `bytes`, returning
+    /// the envelope and the bytes consumed.
+    pub fn decode(bytes: &[u8]) -> Result<(RequestEnvelope, usize)> {
+        let (tag, payload, used) = decode_envelope(bytes)?;
+        if tag != ENVELOPE_REQUEST {
+            return Err(Error::Parse(format!(
+                "envelope: tag {tag:#x} where a request ({ENVELOPE_REQUEST:#x}) \
+                 was expected"
+            )));
+        }
+        Ok((
+            RequestEnvelope {
+                model: get_usize(&payload, "model")?,
+                id: get_f64(&payload, "id")? as u64,
+                x: get_f32_arr(&payload, "x")?,
+            },
+            used,
+        ))
+    }
+}
+
+impl ResponseEnvelope {
+    /// Serialize to one MELB envelope frame.
+    pub fn encode(&self) -> Vec<u8> {
+        let payload = obj([
+            ("id", Json::Num(self.id as f64)),
+            ("model", Json::Num(self.model as f64)),
+            ("node", Json::Num(self.node as f64)),
+            ("y", f32_arr(&self.y)),
+            ("err_abs_sum", Json::Num(self.err_abs_sum)),
+            ("err_cols", Json::Num(self.err_cols as f64)),
+        ]);
+        encode_envelope(ENVELOPE_RESPONSE, &payload)
+    }
+
+    /// Decode one response frame from the head of `bytes`, returning
+    /// the envelope and the bytes consumed.
+    pub fn decode(bytes: &[u8]) -> Result<(ResponseEnvelope, usize)> {
+        let (tag, payload, used) = decode_envelope(bytes)?;
+        if tag != ENVELOPE_RESPONSE {
+            return Err(Error::Parse(format!(
+                "envelope: tag {tag:#x} where a response ({ENVELOPE_RESPONSE:#x}) \
+                 was expected"
+            )));
+        }
+        Ok((
+            ResponseEnvelope {
+                id: get_f64(&payload, "id")? as u64,
+                model: get_usize(&payload, "model")?,
+                node: get_usize(&payload, "node")?,
+                y: get_f32_arr(&payload, "y")?,
+                err_abs_sum: get_f64(&payload, "err_abs_sum")?,
+                err_cols: get_usize(&payload, "err_cols")?,
+            },
+            used,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip_is_bit_exact() {
+        let req = RequestEnvelope {
+            model: 3,
+            id: 41,
+            x: vec![0.1_f32, -2.5, f32::MIN_POSITIVE, 1.0 + f32::EPSILON],
+        };
+        let bytes = req.encode();
+        let (back, used) = RequestEnvelope::decode(&bytes).unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(back.model, 3);
+        assert_eq!(back.id, 41);
+        for (a, b) in back.x.iter().zip(&req.x) {
+            assert_eq!(a.to_bits(), b.to_bits(), "f32 bits must survive the wire");
+        }
+    }
+
+    #[test]
+    fn response_roundtrip_and_tag_mismatch() {
+        let resp = ResponseEnvelope {
+            id: 7,
+            model: 1,
+            node: 2,
+            y: vec![3.25, -0.5],
+            err_abs_sum: 0.125,
+            err_cols: 2,
+        };
+        let bytes = resp.encode();
+        let (back, used) = ResponseEnvelope::decode(&bytes).unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(back, resp);
+        // A response frame is not a request frame, and vice versa.
+        assert!(RequestEnvelope::decode(&bytes).is_err());
+        let req = RequestEnvelope { model: 0, id: 0, x: vec![1.0] };
+        assert!(ResponseEnvelope::decode(&req.encode()).is_err());
+    }
+
+    #[test]
+    fn truncated_frames_are_typed_errors() {
+        let bytes = RequestEnvelope { model: 0, id: 9, x: vec![1.0, 2.0] }.encode();
+        for cut in 0..bytes.len() {
+            assert!(RequestEnvelope::decode(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+    }
+}

@@ -118,6 +118,64 @@ impl Codec {
     }
 }
 
+/// Envelope tag of a fleet transport *request* frame.
+///
+/// Envelope tags live in their own range (`>= 0x10`), disjoint from
+/// the value tags of the plain document framing, so an envelope can
+/// never be mistaken for an artifact (plain [`Codec::decode`] rejects
+/// the tag) and vice versa.
+pub const ENVELOPE_REQUEST: u8 = 0x10;
+/// Envelope tag of a fleet transport *response* frame.
+pub const ENVELOPE_RESPONSE: u8 = 0x11;
+
+/// Encode one transport envelope: the `MELB` header, an envelope tag
+/// byte, then the payload value.  Unlike the document framing,
+/// envelope frames are designed to be concatenated on a stream —
+/// [`decode_envelope`] consumes exactly one frame and reports how many
+/// bytes it used.
+pub fn encode_envelope(tag: u8, payload: &Json) -> Vec<u8> {
+    debug_assert!(tag >= 0x10, "envelope tags start at 0x10");
+    let mut out = Vec::with_capacity(64);
+    out.extend_from_slice(&BINARY_MAGIC);
+    out.push(BINARY_VERSION);
+    out.push(tag);
+    encode_value(payload, &mut out);
+    out
+}
+
+/// Decode one envelope frame from the head of `bytes`, returning the
+/// envelope tag, the payload, and the number of bytes consumed (the
+/// next frame starts there).  Trailing bytes are *not* an error — this
+/// is the mid-stream entry point — but a truncated or corrupt frame is
+/// always a typed [`Error::Parse`]: the reader bounds every length
+/// against the remaining buffer, so a prefix of a valid frame can
+/// neither panic nor over-read.
+pub fn decode_envelope(bytes: &[u8]) -> Result<(u8, Json, usize)> {
+    if bytes.len() < 6 {
+        return Err(Error::Parse("melb envelope: truncated header".into()));
+    }
+    if bytes[..4] != BINARY_MAGIC {
+        return Err(Error::Parse("melb envelope: bad magic".into()));
+    }
+    let version = bytes[4];
+    if version > BINARY_VERSION {
+        return Err(Error::Parse(format!(
+            "melb envelope: framing version {version} is newer than this \
+             binary ({BINARY_VERSION})"
+        )));
+    }
+    let tag = bytes[5];
+    if tag < 0x10 {
+        return Err(Error::Parse(format!(
+            "melb envelope: value tag {tag} where an envelope tag (>= 0x10) \
+             was expected"
+        )));
+    }
+    let mut r = Reader { bytes, pos: 6 };
+    let payload = r.value(0)?;
+    Ok((tag, payload, r.pos))
+}
+
 fn encode_value(v: &Json, out: &mut Vec<u8>) {
     match v {
         Json::Null => out.push(0),
@@ -367,6 +425,60 @@ mod tests {
                 )
             }
         }
+    }
+
+    #[test]
+    fn envelope_roundtrip_and_stream_concatenation() {
+        let a = sample();
+        let b = Json::Num(42.0);
+        let mut stream = encode_envelope(ENVELOPE_REQUEST, &a);
+        let first_len = stream.len();
+        stream.extend_from_slice(&encode_envelope(ENVELOPE_RESPONSE, &b));
+        // First frame decodes in place, reporting exactly its length.
+        let (tag, payload, used) = decode_envelope(&stream).unwrap();
+        assert_eq!((tag, used), (ENVELOPE_REQUEST, first_len));
+        assert_eq!(payload, a);
+        // The reported offset is the start of the next frame.
+        let (tag2, payload2, used2) = decode_envelope(&stream[used..]).unwrap();
+        assert_eq!(tag2, ENVELOPE_RESPONSE);
+        assert_eq!(payload2, b);
+        assert_eq!(used + used2, stream.len());
+        // Envelopes and documents stay disjoint: a plain artifact is
+        // not an envelope, and an envelope is not a plain artifact.
+        assert!(decode_envelope(&Codec::Binary.encode(&a)).is_err());
+        assert!(Codec::decode(&encode_envelope(ENVELOPE_REQUEST, &a)).is_err());
+    }
+
+    #[test]
+    fn fuzz_truncated_envelopes_error_cleanly() {
+        // Seeded truncation fuzz: for random envelopes, every strict
+        // prefix of a valid frame must decode to a typed error — never
+        // a panic, an over-read, or a bogus success.
+        let mut rng = Xoshiro256::seed_from_u64(0xE57E_10FE);
+        for i in 0..64 {
+            let v = random_value(&mut rng, 0);
+            let tag = if i % 2 == 0 { ENVELOPE_REQUEST } else { ENVELOPE_RESPONSE };
+            let frame = encode_envelope(tag, &v);
+            for cut in 0..frame.len() {
+                let r = decode_envelope(&frame[..cut]);
+                assert!(r.is_err(), "prefix of length {cut} must be an error");
+            }
+            // The full frame decodes, and junk after it is ignored by
+            // the mid-stream entry point (consumed stops at the frame).
+            let mut padded = frame.clone();
+            padded.extend_from_slice(b"\xFFjunk-after-frame");
+            let (t, p, used) = decode_envelope(&padded).unwrap();
+            assert_eq!((t, used), (tag, frame.len()));
+            assert_eq!(p, v);
+        }
+        // An oversized declared length mid-stream is corrupt, not an
+        // allocation request.
+        let mut huge = Vec::from(&BINARY_MAGIC[..]);
+        huge.push(BINARY_VERSION);
+        huge.push(ENVELOPE_REQUEST);
+        huge.push(5); // arr
+        huge.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_envelope(&huge).is_err());
     }
 
     #[test]

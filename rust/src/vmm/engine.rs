@@ -142,6 +142,10 @@ impl VmmEngine for DynEngine {
     ) -> Result<(ProgrammedVmm, Vec<f32>)> {
         self.0.program_read(spec, params, x, batch)
     }
+
+    fn shard_counts(&self) -> Option<super::ShardCounts> {
+        self.0.shard_counts()
+    }
 }
 
 /// A MELISO compute backend.
@@ -211,6 +215,14 @@ pub trait VmmEngine: Send + Sync {
         let handle = self.program(spec, params)?;
         let y = handle.read(x, batch)?;
         Ok((handle, y))
+    }
+
+    /// ABFT checksum telemetry of this engine, when it maintains any —
+    /// the sharded engine snapshots its [`super::ShardStats`]; engines
+    /// without shard correction report `None`.  The fleet fabric rolls
+    /// these up per node and fleet-wide.
+    fn shard_counts(&self) -> Option<super::ShardCounts> {
+        None
     }
 }
 

@@ -485,6 +485,10 @@ impl VmmEngine for ShardedEngine {
     fn internal_parallelism(&self) -> usize {
         self.par.threads()
     }
+
+    fn shard_counts(&self) -> Option<ShardCounts> {
+        Some(self.counts())
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,181 @@
+//! Integration: the node/router fleet fabric end-to-end —
+//!
+//! * a 1-node, replication-1, no-failure fleet is bit-identical to the
+//!   single-process `run_serve` path: every served output equals a
+//!   fresh per-request reference read, and the aggregate error
+//!   telemetry agrees with `run_serve` on the same seeds;
+//! * failure injection loses nothing: the router detects dead nodes
+//!   through typed push rejections, re-routes every shed request to a
+//!   surviving replica, the survivor re-programs re-placed models on
+//!   first touch, and the outputs stay bit-identical to the
+//!   failure-free run;
+//! * per-node engines (sharded) roll honest per-node ABFT telemetry up
+//!   into the fleet report;
+//! * the `fleet-sweep` experiment runs through the registry.
+//!
+//! The determinism matrix in CI runs this file at `MELISO_THREADS=1`
+//! and `=4`: every assertion here must hold for any thread count.
+
+use std::time::Duration;
+
+use meliso::device::params::NonIdealities;
+use meliso::device::presets;
+use meliso::experiments::{registry, Ctx};
+use meliso::serve::{run_fleet, run_fleet_nodes, run_serve, FleetOptions, ServeOptions};
+use meliso::vmm::{DynEngine, NativeEngine, ShardedEngine, VmmEngine};
+
+fn serve_opts() -> ServeOptions {
+    ServeOptions {
+        clients: 4,
+        requests_per_client: 12,
+        models: 5,
+        rows: 24,
+        cols: 24,
+        queue_capacity: 16,
+        batch_max: 6,
+        window: Duration::from_micros(150),
+        workers: 2,
+        cache: true,
+        cache_capacity: 8,
+        measure_error: true,
+        ..ServeOptions::default()
+    }
+}
+
+fn fleet_opts(nodes: usize, replication: usize, fail_rate: f64) -> FleetOptions {
+    FleetOptions {
+        serve: serve_opts(),
+        nodes,
+        replication,
+        fail_rate,
+        collect_responses: true,
+        ..FleetOptions::default()
+    }
+}
+
+#[test]
+fn single_node_fleet_is_bit_identical_to_run_serve() {
+    let device = presets::ag_si().params.masked(NonIdealities::FULL);
+    let engine = DynEngine::new(NativeEngine::default());
+    let opts = fleet_opts(1, 1, 0.0);
+    let fleet = run_fleet(&engine, &device, &opts).unwrap();
+    assert_eq!(fleet.aggregate.requests, 48);
+    assert_eq!(fleet.shed, 0);
+    assert!(fleet.failed_nodes.is_empty());
+
+    // Every served output equals a fresh per-request reference read:
+    // `y` is a pure function of (spec, device, x) under the
+    // program-once contract, independent of batching, placement, or
+    // thread count — bitwise, not approximately.
+    let specs = opts.serve.model_specs();
+    let inputs = opts.serve.request_inputs();
+    let programmed: Vec<_> = specs
+        .iter()
+        .map(|s| engine.program(s, &device).unwrap())
+        .collect();
+    let responses = fleet.responses.as_ref().unwrap();
+    assert_eq!(responses.len(), 48);
+    for (id, y) in responses {
+        let model = *id as usize % opts.serve.models;
+        let x = inputs.sample(*id as usize);
+        let reference = programmed[model].read(&x, 1).unwrap();
+        assert_eq!(y, &reference, "request {id} drifted from the reference");
+    }
+
+    // Same seeds through the pre-fleet single-process driver: same
+    // requests, same physics (error telemetry agrees to f64
+    // reduction-order tolerance across differently-assembled batches).
+    let serve = run_serve(&engine, &device, &opts.serve).unwrap();
+    assert_eq!(serve.requests, fleet.aggregate.requests);
+    let (a, b) = (fleet.aggregate.mean_abs_error, serve.mean_abs_error);
+    assert!((a - b).abs() < 1e-9 + 1e-9 * a.abs(), "{a} vs {b}");
+    // One node with the cache on: between 5 (no worker races) and 10
+    // (every model double-programmed) programs, on both drivers.
+    for programs in [fleet.aggregate.programs, serve.programs] {
+        assert!((5..=10).contains(&(programs as usize)), "{programs}");
+    }
+}
+
+#[test]
+fn failure_injection_recovers_every_request() {
+    let device = presets::ag_si().params.masked(NonIdealities::FULL);
+    let engine = DynEngine::new(NativeEngine::default());
+
+    let calm = run_fleet(&engine, &device, &fleet_opts(2, 1, 0.0)).unwrap();
+    let stormy = run_fleet(&engine, &device, &fleet_opts(2, 1, 1.0)).unwrap();
+
+    // Exactly one of the two nodes dies (fail_rate 1.0, one survivor
+    // always kept), mid-stream by the seeded plan.
+    assert_eq!(stormy.failed_nodes.len(), 1);
+    let dead = stormy.failed_nodes[0];
+    assert!(!stormy.nodes[dead].alive);
+
+    // Zero lost requests: every request is served to completion, shed
+    // ones re-routed to the survivor.
+    assert_eq!(stormy.aggregate.requests, 48);
+    let responses = stormy.responses.as_ref().unwrap();
+    assert_eq!(responses.len(), 48);
+    let by_node: usize = stormy.nodes.iter().map(|n| n.requests).sum();
+    assert_eq!(by_node, 48, "every request served by exactly one node");
+
+    // The victim is the heaviest model owner and the threshold fires
+    // before the stream ends, so the recovery path is genuinely
+    // exercised: typed rejections detected and re-routed (shed), and
+    // the victim's models re-programmed on the survivor.
+    assert!(stormy.shed >= 1, "no push ever hit the dead node");
+    assert!(stormy.recovered_models >= 1);
+    // Re-programming on the survivor costs extra programming cycles
+    // over the failure-free run's per-node maximum.
+    assert!(stormy.aggregate.programs >= stormy.recovered_models);
+
+    // Recovery changes where requests are served, never what they
+    // return: outputs are bit-identical to the failure-free fleet.
+    assert_eq!(calm.aggregate.requests, 48);
+    assert_eq!(calm.shed, 0);
+    let calm_responses = calm.responses.as_ref().unwrap();
+    assert_eq!(calm_responses, responses, "failure changed served outputs");
+}
+
+#[test]
+fn per_node_engines_roll_up_shard_telemetry() {
+    let device = presets::ag_si().params.masked(NonIdealities::FULL);
+    let opts = fleet_opts(2, 2, 0.0);
+    let engines: Vec<DynEngine> = (0..2)
+        .map(|_| DynEngine::new(ShardedEngine::new(2, 2)))
+        .collect();
+    let r = run_fleet_nodes(engines, &device, &opts).unwrap();
+    assert_eq!(r.aggregate.requests, 48);
+    assert_eq!(r.replication, 2);
+    // Distinct per-node engines: every node carries its own ABFT
+    // counters and the fleet report sums them.
+    for n in &r.nodes {
+        assert!(n.shard.is_some(), "sharded node {} lost its counters", n.id);
+    }
+    // The fleet rollup is exactly the sum of the per-node deltas.
+    let fleet_shard = r.shard.expect("fleet-wide shard rollup");
+    let summed: u64 = r.nodes.iter().map(|n| n.shard.unwrap().detected).sum();
+    assert_eq!(fleet_shard.detected, summed);
+    assert_eq!(fleet_shard.injected, 0, "no faults injected");
+    // Replication 2 over 2 nodes: every model lives on both, so each
+    // node programs every model it actually served.
+    assert!(r.aggregate.programs as usize >= opts.serve.models);
+}
+
+#[test]
+fn fleet_sweep_experiment_runs_through_registry() {
+    let dir = std::env::temp_dir().join("meliso_it_fleet_sweep");
+    let _ = std::fs::remove_dir_all(&dir);
+    let ctx = Ctx::native(4, &dir);
+    let s = registry::run_by_id("fleet-sweep", &ctx).unwrap();
+    let rows = s.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 9); // n1: 1 cell; n2, n3: 4 cells each
+    for row in rows {
+        // Zero lost requests in every cell, failure legs included.
+        assert_eq!(row.get("requests").unwrap().as_f64(), Some(12.0));
+        let thr = row.get("throughput_req_s").unwrap().as_f64().unwrap();
+        assert!(thr.is_finite() && thr > 0.0);
+    }
+    assert!(dir.join("fleet-sweep/series.csv").exists());
+    assert!(dir.join("fleet-sweep/summary.json").exists());
+    let _ = std::fs::remove_dir_all(dir);
+}

@@ -9,6 +9,7 @@ use meliso::device::params::DeviceParams;
 use meliso::device::presets;
 use meliso::device::pulse::pulse_curve;
 use meliso::mitigation::{MitigatedEngine, MitigationConfig};
+use meliso::serve::Placement;
 use meliso::shard::{ChecksumCode, Verdict};
 use meliso::stats::fit::Normal;
 use meliso::stats::moments::Moments;
@@ -436,6 +437,108 @@ fn prop_kernel_matches_reference() {
         kernel::read_reference(&plane, rows, cols, &x, &mut yr);
         y.iter().zip(&yr).all(|(a, b)| a.to_bits() == b.to_bits())
     });
+}
+
+#[test]
+fn prop_placement_assign_is_deterministic_with_full_replication() {
+    // Router placement is a pure function of `(nodes, replication,
+    // digest)`: two independently built rings agree on every
+    // assignment (so every thread/worker computes the same replica
+    // set), and each digest maps to exactly
+    // `min(replication, live)` *distinct, live* nodes.
+    let s = Tuple3(
+        UsizeIn { lo: 1, hi: 9 },
+        UsizeIn { lo: 1, hi: 4 },
+        UsizeIn { lo: 0, hi: 1 << 16 },
+    );
+    check(cfg(64, 36), &s, |&(nodes, replication, seed)| {
+        let a = Placement::new(nodes, replication);
+        let b = Placement::new(nodes, replication);
+        let mut rng = Xoshiro256::seed_from_u64(seed as u64 ^ 0x9_F1EE);
+        for _ in 0..32 {
+            let digest = rng.next_u64();
+            let ra = a.assign(digest);
+            if ra != b.assign(digest) || ra != a.assign(digest) {
+                return false;
+            }
+            if ra.len() != replication.min(nodes) {
+                return false;
+            }
+            let mut sorted = ra.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if sorted.len() != ra.len() || !ra.iter().all(|&n| a.is_alive(n)) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_placement_failure_only_replaces_affected_digests() {
+    // Consistent hashing's minimal-disruption contract: killing one
+    // node re-places only the digests whose replica set contained it.
+    // Every other digest keeps its assignment bit-for-bit, so a node
+    // failure never forces a survivor to re-program models it already
+    // held.  Digests that did live on the victim keep their surviving
+    // replicas (in order) and only append new ones.
+    let s = Tuple3(
+        UsizeIn { lo: 2, hi: 9 },
+        UsizeIn { lo: 1, hi: 4 },
+        UsizeIn { lo: 0, hi: 1 << 16 },
+    );
+    check(cfg(64, 37), &s, |&(nodes, replication, seed)| {
+        let mut rng = Xoshiro256::seed_from_u64(seed as u64 ^ 0xDEAD_0A11);
+        let victim = rng.below(nodes as u64) as usize;
+        let before = Placement::new(nodes, replication);
+        let mut after = before.clone();
+        after.fail(victim);
+        if after.live() != nodes - 1 || after.is_alive(victim) {
+            return false;
+        }
+        for _ in 0..32 {
+            let digest = rng.next_u64();
+            let old = before.assign(digest);
+            let new = after.assign(digest);
+            if old.contains(&victim) {
+                // Survivors keep their spots; replacements only append.
+                let kept: Vec<usize> =
+                    old.iter().copied().filter(|&n| n != victim).collect();
+                if new.len() < kept.len()
+                    || new[..kept.len()] != kept[..]
+                    || new.contains(&victim)
+                {
+                    return false;
+                }
+            } else if new != old {
+                return false; // untouched digests must not move
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_placement_spreads_models_across_live_nodes() {
+    // The ring's virtual points keep placement from collapsing: over a
+    // few hundred random digests, every live node of a small fleet
+    // owns at least one primary replica — no node sits idle while the
+    // others melt, for any fleet size in range.
+    check2(
+        cfg(32, 38),
+        &UsizeIn { lo: 1, hi: 6 },
+        &UsizeIn { lo: 0, hi: 1 << 16 },
+        |&nodes, &seed| {
+            let p = Placement::new(nodes, 1);
+            let mut hit = vec![false; nodes];
+            let mut rng = Xoshiro256::seed_from_u64(seed as u64 ^ 0x5B_0BAD);
+            for _ in 0..512 {
+                hit[p.assign(rng.next_u64())[0]] = true;
+            }
+            hit.iter().all(|&h| h)
+        },
+    );
 }
 
 #[test]

@@ -18,6 +18,7 @@
 //!              [--queue-cap N] [--serve-workers N] [--serve-cache on|off]
 //! meliso fleet-bench [--device ID] [--fleet-nodes N] [--replication N]
 //!              [--fail-rate F] [--fail-seed N] [+ serve-bench flags]
+//! meliso metrics [--device ID]                     # telemetry snapshot demo
 //! meliso warmup                                    # precompile artifacts
 //! ```
 
@@ -50,6 +51,7 @@ pub enum Command {
     Infer { device: String },
     ServeBench { device: String },
     FleetBench { device: String },
+    Metrics { device: String },
     Warmup,
     Help,
     Version,
@@ -90,6 +92,10 @@ COMMANDS:
                              <out>/fleet-bench/{summary,BENCH}.json
                              (e.g. `meliso fleet-bench --fleet-nodes 3
                              --replication 2 --fail-rate 0.5`)
+  metrics [--device ID]      Run a small instrumented serving workload and
+                             print the unified telemetry snapshot (counter
+                             table + per-stage latency breakdown); writes
+                             <out>/metrics/METRICS.{json,melb}
   warmup                     Precompile all XLA artifacts
   help, version
 
@@ -149,6 +155,10 @@ OPTIONS:
   --fail-rate <F>                  fleet-bench: failure-injection intensity
                                    in [0, 1] (0 = off) [default: 0]
   --fail-seed <N>                  fleet-bench: failure-point seed
+  --obs                            Enable the unified telemetry registry for
+                                   the run: serve-bench/fleet-bench print a
+                                   per-stage latency breakdown and write
+                                   METRICS.{json,melb} next to their summaries
   --config <FILE>                  TOML config file (CLI flags override)
   --quiet                          Suppress terminal tables
 ";
@@ -165,7 +175,7 @@ impl Args {
         let mut flags: Vec<(String, Option<String>)> = Vec::new();
         while let Some(tok) = it.next() {
             if let Some(name) = tok.strip_prefix("--") {
-                let needs_value = !matches!(name, "quiet" | "deploy");
+                let needs_value = !matches!(name, "quiet" | "deploy" | "obs");
                 let value = if needs_value {
                     Some(it.next().ok_or_else(|| {
                         Error::Config(format!("flag --{name} needs a value"))
@@ -234,6 +244,7 @@ impl Args {
                 }
                 "quiet" => config.quiet = true,
                 "deploy" => config.pipeline.deploy = true,
+                "obs" => config.obs.enabled = true,
                 "clients" => {
                     config.serve.clients = parse_positive(name, req(name, v)?)?;
                 }
@@ -336,6 +347,9 @@ impl Args {
                 device: flag("device").unwrap_or_else(|| "ag-si".into()),
             },
             "fleet-bench" => Command::FleetBench {
+                device: flag("device").unwrap_or_else(|| "ag-si".into()),
+            },
+            "metrics" => Command::Metrics {
                 device: flag("device").unwrap_or_else(|| "ag-si".into()),
             },
             "warmup" => Command::Warmup,
@@ -563,6 +577,23 @@ mod tests {
         assert!(parse("fleet-bench --replication 0").is_err());
         assert!(parse("fleet-bench --fail-rate 1.5").is_err());
         assert!(parse("fleet-bench --fail-rate often").is_err());
+    }
+
+    #[test]
+    fn parses_metrics_and_obs_flag() {
+        let a = parse("metrics").unwrap();
+        assert_eq!(a.command, Command::Metrics { device: "ag-si".into() });
+        assert!(!a.config.obs.enabled, "metrics enables obs itself at run time");
+        let a = parse("metrics --device epiram --out tele").unwrap();
+        assert_eq!(a.command, Command::Metrics { device: "epiram".into() });
+        assert_eq!(a.config.out_dir, std::path::PathBuf::from("tele"));
+        // --obs is a boolean flag on any command.
+        let a = parse("serve-bench --obs --clients 2").unwrap();
+        assert!(a.config.obs.enabled);
+        assert_eq!(a.config.serve.clients, 2);
+        let a = parse("fleet-bench --obs").unwrap();
+        assert!(a.config.obs.enabled);
+        assert!(!parse("serve-bench").unwrap().config.obs.enabled);
     }
 
     #[test]

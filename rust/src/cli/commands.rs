@@ -5,6 +5,7 @@ use crate::device::params::NonIdealities;
 use crate::device::presets;
 use crate::error::{Error, Result};
 use crate::experiments::{registry, Ctx};
+use crate::obs::{self, CounterId, GaugeId, MetricsSnapshot, Stage};
 use crate::perf;
 use crate::pipeline::{NetworkSpec, PipelineOptions, PipelineRunner};
 use crate::report::table::{fnum, TextTable};
@@ -55,6 +56,7 @@ pub fn dispatch(args: &Args) -> Result<i32> {
         Command::Infer { device } => infer(args, device),
         Command::ServeBench { device } => serve_bench(args, device),
         Command::FleetBench { device } => fleet_bench(args, device),
+        Command::Metrics { device } => metrics(args, device),
         Command::Warmup => warmup(),
     }
 }
@@ -413,6 +415,154 @@ fn infer(args: &Args, device_id: &str) -> Result<i32> {
     Ok(0)
 }
 
+/// RAII capture of the global metrics registry for one instrumented
+/// command run: reset + enable on construction, disable + reset on
+/// drop (so an error path never leaks an enabled gate into later
+/// work), [`ObsCapture::finish`] to take the snapshot.  Holds the
+/// registry serialization lock for the duration — uncontended in the
+/// CLI binary, and inside the library's test binary it keeps
+/// dispatch-level tests from interleaving with other gate-flipping
+/// tests (which is also why those tests must *not* take
+/// `obs::test_lock` themselves around `dispatch`).
+struct ObsCapture {
+    _guard: std::sync::MutexGuard<'static, ()>,
+}
+
+impl ObsCapture {
+    fn start() -> Self {
+        let guard = obs::test_lock();
+        obs::registry().reset();
+        obs::set_enabled(true);
+        Self { _guard: guard }
+    }
+
+    /// Stop collection and return everything recorded since `start`.
+    fn finish(self) -> MetricsSnapshot {
+        obs::set_enabled(false);
+        obs::registry().snapshot()
+    }
+}
+
+impl Drop for ObsCapture {
+    fn drop(&mut self) {
+        obs::set_enabled(false);
+        obs::registry().reset();
+    }
+}
+
+/// Render the per-stage latency breakdown from a metrics snapshot:
+/// count, exact mean, bucketed p50/p95/p99 (log2 semantics, DESIGN.md
+/// §17), exact total, and each stage's share of all recorded stage
+/// time.  Empty stages are omitted — a serve run has no transport hop,
+/// a fleet run no pipeline layers.
+fn stage_breakdown_table(snap: &MetricsSnapshot) -> TextTable {
+    let total = snap.stage_sum_ns() as f64;
+    let mut t = TextTable::new([
+        "stage", "count", "mean ms", "p50 ms", "p95 ms", "p99 ms", "total ms", "share",
+    ])
+    .with_title("Per-stage latency breakdown");
+    for stage in Stage::ALL {
+        let h = snap.stage(stage);
+        if h.is_empty() {
+            continue;
+        }
+        t.push([
+            stage.name().to_string(),
+            h.count.to_string(),
+            fnum(h.mean_ns() / 1e6),
+            fnum(h.percentile_ms(50.0)),
+            fnum(h.percentile_ms(95.0)),
+            fnum(h.percentile_ms(99.0)),
+            fnum(h.sum as f64 / 1e6),
+            format!("{:.1}%", 100.0 * h.sum as f64 / total),
+        ]);
+    }
+    t
+}
+
+/// Write a snapshot in both artifact framings next to a command's
+/// other outputs: pretty `METRICS.json` plus the single-frame MELB
+/// twin under the metrics envelope tag.
+fn write_metrics_artifacts(snap: &MetricsSnapshot, dir: &std::path::Path) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join("METRICS.json"), snap.to_json().to_string_pretty())?;
+    std::fs::write(dir.join("METRICS.melb"), snap.encode_melb())?;
+    Ok(())
+}
+
+/// `meliso metrics`: run a small instrumented serving workload and
+/// print the unified telemetry snapshot — every registry counter and
+/// gauge plus the per-stage latency breakdown — then export it through
+/// the artifact codec as `<out>/metrics/METRICS.{json,melb}`.  One
+/// command exercises queue-wait, coalesce, cache lookup, program, and
+/// read, so CI can smoke the whole observability spine.
+fn metrics(args: &Args, device_id: &str) -> Result<i32> {
+    let ctx = Ctx::from_config(&args.config)?;
+    let (device, device_label) = match args.config.custom_device {
+        Some(d) => (d, "custom".to_string()),
+        None => {
+            let preset = presets::by_id(device_id)
+                .ok_or_else(|| Error::Config(format!("unknown device '{device_id}'")))?;
+            (preset.params.masked(NonIdealities::FULL), preset.id.to_string())
+        }
+    };
+    // A pinned small workload (not the serve flags): the command is a
+    // telemetry smoke, so its cost must stay trivial and its counter
+    // deltas predictable.
+    let opts = ServeOptions {
+        clients: 4,
+        requests_per_client: 16,
+        models: 3,
+        rows: 32,
+        cols: 32,
+        queue_capacity: 16,
+        batch_max: 8,
+        window: std::time::Duration::from_micros(200),
+        workers: 2,
+        cache: true,
+        cache_capacity: 8,
+        measure_error: true,
+        seed: args.config.seed,
+        ..ServeOptions::default()
+    };
+    let capture = ObsCapture::start();
+    let report = run_serve(&ctx.engine, &device, &opts)?;
+    let snap = capture.finish();
+
+    let w = ctx.writer("metrics");
+    let mut t = TextTable::new(["metric", "value"]).with_title(format!(
+        "Telemetry counters: {} models of {}x{} on {} (engine={})",
+        opts.models,
+        opts.rows,
+        opts.cols,
+        device_label,
+        ctx.engine_name(),
+    ));
+    for id in CounterId::ALL {
+        t.push([id.name().to_string(), snap.counter(id).to_string()]);
+    }
+    for id in GaugeId::ALL {
+        t.push([format!("{} (gauge)", id.name()), snap.gauge(id).to_string()]);
+    }
+    w.echo(&t.render());
+    w.echo(&stage_breakdown_table(&snap).render());
+    w.echo(&format!(
+        "end-to-end: {} requests in {:.3}s ({:.0} req/s); stage-accounted {:.3}s",
+        report.requests,
+        report.wall_secs,
+        report.throughput,
+        snap.stage_sum_ns() as f64 / 1e9,
+    ));
+    write_metrics_artifacts(&snap, w.dir())?;
+    if !args.config.quiet {
+        eprintln!(
+            "wrote telemetry snapshot to {}/METRICS.json (+ binary twin METRICS.melb)",
+            w.dir().display()
+        );
+    }
+    Ok(0)
+}
+
 /// `meliso serve-bench`: run the request-serving simulation (simulated
 /// clients -> bounded queue -> batched scheduler over the programmed-
 /// crossbar cache) on the configured engine and report latency,
@@ -448,7 +598,11 @@ fn serve_bench(args: &Args, device_id: &str) -> Result<i32> {
         seed: args.config.seed,
         ..ServeOptions::default()
     };
+    // `--obs`: bracket the run with the registry capture so the
+    // exported snapshot holds exactly this run's activity.
+    let capture = args.config.obs.enabled.then(ObsCapture::start);
     let report = run_serve(&ctx.engine, &device, &opts)?;
+    let telemetry = capture.map(ObsCapture::finish);
 
     let mut t = TextTable::new(["metric", "value"]).with_title(format!(
         "Request serving: {} models of {}x{} on {} (engine={}, cache={})",
@@ -480,6 +634,10 @@ fn serve_bench(args: &Args, device_id: &str) -> Result<i32> {
     ]);
     let w = ctx.writer("serve-bench");
     w.echo(&t.render());
+    if let Some(snap) = &telemetry {
+        w.echo(&stage_breakdown_table(snap).render());
+        write_metrics_artifacts(snap, w.dir())?;
+    }
     w.json(
         "summary",
         &obj([
@@ -583,7 +741,11 @@ fn fleet_bench(args: &Args, device_id: &str) -> Result<i32> {
         fail_seed: f.fail_seed,
         collect_responses: false,
     };
+    // `--obs`: the fleet path additionally exercises the transport
+    // encode/decode stages, so its breakdown shows the full taxonomy.
+    let capture = args.config.obs.enabled.then(ObsCapture::start);
     let report = run_fleet(&ctx.engine, &device, &opts)?;
+    let telemetry = capture.map(ObsCapture::finish);
     let agg = &report.aggregate;
 
     let mut t = TextTable::new(["metric", "value"]).with_title(format!(
@@ -626,6 +788,10 @@ fn fleet_bench(args: &Args, device_id: &str) -> Result<i32> {
     ]);
     let w = ctx.writer("fleet-bench");
     w.echo(&t.render());
+    if let Some(snap) = &telemetry {
+        w.echo(&stage_breakdown_table(snap).render());
+        write_metrics_artifacts(snap, w.dir())?;
+    }
     let mut node_t = TextTable::new([
         "node", "alive", "requests", "batches", "programs", "p99 ms", "bytes in/out",
     ])
@@ -859,6 +1025,95 @@ mod tests {
         // Unknown device is a clean config error.
         let args = parse(&["fleet-bench", "--device", "unobtainium", "--quiet"]);
         assert!(dispatch(&args).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn metrics_writes_snapshot_artifacts() {
+        // NOTE: no `obs::test_lock` here — dispatch's ObsCapture takes
+        // it; a second acquisition in the same thread would deadlock.
+        let dir = std::env::temp_dir().join("meliso_metrics_cli_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let args = parse(&[
+            "metrics",
+            "--device",
+            "epiram",
+            "--quiet",
+            "--out",
+            dir.to_str().unwrap(),
+        ]);
+        assert_eq!(dispatch(&args).unwrap(), 0);
+        let text = std::fs::read_to_string(dir.join("metrics/METRICS.json")).unwrap();
+        let doc = crate::util::json::Json::parse(&text).unwrap();
+        let snap = MetricsSnapshot::from_json(&doc).unwrap();
+        // `>=`: while the capture gate is on, parallel tests traversing
+        // instrumented paths may also record — exact accounting is
+        // pinned in the isolated `integration_obs` binary.
+        assert!(snap.counter(CounterId::RequestsServed) >= 64);
+        assert!(snap.stage(Stage::QueueWait).count >= 64);
+        assert!(snap.stage_sum_ns() > 0);
+        // The MELB twin decodes to the very same snapshot.
+        let melb = std::fs::read(dir.join("metrics/METRICS.melb")).unwrap();
+        assert_eq!(MetricsSnapshot::decode_melb(&melb).unwrap(), snap);
+        // Unknown device is a clean config error.
+        let args = parse(&["metrics", "--device", "unobtainium", "--quiet"]);
+        assert!(dispatch(&args).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn serve_bench_obs_writes_breakdown_artifacts() {
+        let dir = std::env::temp_dir().join("meliso_serve_bench_obs_cli_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let args = parse(&[
+            "serve-bench",
+            "--device",
+            "epiram",
+            "--obs",
+            "--clients",
+            "3",
+            "--requests",
+            "8",
+            "--models",
+            "2",
+            "--size",
+            "16",
+            "--queue-cap",
+            "8",
+            "--batch-max",
+            "4",
+            "--quiet",
+            "--out",
+            dir.to_str().unwrap(),
+        ]);
+        assert_eq!(dispatch(&args).unwrap(), 0);
+        let text = std::fs::read_to_string(dir.join("serve-bench/METRICS.json")).unwrap();
+        let snap =
+            MetricsSnapshot::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert!(snap.counter(CounterId::RequestsServed) >= 24);
+        assert!(snap.stage(Stage::Read).count >= 1);
+        let melb = std::fs::read(dir.join("serve-bench/METRICS.melb")).unwrap();
+        assert_eq!(MetricsSnapshot::decode_melb(&melb).unwrap(), snap);
+        // Without --obs no artifact appears (zero-cost default).
+        let plain = std::env::temp_dir().join("meliso_serve_bench_noobs_cli_test");
+        let _ = std::fs::remove_dir_all(&plain);
+        let args = parse(&[
+            "serve-bench",
+            "--device",
+            "epiram",
+            "--clients",
+            "2",
+            "--requests",
+            "4",
+            "--size",
+            "16",
+            "--quiet",
+            "--out",
+            plain.to_str().unwrap(),
+        ]);
+        assert_eq!(dispatch(&args).unwrap(), 0);
+        assert!(!plain.join("serve-bench/METRICS.json").exists());
+        let _ = std::fs::remove_dir_all(plain);
         let _ = std::fs::remove_dir_all(dir);
     }
 

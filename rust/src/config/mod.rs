@@ -41,6 +41,9 @@
 //! fault_level = 1.0           # stuck differential level of injections
 //! fault_seed = 7              # fault-stream seed
 //!
+//! [obs]                       # telemetry (`--obs`, `meliso metrics`)
+//! enabled = true              # global metrics registry + stage tracing
+//!
 //! [device]                    # optional custom device
 //! states = 97
 //! memory_window = 12.5
@@ -248,6 +251,16 @@ impl Default for ShardSettings {
     }
 }
 
+/// Telemetry settings (`--obs`, the `[obs]` TOML section, and the
+/// `meliso metrics` command).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ObsSettings {
+    /// Enable the global metrics registry and stage tracing for the
+    /// run ([`crate::obs`]).  Off by default: the disabled path is one
+    /// atomic load per instrumentation site.
+    pub enabled: bool,
+}
+
 /// Fully resolved run configuration.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -278,6 +291,8 @@ pub struct RunConfig {
     pub serve: ServeSettings,
     /// Fleet-fabric settings (`meliso fleet-bench`).
     pub fleet: FleetSettings,
+    /// Telemetry settings (`--obs` / `[obs]`).
+    pub obs: ObsSettings,
     pub quiet: bool,
     /// Optional custom device overriding the presets.
     pub custom_device: Option<DeviceParams>,
@@ -299,6 +314,7 @@ impl Default for RunConfig {
             shard: ShardSettings::default(),
             serve: ServeSettings::default(),
             fleet: FleetSettings::default(),
+            obs: ObsSettings::default(),
             quiet: false,
             custom_device: None,
         }
@@ -548,6 +564,11 @@ impl RunConfig {
                 .ok_or_else(|| Error::Config("fleet.fail_seed must be an int".into()))?
                 as u64;
         }
+        if let Some(v) = doc.get("obs", "enabled") {
+            cfg.obs.enabled = v
+                .as_bool()
+                .ok_or_else(|| Error::Config("obs.enabled must be a bool".into()))?;
+        }
         if doc.tables.contains_key("device") {
             cfg.custom_device = Some(parse_device(&doc)?);
         }
@@ -747,6 +768,14 @@ sigma_c2c = 0.035
         assert!(RunConfig::from_toml("[fleet]\nreplication = -1\n").is_err());
         assert!(RunConfig::from_toml("[fleet]\nfail_rate = 1.5\n").is_err());
         assert!(RunConfig::from_toml("[fleet]\nfail_seed = \"x\"\n").is_err());
+    }
+
+    #[test]
+    fn obs_section_parses() {
+        let c = RunConfig::from_toml("[obs]\nenabled = true\n").unwrap();
+        assert!(c.obs.enabled);
+        assert!(!RunConfig::default().obs.enabled, "telemetry is opt-in");
+        assert!(RunConfig::from_toml("[obs]\nenabled = 1\n").is_err());
     }
 
     #[test]

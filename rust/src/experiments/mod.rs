@@ -9,6 +9,7 @@ pub mod fig4;
 pub mod fig5;
 pub mod fleet;
 pub mod mitigation;
+pub mod obs;
 pub mod pipeline;
 pub mod registry;
 pub mod serve;

@@ -1,0 +1,187 @@
+//! Extension experiment `obs-overhead`: what the unified telemetry
+//! spine costs the serving hot path, measured by running the same
+//! seeded workload with the registry gate off and on, plus the enabled
+//! run's per-stage breakdown and counter snapshot.
+//!
+//! Both legs serve identical requests through identical physics, so
+//! the error columns must agree (telemetry never perturbs results —
+//! the invariant the bit-identity proptests pin down); only the wall
+//! time may move, and the `integration_obs` perf test bounds that
+//! movement at 10% on the hot read path.
+
+use std::time::Duration;
+
+use crate::device::params::NonIdealities;
+use crate::device::presets;
+use crate::error::Result;
+use crate::obs::{self, CounterId, Stage};
+use crate::report::table::{fnum, TextTable};
+use crate::serve::{run_serve, ServeOptions};
+use crate::util::csv::CsvTable;
+use crate::util::json::{obj, Json};
+
+use super::context::Ctx;
+
+/// Passes per leg; the minimum wall time is the quoted cost — the same
+/// contention-robust estimator as the perf suite (a descheduled
+/// quantum inflates individual passes on either side).
+pub const PASSES: usize = 3;
+
+fn workload(ctx: &Ctx) -> ServeOptions {
+    ServeOptions {
+        clients: 4,
+        requests_per_client: ctx.population.clamp(8, 32),
+        models: 2,
+        rows: crate::ROWS,
+        cols: crate::COLS,
+        queue_capacity: 32,
+        batch_max: 8,
+        window: Duration::from_micros(100),
+        workers: 2,
+        cache: true,
+        cache_capacity: 8,
+        measure_error: true,
+        seed: ctx.seed,
+        ..ServeOptions::default()
+    }
+}
+
+/// Run the overhead comparison.
+pub fn run(ctx: &Ctx) -> Result<Json> {
+    let w = ctx.writer("obs-overhead");
+    let device = presets::ag_si().params.masked(NonIdealities::FULL);
+    let opts = workload(ctx);
+
+    // The gate is process-wide: serialize against other gate-flipping
+    // code and leave the registry disabled and empty on exit.
+    let _guard = obs::test_lock();
+    obs::set_enabled(false);
+    let mut off_secs = f64::INFINITY;
+    let mut off_report = None;
+    for _ in 0..PASSES {
+        let r = run_serve(&ctx.engine, &device, &opts)?;
+        off_secs = off_secs.min(r.wall_secs);
+        off_report = Some(r);
+    }
+    obs::set_enabled(true);
+    let mut on_secs = f64::INFINITY;
+    let mut on_report = None;
+    for _ in 0..PASSES {
+        // Reset per pass so the final snapshot holds exactly one
+        // pass's activity, directly comparable to the report.
+        obs::registry().reset();
+        let r = run_serve(&ctx.engine, &device, &opts)?;
+        on_secs = on_secs.min(r.wall_secs);
+        on_report = Some(r);
+    }
+    obs::set_enabled(false);
+    let snap = obs::registry().snapshot();
+    obs::registry().reset();
+    let off_report = off_report.expect("PASSES >= 1");
+    let on_report = on_report.expect("PASSES >= 1");
+    let ratio = on_secs / off_secs;
+
+    let mut t = TextTable::new(["metric", "value"]).with_title(format!(
+        "Telemetry overhead: {} requests of {}x{} per pass, {PASSES} passes per leg \
+         (engine={})",
+        on_report.requests,
+        opts.rows,
+        opts.cols,
+        ctx.engine_name(),
+    ));
+    t.push(["obs off, min wall (s)", &fnum(off_secs)]);
+    t.push(["obs on, min wall (s)", &fnum(on_secs)]);
+    t.push(["overhead ratio", &fnum(ratio)]);
+    t.push(["mean |e| (off)", &fnum(off_report.mean_abs_error)]);
+    t.push(["mean |e| (on)", &fnum(on_report.mean_abs_error)]);
+    t.push([
+        "stage-accounted (s)",
+        &fnum(snap.stage_sum_ns() as f64 / 1e9),
+    ]);
+    w.echo(&t.render());
+
+    let total_ns = snap.stage_sum_ns() as f64;
+    let mut csv = CsvTable::new([
+        "stage", "count", "mean_ns", "p50_ms", "p95_ms", "p99_ms", "total_ns", "share",
+    ]);
+    let mut stage_rows = Vec::new();
+    for stage in Stage::ALL {
+        let h = snap.stage(stage);
+        if h.is_empty() {
+            continue;
+        }
+        let share = h.sum as f64 / total_ns;
+        csv.push([
+            stage.name().to_string(),
+            h.count.to_string(),
+            h.mean_ns().to_string(),
+            h.percentile_ms(50.0).to_string(),
+            h.percentile_ms(95.0).to_string(),
+            h.percentile_ms(99.0).to_string(),
+            h.sum.to_string(),
+            share.to_string(),
+        ]);
+        stage_rows.push(obj([
+            ("stage", Json::Str(stage.name().into())),
+            ("count", Json::Num(h.count as f64)),
+            ("mean_ns", Json::Num(h.mean_ns())),
+            ("p99_ms", Json::Num(h.percentile_ms(99.0))),
+            ("total_ns", Json::Num(h.sum as f64)),
+            ("share", Json::Num(share)),
+        ]));
+    }
+    w.csv("series", &csv)?;
+
+    let summary = obj([
+        ("id", Json::Str("obs-overhead".into())),
+        ("passes", Json::Num(PASSES as f64)),
+        ("requests", Json::Num(on_report.requests as f64)),
+        ("off_min_wall_secs", Json::Num(off_secs)),
+        ("on_min_wall_secs", Json::Num(on_secs)),
+        ("overhead_ratio", Json::Num(ratio)),
+        ("off_mean_abs_error", Json::Num(off_report.mean_abs_error)),
+        ("on_mean_abs_error", Json::Num(on_report.mean_abs_error)),
+        (
+            "requests_served",
+            Json::Num(snap.counter(CounterId::RequestsServed) as f64),
+        ),
+        ("stages", Json::Arr(stage_rows)),
+        ("snapshot", snap.to_json()),
+    ]);
+    w.json("summary", &summary)?;
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::MetricsSnapshot;
+
+    #[test]
+    fn overhead_experiment_reports_both_legs_and_a_parsable_snapshot() {
+        let dir = std::env::temp_dir().join("meliso_obs_overhead_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ctx = Ctx::native(8, &dir);
+        let s = run(&ctx).unwrap();
+        let num = |k: &str| s.get(k).unwrap().as_f64().unwrap();
+        assert_eq!(num("requests"), 32.0); // 4 clients x 8 requests
+        assert!(num("off_min_wall_secs") > 0.0);
+        assert!(num("on_min_wall_secs") > 0.0);
+        assert!(num("overhead_ratio").is_finite() && num("overhead_ratio") > 0.0);
+        // Telemetry never perturbs results: both legs serve the same
+        // seeded physics, so the error columns agree to reduction
+        // tolerance.
+        let (a, b) = (num("off_mean_abs_error"), num("on_mean_abs_error"));
+        assert!((a - b).abs() < 1e-9 + 1e-9 * a.abs(), "{a} vs {b}");
+        // The embedded snapshot parses and saw the run (`>=`: parallel
+        // tests traversing instrumented paths may also have recorded
+        // while the gate was on).
+        let snap = MetricsSnapshot::from_json(s.get("snapshot").unwrap()).unwrap();
+        assert!(snap.counter(CounterId::RequestsServed) >= 32);
+        assert!(snap.stage(Stage::QueueWait).count >= 32);
+        assert!(!s.get("stages").unwrap().as_arr().unwrap().is_empty());
+        assert!(dir.join("obs-overhead/series.csv").exists());
+        assert!(dir.join("obs-overhead/summary.json").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

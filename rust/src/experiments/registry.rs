@@ -6,7 +6,8 @@ use crate::util::json::Json;
 
 use super::context::Ctx;
 use super::{
-    fig2, fig3, fig4, fig5, fleet, mitigation, pipeline, serve, shard, table1, table2, xtra,
+    fig2, fig3, fig4, fig5, fleet, mitigation, obs, pipeline, serve, shard, table1, table2,
+    xtra,
 };
 
 /// Experiment descriptor.
@@ -134,6 +135,12 @@ pub fn entries() -> Vec<Entry> {
             paper: false,
             run: fleet::run,
         },
+        Entry {
+            id: "obs-overhead",
+            title: "Extension: telemetry overhead and per-stage serving breakdown",
+            paper: false,
+            run: obs::run,
+        },
     ]
 }
 
@@ -205,6 +212,7 @@ mod tests {
         assert!(msg.contains("shard-sweep"), "{msg}");
         assert!(msg.contains("serve-sweep"), "{msg}");
         assert!(msg.contains("fleet-sweep"), "{msg}");
+        assert!(msg.contains("obs-overhead"), "{msg}");
         let _ = std::fs::remove_dir_all(dir);
     }
 

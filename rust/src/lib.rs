@@ -29,6 +29,7 @@ pub mod device;
 pub mod error;
 pub mod experiments;
 pub mod mitigation;
+pub mod obs;
 pub mod pipeline;
 pub mod perf;
 pub mod report;

@@ -1,0 +1,387 @@
+//! Fixed log2-bucket latency histograms with order-independent merge.
+//!
+//! A [`Histogram`] is 64 atomic buckets over `u64` nanosecond values:
+//! value `v` lands in bucket `floor(log2 v)` (bucket 0 holds `{0, 1}`),
+//! so bucket `i >= 1` covers `[2^i, 2^(i+1))` and the full `u64` range
+//! is representable with no configuration and no allocation.
+//! Percentiles are answered from the bucket's geometric-mean
+//! representative `sqrt(2) * 2^i`, which bounds the relative error of
+//! any quoted percentile by `sqrt(2)` (DESIGN.md §17) — the price of
+//! an O(1)-memory, lock-free, mergeable sketch over exact sorted
+//! samples.
+//!
+//! [`HistogramSnapshot::merge`] is element-wise addition, hence
+//! associative and commutative: a fleet rollup equals any permutation
+//! of per-node rollups bit-for-bit (proptested in
+//! `tests/proptests.rs`).  The `sum` field is an *exact* nanosecond
+//! total (not bucketed), which is what the per-stage breakdown
+//! accounting checks against end-to-end latency.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::util::json::{obj, Json};
+
+/// Number of log2 buckets — one per `u64` bit, covering every
+/// possible nanosecond duration.
+pub const BUCKETS: usize = 64;
+
+/// Lock-free concurrent histogram of `u64` values (nanoseconds by
+/// convention).  All operations are `Relaxed` atomics: each recording
+/// is an independent event on independent atomics, `fetch_add` never
+/// loses an increment at any ordering, and every exact read
+/// (snapshots for reports) happens after the recording threads are
+/// joined, which already establishes happens-before.
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    pub const fn new() -> Self {
+        const Z: AtomicU64 = AtomicU64::new(0);
+        Self { counts: [Z; BUCKETS], count: AtomicU64::new(0), sum: AtomicU64::new(0) }
+    }
+
+    /// Bucket index of a value: `floor(log2 v)`, with 0 mapping to
+    /// bucket 0 (so bucket 0 holds `{0, 1}`).
+    #[inline]
+    pub fn bucket_of(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            63 - v.leading_zeros() as usize
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.counts[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut counts = [0u64; BUCKETS];
+        for (dst, src) in counts.iter_mut().zip(self.counts.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        HistogramSnapshot {
+            counts,
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn reset(&self) {
+        for c in &self.counts {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A consistent point-in-time copy of a [`Histogram`]: plain `u64`s,
+/// mergeable, serializable.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    /// Per-bucket counts (`counts[i]` = values in `[2^i, 2^(i+1))`,
+    /// bucket 0 = `{0, 1}`).
+    pub counts: [u64; BUCKETS],
+    /// Total recorded values (`== counts.sum()`).
+    pub count: u64,
+    /// Exact (unbucketed) sum of recorded values, nanoseconds.
+    pub sum: u64,
+}
+
+impl HistogramSnapshot {
+    pub fn empty() -> Self {
+        Self { counts: [0; BUCKETS], count: 0, sum: 0 }
+    }
+
+    /// Record into a snapshot directly (single-threaded accumulation,
+    /// e.g. a collector thread folding latencies).
+    pub fn record(&mut self, v: u64) {
+        self.counts[Histogram::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+
+    pub fn record_duration(&mut self, d: Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Element-wise addition — associative and commutative, so any
+    /// rollup order produces the identical merged histogram.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (dst, src) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *dst += src;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    /// Element-wise `saturating_sub` against an earlier snapshot of
+    /// the same histogram: the activity between the two points.
+    pub fn delta_since(&self, base: &HistogramSnapshot) -> HistogramSnapshot {
+        let mut counts = [0u64; BUCKETS];
+        for i in 0..BUCKETS {
+            counts[i] = self.counts[i].saturating_sub(base.counts[i]);
+        }
+        HistogramSnapshot {
+            counts,
+            count: self.count.saturating_sub(base.count),
+            sum: self.sum.saturating_sub(base.sum),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Mean of recorded values, nanoseconds (NaN when empty) — exact,
+    /// from the unbucketed sum.
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Nearest-rank percentile, answered as the geometric-mean
+    /// representative of the bucket holding that rank (nanoseconds;
+    /// NaN when empty).  Monotone in `p`; relative error bounded by
+    /// `sqrt(2)` (see the module docs).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let p = p.clamp(0.0, 100.0);
+        let rank = ((p / 100.0) * (self.count - 1) as f64).round() as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                return Self::representative(i);
+            }
+        }
+        Self::representative(BUCKETS - 1)
+    }
+
+    /// Percentile in milliseconds — the unit every serving report
+    /// quotes.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        self.percentile(p) / 1e6
+    }
+
+    /// Geometric mean of a bucket's bounds: `sqrt(2^i * 2^(i+1))
+    /// = sqrt(2) * 2^i` (bucket 0, holding `{0, 1}`, answers 1).
+    fn representative(i: usize) -> f64 {
+        if i == 0 {
+            1.0
+        } else {
+            std::f64::consts::SQRT_2 * (i as f64).exp2()
+        }
+    }
+
+    /// JSON shape (DESIGN.md §17): exact `count`/`sum_ns` plus sparse
+    /// `[bucket, count]` pairs for the non-empty buckets.
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| Json::Arr(vec![Json::Num(i as f64), Json::Num(c as f64)]))
+            .collect();
+        obj([
+            ("count", Json::Num(self.count as f64)),
+            ("sum_ns", Json::Num(self.sum as f64)),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+
+    /// Strict parse: bucket indices must be in range and the sparse
+    /// bucket counts must total `count`, so a truncated or corrupted
+    /// document is a typed error, never a silently-wrong histogram.
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        let count = doc
+            .get("count")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| Error::Parse("histogram: missing count".into()))?
+            as u64;
+        let sum = doc
+            .get("sum_ns")
+            .and_then(Json::as_f64)
+            .filter(|s| *s >= 0.0 && s.is_finite())
+            .ok_or_else(|| Error::Parse("histogram: missing sum_ns".into()))?
+            as u64;
+        let pairs = doc
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Parse("histogram: missing buckets".into()))?;
+        let mut counts = [0u64; BUCKETS];
+        let mut total = 0u64;
+        for pair in pairs {
+            let pair = pair
+                .as_arr()
+                .filter(|p| p.len() == 2)
+                .ok_or_else(|| Error::Parse("histogram: bucket must be [index, count]".into()))?;
+            let i = pair[0]
+                .as_usize()
+                .filter(|&i| i < BUCKETS)
+                .ok_or_else(|| Error::Parse("histogram: bucket index out of range".into()))?;
+            let c = pair[1]
+                .as_usize()
+                .ok_or_else(|| Error::Parse("histogram: bad bucket count".into()))?
+                as u64;
+            counts[i] = counts[i]
+                .checked_add(c)
+                .ok_or_else(|| Error::Parse("histogram: bucket count overflow".into()))?;
+            total += c;
+        }
+        if total != count {
+            return Err(Error::Parse(format!(
+                "histogram: bucket counts total {total}, declared count {count}"
+            )));
+        }
+        Ok(Self { counts, count, sum })
+    }
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_mapping_covers_the_u64_range() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 0);
+        assert_eq!(Histogram::bucket_of(2), 1);
+        assert_eq!(Histogram::bucket_of(3), 1);
+        assert_eq!(Histogram::bucket_of(4), 2);
+        assert_eq!(Histogram::bucket_of(1 << 20), 20);
+        assert_eq!(Histogram::bucket_of((1 << 21) - 1), 20);
+        assert_eq!(Histogram::bucket_of(u64::MAX), 63);
+    }
+
+    #[test]
+    fn record_and_snapshot_are_exact_on_count_and_sum() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 2, 1000, 1 << 30] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum, 3 + 1000 + (1 << 30));
+        assert_eq!(s.counts.iter().sum::<u64>(), 5);
+        h.reset();
+        assert!(h.snapshot().is_empty());
+    }
+
+    #[test]
+    fn percentiles_are_monotone_and_error_bounded() {
+        let mut s = HistogramSnapshot::empty();
+        // 100 values spread over three decades.
+        for i in 0..100u64 {
+            s.record(1_000 + i * 10_000);
+        }
+        let (p50, p95, p99) = (s.percentile(50.0), s.percentile(95.0), s.percentile(99.0));
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        // sqrt(2) relative error bound against the exact nearest-rank
+        // answer over the raw samples.
+        let exact_p95 = 1_000.0 + 94.0 * 10_000.0;
+        let ratio = p95 / exact_p95;
+        assert!(
+            ratio <= std::f64::consts::SQRT_2 && ratio >= 1.0 / std::f64::consts::SQRT_2,
+            "p95 {p95} vs exact {exact_p95}"
+        );
+        assert!(HistogramSnapshot::empty().percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn merge_is_element_wise_addition() {
+        let mut a = HistogramSnapshot::empty();
+        let mut b = HistogramSnapshot::empty();
+        a.record(10);
+        a.record(5_000);
+        b.record(9);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+        assert_eq!(ab.count, 3);
+        assert_eq!(ab.sum, 10 + 5_000 + 9);
+        // Delta inverts merge.
+        assert_eq!(ab.delta_since(&b), a);
+    }
+
+    #[test]
+    fn json_round_trip_and_strict_rejections() {
+        let mut s = HistogramSnapshot::empty();
+        for v in [0u64, 3, 70, 70, 1 << 40] {
+            s.record(v);
+        }
+        let back = HistogramSnapshot::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        // Inconsistent declared count is rejected.
+        let mut doc = s.to_json();
+        if let Json::Obj(m) = &mut doc {
+            m.insert("count".into(), Json::Num(99.0));
+        }
+        assert!(HistogramSnapshot::from_json(&doc).is_err());
+        // Out-of-range bucket index is rejected.
+        let bad = obj([
+            ("count", Json::Num(1.0)),
+            ("sum_ns", Json::Num(1.0)),
+            (
+                "buckets",
+                Json::Arr(vec![Json::Arr(vec![Json::Num(64.0), Json::Num(1.0)])]),
+            ),
+        ]);
+        assert!(HistogramSnapshot::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn concurrent_recording_never_under_counts() {
+        // The Relaxed-ordering contract: 4 threads x 10_000 increments
+        // land exactly, because fetch_add is an atomic RMW and the
+        // join establishes the happens-before for the final read.
+        let h = Histogram::new();
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let h = &h;
+                s.spawn(move || {
+                    for i in 0..10_000u64 {
+                        h.record(t * 7 + (i % 97));
+                    }
+                });
+            }
+        });
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 40_000);
+        assert_eq!(snap.counts.iter().sum::<u64>(), 40_000);
+    }
+}

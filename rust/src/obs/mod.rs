@@ -1,0 +1,241 @@
+//! Unified telemetry: structured metrics and stage-level tracing.
+//!
+//! One registry ([`registry()`]), one stage taxonomy ([`Stage`]), one
+//! rollup semantics ([`MetricsSnapshot::merge`]) — every subsystem
+//! that used to keep ad-hoc counters (shard fault stats, program-cache
+//! hit/miss, per-node rollups, scheduler latency samples) reports
+//! through here, so `meliso metrics`, `serve-bench`, and `fleet-bench`
+//! all quote the same numbers with the same bucket semantics.
+//!
+//! Two standing invariants, both asserted by tests:
+//!
+//! * **Telemetry never perturbs results.**  Instrumentation only reads
+//!   clocks and bumps atomics; the bit-identity proptests run every
+//!   engine with observability on and off and require identical
+//!   outputs.
+//! * **Near-zero cost when disabled.**  The registry is disabled by
+//!   default; every helper below starts with one `Relaxed` load and a
+//!   branch, touching no clock and no other atomics when the gate is
+//!   off.  When enabled, the `serve-cached-128` perf test bounds the
+//!   overhead budget.
+//!
+//! Recording goes through the free functions ([`incr`], [`record`],
+//! [`time_stage`], [`stage_start`]/[`stage_end`]) so call sites stay
+//! one line.  Time comes from a [`Clock`] so tests can drive spans
+//! deterministically with a [`MockClock`].
+
+pub mod clock;
+pub mod hist;
+pub mod registry;
+pub mod snapshot;
+
+pub use clock::{Clock, MockClock, MonotonicClock};
+pub use hist::{Histogram, HistogramSnapshot, BUCKETS};
+pub use registry::{registry, Counter, CounterId, Gauge, GaugeId, Registry, Stage};
+pub use snapshot::{MetricsSnapshot, SNAPSHOT_VERSION};
+
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+/// The process-wide production clock (anchored on first use).
+static CLOCK: MonotonicClock = MonotonicClock::new();
+
+/// Nanoseconds from the process clock (monotone, arbitrary origin).
+pub fn now_ns() -> u64 {
+    CLOCK.now_ns()
+}
+
+/// Is global telemetry collection on?
+#[inline]
+pub fn enabled() -> bool {
+    registry().enabled()
+}
+
+/// Turn global telemetry collection on or off.  Tests that flip this
+/// must hold [`test_lock`] — the gate is process-wide.
+pub fn set_enabled(on: bool) {
+    registry().set_enabled(on);
+}
+
+/// Increment a registry counter by one (no-op while disabled).
+#[inline]
+pub fn incr(id: CounterId) {
+    let r = registry();
+    if r.enabled() {
+        r.counter(id).incr();
+    }
+}
+
+/// Add `n` to a registry counter (no-op while disabled).
+#[inline]
+pub fn add(id: CounterId, n: u64) {
+    let r = registry();
+    if r.enabled() {
+        r.counter(id).add(n);
+    }
+}
+
+/// Set a registry gauge (no-op while disabled).
+#[inline]
+pub fn gauge_set(id: GaugeId, v: u64) {
+    let r = registry();
+    if r.enabled() {
+        r.gauge(id).set(v);
+    }
+}
+
+/// Record a duration into a stage histogram (no-op while disabled).
+#[inline]
+pub fn record(stage: Stage, d: Duration) {
+    let r = registry();
+    if r.enabled() {
+        r.stage(stage).record_duration(d);
+    }
+}
+
+/// Record raw nanoseconds into a stage histogram (no-op while
+/// disabled).
+#[inline]
+pub fn record_ns(stage: Stage, ns: u64) {
+    let r = registry();
+    if r.enabled() {
+        r.stage(stage).record(ns);
+    }
+}
+
+/// Start a stage measurement: a clock reading while enabled, `None`
+/// while disabled.  Pair with [`stage_end`] when the span does not fit
+/// a closure (e.g. it brackets a lock region with early returns).
+#[inline]
+pub fn stage_start() -> Option<u64> {
+    if enabled() {
+        Some(now_ns())
+    } else {
+        None
+    }
+}
+
+/// Finish a measurement begun by [`stage_start`].  Tolerates the gate
+/// flipping mid-span (a `None` start records nothing).
+#[inline]
+pub fn stage_end(stage: Stage, start: Option<u64>) {
+    if let Some(t0) = start {
+        let r = registry();
+        if r.enabled() {
+            r.stage(stage).record(now_ns().saturating_sub(t0));
+        }
+    }
+}
+
+/// Time a closure as one stage span.  Generic over the return type, so
+/// fallible work passes through untouched:
+///
+/// ```ignore
+/// let out = obs::time_stage(Stage::Read, || handle.read(&input))?;
+/// ```
+#[inline]
+pub fn time_stage<T>(stage: Stage, f: impl FnOnce() -> T) -> T {
+    let start = stage_start();
+    let out = f();
+    stage_end(stage, start);
+    out
+}
+
+/// A span that records into an explicit histogram through an explicit
+/// clock on drop — the mockable building block underneath the global
+/// helpers, used directly by tests that assert exact bucket placement.
+pub struct StageSpan<'a> {
+    clock: &'a dyn Clock,
+    hist: &'a Histogram,
+    start: u64,
+}
+
+impl<'a> StageSpan<'a> {
+    pub fn start(clock: &'a dyn Clock, hist: &'a Histogram) -> Self {
+        Self { clock, hist, start: clock.now_ns() }
+    }
+}
+
+impl Drop for StageSpan<'_> {
+    fn drop(&mut self) {
+        self.hist.record(self.clock.now_ns().saturating_sub(self.start));
+    }
+}
+
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serializes tests that enable the global registry or assert on its
+/// deltas.  Cargo runs tests in parallel within a binary; without this
+/// lock, one test's instrumentation would bleed into another's
+/// snapshot.  Poisoning is ignored — the lock guards test isolation,
+/// not data integrity.
+pub fn test_lock() -> MutexGuard<'static, ()> {
+    TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_helpers_record_nothing() {
+        let _guard = test_lock();
+        set_enabled(false);
+        registry().reset();
+        incr(CounterId::CacheHits);
+        add(CounterId::BytesOut, 128);
+        gauge_set(GaugeId::QueueDepth, 9);
+        record_ns(Stage::Read, 1_000);
+        time_stage(Stage::Program, || ());
+        assert!(stage_start().is_none());
+        let s = registry().snapshot();
+        assert_eq!(s, MetricsSnapshot::empty());
+    }
+
+    #[test]
+    fn enabled_helpers_record_and_reset_clears() {
+        let _guard = test_lock();
+        registry().reset();
+        set_enabled(true);
+        incr(CounterId::RequestsServed);
+        add(CounterId::BytesIn, 64);
+        gauge_set(GaugeId::CacheEntries, 2);
+        record_ns(Stage::QueueWait, 4_096);
+        let got = time_stage(Stage::Read, || 7u32);
+        assert_eq!(got, 7);
+        let s = registry().snapshot();
+        set_enabled(false);
+        // `>=`: while the gate is on, parallel tests traversing
+        // instrumented paths may also record into the global registry —
+        // exact accounting is pinned in the isolated `integration_obs`
+        // binary.
+        assert!(s.counter(CounterId::RequestsServed) >= 1);
+        assert!(s.counter(CounterId::BytesIn) >= 64);
+        assert!(s.stage(Stage::QueueWait).count >= 1);
+        assert!(s.stage(Stage::QueueWait).sum >= 4_096);
+        assert!(s.stage(Stage::Read).count >= 1);
+        // Gate now off: nothing can record, so reset leaves an empty
+        // registry.
+        registry().reset();
+        assert_eq!(registry().snapshot(), MetricsSnapshot::empty());
+    }
+
+    #[test]
+    fn stage_span_records_exact_durations_via_mock_clock() {
+        let clock = MockClock::new();
+        let hist = Histogram::new();
+        {
+            let _span = StageSpan::start(&clock, &hist);
+            clock.advance(4_096);
+        }
+        {
+            let _span = StageSpan::start(&clock, &hist);
+            clock.advance(10);
+        }
+        let s = hist.snapshot();
+        assert_eq!(s.count, 2);
+        assert_eq!(s.sum, 4_106);
+        assert_eq!(s.counts[12], 1); // 4096 = 2^12
+        assert_eq!(s.counts[3], 1); // 10 in [8, 16)
+    }
+}

@@ -1,0 +1,390 @@
+//! The process-wide metrics registry: enum-indexed atomic counters,
+//! gauges, and per-stage histograms behind one `enabled` gate.
+//!
+//! The registry is a `const`-initialized `static` — no lazy init, no
+//! locks, no allocation.  Counter and stage identities are closed
+//! enums, so every metric access is an array index into pre-existing
+//! atomics: recording is a handful of `Relaxed` atomic ops, and the
+//! *disabled* path through the [`crate::obs`] helpers is a single
+//! relaxed load and a branch (no clock read, no atomics touched) —
+//! the zero-cost contract the serve perf test asserts.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use super::hist::Histogram;
+use super::snapshot::MetricsSnapshot;
+
+/// A monotone event counter.
+///
+/// All operations are deliberately `Ordering::Relaxed`: each
+/// increment is an independent atomic RMW on a single cell (no
+/// increment can be lost at any ordering), the counter never
+/// publishes other memory, and every read that must be exact happens
+/// after the writing threads are joined — the join is the
+/// happens-before edge, not the counter.  The `MELISO_THREADS=4`
+/// consistency tests pin this down with known workloads.
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn incr(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for Counter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_tuple("Counter").field(&self.get()).finish()
+    }
+}
+
+/// A last-value-wins level gauge (`Relaxed` for the same reasons as
+/// [`Counter`]; concurrent `set`s race benignly — a gauge is a
+/// sample, not a ledger).
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for Gauge {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_tuple("Gauge").field(&self.get()).finish()
+    }
+}
+
+/// The request-lifecycle stage taxonomy (DESIGN.md §17).  Stages are
+/// recorded at the *call sites that own the work* — never inside the
+/// engines a stage delegates to — so stage durations never nest and
+/// their sum accounts for end-to-end latency once.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Enqueue to the moment a worker starts serving the request.
+    QueueWait,
+    /// Window time spent coalescing a batch after its first request.
+    BatchCoalesce,
+    /// Program-cache probe (lock + LRU touch), hit or miss.
+    CacheLookup,
+    /// Crossbar programming on a cache miss or uncached serve (the
+    /// fused program+read path attributes the whole fused call here).
+    Program,
+    /// Programmed-crossbar read at the serve call site.
+    Read,
+    /// Envelope serialization onto the transport boundary.
+    TransportEncode,
+    /// Envelope deserialization off the transport boundary.
+    TransportDecode,
+    /// ABFT checksum verify/correct during sharded reads.
+    ShardVerify,
+    /// One layer forward inside the inference pipeline.
+    PipelineLayer,
+}
+
+impl Stage {
+    pub const COUNT: usize = 9;
+
+    /// Every stage, in lifecycle order — the single source of the
+    /// stage list for snapshots, tables, and accounting sums.
+    pub const ALL: [Stage; Self::COUNT] = [
+        Stage::QueueWait,
+        Stage::BatchCoalesce,
+        Stage::CacheLookup,
+        Stage::Program,
+        Stage::Read,
+        Stage::TransportEncode,
+        Stage::TransportDecode,
+        Stage::ShardVerify,
+        Stage::PipelineLayer,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::QueueWait => "queue_wait",
+            Stage::BatchCoalesce => "batch_coalesce",
+            Stage::CacheLookup => "cache_lookup",
+            Stage::Program => "program",
+            Stage::Read => "read",
+            Stage::TransportEncode => "transport_encode",
+            Stage::TransportDecode => "transport_decode",
+            Stage::ShardVerify => "shard_verify",
+            Stage::PipelineLayer => "pipeline_layer",
+        }
+    }
+
+    pub(crate) fn index(&self) -> usize {
+        *self as usize
+    }
+}
+
+/// Registry-wide event counters — the migrated union of the formerly
+/// ad-hoc serve/shard telemetry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CounterId {
+    RequestsServed,
+    BatchesServed,
+    CacheHits,
+    CacheMisses,
+    CacheEvictions,
+    ProgramsExecuted,
+    ReadsExecuted,
+    BytesIn,
+    BytesOut,
+    FaultsInjected,
+    FaultsDetected,
+    FaultsCorrected,
+    FaultsUncorrectable,
+    RequestsShed,
+}
+
+impl CounterId {
+    pub const COUNT: usize = 14;
+
+    pub const ALL: [CounterId; Self::COUNT] = [
+        CounterId::RequestsServed,
+        CounterId::BatchesServed,
+        CounterId::CacheHits,
+        CounterId::CacheMisses,
+        CounterId::CacheEvictions,
+        CounterId::ProgramsExecuted,
+        CounterId::ReadsExecuted,
+        CounterId::BytesIn,
+        CounterId::BytesOut,
+        CounterId::FaultsInjected,
+        CounterId::FaultsDetected,
+        CounterId::FaultsCorrected,
+        CounterId::FaultsUncorrectable,
+        CounterId::RequestsShed,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CounterId::RequestsServed => "requests_served",
+            CounterId::BatchesServed => "batches_served",
+            CounterId::CacheHits => "cache_hits",
+            CounterId::CacheMisses => "cache_misses",
+            CounterId::CacheEvictions => "cache_evictions",
+            CounterId::ProgramsExecuted => "programs_executed",
+            CounterId::ReadsExecuted => "reads_executed",
+            CounterId::BytesIn => "bytes_in",
+            CounterId::BytesOut => "bytes_out",
+            CounterId::FaultsInjected => "faults_injected",
+            CounterId::FaultsDetected => "faults_detected",
+            CounterId::FaultsCorrected => "faults_corrected",
+            CounterId::FaultsUncorrectable => "faults_uncorrectable",
+            CounterId::RequestsShed => "requests_shed",
+        }
+    }
+
+    pub(crate) fn index(&self) -> usize {
+        *self as usize
+    }
+}
+
+/// Level gauges (instantaneous values, sampled not summed).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GaugeId {
+    /// Program-cache resident entries.
+    CacheEntries,
+    /// Bounded-queue depth at the last scheduler touch.
+    QueueDepth,
+}
+
+impl GaugeId {
+    pub const COUNT: usize = 2;
+
+    pub const ALL: [GaugeId; Self::COUNT] = [GaugeId::CacheEntries, GaugeId::QueueDepth];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GaugeId::CacheEntries => "cache_entries",
+            GaugeId::QueueDepth => "queue_depth",
+        }
+    }
+
+    pub(crate) fn index(&self) -> usize {
+        *self as usize
+    }
+}
+
+/// The metrics registry: one `enabled` gate, one atomic cell per
+/// counter/gauge, one [`Histogram`] per stage.
+pub struct Registry {
+    enabled: AtomicBool,
+    counters: [Counter; CounterId::COUNT],
+    gauges: [Gauge; GaugeId::COUNT],
+    stages: [Histogram; Stage::COUNT],
+}
+
+impl Registry {
+    pub const fn new() -> Self {
+        const C: Counter = Counter::new();
+        const G: Gauge = Gauge::new();
+        const H: Histogram = Histogram::new();
+        Self {
+            enabled: AtomicBool::new(false),
+            counters: [C; CounterId::COUNT],
+            gauges: [G; GaugeId::COUNT],
+            stages: [H; Stage::COUNT],
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn counter(&self, id: CounterId) -> &Counter {
+        &self.counters[id.index()]
+    }
+
+    pub fn gauge(&self, id: GaugeId) -> &Gauge {
+        &self.gauges[id.index()]
+    }
+
+    pub fn stage(&self, id: Stage) -> &Histogram {
+        &self.stages[id.index()]
+    }
+
+    /// Zero every metric (the `enabled` gate is left as-is).
+    pub fn reset(&self) {
+        for c in &self.counters {
+            c.reset();
+        }
+        for g in &self.gauges {
+            g.reset();
+        }
+        for h in &self.stages {
+            h.reset();
+        }
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut snap = MetricsSnapshot::empty();
+        for id in CounterId::ALL {
+            snap.counters[id.index()] = self.counter(id).get();
+        }
+        for id in GaugeId::ALL {
+            snap.gauges[id.index()] = self.gauge(id).get();
+        }
+        for id in Stage::ALL {
+            snap.stages[id.index()] = self.stage(id).snapshot();
+        }
+        snap
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The process-wide registry (`const`-initialized: ready before any
+/// instrumented code can run, with no lazy-init branch on the hot
+/// path).
+static GLOBAL: Registry = Registry::new();
+
+pub fn registry() -> &'static Registry {
+    &GLOBAL
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enum_indices_match_the_all_arrays() {
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(s.index(), i, "{}", s.name());
+        }
+        for (i, c) in CounterId::ALL.iter().enumerate() {
+            assert_eq!(c.index(), i, "{}", c.name());
+        }
+        for (i, g) in GaugeId::ALL.iter().enumerate() {
+            assert_eq!(g.index(), i, "{}", g.name());
+        }
+    }
+
+    #[test]
+    fn local_registry_counts_and_resets() {
+        let r = Registry::new();
+        assert!(!r.enabled());
+        r.counter(CounterId::CacheHits).add(3);
+        r.gauge(GaugeId::QueueDepth).set(7);
+        r.stage(Stage::Read).record(1_000);
+        let s = r.snapshot();
+        assert_eq!(s.counter(CounterId::CacheHits), 3);
+        assert_eq!(s.gauge(GaugeId::QueueDepth), 7);
+        assert_eq!(s.stage(Stage::Read).count, 1);
+        r.reset();
+        let s = r.snapshot();
+        assert_eq!(s.counter(CounterId::CacheHits), 0);
+        assert_eq!(s.stage(Stage::Read).count, 0);
+    }
+
+    #[test]
+    fn concurrent_counter_increments_are_exact() {
+        // The deliberate-Relaxed contract under the thread-matrix
+        // width: 4 writers, a known per-writer workload, exact total.
+        let c = Counter::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let c = &c;
+                s.spawn(move || {
+                    for _ in 0..25_000 {
+                        c.incr();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 100_000);
+    }
+}

@@ -1,0 +1,280 @@
+//! Serializable point-in-time copies of the metrics registry.
+//!
+//! A [`MetricsSnapshot`] exports through the artifact codec in both
+//! framings: pretty JSON (`METRICS.json`) and a MELB envelope under
+//! its own tag ([`crate::util::codec::METRICS_SNAPSHOT`], disjoint
+//! from value and transport tags).  Snapshots subtract
+//! ([`MetricsSnapshot::delta_since`]) so a caller can bracket a
+//! workload and report exactly its activity, and merge
+//! (element-wise, order-independent) so fleet-wide telemetry is a
+//! fold over per-node snapshots in any order.
+
+use crate::error::{Error, Result};
+use crate::util::codec::{decode_envelope, encode_envelope, METRICS_SNAPSHOT};
+use crate::util::json::{obj, Json};
+
+use super::hist::HistogramSnapshot;
+use super::registry::{CounterId, GaugeId, Stage};
+
+/// Snapshot document schema version (DESIGN.md §17).
+pub const SNAPSHOT_VERSION: u64 = 1;
+
+/// A plain-value copy of every registry metric.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricsSnapshot {
+    pub counters: [u64; CounterId::COUNT],
+    pub gauges: [u64; GaugeId::COUNT],
+    pub stages: [HistogramSnapshot; Stage::COUNT],
+}
+
+impl MetricsSnapshot {
+    pub fn empty() -> Self {
+        const E: HistogramSnapshot = HistogramSnapshot {
+            counts: [0; super::hist::BUCKETS],
+            count: 0,
+            sum: 0,
+        };
+        Self {
+            counters: [0; CounterId::COUNT],
+            gauges: [0; GaugeId::COUNT],
+            stages: [E; Stage::COUNT],
+        }
+    }
+
+    pub fn counter(&self, id: CounterId) -> u64 {
+        self.counters[id.index()]
+    }
+
+    pub fn gauge(&self, id: GaugeId) -> u64 {
+        self.gauges[id.index()]
+    }
+
+    pub fn stage(&self, id: Stage) -> &HistogramSnapshot {
+        &self.stages[id.index()]
+    }
+
+    /// The activity between `base` (earlier) and `self` (later):
+    /// counters and stage histograms subtract (saturating), gauges are
+    /// levels and keep the later value.
+    pub fn delta_since(&self, base: &MetricsSnapshot) -> MetricsSnapshot {
+        let mut out = self.clone();
+        for i in 0..CounterId::COUNT {
+            out.counters[i] = self.counters[i].saturating_sub(base.counters[i]);
+        }
+        for i in 0..Stage::COUNT {
+            out.stages[i] = self.stages[i].delta_since(&base.stages[i]);
+        }
+        out
+    }
+
+    /// Element-wise rollup: counters and stage histograms add, gauges
+    /// add too (fleet-wide residency/depth is the sum of per-node
+    /// levels).  Associative and commutative, so any rollup order
+    /// produces the identical fleet snapshot.
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        for i in 0..CounterId::COUNT {
+            self.counters[i] += other.counters[i];
+        }
+        for i in 0..GaugeId::COUNT {
+            self.gauges[i] += other.gauges[i];
+        }
+        for i in 0..Stage::COUNT {
+            let h = other.stages[i].clone();
+            self.stages[i].merge(&h);
+        }
+    }
+
+    /// Total nanoseconds recorded across every stage — the per-stage
+    /// accounting sum the breakdown perf test checks against measured
+    /// end-to-end latency.
+    pub fn stage_sum_ns(&self) -> u64 {
+        self.stages.iter().map(|h| h.sum).sum()
+    }
+
+    /// Snapshot document (DESIGN.md §17): named counters/gauges plus a
+    /// per-stage histogram object, deterministic key order via
+    /// [`Json::Obj`].
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            CounterId::ALL
+                .iter()
+                .map(|id| (id.name().to_string(), Json::Num(self.counter(*id) as f64)))
+                .collect(),
+        );
+        let gauges = Json::Obj(
+            GaugeId::ALL
+                .iter()
+                .map(|id| (id.name().to_string(), Json::Num(self.gauge(*id) as f64)))
+                .collect(),
+        );
+        let stages = Json::Obj(
+            Stage::ALL
+                .iter()
+                .map(|id| (id.name().to_string(), self.stage(*id).to_json()))
+                .collect(),
+        );
+        obj([
+            ("version", Json::Num(SNAPSHOT_VERSION as f64)),
+            ("counters", counters),
+            ("gauges", gauges),
+            ("stages", stages),
+        ])
+    }
+
+    /// Strict parse of the snapshot document.  Unknown counter/gauge/
+    /// stage names are ignored (forward compatibility — additive
+    /// metrics never bump the version), missing ones read as zero, but
+    /// a wrong version or a malformed histogram is a typed error.
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        let version = doc
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| Error::Parse("metrics snapshot: missing version".into()))?
+            as u64;
+        if version > SNAPSHOT_VERSION {
+            return Err(Error::Parse(format!(
+                "metrics snapshot: version {version} is newer than this binary \
+                 ({SNAPSHOT_VERSION})"
+            )));
+        }
+        let mut snap = MetricsSnapshot::empty();
+        if let Some(counters) = doc.get("counters").and_then(Json::as_obj) {
+            for id in CounterId::ALL {
+                if let Some(v) = counters.get(id.name()) {
+                    snap.counters[id.index()] = v
+                        .as_usize()
+                        .ok_or_else(|| {
+                            Error::Parse(format!("metrics snapshot: bad counter {}", id.name()))
+                        })? as u64;
+                }
+            }
+        }
+        if let Some(gauges) = doc.get("gauges").and_then(Json::as_obj) {
+            for id in GaugeId::ALL {
+                if let Some(v) = gauges.get(id.name()) {
+                    snap.gauges[id.index()] = v
+                        .as_usize()
+                        .ok_or_else(|| {
+                            Error::Parse(format!("metrics snapshot: bad gauge {}", id.name()))
+                        })? as u64;
+                }
+            }
+        }
+        if let Some(stages) = doc.get("stages").and_then(Json::as_obj) {
+            for id in Stage::ALL {
+                if let Some(v) = stages.get(id.name()) {
+                    snap.stages[id.index()] = HistogramSnapshot::from_json(v)?;
+                }
+            }
+        }
+        Ok(snap)
+    }
+
+    /// One MELB envelope frame under the metrics tag.
+    pub fn encode_melb(&self) -> Vec<u8> {
+        encode_envelope(METRICS_SNAPSHOT, &self.to_json())
+    }
+
+    /// Decode one metrics frame.  Rejects other envelope tags, any
+    /// truncated or oversized frame (the hardened reader bounds every
+    /// declared length), and trailing bytes — a metrics artifact is a
+    /// single frame, not a stream.
+    pub fn decode_melb(bytes: &[u8]) -> Result<Self> {
+        let (tag, payload, used) = decode_envelope(bytes)?;
+        if tag != METRICS_SNAPSHOT {
+            return Err(Error::Parse(format!(
+                "metrics snapshot: envelope tag {tag:#04x} is not the metrics \
+                 tag ({METRICS_SNAPSHOT:#04x})"
+            )));
+        }
+        if used != bytes.len() {
+            return Err(Error::Parse(format!(
+                "metrics snapshot: {} trailing bytes",
+                bytes.len() - used
+            )));
+        }
+        Self::from_json(&payload)
+    }
+}
+
+impl Default for MetricsSnapshot {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::codec::ENVELOPE_REQUEST;
+
+    fn sample() -> MetricsSnapshot {
+        let mut s = MetricsSnapshot::empty();
+        s.counters[CounterId::CacheHits.index()] = 12;
+        s.counters[CounterId::BytesOut.index()] = 4096;
+        s.gauges[GaugeId::CacheEntries.index()] = 3;
+        for v in [100u64, 2_000, 2_000, 1 << 22] {
+            s.stages[Stage::Read.index()].record(v);
+        }
+        s.stages[Stage::QueueWait.index()].record(5_000);
+        s
+    }
+
+    #[test]
+    fn json_round_trip_preserves_everything() {
+        let s = sample();
+        let back = MetricsSnapshot::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(back.counter(CounterId::CacheHits), 12);
+        assert_eq!(back.stage(Stage::Read).count, 4);
+        assert_eq!(s.stage_sum_ns(), 100 + 2_000 + 2_000 + (1 << 22) + 5_000);
+    }
+
+    #[test]
+    fn melb_round_trip_and_tag_rejection() {
+        let s = sample();
+        let frame = s.encode_melb();
+        assert_eq!(MetricsSnapshot::decode_melb(&frame).unwrap(), s);
+        // A transport envelope is not a metrics artifact.
+        let wire = encode_envelope(ENVELOPE_REQUEST, &s.to_json());
+        assert!(MetricsSnapshot::decode_melb(&wire).is_err());
+        // Trailing bytes are rejected (single-frame artifact).
+        let mut padded = frame.clone();
+        padded.push(0);
+        assert!(MetricsSnapshot::decode_melb(&padded).is_err());
+    }
+
+    #[test]
+    fn delta_and_merge_invert() {
+        let base = sample();
+        let mut later = sample();
+        later.counters[CounterId::CacheHits.index()] += 5;
+        later.stages[Stage::Read.index()].record(999);
+        let delta = later.delta_since(&base);
+        assert_eq!(delta.counter(CounterId::CacheHits), 5);
+        assert_eq!(delta.stage(Stage::Read).count, 1);
+        assert_eq!(delta.stage(Stage::Read).sum, 999);
+        let mut rebuilt = base.clone();
+        rebuilt.merge(&delta);
+        // Gauges are levels: delta keeps the later value, so align
+        // them before comparing the additive parts.
+        rebuilt.gauges = later.gauges;
+        assert_eq!(rebuilt, later);
+    }
+
+    #[test]
+    fn newer_version_is_rejected_unknown_names_ignored() {
+        let mut doc = sample().to_json();
+        if let Json::Obj(m) = &mut doc {
+            m.insert("version".into(), Json::Num((SNAPSHOT_VERSION + 1) as f64));
+        }
+        assert!(MetricsSnapshot::from_json(&doc).is_err());
+        let mut doc = sample().to_json();
+        if let Json::Obj(m) = &mut doc {
+            if let Some(Json::Obj(c)) = m.get_mut("counters") {
+                c.insert("a_future_counter".into(), Json::Num(7.0));
+            }
+        }
+        assert_eq!(MetricsSnapshot::from_json(&doc).unwrap(), sample());
+    }
+}

@@ -16,6 +16,7 @@ use crate::coordinator::{BenchmarkConfig, Coordinator, WorkloadSpec};
 use crate::device::params::NonIdealities;
 use crate::device::presets;
 use crate::mitigation::{MitigatedEngine, MitigationConfig};
+use crate::obs;
 use crate::pipeline::{Activation, NetworkSpec, PipelineOptions, PipelineRunner};
 use crate::shard::FaultSpec;
 use crate::stats::moments::Moments;
@@ -309,6 +310,21 @@ pub fn run_suite(opts: &SuiteOpts) -> Vec<BenchResult> {
                 "      serve cache speedup: {:.2}x requests/sec over reprogram-per-request",
                 cached.items_per_sec(nreq as f64) / uncached.items_per_sec(nreq as f64)
             );
+        }
+        // Observability overhead leg: the identical cached read
+        // workload with the metrics registry *enabled* — the baseline
+        // soft-gate slug behind the <10% enabled-path overhead
+        // contract (DESIGN.md §17).  Serialized through the obs test
+        // lock so parallel tests flipping the global gate never race
+        // this measurement.
+        if suite.matches("serve-cached-128-obs") {
+            let _guard = obs::test_lock();
+            let was = obs::enabled();
+            obs::set_enabled(true);
+            suite.go("serve-cached-128-obs", sopts, || {
+                black_box(programmed.read(&x, nreq).unwrap());
+            });
+            obs::set_enabled(was);
         }
     }
 

@@ -27,6 +27,7 @@ use crate::coordinator::ErrorPopulation;
 use crate::device::params::DeviceParams;
 use crate::error::Result;
 use crate::mitigation::MitigatedEngine;
+use crate::obs::{self, Stage};
 use crate::util::pool::{run_indexed, Parallelism};
 use crate::util::progress::Stopwatch;
 use crate::vmm::engine::DynEngine;
@@ -224,16 +225,19 @@ impl PipelineRunner {
             let mut a_sw = a_hw.clone();
             let mut layers = Vec::with_capacity(net.depth());
             for (k, layer) in net.layers.iter().enumerate() {
-                let out = if let (Some(cache), Some(specs)) =
-                    (deploy_ref.as_ref(), specs_ref.as_ref())
-                {
-                    let handle = cache.get_or_program(&engines_ref[k], &specs[k], &device)?;
-                    handle.forward(&a_hw, len)?
-                } else {
-                    let batch =
-                        net.layer_batch_with_weights(k, start, len, &a_hw, &weights_ref[k]);
-                    engines_ref[k].forward(&batch, &device)?
-                };
+                let out = obs::time_stage(Stage::PipelineLayer, || {
+                    if let (Some(cache), Some(specs)) =
+                        (deploy_ref.as_ref(), specs_ref.as_ref())
+                    {
+                        let handle =
+                            cache.get_or_program(&engines_ref[k], &specs[k], &device)?;
+                        handle.forward(&a_hw, len)
+                    } else {
+                        let batch =
+                            net.layer_batch_with_weights(k, start, len, &a_hw, &weights_ref[k]);
+                        engines_ref[k].forward(&batch, &device)
+                    }
+                })?;
                 // Injected-at-layer: hardware vs exact product on the
                 // same (hardware) input — the engine computes that
                 // exact product as its software reference.

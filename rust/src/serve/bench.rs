@@ -17,12 +17,13 @@ use std::time::{Duration, Instant};
 use crate::coordinator::workload::{EntryDist, InputSpec};
 use crate::device::params::DeviceParams;
 use crate::error::{Error, Result};
+use crate::obs::{self, CounterId, HistogramSnapshot, Stage};
 use crate::util::progress::Stopwatch;
 use crate::util::rng::{splitmix64, Xoshiro256};
 use crate::vmm::{DynEngine, ProgramSpec};
 
 use super::cache::{CacheCounts, ProgramCache};
-use super::scheduler::{percentile, BoundedQueue, Request};
+use super::scheduler::{BoundedQueue, Request};
 
 /// Stream tags separating the model-weight and request-input
 /// populations of one serve seed.
@@ -149,10 +150,15 @@ pub struct ServeReport {
     pub wall_secs: f64,
     /// Requests per second of wall time.
     pub throughput: f64,
-    /// Enqueue-to-decode latency percentiles, milliseconds.
+    /// Enqueue-to-decode latency percentiles, milliseconds — quoted
+    /// from [`ServeReport::latency`], so every report in the crate
+    /// shares one bucket semantics (log2 buckets, `sqrt(2)` relative
+    /// error bound; DESIGN.md §17).
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
+    /// The full enqueue-to-decode latency distribution (nanoseconds).
+    pub latency: HistogramSnapshot,
     /// Program-cache counters (all zero with the cache disabled).
     pub cache: CacheCounts,
     /// Programming cycles actually executed (cache misses, or one per
@@ -175,7 +181,7 @@ pub struct ServeReport {
 
 /// Shared mutable tallies of one run.
 struct Tallies {
-    latencies: Vec<f64>,
+    latency: HistogramSnapshot,
     batches: usize,
     batched_requests: usize,
     programs: u64,
@@ -231,7 +237,7 @@ pub fn run_serve(
     let cache = ProgramCache::new(opts.cache_capacity);
     let queue: BoundedQueue<Request> = BoundedQueue::new(opts.queue_capacity);
     let tallies = Mutex::new(Tallies {
-        latencies: Vec::with_capacity(opts.total_requests()),
+        latency: HistogramSnapshot::empty(),
         batches: 0,
         batched_requests: 0,
         programs: 0,
@@ -306,9 +312,7 @@ pub fn run_serve(
     }
     let wall_secs = wall.elapsed_secs();
     let t = tallies.into_inner().unwrap();
-    let mut lat = t.latencies;
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let requests = lat.len();
+    let requests = t.latency.count as usize;
     let mean_rps = if wall_secs > 0.0 {
         requests as f64 / wall_secs
     } else {
@@ -325,9 +329,10 @@ pub fn run_serve(
         },
         wall_secs,
         throughput: mean_rps,
-        p50_ms: percentile(&lat, 50.0) * 1e3,
-        p95_ms: percentile(&lat, 95.0) * 1e3,
-        p99_ms: percentile(&lat, 99.0) * 1e3,
+        p50_ms: t.latency.percentile_ms(50.0),
+        p95_ms: t.latency.percentile_ms(95.0),
+        p99_ms: t.latency.percentile_ms(99.0),
+        latency: t.latency,
         cache: cache.counts(),
         programs: if opts.cache { cache.counts().misses } else { t.programs },
         mean_abs_error: if t.err_n > 0 {
@@ -354,6 +359,14 @@ fn serve_batch(
     tallies: &Mutex<Tallies>,
     wall: &Stopwatch,
 ) -> Result<()> {
+    // Queue wait ends the moment a worker picks the batch up; the
+    // remaining lifecycle is accounted per stage downstream.
+    if obs::enabled() {
+        let picked_up = Instant::now();
+        for req in batch {
+            obs::record(Stage::QueueWait, picked_up.duration_since(req.enqueued));
+        }
+    }
     // Group requests by model, preserving arrival order within groups.
     let mut groups: Vec<(usize, Vec<&Request>)> = Vec::new();
     for req in batch {
@@ -389,10 +402,11 @@ fn serve_batch(
         err_n += outcome.err_cols * outcome.err_per_req.len();
     }
     let done = Instant::now();
+    obs::add(CounterId::RequestsServed, batch.len() as u64);
+    obs::incr(CounterId::BatchesServed);
     let mut t = tallies.lock().unwrap();
     for req in batch {
-        t.latencies
-            .push(done.duration_since(req.enqueued).as_secs_f64());
+        t.latency.record_duration(done.duration_since(req.enqueued));
     }
     t.batches += 1;
     t.batched_requests += batch.len();

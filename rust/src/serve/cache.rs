@@ -20,11 +20,11 @@
 
 use std::collections::hash_map::Entry as MapEntry;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::device::params::DeviceParams;
 use crate::error::Result;
+use crate::obs::{self, Counter, CounterId, GaugeId, Stage};
 use crate::vmm::{ProgramSpec, ProgrammedVmm, VmmEngine};
 
 /// FNV-1a over a stream of 64-bit words (64-bit offset basis and
@@ -120,12 +120,17 @@ impl CacheCounts {
 }
 
 /// Bounded LRU cache of programmed models.
+///
+/// Per-instance counters are [`obs::Counter`]s (always active — the
+/// serve reports depend on them); each event additionally mirrors into
+/// the global registry when telemetry is enabled, so `meliso metrics`
+/// and the per-cache reports quote the same ledger.
 pub struct ProgramCache {
     capacity: usize,
     inner: Mutex<CacheInner>,
-    hits: AtomicU64,
-    misses: AtomicU64,
-    evictions: AtomicU64,
+    hits: Counter,
+    misses: Counter,
+    evictions: Counter,
 }
 
 impl std::fmt::Debug for ProgramCache {
@@ -145,9 +150,9 @@ impl ProgramCache {
         Self {
             capacity: capacity.max(1),
             inner: Mutex::new(CacheInner { map: HashMap::new(), tick: 0 }),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-            evictions: AtomicU64::new(0),
+            hits: Counter::new(),
+            misses: Counter::new(),
+            evictions: Counter::new(),
         }
     }
 
@@ -163,6 +168,7 @@ impl ProgramCache {
         params: &DeviceParams,
     ) -> Result<ProgrammedVmm> {
         let key = CacheKey::new(engine, spec, params);
+        let lookup = obs::stage_start();
         {
             let mut inner = self.inner.lock().unwrap();
             inner.tick += 1;
@@ -171,12 +177,15 @@ impl ProgramCache {
                 e.last_used = tick;
                 let handle = e.handle.clone();
                 drop(inner);
-                self.hits.fetch_add(1, Ordering::Relaxed);
+                obs::stage_end(Stage::CacheLookup, lookup);
+                self.hit();
                 return Ok(handle);
             }
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        let fresh = engine.program(spec, params)?;
+        obs::stage_end(Stage::CacheLookup, lookup);
+        self.miss();
+        let fresh = obs::time_stage(Stage::Program, || engine.program(spec, params))?;
+        obs::incr(CounterId::ProgramsExecuted);
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
         let tick = inner.tick;
@@ -200,8 +209,9 @@ impl ProgramCache {
                 .map(|(k, _)| *k)
                 .expect("map over capacity is non-empty");
             inner.map.remove(&victim);
-            self.evictions.fetch_add(1, Ordering::Relaxed);
+            self.evicted();
         }
+        obs::gauge_set(GaugeId::CacheEntries, inner.map.len() as u64);
         Ok(handle)
     }
 
@@ -226,6 +236,7 @@ impl ProgramCache {
         batch: usize,
     ) -> Result<(ProgrammedVmm, Option<Vec<f32>>)> {
         let key = CacheKey::new(engine, spec, params);
+        let lookup = obs::stage_start();
         {
             let mut inner = self.inner.lock().unwrap();
             inner.tick += 1;
@@ -234,12 +245,18 @@ impl ProgramCache {
                 e.last_used = tick;
                 let handle = e.handle.clone();
                 drop(inner);
-                self.hits.fetch_add(1, Ordering::Relaxed);
+                obs::stage_end(Stage::CacheLookup, lookup);
+                self.hit();
                 return Ok((handle, None));
             }
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        let (fresh, y) = engine.program_read(spec, params, x, batch)?;
+        obs::stage_end(Stage::CacheLookup, lookup);
+        self.miss();
+        // The fused program+read is attributed wholly to Program: the
+        // cold model's first batch rides along with programming.
+        let (fresh, y) =
+            obs::time_stage(Stage::Program, || engine.program_read(spec, params, x, batch))?;
+        obs::incr(CounterId::ProgramsExecuted);
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
         let tick = inner.tick;
@@ -261,17 +278,33 @@ impl ProgramCache {
                 .map(|(k, _)| *k)
                 .expect("map over capacity is non-empty");
             inner.map.remove(&victim);
-            self.evictions.fetch_add(1, Ordering::Relaxed);
+            self.evicted();
         }
+        obs::gauge_set(GaugeId::CacheEntries, inner.map.len() as u64);
         Ok((handle, Some(y)))
+    }
+
+    fn hit(&self) {
+        self.hits.incr();
+        obs::incr(CounterId::CacheHits);
+    }
+
+    fn miss(&self) {
+        self.misses.incr();
+        obs::incr(CounterId::CacheMisses);
+    }
+
+    fn evicted(&self) {
+        self.evictions.incr();
+        obs::incr(CounterId::CacheEvictions);
     }
 
     pub fn counts(&self) -> CacheCounts {
         let entries = self.inner.lock().unwrap().map.len() as u64;
         CacheCounts {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            evictions: self.evictions.load(Ordering::Relaxed),
+            hits: self.hits.get(),
+            misses: self.misses.get(),
+            evictions: self.evictions.get(),
             entries,
         }
     }

@@ -67,5 +67,5 @@ pub use node::{Node, NodeReport};
 pub use router::{
     model_digest, run_fleet, run_fleet_nodes, FleetOptions, FleetReport, Placement,
 };
-pub use scheduler::{percentile, BoundedQueue, QueueClosed, Request};
+pub use scheduler::{BoundedQueue, QueueClosed, Request};
 pub use transport::{Frame, RequestEnvelope, ResponseEnvelope};

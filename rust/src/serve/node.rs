@@ -23,11 +23,12 @@ use std::time::Instant;
 
 use crate::device::params::DeviceParams;
 use crate::error::Result;
+use crate::obs::{self, CounterId, HistogramSnapshot, Stage};
 use crate::vmm::{DynEngine, ProgramSpec, ShardCounts, VmmEngine};
 
 use super::bench::ServeOptions;
 use super::cache::{CacheCounts, ProgramCache};
-use super::scheduler::{percentile, BoundedQueue, QueueClosed};
+use super::scheduler::{BoundedQueue, QueueClosed};
 use super::transport::{Frame, RequestEnvelope, ResponseEnvelope};
 
 /// Outcome of serving one model group of a coalesced batch.
@@ -70,10 +71,12 @@ pub(crate) fn serve_model_group(
             Some(c) => c.get_or_program(engine, spec, device)?,
             None => {
                 fresh_programs += 1;
-                engine.program(spec, device)?
+                let h = obs::time_stage(Stage::Program, || engine.program(spec, device))?;
+                obs::incr(CounterId::ProgramsExecuted);
+                h
             }
         };
-        let out = handle.forward(x, n)?;
+        let out = obs::time_stage(Stage::Read, || handle.forward(x, n))?;
         let errs = out.errors();
         let cols = out.y_hw.len() / n.max(1);
         let err_per_req = (0..n)
@@ -91,12 +94,17 @@ pub(crate) fn serve_model_group(
                 let (handle, fused) = c.get_or_program_read(engine, spec, device, x, n)?;
                 match fused {
                     Some(y) => y,
-                    None => handle.read(x, n)?,
+                    None => obs::time_stage(Stage::Read, || handle.read(x, n))?,
                 }
             }
             None => {
                 fresh_programs += 1;
-                engine.program_read(spec, device, x, n)?.1
+                // The uncached fused call is attributed wholly to
+                // Program, matching the cache's miss accounting.
+                let (_, y) =
+                    obs::time_stage(Stage::Program, || engine.program_read(spec, device, x, n))?;
+                obs::incr(CounterId::ProgramsExecuted);
+                y
             }
         };
         Ok(GroupOutcome {
@@ -114,7 +122,7 @@ struct NodeTallies {
     batches: usize,
     batched_requests: usize,
     fresh_programs: u64,
-    latencies: Vec<f64>,
+    latency: HistogramSnapshot,
     bytes_in: u64,
     bytes_out: u64,
 }
@@ -138,10 +146,14 @@ pub struct NodeReport {
     /// This node's program-cache counters.
     pub cache: CacheCounts,
     /// Submit-to-served latency percentiles (queue wait + service),
-    /// milliseconds.
+    /// milliseconds — quoted from [`NodeReport::latency`], the same
+    /// bucket semantics every other report uses (DESIGN.md §17).
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
+    /// The full submit-to-served latency distribution (nanoseconds);
+    /// the fleet rollup merges these per-node histograms.
+    pub latency: HistogramSnapshot,
     /// ABFT checksum counters accumulated by this node's engine over
     /// the run; `None` for engines without shard correction.  Nodes
     /// sharing one engine clone share counters — per-node attribution
@@ -181,7 +193,7 @@ impl Node {
                 batches: 0,
                 batched_requests: 0,
                 fresh_programs: 0,
-                latencies: Vec::new(),
+                latency: HistogramSnapshot::empty(),
                 bytes_in: 0,
                 bytes_out: 0,
             }),
@@ -248,6 +260,13 @@ impl Node {
         opts: &ServeOptions,
         responses: &mpsc::Sender<Vec<u8>>,
     ) -> Result<()> {
+        // Queue wait ends here: a worker has the coalesced frames.
+        if obs::enabled() {
+            let picked_up = Instant::now();
+            for frame in batch {
+                obs::record(Stage::QueueWait, picked_up.duration_since(frame.submitted));
+            }
+        }
         // Transport boundary: every frame decodes from bytes.
         let mut bytes_in = 0u64;
         let mut reqs = Vec::with_capacity(batch.len());
@@ -303,10 +322,11 @@ impl Node {
             }
         }
         let done = Instant::now();
+        obs::add(CounterId::RequestsServed, batch.len() as u64);
+        obs::incr(CounterId::BatchesServed);
         let mut t = self.tallies.lock().unwrap();
         for frame in batch {
-            t.latencies
-                .push(done.duration_since(frame.submitted).as_secs_f64());
+            t.latency.record_duration(done.duration_since(frame.submitted));
         }
         t.requests += batch.len();
         t.batches += 1;
@@ -325,8 +345,7 @@ impl Node {
     /// Telemetry snapshot after the run.
     pub fn report(&self) -> NodeReport {
         let t = self.tallies.lock().unwrap();
-        let mut lat = t.latencies.clone();
-        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let lat = t.latency.clone();
         let cache = self.cache_counts();
         let shard = match (self.engine.shard_counts(), self.shard_base) {
             (Some(now), Some(base)) => Some(ShardCounts {
@@ -353,9 +372,10 @@ impl Node {
                 t.fresh_programs
             },
             cache,
-            p50_ms: percentile(&lat, 50.0) * 1e3,
-            p95_ms: percentile(&lat, 95.0) * 1e3,
-            p99_ms: percentile(&lat, 99.0) * 1e3,
+            p50_ms: lat.percentile_ms(50.0),
+            p95_ms: lat.percentile_ms(95.0),
+            p99_ms: lat.percentile_ms(99.0),
+            latency: lat,
             shard,
             bytes_in: t.bytes_in,
             bytes_out: t.bytes_out,

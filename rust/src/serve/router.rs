@@ -36,6 +36,7 @@ use std::time::Instant;
 
 use crate::device::params::DeviceParams;
 use crate::error::{Error, Result};
+use crate::obs::{self, CounterId, HistogramSnapshot};
 use crate::util::progress::Stopwatch;
 use crate::util::rng::Xoshiro256;
 use crate::vmm::{DynEngine, ProgramSpec, ShardCounts, VmmEngine};
@@ -43,7 +44,6 @@ use crate::vmm::{DynEngine, ProgramSpec, ShardCounts, VmmEngine};
 use super::bench::{capacity_projection, ServeOptions, ServeReport};
 use super::cache::fnv1a;
 use super::node::{Node, NodeReport};
-use super::scheduler::percentile;
 use super::transport::{Frame, RequestEnvelope, ResponseEnvelope};
 
 /// Virtual points each node contributes to the placement ring.
@@ -217,7 +217,7 @@ pub struct FleetReport {
 struct Collected {
     count: usize,
     duplicates: u64,
-    latencies: Vec<f64>,
+    latency: HistogramSnapshot,
     /// Per-request `sum |err|` by id (0.0 when unmeasured).
     err_by_id: Vec<f64>,
     /// Total measured columns.
@@ -262,6 +262,7 @@ impl Router<'_> {
                     bytes = rejected.into_inner().bytes;
                     self.placement.lock().unwrap().fail(pick);
                     self.shed.fetch_add(1, Ordering::Relaxed);
+                    obs::incr(CounterId::RequestsShed);
                 }
             }
         }
@@ -432,7 +433,7 @@ pub fn run_fleet_nodes(
                     let mut c = Collected {
                         count: 0,
                         duplicates: 0,
-                        latencies: Vec::with_capacity(total),
+                        latency: HistogramSnapshot::empty(),
                         err_by_id: vec![0.0; total],
                         err_cols: 0,
                         points: Vec::with_capacity(total),
@@ -453,8 +454,8 @@ pub fn run_fleet_nodes(
                         seen[idx] = true;
                         c.count += 1;
                         if let Some(t0) = enqueued.lock().unwrap()[idx] {
-                            c.latencies
-                                .push(Instant::now().duration_since(t0).as_secs_f64());
+                            c.latency
+                                .record_duration(Instant::now().duration_since(t0));
                         }
                         c.err_by_id[idx] = resp.err_abs_sum;
                         c.err_cols += resp.err_cols;
@@ -522,8 +523,7 @@ pub fn run_fleet_nodes(
         .filter(|&&d| initial.assign(d).iter().any(|n| failed_nodes.contains(n)))
         .count() as u64;
 
-    let mut lat = collected.latencies;
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let lat = collected.latency;
     let requests = collected.count;
     let mean_rps = if wall_secs > 0.0 {
         requests as f64 / wall_secs
@@ -582,9 +582,10 @@ pub fn run_fleet_nodes(
             mean_batch: if batches > 0 { batched / batches as f64 } else { 0.0 },
             wall_secs,
             throughput: mean_rps,
-            p50_ms: percentile(&lat, 50.0) * 1e3,
-            p95_ms: percentile(&lat, 95.0) * 1e3,
-            p99_ms: percentile(&lat, 99.0) * 1e3,
+            p50_ms: lat.percentile_ms(50.0),
+            p95_ms: lat.percentile_ms(95.0),
+            p99_ms: lat.percentile_ms(99.0),
+            latency: lat,
             cache,
             programs,
             mean_abs_error: if collected.err_cols > 0 {

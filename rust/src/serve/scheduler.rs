@@ -18,6 +18,8 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::obs::{self, GaugeId, Stage};
+
 /// One single-vector VMM request from a simulated client.
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -104,6 +106,7 @@ impl<T> BoundedQueue<T> {
             }
             if st.items.len() < self.capacity {
                 st.items.push_back(item);
+                obs::gauge_set(GaugeId::QueueDepth, st.items.len() as u64);
                 self.not_empty.notify_one();
                 return Ok(());
             }
@@ -134,6 +137,10 @@ impl<T> BoundedQueue<T> {
             st = self.not_empty.wait(st).unwrap();
         }
         let mut batch = Vec::with_capacity(max.min(st.items.len()));
+        // The coalesce span covers first-item-taken to batch-returned:
+        // the window time spent growing the batch, not the idle block
+        // waiting for work to exist.
+        let coalesce = obs::stage_start();
         let deadline = Instant::now() + window;
         loop {
             while batch.len() < max {
@@ -161,19 +168,11 @@ impl<T> BoundedQueue<T> {
                 break;
             }
         }
+        obs::gauge_set(GaugeId::QueueDepth, st.items.len() as u64);
+        drop(st);
+        obs::stage_end(Stage::BatchCoalesce, coalesce);
         batch
     }
-}
-
-/// Latency percentile over raw samples (seconds); `sorted` must be
-/// ascending.  Nearest-rank on the inclusive index grid; NaN when
-/// empty.
-pub fn percentile(sorted: &[f64], p: f64) -> f64 {
-    if sorted.is_empty() {
-        return f64::NAN;
-    }
-    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
 }
 
 #[cfg(test)]
@@ -256,13 +255,22 @@ mod tests {
     }
 
     #[test]
-    fn percentile_ranks() {
-        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
-        assert_eq!(percentile(&xs, 0.0), 1.0);
-        assert_eq!(percentile(&xs, 100.0), 100.0);
-        assert!((percentile(&xs, 50.0) - 51.0).abs() <= 1.0);
-        assert!(percentile(&xs, 95.0) >= 94.0);
-        assert!(percentile(&[], 50.0).is_nan());
-        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    fn pop_batch_records_coalesce_spans_when_enabled() {
+        let _guard = crate::obs::test_lock();
+        crate::obs::registry().reset();
+        crate::obs::set_enabled(true);
+        let q = BoundedQueue::new(8);
+        for i in 0..3 {
+            assert!(q.push(i).is_ok());
+        }
+        let batch = q.pop_batch(3, Duration::from_millis(0));
+        crate::obs::set_enabled(false);
+        assert_eq!(batch, vec![0, 1, 2]);
+        let snap = crate::obs::registry().snapshot();
+        crate::obs::registry().reset();
+        // `>=`: while the gate is on, parallel tests traversing
+        // instrumented paths may also record — exact accounting is
+        // pinned in the isolated `integration_obs` binary.
+        assert!(snap.stage(Stage::BatchCoalesce).count >= 1);
     }
 }

@@ -18,6 +18,7 @@
 use std::time::Instant;
 
 use crate::error::{Error, Result};
+use crate::obs::{self, CounterId, Stage};
 use crate::util::codec::{
     decode_envelope, encode_envelope, ENVELOPE_REQUEST, ENVELOPE_RESPONSE,
 };
@@ -97,18 +98,25 @@ fn get_f32_arr(v: &Json, key: &str) -> Result<Vec<f32>> {
 impl RequestEnvelope {
     /// Serialize to one MELB envelope frame.
     pub fn encode(&self) -> Vec<u8> {
+        let span = obs::stage_start();
         let payload = obj([
             ("model", Json::Num(self.model as f64)),
             ("id", Json::Num(self.id as f64)),
             ("x", f32_arr(&self.x)),
         ]);
-        encode_envelope(ENVELOPE_REQUEST, &payload)
+        let frame = encode_envelope(ENVELOPE_REQUEST, &payload);
+        obs::stage_end(Stage::TransportEncode, span);
+        obs::add(CounterId::BytesOut, frame.len() as u64);
+        frame
     }
 
     /// Decode one request frame from the head of `bytes`, returning
     /// the envelope and the bytes consumed.
     pub fn decode(bytes: &[u8]) -> Result<(RequestEnvelope, usize)> {
+        let span = obs::stage_start();
         let (tag, payload, used) = decode_envelope(bytes)?;
+        obs::stage_end(Stage::TransportDecode, span);
+        obs::add(CounterId::BytesIn, used as u64);
         if tag != ENVELOPE_REQUEST {
             return Err(Error::Parse(format!(
                 "envelope: tag {tag:#x} where a request ({ENVELOPE_REQUEST:#x}) \
@@ -129,6 +137,7 @@ impl RequestEnvelope {
 impl ResponseEnvelope {
     /// Serialize to one MELB envelope frame.
     pub fn encode(&self) -> Vec<u8> {
+        let span = obs::stage_start();
         let payload = obj([
             ("id", Json::Num(self.id as f64)),
             ("model", Json::Num(self.model as f64)),
@@ -137,13 +146,19 @@ impl ResponseEnvelope {
             ("err_abs_sum", Json::Num(self.err_abs_sum)),
             ("err_cols", Json::Num(self.err_cols as f64)),
         ]);
-        encode_envelope(ENVELOPE_RESPONSE, &payload)
+        let frame = encode_envelope(ENVELOPE_RESPONSE, &payload);
+        obs::stage_end(Stage::TransportEncode, span);
+        obs::add(CounterId::BytesOut, frame.len() as u64);
+        frame
     }
 
     /// Decode one response frame from the head of `bytes`, returning
     /// the envelope and the bytes consumed.
     pub fn decode(bytes: &[u8]) -> Result<(ResponseEnvelope, usize)> {
+        let span = obs::stage_start();
         let (tag, payload, used) = decode_envelope(bytes)?;
+        obs::stage_end(Stage::TransportDecode, span);
+        obs::add(CounterId::BytesIn, used as u64);
         if tag != ENVELOPE_RESPONSE {
             return Err(Error::Parse(format!(
                 "envelope: tag {tag:#x} where a response ({ENVELOPE_RESPONSE:#x}) \

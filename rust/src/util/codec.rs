@@ -127,6 +127,11 @@ impl Codec {
 pub const ENVELOPE_REQUEST: u8 = 0x10;
 /// Envelope tag of a fleet transport *response* frame.
 pub const ENVELOPE_RESPONSE: u8 = 0x11;
+/// Envelope tag of a metrics-registry snapshot
+/// ([`crate::obs::MetricsSnapshot`]) — same framing, same hardening,
+/// own tag so a telemetry artifact can never be replayed as a wire
+/// frame (or decoded as a plain document) by mistake.
+pub const METRICS_SNAPSHOT: u8 = 0x12;
 
 /// Encode one transport envelope: the `MELB` header, an envelope tag
 /// byte, then the payload value.  Unlike the document framing,
@@ -479,6 +484,26 @@ mod tests {
         huge.push(5); // arr
         huge.extend_from_slice(&u32::MAX.to_le_bytes());
         assert!(decode_envelope(&huge).is_err());
+    }
+
+    #[test]
+    fn metrics_snapshot_tag_is_disjoint_and_frames_cleanly() {
+        // The telemetry tag shares the envelope framing and hardening
+        // but never collides with value tags or the transport tags.
+        assert!(METRICS_SNAPSHOT >= 0x10);
+        assert_ne!(METRICS_SNAPSHOT, ENVELOPE_REQUEST);
+        assert_ne!(METRICS_SNAPSHOT, ENVELOPE_RESPONSE);
+        let v = sample();
+        let frame = encode_envelope(METRICS_SNAPSHOT, &v);
+        let (tag, payload, used) = decode_envelope(&frame).unwrap();
+        assert_eq!((tag, used), (METRICS_SNAPSHOT, frame.len()));
+        assert_eq!(payload, v);
+        // A metrics frame is not a plain document, and truncations of
+        // it are typed errors like any other envelope.
+        assert!(Codec::decode(&frame).is_err());
+        for cut in 0..frame.len() {
+            assert!(decode_envelope(&frame[..cut]).is_err(), "cut={cut}");
+        }
     }
 
     #[test]

@@ -34,6 +34,7 @@ use std::sync::Arc;
 use crate::crossbar::array::ProgramNoise;
 use crate::device::params::DeviceParams;
 use crate::error::{Error, Result};
+use crate::obs::{self, CounterId};
 use crate::util::codec::Codec;
 use crate::util::json::{obj, Json};
 use crate::util::rng::Xoshiro256;
@@ -263,6 +264,7 @@ impl ProgrammedVmm {
                 self.rows
             )));
         }
+        obs::incr(CounterId::ReadsExecuted);
         self.read.read_batch(x, batch)
     }
 

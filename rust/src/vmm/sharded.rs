@@ -45,12 +45,12 @@
 //! fixed shard order.  The result is bit-identical for any thread
 //! count (`rust/tests/integration_sharded.rs` enforces this).
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::crossbar::array::{CrossbarArray, ProgramScratch, PulseTable};
 use crate::device::params::DeviceParams;
 use crate::error::{Error, Result};
+use crate::obs::{self, Counter, CounterId, Stage};
 use crate::shard::{ChecksumCode, FaultSpec, ShardGrid, ShardRegion, Verdict};
 use crate::util::pool::{run_blocked, Parallelism};
 
@@ -71,31 +71,58 @@ pub const DEFAULT_CHECKSUM_THRESHOLD: f64 = 0.35;
 /// Checksum telemetry counters, shared by every clone of an engine
 /// (and with the [`crate::coordinator::Coordinator`] it is moved into).
 /// Counts accumulate across `forward` calls until [`ShardStats::reset`].
+///
+/// The counters are [`obs::Counter`]s (always active — reports depend
+/// on them); each recording additionally mirrors into the global
+/// registry's fault counters when telemetry is enabled.
 #[derive(Debug, Default)]
 pub struct ShardStats {
-    injected: AtomicU64,
-    detected: AtomicU64,
-    corrected: AtomicU64,
-    uncorrectable: AtomicU64,
+    injected: Counter,
+    detected: Counter,
+    corrected: Counter,
+    uncorrectable: Counter,
 }
 
 impl ShardStats {
+    /// Count `n` injected faults.
+    fn record_injected(&self, n: u64) {
+        self.injected.add(n);
+        obs::add(CounterId::FaultsInjected, n);
+    }
+
+    /// Count a batch of verify verdicts.
+    fn record_verdicts(&self, detected: u64, corrected: u64, uncorrectable: u64) {
+        if detected == 0 {
+            return;
+        }
+        self.detected.add(detected);
+        obs::add(CounterId::FaultsDetected, detected);
+        if corrected > 0 {
+            self.corrected.add(corrected);
+            obs::add(CounterId::FaultsCorrected, corrected);
+        }
+        if uncorrectable > 0 {
+            self.uncorrectable.add(uncorrectable);
+            obs::add(CounterId::FaultsUncorrectable, uncorrectable);
+        }
+    }
+
     /// Consistent snapshot of the counters.
     pub fn snapshot(&self) -> ShardCounts {
         ShardCounts {
-            injected: self.injected.load(Ordering::Relaxed),
-            detected: self.detected.load(Ordering::Relaxed),
-            corrected: self.corrected.load(Ordering::Relaxed),
-            uncorrectable: self.uncorrectable.load(Ordering::Relaxed),
+            injected: self.injected.get(),
+            detected: self.detected.get(),
+            corrected: self.corrected.get(),
+            uncorrectable: self.uncorrectable.get(),
         }
     }
 
     /// Zero all counters.
     pub fn reset(&self) {
-        self.injected.store(0, Ordering::Relaxed);
-        self.detected.store(0, Ordering::Relaxed);
-        self.corrected.store(0, Ordering::Relaxed);
-        self.uncorrectable.store(0, Ordering::Relaxed);
+        self.injected.reset();
+        self.detected.reset();
+        self.corrected.reset();
+        self.uncorrectable.reset();
     }
 }
 
@@ -256,6 +283,7 @@ impl ProgrammedRead for ProgrammedShards {
                     self.arrays[k].read(&tx[..], &mut partial[..]);
                     let (data, rest) = partial.split_at_mut(reg.clen);
                     if self.checksum {
+                        let span = obs::stage_start();
                         let code = &self.codes[k];
                         let cells = (reg.rlen * reg.clen) as f64;
                         let abs_threshold = self.threshold * cells.sqrt();
@@ -263,14 +291,13 @@ impl ProgrammedRead for ProgrammedShards {
                             Verdict::Clean => {}
                             Verdict::Fault { col, delta } => {
                                 data[col] = (data[col] as f64 + delta) as f32;
-                                self.stats.detected.fetch_add(1, Ordering::Relaxed);
-                                self.stats.corrected.fetch_add(1, Ordering::Relaxed);
+                                self.stats.record_verdicts(1, 1, 0);
                             }
                             Verdict::Detected => {
-                                self.stats.detected.fetch_add(1, Ordering::Relaxed);
-                                self.stats.uncorrectable.fetch_add(1, Ordering::Relaxed);
+                                self.stats.record_verdicts(1, 0, 1);
                             }
                         }
+                        obs::stage_end(Stage::ShardVerify, span);
                     }
                     let yrow = &mut out[reg.c0..reg.c0 + reg.clen];
                     for (yj, &pj) in yrow.iter_mut().zip(data.iter()) {
@@ -336,7 +363,7 @@ impl VmmEngine for ShardedEngine {
             arrays.push(arr);
         }
         if injected > 0 {
-            self.stats.injected.fetch_add(injected, Ordering::Relaxed);
+            self.stats.record_injected(injected);
         }
         Ok(ProgrammedVmm::new(
             spec,
@@ -427,7 +454,7 @@ impl VmmEngine for ShardedEngine {
                 if let Some(f) = fault {
                     if let Some(col) = f.draw(s, k, reg.clen) {
                         scratch.arr.force_column(col, f.level);
-                        stats.injected.fetch_add(1, Ordering::Relaxed);
+                        stats.record_injected(1);
                     }
                 }
                 scratch.x.fill(0.0);
@@ -470,13 +497,7 @@ impl VmmEngine for ShardedEngine {
                 }
             }
         }
-        if detected > 0 {
-            self.stats.detected.fetch_add(detected, Ordering::Relaxed);
-            self.stats.corrected.fetch_add(corrected, Ordering::Relaxed);
-            self.stats
-                .uncorrectable
-                .fetch_add(uncorrectable, Ordering::Relaxed);
-        }
+        self.stats.record_verdicts(detected, corrected, uncorrectable);
 
         let y_sw = software_vmm_batch(batch);
         Ok(VmmOutput { y_hw, y_sw })

@@ -9,6 +9,7 @@ use meliso::device::params::DeviceParams;
 use meliso::device::presets;
 use meliso::device::pulse::pulse_curve;
 use meliso::mitigation::{MitigatedEngine, MitigationConfig};
+use meliso::obs::{self, HistogramSnapshot, MetricsSnapshot};
 use meliso::serve::Placement;
 use meliso::shard::{ChecksumCode, Verdict};
 use meliso::stats::fit::Normal;
@@ -539,6 +540,131 @@ fn prop_placement_spreads_models_across_live_nodes() {
             hit.iter().all(|&h| h)
         },
     );
+}
+
+#[test]
+fn prop_histogram_merge_is_associative_and_order_independent() {
+    // The rollup contract (DESIGN.md §17): `HistogramSnapshot::merge`
+    // is element-wise addition, so any grouping and any order of a
+    // fleet rollup produces the identical merged histogram
+    // bit-for-bit, and the exact count/sum fields fold exactly.
+    let s = Tuple3(
+        UsizeIn { lo: 0, hi: 60 },
+        UsizeIn { lo: 0, hi: 60 },
+        UsizeIn { lo: 0, hi: 1 << 16 },
+    );
+    check(cfg(64, 40), &s, |&(na, nb, seed)| {
+        let mut rng = Xoshiro256::seed_from_u64(seed as u64 ^ 0x0B5_CAFE);
+        let fill = |n: usize, rng: &mut Xoshiro256| {
+            let mut h = HistogramSnapshot::empty();
+            for _ in 0..n {
+                // Shifts spread values over buckets 0..=47 (bounded so
+                // the exact `sum` cannot overflow across three parts).
+                h.record(rng.next_u64() >> (16 + rng.below(48)));
+            }
+            h
+        };
+        let a = fill(na, &mut rng);
+        let b = fill(nb, &mut rng);
+        let c = fill(17, &mut rng);
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        let mut c_ba = c.clone();
+        c_ba.merge(&ba);
+        ab_c == a_bc
+            && ab_c == c_ba
+            && ab_c.count == a.count + b.count + c.count
+            && ab_c.sum == a.sum + b.sum + c.sum
+    });
+}
+
+#[test]
+fn prop_programmed_outputs_bit_identical_with_obs_on_and_off() {
+    // The telemetry subsystem's standing invariant: observability
+    // never perturbs results.  The same programmed read with the
+    // registry gate off and then on must be bit-identical on every
+    // serving engine — instrumentation reads clocks and bumps atomics,
+    // never touching the numerics.
+    let geom = Tuple3(
+        UsizeIn { lo: 2, hi: 32 },
+        UsizeIn { lo: 2, hi: 32 },
+        UsizeIn { lo: 1, hi: 3 },
+    );
+    check(cfg(10, 41), &geom, |&(rows, cols, b)| {
+        let mut rng =
+            Xoshiro256::seed_from_u64(((rows * 57 + cols) * 11 + b) as u64 ^ 0x0B5);
+        let mut w = vec![0.0f32; rows * cols];
+        rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+        let spec = ProgramSpec::from_seed(rows, cols, w, (rows * 31 + cols) as u64);
+        let mut x = vec![0.0f32; b * rows];
+        rng.fill_uniform_f32(&mut x, 0.0, 1.0);
+        let device = presets::ag_si().params;
+        // The gate is process-wide: hold the registry lock while
+        // flipping it.  Outputs (not registry contents) are compared,
+        // so concurrent recording cannot affect the property.
+        let _guard = obs::test_lock();
+        for name in ["native", "tiled", "sharded"] {
+            let engine = engine_by_name(name, Parallelism::Fixed(1));
+            obs::set_enabled(false);
+            let off = engine.program(&spec, &device).unwrap().forward(&x, b).unwrap();
+            obs::registry().reset();
+            obs::set_enabled(true);
+            let on = engine.program(&spec, &device).unwrap().forward(&x, b).unwrap();
+            obs::set_enabled(false);
+            obs::registry().reset();
+            if off.y_hw != on.y_hw || off.y_sw != on.y_sw {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_metrics_snapshot_melb_round_trips_and_rejects_corrupt_frames() {
+    // Seeded fuzz over the METRICS envelope tag: any randomly
+    // populated snapshot survives encode -> decode exactly; every
+    // strict truncation of the frame and any trailing garbage is a
+    // typed error — never a silently-wrong snapshot.
+    check(cfg(48, 42), &UsizeIn { lo: 0, hi: 1 << 16 }, |&seed| {
+        let mut rng = Xoshiro256::seed_from_u64(seed as u64 ^ 0x3E7A11);
+        let mut s = MetricsSnapshot::empty();
+        for c in s.counters.iter_mut() {
+            if rng.uniform() < 0.7 {
+                *c = rng.below(1 << 40);
+            }
+        }
+        for g in s.gauges.iter_mut() {
+            if rng.uniform() < 0.7 {
+                *g = rng.below(1 << 20);
+            }
+        }
+        for h in s.stages.iter_mut() {
+            for _ in 0..rng.below(20) {
+                h.record(rng.next_u64() >> (20 + rng.below(44)));
+            }
+        }
+        let frame = s.encode_melb();
+        if MetricsSnapshot::decode_melb(&frame).unwrap() != s {
+            return false;
+        }
+        for _ in 0..8 {
+            let cut = rng.below(frame.len() as u64) as usize;
+            if MetricsSnapshot::decode_melb(&frame[..cut]).is_ok() {
+                return false;
+            }
+        }
+        let mut padded = frame;
+        padded.push(rng.next_u64() as u8);
+        MetricsSnapshot::decode_melb(&padded).is_err()
+    });
 }
 
 #[test]

@@ -16,6 +16,7 @@
 //! meliso serve-bench [--device ID] [--clients N] [--requests N]
 //!              [--models N] [--window-us N] [--batch-max N]
 //!              [--queue-cap N] [--serve-workers N] [--serve-cache on|off]
+//!              [--overload F]
 //! meliso fleet-bench [--device ID] [--fleet-nodes N] [--replication N]
 //!              [--fail-rate F] [--fail-seed N] [+ serve-bench flags]
 //! meliso metrics [--device ID]                     # telemetry snapshot demo
@@ -83,7 +84,11 @@ COMMANDS:
                              programmed-crossbar cache; reports p50/p95/p99
                              latency, throughput, and cache hits, and writes
                              <out>/serve-bench/{summary,BENCH}.json
-                             (e.g. `meliso serve-bench --clients 16 --models 4`)
+                             (e.g. `meliso serve-bench --clients 16 --models 4`);
+                             with --overload F, first calibrates capacity
+                             closed-loop, then offers F x capacity open-loop
+                             with load shedding and reports goodput/shed rate
+                             (e.g. `meliso serve-bench --overload 2`)
   fleet-bench [--device ID]  Node/router fleet serving: clients -> router
                              (consistent-hash placement, replication,
                              failure recovery) -> serialized frames -> N
@@ -148,6 +153,10 @@ OPTIONS:
                                    [default: 2]
   --serve-cache <on|off>           serve-bench: programmed-crossbar cache
                                    [default: on]
+  --overload <F>                   serve-bench: offered load as a multiple of
+                                   calibrated capacity (calibrate closed-loop,
+                                   then pace arrivals at F x capacity with
+                                   shedding; 0 = closed loop) [default: 0]
   --fleet-nodes <N>                fleet-bench: serving nodes behind the
                                    router [default: 2]
   --replication <N>                fleet-bench: replicas per model digest
@@ -276,6 +285,15 @@ impl Args {
                             )))
                         }
                     };
+                }
+                "overload" => {
+                    let f: f64 = parse_num(name, req(name, v)?)?;
+                    if !f.is_finite() || f < 0.0 {
+                        return Err(Error::Config(
+                            "--overload must be a non-negative factor".into(),
+                        ));
+                    }
+                    config.overload.factor = f;
                 }
                 "fleet-nodes" => {
                     config.fleet.nodes = parse_positive(name, req(name, v)?)?;
@@ -550,6 +568,19 @@ mod tests {
         assert!(parse("serve-bench --batch-max 0").is_err());
         assert!(parse("serve-bench --serve-cache maybe").is_err());
         assert!(parse("serve-bench --window-us minus").is_err());
+    }
+
+    #[test]
+    fn parses_overload_flag() {
+        let a = parse("serve-bench --overload 2.5 --clients 4").unwrap();
+        assert_eq!(a.config.overload.factor, 2.5);
+        assert_eq!(a.config.serve.clients, 4);
+        // Default: closed loop, no overload leg.
+        assert_eq!(parse("serve-bench").unwrap().config.overload.factor, 0.0);
+        // Rejections.
+        assert!(parse("serve-bench --overload -1").is_err());
+        assert!(parse("serve-bench --overload lots").is_err());
+        assert!(parse("serve-bench --overload").is_err());
     }
 
     #[test]

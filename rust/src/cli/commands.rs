@@ -604,6 +604,33 @@ fn serve_bench(args: &Args, device_id: &str) -> Result<i32> {
     let report = run_serve(&ctx.engine, &device, &opts)?;
     let telemetry = capture.map(ObsCapture::finish);
 
+    // `--overload F`: the closed-loop run above doubles as the
+    // calibration leg — its fitted rate is the capacity estimate.  The
+    // overload leg then offers F x capacity open-loop with shedding
+    // (plus the `[overload]` deadline, if any) and reports goodput and
+    // shed rate alongside the base summary.
+    let ov = &args.config.overload;
+    let overload = if ov.factor > 0.0 {
+        let capacity = if report.fitted_rps.is_finite() && report.fitted_rps > 0.0 {
+            report.fitted_rps
+        } else {
+            report.throughput
+        };
+        let offered_rps = ov.factor * capacity;
+        let oopts = ServeOptions {
+            arrival_rps: Some(offered_rps),
+            shed_on_full: true,
+            deadline: (ov.deadline_us > 0)
+                .then(|| std::time::Duration::from_micros(ov.deadline_us)),
+            measure_error: false,
+            ..opts.clone()
+        };
+        let oreport = run_serve(&ctx.engine, &device, &oopts)?;
+        Some((oreport, offered_rps))
+    } else {
+        None
+    };
+
     let mut t = TextTable::new(["metric", "value"]).with_title(format!(
         "Request serving: {} models of {}x{} on {} (engine={}, cache={})",
         opts.models,
@@ -638,42 +665,69 @@ fn serve_bench(args: &Args, device_id: &str) -> Result<i32> {
         w.echo(&stage_breakdown_table(snap).render());
         write_metrics_artifacts(snap, w.dir())?;
     }
-    w.json(
-        "summary",
-        &obj([
-            ("id", Json::Str("serve-bench".into())),
-            ("engine", Json::Str(ctx.engine_name().into())),
-            ("device", Json::Str(device_label)),
-            ("rows", Json::Num(opts.rows as f64)),
-            ("cols", Json::Num(opts.cols as f64)),
-            ("clients", Json::Num(opts.clients as f64)),
-            ("requests_per_client", Json::Num(opts.requests_per_client as f64)),
-            ("models", Json::Num(opts.models as f64)),
-            ("window_us", Json::Num(s.window_us as f64)),
-            ("batch_max", Json::Num(opts.batch_max as f64)),
-            ("queue_capacity", Json::Num(opts.queue_capacity as f64)),
-            ("workers", Json::Num(opts.workers as f64)),
-            ("cache", Json::Bool(opts.cache)),
-            ("requests", Json::Num(report.requests as f64)),
-            ("batches", Json::Num(report.batches as f64)),
-            ("mean_batch", Json::Num(report.mean_batch)),
-            ("wall_secs", Json::Num(report.wall_secs)),
-            ("throughput_req_s", Json::Num(report.throughput)),
-            ("p50_ms", Json::Num(report.p50_ms)),
-            ("p95_ms", Json::Num(report.p95_ms)),
-            ("p99_ms", Json::Num(report.p99_ms)),
-            ("programs", Json::Num(report.programs as f64)),
-            ("cache_hits", Json::Num(report.cache.hits as f64)),
-            ("cache_misses", Json::Num(report.cache.misses as f64)),
-            ("cache_evictions", Json::Num(report.cache.evictions as f64)),
-            ("mean_abs_error", Json::Num(report.mean_abs_error)),
-            ("fitted_req_s", Json::Num(report.fitted_rps)),
+    if let Some((o, offered_rps)) = &overload {
+        let shed_rate = o.shed as f64 / o.offered.max(1) as f64;
+        let mut ot = TextTable::new(["metric", "value"]).with_title(format!(
+            "Overload leg: {:.2}x capacity ({:.0} req/s offered)",
+            ov.factor, offered_rps,
+        ));
+        ot.push(["offered", &o.offered.to_string()]);
+        ot.push(["served (goodput)", &o.requests.to_string()]);
+        ot.push(["shed", &o.shed.to_string()]);
+        ot.push(["shed rate", &format!("{shed_rate:.3}")]);
+        ot.push(["goodput (req/s)", &fnum(o.throughput)]);
+        ot.push(["p99 latency (ms)", &fnum(o.p99_ms)]);
+        w.echo(&ot.render());
+    }
+    let mut summary = vec![
+        ("id", Json::Str("serve-bench".into())),
+        ("engine", Json::Str(ctx.engine_name().into())),
+        ("device", Json::Str(device_label)),
+        ("rows", Json::Num(opts.rows as f64)),
+        ("cols", Json::Num(opts.cols as f64)),
+        ("clients", Json::Num(opts.clients as f64)),
+        ("requests_per_client", Json::Num(opts.requests_per_client as f64)),
+        ("models", Json::Num(opts.models as f64)),
+        ("window_us", Json::Num(s.window_us as f64)),
+        ("batch_max", Json::Num(opts.batch_max as f64)),
+        ("queue_capacity", Json::Num(opts.queue_capacity as f64)),
+        ("workers", Json::Num(opts.workers as f64)),
+        ("cache", Json::Bool(opts.cache)),
+        ("requests", Json::Num(report.requests as f64)),
+        ("batches", Json::Num(report.batches as f64)),
+        ("mean_batch", Json::Num(report.mean_batch)),
+        ("wall_secs", Json::Num(report.wall_secs)),
+        ("throughput_req_s", Json::Num(report.throughput)),
+        ("p50_ms", Json::Num(report.p50_ms)),
+        ("p95_ms", Json::Num(report.p95_ms)),
+        ("p99_ms", Json::Num(report.p99_ms)),
+        ("programs", Json::Num(report.programs as f64)),
+        ("cache_hits", Json::Num(report.cache.hits as f64)),
+        ("cache_misses", Json::Num(report.cache.misses as f64)),
+        ("cache_evictions", Json::Num(report.cache.evictions as f64)),
+        ("mean_abs_error", Json::Num(report.mean_abs_error)),
+        ("fitted_req_s", Json::Num(report.fitted_rps)),
+        (
+            "nodes_for_1e8_per_day",
+            Json::Num(report.nodes_for_1e8_per_day as f64),
+        ),
+    ];
+    if let Some((o, offered_rps)) = &overload {
+        summary.extend([
+            ("overload_factor", Json::Num(ov.factor)),
+            ("overload_offered_req_s", Json::Num(*offered_rps)),
+            ("overload_offered", Json::Num(o.offered as f64)),
+            ("overload_served", Json::Num(o.requests as f64)),
+            ("overload_shed", Json::Num(o.shed as f64)),
             (
-                "nodes_for_1e8_per_day",
-                Json::Num(report.nodes_for_1e8_per_day as f64),
+                "overload_shed_rate",
+                Json::Num(o.shed as f64 / o.offered.max(1) as f64),
             ),
-        ]),
-    )?;
+            ("overload_goodput_req_s", Json::Num(o.throughput)),
+            ("overload_p99_ms", Json::Num(o.p99_ms)),
+        ]);
+    }
+    w.json("summary", &obj(summary))?;
     w.echo(&format!(
         "capacity: at 1e8 requests/day this fabric needs {} node(s) \
          (fitted {:.0} req/s/node)",
@@ -970,6 +1024,8 @@ mod tests {
         assert!(doc.get("mean_abs_error").unwrap().as_f64().unwrap().is_finite());
         assert!(doc.get("fitted_req_s").unwrap().as_f64().unwrap() > 0.0);
         assert!(doc.get("nodes_for_1e8_per_day").unwrap().as_f64().unwrap() >= 1.0);
+        // Without --overload the overload keys stay out of the summary.
+        assert!(doc.get("overload_factor").is_none());
         let bench = read_bench_json(&dir.join("serve-bench/BENCH.json")).unwrap();
         assert_eq!(bench.len(), 1);
         assert_eq!(bench[0].name, "serve-bench-native-cached");
@@ -977,6 +1033,50 @@ mod tests {
         // Unknown device is a clean config error.
         let args = parse(&["serve-bench", "--device", "unobtainium", "--quiet"]);
         assert!(dispatch(&args).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn serve_bench_overload_leg_writes_shed_accounting() {
+        let dir = std::env::temp_dir().join("meliso_serve_bench_overload_cli_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let args = parse(&[
+            "serve-bench",
+            "--device",
+            "epiram",
+            "--overload",
+            "2",
+            "--clients",
+            "3",
+            "--requests",
+            "8",
+            "--models",
+            "2",
+            "--size",
+            "16",
+            "--queue-cap",
+            "8",
+            "--batch-max",
+            "4",
+            "--quiet",
+            "--out",
+            dir.to_str().unwrap(),
+        ]);
+        assert_eq!(dispatch(&args).unwrap(), 0);
+        let summary = std::fs::read_to_string(dir.join("serve-bench/summary.json")).unwrap();
+        let doc = crate::util::json::Json::parse(&summary).unwrap();
+        // The base (calibration) summary keys are untouched.
+        assert_eq!(doc.get("requests").unwrap().as_f64(), Some(24.0));
+        // The overload leg's ledger is exact: offered == served + shed.
+        assert_eq!(doc.get("overload_factor").unwrap().as_f64(), Some(2.0));
+        let offered = doc.get("overload_offered").unwrap().as_f64().unwrap();
+        let served = doc.get("overload_served").unwrap().as_f64().unwrap();
+        let shed = doc.get("overload_shed").unwrap().as_f64().unwrap();
+        assert_eq!(offered, 24.0);
+        assert_eq!(served + shed, offered);
+        let rate = doc.get("overload_shed_rate").unwrap().as_f64().unwrap();
+        assert!((rate - shed / offered).abs() < 1e-12);
+        assert!(doc.get("overload_offered_req_s").unwrap().as_f64().unwrap() > 0.0);
         let _ = std::fs::remove_dir_all(dir);
     }
 

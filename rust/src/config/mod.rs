@@ -27,6 +27,11 @@
 //! cache = true                # programmed-crossbar cache on/off
 //! cache_capacity = 32         # models resident at once
 //!
+//! [overload]                  # admission control (`serve-bench --overload`)
+//! factor = 2.0                # offered load as a multiple of capacity (0 = closed loop)
+//! deadline_us = 0             # per-request SLO deadline, microseconds (0 = none)
+//! shed = true                 # reject on full queue instead of blocking
+//!
 //! [fleet]                     # node/router fleet (`meliso fleet-bench`)
 //! nodes = 2                   # serving nodes behind the router
 //! replication = 1             # replicas per model digest
@@ -187,6 +192,31 @@ impl Default for ServeSettings {
     }
 }
 
+/// Overload / admission-control settings (`meliso serve-bench
+/// --overload <factor>` and the `[overload]` TOML section).
+///
+/// All three knobs default to "off": the default serve-bench run is
+/// the closed-loop, backpressure-only configuration whose outputs are
+/// bit-identical to the pre-admission-control scheduler (DESIGN.md
+/// §18).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct OverloadSettings {
+    /// Offered load as a multiple of calibrated capacity.  `0.0`
+    /// disables open-loop pacing (clients submit as fast as
+    /// backpressure allows).  When positive, serve-bench first runs a
+    /// closed-loop calibration leg to measure capacity, then paces
+    /// client arrivals at `factor x capacity` requests/s.
+    pub factor: f64,
+    /// Per-request SLO deadline in microseconds from admission
+    /// (`0` = no deadline).  Expired requests are rejected at
+    /// admission or dropped at `pop_batch`, never served late.
+    pub deadline_us: u64,
+    /// Shed on a full queue (reject with a typed reason) instead of
+    /// blocking the producer.  Implied by a positive `factor`: an
+    /// open-loop run that blocks is not offering the configured load.
+    pub shed: bool,
+}
+
 /// Fleet-fabric settings (`meliso fleet-bench` and the `[fleet]` TOML
 /// section).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -289,6 +319,9 @@ pub struct RunConfig {
     pub shard: ShardSettings,
     /// Request-serving settings (`meliso serve-bench`).
     pub serve: ServeSettings,
+    /// Overload / admission-control settings (`--overload` /
+    /// `[overload]`).
+    pub overload: OverloadSettings,
     /// Fleet-fabric settings (`meliso fleet-bench`).
     pub fleet: FleetSettings,
     /// Telemetry settings (`--obs` / `[obs]`).
@@ -313,6 +346,7 @@ impl Default for RunConfig {
             pipeline: PipelineSettings::default(),
             shard: ShardSettings::default(),
             serve: ServeSettings::default(),
+            overload: OverloadSettings::default(),
             fleet: FleetSettings::default(),
             obs: ObsSettings::default(),
             quiet: false,
@@ -493,6 +527,27 @@ impl RunConfig {
             cfg.serve.cache = v
                 .as_bool()
                 .ok_or_else(|| Error::Config("serve.cache must be a bool".into()))?;
+        }
+        if let Some(v) = doc.get("overload", "factor") {
+            cfg.overload.factor = v
+                .as_f64()
+                .filter(|f| f.is_finite() && *f >= 0.0)
+                .ok_or_else(|| {
+                    Error::Config("overload.factor must be a non-negative number".into())
+                })?;
+        }
+        if let Some(v) = doc.get("overload", "deadline_us") {
+            cfg.overload.deadline_us = v
+                .as_i64()
+                .filter(|&n| n >= 0)
+                .ok_or_else(|| {
+                    Error::Config("overload.deadline_us must be a non-negative int".into())
+                })? as u64;
+        }
+        if let Some(v) = doc.get("overload", "shed") {
+            cfg.overload.shed = v
+                .as_bool()
+                .ok_or_else(|| Error::Config("overload.shed must be a bool".into()))?;
         }
         if let Some(v) = doc.get("shard", "grid") {
             let (r, c) = parse_grid(
@@ -742,6 +797,30 @@ sigma_c2c = 0.035
         assert!(RunConfig::from_toml("[serve]\nrequests = -4\n").is_err());
         assert!(RunConfig::from_toml("[serve]\nwindow_us = -1\n").is_err());
         assert!(RunConfig::from_toml("[serve]\ncache = 3\n").is_err());
+    }
+
+    #[test]
+    fn overload_section_parses() {
+        let c = RunConfig::from_toml(
+            "[overload]\n\
+             factor = 2.5\n\
+             deadline_us = 400\n\
+             shed = true\n",
+        )
+        .unwrap();
+        assert_eq!(c.overload.factor, 2.5);
+        assert_eq!(c.overload.deadline_us, 400);
+        assert!(c.overload.shed);
+        // Defaults: everything off — the closed-loop, backpressure-only
+        // configuration.
+        let d = RunConfig::default().overload;
+        assert_eq!(d.factor, 0.0);
+        assert_eq!(d.deadline_us, 0);
+        assert!(!d.shed);
+        // Rejections.
+        assert!(RunConfig::from_toml("[overload]\nfactor = -1.0\n").is_err());
+        assert!(RunConfig::from_toml("[overload]\ndeadline_us = -5\n").is_err());
+        assert!(RunConfig::from_toml("[overload]\nshed = 1\n").is_err());
     }
 
     #[test]

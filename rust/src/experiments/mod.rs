@@ -10,6 +10,7 @@ pub mod fig5;
 pub mod fleet;
 pub mod mitigation;
 pub mod obs;
+pub mod overload;
 pub mod pipeline;
 pub mod registry;
 pub mod serve;

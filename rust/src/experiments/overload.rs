@@ -1,0 +1,193 @@
+//! Extension experiment `overload-sweep`: goodput, latency, and shed
+//! rate vs offered load, driven from 0.5x to 4x calibrated capacity.
+//!
+//! The sweep first runs one closed-loop calibration leg (no pacing, no
+//! shedding — backpressure only) to estimate the fabric's capacity in
+//! requests/s, then replays the same workload open-loop at each
+//! `FACTORS` multiple of that capacity with load shedding enabled.
+//! Below capacity the curve is arrival-limited: goodput tracks offered
+//! load and the shed rate stays near zero.  Past capacity goodput
+//! plateaus — admission control sheds the excess at the door instead
+//! of letting queue delay grow without bound — so the shed rate rises
+//! monotonically with offered load while p99 stays bounded.  That
+//! plateau is the overload-hardening contract (DESIGN.md §18): the
+//! perf suite asserts saturated goodput stays within 10% of the
+//! 1x-capacity plateau.
+//!
+//! Artifacts: `overload-sweep/series.csv` (one row per factor) and
+//! `overload-sweep/summary.json` (capacity estimate + rows), the
+//! curves OPERATIONS.md's "reading an overload sweep" walks through.
+
+use std::time::Duration;
+
+use crate::device::params::NonIdealities;
+use crate::device::presets;
+use crate::error::Result;
+use crate::report::table::{fnum, TextTable};
+use crate::serve::{run_serve, ServeOptions, ServeReport};
+use crate::util::csv::CsvTable;
+use crate::util::json::{obj, Json};
+
+use super::context::Ctx;
+
+/// Offered-load factors swept, as multiples of calibrated capacity.
+pub const FACTORS: [f64; 4] = [0.5, 1.0, 2.0, 4.0];
+
+/// The serving shape shared by the calibration leg and every overload
+/// leg — identical except for pacing and shedding, so the legs measure
+/// admission control and nothing else.
+fn base_opts(ctx: &Ctx, requests_per_client: usize) -> ServeOptions {
+    ServeOptions {
+        clients: 4,
+        requests_per_client,
+        models: 2,
+        rows: crate::ROWS,
+        cols: crate::COLS,
+        queue_capacity: 32,
+        batch_max: 16,
+        window: Duration::from_micros(200),
+        workers: 2,
+        cache: true,
+        cache_capacity: 8,
+        measure_error: false,
+        seed: ctx.seed,
+        ..ServeOptions::default()
+    }
+}
+
+/// Run the sweep.
+pub fn run(ctx: &Ctx) -> Result<Json> {
+    let w = ctx.writer("overload-sweep");
+    let device = presets::ag_si().params.masked(NonIdealities::FULL);
+    let requests_per_client = ctx.population.clamp(8, 64);
+    if requests_per_client != ctx.population && !ctx.quiet {
+        eprintln!(
+            "overload-sweep: requests per client capped at {requests_per_client} \
+             (requested {})",
+            ctx.population
+        );
+    }
+
+    // Calibration: closed loop, backpressure only.  The fitted rate is
+    // the capacity estimate the factors multiply.
+    let cal = run_serve(&ctx.engine, &device, &base_opts(ctx, requests_per_client))?;
+    let capacity = if cal.fitted_rps.is_finite() && cal.fitted_rps > 0.0 {
+        cal.fitted_rps
+    } else {
+        cal.throughput
+    };
+
+    let mut t = TextTable::new([
+        "factor", "offered req/s", "offered", "served", "shed", "shed rate",
+        "goodput req/s", "p50 ms", "p99 ms",
+    ])
+    .with_title(format!(
+        "Overload sweep: goodput/shed vs offered load (capacity {:.0} req/s, engine={})",
+        capacity,
+        ctx.engine_name(),
+    ));
+    let mut csv = CsvTable::new([
+        "factor",
+        "offered_req_s",
+        "offered",
+        "served",
+        "shed",
+        "shed_rate",
+        "goodput_req_s",
+        "p50_ms",
+        "p99_ms",
+    ]);
+    let mut rows = Vec::new();
+
+    for factor in FACTORS {
+        let offered_rps = factor * capacity;
+        let opts = ServeOptions {
+            arrival_rps: Some(offered_rps),
+            shed_on_full: true,
+            ..base_opts(ctx, requests_per_client)
+        };
+        let r: ServeReport = run_serve(&ctx.engine, &device, &opts)?;
+        let shed_rate = r.shed as f64 / r.offered.max(1) as f64;
+        t.push([
+            format!("{factor:.1}x"),
+            fnum(offered_rps),
+            r.offered.to_string(),
+            r.requests.to_string(),
+            r.shed.to_string(),
+            format!("{shed_rate:.3}"),
+            fnum(r.throughput),
+            fnum(r.p50_ms),
+            fnum(r.p99_ms),
+        ]);
+        csv.push([
+            factor.to_string(),
+            offered_rps.to_string(),
+            r.offered.to_string(),
+            r.requests.to_string(),
+            r.shed.to_string(),
+            shed_rate.to_string(),
+            r.throughput.to_string(),
+            r.p50_ms.to_string(),
+            r.p99_ms.to_string(),
+        ]);
+        rows.push(obj([
+            ("factor", Json::Num(factor)),
+            ("offered_req_s", Json::Num(offered_rps)),
+            ("offered", Json::Num(r.offered as f64)),
+            ("served", Json::Num(r.requests as f64)),
+            ("shed", Json::Num(r.shed as f64)),
+            ("shed_rate", Json::Num(shed_rate)),
+            ("goodput_req_s", Json::Num(r.throughput)),
+            ("p50_ms", Json::Num(r.p50_ms)),
+            ("p99_ms", Json::Num(r.p99_ms)),
+        ]));
+    }
+
+    w.echo(&t.render());
+    w.csv("series", &csv)?;
+    let summary = obj([
+        ("id", Json::Str("overload-sweep".into())),
+        ("requests_per_client", Json::Num(requests_per_client as f64)),
+        ("capacity_req_s", Json::Num(capacity)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    w.json("summary", &summary)?;
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_sheds_monotonically_and_accounts_exactly() {
+        let dir = std::env::temp_dir().join("meliso_overload_sweep_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ctx = Ctx::native(12, &dir);
+        let s = run(&ctx).unwrap();
+        assert!(s.get("capacity_req_s").unwrap().as_f64().unwrap() > 0.0);
+        let rows = s.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), FACTORS.len());
+        let num = |r: &Json, k: &str| r.get(k).unwrap().as_f64().unwrap();
+        let mut prev_rate = 0.0f64;
+        for r in rows {
+            // The ledger is exact at every offered load: nothing is
+            // silently dropped, nothing double-counted.
+            assert_eq!(num(r, "served") + num(r, "shed"), num(r, "offered"));
+            assert!(num(r, "goodput_req_s") > 0.0);
+            assert!(num(r, "p50_ms") <= num(r, "p99_ms"));
+            // Shed rate rises (to scheduling-noise tolerance) with
+            // offered load.
+            let rate = num(r, "shed_rate");
+            assert!((0.0..=1.0).contains(&rate));
+            assert!(
+                rate >= prev_rate - 0.05,
+                "shed rate fell from {prev_rate} to {rate}"
+            );
+            prev_rate = prev_rate.max(rate);
+        }
+        assert!(dir.join("overload-sweep/series.csv").exists());
+        assert!(dir.join("overload-sweep/summary.json").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -6,8 +6,8 @@ use crate::util::json::Json;
 
 use super::context::Ctx;
 use super::{
-    fig2, fig3, fig4, fig5, fleet, mitigation, obs, pipeline, serve, shard, table1, table2,
-    xtra,
+    fig2, fig3, fig4, fig5, fleet, mitigation, obs, overload, pipeline, serve, shard, table1,
+    table2, xtra,
 };
 
 /// Experiment descriptor.
@@ -136,6 +136,12 @@ pub fn entries() -> Vec<Entry> {
             run: fleet::run,
         },
         Entry {
+            id: "overload-sweep",
+            title: "Extension: goodput/shed rate vs offered load (0.5x-4x capacity)",
+            paper: false,
+            run: overload::run,
+        },
+        Entry {
             id: "obs-overhead",
             title: "Extension: telemetry overhead and per-stage serving breakdown",
             paper: false,
@@ -212,6 +218,7 @@ mod tests {
         assert!(msg.contains("shard-sweep"), "{msg}");
         assert!(msg.contains("serve-sweep"), "{msg}");
         assert!(msg.contains("fleet-sweep"), "{msg}");
+        assert!(msg.contains("overload-sweep"), "{msg}");
         assert!(msg.contains("obs-overhead"), "{msg}");
         let _ = std::fs::remove_dir_all(dir);
     }

@@ -15,6 +15,7 @@ use std::time::Instant;
 /// origin is arbitrary (only differences between two readings carry
 /// meaning).
 pub trait Clock: Send + Sync {
+    /// Nanoseconds since the clock's (arbitrary) origin.
     fn now_ns(&self) -> u64;
 }
 
@@ -28,6 +29,7 @@ pub struct MonotonicClock {
 }
 
 impl MonotonicClock {
+    /// Unanchored clock; the origin pins at the first `now_ns` call.
     pub const fn new() -> Self {
         Self { anchor: OnceLock::new() }
     }
@@ -54,14 +56,17 @@ pub struct MockClock {
 }
 
 impl MockClock {
+    /// A mock clock reading 0 until advanced.
     pub const fn new() -> Self {
         Self { now: AtomicU64::new(0) }
     }
 
+    /// Move time forward by `ns` nanoseconds.
     pub fn advance(&self, ns: u64) {
         self.now.fetch_add(ns, Ordering::Relaxed);
     }
 
+    /// Jump time to an absolute reading of `ns` nanoseconds.
     pub fn set(&self, ns: u64) {
         self.now.store(ns, Ordering::Relaxed);
     }

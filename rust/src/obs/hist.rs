@@ -40,6 +40,7 @@ pub struct Histogram {
 }
 
 impl Histogram {
+    /// An empty histogram (`const`: usable in `static` initializers).
     pub const fn new() -> Self {
         const Z: AtomicU64 = AtomicU64::new(0);
         Self { counts: [Z; BUCKETS], count: AtomicU64::new(0), sum: AtomicU64::new(0) }
@@ -56,6 +57,7 @@ impl Histogram {
         }
     }
 
+    /// Record one value (nanoseconds by convention).
     #[inline]
     pub fn record(&self, v: u64) {
         self.counts[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
@@ -63,11 +65,13 @@ impl Histogram {
         self.sum.fetch_add(v, Ordering::Relaxed);
     }
 
+    /// Record a [`Duration`] as nanoseconds (saturating at `u64::MAX`).
     #[inline]
     pub fn record_duration(&self, d: Duration) {
         self.record(d.as_nanos().min(u64::MAX as u128) as u64);
     }
 
+    /// Owned point-in-time copy (exact after writers are joined).
     pub fn snapshot(&self) -> HistogramSnapshot {
         let mut counts = [0u64; BUCKETS];
         for (dst, src) in counts.iter_mut().zip(self.counts.iter()) {
@@ -80,6 +84,7 @@ impl Histogram {
         }
     }
 
+    /// Zero every bucket and the exact totals.
     pub fn reset(&self) {
         for c in &self.counts {
             c.store(0, Ordering::Relaxed);
@@ -109,6 +114,7 @@ pub struct HistogramSnapshot {
 }
 
 impl HistogramSnapshot {
+    /// An all-zero snapshot (the merge identity).
     pub fn empty() -> Self {
         Self { counts: [0; BUCKETS], count: 0, sum: 0 }
     }
@@ -121,6 +127,7 @@ impl HistogramSnapshot {
         self.sum += v;
     }
 
+    /// Record a [`Duration`] as nanoseconds (saturating at `u64::MAX`).
     pub fn record_duration(&mut self, d: Duration) {
         self.record(d.as_nanos().min(u64::MAX as u128) as u64);
     }
@@ -149,6 +156,7 @@ impl HistogramSnapshot {
         }
     }
 
+    /// Has nothing been recorded?
     pub fn is_empty(&self) -> bool {
         self.count == 0
     }

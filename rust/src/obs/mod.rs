@@ -24,6 +24,8 @@
 //! one line.  Time comes from a [`Clock`] so tests can drive spans
 //! deterministically with a [`MockClock`].
 
+#![warn(missing_docs)]
+
 pub mod clock;
 pub mod hist;
 pub mod registry;
@@ -151,6 +153,7 @@ pub struct StageSpan<'a> {
 }
 
 impl<'a> StageSpan<'a> {
+    /// Open a span now; it records `end - start` into `hist` on drop.
     pub fn start(clock: &'a dyn Clock, hist: &'a Histogram) -> Self {
         Self { clock, hist, start: clock.now_ns() }
     }

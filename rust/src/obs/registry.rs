@@ -26,24 +26,29 @@ use super::snapshot::MetricsSnapshot;
 pub struct Counter(AtomicU64);
 
 impl Counter {
+    /// A zeroed counter (`const`: usable in `static` initializers).
     pub const fn new() -> Self {
         Self(AtomicU64::new(0))
     }
 
+    /// Count one event.
     #[inline]
     pub fn incr(&self) {
         self.0.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count `n` events at once.
     #[inline]
     pub fn add(&self, n: u64) {
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Current total (exact only after writers are joined).
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
 
+    /// Zero the counter.
     pub fn reset(&self) {
         self.0.store(0, Ordering::Relaxed);
     }
@@ -67,19 +72,23 @@ impl std::fmt::Debug for Counter {
 pub struct Gauge(AtomicU64);
 
 impl Gauge {
+    /// A zeroed gauge (`const`: usable in `static` initializers).
     pub const fn new() -> Self {
         Self(AtomicU64::new(0))
     }
 
+    /// Record the current level.
     #[inline]
     pub fn set(&self, v: u64) {
         self.0.store(v, Ordering::Relaxed);
     }
 
+    /// Last recorded level.
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
 
+    /// Zero the gauge.
     pub fn reset(&self) {
         self.0.store(0, Ordering::Relaxed);
     }
@@ -122,10 +131,15 @@ pub enum Stage {
     ShardVerify,
     /// One layer forward inside the inference pipeline.
     PipelineLayer,
+    /// Time a request sat queued before admission control shed it at
+    /// `pop_batch` for a missed deadline (the wasted wait — work the
+    /// queue held but never served; DESIGN.md §18).
+    ShedWait,
 }
 
 impl Stage {
-    pub const COUNT: usize = 9;
+    /// Number of stages (sizes the registry and snapshot arrays).
+    pub const COUNT: usize = 10;
 
     /// Every stage, in lifecycle order — the single source of the
     /// stage list for snapshots, tables, and accounting sums.
@@ -139,8 +153,10 @@ impl Stage {
         Stage::TransportDecode,
         Stage::ShardVerify,
         Stage::PipelineLayer,
+        Stage::ShedWait,
     ];
 
+    /// Stable snake_case name (snapshot JSON keys, table rows).
     pub fn name(&self) -> &'static str {
         match self {
             Stage::QueueWait => "queue_wait",
@@ -152,6 +168,7 @@ impl Stage {
             Stage::TransportDecode => "transport_decode",
             Stage::ShardVerify => "shard_verify",
             Stage::PipelineLayer => "pipeline_layer",
+            Stage::ShedWait => "shed_wait",
         }
     }
 
@@ -161,28 +178,54 @@ impl Stage {
 }
 
 /// Registry-wide event counters — the migrated union of the formerly
-/// ad-hoc serve/shard telemetry.
+/// ad-hoc serve/shard telemetry, plus the admission-control family.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CounterId {
+    /// Requests fully served (decoded back to the client).
     RequestsServed,
+    /// Batches executed by scheduler workers.
     BatchesServed,
+    /// Program-cache hits.
     CacheHits,
+    /// Program-cache misses.
     CacheMisses,
+    /// Program-cache LRU evictions.
     CacheEvictions,
+    /// Crossbar programming passes executed.
     ProgramsExecuted,
+    /// Crossbar reads executed.
     ReadsExecuted,
+    /// Transport bytes received (decoded envelopes).
     BytesIn,
+    /// Transport bytes sent (encoded envelopes).
     BytesOut,
+    /// Faults injected by the shard fault model.
     FaultsInjected,
+    /// Faults flagged by the checksum verifier.
     FaultsDetected,
+    /// Faults corrected by the checksum reduction.
     FaultsCorrected,
+    /// Faults detected but beyond the code's correction radius.
     FaultsUncorrectable,
+    /// Requests bounced off a closed node queue and re-routed by the
+    /// fleet router (detours — still served; DESIGN.md §18).
     RequestsShed,
+    /// Admissions refused because the queue was full in shed-on-full
+    /// mode (never served).
+    AdmissionRejected,
+    /// Admissions refused because the SLO deadline had already passed
+    /// at `push` (never queued).
+    AdmissionExpired,
+    /// Queued requests dropped at `pop_batch` because their deadline
+    /// expired while waiting (never served).
+    AdmissionDeadlineMissed,
 }
 
 impl CounterId {
-    pub const COUNT: usize = 14;
+    /// Number of counters (sizes the registry and snapshot arrays).
+    pub const COUNT: usize = 17;
 
+    /// Every counter, in declaration order (index order).
     pub const ALL: [CounterId; Self::COUNT] = [
         CounterId::RequestsServed,
         CounterId::BatchesServed,
@@ -198,8 +241,12 @@ impl CounterId {
         CounterId::FaultsCorrected,
         CounterId::FaultsUncorrectable,
         CounterId::RequestsShed,
+        CounterId::AdmissionRejected,
+        CounterId::AdmissionExpired,
+        CounterId::AdmissionDeadlineMissed,
     ];
 
+    /// Stable snake_case name (snapshot JSON keys, table rows).
     pub fn name(&self) -> &'static str {
         match self {
             CounterId::RequestsServed => "requests_served",
@@ -216,6 +263,9 @@ impl CounterId {
             CounterId::FaultsCorrected => "faults_corrected",
             CounterId::FaultsUncorrectable => "faults_uncorrectable",
             CounterId::RequestsShed => "requests_shed",
+            CounterId::AdmissionRejected => "admission_rejected",
+            CounterId::AdmissionExpired => "admission_expired",
+            CounterId::AdmissionDeadlineMissed => "admission_deadline_missed",
         }
     }
 
@@ -234,10 +284,13 @@ pub enum GaugeId {
 }
 
 impl GaugeId {
+    /// Number of gauges (sizes the registry and snapshot arrays).
     pub const COUNT: usize = 2;
 
+    /// Every gauge, in declaration order (index order).
     pub const ALL: [GaugeId; Self::COUNT] = [GaugeId::CacheEntries, GaugeId::QueueDepth];
 
+    /// Stable snake_case name (snapshot JSON keys, table rows).
     pub fn name(&self) -> &'static str {
         match self {
             GaugeId::CacheEntries => "cache_entries",
@@ -260,6 +313,21 @@ pub struct Registry {
 }
 
 impl Registry {
+    /// A zeroed, *disabled* registry.  `const`, so the process-wide
+    /// instance is ready before any instrumented code runs; local
+    /// instances make exact-count unit tests trivial:
+    ///
+    /// ```
+    /// use meliso::obs::{CounterId, Registry, Stage};
+    ///
+    /// let r = Registry::new();
+    /// r.counter(CounterId::CacheHits).incr();
+    /// r.counter(CounterId::CacheHits).add(2);
+    /// r.stage(Stage::Read).record(1_500);
+    /// let snap = r.snapshot();
+    /// assert_eq!(snap.counter(CounterId::CacheHits), 3);
+    /// assert_eq!(snap.stage(Stage::Read).count, 1);
+    /// ```
     pub const fn new() -> Self {
         const C: Counter = Counter::new();
         const G: Gauge = Gauge::new();
@@ -272,23 +340,29 @@ impl Registry {
         }
     }
 
+    /// Is recording on?  The [`crate::obs`] helpers check this before
+    /// touching any metric (the disabled path is this load + branch).
     #[inline]
     pub fn enabled(&self) -> bool {
         self.enabled.load(Ordering::Relaxed)
     }
 
+    /// Flip recording on or off (existing values are untouched).
     pub fn set_enabled(&self, on: bool) {
         self.enabled.store(on, Ordering::Relaxed);
     }
 
+    /// The counter cell for `id`.
     pub fn counter(&self, id: CounterId) -> &Counter {
         &self.counters[id.index()]
     }
 
+    /// The gauge cell for `id`.
     pub fn gauge(&self, id: GaugeId) -> &Gauge {
         &self.gauges[id.index()]
     }
 
+    /// The latency histogram for stage `id`.
     pub fn stage(&self, id: Stage) -> &Histogram {
         &self.stages[id.index()]
     }
@@ -306,6 +380,9 @@ impl Registry {
         }
     }
 
+    /// Copy every metric into an owned, serializable
+    /// [`MetricsSnapshot`] (values are read `Relaxed`; snapshot after
+    /// joining writers for exact totals).
     pub fn snapshot(&self) -> MetricsSnapshot {
         let mut snap = MetricsSnapshot::empty();
         for id in CounterId::ALL {
@@ -332,6 +409,8 @@ impl Default for Registry {
 /// path).
 static GLOBAL: Registry = Registry::new();
 
+/// The process-wide [`Registry`] every instrumented subsystem records
+/// into.
 pub fn registry() -> &'static Registry {
     &GLOBAL
 }

@@ -22,12 +22,16 @@ pub const SNAPSHOT_VERSION: u64 = 1;
 /// A plain-value copy of every registry metric.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MetricsSnapshot {
+    /// Counter totals, indexed by [`CounterId`] discriminant.
     pub counters: [u64; CounterId::COUNT],
+    /// Gauge levels, indexed by [`GaugeId`] discriminant.
     pub gauges: [u64; GaugeId::COUNT],
+    /// Per-stage latency histograms, indexed by [`Stage`] discriminant.
     pub stages: [HistogramSnapshot; Stage::COUNT],
 }
 
 impl MetricsSnapshot {
+    /// An all-zero snapshot (the merge identity).
     pub fn empty() -> Self {
         const E: HistogramSnapshot = HistogramSnapshot {
             counts: [0; super::hist::BUCKETS],
@@ -41,14 +45,17 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Total for counter `id`.
     pub fn counter(&self, id: CounterId) -> u64 {
         self.counters[id.index()]
     }
 
+    /// Level of gauge `id`.
     pub fn gauge(&self, id: GaugeId) -> u64 {
         self.gauges[id.index()]
     }
 
+    /// Latency histogram for stage `id`.
     pub fn stage(&self, id: Stage) -> &HistogramSnapshot {
         &self.stages[id.index()]
     }

@@ -1,16 +1,29 @@
-//! The request-serving driver: simulated clients -> bounded queue ->
-//! batching scheduler workers -> programmed-crossbar cache -> engine
-//! reads, with end-to-end telemetry.
+//! The request-serving driver: simulated clients -> admission queue
+//! -> batching scheduler workers -> programmed-crossbar cache ->
+//! engine reads, with end-to-end telemetry.
 //!
-//! The driver is what `meliso serve-bench`, the `serve-sweep`
-//! experiment, and the serving integration tests all run.  Everything
-//! the served *outputs* depend on is deterministic — model weights,
-//! programming noise, and request vectors are pure functions of the
-//! seeds, and a cached program serves bit-identically to an uncached
-//! one — while the *timing* telemetry (latency percentiles,
-//! throughput, realized batch sizes) reflects the actual concurrent
-//! execution.
+//! The driver is what `meliso serve-bench`, the `serve-sweep` and
+//! `overload-sweep` experiments, and the serving integration tests
+//! all run.  Everything the served *outputs* depend on is
+//! deterministic — model weights, programming noise, and request
+//! vectors are pure functions of the seeds, and a cached program
+//! serves bit-identically to an uncached one — while the *timing*
+//! telemetry (latency percentiles, throughput, realized batch sizes)
+//! reflects the actual concurrent execution.
+//!
+//! Load can be offered two ways.  The default **closed loop** has
+//! each client submit its next request as soon as admission accepts
+//! the previous one, so a full queue throttles the offered rate
+//! (backpressure) and every request is eventually served.  The
+//! **open loop** ([`ServeOptions::arrival_rps`]) paces submissions to
+//! a fixed offered rate regardless of drain speed — with
+//! [`ServeOptions::shed_on_full`] and/or a per-request
+//! [`ServeOptions::deadline`], offered load past capacity is *shed*
+//! (counted, never served) instead of silently stretching every
+//! latency, which is what keeps goodput at its plateau under
+//! saturation (the overload-sweep story; DESIGN.md §18).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -23,7 +36,7 @@ use crate::util::rng::{splitmix64, Xoshiro256};
 use crate::vmm::{DynEngine, ProgramSpec};
 
 use super::cache::{CacheCounts, ProgramCache};
-use super::scheduler::{BoundedQueue, Request};
+use super::scheduler::{AdmissionQueue, Request, Shed};
 
 /// Stream tags separating the model-weight and request-input
 /// populations of one serve seed.
@@ -39,8 +52,9 @@ pub struct ServeOptions {
     pub requests_per_client: usize,
     /// Distinct deployed models rotated across requests.
     pub models: usize,
-    /// Model geometry (weights are `rows x cols`).
+    /// Model geometry: weight rows (the request-vector length).
     pub rows: usize,
+    /// Model geometry: weight columns (the output length).
     pub cols: usize,
     /// Bounded request-queue capacity (backpressure bound).
     pub queue_capacity: usize,
@@ -66,6 +80,20 @@ pub struct ServeOptions {
     /// Programming-noise seed of model 0 (model `m` uses a derived
     /// child label).
     pub program_seed: u64,
+    /// Per-request SLO: a request older than this is shed (refused at
+    /// admission or dropped at pop) instead of served late.  `None`
+    /// disables deadlines — the pre-admission behavior.
+    pub deadline: Option<Duration>,
+    /// Full-queue policy: `true` rejects at admission (load shedding,
+    /// the overload mode); `false` blocks the producer (backpressure,
+    /// the default and the pre-admission behavior).
+    pub shed_on_full: bool,
+    /// Open-loop offered load, requests/sec across all clients:
+    /// clients pace their submissions to this rate regardless of how
+    /// fast the fabric drains (how real overload arrives).  `None` is
+    /// the closed loop — each client submits as fast as backpressure
+    /// admits.
+    pub arrival_rps: Option<f64>,
 }
 
 impl Default for ServeOptions {
@@ -85,6 +113,9 @@ impl Default for ServeOptions {
             measure_error: false,
             seed: 0x53_45_52_56, // "SERV"
             program_seed: 0x50_52_4F_47, // "PROG"
+            deadline: None,
+            shed_on_full: false,
+            arrival_rps: None,
         }
     }
 }
@@ -106,6 +137,18 @@ impl ServeOptions {
         ] {
             if v == 0 {
                 return Err(Error::Config(format!("serve: {name} must be > 0")));
+            }
+        }
+        if let Some(rps) = self.arrival_rps {
+            if !rps.is_finite() || rps <= 0.0 {
+                return Err(Error::Config(format!(
+                    "serve: arrival_rps must be finite and > 0, got {rps}"
+                )));
+            }
+        }
+        if let Some(d) = self.deadline {
+            if d.is_zero() {
+                return Err(Error::Config("serve: deadline must be > 0".into()));
             }
         }
         Ok(())
@@ -143,19 +186,33 @@ impl ServeOptions {
 pub struct ServeReport {
     /// Requests served to completion.
     pub requests: usize,
+    /// Requests the clients attempted to admit
+    /// (`== requests + shed`; equals `requests` in closed-loop runs
+    /// with shedding off).
+    pub offered: usize,
+    /// Requests shed by admission control and never served: refused
+    /// at `push` (queue full or deadline already expired) or dropped
+    /// at `pop_batch` (deadline expired while queued).  Distinct from
+    /// the fleet's detour count, which re-routes and still serves
+    /// (DESIGN.md §18).
+    pub shed: usize,
     /// Coalesced batches processed.
     pub batches: usize,
     /// Mean realized batch size.
     pub mean_batch: f64,
+    /// Wall-clock duration of the run, seconds.
     pub wall_secs: f64,
-    /// Requests per second of wall time.
+    /// Requests *served* per second of wall time — under overload
+    /// this is the goodput (shed requests don't count).
     pub throughput: f64,
     /// Enqueue-to-decode latency percentiles, milliseconds — quoted
     /// from [`ServeReport::latency`], so every report in the crate
     /// shares one bucket semantics (log2 buckets, `sqrt(2)` relative
     /// error bound; DESIGN.md §17).
     pub p50_ms: f64,
+    /// 95th-percentile enqueue-to-decode latency, milliseconds.
     pub p95_ms: f64,
+    /// 99th-percentile enqueue-to-decode latency, milliseconds.
     pub p99_ms: f64,
     /// The full enqueue-to-decode latency distribution (nanoseconds).
     pub latency: HistogramSnapshot,
@@ -235,7 +292,17 @@ pub fn run_serve(
     let specs = opts.model_specs();
     let inputs = opts.request_inputs();
     let cache = ProgramCache::new(opts.cache_capacity);
-    let queue: BoundedQueue<Request> = BoundedQueue::new(opts.queue_capacity);
+    let workers = opts.workers.max(1);
+    // One queue shard per worker; each client is a fairness lane.
+    let queue: AdmissionQueue<Request> = AdmissionQueue::new(opts.queue_capacity, workers)
+        .with_shed_on_full(opts.shed_on_full);
+    // Client-side admission refusals (queue-full + already-expired);
+    // pop-side deadline drops are read off the queue at the end.
+    let push_shed = AtomicU64::new(0);
+    // Admission attempts.  A push refused because the queue *closed*
+    // mid-run (engine failure shutdown) is neither served nor shed;
+    // it is un-counted so `offered == served + shed` stays exact.
+    let offered = AtomicU64::new(0);
     let tallies = Mutex::new(Tallies {
         latency: HistogramSnapshot::empty(),
         batches: 0,
@@ -246,13 +313,12 @@ pub fn run_serve(
         points: Vec::new(),
     });
     let failure: Mutex<Option<Error>> = Mutex::new(None);
-    let workers = opts.workers.max(1);
     let wall = Stopwatch::start();
 
     std::thread::scope(|scope| {
         // Scheduler workers: coalesce, group by model, program-or-hit,
-        // read, account.
-        for _ in 0..workers {
+        // read, account.  Each worker homes on its own queue shard.
+        for w in 0..workers {
             let queue = &queue;
             let cache = &cache;
             let specs = &specs;
@@ -260,7 +326,7 @@ pub fn run_serve(
             let failure = &failure;
             let wall = &wall;
             scope.spawn(move || loop {
-                let batch = queue.pop_batch(opts.batch_max, opts.window);
+                let batch = queue.pop_batch(w, opts.batch_max, opts.window);
                 if batch.is_empty() {
                     break; // closed and drained
                 }
@@ -280,22 +346,55 @@ pub fn run_serve(
         }
 
         // Simulated clients: seeded single-vector requests, rotating
-        // across models, blocking on the bounded queue (backpressure).
+        // across models.  Closed loop (no arrival_rps): each client
+        // submits as fast as admission allows.  Open loop: clients
+        // pace to the offered rate, so load past capacity is *real*
+        // overload the fabric must shed, not backpressure.
+        let submit_start = Instant::now();
+        let interval = opts.arrival_rps.map(|rps| {
+            Duration::from_secs_f64(opts.clients as f64 / rps)
+        });
         let client_handles: Vec<_> = (0..opts.clients)
             .map(|c| {
                 let queue = &queue;
                 let inputs = &inputs;
+                let push_shed = &push_shed;
+                let offered = &offered;
                 scope.spawn(move || {
                     for i in 0..opts.requests_per_client {
+                        if let Some(interval) = interval {
+                            let due = submit_start + interval * i as u32;
+                            let now = Instant::now();
+                            if due > now {
+                                std::thread::sleep(due - now);
+                            }
+                        }
                         let id = (c * opts.requests_per_client + i) as u64;
+                        let deadline_ns = opts
+                            .deadline
+                            .map(|d| queue.now_ns() + d.as_nanos().min(u64::MAX as u128) as u64);
                         let request = Request {
                             model: id as usize % opts.models,
                             id,
                             x: inputs.sample(id as usize),
                             enqueued: Instant::now(),
+                            client: c,
+                            deadline_ns,
                         };
-                        if queue.push(request).is_err() {
-                            break; // shut down mid-stream
+                        offered.fetch_add(1, Ordering::Relaxed);
+                        match queue.push(request, c, deadline_ns) {
+                            Ok(()) => {}
+                            Err(rejected) => match rejected.reason {
+                                // Shutdown mid-stream: stop submitting.
+                                Shed::Closed => {
+                                    offered.fetch_sub(1, Ordering::Relaxed);
+                                    break;
+                                }
+                                // Overload sheds: count and move on.
+                                _ => {
+                                    push_shed.fetch_add(1, Ordering::Relaxed);
+                                }
+                            },
                         }
                     }
                 })
@@ -313,6 +412,9 @@ pub fn run_serve(
     let wall_secs = wall.elapsed_secs();
     let t = tallies.into_inner().unwrap();
     let requests = t.latency.count as usize;
+    let shed = (push_shed.into_inner() + queue.dropped()) as usize;
+    let offered = offered.into_inner() as usize;
+    debug_assert_eq!(offered, requests + shed, "admission accounting must balance");
     let mean_rps = if wall_secs > 0.0 {
         requests as f64 / wall_secs
     } else {
@@ -321,6 +423,8 @@ pub fn run_serve(
     let (fitted_rps, nodes_for_1e8_per_day) = capacity_projection(&t.points, mean_rps);
     Ok(ServeReport {
         requests,
+        offered,
+        shed,
         batches: t.batches,
         mean_batch: if t.batches > 0 {
             t.batched_requests as f64 / t.batches as f64
@@ -512,6 +616,58 @@ mod tests {
         opts.queue_capacity = 1;
         let r = run_serve(&engine, &device, &opts).unwrap();
         assert_eq!(r.requests, 24);
+    }
+
+    #[test]
+    fn closed_loop_without_shedding_serves_everything() {
+        let engine = DynEngine::new(NativeEngine::default());
+        let device = presets::epiram().params;
+        let r = run_serve(&engine, &device, &tiny(true, 2)).unwrap();
+        assert_eq!(r.offered, 24);
+        assert_eq!(r.requests, 24);
+        assert_eq!(r.shed, 0);
+    }
+
+    #[test]
+    fn expired_deadlines_shed_but_accounting_balances() {
+        // A 1ns SLO: every request expires before any worker can
+        // reach it, so the run sheds instead of serving late — and
+        // the admission ledger still balances exactly.
+        let engine = DynEngine::new(NativeEngine::default());
+        let device = presets::epiram().params;
+        let mut opts = tiny(true, 2);
+        opts.deadline = Some(Duration::from_nanos(1));
+        opts.shed_on_full = true;
+        let r = run_serve(&engine, &device, &opts).unwrap();
+        assert_eq!(r.offered, 24);
+        assert_eq!(r.requests + r.shed, r.offered);
+        assert!(r.shed > 0, "a 1ns deadline must shed");
+    }
+
+    #[test]
+    fn open_loop_paces_and_still_balances() {
+        // A generous offered rate (far above any real capacity) keeps
+        // the pacing sleeps negligible; the point is that the open
+        // loop completes and the ledger balances.
+        let engine = DynEngine::new(NativeEngine::default());
+        let device = presets::epiram().params;
+        let mut opts = tiny(true, 2);
+        opts.arrival_rps = Some(1e6);
+        let r = run_serve(&engine, &device, &opts).unwrap();
+        assert_eq!(r.requests + r.shed, r.offered);
+        assert_eq!(r.offered, 24);
+    }
+
+    #[test]
+    fn bad_overload_knobs_rejected() {
+        let engine = DynEngine::new(NativeEngine::default());
+        let device = presets::epiram().params;
+        let mut opts = tiny(true, 1);
+        opts.arrival_rps = Some(0.0);
+        assert!(run_serve(&engine, &device, &opts).is_err());
+        let mut opts = tiny(true, 1);
+        opts.deadline = Some(Duration::ZERO);
+        assert!(run_serve(&engine, &device, &opts).is_err());
     }
 
     #[test]

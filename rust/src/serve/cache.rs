@@ -56,6 +56,11 @@ pub struct CacheKey {
 }
 
 impl CacheKey {
+    /// Digest the `(engine, spec, device)` triple into a cache key.
+    ///
+    /// Device parameters are hashed at full `f64` precision — the
+    /// programmed conductances are computed in `f64`, so sub-`f32`
+    /// parameter differences must produce distinct keys.
     pub fn new<E: VmmEngine + ?Sized>(
         engine: &E,
         spec: &ProgramSpec,
@@ -105,8 +110,11 @@ struct CacheInner {
 /// Consistent counter snapshot of a [`ProgramCache`].
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheCounts {
+    /// Lookups that found a resident program.
     pub hits: u64,
+    /// Lookups that had to program (racing workers may both miss).
     pub misses: u64,
+    /// Entries displaced by the LRU bound.
     pub evictions: u64,
     /// Entries currently resident.
     pub entries: u64,
@@ -125,6 +133,28 @@ impl CacheCounts {
 /// serve reports depend on them); each event additionally mirrors into
 /// the global registry when telemetry is enabled, so `meliso metrics`
 /// and the per-cache reports quote the same ledger.
+///
+/// # Example
+///
+/// ```
+/// use meliso::device::presets;
+/// use meliso::serve::ProgramCache;
+/// use meliso::vmm::{NativeEngine, ProgramSpec};
+///
+/// let cache = ProgramCache::new(4);
+/// let engine = NativeEngine::sequential();
+/// let params = presets::epiram().params;
+/// let spec = ProgramSpec::from_seed(2, 2, vec![0.5; 4], 7);
+///
+/// // First lookup programs (a miss); the repeat is a hit, and both
+/// // handles serve bit-identical reads.
+/// let a = cache.get_or_program(&engine, &spec, &params).unwrap();
+/// let b = cache.get_or_program(&engine, &spec, &params).unwrap();
+/// assert_eq!(a.read(&[1.0, 1.0], 1).unwrap(), b.read(&[1.0, 1.0], 1).unwrap());
+///
+/// let counts = cache.counts();
+/// assert_eq!((counts.hits, counts.misses, counts.entries), (1, 1, 1));
+/// ```
 pub struct ProgramCache {
     capacity: usize,
     inner: Mutex<CacheInner>,
@@ -156,6 +186,7 @@ impl ProgramCache {
         }
     }
 
+    /// Maximum number of resident programmed models.
     pub fn capacity(&self) -> usize {
         self.capacity
     }
@@ -299,6 +330,7 @@ impl ProgramCache {
         obs::incr(CounterId::CacheEvictions);
     }
 
+    /// Consistent snapshot of the hit/miss/eviction/residency ledger.
     pub fn counts(&self) -> CacheCounts {
         let entries = self.inner.lock().unwrap().map.len() as u64;
         CacheCounts {

@@ -9,10 +9,10 @@
 //! program-once/read-many engine contract ([`crate::vmm::program`]):
 //!
 //! ```text
-//! clients ──> BoundedQueue (backpressure) ──> scheduler workers
-//!                                               │  coalesce ≤ batch_max
-//!                                               │  within the window
-//!                                               ▼
+//! clients ──> AdmissionQueue (lanes, deadlines, ──> scheduler workers
+//!             backpressure or load shedding)       │  coalesce ≤ batch_max
+//!                                                  │  within the window
+//!                                                  ▼
 //!                                     ProgramCache ──miss──> VmmEngine::program
 //!                                               │hit
 //!                                               ▼
@@ -35,9 +35,12 @@
 //! * [`cache::ProgramCache`] — bounded LRU of programmed models keyed
 //!   by `(weights digest, device, program seed, engine config)`;
 //!   caches **programs**, never reads.
-//! * [`scheduler`] — the bounded blocking queue (producers throttle
-//!   when it fills; a closed queue rejects with a typed, recoverable
-//!   error) and window-based batch coalescing.
+//! * [`scheduler`] — the admission-controlled queue core: per-client
+//!   fairness lanes over per-worker shards, SLO deadlines, typed
+//!   [`Shed`] reasons, and window-based batch coalescing.  Full
+//!   queues either throttle producers (backpressure, the default) or
+//!   reject (load shedding); a closed queue rejects with a typed,
+//!   recoverable error either way.
 //! * [`transport`] — typed request/response envelopes serialized
 //!   through the MELB codec; every node hop round-trips bytes.
 //! * [`node`] — one fleet node: per-node cache, queue, worker pool,
@@ -52,7 +55,11 @@
 //!   cache counters, and (optionally) the exact-reference error.
 //!
 //! Architecture, cache-keying rationale, and backpressure semantics:
-//! DESIGN.md §14; fleet fabric: DESIGN.md §16.
+//! DESIGN.md §14; fleet fabric: DESIGN.md §16; admission control and
+//! overload behavior: DESIGN.md §18.  Operator-facing knobs and
+//! artifacts: OPERATIONS.md.
+
+#![warn(missing_docs)]
 
 pub mod bench;
 pub mod cache;
@@ -67,5 +74,5 @@ pub use node::{Node, NodeReport};
 pub use router::{
     model_digest, run_fleet, run_fleet_nodes, FleetOptions, FleetReport, Placement,
 };
-pub use scheduler::{BoundedQueue, QueueClosed, Request};
+pub use scheduler::{AdmissionQueue, BoundedQueue, QueueClosed, Rejected, Request, Shed};
 pub use transport::{Frame, RequestEnvelope, ResponseEnvelope};

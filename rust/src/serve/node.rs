@@ -16,6 +16,12 @@
 //! single-process driver and the fleet nodes now call it, which is
 //! what makes a 1-node fleet bit-identical to `run_serve` on the same
 //! seeds.
+//!
+//! Node intake queues are deliberately deadline-free and blocking
+//! (the [`BoundedQueue`] facade, not the admission core): the fleet's
+//! zero-lost-requests contract turns a closed queue into a *detour*
+//! (re-route and serve elsewhere), never a shed — the other half of
+//! the shed-vs-detour taxonomy (DESIGN.md §18).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Mutex};
@@ -130,6 +136,7 @@ struct NodeTallies {
 /// Telemetry snapshot of one node after a run.
 #[derive(Debug, Clone)]
 pub struct NodeReport {
+    /// The node's fleet index.
     pub id: usize,
     /// `false` once the node failed (injected or detected).
     pub alive: bool,
@@ -149,7 +156,9 @@ pub struct NodeReport {
     /// milliseconds — quoted from [`NodeReport::latency`], the same
     /// bucket semantics every other report uses (DESIGN.md §17).
     pub p50_ms: f64,
+    /// 95th-percentile submit-to-served latency, milliseconds.
     pub p95_ms: f64,
+    /// 99th-percentile submit-to-served latency, milliseconds.
     pub p99_ms: f64,
     /// The full submit-to-served latency distribution (nanoseconds);
     /// the fleet rollup merges these per-node histograms.
@@ -202,10 +211,12 @@ impl Node {
         }
     }
 
+    /// The node's fleet index.
     pub fn id(&self) -> usize {
         self.id
     }
 
+    /// Has the node not been failed?
     pub fn is_alive(&self) -> bool {
         self.alive.load(Ordering::SeqCst)
     }

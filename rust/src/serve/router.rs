@@ -106,6 +106,7 @@ impl Placement {
         self.alive.iter().filter(|&&a| a).count()
     }
 
+    /// Is `node` still live? (Out-of-range nodes read as dead.)
     pub fn is_alive(&self, node: usize) -> bool {
         self.alive.get(node).copied().unwrap_or(false)
     }
@@ -578,6 +579,12 @@ pub fn run_fleet_nodes(
     Ok(FleetReport {
         aggregate: ServeReport {
             requests,
+            // Node queues are deadline-free and blocking, so the fleet
+            // has no admission sheds: every offered request is served.
+            // [`FleetReport::shed`] counts *detours* — re-routed and
+            // still served — a different taxonomy (DESIGN.md §18).
+            offered: requests,
+            shed: 0,
             batches,
             mean_batch: if batches > 0 { batched / batches as f64 } else { 0.0 },
             wall_secs,

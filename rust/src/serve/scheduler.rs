@@ -1,24 +1,50 @@
-//! Batching scheduler primitives: a bounded blocking queue with
-//! backpressure, the request type, and latency accounting.
+//! Admission-controlled batching scheduler: sharded per-client lanes,
+//! SLO deadlines, typed shedding, and the bounded blocking queue.
 //!
 //! `tokio` is not in the offline registry; the serving substrate is
-//! therefore the same honest one the engines use — OS threads over a
-//! `Mutex`/`Condvar` queue.  Clients block in
-//! [`BoundedQueue::push`] when the queue is full (bounded-queue
-//! backpressure: a slow fabric throttles its producers instead of
-//! buffering unboundedly), and scheduler workers coalesce queued
-//! single-vector requests into engine-sized batches with
-//! [`BoundedQueue::pop_batch`]: block for the first request, then keep
-//! draining until the batch is full or the batching window has
-//! elapsed.  A zero window degenerates to "whatever is already
-//! queued"; a long window trades tail latency for larger batches —
-//! the `serve-sweep` experiment measures exactly this trade.
+//! therefore the same honest one the engines use — OS threads over
+//! `Mutex`/`Condvar` state.  Two queue types share one core:
+//!
+//! * [`AdmissionQueue`] — the overload-hardened core (DESIGN.md §18).
+//!   Requests enter per-client **lanes** grouped into per-worker
+//!   **shards** (one small mutex each instead of one global one);
+//!   consumers drain lanes round-robin so one hot client cannot
+//!   starve the rest.  Admission is deadline-aware: work whose SLO
+//!   deadline (read from a mockable [`Clock`]) has already passed is
+//!   rejected at `push`, and work that expires while queued is
+//!   dropped at [`AdmissionQueue::pop_batch`] — with a typed [`Shed`]
+//!   reason either way, never silently queued forever.  With
+//!   `shed_on_full`, a full queue rejects instead of blocking (load
+//!   shedding); otherwise producers block (backpressure).
+//! * [`BoundedQueue`] — the historical blocking facade: one shard,
+//!   one lane, no deadlines, blocking `push`.  At this width the core
+//!   degenerates to a strict FIFO, so the facade is bit-identical in
+//!   pop order to the pre-admission scheduler (proptested), and the
+//!   fleet fabric keeps its recoverable [`QueueClosed`] contract.
+//!
+//! Every shed increments the metrics registry (`admission_*`
+//! counters) and a pop-side deadline drop records the request's
+//! queued time into the `shed_wait` stage, so load shedding is
+//! observable end-to-end through serve-bench, node, and router
+//! rollups.
+//!
+//! **Close-and-drain contract** (both queues): an item accepted by
+//! `push` before [`AdmissionQueue::close`] is either served by a
+//! subsequent `pop_batch` or (if its deadline expires) counted as
+//! shed — never silently dropped; a push that races `close` returns
+//! the item to the caller inside the typed rejection.  The argument:
+//! enqueue and the shard `closed` flag are updates under the same
+//! shard mutex, the gate `closed` flag is set *after* every shard
+//! flag, and a consumer only returns empty after observing the gate
+//! flag and then re-scanning every shard — so any enqueue that beat
+//! `close` happens-before that final scan and is found by it.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::obs::{self, GaugeId, Stage};
+use crate::obs::{self, Clock, CounterId, GaugeId, MonotonicClock, Stage};
 
 /// One single-vector VMM request from a simulated client.
 #[derive(Debug, Clone)]
@@ -31,6 +57,12 @@ pub struct Request {
     pub x: Vec<f32>,
     /// Enqueue timestamp — latency is measured enqueue-to-decode.
     pub enqueued: Instant,
+    /// Originating client — the admission queue's fairness lane id.
+    pub client: usize,
+    /// Absolute SLO deadline in queue-clock nanoseconds
+    /// ([`AdmissionQueue::now_ns`] plus the SLO), or `None` for no
+    /// deadline.
+    pub deadline_ns: Option<u64>,
 }
 
 /// Typed rejection of a push against a closed queue.  The item is
@@ -55,41 +87,446 @@ impl<T> std::fmt::Display for QueueClosed<T> {
 
 impl<T: std::fmt::Debug> std::error::Error for QueueClosed<T> {}
 
-struct QueueState<T> {
-    items: VecDeque<T>,
+/// Why admission control refused or dropped a request (DESIGN.md §18
+/// — the *shed* side of the shed-vs-detour taxonomy: a shed request
+/// is never served; a fleet detour is re-routed and served
+/// elsewhere).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shed {
+    /// The queue is closed (shutdown, or a dead fleet node).  The
+    /// item is returned to the caller for recovery or re-routing.
+    Closed,
+    /// The queue was at capacity and the policy sheds instead of
+    /// blocking (`shed_on_full`).
+    QueueFull,
+    /// The request's SLO deadline had already passed at admission.
+    AdmitExpired,
+    /// The deadline expired while queued; the request was dropped at
+    /// [`AdmissionQueue::pop_batch`] instead of being served late.
+    DeadlineMissed,
+}
+
+impl Shed {
+    /// Stable snake_case name (used in tables and summaries).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Shed::Closed => "closed",
+            Shed::QueueFull => "queue_full",
+            Shed::AdmitExpired => "admit_expired",
+            Shed::DeadlineMissed => "deadline_missed",
+        }
+    }
+}
+
+/// A typed push rejection from [`AdmissionQueue::push`]: the unserved
+/// item plus the [`Shed`] reason, so callers can count, recover, or
+/// re-route — never lose — refused work.
+#[derive(Debug)]
+pub struct Rejected<T> {
+    /// The item, handed back untouched.
+    pub item: T,
+    /// Why admission refused it.
+    pub reason: Shed,
+}
+
+impl<T> Rejected<T> {
+    /// Recover the rejected item.
+    pub fn into_inner(self) -> T {
+        self.item
+    }
+}
+
+impl<T> std::fmt::Display for Rejected<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "request shed: {}", self.reason.name())
+    }
+}
+
+impl<T: std::fmt::Debug> std::error::Error for Rejected<T> {}
+
+/// One queued entry: the item plus its admission timestamps.
+struct Entry<T> {
+    item: T,
+    enqueued_ns: u64,
+    deadline_ns: Option<u64>,
+}
+
+/// One client's FIFO lane within a shard.
+struct Lane<T> {
+    id: usize,
+    items: VecDeque<Entry<T>>,
+}
+
+/// Mutable state of one shard: its lanes, the round-robin cursor,
+/// the queued count, and the closed flag.
+struct ShardState<T> {
+    lanes: Vec<Lane<T>>,
+    cursor: usize,
+    len: usize,
     closed: bool,
 }
 
-/// Bounded MPMC queue: blocking producers (backpressure), batching
-/// consumers, explicit close-and-drain shutdown.
-pub struct BoundedQueue<T> {
-    inner: Mutex<QueueState<T>>,
+struct Shard<T> {
+    state: Mutex<ShardState<T>>,
+    /// Parks producers blocked on a full shard (blocking mode only).
     not_full: Condvar,
-    not_empty: Condvar,
+}
+
+/// The consumer slow path: a single park point bumped by every push.
+struct Gate {
+    epoch: u64,
+    closed: bool,
+}
+
+/// The admission-controlled MPMC core: per-client lanes sharded per
+/// worker, round-robin fairness, SLO deadlines, and typed shedding.
+///
+/// Lane `l` lives in shard `l % shards` for the queue's lifetime, so
+/// a client's requests form one FIFO; consumers scan shards starting
+/// from their home shard (`worker % shards`) and take one item per
+/// lane in cursor order.  The fast path touches only one shard's
+/// mutex; a consumer that finds every shard empty parks on a single
+/// gate `Condvar` whose epoch every push bumps (the lock-light
+/// layout: producers and consumers on different shards never contend,
+/// and the gate critical section is two integer ops).
+///
+/// All lane/shard state is mutex-protected, so the memory-ordering
+/// argument is the mutexes' acquire/release edges; the only atomics
+/// are the depth gauge and the drop counter, which are telemetry
+/// (`Relaxed`, exact only after joining — DESIGN.md §18).
+pub struct AdmissionQueue<T> {
+    shards: Vec<Shard<T>>,
+    gate: Mutex<Gate>,
+    gate_cv: Condvar,
     capacity: usize,
+    per_shard: usize,
+    shed_on_full: bool,
+    clock: Arc<dyn Clock>,
+    depth: AtomicUsize,
+    dropped: AtomicU64,
+}
+
+impl<T> AdmissionQueue<T> {
+    /// Queue holding at most ~`capacity` items over `shards` shards
+    /// (both clamped to at least 1).  Capacity splits per shard as
+    /// `ceil(capacity / shards)`, so the exact total is
+    /// `per-shard x shards >= capacity`.  Blocking (backpressure)
+    /// mode by default; see [`AdmissionQueue::with_shed_on_full`].
+    pub fn new(capacity: usize, shards: usize) -> Self {
+        let shards = shards.max(1);
+        let capacity = capacity.max(1);
+        Self {
+            shards: (0..shards)
+                .map(|_| Shard {
+                    state: Mutex::new(ShardState {
+                        lanes: Vec::new(),
+                        cursor: 0,
+                        len: 0,
+                        closed: false,
+                    }),
+                    not_full: Condvar::new(),
+                })
+                .collect(),
+            gate: Mutex::new(Gate { epoch: 0, closed: false }),
+            gate_cv: Condvar::new(),
+            capacity,
+            per_shard: capacity.div_ceil(shards),
+            shed_on_full: false,
+            clock: Arc::new(MonotonicClock::new()),
+            depth: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Shed-on-full admission: a push against a full shard returns
+    /// [`Shed::QueueFull`] immediately instead of blocking.
+    pub fn with_shed_on_full(mut self, shed: bool) -> Self {
+        self.shed_on_full = shed;
+        self
+    }
+
+    /// Replace the deadline clock (tests drive expiry with a
+    /// [`crate::obs::MockClock`] instead of sleeping).
+    pub fn with_clock(mut self, clock: Arc<dyn Clock>) -> Self {
+        self.clock = clock;
+        self
+    }
+
+    /// Configured capacity (the construction-time request; the exact
+    /// bound is `ceil(capacity / shards) x shards`).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Number of shards (one per worker by convention).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Items currently queued across all shards.
+    pub fn len(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    /// Is the queue empty?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Requests dropped at `pop_batch` because their deadline expired
+    /// while queued (exact after consumers are joined).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Current queue-clock reading in nanoseconds — compute absolute
+    /// deadlines against this (`now_ns() + slo_ns`).
+    pub fn now_ns(&self) -> u64 {
+        self.clock.now_ns()
+    }
+
+    /// Admit one item into lane `lane` with an optional absolute
+    /// deadline (queue-clock nanoseconds).  Blocks while the lane's
+    /// shard is full unless `shed_on_full` is set.  Refusals are
+    /// typed and lossless: the item comes back inside [`Rejected`]
+    /// with the [`Shed`] reason ([`Shed::Closed`],
+    /// [`Shed::QueueFull`], or [`Shed::AdmitExpired`] for a deadline
+    /// that has already passed).
+    pub fn push(
+        &self,
+        item: T,
+        lane: usize,
+        deadline_ns: Option<u64>,
+    ) -> Result<(), Rejected<T>> {
+        let now = self.clock.now_ns();
+        if let Some(d) = deadline_ns {
+            if now >= d {
+                obs::incr(CounterId::AdmissionExpired);
+                return Err(Rejected { item, reason: Shed::AdmitExpired });
+            }
+        }
+        let shard = &self.shards[lane % self.shards.len()];
+        let mut st = shard.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(Rejected { item, reason: Shed::Closed });
+            }
+            if st.len < self.per_shard {
+                break;
+            }
+            if self.shed_on_full {
+                obs::incr(CounterId::AdmissionRejected);
+                return Err(Rejected { item, reason: Shed::QueueFull });
+            }
+            st = shard.not_full.wait(st).unwrap();
+        }
+        let entry = Entry { item, enqueued_ns: now, deadline_ns };
+        match st.lanes.iter_mut().find(|l| l.id == lane) {
+            Some(l) => l.items.push_back(entry),
+            None => {
+                let mut items = VecDeque::new();
+                items.push_back(entry);
+                st.lanes.push(Lane { id: lane, items });
+            }
+        }
+        st.len += 1;
+        drop(st);
+        let depth = self.depth.fetch_add(1, Ordering::Relaxed) + 1;
+        obs::gauge_set(GaugeId::QueueDepth, depth as u64);
+        let mut g = self.gate.lock().unwrap();
+        g.epoch = g.epoch.wrapping_add(1);
+        drop(g);
+        self.gate_cv.notify_one();
+        Ok(())
+    }
+
+    /// Close the queue: producers are refused (blocked ones wake with
+    /// their item returned), consumers drain what remains.  Shard
+    /// flags are set before the gate flag, which is what makes the
+    /// module-level close-and-drain argument hold.
+    pub fn close(&self) {
+        for shard in &self.shards {
+            let mut st = shard.state.lock().unwrap();
+            st.closed = true;
+            shard.not_full.notify_all();
+        }
+        let mut g = self.gate.lock().unwrap();
+        g.closed = true;
+        drop(g);
+        self.gate_cv.notify_all();
+    }
+
+    /// One round-robin sweep: scan every shard starting at `home`,
+    /// taking one item per non-empty lane in cursor order until
+    /// `batch` holds `max` items.  Entries whose deadline has passed
+    /// are dropped here — counted, recorded into the `shed_wait`
+    /// stage, never returned.
+    fn take_round(&self, home: usize, max: usize, batch: &mut Vec<T>) {
+        let nshards = self.shards.len();
+        let now = self.clock.now_ns();
+        for i in 0..nshards {
+            if batch.len() >= max {
+                break;
+            }
+            let shard = &self.shards[(home + i) % nshards];
+            let mut st = shard.state.lock().unwrap();
+            let mut removed = 0usize;
+            let mut dropped = 0usize;
+            while batch.len() < max && st.len > 0 {
+                let nlanes = st.lanes.len();
+                let mut cur = st.cursor % nlanes;
+                while st.lanes[cur].items.is_empty() {
+                    cur = (cur + 1) % nlanes;
+                }
+                let entry = st.lanes[cur].items.pop_front().expect("non-empty lane");
+                st.cursor = (cur + 1) % nlanes;
+                st.len -= 1;
+                removed += 1;
+                match entry.deadline_ns {
+                    Some(d) if now >= d => {
+                        dropped += 1;
+                        obs::incr(CounterId::AdmissionDeadlineMissed);
+                        obs::record_ns(
+                            Stage::ShedWait,
+                            now.saturating_sub(entry.enqueued_ns),
+                        );
+                    }
+                    _ => batch.push(entry.item),
+                }
+            }
+            drop(st);
+            if removed > 0 {
+                shard.not_full.notify_all();
+                self.depth.fetch_sub(removed, Ordering::Relaxed);
+            }
+            if dropped > 0 {
+                self.dropped.fetch_add(dropped as u64, Ordering::Relaxed);
+            }
+        }
+        obs::gauge_set(GaugeId::QueueDepth, self.depth.load(Ordering::Relaxed) as u64);
+    }
+
+    /// Pop one coalesced batch of up to `max` items for `worker`:
+    /// block for the first live item, then keep draining (home shard
+    /// first, then the others) until the batch is full or `window`
+    /// has elapsed since the first item was taken.  Expired entries
+    /// are shed in place and never returned.  An empty return means
+    /// the queue is closed and fully drained — the consumer's stop
+    /// signal.
+    pub fn pop_batch(&self, worker: usize, max: usize, window: Duration) -> Vec<T> {
+        let max = max.max(1);
+        let home = worker % self.shards.len();
+        let mut batch = Vec::new();
+        // Phase 1: block until at least one live item is taken, or
+        // the queue is closed and a post-close scan finds nothing.
+        loop {
+            let seen = {
+                let g = self.gate.lock().unwrap();
+                if g.closed {
+                    None
+                } else {
+                    Some(g.epoch)
+                }
+            };
+            self.take_round(home, max, &mut batch);
+            if !batch.is_empty() {
+                break;
+            }
+            match seen {
+                // Closed, and the scan after observing the flag found
+                // nothing: drained (see the module-level argument).
+                None => return batch,
+                Some(seen) => {
+                    let mut g = self.gate.lock().unwrap();
+                    while g.epoch == seen && !g.closed {
+                        g = self.gate_cv.wait(g).unwrap();
+                    }
+                }
+            }
+        }
+        // Phase 2: coalesce. The span covers first-item-taken to
+        // batch-returned — the window time spent growing the batch,
+        // not the idle block waiting for work to exist.
+        let coalesce = obs::stage_start();
+        let deadline = Instant::now() + window;
+        loop {
+            if batch.len() >= max {
+                break;
+            }
+            let (seen, closed) = {
+                let g = self.gate.lock().unwrap();
+                (g.epoch, g.closed)
+            };
+            self.take_round(home, max, &mut batch);
+            if batch.len() >= max || closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let mut g = self.gate.lock().unwrap();
+            loop {
+                if g.epoch != seen || g.closed {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _timeout) =
+                    self.gate_cv.wait_timeout(g, deadline - now).unwrap();
+                g = guard;
+            }
+        }
+        obs::stage_end(Stage::BatchCoalesce, coalesce);
+        batch
+    }
+}
+
+/// Bounded MPMC queue: blocking producers (backpressure), batching
+/// consumers, explicit close-and-drain shutdown.  A single-shard,
+/// single-lane, no-deadline facade over [`AdmissionQueue`] — at this
+/// width the core is a strict FIFO, bit-identical in pop order to
+/// the pre-admission scheduler (proptested).
+///
+/// ```
+/// use std::time::Duration;
+/// use meliso::serve::BoundedQueue;
+///
+/// let q: BoundedQueue<u32> = BoundedQueue::new(4);
+/// q.push(1).unwrap();
+/// q.push(2).unwrap();
+/// q.close();
+/// // After close, pushes hand the item back (typed, recoverable)...
+/// assert_eq!(q.push(3).unwrap_err().into_inner(), 3);
+/// // ...and consumers drain what was accepted before the close.
+/// assert_eq!(q.pop_batch(8, Duration::ZERO), vec![1, 2]);
+/// assert!(q.pop_batch(8, Duration::ZERO).is_empty());
+/// ```
+pub struct BoundedQueue<T> {
+    inner: AdmissionQueue<T>,
 }
 
 impl<T> BoundedQueue<T> {
     /// Queue holding at most `capacity` items (clamped to at least 1).
     pub fn new(capacity: usize) -> Self {
-        Self {
-            inner: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
-            not_full: Condvar::new(),
-            not_empty: Condvar::new(),
-            capacity: capacity.max(1),
-        }
+        Self { inner: AdmissionQueue::new(capacity, 1) }
     }
 
+    /// Maximum queued items.
     pub fn capacity(&self) -> usize {
-        self.capacity
+        self.inner.capacity()
     }
 
+    /// Items currently queued.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().items.len()
+        self.inner.len()
     }
 
+    /// Is the queue empty?
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.inner.is_empty()
     }
 
     /// Enqueue, blocking while the queue is full.  A push against a
@@ -99,27 +536,16 @@ impl<T> BoundedQueue<T> {
     /// it, so producers can stop on shutdown and the fleet router can
     /// re-route the very request that detected a dead node.
     pub fn push(&self, item: T) -> Result<(), QueueClosed<T>> {
-        let mut st = self.inner.lock().unwrap();
-        loop {
-            if st.closed {
-                return Err(QueueClosed(item));
-            }
-            if st.items.len() < self.capacity {
-                st.items.push_back(item);
-                obs::gauge_set(GaugeId::QueueDepth, st.items.len() as u64);
-                self.not_empty.notify_one();
-                return Ok(());
-            }
-            st = self.not_full.wait(st).unwrap();
-        }
+        self.inner.push(item, 0, None).map_err(|r| QueueClosed(r.item))
     }
 
     /// Close the queue: producers stop, consumers drain what remains.
+    /// Items pushed concurrently with the close are either drained by
+    /// a later `pop_batch` or returned to their pusher via
+    /// [`QueueClosed`] — never dropped (regression-tested under the
+    /// `MELISO_THREADS` matrix).
     pub fn close(&self) {
-        let mut st = self.inner.lock().unwrap();
-        st.closed = true;
-        self.not_empty.notify_all();
-        self.not_full.notify_all();
+        self.inner.close();
     }
 
     /// Pop one coalesced batch of up to `max` items: block for the
@@ -128,56 +554,14 @@ impl<T> BoundedQueue<T> {
     /// the queue is closed and fully drained — the consumer's stop
     /// signal.
     pub fn pop_batch(&self, max: usize, window: Duration) -> Vec<T> {
-        let max = max.max(1);
-        let mut st = self.inner.lock().unwrap();
-        while st.items.is_empty() {
-            if st.closed {
-                return Vec::new();
-            }
-            st = self.not_empty.wait(st).unwrap();
-        }
-        let mut batch = Vec::with_capacity(max.min(st.items.len()));
-        // The coalesce span covers first-item-taken to batch-returned:
-        // the window time spent growing the batch, not the idle block
-        // waiting for work to exist.
-        let coalesce = obs::stage_start();
-        let deadline = Instant::now() + window;
-        loop {
-            while batch.len() < max {
-                match st.items.pop_front() {
-                    Some(item) => batch.push(item),
-                    None => break,
-                }
-            }
-            if !batch.is_empty() {
-                self.not_full.notify_all();
-            }
-            if batch.len() >= max || st.closed {
-                break;
-            }
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            let (guard, _timeout) = self
-                .not_empty
-                .wait_timeout(st, deadline - now)
-                .unwrap();
-            st = guard;
-            if st.items.is_empty() && Instant::now() >= deadline {
-                break;
-            }
-        }
-        obs::gauge_set(GaugeId::QueueDepth, st.items.len() as u64);
-        drop(st);
-        obs::stage_end(Stage::BatchCoalesce, coalesce);
-        batch
+        self.inner.pop_batch(0, max, window)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::MockClock;
     use std::sync::Arc;
 
     #[test]
@@ -202,7 +586,7 @@ mod tests {
         let producer = Arc::clone(&q);
         let handle = std::thread::spawn(move || {
             for i in 0..4 {
-                producer.push(i);
+                producer.push(i).unwrap();
                 std::thread::sleep(Duration::from_millis(2));
             }
         });
@@ -272,5 +656,96 @@ mod tests {
         // instrumented paths may also record — exact accounting is
         // pinned in the isolated `integration_obs` binary.
         assert!(snap.stage(Stage::BatchCoalesce).count >= 1);
+    }
+
+    #[test]
+    fn lanes_round_robin_within_a_shard() {
+        // One hot lane (0) and one trickle lane (1): the hot lane
+        // cannot starve the trickle — the pop interleaves them.
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(16, 1);
+        for v in [10, 11, 12] {
+            q.push(v, 0, None).unwrap();
+        }
+        q.push(20, 1, None).unwrap();
+        let batch = q.pop_batch(0, 4, Duration::ZERO);
+        assert_eq!(batch, vec![10, 20, 11, 12]);
+    }
+
+    #[test]
+    fn expired_at_admission_is_rejected_with_reason() {
+        let clock = Arc::new(MockClock::new());
+        clock.set(1_000);
+        let q: AdmissionQueue<u32> =
+            AdmissionQueue::new(8, 1).with_clock(Arc::clone(&clock) as Arc<dyn Clock>);
+        let err = q.push(7, 0, Some(500)).unwrap_err();
+        assert_eq!(err.reason, Shed::AdmitExpired);
+        assert_eq!(err.into_inner(), 7);
+        // A live deadline admits fine.
+        assert!(q.push(8, 0, Some(2_000)).is_ok());
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn expired_in_queue_is_dropped_at_pop() {
+        let clock = Arc::new(MockClock::new());
+        let q: AdmissionQueue<u32> =
+            AdmissionQueue::new(8, 1).with_clock(Arc::clone(&clock) as Arc<dyn Clock>);
+        q.push(1, 0, Some(100)).unwrap(); // will expire
+        q.push(2, 0, Some(10_000)).unwrap(); // stays live
+        q.push(3, 0, None).unwrap(); // no deadline
+        clock.advance(5_000);
+        let batch = q.pop_batch(0, 8, Duration::ZERO);
+        assert_eq!(batch, vec![2, 3], "expired entry shed, never served");
+        assert_eq!(q.dropped(), 1);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn shed_on_full_rejects_instead_of_blocking() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(1, 1).with_shed_on_full(true);
+        assert!(q.push(1, 0, None).is_ok());
+        let err = q.push(2, 0, None).unwrap_err();
+        assert_eq!(err.reason, Shed::QueueFull);
+        assert_eq!(err.into_inner(), 2);
+        // Draining reopens admission.
+        assert_eq!(q.pop_batch(0, 8, Duration::ZERO), vec![1]);
+        assert!(q.push(3, 0, None).is_ok());
+    }
+
+    #[test]
+    fn sharded_pop_steals_from_other_shards() {
+        // Lane 1 maps to shard 1; a worker homed on shard 0 must
+        // still find the work instead of parking forever.
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(16, 2);
+        q.push(42, 1, None).unwrap();
+        let batch = q.pop_batch(0, 4, Duration::ZERO);
+        assert_eq!(batch, vec![42]);
+    }
+
+    #[test]
+    fn admission_sheds_increment_registry_counters() {
+        let _guard = crate::obs::test_lock();
+        crate::obs::registry().reset();
+        crate::obs::set_enabled(true);
+        let clock = Arc::new(MockClock::new());
+        clock.set(1_000);
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(1, 1)
+            .with_shed_on_full(true)
+            .with_clock(Arc::clone(&clock) as Arc<dyn Clock>);
+        let _ = q.push(1, 0, Some(10)); // admit-expired
+        q.push(2, 0, Some(9_000)).unwrap();
+        let _ = q.push(3, 0, None); // queue-full
+        clock.advance(50_000);
+        // The one admitted entry expired while queued: the pop sheds
+        // it (deadline-missed) and returns empty once closed.
+        q.close();
+        assert!(q.pop_batch(0, 8, Duration::ZERO).is_empty());
+        crate::obs::set_enabled(false);
+        let snap = crate::obs::registry().snapshot();
+        crate::obs::registry().reset();
+        assert!(snap.counter(CounterId::AdmissionExpired) >= 1);
+        assert!(snap.counter(CounterId::AdmissionRejected) >= 1);
+        assert!(snap.counter(CounterId::AdmissionDeadlineMissed) >= 1);
+        assert!(snap.stage(Stage::ShedWait).count >= 1);
     }
 }

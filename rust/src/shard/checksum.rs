@@ -80,6 +80,8 @@ pub struct ChecksumCode {
 }
 
 impl ChecksumCode {
+    /// Code for shards of `clen` data columns (panics on zero): one
+    /// sum column plus [`locator_count`] binary-locator columns.
     pub fn new(clen: usize) -> Self {
         assert!(clen > 0, "checksum code needs at least one data column");
         let locators = locator_count(clen);

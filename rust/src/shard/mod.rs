@@ -22,6 +22,8 @@
 //!   a pure function of `(seed, sample, shard)` so determinism
 //!   guarantees survive fault campaigns.
 
+#![warn(missing_docs)]
+
 pub mod checksum;
 pub mod fault;
 pub mod grid;

@@ -1,0 +1,180 @@
+//! Internal-link checker for the operator-facing documents.
+//!
+//! Scans `README.md`, `DESIGN.md`, and `OPERATIONS.md` for markdown
+//! links `[text](target)`, skipping external schemes and fenced code
+//! blocks, and asserts that every relative file target exists and
+//! every `#anchor` fragment names a real heading in the target file
+//! (GitHub slugging: lowercase, punctuation stripped, spaces to
+//! hyphens, duplicate slugs suffixed `-1`, `-2`, ...).  A renamed
+//! heading or a typoed anchor fails CI here instead of shipping a
+//! dead link.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// The documents under contract, relative to the crate root.
+const DOCS: [&str; 3] = ["README.md", "DESIGN.md", "OPERATIONS.md"];
+
+fn crate_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// GitHub's heading-to-anchor slug: lowercase; keep alphanumerics,
+/// hyphens, and underscores; spaces become hyphens; everything else
+/// (punctuation, backticks, `§`, em-dashes) is dropped.
+fn slug(heading: &str) -> String {
+    let mut out = String::new();
+    for ch in heading.trim().to_lowercase().chars() {
+        if ch.is_alphanumeric() || ch == '-' || ch == '_' {
+            out.push(ch);
+        } else if ch == ' ' {
+            out.push('-');
+        }
+    }
+    out
+}
+
+/// All heading anchors of a markdown file, with GitHub's duplicate
+/// numbering (`slug`, `slug-1`, `slug-2`, ...), ignoring headings
+/// inside fenced code blocks.
+fn anchors(text: &str) -> Vec<String> {
+    let mut seen: HashMap<String, usize> = HashMap::new();
+    let mut out = Vec::new();
+    let mut in_fence = false;
+    for line in text.lines() {
+        if line.trim_start().starts_with("```") {
+            in_fence = !in_fence;
+            continue;
+        }
+        if in_fence {
+            continue;
+        }
+        let trimmed = line.trim_start();
+        let level = trimmed.chars().take_while(|&c| c == '#').count();
+        if level == 0 || level > 6 || !trimmed[level..].starts_with(' ') {
+            continue;
+        }
+        let base = slug(&trimmed[level + 1..]);
+        let n = seen.entry(base.clone()).or_insert(0);
+        let numbered = if *n == 0 {
+            base.clone()
+        } else {
+            format!("{base}-{n}")
+        };
+        out.push(numbered);
+        *n += 1;
+    }
+    out
+}
+
+/// Extract `(line_number, target)` pairs for every markdown link in
+/// the text, skipping fenced code blocks.  A link is a `](` with a
+/// matching `[` earlier on the same line and a closing `)` after.
+fn links(text: &str) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    let mut in_fence = false;
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim_start().starts_with("```") {
+            in_fence = !in_fence;
+            continue;
+        }
+        if in_fence {
+            continue;
+        }
+        let mut rest = line;
+        let mut offset = 0;
+        while let Some(pos) = rest.find("](") {
+            // Require a matching '[' before the ']' on this line —
+            // otherwise it's stray punctuation, not a link.
+            if rest[..pos].rfind('[').is_some() {
+                if let Some(end) = rest[pos + 2..].find(')') {
+                    out.push((lineno + 1, rest[pos + 2..pos + 2 + end].to_string()));
+                }
+            }
+            offset += pos + 2;
+            rest = &line[offset..];
+        }
+    }
+    out
+}
+
+#[test]
+fn every_internal_doc_link_resolves() {
+    let root = crate_root();
+    let mut checked = 0usize;
+    let mut failures: Vec<String> = Vec::new();
+
+    for doc in DOCS {
+        let path = root.join(doc);
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("cannot read {}: {e}", path.display()));
+        for (lineno, target) in links(&text) {
+            if target.starts_with("http://")
+                || target.starts_with("https://")
+                || target.starts_with("mailto:")
+            {
+                continue;
+            }
+            checked += 1;
+            let at = format!("{doc}:{lineno} -> ({target})");
+            let (file_part, fragment) = match target.split_once('#') {
+                Some((f, a)) => (f, Some(a)),
+                None => (target.as_str(), None),
+            };
+            // Resolve the file part (empty = same document).
+            let target_path = if file_part.is_empty() {
+                path.clone()
+            } else {
+                root.join(file_part)
+            };
+            if !target_path.exists() {
+                failures.push(format!("{at}: file does not exist"));
+                continue;
+            }
+            if let Some(anchor) = fragment {
+                if !file_part.is_empty() && !file_part.ends_with(".md") {
+                    continue; // anchors only checked in markdown targets
+                }
+                let target_text = std::fs::read_to_string(&target_path)
+                    .unwrap_or_else(|e| panic!("cannot read {}: {e}", target_path.display()));
+                let known = anchors(&target_text);
+                if !known.iter().any(|a| a == anchor) {
+                    failures.push(format!(
+                        "{at}: no heading slugs to '{anchor}' (known: {})",
+                        known.join(", ")
+                    ));
+                }
+            }
+        }
+    }
+
+    assert!(
+        checked >= 5,
+        "link scanner found only {checked} internal links — scanner broken?"
+    );
+    assert!(failures.is_empty(), "broken doc links:\n{}", failures.join("\n"));
+}
+
+#[test]
+fn slugging_matches_github_rules() {
+    assert_eq!(slug("Reading an overload sweep"), "reading-an-overload-sweep");
+    assert_eq!(
+        slug("§18 Admission control: deadlines, fairness lanes, and load shedding"),
+        "18-admission-control-deadlines-fairness-lanes-and-load-shedding"
+    );
+    assert_eq!(slug("BENCH.json and BENCH.melb"), "benchjson-and-benchmelb");
+    assert_eq!(slug("[overload]"), "overload");
+    assert_eq!(slug("`code` span"), "code-span");
+}
+
+#[test]
+fn anchor_extraction_numbers_duplicates_and_skips_fences() {
+    let text = "# Top\n```\n# not a heading\n```\n## Dup\n## Dup\n";
+    assert_eq!(anchors(text), vec!["top", "dup", "dup-1"]);
+}
+
+#[test]
+fn link_extraction_skips_fences_and_stray_brackets() {
+    let text = "see [a](x.md#y) and `[0, 1]` (zero)\n```\n[b](c.md)\n```\n";
+    assert_eq!(links(text), vec![(1, "x.md#y".to_string())]);
+}

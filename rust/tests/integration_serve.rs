@@ -9,7 +9,11 @@
 //!   the same physics (error telemetry agrees);
 //! * a shared [`ProgramCache`] turns the second `meliso infer`-style
 //!   pipeline run into all-hits, and deployed traces are deterministic;
-//! * the `serve-sweep` experiment runs through the registry.
+//! * the `serve-sweep` experiment runs through the registry;
+//! * admission control holds its overload contract: the close-race
+//!   ledger is exact (items racing `close` are served or returned,
+//!   never dropped) and the `overload-sweep` goodput plateau stays
+//!   within 10% of the 1x-capacity leg while shedding monotonically.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -174,6 +178,104 @@ fn deployed_first_chunk_matches_per_sample_path_for_sample_zero() {
     let d = &deployed.layers[0].injected.errors()[..12];
     let m = &monte.layers[0].injected.errors()[..12];
     assert_eq!(d, m, "sample 0 shares the programming draw");
+}
+
+#[test]
+fn bounded_queue_close_race_loses_nothing() {
+    // The close-and-drain contract (DESIGN.md §18): items pushed
+    // concurrently with `close` are either served or returned to the
+    // pusher via `QueueClosed` — never silently dropped.  Run several
+    // trials with close landing at different points in the stream;
+    // meaningful at any thread count, exercised in CI at
+    // MELISO_THREADS=1 and =4.
+    use meliso::serve::BoundedQueue;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    for trial in 0..8u64 {
+        let q = Arc::new(BoundedQueue::new(4));
+        let accepted = Arc::new(AtomicUsize::new(0));
+        let rejected = Arc::new(AtomicUsize::new(0));
+        let (n_pushers, per) = (4usize, 64usize);
+        let mut pushers = Vec::new();
+        for p in 0..n_pushers {
+            let q = Arc::clone(&q);
+            let accepted = Arc::clone(&accepted);
+            let rejected = Arc::clone(&rejected);
+            pushers.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    match q.push(p * per + i) {
+                        Ok(()) => {
+                            accepted.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(closed) => {
+                            // The item comes back intact.
+                            assert_eq!(closed.into_inner(), p * per + i);
+                            rejected.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            }));
+        }
+        // One consumer drains until the queue reports closed-and-empty.
+        let consumer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                let mut got = 0usize;
+                loop {
+                    let batch = q.pop_batch(16, Duration::ZERO);
+                    if batch.is_empty() {
+                        return got;
+                    }
+                    got += batch.len();
+                }
+            })
+        };
+        // Close while pushers race, at a trial-varied point.
+        std::thread::sleep(Duration::from_micros(40 * trial));
+        q.close();
+        for h in pushers {
+            h.join().unwrap();
+        }
+        let served = consumer.join().unwrap();
+        let (acc, rej) = (accepted.load(Ordering::Relaxed), rejected.load(Ordering::Relaxed));
+        assert_eq!(acc + rej, n_pushers * per, "trial {trial}: ledger must balance");
+        assert_eq!(served, acc, "trial {trial}: every accepted item must be served");
+    }
+}
+
+#[test]
+fn overload_sweep_goodput_plateaus_within_ten_percent() {
+    // The overload-hardening perf contract: past saturation, admission
+    // control sheds the excess instead of collapsing — goodput at 4x
+    // offered load stays within 10% of the 1x-capacity plateau, and
+    // the shed rate never falls as offered load rises.
+    let dir = std::env::temp_dir().join("meliso_it_overload_sweep");
+    let _ = std::fs::remove_dir_all(&dir);
+    let ctx = Ctx::native(32, &dir);
+    let s = registry::run_by_id("overload-sweep", &ctx).unwrap();
+    let rows = s.get("rows").unwrap().as_arr().unwrap();
+    let num = |r: &meliso::util::json::Json, k: &str| r.get(k).unwrap().as_f64().unwrap();
+    let goodput_at = |f: f64| {
+        rows.iter()
+            .find(|r| num(r, "factor") == f)
+            .map(|r| num(r, "goodput_req_s"))
+            .unwrap()
+    };
+    let (g1, g4) = (goodput_at(1.0), goodput_at(4.0));
+    assert!(
+        g4 >= 0.9 * g1,
+        "saturated goodput collapsed: {g4:.0} req/s at 4x vs {g1:.0} req/s at 1x"
+    );
+    let mut prev = 0.0f64;
+    for r in rows {
+        assert_eq!(num(r, "served") + num(r, "shed"), num(r, "offered"));
+        let rate = num(r, "shed_rate");
+        assert!(rate >= prev - 0.05, "shed rate fell: {prev} -> {rate}");
+        prev = prev.max(rate);
+    }
+    assert!(dir.join("overload-sweep/series.csv").exists());
+    assert!(dir.join("overload-sweep/summary.json").exists());
+    let _ = std::fs::remove_dir_all(dir);
 }
 
 #[test]

@@ -9,8 +9,8 @@ use meliso::device::params::DeviceParams;
 use meliso::device::presets;
 use meliso::device::pulse::pulse_curve;
 use meliso::mitigation::{MitigatedEngine, MitigationConfig};
-use meliso::obs::{self, HistogramSnapshot, MetricsSnapshot};
-use meliso::serve::Placement;
+use meliso::obs::{self, Clock, HistogramSnapshot, MetricsSnapshot, MockClock};
+use meliso::serve::{AdmissionQueue, BoundedQueue, Placement};
 use meliso::shard::{ChecksumCode, Verdict};
 use meliso::stats::fit::Normal;
 use meliso::stats::moments::Moments;
@@ -680,4 +680,153 @@ fn prop_batch_layout_roundtrip() {
                 && vb.z_of(b - 1, 2).len() == r * r
         },
     );
+}
+
+#[test]
+fn prop_admission_lanes_preserve_per_client_fifo() {
+    // For any lane count and interleaving, round-robin fairness may
+    // reorder *across* lanes but each client's own requests come out
+    // in submission order (the per-client FIFO contract, DESIGN.md
+    // §18).
+    check2(
+        cfg(32, 40),
+        &UsizeIn { lo: 1, hi: 5 },
+        &UsizeIn { lo: 0, hi: 1 << 16 },
+        |&nlanes, &seed| {
+            let mut rng = Xoshiro256::seed_from_u64(seed as u64 ^ 0xFA13);
+            let n = 40usize;
+            let q = AdmissionQueue::new(n, 1);
+            let mut per_lane: Vec<Vec<usize>> = vec![Vec::new(); nlanes];
+            for i in 0..n {
+                let lane = rng.below(nlanes as u64) as usize;
+                q.push(i, lane, None).unwrap();
+                per_lane[lane].push(i);
+            }
+            q.close();
+            let mut popped = Vec::new();
+            loop {
+                let max = 1 + rng.below(8) as usize;
+                let b = q.pop_batch(0, max, std::time::Duration::ZERO);
+                if b.is_empty() {
+                    break;
+                }
+                popped.extend(b);
+            }
+            popped.len() == n
+                && per_lane.iter().all(|lane_items| {
+                    let got: Vec<usize> = popped
+                        .iter()
+                        .copied()
+                        .filter(|v| lane_items.contains(v))
+                        .collect();
+                    got == *lane_items
+                })
+        },
+    );
+}
+
+#[test]
+fn prop_admission_ledger_balances_under_overload() {
+    // For any capacity and random overload trace (full-queue sheds,
+    // admission-expired rejects, in-queue deadline drops, interleaved
+    // pops), every offered item is accounted exactly once:
+    // served + dropped + rejected == offered.
+    check2(
+        cfg(24, 41),
+        &UsizeIn { lo: 1, hi: 8 },
+        &UsizeIn { lo: 0, hi: 1 << 16 },
+        |&cap, &seed| {
+            let clock = std::sync::Arc::new(MockClock::new());
+            let q = AdmissionQueue::new(cap, 2)
+                .with_shed_on_full(true)
+                .with_clock(std::sync::Arc::clone(&clock) as std::sync::Arc<dyn Clock>);
+            let mut rng = Xoshiro256::seed_from_u64(seed as u64 ^ 0x9E37);
+            let offered = 60usize;
+            let (mut accepted, mut rejected, mut served) = (0usize, 0usize, 0usize);
+            // `pop_batch` blocks while the queue is open and holds no
+            // live work, so a mid-trace pop is only safe while at
+            // least one deadline-free entry (which can never expire)
+            // is known to be queued.  Track them by item id.
+            let mut deadlines: Vec<Option<u64>> = vec![None; offered];
+            let mut queued_forever = 0usize;
+            for i in 0..offered {
+                let lane = rng.below(3) as usize;
+                let deadline = match rng.below(3) {
+                    0 => None,
+                    1 => Some(clock.now_ns() + 1 + rng.below(40)),
+                    _ => Some(clock.now_ns()), // already expired at admission
+                };
+                deadlines[i] = deadline;
+                match q.push(i, lane, deadline) {
+                    Ok(()) => {
+                        accepted += 1;
+                        if deadline.is_none() {
+                            queued_forever += 1;
+                        }
+                    }
+                    Err(r) => {
+                        // The item comes back intact with its reason.
+                        if r.item != i {
+                            return false;
+                        }
+                        rejected += 1;
+                    }
+                }
+                clock.advance(rng.below(20));
+                if queued_forever > 0 && rng.below(3) == 0 {
+                    let w = rng.below(2) as usize;
+                    let b =
+                        q.pop_batch(w, 1 + rng.below(4) as usize, std::time::Duration::ZERO);
+                    for &id in &b {
+                        if deadlines[id].is_none() {
+                            queued_forever -= 1;
+                        }
+                    }
+                    served += b.len();
+                }
+            }
+            q.close();
+            loop {
+                let b = q.pop_batch(0, 8, std::time::Duration::ZERO);
+                if b.is_empty() {
+                    break;
+                }
+                served += b.len();
+            }
+            accepted + rejected == offered
+                && served + q.dropped() as usize == accepted
+                && q.is_empty()
+        },
+    );
+}
+
+#[test]
+fn prop_single_lane_admission_queue_matches_bounded_queue() {
+    // At width 1 (one shard, one lane, no deadlines, no shedding) the
+    // admission core is bit-identical to the plain bounded FIFO it
+    // replaced — the standing determinism invariant behind the
+    // [`BoundedQueue`] facade.
+    check(cfg(32, 42), &UsizeIn { lo: 0, hi: 1 << 16 }, |&seed| {
+        let mut rng = Xoshiro256::seed_from_u64(seed as u64 | 1);
+        let n = 30usize;
+        let aq = AdmissionQueue::new(n, 1);
+        let bq = BoundedQueue::new(n);
+        for i in 0..n {
+            aq.push(i, 0, None).unwrap();
+            bq.push(i).unwrap();
+        }
+        aq.close();
+        bq.close();
+        loop {
+            let max = 1 + rng.below(9) as usize;
+            let a = aq.pop_batch(0, max, std::time::Duration::ZERO);
+            let b = bq.pop_batch(max, std::time::Duration::ZERO);
+            if a != b {
+                return false;
+            }
+            if a.is_empty() {
+                return true;
+            }
+        }
+    });
 }

@@ -18,7 +18,8 @@
 //!              [--queue-cap N] [--serve-workers N] [--serve-cache on|off]
 //!              [--overload F]
 //! meliso fleet-bench [--device ID] [--fleet-nodes N] [--replication N]
-//!              [--fail-rate F] [--fail-seed N] [+ serve-bench flags]
+//!              [--fail-rate F] [--fail-seed N] [--transport in-process|socket]
+//!              [+ serve-bench flags]
 //! meliso metrics [--device ID]                     # telemetry snapshot demo
 //! meliso warmup                                    # precompile artifacts
 //! ```
@@ -164,6 +165,9 @@ OPTIONS:
   --fail-rate <F>                  fleet-bench: failure-injection intensity
                                    in [0, 1] (0 = off) [default: 0]
   --fail-seed <N>                  fleet-bench: failure-point seed
+  --transport <WIRE>               fleet-bench: 'in-process' channels or
+                                   loopback 'socket' TCP (timeouts/retries via
+                                   the [fleet] TOML keys) [default: in-process]
   --obs                            Enable the unified telemetry registry for
                                    the run: serve-bench/fleet-bench print a
                                    per-stage latency breakdown and write
@@ -312,6 +316,10 @@ impl Args {
                 }
                 "fail-seed" => {
                     config.fleet.fail_seed = parse_num::<u64>(name, req(name, v)?)?;
+                }
+                "transport" => {
+                    config.fleet.transport =
+                        crate::config::FleetTransport::parse(req(name, v)?)?;
                 }
                 "config" | "input" | "column" | "device" | "n" | "solver" | "filter"
                 | "baseline" | "delta-md" => {}
@@ -587,7 +595,7 @@ mod tests {
     fn parses_fleet_bench_flags() {
         let a = parse(
             "fleet-bench --device epiram --fleet-nodes 3 --replication 2 \
-             --fail-rate 0.5 --fail-seed 13 --clients 6 --models 4",
+             --fail-rate 0.5 --fail-seed 13 --transport socket --clients 6 --models 4",
         )
         .unwrap();
         assert_eq!(a.command, Command::FleetBench { device: "epiram".into() });
@@ -595,6 +603,10 @@ mod tests {
         assert_eq!(a.config.fleet.replication, 2);
         assert_eq!(a.config.fleet.fail_rate, 0.5);
         assert_eq!(a.config.fleet.fail_seed, 13);
+        assert_eq!(
+            a.config.fleet.transport,
+            crate::config::FleetTransport::Socket
+        );
         assert_eq!(a.config.serve.clients, 6);
         assert_eq!(a.config.serve.models, 4);
         // Defaults.
@@ -603,6 +615,11 @@ mod tests {
         assert_eq!(a.config.fleet.nodes, 2);
         assert_eq!(a.config.fleet.replication, 1);
         assert_eq!(a.config.fleet.fail_rate, 0.0);
+        assert_eq!(
+            a.config.fleet.transport,
+            crate::config::FleetTransport::InProcess
+        );
+        assert!(parse("fleet-bench --transport avian").is_err());
         // Rejections.
         assert!(parse("fleet-bench --fleet-nodes 0").is_err());
         assert!(parse("fleet-bench --replication 0").is_err());

@@ -10,7 +10,9 @@ use crate::perf;
 use crate::pipeline::{NetworkSpec, PipelineOptions, PipelineRunner};
 use crate::report::table::{fnum, TextTable};
 use crate::runtime::XlaRuntime;
-use crate::serve::{run_fleet, run_serve, FleetOptions, ProgramCache, ServeOptions};
+use crate::serve::{
+    run_fleet, run_serve, FleetOptions, ProgramCache, ServeOptions, SocketOptions, Transport,
+};
 use crate::util::bench::{read_bench_json, write_bench_json, BenchResult};
 use crate::util::csv::CsvTable;
 use crate::util::json::{obj, Json};
@@ -486,7 +488,7 @@ fn stage_breakdown_table(snap: &MetricsSnapshot) -> TextTable {
 fn write_metrics_artifacts(snap: &MetricsSnapshot, dir: &std::path::Path) -> Result<()> {
     std::fs::create_dir_all(dir)?;
     std::fs::write(dir.join("METRICS.json"), snap.to_json().to_string_pretty())?;
-    std::fs::write(dir.join("METRICS.melb"), snap.encode_melb())?;
+    std::fs::write(dir.join("METRICS.melb"), snap.encode_melb()?)?;
     Ok(())
 }
 
@@ -772,6 +774,14 @@ fn fleet_bench(args: &Args, device_id: &str) -> Result<i32> {
     };
     let s = &args.config.serve;
     let f = &args.config.fleet;
+    let transport = match f.transport {
+        crate::config::FleetTransport::InProcess => Transport::InProcess,
+        crate::config::FleetTransport::Socket => Transport::Socket(SocketOptions {
+            connect_timeout: std::time::Duration::from_millis(f.connect_timeout_ms),
+            read_timeout: std::time::Duration::from_millis(f.read_timeout_ms),
+            retries: f.retries,
+        }),
+    };
     let opts = FleetOptions {
         serve: ServeOptions {
             clients: s.clients,
@@ -794,6 +804,7 @@ fn fleet_bench(args: &Args, device_id: &str) -> Result<i32> {
         fail_rate: f.fail_rate,
         fail_seed: f.fail_seed,
         collect_responses: false,
+        transport,
     };
     // `--obs`: the fleet path additionally exercises the transport
     // encode/decode stages, so its breakdown shows the full taxonomy.
@@ -816,6 +827,7 @@ fn fleet_bench(args: &Args, device_id: &str) -> Result<i32> {
         "clients x requests",
         &format!("{} x {}", opts.serve.clients, opts.serve.requests_per_client),
     ]);
+    t.push(["transport", f.transport.name()]);
     t.push(["requests served", &agg.requests.to_string()]);
     t.push(["throughput (req/s)", &fnum(agg.throughput)]);
     t.push(["p50 latency (ms)", &fnum(agg.p50_ms)]);
@@ -895,6 +907,7 @@ fn fleet_bench(args: &Args, device_id: &str) -> Result<i32> {
             ("fleet_nodes", Json::Num(opts.nodes as f64)),
             ("replication", Json::Num(report.replication as f64)),
             ("fail_rate", Json::Num(opts.fail_rate)),
+            ("transport", Json::Str(f.transport.name().into())),
             ("requests", Json::Num(agg.requests as f64)),
             ("batches", Json::Num(agg.batches as f64)),
             ("mean_batch", Json::Num(agg.mean_batch)),
@@ -936,7 +949,11 @@ fn fleet_bench(args: &Args, device_id: &str) -> Result<i32> {
     ));
     // Bench-schema document for CI artifact upload, named like a perf
     // slug so baselines can track capacity by node count.
-    let slug = format!("fleet-bench-{}-n{}", ctx.engine_name(), opts.nodes);
+    let wire = match f.transport {
+        crate::config::FleetTransport::InProcess => "",
+        crate::config::FleetTransport::Socket => "-sock",
+    };
+    let slug = format!("fleet-bench-{}-n{}{wire}", ctx.engine_name(), opts.nodes);
     let bench = vec![BenchResult {
         name: slug,
         median: agg.wall_secs,
@@ -1111,6 +1128,7 @@ mod tests {
         let doc = crate::util::json::Json::parse(&summary).unwrap();
         assert_eq!(doc.get("requests").unwrap().as_f64(), Some(24.0));
         assert_eq!(doc.get("fleet_nodes").unwrap().as_f64(), Some(2.0));
+        assert_eq!(doc.get("transport").unwrap().as_str(), Some("in-process"));
         assert_eq!(doc.get("shed").unwrap().as_f64(), Some(0.0));
         assert!(doc.get("mean_abs_error").unwrap().as_f64().unwrap().is_finite());
         assert!(doc.get("transport_bytes").unwrap().as_f64().unwrap() > 0.0);
@@ -1122,6 +1140,39 @@ mod tests {
         // The binary twin decodes to the same document.
         let twin = read_bench_json(&dir.join("fleet-bench/BENCH.melb")).unwrap();
         assert_eq!(twin[0].name, "fleet-bench-native-n2");
+        // The socket transport serves the same traffic end to end and
+        // gets its own bench slug so baselines track the wires apart.
+        let args = parse(&[
+            "fleet-bench",
+            "--device",
+            "epiram",
+            "--transport",
+            "socket",
+            "--fleet-nodes",
+            "2",
+            "--clients",
+            "3",
+            "--requests",
+            "8",
+            "--models",
+            "2",
+            "--size",
+            "16",
+            "--queue-cap",
+            "8",
+            "--batch-max",
+            "4",
+            "--quiet",
+            "--out",
+            dir.to_str().unwrap(),
+        ]);
+        assert_eq!(dispatch(&args).unwrap(), 0);
+        let summary = std::fs::read_to_string(dir.join("fleet-bench/summary.json")).unwrap();
+        let doc = crate::util::json::Json::parse(&summary).unwrap();
+        assert_eq!(doc.get("transport").unwrap().as_str(), Some("socket"));
+        assert_eq!(doc.get("requests").unwrap().as_f64(), Some(24.0));
+        let bench = read_bench_json(&dir.join("fleet-bench/BENCH.json")).unwrap();
+        assert_eq!(bench[0].name, "fleet-bench-native-n2-sock");
         // Unknown device is a clean config error.
         let args = parse(&["fleet-bench", "--device", "unobtainium", "--quiet"]);
         assert!(dispatch(&args).is_err());

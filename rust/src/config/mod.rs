@@ -37,6 +37,10 @@
 //! replication = 1             # replicas per model digest
 //! fail_rate = 0.0             # failure-injection intensity in [0, 1]
 //! fail_seed = 7               # failure-point seed
+//! transport = "in-process"    # wire: "in-process" or "socket"
+//! connect_timeout_ms = 1000   # socket: per-attempt connect timeout
+//! read_timeout_ms = 5000      # socket: ACK/frame read timeout
+//! retries = 3                 # socket: connect retries after the first try
 //!
 //! [shard]                     # sharded engine (`--engine sharded`)
 //! grid = "2x2"                # shard grid RxC (also `--shards`)
@@ -232,6 +236,46 @@ pub struct FleetSettings {
     pub fail_rate: f64,
     /// Seed of the failure-point draws.
     pub fail_seed: u64,
+    /// Which wire the fabric runs on.
+    pub transport: FleetTransport,
+    /// Socket transport: per-attempt connect timeout, milliseconds.
+    pub connect_timeout_ms: u64,
+    /// Socket transport: ACK/frame read timeout, milliseconds.
+    pub read_timeout_ms: u64,
+    /// Socket transport: additional connect attempts after the first.
+    pub retries: u32,
+}
+
+/// How `fleet-bench` frames travel between router and nodes
+/// (`--transport`, `fleet.transport`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FleetTransport {
+    /// In-process channels (the default).
+    #[default]
+    InProcess,
+    /// Loopback TCP sockets with real framing, timeouts, and retries.
+    Socket,
+}
+
+impl FleetTransport {
+    /// Parse the CLI/TOML spelling.
+    pub fn parse(s: &str) -> Result<FleetTransport> {
+        match s {
+            "in-process" => Ok(FleetTransport::InProcess),
+            "socket" => Ok(FleetTransport::Socket),
+            other => Err(Error::Config(format!(
+                "transport must be 'in-process' or 'socket', got '{other}'"
+            ))),
+        }
+    }
+
+    /// The canonical spelling (round-trips through [`Self::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FleetTransport::InProcess => "in-process",
+            FleetTransport::Socket => "socket",
+        }
+    }
 }
 
 impl Default for FleetSettings {
@@ -241,6 +285,10 @@ impl Default for FleetSettings {
             replication: 1,
             fail_rate: 0.0,
             fail_seed: 0x464C_4554, // "FLET"
+            transport: FleetTransport::InProcess,
+            connect_timeout_ms: 1_000,
+            read_timeout_ms: 5_000,
+            retries: 3,
         }
     }
 }
@@ -619,6 +667,41 @@ impl RunConfig {
                 .ok_or_else(|| Error::Config("fleet.fail_seed must be an int".into()))?
                 as u64;
         }
+        if let Some(v) = doc.get("fleet", "transport") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| Error::Config("fleet.transport must be a string".into()))?;
+            cfg.fleet.transport = FleetTransport::parse(s)
+                .map_err(|_| Error::Config(format!("fleet.transport: unknown wire '{s}'")))?;
+        }
+        {
+            // Positive-ms socket knobs share the int parse shape.
+            let positive_ms = |doc: &TomlDoc, key: &str| -> Result<Option<u64>> {
+                match doc.get("fleet", key) {
+                    None => Ok(None),
+                    Some(v) => v
+                        .as_i64()
+                        .filter(|&n| n > 0)
+                        .map(|n| Some(n as u64))
+                        .ok_or_else(|| {
+                            Error::Config(format!("fleet.{key} must be a positive int"))
+                        }),
+                }
+            };
+            if let Some(ms) = positive_ms(&doc, "connect_timeout_ms")? {
+                cfg.fleet.connect_timeout_ms = ms;
+            }
+            if let Some(ms) = positive_ms(&doc, "read_timeout_ms")? {
+                cfg.fleet.read_timeout_ms = ms;
+            }
+        }
+        if let Some(v) = doc.get("fleet", "retries") {
+            cfg.fleet.retries = v
+                .as_i64()
+                .filter(|&n| n >= 0)
+                .ok_or_else(|| Error::Config("fleet.retries must be a non-negative int".into()))?
+                as u32;
+        }
         if let Some(v) = doc.get("obs", "enabled") {
             cfg.obs.enabled = v
                 .as_bool()
@@ -830,23 +913,43 @@ sigma_c2c = 0.035
              nodes = 4\n\
              replication = 2\n\
              fail_rate = 0.5\n\
-             fail_seed = 13\n",
+             fail_seed = 13\n\
+             transport = \"socket\"\n\
+             connect_timeout_ms = 250\n\
+             read_timeout_ms = 2000\n\
+             retries = 5\n",
         )
         .unwrap();
         assert_eq!(c.fleet.nodes, 4);
         assert_eq!(c.fleet.replication, 2);
         assert_eq!(c.fleet.fail_rate, 0.5);
         assert_eq!(c.fleet.fail_seed, 13);
+        assert_eq!(c.fleet.transport, FleetTransport::Socket);
+        assert_eq!(c.fleet.connect_timeout_ms, 250);
+        assert_eq!(c.fleet.read_timeout_ms, 2000);
+        assert_eq!(c.fleet.retries, 5);
         // Defaults.
         let d = RunConfig::default().fleet;
         assert_eq!(d.nodes, 2);
         assert_eq!(d.replication, 1);
         assert_eq!(d.fail_rate, 0.0);
+        assert_eq!(d.transport, FleetTransport::InProcess);
+        assert_eq!(d.connect_timeout_ms, 1_000);
+        assert_eq!(d.read_timeout_ms, 5_000);
+        assert_eq!(d.retries, 3);
+        // The transport names round-trip through the parser.
+        for t in [FleetTransport::InProcess, FleetTransport::Socket] {
+            assert_eq!(FleetTransport::parse(t.name()).unwrap(), t);
+        }
         // Rejections.
         assert!(RunConfig::from_toml("[fleet]\nnodes = 0\n").is_err());
         assert!(RunConfig::from_toml("[fleet]\nreplication = -1\n").is_err());
         assert!(RunConfig::from_toml("[fleet]\nfail_rate = 1.5\n").is_err());
         assert!(RunConfig::from_toml("[fleet]\nfail_seed = \"x\"\n").is_err());
+        assert!(RunConfig::from_toml("[fleet]\ntransport = \"carrier-pigeon\"\n").is_err());
+        assert!(RunConfig::from_toml("[fleet]\nconnect_timeout_ms = 0\n").is_err());
+        assert!(RunConfig::from_toml("[fleet]\nread_timeout_ms = -4\n").is_err());
+        assert!(RunConfig::from_toml("[fleet]\nretries = -1\n").is_err());
     }
 
     #[test]

@@ -11,7 +11,9 @@
 //! that — shed (re-routed, never lost) requests, models re-programmed
 //! on survivors, transport bytes — next to throughput and latency, so
 //! replication's insurance premium is measured on the same traffic as
-//! its payout.
+//! its payout.  Every cell runs twice, once per transport (in-process
+//! channels and loopback sockets), putting the socket boundary's cost
+//! on the same table as everything else.
 
 use std::time::Duration;
 
@@ -19,7 +21,7 @@ use crate::device::params::NonIdealities;
 use crate::device::presets;
 use crate::error::Result;
 use crate::report::table::{fnum, TextTable};
-use crate::serve::{run_fleet, FleetOptions, ServeOptions};
+use crate::serve::{run_fleet, FleetOptions, ServeOptions, SocketOptions, Transport};
 use crate::util::csv::CsvTable;
 use crate::util::json::{obj, Json};
 use crate::util::pool::Parallelism;
@@ -52,14 +54,15 @@ pub fn run(ctx: &Ctx) -> Result<Json> {
     let engine = DynEngine::new(NativeEngine::with_parallelism(engine_par));
 
     let mut t = TextTable::new([
-        "nodes", "repl", "fail", "req/s", "p99 ms", "shed", "failed", "recovered",
-        "programs", "kB wire", "mean |e|",
+        "nodes", "repl", "fail", "wire", "req/s", "p99 ms", "shed", "failed",
+        "recovered", "programs", "kB wire", "mean |e|",
     ])
-    .with_title("Fleet sweep: serving vs nodes x replication x failure rate (32x32)");
+    .with_title("Fleet sweep: serving vs nodes x replication x failure x transport (32x32)");
     let mut csv = CsvTable::new([
         "nodes",
         "replication",
         "fail_rate",
+        "transport",
         "requests",
         "throughput_req_s",
         "p50_ms",
@@ -74,6 +77,7 @@ pub fn run(ctx: &Ctx) -> Result<Json> {
     ]);
     let mut rows = Vec::new();
 
+    let mut cells = Vec::new();
     for nodes in SWEEP_NODES {
         for replication in SWEEP_REPLICATION {
             if replication > nodes {
@@ -83,78 +87,91 @@ pub fn run(ctx: &Ctx) -> Result<Json> {
                 if fail_rate > 0.0 && nodes < 2 {
                     continue; // a 1-node fleet keeps its only node
                 }
-                let opts = FleetOptions {
-                    serve: ServeOptions {
-                        clients: 3,
-                        requests_per_client,
-                        models: 4,
-                        rows: crate::ROWS,
-                        cols: crate::COLS,
-                        queue_capacity: 32,
-                        batch_max: 8,
-                        window: Duration::from_micros(100),
-                        workers: 1,
-                        cache: true,
-                        cache_capacity: 8,
-                        measure_error: true,
-                        seed: ctx.seed,
-                        ..ServeOptions::default()
-                    },
-                    nodes,
-                    replication,
-                    fail_rate,
-                    collect_responses: false,
-                    ..FleetOptions::default()
-                };
-                let r = run_fleet(&engine, &device, &opts)?;
-                let agg = &r.aggregate;
-                t.push([
-                    nodes.to_string(),
-                    r.replication.to_string(),
-                    fnum(fail_rate),
-                    fnum(agg.throughput),
-                    fnum(agg.p99_ms),
-                    r.shed.to_string(),
-                    r.failed_nodes.len().to_string(),
-                    r.recovered_models.to_string(),
-                    agg.programs.to_string(),
-                    fnum(r.transport_bytes as f64 / 1024.0),
-                    fnum(agg.mean_abs_error),
-                ]);
-                csv.push([
-                    nodes.to_string(),
-                    r.replication.to_string(),
-                    fail_rate.to_string(),
-                    agg.requests.to_string(),
-                    agg.throughput.to_string(),
-                    agg.p50_ms.to_string(),
-                    agg.p99_ms.to_string(),
-                    r.shed.to_string(),
-                    r.failed_nodes.len().to_string(),
-                    r.recovered_models.to_string(),
-                    agg.programs.to_string(),
-                    r.transport_bytes.to_string(),
-                    r.per_node_rps.to_string(),
-                    agg.mean_abs_error.to_string(),
-                ]);
-                rows.push(obj([
-                    ("nodes", Json::Num(nodes as f64)),
-                    ("replication", Json::Num(r.replication as f64)),
-                    ("fail_rate", Json::Num(fail_rate)),
-                    ("requests", Json::Num(agg.requests as f64)),
-                    ("throughput_req_s", Json::Num(agg.throughput)),
-                    ("p50_ms", Json::Num(agg.p50_ms)),
-                    ("p99_ms", Json::Num(agg.p99_ms)),
-                    ("shed", Json::Num(r.shed as f64)),
-                    ("failed_nodes", Json::Num(r.failed_nodes.len() as f64)),
-                    ("recovered_models", Json::Num(r.recovered_models as f64)),
-                    ("programs", Json::Num(agg.programs as f64)),
-                    ("transport_bytes", Json::Num(r.transport_bytes as f64)),
-                    ("per_node_req_s", Json::Num(r.per_node_rps)),
-                    ("mean_abs_error", Json::Num(agg.mean_abs_error)),
-                ]));
+                for (wire, transport) in [
+                    ("in-process", Transport::InProcess),
+                    ("socket", Transport::Socket(SocketOptions::default())),
+                ] {
+                    cells.push((nodes, replication, fail_rate, wire, transport));
+                }
             }
         }
+    }
+
+    for (nodes, replication, fail_rate, wire, transport) in cells {
+        let opts = FleetOptions {
+            serve: ServeOptions {
+                clients: 3,
+                requests_per_client,
+                models: 4,
+                rows: crate::ROWS,
+                cols: crate::COLS,
+                queue_capacity: 32,
+                batch_max: 8,
+                window: Duration::from_micros(100),
+                workers: 1,
+                cache: true,
+                cache_capacity: 8,
+                measure_error: true,
+                seed: ctx.seed,
+                ..ServeOptions::default()
+            },
+            nodes,
+            replication,
+            fail_rate,
+            collect_responses: false,
+            transport,
+            ..FleetOptions::default()
+        };
+        let r = run_fleet(&engine, &device, &opts)?;
+        let agg = &r.aggregate;
+        t.push([
+            nodes.to_string(),
+            r.replication.to_string(),
+            fnum(fail_rate),
+            wire.to_string(),
+            fnum(agg.throughput),
+            fnum(agg.p99_ms),
+            r.shed.to_string(),
+            r.failed_nodes.len().to_string(),
+            r.recovered_models.to_string(),
+            agg.programs.to_string(),
+            fnum(r.transport_bytes as f64 / 1024.0),
+            fnum(agg.mean_abs_error),
+        ]);
+        csv.push([
+            nodes.to_string(),
+            r.replication.to_string(),
+            fail_rate.to_string(),
+            wire.to_string(),
+            agg.requests.to_string(),
+            agg.throughput.to_string(),
+            agg.p50_ms.to_string(),
+            agg.p99_ms.to_string(),
+            r.shed.to_string(),
+            r.failed_nodes.len().to_string(),
+            r.recovered_models.to_string(),
+            agg.programs.to_string(),
+            r.transport_bytes.to_string(),
+            r.per_node_rps.to_string(),
+            agg.mean_abs_error.to_string(),
+        ]);
+        rows.push(obj([
+            ("nodes", Json::Num(nodes as f64)),
+            ("replication", Json::Num(r.replication as f64)),
+            ("fail_rate", Json::Num(fail_rate)),
+            ("transport", Json::Str(wire.into())),
+            ("requests", Json::Num(agg.requests as f64)),
+            ("throughput_req_s", Json::Num(agg.throughput)),
+            ("p50_ms", Json::Num(agg.p50_ms)),
+            ("p99_ms", Json::Num(agg.p99_ms)),
+            ("shed", Json::Num(r.shed as f64)),
+            ("failed_nodes", Json::Num(r.failed_nodes.len() as f64)),
+            ("recovered_models", Json::Num(r.recovered_models as f64)),
+            ("programs", Json::Num(agg.programs as f64)),
+            ("transport_bytes", Json::Num(r.transport_bytes as f64)),
+            ("per_node_req_s", Json::Num(r.per_node_rps)),
+            ("mean_abs_error", Json::Num(agg.mean_abs_error)),
+        ]));
     }
 
     w.echo(&t.render());
@@ -181,10 +198,11 @@ mod tests {
         let s = run(&ctx).unwrap();
         let rows = s.get("rows").unwrap().as_arr().unwrap();
         // nodes x replication (<= nodes) x fail legs (failure needs a
-        // survivor): n1 has 1 cell, n2 has 4, n3 has 4.
-        assert_eq!(rows.len(), 1 + 4 + 4);
+        // survivor) x 2 transports: (1 + 4 + 4) cells, each twice.
+        assert_eq!(rows.len(), (1 + 4 + 4) * 2);
         let total = 3.0 * 4.0; // clients x capped requests
         let num = |r: &Json, k: &str| r.get(k).unwrap().as_f64().unwrap();
+        let mut sockets = 0;
         for r in rows {
             // Zero lost requests everywhere — shed detours included.
             assert_eq!(num(r, "requests"), total);
@@ -198,7 +216,11 @@ mod tests {
             } else {
                 assert!(num(r, "failed_nodes") >= 1.0);
             }
+            if r.get("transport").unwrap().as_str() == Some("socket") {
+                sockets += 1;
+            }
         }
+        assert_eq!(sockets, 9, "every cell has a socket leg");
         assert!(dir.join("fleet-sweep/series.csv").exists());
         assert!(dir.join("fleet-sweep/summary.json").exists());
         let _ = std::fs::remove_dir_all(dir);

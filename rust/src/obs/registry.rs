@@ -281,20 +281,26 @@ pub enum GaugeId {
     CacheEntries,
     /// Bounded-queue depth at the last scheduler touch.
     QueueDepth,
+    /// Requests popped from a node's queue and not yet served (sampled
+    /// per node at batch boundaries; with queue depth it makes up the
+    /// load signal the fleet router's least-loaded placement reads).
+    NodeInflight,
 }
 
 impl GaugeId {
     /// Number of gauges (sizes the registry and snapshot arrays).
-    pub const COUNT: usize = 2;
+    pub const COUNT: usize = 3;
 
     /// Every gauge, in declaration order (index order).
-    pub const ALL: [GaugeId; Self::COUNT] = [GaugeId::CacheEntries, GaugeId::QueueDepth];
+    pub const ALL: [GaugeId; Self::COUNT] =
+        [GaugeId::CacheEntries, GaugeId::QueueDepth, GaugeId::NodeInflight];
 
     /// Stable snake_case name (snapshot JSON keys, table rows).
     pub fn name(&self) -> &'static str {
         match self {
             GaugeId::CacheEntries => "cache_entries",
             GaugeId::QueueDepth => "queue_depth",
+            GaugeId::NodeInflight => "node_inflight",
         }
     }
 

@@ -177,8 +177,10 @@ impl MetricsSnapshot {
         Ok(snap)
     }
 
-    /// One MELB envelope frame under the metrics tag.
-    pub fn encode_melb(&self) -> Vec<u8> {
+    /// One MELB envelope frame under the metrics tag.  Fallible like
+    /// every binary encode (the u32 frame-field bound), though a
+    /// snapshot's fixed metric names can never trip it in practice.
+    pub fn encode_melb(&self) -> crate::error::Result<Vec<u8>> {
         encode_envelope(METRICS_SNAPSHOT, &self.to_json())
     }
 
@@ -240,10 +242,10 @@ mod tests {
     #[test]
     fn melb_round_trip_and_tag_rejection() {
         let s = sample();
-        let frame = s.encode_melb();
+        let frame = s.encode_melb().unwrap();
         assert_eq!(MetricsSnapshot::decode_melb(&frame).unwrap(), s);
         // A transport envelope is not a metrics artifact.
-        let wire = encode_envelope(ENVELOPE_REQUEST, &s.to_json());
+        let wire = encode_envelope(ENVELOPE_REQUEST, &s.to_json()).unwrap();
         assert!(MetricsSnapshot::decode_melb(&wire).is_err());
         // Trailing bytes are rejected (single-frame artifact).
         let mut padded = frame.clone();

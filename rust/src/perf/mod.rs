@@ -333,7 +333,7 @@ pub fn run_suite(opts: &SuiteOpts) -> Vec<BenchResult> {
     // workers -> response rollup) at 1 and 2 nodes, with the per-node
     // capacity the projection scales from (DESIGN.md §16).
     {
-        use crate::serve::{run_fleet, FleetOptions, ServeOptions};
+        use crate::serve::{run_fleet, FleetOptions, ServeOptions, SocketOptions, Transport};
         let fengine = DynEngine::new(NativeEngine::default());
         let rpc = if quick { 8 } else { 32 };
         for nodes in [1usize, 2] {
@@ -373,6 +373,22 @@ pub fn run_suite(opts: &SuiteOpts) -> Vec<BenchResult> {
                     "      fleet-n{nodes}: {:.0} req/s/node fitted -> {} node(s) \
                      at 1e8 req/day",
                     r.per_node_rps, r.aggregate.nodes_for_1e8_per_day
+                );
+            }
+            // Socket leg at the 2-node shape: the same traffic over
+            // loopback TCP, so the wire boundary's cost rides in the
+            // perf record next to the in-process hop.
+            if nodes == 2 {
+                let sopts = FleetOptions {
+                    transport: Transport::Socket(SocketOptions::default()),
+                    ..fopts.clone()
+                };
+                suite.go(
+                    "fleet-sock-n2",
+                    BenchOpts { samples: 3, warmup: 1, items_per_iter: Some(total as f64) },
+                    || {
+                        black_box(run_fleet(&fengine, &device, &sopts).unwrap());
+                    },
                 );
             }
         }
@@ -567,6 +583,15 @@ mod tests {
             // 4 clients x 8 quick requests through the whole fabric.
             assert_eq!(r.items_per_iter, Some(32.0));
         }
+    }
+
+    #[test]
+    fn fleet_socket_slug_runs_the_wire_leg() {
+        let results = run_suite(&SuiteOpts { quick: true, filter: Some("fleet-sock".into()) });
+        let names: Vec<&str> = results.iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(names, ["fleet-sock-n2"]);
+        assert!(results[0].median > 0.0);
+        assert_eq!(results[0].items_per_iter, Some(32.0));
     }
 
     #[test]

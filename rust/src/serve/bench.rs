@@ -331,7 +331,7 @@ pub fn run_serve(
                     break; // closed and drained
                 }
                 if let Err(e) = serve_batch(
-                    engine, device, opts, cache, specs, &batch, tallies, &wall,
+                    engine, device, opts, cache, specs, queue, &batch, tallies, &wall,
                 ) {
                     let mut slot = failure.lock().unwrap();
                     if slot.is_none() {
@@ -377,7 +377,7 @@ pub fn run_serve(
                             model: id as usize % opts.models,
                             id,
                             x: inputs.sample(id as usize),
-                            enqueued: Instant::now(),
+                            enqueued_ns: queue.now_ns(),
                             client: c,
                             deadline_ns,
                         };
@@ -459,16 +459,19 @@ fn serve_batch(
     opts: &ServeOptions,
     cache: &ProgramCache,
     specs: &[ProgramSpec],
+    queue: &AdmissionQueue<Request>,
     batch: &[Request],
     tallies: &Mutex<Tallies>,
     wall: &Stopwatch,
 ) -> Result<()> {
     // Queue wait ends the moment a worker picks the batch up; the
-    // remaining lifecycle is accounted per stage downstream.
+    // remaining lifecycle is accounted per stage downstream.  Stamps
+    // read the queue's clock — the same (mockable) time base the
+    // requests were enqueued against.
     if obs::enabled() {
-        let picked_up = Instant::now();
+        let picked_up = queue.now_ns();
         for req in batch {
-            obs::record(Stage::QueueWait, picked_up.duration_since(req.enqueued));
+            obs::record_ns(Stage::QueueWait, picked_up.saturating_sub(req.enqueued_ns));
         }
     }
     // Group requests by model, preserving arrival order within groups.
@@ -505,12 +508,12 @@ fn serve_batch(
         err_sum += outcome.err_per_req.iter().sum::<f64>();
         err_n += outcome.err_cols * outcome.err_per_req.len();
     }
-    let done = Instant::now();
+    let done = queue.now_ns();
     obs::add(CounterId::RequestsServed, batch.len() as u64);
     obs::incr(CounterId::BatchesServed);
     let mut t = tallies.lock().unwrap();
     for req in batch {
-        t.latency.record_duration(done.duration_since(req.enqueued));
+        t.latency.record(done.saturating_sub(req.enqueued_ns));
     }
     t.batches += 1;
     t.batched_requests += batch.len();

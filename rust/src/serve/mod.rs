@@ -45,10 +45,14 @@
 //!   through the MELB codec; every node hop round-trips bytes.
 //! * [`node`] — one fleet node: per-node cache, queue, worker pool,
 //!   telemetry.
-//! * [`router`] — consistent-hash placement, replication, failure
-//!   detection and recovery, fleet-wide rollup
-//!   ([`router::run_fleet`], behind `meliso fleet-bench` and the
-//!   `fleet-sweep` experiment).
+//! * [`router`] — consistent-hash placement with load-aware replica
+//!   choice, replication, failure detection and recovery, fleet-wide
+//!   rollup ([`router::run_fleet`], behind `meliso fleet-bench` and
+//!   the `fleet-sweep` experiment).
+//! * [`socket`] — the loopback TCP transport: length-prefixed frames,
+//!   connect/read timeouts with bounded retry, typed
+//!   [`socket::TransportError`]s the router recovers from exactly
+//!   like queue rejections (`--transport socket`).
 //! * [`bench::run_serve`] — the single-process simulation driver
 //!   behind `meliso serve-bench` and the `serve-sweep` experiment,
 //!   reporting p50/p95/p99 latency, throughput, realized batch sizes,
@@ -66,13 +70,15 @@ pub mod cache;
 pub mod node;
 pub mod router;
 pub mod scheduler;
+pub mod socket;
 pub mod transport;
 
 pub use bench::{run_serve, ServeOptions, ServeReport};
 pub use cache::{CacheCounts, CacheKey, ProgramCache};
 pub use node::{Node, NodeReport};
 pub use router::{
-    model_digest, run_fleet, run_fleet_nodes, FleetOptions, FleetReport, Placement,
+    model_digest, run_fleet, run_fleet_nodes, FleetOptions, FleetReport, Placement, Transport,
 };
 pub use scheduler::{AdmissionQueue, BoundedQueue, QueueClosed, Rejected, Request, Shed};
+pub use socket::{NodeClient, NodeServer, ResponseHub, SocketOptions, TransportError};
 pub use transport::{Frame, RequestEnvelope, ResponseEnvelope};

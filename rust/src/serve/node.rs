@@ -23,13 +23,12 @@
 //! (re-route and serve elsewhere), never a shed — the other half of
 //! the shed-vs-detour taxonomy (DESIGN.md §18).
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Mutex};
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 
 use crate::device::params::DeviceParams;
 use crate::error::Result;
-use crate::obs::{self, CounterId, HistogramSnapshot, Stage};
+use crate::obs::{self, Clock, CounterId, GaugeId, HistogramSnapshot, MonotonicClock, Stage};
 use crate::vmm::{DynEngine, ProgramSpec, ShardCounts, VmmEngine};
 
 use super::bench::ServeOptions;
@@ -183,6 +182,17 @@ pub struct Node {
     queue: BoundedQueue<Frame>,
     alive: AtomicBool,
     tallies: Mutex<NodeTallies>,
+    /// The node's time base: submit stamps, queue-wait, and
+    /// submit-to-served latency all read this clock (shared with the
+    /// intake queue), so one [`crate::obs::MockClock`] drives the whole
+    /// latency path deterministically in tests.  A fleet run hands
+    /// every node (and the router) one shared clock instance so stamps
+    /// taken on different sides of a hop subtract meaningfully.
+    clock: Arc<dyn Clock>,
+    /// Frames popped from the queue and not yet served — together with
+    /// the queue depth, the node's load signal
+    /// ([`Node::load`], [`GaugeId::NodeInflight`]).
+    inflight: AtomicU64,
     /// Engine shard counters at node construction; the report carries
     /// the delta accumulated during the run.
     shard_base: Option<ShardCounts>,
@@ -192,10 +202,11 @@ impl Node {
     /// A node serving through `engine`, shaped by the run options.
     pub fn new(id: usize, engine: DynEngine, opts: &ServeOptions) -> Self {
         let shard_base = engine.shard_counts();
+        let clock: Arc<dyn Clock> = Arc::new(MonotonicClock::new());
         Self {
             id,
             cache: opts.cache.then(|| ProgramCache::new(opts.cache_capacity)),
-            queue: BoundedQueue::new(opts.queue_capacity),
+            queue: BoundedQueue::new(opts.queue_capacity).with_clock(Arc::clone(&clock)),
             alive: AtomicBool::new(true),
             tallies: Mutex::new(NodeTallies {
                 requests: 0,
@@ -206,14 +217,41 @@ impl Node {
                 bytes_in: 0,
                 bytes_out: 0,
             }),
+            clock,
+            inflight: AtomicU64::new(0),
             shard_base,
             engine,
         }
     }
 
+    /// Replace the node's clock (construction-time only; the fleet run
+    /// shares one clock across router and nodes, tests inject a
+    /// [`crate::obs::MockClock`]).
+    pub fn with_clock(mut self, clock: Arc<dyn Clock>) -> Self {
+        let queue = std::mem::replace(&mut self.queue, BoundedQueue::new(1));
+        self.queue = queue.with_clock(Arc::clone(&clock));
+        self.clock = clock;
+        self
+    }
+
     /// The node's fleet index.
     pub fn id(&self) -> usize {
         self.id
+    }
+
+    /// A reading of the node's clock, in nanoseconds — submitters
+    /// stamp [`Frame::submitted_ns`] with this so the node's latency
+    /// math subtracts readings of one clock.
+    pub fn now_ns(&self) -> u64 {
+        self.clock.now_ns()
+    }
+
+    /// The node's instantaneous load: queued frames plus popped-but-
+    /// unserved frames.  This is the signal the router's load-aware
+    /// placement compares across live replicas; in a real deployment
+    /// it would ride a heartbeat, here the router reads it directly.
+    pub fn load(&self) -> u64 {
+        self.queue.len() as u64 + self.inflight.load(Ordering::Relaxed)
     }
 
     /// Has the node not been failed?
@@ -259,7 +297,13 @@ impl Node {
             if batch.is_empty() {
                 return Ok(()); // closed and drained
             }
-            self.serve_frames(&batch, device, specs, opts, responses)?;
+            // Popped frames count toward load until served (or failed).
+            self.inflight.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            obs::gauge_set(GaugeId::NodeInflight, self.inflight.load(Ordering::Relaxed));
+            let served = self.serve_frames(&batch, device, specs, opts, responses);
+            self.inflight.fetch_sub(batch.len() as u64, Ordering::Relaxed);
+            obs::gauge_set(GaugeId::NodeInflight, self.inflight.load(Ordering::Relaxed));
+            served?;
         }
     }
 
@@ -273,9 +317,9 @@ impl Node {
     ) -> Result<()> {
         // Queue wait ends here: a worker has the coalesced frames.
         if obs::enabled() {
-            let picked_up = Instant::now();
+            let picked_up = self.clock.now_ns();
             for frame in batch {
-                obs::record(Stage::QueueWait, picked_up.duration_since(frame.submitted));
+                obs::record_ns(Stage::QueueWait, picked_up.saturating_sub(frame.submitted_ns));
             }
         }
         // Transport boundary: every frame decodes from bytes.
@@ -325,19 +369,19 @@ impl Node {
                     err_abs_sum: outcome.err_per_req.get(slot).copied().unwrap_or(0.0),
                     err_cols: outcome.err_cols,
                 };
-                let frame = resp.encode();
+                let frame = resp.encode()?;
                 bytes_out += frame.len() as u64;
                 // A dropped receiver means the run is tearing down;
                 // nothing useful remains for this worker to do.
                 let _ = responses.send(frame);
             }
         }
-        let done = Instant::now();
+        let done = self.clock.now_ns();
         obs::add(CounterId::RequestsServed, batch.len() as u64);
         obs::incr(CounterId::BatchesServed);
         let mut t = self.tallies.lock().unwrap();
         for frame in batch {
-            t.latency.record_duration(done.duration_since(frame.submitted));
+            t.latency.record(done.saturating_sub(frame.submitted_ns));
         }
         t.requests += batch.len();
         t.batches += 1;
@@ -434,7 +478,7 @@ mod tests {
                 id,
                 x: inputs.sample(id as usize),
             };
-            node.submit(Frame { bytes: env.encode(), submitted: Instant::now() })
+            node.submit(Frame { bytes: env.encode().unwrap(), submitted_ns: node.now_ns() })
                 .unwrap();
         }
         node.shutdown();
@@ -462,8 +506,52 @@ mod tests {
         let node = Node::new(3, engine, &opts);
         node.fail();
         assert!(!node.is_alive());
-        let frame = Frame { bytes: vec![1, 2, 3], submitted: Instant::now() };
+        let frame = Frame { bytes: vec![1, 2, 3], submitted_ns: node.now_ns() };
         let back = node.submit(frame).expect_err("dead node must reject");
         assert_eq!(back.into_inner().bytes, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn mock_clock_makes_node_latency_exact() {
+        let opts = opts();
+        let engine = DynEngine::new(NativeEngine::default());
+        let device = presets::epiram().params;
+        let specs = opts.model_specs();
+        let inputs = opts.request_inputs();
+        let mock = Arc::new(crate::obs::MockClock::new());
+        let node =
+            Node::new(0, engine, &opts).with_clock(Arc::clone(&mock) as Arc<dyn Clock>);
+        let (tx, rx) = mpsc::channel();
+        for id in 0..6u64 {
+            let env = super::super::transport::RequestEnvelope {
+                model: id as usize % 2,
+                id,
+                x: inputs.sample(id as usize),
+            };
+            node.submit(Frame { bytes: env.encode().unwrap(), submitted_ns: node.now_ns() })
+                .unwrap();
+        }
+        // The mock clock ticks once between submit and serve; nothing
+        // else moves it, so every request's latency is exactly 2^20 ns.
+        mock.advance(1 << 20);
+        node.shutdown();
+        node.worker_loop(&device, &specs, &opts, &tx).unwrap();
+        drop(tx);
+        assert_eq!(rx.iter().count(), 6);
+        let r = node.report();
+        assert_eq!(r.latency.count, 6);
+        assert_eq!(r.latency.sum, 6 << 20);
+    }
+
+    #[test]
+    fn load_counts_queued_frames() {
+        let opts = opts();
+        let engine = DynEngine::new(NativeEngine::default());
+        let node = Node::new(0, engine, &opts);
+        assert_eq!(node.load(), 0);
+        for _ in 0..3 {
+            node.submit(Frame { bytes: vec![0], submitted_ns: node.now_ns() }).unwrap();
+        }
+        assert_eq!(node.load(), 3, "queued frames are load");
     }
 }

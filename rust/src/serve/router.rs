@@ -12,10 +12,13 @@
 //! Because the walk skips dead nodes in place, removing a node only
 //! re-places the models whose replica walk passed through it — every
 //! other digest sees an unchanged prefix and keeps its assignment
-//! (`rust/tests/proptests.rs` checks exactly this).  The replica that
-//! serves a given request is `replicas[id % replicas.len()]`: a pure
-//! function of the request id, so placement is deterministic for any
-//! thread count.
+//! (`rust/tests/proptests.rs` checks exactly this).  Within a replica
+//! set the router picks the *least-loaded* live replica (each node's
+//! queue depth plus in-flight frames, [`super::node::Node::load`]);
+//! ties keep the earliest ring-walk position, so equal-load picks are
+//! deterministic — and because a served `y` is a pure function of
+//! `(spec, device, x)` under program-once, load-dependent placement
+//! never changes a single output bit.
 //!
 //! ## Failure and recovery
 //!
@@ -24,19 +27,32 @@
 //! The router discovers the death the way a real fabric does: a
 //! submit against the dead node comes back as a typed
 //! [`QueueClosed`](super::scheduler::QueueClosed) rejection carrying
-//! the frame, the router marks the node dead (detect), re-assigns the
-//! digest over the surviving ring (re-route), and the surviving
-//! replica's cold cache re-programs the model on first touch
-//! (re-program).  Rejected-then-re-routed pushes are counted as
-//! `shed`; no request is ever lost.
+//! the frame (or, over sockets, as a typed
+//! [`TransportError`](super::socket::TransportError) — NAK, timeout,
+//! or disconnect — handled identically), and the router marks the node
+//! dead (detect), re-assigns the digest over the surviving ring
+//! (re-route), and the surviving replica's cold cache re-programs the
+//! model on first touch (re-program).  Replicas already tried for a
+//! request are skipped within that request, so two simultaneous deaths
+//! cost two detours, never a loop.  Rejected-then-re-routed pushes are
+//! counted as `shed`; no request is ever lost.
+//!
+//! ## Transports
+//!
+//! [`FleetOptions::transport`] selects how frames travel.
+//! [`Transport::InProcess`] (default) submits directly into node
+//! queues; [`Transport::Socket`] runs every node behind a loopback TCP
+//! listener and the responses over uplink sockets into a hub
+//! ([`super::socket`]).  Both lanes carry the identical MELB envelope
+//! bytes, so per-request responses are bit-identical across
+//! transports.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Mutex};
-use std::time::Instant;
+use std::sync::{mpsc, Arc, Mutex};
 
 use crate::device::params::DeviceParams;
 use crate::error::{Error, Result};
-use crate::obs::{self, CounterId, HistogramSnapshot};
+use crate::obs::{self, Clock, CounterId, HistogramSnapshot, MonotonicClock};
 use crate::util::progress::Stopwatch;
 use crate::util::rng::Xoshiro256;
 use crate::vmm::{DynEngine, ProgramSpec, ShardCounts, VmmEngine};
@@ -44,6 +60,7 @@ use crate::vmm::{DynEngine, ProgramSpec, ShardCounts, VmmEngine};
 use super::bench::{capacity_projection, ServeOptions, ServeReport};
 use super::cache::fnv1a;
 use super::node::{Node, NodeReport};
+use super::socket::{spawn_uplink, NodeClient, NodeServer, ResponseHub, SocketOptions};
 use super::transport::{Frame, RequestEnvelope, ResponseEnvelope};
 
 /// Virtual points each node contributes to the placement ring.
@@ -144,6 +161,20 @@ impl Placement {
     }
 }
 
+/// How request and response frames travel between router and nodes.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum Transport {
+    /// Frames cross in-process channels (the default): the router
+    /// submits into node queues directly, responses ride one `mpsc`.
+    #[default]
+    InProcess,
+    /// Every node sits behind a loopback TCP listener and responses
+    /// travel uplink sockets ([`super::socket`]).  Same envelope
+    /// bytes, same outputs — plus real connect/read timeouts, framing,
+    /// and disconnect semantics.
+    Socket(SocketOptions),
+}
+
 /// One fleet run's shape.
 #[derive(Debug, Clone)]
 pub struct FleetOptions {
@@ -165,6 +196,8 @@ pub struct FleetOptions {
     /// Keep every served output (id-ordered) in the report — the
     /// bit-identity harness; off for pure benchmarking.
     pub collect_responses: bool,
+    /// How frames travel between router and nodes.
+    pub transport: Transport,
 }
 
 impl Default for FleetOptions {
@@ -176,6 +209,7 @@ impl Default for FleetOptions {
             fail_rate: 0.0,
             fail_seed: 0x464C_4554, // "FLET"
             collect_responses: false,
+            transport: Transport::InProcess,
         }
     }
 }
@@ -217,7 +251,6 @@ pub struct FleetReport {
 /// What the response collector accumulates.
 struct Collected {
     count: usize,
-    duplicates: u64,
     latency: HistogramSnapshot,
     /// Per-request `sum |err|` by id (0.0 when unmeasured).
     err_by_id: Vec<f64>,
@@ -228,8 +261,45 @@ struct Collected {
     responses: Option<Vec<Option<(u64, Vec<f32>)>>>,
 }
 
+/// Least-loaded live replica not yet tried for this request; `None`
+/// only if every replica was already tried.  Strictly-less comparison
+/// keeps the earliest ring-walk position on ties, so equal-load picks
+/// are deterministic regardless of iteration timing.
+fn pick_replica(
+    replicas: &[usize],
+    tried: &[usize],
+    load: impl Fn(usize) -> u64,
+) -> Option<usize> {
+    let mut best: Option<(u64, usize)> = None;
+    for &n in replicas {
+        if tried.contains(&n) {
+            continue;
+        }
+        let l = load(n);
+        if best.map_or(true, |(bl, _)| l < bl) {
+            best = Some((l, n));
+        }
+    }
+    best.map(|(_, n)| n)
+}
+
+/// The submit lane the router pushes frames down.
+enum Lane<'a> {
+    /// Direct submits into node queues.
+    Direct,
+    /// Per-node socket clients.
+    Socket(&'a [NodeClient]),
+}
+
 struct Router<'a> {
-    nodes: &'a [Node],
+    /// The nodes themselves — the load signal (and failure injection)
+    /// read these directly even in socket mode; in a real deployment
+    /// load would ride a heartbeat, the routing logic is the same.
+    nodes: &'a [Arc<Node>],
+    lane: Lane<'a>,
+    /// The run's shared clock: submit stamps and collector latency
+    /// subtract readings of this one instance.
+    clock: Arc<dyn Clock>,
     placement: Mutex<Placement>,
     digests: &'a [u64],
     /// Requests routed so far (drives failure injection).
@@ -241,31 +311,62 @@ struct Router<'a> {
 
 impl Router<'_> {
     /// Route one serialized request frame: decode (the router pays the
-    /// transport boundary too), place, submit — and on a typed
-    /// rejection, detect the dead node, re-place, and re-submit until
-    /// a live replica accepts.  Errors only when every node is dead.
+    /// transport boundary too), place, pick the least-loaded untried
+    /// replica, submit — and on a typed rejection (queue-closed in
+    /// process, NAK/timeout/disconnect over sockets), detect the dead
+    /// node, re-place, and re-submit until a live replica accepts.
+    /// Errors only when every node is dead.
     fn route(&self, frame: Vec<u8>) -> Result<()> {
         let (req, _) = RequestEnvelope::decode(&frame)?;
         let digest = self.digests[req.model];
         let mut bytes = frame;
+        let mut tried: Vec<usize> = Vec::new();
         loop {
             let replicas = self.placement.lock().unwrap().assign(digest);
             if replicas.is_empty() {
                 return Err(Error::Config("fleet: every node is dead".into()));
             }
-            // Deterministic replica choice: spread requests across the
-            // replica set by id.
-            let pick = replicas[req.id as usize % replicas.len()];
-            match self.nodes[pick].submit(Frame { bytes, submitted: Instant::now() }) {
-                Ok(()) => break,
-                Err(rejected) => {
-                    // Detect → re-route: the frame comes back typed.
-                    bytes = rejected.into_inner().bytes;
-                    self.placement.lock().unwrap().fail(pick);
-                    self.shed.fetch_add(1, Ordering::Relaxed);
-                    obs::incr(CounterId::RequestsShed);
+            let pick = match pick_replica(&replicas, &tried, |n| self.nodes[n].load()) {
+                Some(n) => n,
+                None => {
+                    // Every replica of this assignment was tried and
+                    // found dead, so the next assignment (which skips
+                    // dead nodes) can only contain fresh candidates.
+                    tried.clear();
+                    continue;
                 }
+            };
+            let accepted = match &self.lane {
+                Lane::Direct => {
+                    let frame = Frame {
+                        bytes: std::mem::take(&mut bytes),
+                        submitted_ns: self.clock.now_ns(),
+                    };
+                    match self.nodes[pick].submit(frame) {
+                        Ok(()) => true,
+                        Err(rejected) => {
+                            // The frame comes back typed; keep routing it.
+                            bytes = rejected.into_inner().bytes;
+                            false
+                        }
+                    }
+                }
+                // A socket send failure leaves `bytes` with the caller
+                // by construction.  An ack lost to a timeout may mean
+                // the node actually accepted the frame — the re-routed
+                // duplicate is harmless, the collector dedups by id
+                // and both copies carry identical outputs.
+                Lane::Socket(clients) => clients[pick].send(&bytes).is_ok(),
+            };
+            if accepted {
+                break;
             }
+            // Detect → re-route: never this replica again for this
+            // request, and the placement drops it for future ones.
+            tried.push(pick);
+            self.placement.lock().unwrap().fail(pick);
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            obs::incr(CounterId::RequestsShed);
         }
         let routed = self.routed.fetch_add(1, Ordering::Relaxed) + 1;
         self.maybe_inject(routed);
@@ -374,13 +475,53 @@ pub fn run_fleet_nodes(
     let initial = Placement::new(opts.nodes, opts.replication);
     let replication = initial.replication();
     let plan = failure_plan(opts, &digests, &initial);
-    let nodes: Vec<Node> = engines
+    // One clock for the whole run: router submit stamps, node latency
+    // math, and collector end-to-end latency all subtract readings of
+    // this single instance (two `MonotonicClock`s have different
+    // anchors, so cross-component subtraction needs a shared one).
+    let clock: Arc<dyn Clock> = Arc::new(MonotonicClock::new());
+    let nodes: Vec<Arc<Node>> = engines
         .into_iter()
         .enumerate()
-        .map(|(i, e)| Node::new(i, e, &opts.serve))
+        .map(|(i, e)| Arc::new(Node::new(i, e, &opts.serve).with_clock(Arc::clone(&clock))))
         .collect();
+    let (tx, rx) = mpsc::channel::<Vec<u8>>();
+    // The socket rig, when requested: every node behind a loopback
+    // listener, per-node response uplinks into a hub that forwards to
+    // the collector.  Rig threads are unscoped (they own `Arc`s) and
+    // are joined after the serving scope ends.
+    let mut rig: Option<(Vec<NodeServer>, ResponseHub, Vec<std::thread::JoinHandle<()>>)> = None;
+    let mut uplink_senders: Vec<mpsc::Sender<Vec<u8>>> = Vec::new();
+    let mut lane_clients: Vec<NodeClient> = Vec::new();
+    if let Transport::Socket(sock) = &opts.transport {
+        let hub = ResponseHub::spawn(opts.nodes, tx.clone())?;
+        let mut servers = Vec::with_capacity(opts.nodes);
+        let mut uplinks = Vec::with_capacity(opts.nodes);
+        for node in &nodes {
+            let server = NodeServer::spawn(Arc::clone(node), sock)?;
+            let (utx, urx) = mpsc::channel::<Vec<u8>>();
+            uplinks.push(spawn_uplink(hub.addr(), urx, sock));
+            lane_clients.push(NodeClient::new(server.addr(), sock.clone()));
+            uplink_senders.push(utx);
+            servers.push(server);
+        }
+        rig = Some((servers, hub, uplinks));
+    }
+    // What each node's workers emit responses into: its uplink sender
+    // over sockets, the collector channel directly in process.
+    let node_senders: Vec<mpsc::Sender<Vec<u8>>> = if uplink_senders.is_empty() {
+        nodes.iter().map(|_| tx.clone()).collect()
+    } else {
+        uplink_senders
+    };
     let router = Router {
         nodes: &nodes,
+        lane: if lane_clients.is_empty() {
+            Lane::Direct
+        } else {
+            Lane::Socket(&lane_clients)
+        },
+        clock: Arc::clone(&clock),
         placement: Mutex::new(initial.clone()),
         digests: &digests,
         routed: AtomicU64::new(0),
@@ -388,18 +529,17 @@ pub fn run_fleet_nodes(
         pending_failures: Mutex::new(plan),
     };
     let total = opts.serve.total_requests();
-    let enqueued: Mutex<Vec<Option<Instant>>> = Mutex::new(vec![None; total]);
+    let enqueued: Mutex<Vec<Option<u64>>> = Mutex::new(vec![None; total]);
     let engine_failure: Mutex<Option<Error>> = Mutex::new(None);
     let collected_slot: Mutex<Option<Result<Collected>>> = Mutex::new(None);
     let workers = opts.serve.workers.max(1);
     let wall = Stopwatch::start();
 
     std::thread::scope(|scope| {
-        let (tx, rx) = mpsc::channel::<Vec<u8>>();
         // Per-node scheduler worker pools.
         for node in &nodes {
             for _ in 0..workers {
-                let tx = tx.clone();
+                let tx = node_senders[node.id()].clone();
                 let specs = &specs;
                 let serve_opts = &opts.serve;
                 let engine_failure = &engine_failure;
@@ -420,7 +560,11 @@ pub fn run_fleet_nodes(
                 });
             }
         }
-        drop(tx); // collector ends when the last worker exits
+        // Collector ends when the last sender drops: the main handle
+        // and per-node senders here, worker clones as workers exit,
+        // hub forwarders as uplinks close (socket mode).
+        drop(tx);
+        drop(node_senders);
 
         // Response collector: decode every response frame, account
         // end-to-end latency and error by request id.
@@ -429,11 +573,11 @@ pub fn run_fleet_nodes(
             let wall = &wall;
             let collected_slot = &collected_slot;
             let collect_responses = opts.collect_responses;
+            let clock = &clock;
             scope.spawn(move || {
                 let run = || -> Result<Collected> {
                     let mut c = Collected {
                         count: 0,
-                        duplicates: 0,
                         latency: HistogramSnapshot::empty(),
                         err_by_id: vec![0.0; total],
                         err_cols: 0,
@@ -449,14 +593,15 @@ pub fn run_fleet_nodes(
                         let (resp, _) = ResponseEnvelope::decode(&frame)?;
                         let idx = resp.id as usize;
                         if idx >= total || seen[idx] {
-                            c.duplicates += 1;
+                            // A duplicate serve after a lost socket
+                            // ack: both copies are bit-identical, the
+                            // first one already counted.
                             continue;
                         }
                         seen[idx] = true;
                         c.count += 1;
                         if let Some(t0) = enqueued.lock().unwrap()[idx] {
-                            c.latency
-                                .record_duration(Instant::now().duration_since(t0));
+                            c.latency.record(clock.now_ns().saturating_sub(t0));
                         }
                         c.err_by_id[idx] = resp.err_abs_sum;
                         c.err_cols += resp.err_cols;
@@ -478,6 +623,7 @@ pub fn run_fleet_nodes(
                 let inputs = &inputs;
                 let enqueued = &enqueued;
                 let serve_opts = &opts.serve;
+                let clock = &clock;
                 scope.spawn(move || {
                     for i in 0..serve_opts.requests_per_client {
                         let id = (cl * serve_opts.requests_per_client + i) as u64;
@@ -486,8 +632,8 @@ pub fn run_fleet_nodes(
                             id,
                             x: inputs.sample(id as usize),
                         };
-                        let frame = env.encode();
-                        enqueued.lock().unwrap()[id as usize] = Some(Instant::now());
+                        let frame = env.encode().expect("request frames fit the u32 bound");
+                        enqueued.lock().unwrap()[id as usize] = Some(clock.now_ns());
                         if router.route(frame).is_err() {
                             break; // fleet torn down mid-stream
                         }
@@ -503,6 +649,19 @@ pub fn run_fleet_nodes(
             node.shutdown();
         }
     });
+
+    // Socket rig teardown: the scope joined every worker, so uplinks
+    // have flushed and the hub has drained; stop the listeners and
+    // join the rig's own threads before reporting.
+    if let Some((servers, hub, uplinks)) = rig.take() {
+        for s in servers {
+            s.shutdown();
+        }
+        for u in uplinks {
+            let _ = u.join();
+        }
+        hub.shutdown();
+    }
 
     if let Some(e) = engine_failure.into_inner().unwrap() {
         return Err(e);
@@ -717,5 +876,84 @@ mod tests {
         let mut opts = tiny_fleet(2, 1, 0.0);
         opts.serve.models = 0; // invalid shape
         assert!(run_fleet(&engine, &device, &opts).is_err());
+    }
+
+    #[test]
+    fn pick_replica_prefers_least_loaded_and_breaks_ties_by_walk_order() {
+        let loads = [5u64, 1, 3];
+        let load = |n: usize| loads[n];
+        assert_eq!(pick_replica(&[2, 0, 1], &[], load), Some(1));
+        assert_eq!(pick_replica(&[2, 0, 1], &[1], load), Some(2));
+        assert_eq!(pick_replica(&[2, 0, 1], &[1, 2], load), Some(0));
+        assert_eq!(pick_replica(&[2, 0, 1], &[0, 1, 2], load), None);
+        // Equal loads: the earliest ring-walk position always wins, so
+        // the pick stays deterministic when nothing separates replicas.
+        let flat = |_: usize| 7u64;
+        assert_eq!(pick_replica(&[2, 0, 1], &[], flat), Some(2));
+        assert_eq!(pick_replica(&[2, 0, 1], &[2], flat), Some(0));
+    }
+
+    #[test]
+    fn reroute_skips_tried_replicas_with_two_simultaneous_victims() {
+        let serve = tiny_fleet(3, 3, 0.0).serve;
+        let clock: Arc<dyn Clock> = Arc::new(MonotonicClock::new());
+        let nodes: Vec<Arc<Node>> = (0..3)
+            .map(|i| {
+                let engine = DynEngine::new(NativeEngine::default());
+                Arc::new(Node::new(i, engine, &serve).with_clock(Arc::clone(&clock)))
+            })
+            .collect();
+        let digests = vec![model_digest(&serve.model_specs()[0])];
+        let placement = Placement::new(3, 3);
+        let replicas = placement.assign(digests[0]);
+        assert_eq!(replicas.len(), 3);
+        // Two of the three replicas die at once — silently, so the
+        // router must discover both through typed rejections and skip
+        // each exactly once within the same request.
+        nodes[replicas[0]].fail();
+        nodes[replicas[1]].fail();
+        let router = Router {
+            nodes: &nodes,
+            lane: Lane::Direct,
+            clock: Arc::clone(&clock),
+            placement: Mutex::new(placement),
+            digests: &digests,
+            routed: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            pending_failures: Mutex::new(Vec::new()),
+        };
+        let env = RequestEnvelope { model: 0, id: 0, x: vec![0.0; serve.rows] };
+        router.route(env.encode().unwrap()).unwrap();
+        assert_eq!(router.shed.load(Ordering::Relaxed), 2, "one detour per victim");
+        assert_eq!(nodes[replicas[2]].load(), 1, "the survivor holds the frame");
+        assert!(!router.placement.lock().unwrap().is_alive(replicas[0]));
+        assert!(!router.placement.lock().unwrap().is_alive(replicas[1]));
+    }
+
+    #[test]
+    fn socket_fleet_matches_in_process_bit_for_bit() {
+        let engine = DynEngine::new(NativeEngine::default());
+        let device = presets::epiram().params;
+        let mut opts = tiny_fleet(2, 1, 0.0);
+        let base = run_fleet(&engine, &device, &opts).unwrap();
+        opts.transport = Transport::Socket(SocketOptions {
+            connect_timeout: Duration::from_millis(500),
+            read_timeout: Duration::from_secs(2),
+            retries: 2,
+        });
+        let sock = run_fleet(&engine, &device, &opts).unwrap();
+        assert_eq!(sock.aggregate.requests, 30);
+        assert_eq!(sock.aggregate.shed, 0);
+        assert!(sock.transport_bytes > 0);
+        let a = base.responses.unwrap();
+        let b = sock.responses.unwrap();
+        assert_eq!(a.len(), b.len());
+        for ((ia, ya), (ib, yb)) in a.iter().zip(b.iter()) {
+            assert_eq!(ia, ib);
+            assert_eq!(ya.len(), yb.len());
+            for (u, v) in ya.iter().zip(yb) {
+                assert_eq!(u.to_bits(), v.to_bits(), "request {ia}: outputs must match");
+            }
+        }
     }
 }

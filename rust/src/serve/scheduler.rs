@@ -55,8 +55,11 @@ pub struct Request {
     pub id: u64,
     /// The input vector (`rows` entries).
     pub x: Vec<f32>,
-    /// Enqueue timestamp — latency is measured enqueue-to-decode.
-    pub enqueued: Instant,
+    /// Enqueue timestamp as a queue-clock reading in nanoseconds
+    /// ([`AdmissionQueue::now_ns`]) — latency is measured
+    /// enqueue-to-decode against the same mockable [`Clock`] the
+    /// deadline accounting uses, never a raw `Instant`.
+    pub enqueued_ns: u64,
     /// Originating client — the admission queue's fairness lane id.
     pub client: usize,
     /// Absolute SLO deadline in queue-clock nanoseconds
@@ -512,6 +515,18 @@ impl<T> BoundedQueue<T> {
     /// Queue holding at most `capacity` items (clamped to at least 1).
     pub fn new(capacity: usize) -> Self {
         Self { inner: AdmissionQueue::new(capacity, 1) }
+    }
+
+    /// Replace the queue's clock (shared with the owning node so
+    /// queue-wait and latency telemetry read one mockable time base).
+    pub fn with_clock(mut self, clock: Arc<dyn Clock>) -> Self {
+        self.inner = self.inner.with_clock(clock);
+        self
+    }
+
+    /// A reading of the queue's clock, in nanoseconds.
+    pub fn now_ns(&self) -> u64 {
+        self.inner.now_ns()
     }
 
     /// Maximum queued items.

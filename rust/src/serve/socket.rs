@@ -1,0 +1,800 @@
+//! Loopback TCP transport for the fleet fabric.
+//!
+//! The in-process fabric already round-trips serialized MELB envelopes
+//! on every hop; this module puts those same bytes on real sockets.
+//! Each [`Node`](super::node::Node) sits behind a [`NodeServer`] — a
+//! loopback `TcpListener` whose per-connection handlers read
+//! length-prefixed request frames, stamp them against the *node's*
+//! clock on receipt (a clock reading cannot cross a serialization
+//! boundary), and submit into the node's queue, answering each frame
+//! with a one-byte [`ACK`] or (for a dead node) [`NAK`] before closing
+//! the connection.  The router talks to each server through a
+//! [`NodeClient`] with connect/read timeouts and bounded connect
+//! retries; every failure is a typed [`TransportError`] the router
+//! treats exactly like a [`QueueClosed`](super::scheduler::QueueClosed)
+//! rejection — detect, re-route, re-program, never lose the request.
+//! Served responses ride their own uplink sockets into a
+//! [`ResponseHub`] that forwards frames to the run's collector.
+//!
+//! ## Wire format
+//!
+//! One frame is `[u32 little-endian length][length bytes of MELB
+//! envelope]` — the same `u32` length discipline as every MELB field,
+//! bounded by [`MAX_WIRE_FRAME`] so a corrupt prefix cannot ask the
+//! reader to allocate the moon.  A zero-length frame is malformed (a
+//! MELB envelope is never empty).  Request connections additionally
+//! carry the one-byte ACK/NAK answer per frame, so the client knows a
+//! frame was *accepted* (not merely written) before routing the next;
+//! uplink connections are one-way streams of response frames.
+//!
+//! Design: `rust/DESIGN.md` §19.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::node::Node;
+
+/// Largest frame the reader will accept (64 MiB) — far above any real
+/// envelope, small enough that a torn or hostile length prefix fails
+/// fast instead of exhausting memory.
+pub const MAX_WIRE_FRAME: usize = 64 << 20;
+
+/// "Frame accepted" answer byte (ASCII ACK).
+pub const ACK: u8 = 0x06;
+/// "Node dead, frame rejected" answer byte (ASCII NAK).  The handler
+/// closes the connection after a NAK, so the client also observes the
+/// disconnect a real dead peer would produce.
+pub const NAK: u8 = 0x15;
+
+/// How long a blocked read polls before re-checking stop/liveness.
+const POLL: Duration = Duration::from_millis(20);
+/// How long the hub waits for its next uplink before giving up — a
+/// bound, not a pace: every healthy uplink dials at run start.  Gives
+/// up rather than holding the collector's channel open forever when
+/// an uplink died before connecting.
+const ACCEPT_DEADLINE: Duration = Duration::from_secs(10);
+/// Pause between bounded connect retries.
+const RETRY_PAUSE: Duration = Duration::from_millis(10);
+
+/// Socket-transport shape: timeouts and the connect retry budget.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SocketOptions {
+    /// Per-attempt connect timeout.
+    pub connect_timeout: Duration,
+    /// How long a client waits on an ACK/NAK (and a hub reader on the
+    /// next frame) before declaring the peer stalled.
+    pub read_timeout: Duration,
+    /// Additional connect attempts after the first (bounded retry).
+    pub retries: u32,
+}
+
+impl Default for SocketOptions {
+    fn default() -> Self {
+        Self {
+            connect_timeout: Duration::from_secs(1),
+            read_timeout: Duration::from_secs(5),
+            retries: 3,
+        }
+    }
+}
+
+/// Typed transport failures.  Every variant is recoverable by the
+/// router the same way a [`QueueClosed`](super::scheduler::QueueClosed)
+/// rejection is: mark the node dead, re-route the frame elsewhere.
+#[derive(Debug)]
+pub enum TransportError {
+    /// Could not connect (after the bounded retries).
+    Connect(io::Error),
+    /// Connect attempts timed out (after the bounded retries).
+    ConnectTimeout,
+    /// The peer stopped mid-frame or never answered within the read
+    /// timeout.
+    ReadTimeout,
+    /// The peer hung up — cleanly between frames on an uplink is EOF,
+    /// but mid-frame or before the ACK it is this.
+    PeerDisconnect,
+    /// A malformed wire frame (zero or oversized length prefix, or an
+    /// unknown answer byte).
+    Frame(String),
+    /// The node answered [`NAK`]: it is dead and the frame was not
+    /// accepted.
+    Rejected,
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Connect(e) => write!(f, "transport: connect failed: {e}"),
+            TransportError::ConnectTimeout => write!(f, "transport: connect timed out"),
+            TransportError::ReadTimeout => write!(f, "transport: read timed out mid-frame"),
+            TransportError::PeerDisconnect => write!(f, "transport: peer disconnected"),
+            TransportError::Frame(s) => write!(f, "transport: bad frame: {s}"),
+            TransportError::Rejected => write!(f, "transport: node rejected the frame (NAK)"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// What one `read_frame` call observed.
+#[derive(Debug)]
+pub enum FrameRead {
+    /// A complete frame.
+    Frame(Vec<u8>),
+    /// Clean end-of-stream on a frame boundary.
+    Eof,
+    /// No bytes at all within the socket's read timeout — the stream
+    /// is merely quiet, not torn.  Callers poll again (after checking
+    /// their stop flag).
+    Idle,
+}
+
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+/// Fill `buf` from `r`, distinguishing the three ways a read can end
+/// early.  `got` counts bytes already consumed *of this frame* — with
+/// any consumed, a timeout is a torn frame ([`TransportError::ReadTimeout`])
+/// and EOF is a disconnect, never `Idle`/`Eof`.
+fn read_exact_frame(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    mut got: usize,
+) -> Result<FrameRead, TransportError> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) if got == 0 => return Ok(FrameRead::Eof),
+            Ok(0) => return Err(TransportError::PeerDisconnect),
+            Ok(n) => {
+                filled += n;
+                got += n;
+            }
+            Err(e) if is_timeout(&e) && got == 0 => return Ok(FrameRead::Idle),
+            Err(e) if is_timeout(&e) => return Err(TransportError::ReadTimeout),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            // On loopback the residual I/O failures (reset, broken
+            // pipe, unexpected EOF) all mean the peer went away.
+            Err(_) => return Err(TransportError::PeerDisconnect),
+        }
+    }
+    Ok(FrameRead::Frame(Vec::new())) // placeholder; callers use `buf`
+}
+
+/// Read one length-prefixed frame.  `Idle`/`Eof` only ever happen on a
+/// frame boundary; once any byte of a frame has arrived, stopping is a
+/// typed error.
+pub fn read_frame(r: &mut impl Read) -> Result<FrameRead, TransportError> {
+    let mut len_buf = [0u8; 4];
+    match read_exact_frame(r, &mut len_buf, 0)? {
+        FrameRead::Eof => return Ok(FrameRead::Eof),
+        FrameRead::Idle => return Ok(FrameRead::Idle),
+        FrameRead::Frame(_) => {}
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len == 0 {
+        return Err(TransportError::Frame("zero-length frame".into()));
+    }
+    if len > MAX_WIRE_FRAME {
+        return Err(TransportError::Frame(format!(
+            "declared length {len} exceeds MAX_WIRE_FRAME ({MAX_WIRE_FRAME})"
+        )));
+    }
+    let mut body = vec![0u8; len];
+    match read_exact_frame(r, &mut body, 4)? {
+        FrameRead::Frame(_) => Ok(FrameRead::Frame(body)),
+        // got > 0 makes Eof/Idle unreachable here.
+        _ => Err(TransportError::PeerDisconnect),
+    }
+}
+
+/// Write one length-prefixed frame.  The length prefix shares the MELB
+/// `u32` bound; an oversized frame is refused before any byte is
+/// written, so a torn prefix is never emitted.
+pub fn write_frame(w: &mut impl Write, bytes: &[u8]) -> Result<(), TransportError> {
+    if bytes.is_empty() || bytes.len() > MAX_WIRE_FRAME {
+        return Err(TransportError::Frame(format!(
+            "refusing to write a {}-byte frame",
+            bytes.len()
+        )));
+    }
+    let len = bytes.len() as u32; // <= MAX_WIRE_FRAME < u32::MAX
+    let res = w
+        .write_all(&len.to_le_bytes())
+        .and_then(|()| w.write_all(bytes));
+    res.map_err(|e| {
+        if is_timeout(&e) {
+            TransportError::ReadTimeout
+        } else {
+            TransportError::PeerDisconnect
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Client side: the router's connection to one node.
+// ---------------------------------------------------------------------------
+
+/// The router's handle to one node's request listener: a single
+/// pooled connection (lazily established, re-established after any
+/// error) plus the timeout/retry discipline.  `send` is
+/// request/answer-strict: the ACK is read before the next frame may be
+/// written, so frames never interleave on the wire.
+pub struct NodeClient {
+    addr: SocketAddr,
+    opts: SocketOptions,
+    conn: Mutex<Option<TcpStream>>,
+}
+
+impl NodeClient {
+    /// A client for the server at `addr`.  No connection is made yet —
+    /// the first `send` pays it (and its retries).
+    pub fn new(addr: SocketAddr, opts: SocketOptions) -> Self {
+        Self { addr, opts, conn: Mutex::new(None) }
+    }
+
+    /// The server address this client dials.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    fn connect(&self) -> Result<TcpStream, TransportError> {
+        let mut last = TransportError::ConnectTimeout;
+        for attempt in 0..=self.opts.retries {
+            if attempt > 0 {
+                std::thread::sleep(RETRY_PAUSE);
+            }
+            match TcpStream::connect_timeout(&self.addr, self.opts.connect_timeout) {
+                Ok(s) => {
+                    let _ = s.set_nodelay(true);
+                    let _ = s.set_read_timeout(Some(self.opts.read_timeout));
+                    let _ = s.set_write_timeout(Some(self.opts.read_timeout));
+                    return Ok(s);
+                }
+                Err(e) if is_timeout(&e) => last = TransportError::ConnectTimeout,
+                Err(e) => last = TransportError::Connect(e),
+            }
+        }
+        Err(last)
+    }
+
+    /// Send one request frame and wait for the node's answer byte.
+    /// Any failure drops the pooled connection (the next send
+    /// re-dials) and returns the typed error; the caller still owns
+    /// `frame` and re-routes it.
+    pub fn send(&self, frame: &[u8]) -> Result<(), TransportError> {
+        let mut guard = self.conn.lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(self.connect()?);
+        }
+        let stream = guard.as_mut().expect("connection just ensured");
+        let result = Self::send_on(stream, frame);
+        if result.is_err() {
+            *guard = None; // poison the pooled connection
+        }
+        result
+    }
+
+    fn send_on(stream: &mut TcpStream, frame: &[u8]) -> Result<(), TransportError> {
+        write_frame(stream, frame)?;
+        // One answer byte, within the stream's read timeout.  A quiet
+        // socket here is a stalled node, not idleness — the frame was
+        // already delivered, so `Idle` means the answer never came.
+        let mut answer = [0u8; 1];
+        match read_exact_frame(stream, &mut answer, 0)? {
+            FrameRead::Frame(_) => {}
+            FrameRead::Eof => return Err(TransportError::PeerDisconnect),
+            FrameRead::Idle => return Err(TransportError::ReadTimeout),
+        }
+        match answer[0] {
+            ACK => Ok(()),
+            NAK => Err(TransportError::Rejected),
+            b => Err(TransportError::Frame(format!("unknown answer byte {b:#04x}"))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server side: one node behind a listener.
+// ---------------------------------------------------------------------------
+
+/// One node's request listener: an accept loop on an ephemeral
+/// loopback port, one handler thread per connection.  Handlers stamp
+/// each frame with the node's clock *on receipt* — the submit stamp
+/// cannot ride the wire — and answer ACK/NAK per frame.
+pub struct NodeServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl NodeServer {
+    /// Bind an ephemeral loopback port for `node` and start accepting.
+    pub fn spawn(node: Arc<Node>, opts: &SocketOptions) -> io::Result<NodeServer> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let stop = Arc::clone(&stop);
+            let read_timeout = opts.read_timeout;
+            std::thread::spawn(move || {
+                let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+                while !stop.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let _ = stream.set_nodelay(true);
+                            // Poll-read so the handler can observe the
+                            // stop flag while the connection is quiet.
+                            let _ = stream.set_read_timeout(Some(POLL));
+                            let _ = stream.set_write_timeout(Some(read_timeout));
+                            let node = Arc::clone(&node);
+                            let stop = Arc::clone(&stop);
+                            handlers.push(std::thread::spawn(move || {
+                                Self::handle(stream, &node, &stop);
+                            }));
+                        }
+                        Err(ref e) if is_timeout(e) => std::thread::sleep(POLL),
+                        Err(_) => break,
+                    }
+                }
+                for h in handlers {
+                    let _ = h.join();
+                }
+            })
+        };
+        Ok(NodeServer { addr, stop, accept: Some(accept) })
+    }
+
+    /// The bound address clients dial.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// One connection: read frames until EOF, error, or stop.
+    fn handle(mut stream: TcpStream, node: &Node, stop: &AtomicBool) {
+        loop {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            match read_frame(&mut stream) {
+                Ok(FrameRead::Idle) => continue,
+                Ok(FrameRead::Eof) | Err(_) => return,
+                Ok(FrameRead::Frame(bytes)) => {
+                    // The submit stamp is taken here, on the node's
+                    // clock: queue-wait and latency subtract readings
+                    // of one clock, exactly as in-process.
+                    let frame = super::transport::Frame {
+                        bytes,
+                        submitted_ns: node.now_ns(),
+                    };
+                    match node.submit(frame) {
+                        Ok(()) => {
+                            if stream.write_all(&[ACK]).is_err() {
+                                return;
+                            }
+                        }
+                        Err(_closed) => {
+                            // A dead node NAKs and hangs up — the
+                            // client sees both the typed rejection and
+                            // the disconnect a real dead peer gives.
+                            let _ = stream.write_all(&[NAK]);
+                            return;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Stop accepting and join every thread.  In-flight handler reads
+    /// finish their current poll (bounded by [`POLL`]) first.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NodeServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Response path: per-node uplinks into one hub.
+// ---------------------------------------------------------------------------
+
+/// The run's response funnel: accepts exactly `expected` uplink
+/// connections (one per node) and forwards every frame they carry
+/// into the collector's channel.  Readers exit on uplink EOF; the
+/// accept loop exits once all uplinks have arrived (or on shutdown).
+pub struct ResponseHub {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ResponseHub {
+    /// Bind the hub and start accepting `expected` uplinks, forwarding
+    /// their frames into `out`.
+    pub fn spawn(expected: usize, out: mpsc::Sender<Vec<u8>>) -> io::Result<ResponseHub> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut readers: Vec<JoinHandle<()>> = Vec::new();
+                let mut last = std::time::Instant::now();
+                while readers.len() < expected && !stop.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            last = std::time::Instant::now();
+                            let _ = stream.set_read_timeout(Some(POLL));
+                            let out = out.clone();
+                            let stop = Arc::clone(&stop);
+                            readers.push(std::thread::spawn(move || {
+                                Self::read_uplink(stream, &out, &stop);
+                            }));
+                        }
+                        Err(ref e) if is_timeout(e) => {
+                            if last.elapsed() > ACCEPT_DEADLINE {
+                                break;
+                            }
+                            std::thread::sleep(POLL);
+                        }
+                        Err(_) => break,
+                    }
+                }
+                drop(out); // the collector ends when every reader is done
+                for r in readers {
+                    let _ = r.join();
+                }
+            })
+        };
+        Ok(ResponseHub { addr, stop, accept: Some(accept) })
+    }
+
+    /// The bound address uplinks dial.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    fn read_uplink(mut stream: TcpStream, out: &mpsc::Sender<Vec<u8>>, stop: &AtomicBool) {
+        loop {
+            match read_frame(&mut stream) {
+                Ok(FrameRead::Idle) => {
+                    if stop.load(Ordering::SeqCst) {
+                        return;
+                    }
+                }
+                Ok(FrameRead::Eof) | Err(_) => return,
+                Ok(FrameRead::Frame(bytes)) => {
+                    if out.send(bytes).is_err() {
+                        return; // run tearing down
+                    }
+                }
+            }
+        }
+    }
+
+    /// Join the hub (all uplinks seen and drained, or forced).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ResponseHub {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One node's response uplink: drain `rx` (the channel the node's
+/// workers emit serialized responses into) onto a TCP connection to
+/// the hub, then flush and hang up.  Connect failures drop the frames
+/// on the floor — the collector's count then misses and the run fails
+/// loudly rather than silently.
+pub fn spawn_uplink(
+    hub: SocketAddr,
+    rx: mpsc::Receiver<Vec<u8>>,
+    opts: &SocketOptions,
+) -> JoinHandle<()> {
+    let opts = opts.clone();
+    std::thread::spawn(move || {
+        let mut last_err = None;
+        let mut stream = None;
+        for attempt in 0..=opts.retries {
+            if attempt > 0 {
+                std::thread::sleep(RETRY_PAUSE);
+            }
+            match TcpStream::connect_timeout(&hub, opts.connect_timeout) {
+                Ok(s) => {
+                    let _ = s.set_nodelay(true);
+                    let _ = s.set_write_timeout(Some(opts.read_timeout));
+                    stream = Some(s);
+                    break;
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        drop(last_err);
+        // With no connection (or after a write failure) keep draining
+        // the channel so node workers never block on a closed pipe.
+        let mut broken = false;
+        while let Ok(frame) = rx.recv() {
+            if broken {
+                continue;
+            }
+            if let Some(s) = stream.as_mut() {
+                broken = write_frame(s, &frame).is_err();
+            }
+        }
+        if let Some(mut s) = stream {
+            let _ = s.flush();
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::presets;
+    use crate::serve::bench::ServeOptions;
+    use crate::serve::transport::RequestEnvelope;
+    use crate::vmm::{DynEngine, NativeEngine};
+    use std::io::Write as _;
+
+    fn quick_opts() -> SocketOptions {
+        SocketOptions {
+            connect_timeout: Duration::from_millis(200),
+            read_timeout: Duration::from_millis(200),
+            retries: 1,
+        }
+    }
+
+    fn serve_opts() -> ServeOptions {
+        ServeOptions {
+            clients: 1,
+            requests_per_client: 4,
+            models: 2,
+            rows: 8,
+            cols: 8,
+            queue_capacity: 8,
+            batch_max: 4,
+            window: Duration::from_micros(0),
+            workers: 1,
+            cache: true,
+            cache_capacity: 4,
+            measure_error: false,
+            ..ServeOptions::default()
+        }
+    }
+
+    fn test_node() -> Arc<Node> {
+        let engine = DynEngine::new(NativeEngine::default());
+        Arc::new(Node::new(0, engine, &serve_opts()))
+    }
+
+    #[test]
+    fn frame_round_trip_on_a_socket() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let echo = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            match read_frame(&mut s).unwrap() {
+                FrameRead::Frame(b) => write_frame(&mut s, &b).unwrap(),
+                other => panic!("expected a frame, got {other:?}"),
+            }
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        let payload: Vec<u8> = (0..=255).collect();
+        write_frame(&mut c, &payload).unwrap();
+        match read_frame(&mut c).unwrap() {
+            FrameRead::Frame(b) => assert_eq!(b, payload),
+            other => panic!("expected the echo, got {other:?}"),
+        }
+        echo.join().unwrap();
+    }
+
+    #[test]
+    fn bad_length_prefixes_are_typed_frame_errors() {
+        // Zero length.
+        let mut z: &[u8] = &0u32.to_le_bytes();
+        assert!(matches!(read_frame(&mut z), Err(TransportError::Frame(_))));
+        // Oversized length.
+        let mut o: &[u8] = &u32::MAX.to_le_bytes();
+        assert!(matches!(read_frame(&mut o), Err(TransportError::Frame(_))));
+        // Writer refuses the same bounds before emitting anything.
+        let mut sink = Vec::new();
+        assert!(matches!(
+            write_frame(&mut sink, &[]),
+            Err(TransportError::Frame(_))
+        ));
+        assert!(sink.is_empty(), "no bytes of a refused frame hit the wire");
+    }
+
+    #[test]
+    fn torn_frames_read_as_peer_disconnect_never_idle() {
+        // EOF mid-prefix.
+        let mut cut: &[u8] = &[9, 0];
+        assert!(matches!(
+            read_frame(&mut cut),
+            Err(TransportError::PeerDisconnect)
+        ));
+        // EOF mid-body.
+        let mut torn: Vec<u8> = 9u32.to_le_bytes().to_vec();
+        torn.extend_from_slice(&[1, 2, 3]);
+        let mut torn = torn.as_slice();
+        assert!(matches!(
+            read_frame(&mut torn),
+            Err(TransportError::PeerDisconnect)
+        ));
+        // A clean boundary is Eof, and an empty read source too.
+        let mut empty: &[u8] = &[];
+        assert!(matches!(read_frame(&mut empty), Ok(FrameRead::Eof)));
+    }
+
+    #[test]
+    fn mid_stream_disconnect_over_a_real_socket_is_typed() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let half = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            // Write a torn frame: the prefix promises 100 bytes, only
+            // 3 arrive before the peer hangs up.
+            s.write_all(&100u32.to_le_bytes()).unwrap();
+            s.write_all(&[1, 2, 3]).unwrap();
+            // drop(s): mid-frame disconnect
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_millis(500))).unwrap();
+        half.join().unwrap();
+        assert!(matches!(
+            read_frame(&mut c),
+            Err(TransportError::PeerDisconnect)
+        ));
+    }
+
+    #[test]
+    fn connect_refused_is_a_typed_error_after_bounded_retries() {
+        // Bind then drop: the port is (almost surely) refusing now.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let client = NodeClient::new(addr, quick_opts());
+        match client.send(&[1, 2, 3]) {
+            Err(TransportError::Connect(_)) | Err(TransportError::ConnectTimeout) => {}
+            other => panic!("expected a typed connect failure, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn silent_server_times_out_the_answer() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        // Accept, read the frame, answer nothing.
+        let mute = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let _ = read_frame(&mut s);
+            std::thread::sleep(Duration::from_millis(600));
+        });
+        let client = NodeClient::new(addr, quick_opts());
+        assert!(matches!(
+            client.send(&[1, 2, 3]),
+            Err(TransportError::ReadTimeout)
+        ));
+        mute.join().unwrap();
+    }
+
+    #[test]
+    fn node_server_acks_live_frames_and_naks_dead_ones() {
+        let node = test_node();
+        let opts = quick_opts();
+        let server = NodeServer::spawn(Arc::clone(&node), &opts).unwrap();
+        let client = NodeClient::new(server.addr(), opts);
+        let env = RequestEnvelope { model: 0, id: 7, x: vec![0.5; 8] };
+        let bytes = env.encode().unwrap();
+        client.send(&bytes).unwrap();
+        assert_eq!(node.load(), 1, "accepted frame is queued");
+        // Kill the node: the same send now comes back Rejected, and
+        // the handler hangs up (a fresh connection is dialed next).
+        node.fail();
+        assert!(matches!(
+            client.send(&bytes),
+            Err(TransportError::Rejected)
+        ));
+        server.shutdown();
+    }
+
+    #[test]
+    fn node_behind_socket_serves_bit_identically_to_direct_submit() {
+        let opts = serve_opts();
+        let device = presets::epiram().params;
+        let specs = opts.model_specs();
+        let inputs = opts.request_inputs();
+        let engine = DynEngine::new(NativeEngine::default());
+
+        // Direct: submit frames into a node in-process.
+        let direct = Arc::new(Node::new(0, engine.clone(), &opts));
+        let (dtx, drx) = mpsc::channel();
+        for id in 0..4u64 {
+            let env = RequestEnvelope {
+                model: id as usize % 2,
+                id,
+                x: inputs.sample(id as usize),
+            };
+            direct
+                .submit(super::super::transport::Frame {
+                    bytes: env.encode().unwrap(),
+                    submitted_ns: direct.now_ns(),
+                })
+                .unwrap();
+        }
+        direct.shutdown();
+        direct.worker_loop(&device, &specs, &opts, &dtx).unwrap();
+        drop(dtx);
+        let mut want: Vec<(u64, Vec<u8>)> = drx
+            .iter()
+            .map(|b| {
+                let (r, _) = super::super::transport::ResponseEnvelope::decode(&b).unwrap();
+                (r.id, b)
+            })
+            .collect();
+        want.sort_by_key(|(id, _)| *id);
+
+        // Socket: the same frames through listener, queue, and uplink.
+        let sock = quick_opts();
+        let node = Arc::new(Node::new(0, engine, &opts));
+        let server = NodeServer::spawn(Arc::clone(&node), &sock).unwrap();
+        let (ctx, crx) = mpsc::channel();
+        let hub = ResponseHub::spawn(1, ctx).unwrap();
+        let (utx, urx) = mpsc::channel();
+        let uplink = spawn_uplink(hub.addr(), urx, &sock);
+        let client = NodeClient::new(server.addr(), sock);
+        for id in 0..4u64 {
+            let env = RequestEnvelope {
+                model: id as usize % 2,
+                id,
+                x: inputs.sample(id as usize),
+            };
+            client.send(&env.encode().unwrap()).unwrap();
+        }
+        node.shutdown();
+        node.worker_loop(&device, &specs, &opts, &utx).unwrap();
+        drop(utx);
+        uplink.join().unwrap();
+        let mut got: Vec<(u64, Vec<u8>)> = crx
+            .iter()
+            .map(|b| {
+                let (r, _) = super::super::transport::ResponseEnvelope::decode(&b).unwrap();
+                (r.id, b)
+            })
+            .collect();
+        got.sort_by_key(|(id, _)| *id);
+        hub.shutdown();
+        server.shutdown();
+
+        assert_eq!(got.len(), 4);
+        assert_eq!(got, want, "socket and direct response bytes are identical");
+    }
+}

@@ -15,8 +15,6 @@
 //! narrowed back on decode, so a served `y` is bit-identical across
 //! the wire.  Framing contract: `rust/DESIGN.md` §16.
 
-use std::time::Instant;
-
 use crate::error::{Error, Result};
 use crate::obs::{self, CounterId, Stage};
 use crate::util::codec::{
@@ -55,14 +53,20 @@ pub struct ResponseEnvelope {
 
 /// A request frame in flight inside a node: the raw bytes plus the
 /// submit timestamp the node uses for its queue+service latency
-/// telemetry (an `Instant` cannot cross a serialization boundary, so
-/// it rides next to the frame, never inside it).
+/// telemetry.  The stamp is a [`crate::obs::Clock`] reading in
+/// nanoseconds — not an `Instant` — so fleet latency accounting goes
+/// through the same mockable clock as the scheduler's, and tests can
+/// drive it deterministically.  It rides next to the frame, never
+/// inside it: a local clock reading cannot cross a serialization
+/// boundary (the socket transport re-stamps on receipt).
 #[derive(Debug)]
 pub struct Frame {
     /// Serialized [`RequestEnvelope`] bytes.
     pub bytes: Vec<u8>,
-    /// When the router submitted the frame to the node's queue.
-    pub submitted: Instant,
+    /// Clock reading (ns) when the frame entered the node's queue —
+    /// taken from the clock of whichever side did the submitting (the
+    /// router in-process, the node's connection handler over sockets).
+    pub submitted_ns: u64,
 }
 
 fn f32_arr(xs: &[f32]) -> Json {
@@ -96,18 +100,20 @@ fn get_f32_arr(v: &Json, key: &str) -> Result<Vec<f32>> {
 }
 
 impl RequestEnvelope {
-    /// Serialize to one MELB envelope frame.
-    pub fn encode(&self) -> Vec<u8> {
+    /// Serialize to one MELB envelope frame.  Fails (typed
+    /// [`Error::Parse`]) only if a payload segment would overflow the
+    /// u32 frame field — a corrupt frame is never emitted.
+    pub fn encode(&self) -> Result<Vec<u8>> {
         let span = obs::stage_start();
         let payload = obj([
             ("model", Json::Num(self.model as f64)),
             ("id", Json::Num(self.id as f64)),
             ("x", f32_arr(&self.x)),
         ]);
-        let frame = encode_envelope(ENVELOPE_REQUEST, &payload);
+        let frame = encode_envelope(ENVELOPE_REQUEST, &payload)?;
         obs::stage_end(Stage::TransportEncode, span);
         obs::add(CounterId::BytesOut, frame.len() as u64);
-        frame
+        Ok(frame)
     }
 
     /// Decode one request frame from the head of `bytes`, returning
@@ -135,8 +141,9 @@ impl RequestEnvelope {
 }
 
 impl ResponseEnvelope {
-    /// Serialize to one MELB envelope frame.
-    pub fn encode(&self) -> Vec<u8> {
+    /// Serialize to one MELB envelope frame (fallible like
+    /// [`RequestEnvelope::encode`]).
+    pub fn encode(&self) -> Result<Vec<u8>> {
         let span = obs::stage_start();
         let payload = obj([
             ("id", Json::Num(self.id as f64)),
@@ -146,10 +153,10 @@ impl ResponseEnvelope {
             ("err_abs_sum", Json::Num(self.err_abs_sum)),
             ("err_cols", Json::Num(self.err_cols as f64)),
         ]);
-        let frame = encode_envelope(ENVELOPE_RESPONSE, &payload);
+        let frame = encode_envelope(ENVELOPE_RESPONSE, &payload)?;
         obs::stage_end(Stage::TransportEncode, span);
         obs::add(CounterId::BytesOut, frame.len() as u64);
-        frame
+        Ok(frame)
     }
 
     /// Decode one response frame from the head of `bytes`, returning
@@ -190,7 +197,7 @@ mod tests {
             id: 41,
             x: vec![0.1_f32, -2.5, f32::MIN_POSITIVE, 1.0 + f32::EPSILON],
         };
-        let bytes = req.encode();
+        let bytes = req.encode().unwrap();
         let (back, used) = RequestEnvelope::decode(&bytes).unwrap();
         assert_eq!(used, bytes.len());
         assert_eq!(back.model, 3);
@@ -210,19 +217,21 @@ mod tests {
             err_abs_sum: 0.125,
             err_cols: 2,
         };
-        let bytes = resp.encode();
+        let bytes = resp.encode().unwrap();
         let (back, used) = ResponseEnvelope::decode(&bytes).unwrap();
         assert_eq!(used, bytes.len());
         assert_eq!(back, resp);
         // A response frame is not a request frame, and vice versa.
         assert!(RequestEnvelope::decode(&bytes).is_err());
         let req = RequestEnvelope { model: 0, id: 0, x: vec![1.0] };
-        assert!(ResponseEnvelope::decode(&req.encode()).is_err());
+        assert!(ResponseEnvelope::decode(&req.encode().unwrap()).is_err());
     }
 
     #[test]
     fn truncated_frames_are_typed_errors() {
-        let bytes = RequestEnvelope { model: 0, id: 9, x: vec![1.0, 2.0] }.encode();
+        let bytes = RequestEnvelope { model: 0, id: 9, x: vec![1.0, 2.0] }
+            .encode()
+            .unwrap();
         for cut in 0..bytes.len() {
             assert!(RequestEnvelope::decode(&bytes[..cut]).is_err(), "cut={cut}");
         }

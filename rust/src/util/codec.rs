@@ -60,16 +60,19 @@ impl Codec {
         }
     }
 
-    /// Encode one value in this framing.
-    pub fn encode(&self, v: &Json) -> Vec<u8> {
+    /// Encode one value in this framing.  Binary encoding is fallible:
+    /// a string, array, or object whose length exceeds the `u32` frame
+    /// field is rejected with a typed [`Error::Parse`] instead of
+    /// silently wrapping into a corrupt frame.
+    pub fn encode(&self, v: &Json) -> Result<Vec<u8>> {
         match self {
-            Codec::Json => v.to_string_pretty().into_bytes(),
+            Codec::Json => Ok(v.to_string_pretty().into_bytes()),
             Codec::Binary => {
                 let mut out = Vec::with_capacity(64);
                 out.extend_from_slice(&BINARY_MAGIC);
                 out.push(BINARY_VERSION);
-                encode_value(v, &mut out);
-                out
+                encode_value(v, &mut out)?;
+                Ok(out)
             }
         }
     }
@@ -108,7 +111,7 @@ impl Codec {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
-        std::fs::write(path, self.encode(v))?;
+        std::fs::write(path, self.encode(v)?)?;
         Ok(())
     }
 
@@ -137,15 +140,17 @@ pub const METRICS_SNAPSHOT: u8 = 0x12;
 /// byte, then the payload value.  Unlike the document framing,
 /// envelope frames are designed to be concatenated on a stream —
 /// [`decode_envelope`] consumes exactly one frame and reports how many
-/// bytes it used.
-pub fn encode_envelope(tag: u8, payload: &Json) -> Vec<u8> {
+/// bytes it used.  Oversized payloads (any string/array/object past
+/// the `u32` length field) are a typed [`Error::Parse`] at encode
+/// time — a frame that cannot decode is never emitted.
+pub fn encode_envelope(tag: u8, payload: &Json) -> Result<Vec<u8>> {
     debug_assert!(tag >= 0x10, "envelope tags start at 0x10");
     let mut out = Vec::with_capacity(64);
     out.extend_from_slice(&BINARY_MAGIC);
     out.push(BINARY_VERSION);
     out.push(tag);
-    encode_value(payload, &mut out);
-    out
+    encode_value(payload, &mut out)?;
+    Ok(out)
 }
 
 /// Decode one envelope frame from the head of `bytes`, returning the
@@ -181,7 +186,20 @@ pub fn decode_envelope(bytes: &[u8]) -> Result<(u8, Json, usize)> {
     Ok((tag, payload, r.pos))
 }
 
-fn encode_value(v: &Json, out: &mut Vec<u8>) {
+/// Bound a declared length to the `u32` frame field.  `usize` lengths
+/// past `u32::MAX` used to wrap silently (`len as u32`), emitting a
+/// frame whose declared length disagrees with its payload — corrupt on
+/// every reader.  Rejecting at encode time keeps the boundary honest.
+pub(crate) fn frame_len(len: usize, what: &str) -> Result<[u8; 4]> {
+    match u32::try_from(len) {
+        Ok(n) => Ok(n.to_le_bytes()),
+        Err(_) => Err(Error::Parse(format!(
+            "melb: {what} length {len} exceeds the u32 frame field"
+        ))),
+    }
+}
+
+fn encode_value(v: &Json, out: &mut Vec<u8>) -> Result<()> {
     match v {
         Json::Null => out.push(0),
         Json::Bool(false) => out.push(1),
@@ -192,29 +210,31 @@ fn encode_value(v: &Json, out: &mut Vec<u8>) {
         }
         Json::Str(s) => {
             out.push(4);
-            encode_str(s, out);
+            encode_str(s, out)?;
         }
         Json::Arr(a) => {
             out.push(5);
-            out.extend_from_slice(&(a.len() as u32).to_le_bytes());
+            out.extend_from_slice(&frame_len(a.len(), "array")?);
             for item in a {
-                encode_value(item, out);
+                encode_value(item, out)?;
             }
         }
         Json::Obj(o) => {
             out.push(6);
-            out.extend_from_slice(&(o.len() as u32).to_le_bytes());
+            out.extend_from_slice(&frame_len(o.len(), "object")?);
             for (k, item) in o {
-                encode_str(k, out);
-                encode_value(item, out);
+                encode_str(k, out)?;
+                encode_value(item, out)?;
             }
         }
     }
+    Ok(())
 }
 
-fn encode_str(s: &str, out: &mut Vec<u8>) {
-    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+fn encode_str(s: &str, out: &mut Vec<u8>) -> Result<()> {
+    out.extend_from_slice(&frame_len(s.len(), "string")?);
     out.extend_from_slice(s.as_bytes());
+    Ok(())
 }
 
 struct Reader<'a> {
@@ -323,7 +343,7 @@ mod tests {
     #[test]
     fn binary_roundtrip_is_exact() {
         let v = sample();
-        let bytes = Codec::Binary.encode(&v);
+        let bytes = Codec::Binary.encode(&v).unwrap();
         assert_eq!(&bytes[..4], &BINARY_MAGIC);
         assert_eq!(bytes[4], BINARY_VERSION);
         assert_eq!(Codec::decode(&bytes).unwrap(), v);
@@ -332,8 +352,8 @@ mod tests {
     #[test]
     fn sniffing_accepts_both_framings() {
         let v = sample();
-        assert_eq!(Codec::decode(&Codec::Json.encode(&v)).unwrap(), v);
-        assert_eq!(Codec::decode(&Codec::Binary.encode(&v)).unwrap(), v);
+        assert_eq!(Codec::decode(&Codec::Json.encode(&v).unwrap()).unwrap(), v);
+        assert_eq!(Codec::decode(&Codec::Binary.encode(&v).unwrap()).unwrap(), v);
     }
 
     #[test]
@@ -342,7 +362,7 @@ mod tests {
         // sloppy reader: binary carries raw bits.
         for &x in &[f64::MIN_POSITIVE, 1.0 + f64::EPSILON, -0.0, 1e-300, 0.1 + 0.2] {
             let v = Json::Num(x);
-            let back = Codec::decode(&Codec::Binary.encode(&v)).unwrap();
+            let back = Codec::decode(&Codec::Binary.encode(&v).unwrap()).unwrap();
             assert_eq!(back.as_f64().unwrap().to_bits(), x.to_bits());
         }
     }
@@ -374,7 +394,7 @@ mod tests {
 
     #[test]
     fn corrupt_binary_is_rejected_not_panicked() {
-        let good = Codec::Binary.encode(&sample());
+        let good = Codec::Binary.encode(&sample()).unwrap();
         // Truncations at every prefix length must error cleanly.
         for cut in 0..good.len() {
             assert!(Codec::decode(&good[..cut]).is_err() || cut == 0, "cut={cut}");
@@ -393,6 +413,27 @@ mod tests {
         huge.push(5); // arr
         huge.extend_from_slice(&u32::MAX.to_le_bytes());
         assert!(Codec::decode(&huge).is_err());
+    }
+
+    #[test]
+    fn oversized_lengths_are_rejected_at_encode_time() {
+        // The u32 frame field is a hard boundary: a length one past it
+        // must be a typed parse error, never a silent wrap.  (The
+        // check is tested through `frame_len` — materializing a >4 GiB
+        // string to drive `encode` end-to-end is not something a unit
+        // test should allocate.)
+        assert_eq!(frame_len(0, "string").unwrap(), 0u32.to_le_bytes());
+        assert_eq!(
+            frame_len(u32::MAX as usize, "string").unwrap(),
+            u32::MAX.to_le_bytes()
+        );
+        #[cfg(target_pointer_width = "64")]
+        {
+            let err = frame_len(u32::MAX as usize + 1, "string").unwrap_err();
+            assert!(matches!(err, Error::Parse(_)), "typed Parse error: {err}");
+            assert!(err.to_string().contains("u32 frame field"), "{err}");
+            assert!(frame_len(usize::MAX, "array").is_err());
+        }
     }
 
     /// Seeded random value generator for the fuzz round-trip.
@@ -436,9 +477,9 @@ mod tests {
     fn envelope_roundtrip_and_stream_concatenation() {
         let a = sample();
         let b = Json::Num(42.0);
-        let mut stream = encode_envelope(ENVELOPE_REQUEST, &a);
+        let mut stream = encode_envelope(ENVELOPE_REQUEST, &a).unwrap();
         let first_len = stream.len();
-        stream.extend_from_slice(&encode_envelope(ENVELOPE_RESPONSE, &b));
+        stream.extend_from_slice(&encode_envelope(ENVELOPE_RESPONSE, &b).unwrap());
         // First frame decodes in place, reporting exactly its length.
         let (tag, payload, used) = decode_envelope(&stream).unwrap();
         assert_eq!((tag, used), (ENVELOPE_REQUEST, first_len));
@@ -450,8 +491,8 @@ mod tests {
         assert_eq!(used + used2, stream.len());
         // Envelopes and documents stay disjoint: a plain artifact is
         // not an envelope, and an envelope is not a plain artifact.
-        assert!(decode_envelope(&Codec::Binary.encode(&a)).is_err());
-        assert!(Codec::decode(&encode_envelope(ENVELOPE_REQUEST, &a)).is_err());
+        assert!(decode_envelope(&Codec::Binary.encode(&a).unwrap()).is_err());
+        assert!(Codec::decode(&encode_envelope(ENVELOPE_REQUEST, &a).unwrap()).is_err());
     }
 
     #[test]
@@ -463,7 +504,7 @@ mod tests {
         for i in 0..64 {
             let v = random_value(&mut rng, 0);
             let tag = if i % 2 == 0 { ENVELOPE_REQUEST } else { ENVELOPE_RESPONSE };
-            let frame = encode_envelope(tag, &v);
+            let frame = encode_envelope(tag, &v).unwrap();
             for cut in 0..frame.len() {
                 let r = decode_envelope(&frame[..cut]);
                 assert!(r.is_err(), "prefix of length {cut} must be an error");
@@ -494,7 +535,7 @@ mod tests {
         assert_ne!(METRICS_SNAPSHOT, ENVELOPE_REQUEST);
         assert_ne!(METRICS_SNAPSHOT, ENVELOPE_RESPONSE);
         let v = sample();
-        let frame = encode_envelope(METRICS_SNAPSHOT, &v);
+        let frame = encode_envelope(METRICS_SNAPSHOT, &v).unwrap();
         let (tag, payload, used) = decode_envelope(&frame).unwrap();
         assert_eq!((tag, used), (METRICS_SNAPSHOT, frame.len()));
         assert_eq!(payload, v);
@@ -511,8 +552,8 @@ mod tests {
         let mut rng = Xoshiro256::seed_from_u64(0xC0DEC);
         for _ in 0..200 {
             let v = random_value(&mut rng, 0);
-            let from_json = Codec::decode(&Codec::Json.encode(&v)).unwrap();
-            let from_bin = Codec::decode(&Codec::Binary.encode(&v)).unwrap();
+            let from_json = Codec::decode(&Codec::Json.encode(&v).unwrap()).unwrap();
+            let from_bin = Codec::decode(&Codec::Binary.encode(&v).unwrap()).unwrap();
             // Binary is exact; JSON text of finite f64 re-parses
             // exactly (shortest round-trip formatting) — so all three
             // agree bit-for-bit.

@@ -21,7 +21,9 @@ use std::time::Duration;
 use meliso::device::params::NonIdealities;
 use meliso::device::presets;
 use meliso::experiments::{registry, Ctx};
-use meliso::serve::{run_fleet, run_fleet_nodes, run_serve, FleetOptions, ServeOptions};
+use meliso::serve::{
+    run_fleet, run_fleet_nodes, run_serve, FleetOptions, ServeOptions, SocketOptions, Transport,
+};
 use meliso::vmm::{DynEngine, NativeEngine, ShardedEngine, VmmEngine};
 
 fn serve_opts() -> ServeOptions {
@@ -161,6 +163,71 @@ fn per_node_engines_roll_up_shard_telemetry() {
     assert!(r.aggregate.programs as usize >= opts.serve.models);
 }
 
+fn socket_opts() -> SocketOptions {
+    SocketOptions {
+        connect_timeout: Duration::from_millis(500),
+        read_timeout: Duration::from_secs(2),
+        retries: 2,
+    }
+}
+
+#[test]
+fn socket_fleet_is_bit_identical_to_in_process() {
+    let device = presets::ag_si().params.masked(NonIdealities::FULL);
+    let engine = DynEngine::new(NativeEngine::default());
+
+    let inproc = run_fleet(&engine, &device, &fleet_opts(2, 1, 0.0)).unwrap();
+    let sock_opts = FleetOptions {
+        transport: Transport::Socket(socket_opts()),
+        ..fleet_opts(2, 1, 0.0)
+    };
+    let socket = run_fleet(&engine, &device, &sock_opts).unwrap();
+
+    // The wire is a pass-through: same requests, same outputs, bit for
+    // bit — serialization, framing, and the loopback hop change where
+    // bytes travel, never what they decode to.
+    assert_eq!(socket.aggregate.requests, 48);
+    assert_eq!(socket.shed, 0);
+    let a = inproc.responses.as_ref().unwrap();
+    let b = socket.responses.as_ref().unwrap();
+    assert_eq!(a.len(), b.len());
+    for ((ia, ya), (ib, yb)) in a.iter().zip(b) {
+        assert_eq!(ia, ib);
+        assert_eq!(ya.len(), yb.len());
+        for (va, vb) in ya.iter().zip(yb) {
+            assert_eq!(va.to_bits(), vb.to_bits(), "request {ia} drifted on the wire");
+        }
+    }
+}
+
+#[test]
+fn socket_fleet_loses_nothing_under_total_failure_pressure() {
+    let device = presets::ag_si().params.masked(NonIdealities::FULL);
+    let engine = DynEngine::new(NativeEngine::default());
+    let opts = FleetOptions {
+        transport: Transport::Socket(socket_opts()),
+        ..fleet_opts(3, 2, 1.0)
+    };
+    let r = run_fleet(&engine, &device, &opts).unwrap();
+
+    // fail_rate 1.0 kills ceil(1.0 * (3 - 1)) = 2 of 3 nodes mid-
+    // stream; over sockets the router sees that as NAKs and peer
+    // disconnects instead of typed queue rejections — and must still
+    // detour every request to the survivor. Offered == served: shed
+    // requests are re-routes, never losses.
+    assert_eq!(r.failed_nodes.len(), 2);
+    assert_eq!(r.aggregate.requests, 48);
+    assert_eq!(r.responses.as_ref().unwrap().len(), 48);
+    assert!(r.shed >= 1, "no request ever hit a dead node");
+    let by_node: usize = r.nodes.iter().map(|n| n.requests).sum();
+    assert_eq!(by_node, 48, "every request served by exactly one node");
+
+    // And the detours are invisible in the outputs: bit-identical to a
+    // calm in-process run of the same traffic.
+    let calm = run_fleet(&engine, &device, &fleet_opts(3, 2, 0.0)).unwrap();
+    assert_eq!(calm.responses.as_ref().unwrap(), r.responses.as_ref().unwrap());
+}
+
 #[test]
 fn fleet_sweep_experiment_runs_through_registry() {
     let dir = std::env::temp_dir().join("meliso_it_fleet_sweep");
@@ -168,13 +235,20 @@ fn fleet_sweep_experiment_runs_through_registry() {
     let ctx = Ctx::native(4, &dir);
     let s = registry::run_by_id("fleet-sweep", &ctx).unwrap();
     let rows = s.get("rows").unwrap().as_arr().unwrap();
-    assert_eq!(rows.len(), 9); // n1: 1 cell; n2, n3: 4 cells each
+    // n1: 1 cell; n2, n3: 4 cells each — every cell run on both the
+    // in-process and loopback-socket transports.
+    assert_eq!(rows.len(), 18);
+    let mut sockets = 0;
     for row in rows {
         // Zero lost requests in every cell, failure legs included.
         assert_eq!(row.get("requests").unwrap().as_f64(), Some(12.0));
         let thr = row.get("throughput_req_s").unwrap().as_f64().unwrap();
         assert!(thr.is_finite() && thr > 0.0);
+        if row.get("transport").unwrap().as_str() == Some("socket") {
+            sockets += 1;
+        }
     }
+    assert_eq!(sockets, 9, "every cell has a socket leg");
     assert!(dir.join("fleet-sweep/series.csv").exists());
     assert!(dir.join("fleet-sweep/summary.json").exists());
     let _ = std::fs::remove_dir_all(dir);

@@ -521,6 +521,69 @@ fn prop_placement_failure_only_replaces_affected_digests() {
 }
 
 #[test]
+fn prop_socket_fleet_is_bit_identical_to_in_process() {
+    // The loopback-socket transport is a pass-through for any fleet
+    // geometry and device physics: length-prefixed framing, the TCP
+    // hop, and load-aware placement change where bytes travel, never
+    // what they decode to.  Few cases — each runs two full fleets, one
+    // of them over real sockets.
+    use meliso::serve::{run_fleet, FleetOptions, ServeOptions, SocketOptions, Transport};
+    let s = Tuple3(
+        UsizeIn { lo: 1, hi: 3 },
+        UsizeIn { lo: 8, hi: 24 },
+        UsizeIn { lo: 0, hi: 1 << 12 },
+    );
+    check(cfg(6, 41), &s, |&(nodes, size, seed)| {
+        let presets = presets::all_presets();
+        let device = presets[seed % presets.len()]
+            .params
+            .masked(meliso::device::params::NonIdealities::FULL);
+        let engine = DynEngine::new(NativeEngine::default());
+        let base = FleetOptions {
+            serve: ServeOptions {
+                clients: 2,
+                requests_per_client: 4,
+                models: 2,
+                rows: size,
+                cols: size,
+                queue_capacity: 16,
+                batch_max: 4,
+                window: std::time::Duration::from_micros(100),
+                workers: 1,
+                cache: true,
+                cache_capacity: 4,
+                measure_error: false,
+                seed: seed as u64 ^ 0x50C2_E7F1,
+                ..ServeOptions::default()
+            },
+            nodes,
+            replication: 1,
+            fail_rate: 0.0,
+            collect_responses: true,
+            ..FleetOptions::default()
+        };
+        let sock = FleetOptions {
+            transport: Transport::Socket(SocketOptions {
+                connect_timeout: std::time::Duration::from_millis(500),
+                read_timeout: std::time::Duration::from_secs(2),
+                retries: 2,
+            }),
+            ..base.clone()
+        };
+        let a = run_fleet(&engine, &device, &base).unwrap();
+        let b = run_fleet(&engine, &device, &sock).unwrap();
+        let (ra, rb) = (a.responses.unwrap(), b.responses.unwrap());
+        ra.len() == 8
+            && ra.len() == rb.len()
+            && ra.iter().zip(&rb).all(|((ia, ya), (ib, yb))| {
+                ia == ib
+                    && ya.len() == yb.len()
+                    && ya.iter().zip(yb).all(|(va, vb)| va.to_bits() == vb.to_bits())
+            })
+    });
+}
+
+#[test]
 fn prop_placement_spreads_models_across_live_nodes() {
     // The ring's virtual points keep placement from collapsing: over a
     // few hundred random digests, every live node of a small fleet
@@ -651,7 +714,7 @@ fn prop_metrics_snapshot_melb_round_trips_and_rejects_corrupt_frames() {
                 h.record(rng.next_u64() >> (20 + rng.below(44)));
             }
         }
-        let frame = s.encode_melb();
+        let frame = s.encode_melb().unwrap();
         if MetricsSnapshot::decode_melb(&frame).unwrap() != s {
             return false;
         }
